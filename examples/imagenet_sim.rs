@@ -1,0 +1,124 @@
+//! ImageNet substitute — regenerates **Fig. 4 / Table 2** (end-to-end
+//! training time + accuracy parity across the seven methods).
+//!
+//!     cargo run --release --example imagenet_sim -- [--steps N]
+//!
+//! Two halves, per DESIGN.md §Substitutions:
+//! * **accuracy parity** (Table 2's Acc columns): a real classifier is
+//!   trained with NAG under each compression method on the synthetic
+//!   workload; all compressors must land within noise of full precision
+//!   (random-k visibly worse — the paper sees the same).
+//! * **training time** (Table 2's Time columns): simnet projects the
+//!   ResNet50 (8 nodes) and VGG16 (4 nodes) end-to-end times at paper
+//!   scale from measured compressor speeds.
+
+use byteps_compress::compress;
+use byteps_compress::configx::{SyncMode, TrainConfig};
+use byteps_compress::data::ClassifyTask;
+use byteps_compress::engine;
+use byteps_compress::metrics::markdown_table;
+use byteps_compress::simnet::{self, Cluster, CompressorProfile, Workload};
+use std::path::PathBuf;
+
+fn flag(name: &str) -> Option<String> {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1)).cloned()
+}
+
+const METHODS: [(&str, &str, f64, SyncMode); 7] = [
+    ("NAG", "identity", 0.0, SyncMode::Full),
+    ("NAG (FP16)", "fp16", 0.0, SyncMode::Compressed),
+    ("Scaled 1-bit with EF", "onebit", 0.0, SyncMode::CompressedEf),
+    ("Random-k with EF", "randomk", 0.03125, SyncMode::CompressedEf),
+    ("Top-k with EF", "topk", 0.001, SyncMode::CompressedEf),
+    ("Linear Dithering", "linear_dither", 5.0, SyncMode::Compressed),
+    ("Natural Dithering", "natural_dither", 3.0, SyncMode::Compressed),
+];
+
+fn main() -> anyhow::Result<()> {
+    let steps: usize = flag("--steps").and_then(|v| v.parse().ok()).unwrap_or(100);
+    let art = PathBuf::from("artifacts");
+
+    println!("== Fig. 4 / Table 2: accuracy parity + projected e2e times ==\n");
+
+    // --- accuracy parity on the real (substitute) training -----------------
+    let mut cfg = TrainConfig::default();
+    cfg.model = "classifier_tiny".into();
+    cfg.steps = steps;
+    cfg.cluster.nodes = 2;
+    cfg.cluster.servers = 2;
+    cfg.log_every = 0;
+    cfg.optimizer.name = "nag".into();
+    cfg.optimizer.lr = 0.01; // transformer-classifier-safe NAG lr
+    cfg.optimizer.momentum = 0.9;
+    cfg.optimizer.weight_decay = 1e-4;
+    cfg.compression.size_threshold = 4096;
+    // top-k at the paper's 0.1% keeps ~1 element of small tensors; use the
+    // tensor-size-appropriate 1% for the substitute model.
+    let topk_param = 0.01;
+
+    let mut acc_rows = Vec::new();
+    for (label, scheme, param, sync) in METHODS {
+        let param = if scheme == "topk" { topk_param } else { param };
+        cfg.compression.scheme = scheme.into();
+        cfg.compression.param = param;
+        cfg.compression.sync = sync;
+        let report = engine::train(&cfg, &art)?;
+        let mut dev_task =
+            ClassifyTask::new("dev", 2048, 4, cfg.task_difficulty, cfg.seed ^ 0xDEAD);
+        let (dev_loss, dev_acc) = engine::eval_classifier(
+            &cfg.model,
+            &art,
+            &report.final_params,
+            &mut dev_task,
+            8,
+        )?;
+        println!(
+            "{label:<22} train loss {:.3}  dev acc {:.3}  (dev loss {:.3})",
+            report.final_loss(),
+            dev_acc,
+            dev_loss
+        );
+        acc_rows.push((label.to_string(), dev_acc));
+    }
+
+    // --- projected end-to-end times (paper scale) ---------------------------
+    let mut table2 = Vec::new();
+    for (label, scheme, param, _) in METHODS {
+        let comp = compress::by_name(scheme, param).unwrap();
+        let prof = CompressorProfile::measure(label, comp.as_ref(), 1 << 21, param);
+        // ResNet50: 8 nodes, 120 epochs x 1.28M images.
+        let mut c8 = Cluster::default();
+        c8.nodes = 8;
+        let r = &Workload::resnet50();
+        let steps_total = 120.0 * 1_281_167.0 / (r.batch_per_node * 8) as f64;
+        let resnet_min = simnet::step_time(r, &c8, &prof) * steps_total / 60.0;
+        // VGG16: 4 nodes, 100 epochs.
+        let mut c4 = Cluster::default();
+        c4.nodes = 4;
+        let v = &Workload::vgg16();
+        let vsteps = 100.0 * 1_281_167.0 / (v.batch_per_node * 4) as f64;
+        let vgg_min = simnet::step_time(v, &c4, &prof) * vsteps / 60.0;
+        let acc = acc_rows.iter().find(|(l, _)| l == label).unwrap().1;
+        table2.push(vec![
+            label.to_string(),
+            format!("{:.3}", acc),
+            format!("{:.0} m", resnet_min),
+            format!("{:.0} m", vgg_min),
+        ]);
+    }
+    println!(
+        "\nTable 2 (dev acc from the substitute workload; times are simnet\nprojections at paper scale — compare *ratios* to the paper, not absolutes):\n"
+    );
+    println!(
+        "{}",
+        markdown_table(
+            &["Algorithm", "dev acc (substitute)", "ResNet50 time (8 nodes)", "VGG16 time (4 nodes)"],
+            &table2
+        )
+    );
+    println!(
+        "\nExpected shape (paper): all ≈ NAG accuracy except Random-k on VGG16;\nResNet50 times nearly flat (≈5% gain), VGG16 times drop up to ~58%."
+    );
+    Ok(())
+}

@@ -1,0 +1,167 @@
+"""AOT lowering: JAX graphs -> HLO text + manifest.json.
+
+`make artifacts` runs this once; afterwards the rust binary is
+self-contained. Interchange is **HLO text**, not serialized protos — jax
+>= 0.5 emits 64-bit instruction ids that the crate's xla_extension 0.5.1
+rejects, while the text parser reassigns ids (see
+/opt/xla-example/README.md).
+
+Artifacts:
+  <model>_train.hlo.txt   train_step: (params..., batch...) -> (loss, *grads)
+  <model>_eval.hlo.txt    eval_step:  (params..., batch...) -> (loss[, acc])
+  <model>_init.npz-like   initial parameters (raw f32 blobs, see manifest)
+  lans_update_<N>.hlo.txt fused-LANS Pallas kernel on a flat N-vector
+  dither_quantize_<N>.hlo.txt  linear-dithering Pallas kernel
+  manifest.json           input/output specs + parameter table per artifact
+
+Usage: python -m compile.aot --out ../artifacts [--models tiny,mini]
+"""
+
+import argparse
+import json
+import math
+import os
+import struct
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as model_lib
+from .kernels import fused_lans, quantize
+
+KERNEL_N = 65536  # flat-vector size for the standalone kernel artifacts
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True so rust
+    unwraps one tuple)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec_of(shape, dtype="f32"):
+    return jax.ShapeDtypeStruct(shape, jnp.int32 if dtype == "i32" else jnp.float32)
+
+
+def lower_model(cfg, out_dir, manifest):
+    pspec = model_lib.param_spec(cfg)
+    bspec = model_lib.batch_spec(cfg)
+    param_args = [spec_of(shape) for _, shape in pspec]
+    batch_args = [spec_of(shape, dt) for _, shape, dt in bspec]
+
+    train = jax.jit(model_lib.make_train_step(cfg))
+    train_hlo = to_hlo_text(train.lower(*param_args, *batch_args))
+    train_file = f"{cfg.name}_train.hlo.txt"
+    with open(os.path.join(out_dir, train_file), "w") as f:
+        f.write(train_hlo)
+
+    ev = jax.jit(model_lib.make_eval_step(cfg))
+    eval_hlo = to_hlo_text(ev.lower(*param_args, *batch_args))
+    eval_file = f"{cfg.name}_eval.hlo.txt"
+    with open(os.path.join(out_dir, eval_file), "w") as f:
+        f.write(eval_hlo)
+
+    # Initial parameters: one raw little-endian f32 blob, manifest records
+    # the layout (avoids a npz dependency on the rust side).
+    params = model_lib.init_params(cfg, jax.random.PRNGKey(42))
+    init_file = f"{cfg.name}_init.bin"
+    with open(os.path.join(out_dir, init_file), "wb") as f:
+        for p in params:
+            f.write(bytes(memoryview(jnp.asarray(p, jnp.float32)).cast("B")))
+
+    manifest["models"][cfg.name] = {
+        "train_hlo": train_file,
+        "eval_hlo": eval_file,
+        "init_params": init_file,
+        "config": {
+            "vocab": cfg.vocab,
+            "seq": cfg.seq,
+            "d_model": cfg.d_model,
+            "layers": cfg.layers,
+            "heads": cfg.heads,
+            "d_ff": cfg.d_ff,
+            "batch": cfg.batch,
+            "num_classes": cfg.num_classes,
+        },
+        "params": [
+            {"name": n, "shape": list(s), "numel": int(math.prod(s))} for n, s in pspec
+        ],
+        "batch_inputs": [
+            {"name": n, "shape": list(s), "dtype": dt} for n, s, dt in bspec
+        ],
+        # train outputs: loss then one grad per param; eval: loss (+acc)
+        "train_outputs": 1 + len(pspec),
+        "eval_outputs": 2 if cfg.num_classes > 0 else 1,
+        "total_params": model_lib.num_params(cfg),
+    }
+    print(f"  {cfg.name}: {model_lib.num_params(cfg)/1e6:.2f}M params, "
+          f"{len(pspec)} tensors -> {train_file}")
+
+
+def lower_kernels(out_dir, manifest):
+    n = KERNEL_N
+    vec = spec_of((n,))
+    t = spec_of((1,))
+
+    lans = jax.jit(lambda m, v, g, x, t: fused_lans.lans_update(m, v, g, x, t))
+    lans_file = f"lans_update_{n}.hlo.txt"
+    with open(os.path.join(out_dir, lans_file), "w") as f:
+        f.write(to_hlo_text(lans.lower(vec, vec, vec, vec, t)))
+    manifest["kernels"]["lans_update"] = {
+        "hlo": lans_file,
+        "n": n,
+        "inputs": ["m", "v", "g", "x", "t"],
+        "outputs": ["m_new", "v_new", "x_new"],
+        "hyper": {"lr": 1e-3, "beta1": 0.9, "beta2": 0.999, "eps": 1e-6,
+                  "wd": 0.01, "phi_lo": 0.01, "phi_hi": 10.0},
+    }
+
+    dq = jax.jit(lambda x, u: quantize.dither_quantize(x, u, 5))
+    dq_file = f"dither_quantize_{n}.hlo.txt"
+    with open(os.path.join(out_dir, dq_file), "w") as f:
+        f.write(to_hlo_text(dq.lower(vec, vec)))
+    manifest["kernels"]["dither_quantize"] = {
+        "hlo": dq_file,
+        "n": n,
+        "bits": 5,
+        "inputs": ["x", "u"],
+        "outputs": ["decoded"],
+    }
+    print(f"  kernels: lans_update_{n}, dither_quantize_{n}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument(
+        "--models",
+        default="transformer_tiny,transformer_mini,classifier_tiny",
+        help="comma-separated model config names (see model.CONFIGS); "
+        "'all' includes transformer_base100m",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    names = (
+        list(model_lib.CONFIGS)
+        if args.models == "all"
+        else [n.strip() for n in args.models.split(",") if n.strip()]
+    )
+    manifest = {"version": 1, "models": {}, "kernels": {}}
+    print("lowering kernels:")
+    lower_kernels(args.out, manifest)
+    print("lowering models:")
+    for name in names:
+        lower_model(model_lib.CONFIGS[name], args.out, manifest)
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {args.out}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

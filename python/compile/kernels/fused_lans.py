@@ -1,0 +1,83 @@
+"""Fused LANS element-wise kernel (Pallas, L1).
+
+The LANS update (Alg. 2 steps 8-12) touches four same-sized arrays
+(m, v, g, x) and produces four more — it is pure memory traffic. Naively
+expressed in jnp it becomes ~10 separate HBM-bound element-wise ops; the
+Pallas kernel fuses them into **one** pass: each VMEM tile is read once,
+all four outputs are produced from registers, and nothing round-trips to
+HBM in between.
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the tile size (8, 128)
+matches the VPU lane layout; `BlockSpec` expresses the HBM→VMEM schedule
+that a CUDA version would express with threadblocks. Block-norm reductions
+(steps 13-14) stay in jnp where XLA fuses them with the scale-and-subtract
+epilogue.
+
+Run with `interpret=True` everywhere: the CPU PJRT plugin cannot execute
+Mosaic custom-calls (see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# VPU-friendly tile: 8 sublanes x 128 lanes.
+TILE = 1024
+
+
+def _kernel(t_ref, m_ref, v_ref, g_ref, x_ref, m_out, v_out, r_out, c_out, *,
+            beta1, beta2, eps, wd):
+    t = t_ref[0]
+    m = m_ref[...]
+    v = v_ref[...]
+    g = g_ref[...]
+    x = x_ref[...]
+    m_new = beta1 * m + (1.0 - beta1) * g
+    v_new = beta2 * v + (1.0 - beta2) * g * g
+    bc1 = 1.0 - beta1**t
+    bc2 = 1.0 - beta2**t
+    denom = jnp.sqrt(v_new / bc2) + eps
+    m_out[...] = m_new
+    v_out[...] = v_new
+    r_out[...] = (m_new / bc1) / denom + wd * x
+    c_out[...] = g / denom + wd * x
+
+
+def lans_elementwise(m, v, g, x, t, beta1=0.9, beta2=0.999, eps=1e-6, wd=0.01):
+    """Fused element-wise LANS phase. All arrays are f32[n] with n a
+    multiple of TILE (pad before calling); `t` is a f32[1] step counter
+    (1-based)."""
+    n = m.shape[0]
+    assert n % TILE == 0, f"n={n} must be a multiple of {TILE}"
+    grid = (n // TILE,)
+    spec = pl.BlockSpec((TILE,), lambda i: (i,))
+    kernel = functools.partial(_kernel, beta1=beta1, beta2=beta2, eps=eps, wd=wd)
+    out_shape = [jax.ShapeDtypeStruct((n,), jnp.float32)] * 4
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),  # t broadcast to every tile
+            spec, spec, spec, spec,
+        ],
+        out_specs=[spec, spec, spec, spec],
+        out_shape=out_shape,
+        interpret=True,
+    )(t, m, v, g, x)
+
+
+def lans_update(m, v, g, x, t, lr=1e-3, beta1=0.9, beta2=0.999, eps=1e-6,
+                wd=0.01, phi_lo=0.01, phi_hi=10.0):
+    """Full single-block LANS step: Pallas element-wise phase + jnp norm
+    epilogue. Semantically identical to `ref.lans_update_ref` and to rust
+    `optim::lans` with `blocks::single`."""
+    m_new, v_new, r, c = lans_elementwise(m, v, g, x, t, beta1, beta2, eps, wd)
+    phi = jnp.clip(jnp.linalg.norm(x), phi_lo, phi_hi)
+    r_norm = jnp.linalg.norm(r)
+    c_norm = jnp.linalg.norm(c)
+    r_scale = jnp.where(r_norm > 0, beta1 * phi / r_norm, 0.0)
+    c_scale = jnp.where(c_norm > 0, (1.0 - beta1) * phi / c_norm, 0.0)
+    x_new = x - lr * (r_scale * r + c_scale * c)
+    return m_new, v_new, x_new

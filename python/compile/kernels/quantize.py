@@ -1,0 +1,56 @@
+"""Linear-dithering quantizer kernel (Pallas, L1).
+
+The paper's linear dithering compressor expressed as an in-graph kernel:
+quantize-then-dequantize with stochastic rounding, deterministic given a
+pre-drawn uniform stream `u`. Two uses:
+
+* it is the **numerics oracle** for the rust CPU compressor
+  (`compress::dither::LinearDither`) — rust/tests/pallas_parity.rs feeds
+  both the same uniforms and asserts equality;
+* it enables "compression-aware" training graphs (quantization in the
+  forward pass), which the paper leaves as future work — kept here as an
+  extension ablation.
+
+The kernel is a single fused VMEM pass: scale is computed in jnp (global
+max-reduction), the per-element quantize/dequantize runs in Pallas tiles.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE = 1024
+
+
+def _kernel(scale_ref, x_ref, u_ref, o_ref, *, levels):
+    scale = scale_ref[0]
+    x = x_ref[...]
+    u = u_ref[...]
+    inv = jnp.where(scale > 0, levels / scale, 0.0)
+    q = x * inv
+    lo = jnp.floor(q)
+    level = lo + (u < (q - lo)).astype(jnp.float32)
+    level = jnp.clip(level, -levels, levels)
+    step = jnp.where(scale > 0, scale / levels, 0.0)
+    o_ref[...] = level * step
+
+
+def dither_quantize(x, u, bits=5):
+    """Quantize-dequantize f32[n] with b-bit linear dithering; `u` is a
+    matching uniform[0,1) stream. n must be a multiple of TILE."""
+    n = x.shape[0]
+    assert n % TILE == 0, f"n={n} must be a multiple of {TILE}"
+    levels = float(2 ** (bits - 1) - 1)
+    scale = jnp.max(jnp.abs(x)).reshape(1)
+    spec = pl.BlockSpec((TILE,), lambda i: (i,))
+    kernel = functools.partial(_kernel, levels=levels)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // TILE,),
+        in_specs=[pl.BlockSpec((1,), lambda i: (0,)), spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(scale, x, u)

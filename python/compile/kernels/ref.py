@@ -1,0 +1,72 @@
+"""Pure-jnp oracles for the L1 Pallas kernels.
+
+Every Pallas kernel in this package has a reference implementation here;
+pytest (with hypothesis sweeps) asserts allclose between kernel and oracle.
+The rust side additionally cross-checks its own CPU implementations against
+the AOT-lowered kernels (rust/tests/pallas_parity.rs), closing the loop:
+
+    rust CPU impl == Pallas kernel == jnp oracle
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v):
+    """Bidirectional softmax attention.
+
+    q, k, v: f32[..., S, Dh] -> f32[..., S, Dh]
+    """
+    dh = q.shape[-1]
+    logits = jnp.einsum("...sd,...td->...st", q, k) / jnp.sqrt(jnp.float32(dh))
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("...st,...td->...sd", probs, v)
+
+
+def lans_elementwise_ref(m, v, g, x, t, beta1, beta2, eps, wd):
+    """Element-wise phase of the LANS update (Alg. 2 steps 8-12 + λx).
+
+    Returns (m', v', r + λx, c + λx); the block-norm scaling (steps 13-14)
+    happens outside. `t` is the 1-based step for bias correction.
+    """
+    m_new = beta1 * m + (1.0 - beta1) * g
+    v_new = beta2 * v + (1.0 - beta2) * g * g
+    bc1 = 1.0 - beta1**t
+    bc2 = 1.0 - beta2**t
+    m_hat = m_new / bc1
+    v_hat = v_new / bc2
+    denom = jnp.sqrt(v_hat) + eps
+    r = m_hat / denom + wd * x
+    c = g / denom + wd * x
+    return m_new, v_new, r, c
+
+
+def lans_update_ref(m, v, g, x, t, lr, beta1, beta2, eps, wd, phi_lo, phi_hi):
+    """Full single-block LANS step (Alg. 2), matching rust `optim::lans`
+    with `blocks::single`. Returns (m', v', x')."""
+    m_new, v_new, r, c = lans_elementwise_ref(m, v, g, x, t, beta1, beta2, eps, wd)
+    phi = jnp.clip(jnp.linalg.norm(x), phi_lo, phi_hi)
+    r_norm = jnp.linalg.norm(r)
+    c_norm = jnp.linalg.norm(c)
+    r_scale = jnp.where(r_norm > 0, beta1 * phi / r_norm, 0.0)
+    c_scale = jnp.where(c_norm > 0, (1.0 - beta1) * phi / c_norm, 0.0)
+    x_new = x - lr * (r_scale * r + c_scale * c)
+    return m_new, v_new, x_new
+
+
+def linear_dither_ref(x, u, bits):
+    """Linear stochastic dithering quantize->dequantize (paper's linear
+    dithering compressor, QSGD-style), deterministic given uniforms `u`.
+
+    Matches rust `compress::dither::LinearDither` driven by the same
+    uniform stream: level = floor(x/s*L) + (u < frac), decode = level*s/L.
+    """
+    levels = float(2 ** (bits - 1) - 1)
+    scale = jnp.max(jnp.abs(x))
+    inv = jnp.where(scale > 0, levels / scale, 0.0)
+    q = x * inv
+    lo = jnp.floor(q)
+    level = lo + (u < (q - lo)).astype(jnp.float32)
+    level = jnp.clip(level, -levels, levels)
+    step = jnp.where(scale > 0, scale / levels, 0.0)
+    return level * step

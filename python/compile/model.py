@@ -1,0 +1,222 @@
+"""L2 — JAX transformer (BERT-pretraining substitute) and classifier head.
+
+A pre-LN encoder-style transformer with a masked-token objective: the
+paper's BERT MLM workload scaled to this testbed (DESIGN.md
+§Substitutions). Attention runs through the L1 Pallas kernel
+(`kernels.attention`), so the kernel lowers into the same HLO artifact the
+rust coordinator executes.
+
+Parameters are an ordered list of (name, array); the order defines the
+flat layout the rust optimizer uses (manifest.json records it). Every
+parameter tensor is one LANS block.
+
+`train_step` returns `(loss, *grads)` in parameter order — lowered once by
+`aot.py`, executed every step from rust via PJRT. Python never runs at
+training time.
+"""
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import attention as attn_kernel
+
+
+class ModelConfig(NamedTuple):
+    name: str
+    vocab: int
+    seq: int
+    d_model: int
+    layers: int
+    heads: int
+    d_ff: int
+    batch: int
+    num_classes: int = 0  # 0 = LM head (MLM); >0 = classifier
+
+
+CONFIGS = {
+    # ~0.9M params — CI-speed smoke config.
+    "transformer_tiny": ModelConfig("transformer_tiny", 2048, 64, 128, 2, 4, 512, 4),
+    # ~7M params — default e2e pretraining config on this 1-core testbed.
+    "transformer_mini": ModelConfig("transformer_mini", 8192, 64, 256, 4, 8, 1024, 4),
+    # ~103M params — the paper-scale BERT-base analogue (batch kept small;
+    # exercised for a handful of steps in EXPERIMENTS.md).
+    "transformer_base100m": ModelConfig("transformer_base100m", 16384, 128, 768, 12, 12, 3072, 2),
+    # classifier variants (GLUE-substitute finetuning; Table 4)
+    "classifier_tiny": ModelConfig("classifier_tiny", 2048, 64, 128, 2, 4, 512, 8, num_classes=4),
+    "classifier_mini": ModelConfig("classifier_mini", 8192, 64, 256, 4, 8, 1024, 8, num_classes=4),
+}
+
+
+def param_spec(cfg: ModelConfig):
+    """Ordered [(name, shape)] for the model's parameters."""
+    spec = [
+        ("tok_embed", (cfg.vocab, cfg.d_model)),
+        ("pos_embed", (cfg.seq, cfg.d_model)),
+    ]
+    for i in range(cfg.layers):
+        p = f"layer{i}."
+        spec += [
+            (p + "ln1_scale", (cfg.d_model,)),
+            (p + "ln1_bias", (cfg.d_model,)),
+            (p + "wq", (cfg.d_model, cfg.d_model)),
+            (p + "wk", (cfg.d_model, cfg.d_model)),
+            (p + "wv", (cfg.d_model, cfg.d_model)),
+            (p + "wo", (cfg.d_model, cfg.d_model)),
+            (p + "ln2_scale", (cfg.d_model,)),
+            (p + "ln2_bias", (cfg.d_model,)),
+            (p + "w_ff1", (cfg.d_model, cfg.d_ff)),
+            (p + "b_ff1", (cfg.d_ff,)),
+            (p + "w_ff2", (cfg.d_ff, cfg.d_model)),
+            (p + "b_ff2", (cfg.d_model,)),
+        ]
+    spec += [("lnf_scale", (cfg.d_model,)), ("lnf_bias", (cfg.d_model,))]
+    if cfg.num_classes > 0:
+        spec += [
+            ("cls_w", (cfg.d_model, cfg.num_classes)),
+            ("cls_b", (cfg.num_classes,)),
+        ]
+    # MLM head is weight-tied to tok_embed (plus a bias).
+    else:
+        spec += [("lm_bias", (cfg.vocab,))]
+    return spec
+
+
+def init_params(cfg: ModelConfig, key):
+    """Initialize parameters (returned as a list in `param_spec` order)."""
+    spec = param_spec(cfg)
+    params = []
+    for name, shape in spec:
+        key, sub = jax.random.split(key)
+        if name.endswith(("_bias", "b_ff1", "b_ff2", "cls_b", "lm_bias")):
+            params.append(jnp.zeros(shape, jnp.float32))
+        elif name.endswith("_scale"):
+            params.append(jnp.ones(shape, jnp.float32))
+        elif name in ("tok_embed", "pos_embed"):
+            params.append(0.02 * jax.random.normal(sub, shape, jnp.float32))
+        else:
+            fan_in = shape[0]
+            params.append(jax.random.normal(sub, shape, jnp.float32) / math.sqrt(fan_in))
+    return params
+
+
+def _layer_norm(x, scale, bias, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * scale + bias
+
+
+def _as_dict(cfg, params):
+    return dict(zip([n for n, _ in param_spec(cfg)], params))
+
+
+def encode(cfg: ModelConfig, params, tokens):
+    """Run the encoder: tokens i32[B, S] -> activations f32[B, S, D]."""
+    p = _as_dict(cfg, params)
+    b, s = tokens.shape
+    h = p["tok_embed"][tokens] + p["pos_embed"][None, :s, :]
+    dh = cfg.d_model // cfg.heads
+    for i in range(cfg.layers):
+        pre = f"layer{i}."
+        x = _layer_norm(h, p[pre + "ln1_scale"], p[pre + "ln1_bias"])
+        q = (x @ p[pre + "wq"]).reshape(b, s, cfg.heads, dh).transpose(0, 2, 1, 3)
+        k = (x @ p[pre + "wk"]).reshape(b, s, cfg.heads, dh).transpose(0, 2, 1, 3)
+        v = (x @ p[pre + "wv"]).reshape(b, s, cfg.heads, dh).transpose(0, 2, 1, 3)
+        o = attn_kernel.mha(q, k, v)  # L1 Pallas kernel
+        o = o.transpose(0, 2, 1, 3).reshape(b, s, cfg.d_model)
+        h = h + o @ p[pre + "wo"]
+        x = _layer_norm(h, p[pre + "ln2_scale"], p[pre + "ln2_bias"])
+        h = h + jax.nn.gelu(x @ p[pre + "w_ff1"] + p[pre + "b_ff1"]) @ p[pre + "w_ff2"] + p[
+            pre + "b_ff2"
+        ]
+    return _layer_norm(h, p["lnf_scale"], p["lnf_bias"])
+
+
+def mlm_loss(cfg: ModelConfig, params, tokens, targets, mask):
+    """Masked-LM loss: mean CE over masked positions.
+
+    tokens: i32[B,S] (with mask token substituted), targets: i32[B,S],
+    mask: f32[B,S] (1 where the position contributes to the loss).
+    """
+    p = _as_dict(cfg, params)
+    h = encode(cfg, params, tokens)
+    logits = h @ p["tok_embed"].T + p["lm_bias"]  # weight tying
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def classifier_loss(cfg: ModelConfig, params, tokens, labels):
+    """Sequence classification: mean-pool + linear head, CE loss.
+    Returns (loss, accuracy)."""
+    p = _as_dict(cfg, params)
+    h = encode(cfg, params, tokens)
+    pooled = jnp.mean(h, axis=1)
+    logits = pooled @ p["cls_w"] + p["cls_b"]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    acc = jnp.mean((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))
+    return jnp.mean(nll), acc
+
+
+def make_train_step(cfg: ModelConfig):
+    """Build `train_step(params..., batch...) -> (loss, *grads)`."""
+    nparams = len(param_spec(cfg))
+
+    if cfg.num_classes > 0:
+        def step(*args):
+            params = list(args[:nparams])
+            tokens, labels = args[nparams:]
+            def loss_fn(ps):
+                loss, _ = classifier_loss(cfg, ps, tokens, labels)
+                return loss
+            loss, grads = jax.value_and_grad(loss_fn)(params)
+            return (loss, *grads)
+    else:
+        def step(*args):
+            params = list(args[:nparams])
+            tokens, targets, mask = args[nparams:]
+            loss, grads = jax.value_and_grad(
+                lambda ps: mlm_loss(cfg, ps, tokens, targets, mask)
+            )(params)
+            return (loss, *grads)
+
+    return step
+
+
+def make_eval_step(cfg: ModelConfig):
+    """Build `eval_step(params..., batch...) -> (loss,)` (classifier also
+    returns accuracy)."""
+    nparams = len(param_spec(cfg))
+    if cfg.num_classes > 0:
+        def step(*args):
+            params = list(args[:nparams])
+            tokens, labels = args[nparams:]
+            loss, acc = classifier_loss(cfg, params, tokens, labels)
+            return (loss, acc)
+    else:
+        def step(*args):
+            params = list(args[:nparams])
+            tokens, targets, mask = args[nparams:]
+            return (mlm_loss(cfg, params, tokens, targets, mask),)
+    return step
+
+
+def batch_spec(cfg: ModelConfig):
+    """Ordered [(name, shape, dtype)] of the batch inputs."""
+    if cfg.num_classes > 0:
+        return [
+            ("tokens", (cfg.batch, cfg.seq), "i32"),
+            ("labels", (cfg.batch,), "i32"),
+        ]
+    return [
+        ("tokens", (cfg.batch, cfg.seq), "i32"),
+        ("targets", (cfg.batch, cfg.seq), "i32"),
+        ("mask", (cfg.batch, cfg.seq), "f32"),
+    ]
+
+
+def num_params(cfg: ModelConfig) -> int:
+    return sum(int(math.prod(shape)) for _, shape in param_spec(cfg))

@@ -1,0 +1,60 @@
+"""AOT pipeline sanity: manifest consistency and HLO text validity
+(produced by `make artifacts`; skipped when artifacts are absent)."""
+
+import json
+import os
+
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def manifest():
+    path = os.path.join(ART, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built (run `make artifacts`)")
+    with open(path) as f:
+        return json.load(f)
+
+
+def test_manifest_files_exist():
+    m = manifest()
+    for entry in m["models"].values():
+        for k in ("train_hlo", "eval_hlo", "init_params"):
+            assert os.path.exists(os.path.join(ART, entry[k])), entry[k]
+    for entry in m["kernels"].values():
+        assert os.path.exists(os.path.join(ART, entry["hlo"]))
+
+
+def test_init_blob_matches_param_table():
+    m = manifest()
+    for name, entry in m["models"].items():
+        total = sum(p["numel"] for p in entry["params"])
+        assert total == entry["total_params"], name
+        size = os.path.getsize(os.path.join(ART, entry["init_params"]))
+        assert size == 4 * total, f"{name}: blob {size} != 4*{total}"
+
+
+def test_hlo_text_has_entry_computation():
+    m = manifest()
+    for entry in m["models"].values():
+        with open(os.path.join(ART, entry["train_hlo"])) as f:
+            text = f.read()
+        assert "ENTRY" in text
+        # param count: params + batch inputs appear as parameters
+        nin = len(entry["params"]) + len(entry["batch_inputs"])
+        assert text.count("parameter(") >= nin
+
+
+def test_train_output_arity():
+    m = manifest()
+    for name, entry in m["models"].items():
+        assert entry["train_outputs"] == len(entry["params"]) + 1, name
+
+
+def test_kernel_sizes_are_tile_aligned():
+    m = manifest()
+    from compile.kernels import fused_lans
+
+    for entry in m["kernels"].values():
+        assert entry["n"] % fused_lans.TILE == 0

@@ -1,0 +1,150 @@
+"""L1 kernel correctness: Pallas (interpret=True) vs pure-jnp oracles.
+
+Hypothesis sweeps shapes and value ranges; assert_allclose against ref.py
+is the core correctness signal for the compile path.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention, fused_lans, quantize, ref
+
+settings.register_profile("kernels", deadline=None, max_examples=25)
+settings.load_profile("kernels")
+
+
+def rng_arrays(seed, shapes, scale=1.0):
+    key = jax.random.PRNGKey(seed)
+    out = []
+    for shape in shapes:
+        key, sub = jax.random.split(key)
+        out.append(scale * jax.random.normal(sub, shape, jnp.float32))
+    return out
+
+
+# --- fused LANS --------------------------------------------------------------
+
+
+@given(
+    tiles=st.integers(min_value=1, max_value=4),
+    t=st.integers(min_value=1, max_value=1000),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    beta1=st.floats(min_value=0.5, max_value=0.99),
+    wd=st.floats(min_value=0.0, max_value=0.1),
+)
+def test_lans_elementwise_matches_ref(tiles, t, seed, beta1, wd):
+    n = tiles * fused_lans.TILE
+    m, g, x = rng_arrays(seed, [(n,)] * 3)
+    v = jnp.abs(rng_arrays(seed + 1, [(n,)])[0])
+    got = fused_lans.lans_elementwise(
+        m, v, g, x, jnp.array([float(t)]), beta1=beta1, wd=wd
+    )
+    want = ref.lans_elementwise_ref(m, v, g, x, float(t), beta1, 0.999, 1e-6, wd)
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(a, b, rtol=2e-5, atol=2e-5)
+
+
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_lans_full_update_matches_ref(seed):
+    n = fused_lans.TILE
+    m, g, x = rng_arrays(seed, [(n,)] * 3)
+    v = jnp.abs(rng_arrays(seed + 7, [(n,)])[0])
+    t = jnp.array([3.0])
+    got = fused_lans.lans_update(m, v, g, x, t, lr=0.01)
+    want = ref.lans_update_ref(m, v, g, x, 3.0, 0.01, 0.9, 0.999, 1e-6, 0.01, 0.01, 10.0)
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(a, b, rtol=2e-5, atol=2e-5)
+
+
+def test_lans_rejects_unaligned():
+    bad = jnp.zeros(fused_lans.TILE + 1)
+    t = jnp.array([1.0])
+    with pytest.raises(AssertionError):
+        fused_lans.lans_elementwise(bad, bad, bad, bad, t)
+
+
+# --- attention ---------------------------------------------------------------
+
+
+@given(
+    bh=st.integers(min_value=1, max_value=6),
+    s=st.sampled_from([4, 16, 33, 64]),
+    dh=st.sampled_from([8, 16, 32]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    scale=st.sampled_from([0.1, 1.0, 5.0]),
+)
+def test_attention_matches_ref(bh, s, dh, seed, scale):
+    q, k, v = rng_arrays(seed, [(bh, s, dh)] * 3, scale)
+    got = attention.attention(q, k, v)
+    want = ref.attention_ref(q, k, v)
+    np.testing.assert_allclose(got, want, rtol=5e-5, atol=5e-5)
+
+
+def test_attention_rows_are_convex_combinations():
+    # Softmax rows sum to 1 => output within [min(v), max(v)] per channel.
+    q, k, v = rng_arrays(11, [(2, 16, 8)] * 3)
+    out = np.asarray(attention.attention(q, k, v))
+    vmin = np.asarray(v).min(axis=1, keepdims=True) - 1e-5
+    vmax = np.asarray(v).max(axis=1, keepdims=True) + 1e-5
+    assert (out >= vmin).all() and (out <= vmax).all()
+
+
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_attention_gradients_match_ref(seed):
+    q, k, v = rng_arrays(seed, [(2, 8, 16)] * 3)
+
+    def loss_kernel(q, k, v):
+        return jnp.sum(attention.attention(q, k, v) ** 2)
+
+    def loss_ref(q, k, v):
+        return jnp.sum(ref.attention_ref(q, k, v) ** 2)
+
+    gk = jax.grad(loss_kernel, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+def test_mha_shape():
+    q, k, v = rng_arrays(0, [(2, 4, 16, 8)] * 3)
+    out = attention.mha(q, k, v)
+    assert out.shape == (2, 4, 16, 8)
+
+
+# --- dithering quantizer ------------------------------------------------------
+
+
+@given(
+    tiles=st.integers(min_value=1, max_value=3),
+    bits=st.sampled_from([2, 3, 5, 7]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    scale=st.sampled_from([1e-3, 1.0, 100.0]),
+)
+def test_quantize_matches_ref(tiles, bits, seed, scale):
+    n = tiles * quantize.TILE
+    (x,) = rng_arrays(seed, [(n,)], scale)
+    u = jax.random.uniform(jax.random.PRNGKey(seed ^ 0xFFFF), (n,))
+    got = quantize.dither_quantize(x, u, bits)
+    want = ref.linear_dither_ref(x, u, bits)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+def test_quantize_zero_input():
+    n = quantize.TILE
+    x = jnp.zeros((n,))
+    u = jnp.full((n,), 0.5)
+    out = quantize.dither_quantize(x, u, 5)
+    assert np.asarray(out).sum() == 0.0
+
+
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_quantize_error_bounded_by_step(seed):
+    n = quantize.TILE
+    (x,) = rng_arrays(seed, [(n,)])
+    u = jax.random.uniform(jax.random.PRNGKey(seed), (n,))
+    out = np.asarray(quantize.dither_quantize(x, u, 5))
+    step = np.abs(np.asarray(x)).max() / 15.0
+    assert np.abs(out - np.asarray(x)).max() <= step + 1e-6

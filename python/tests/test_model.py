@@ -1,0 +1,93 @@
+"""L2 model sanity: shapes, loss behaviour, gradient flow."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model as model_lib
+
+CFG = model_lib.CONFIGS["transformer_tiny"]
+CLS = model_lib.CONFIGS["classifier_tiny"]
+
+
+def make_batch(cfg, seed=0):
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    tokens = jax.random.randint(k1, (cfg.batch, cfg.seq), 0, cfg.vocab)
+    targets = jax.random.randint(k2, (cfg.batch, cfg.seq), 0, cfg.vocab)
+    mask = (jax.random.uniform(k1, (cfg.batch, cfg.seq)) < 0.15).astype(jnp.float32)
+    return tokens, targets, mask
+
+
+def test_param_spec_matches_init():
+    params = model_lib.init_params(CFG, jax.random.PRNGKey(0))
+    spec = model_lib.param_spec(CFG)
+    assert len(params) == len(spec)
+    for p, (name, shape) in zip(params, spec):
+        assert p.shape == shape, name
+    assert model_lib.num_params(CFG) == sum(int(np.prod(s)) for _, s in spec)
+
+
+def test_encode_shape():
+    params = model_lib.init_params(CFG, jax.random.PRNGKey(0))
+    tokens, _, _ = make_batch(CFG)
+    h = model_lib.encode(CFG, params, tokens)
+    assert h.shape == (CFG.batch, CFG.seq, CFG.d_model)
+    assert np.isfinite(np.asarray(h)).all()
+
+
+def test_initial_mlm_loss_near_uniform():
+    # With random init, MLM loss should be ≈ log(vocab).
+    params = model_lib.init_params(CFG, jax.random.PRNGKey(0))
+    tokens, targets, mask = make_batch(CFG)
+    loss = model_lib.mlm_loss(CFG, params, tokens, targets, mask)
+    expect = np.log(CFG.vocab)
+    assert abs(float(loss) - expect) < 1.5, f"loss={float(loss)} vs log(V)={expect}"
+
+
+def test_train_step_outputs_and_grad_shapes():
+    step = jax.jit(model_lib.make_train_step(CFG))
+    params = model_lib.init_params(CFG, jax.random.PRNGKey(0))
+    out = step(*params, *make_batch(CFG))
+    assert len(out) == 1 + len(params)
+    loss, grads = out[0], out[1:]
+    assert loss.shape == ()
+    for g, p in zip(grads, params):
+        assert g.shape == p.shape
+    # gradient flows to the embedding (weight-tied head guarantees it)
+    assert float(jnp.abs(grads[0]).max()) > 0
+
+
+def test_loss_decreases_under_sgd():
+    step = jax.jit(model_lib.make_train_step(CFG))
+    params = model_lib.init_params(CFG, jax.random.PRNGKey(0))
+    batch = make_batch(CFG)
+    losses = []
+    for _ in range(8):
+        out = step(*params, *batch)
+        losses.append(float(out[0]))
+        params = [p - 0.5 * g for p, g in zip(params, out[1:])]
+    assert losses[-1] < losses[0] - 0.1, f"losses={losses}"
+
+
+def test_classifier_step():
+    step = jax.jit(model_lib.make_train_step(CLS))
+    params = model_lib.init_params(CLS, jax.random.PRNGKey(0))
+    key = jax.random.PRNGKey(1)
+    tokens = jax.random.randint(key, (CLS.batch, CLS.seq), 0, CLS.vocab)
+    labels = jax.random.randint(key, (CLS.batch,), 0, CLS.num_classes)
+    out = step(*params, tokens, labels)
+    assert len(out) == 1 + len(params)
+    assert abs(float(out[0]) - np.log(CLS.num_classes)) < 1.0
+
+    ev = jax.jit(model_lib.make_eval_step(CLS))
+    loss, acc = ev(*params, tokens, labels)
+    assert 0.0 <= float(acc) <= 1.0
+
+
+def test_mask_controls_loss():
+    # Zero mask => loss 0 (no positions contribute).
+    params = model_lib.init_params(CFG, jax.random.PRNGKey(0))
+    tokens, targets, mask = make_batch(CFG)
+    loss = model_lib.mlm_loss(CFG, params, tokens, targets, jnp.zeros_like(mask))
+    assert float(loss) == 0.0

@@ -1,0 +1,186 @@
+//! Minimal argv parser (clap is unavailable offline): subcommand + flags.
+//!
+//! Supported syntax: `--name value`, `--name=value`, boolean `--flag`,
+//! and positional arguments. Unknown flags are errors (typo safety).
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    flags: BTreeMap<String, String>,
+    positional: Vec<String>,
+}
+
+/// Declared option: name, takes_value, help.
+pub struct Opt {
+    pub name: &'static str,
+    pub takes_value: bool,
+    pub help: &'static str,
+}
+
+impl Args {
+    /// Parse argv (without the program name) against the declared options.
+    pub fn parse(
+        argv: &[String],
+        with_subcommand: bool,
+        opts: &[Opt],
+    ) -> Result<Args, String> {
+        let mut flags = BTreeMap::new();
+        let mut positional = Vec::new();
+        let mut subcommand = None;
+        let mut it = argv.iter().peekable();
+        if with_subcommand {
+            if let Some(first) = it.peek() {
+                if !first.starts_with('-') {
+                    subcommand = Some(it.next().unwrap().clone());
+                }
+            }
+        }
+        while let Some(arg) = it.next() {
+            if let Some(stripped) = arg.strip_prefix("--") {
+                let (name, inline_val) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let opt = opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| format!("unknown flag --{name}"))?;
+                let value = if opt.takes_value {
+                    match inline_val {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| format!("--{name} requires a value"))?
+                            .clone(),
+                    }
+                } else {
+                    if inline_val.is_some() {
+                        return Err(format!("--{name} does not take a value"));
+                    }
+                    "true".to_string()
+                };
+                flags.insert(name, value);
+            } else {
+                positional.push(arg.clone());
+            }
+        }
+        Ok(Args { subcommand, flags, positional })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.get(name) == Some("true")
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name}: '{v}' is not an integer")),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name}: '{v}' is not a number")),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name}: '{v}' is not an integer")),
+        }
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+/// Render a usage string for the declared options.
+pub fn usage(program: &str, about: &str, subcommands: &[(&str, &str)], opts: &[Opt]) -> String {
+    let mut s = format!("{program} — {about}\n\nUSAGE:\n  {program}");
+    if !subcommands.is_empty() {
+        s.push_str(" <subcommand>");
+    }
+    s.push_str(" [flags]\n");
+    if !subcommands.is_empty() {
+        s.push_str("\nSUBCOMMANDS:\n");
+        for (name, help) in subcommands {
+            s.push_str(&format!("  {name:<16} {help}\n"));
+        }
+    }
+    s.push_str("\nFLAGS:\n");
+    for o in opts {
+        let meta = if o.takes_value { format!("--{} <v>", o.name) } else { format!("--{}", o.name) };
+        s.push_str(&format!("  {meta:<28} {}\n", o.help));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn opts() -> Vec<Opt> {
+        vec![
+            Opt { name: "steps", takes_value: true, help: "" },
+            Opt { name: "lr", takes_value: true, help: "" },
+            Opt { name: "verbose", takes_value: false, help: "" },
+            Opt { name: "config", takes_value: true, help: "" },
+        ]
+    }
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_flags_positionals() {
+        let a = Args::parse(
+            &argv(&["train", "--steps", "100", "--lr=0.01", "--verbose", "extra"]),
+            true,
+            &opts(),
+        )
+        .unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.usize_or("steps", 0).unwrap(), 100);
+        assert_eq!(a.f64_or("lr", 0.0).unwrap(), 0.01);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional(), &["extra".to_string()]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(&argv(&[]), true, &opts()).unwrap();
+        assert_eq!(a.subcommand, None);
+        assert_eq!(a.usize_or("steps", 7).unwrap(), 7);
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn rejects_unknown_and_malformed() {
+        assert!(Args::parse(&argv(&["--nope"]), false, &opts()).is_err());
+        assert!(Args::parse(&argv(&["--steps"]), false, &opts()).is_err());
+        assert!(Args::parse(&argv(&["--verbose=yes"]), false, &opts()).is_err());
+        let a = Args::parse(&argv(&["--steps", "abc"]), false, &opts()).unwrap();
+        assert!(a.usize_or("steps", 0).is_err());
+    }
+
+    #[test]
+    fn usage_mentions_everything() {
+        let u = usage("bytepsc", "x", &[("train", "run training")], &opts());
+        assert!(u.contains("train"));
+        assert!(u.contains("--steps"));
+    }
+}

@@ -1,0 +1,234 @@
+//! Binary wire format for [`Message`] — length-prefixed frames with a
+//! fixed header, used verbatim by the TCP transport and for byte
+//! accounting by the in-process transport.
+//!
+//! ```text
+//! frame := [len: u32le] [tag: u8] body
+//! Push      body := [key u64][iter u64][worker u32][block]
+//! Pull      body := [key u64][iter u64][worker u32]
+//! PullResp  body := [key u64][iter u64][block]
+//! Ack       body := [key u64][iter u64]
+//! Shutdown  body := (empty)
+//! block := [scheme u8][n u64][payload_len u32][payload …]
+//! ```
+
+use super::{CommError, Message};
+use crate::compress::{Compressed, SchemeId};
+
+const TAG_PUSH: u8 = 1;
+const TAG_PULL: u8 = 2;
+const TAG_PULL_RESP: u8 = 3;
+const TAG_ACK: u8 = 4;
+const TAG_SHUTDOWN: u8 = 5;
+
+fn put_u32(b: &mut Vec<u8>, v: u32) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(b: &mut Vec<u8>, v: u64) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn u8(&mut self) -> Result<u8, CommError> {
+        let v = *self.buf.get(self.pos).ok_or_else(|| CommError::Protocol("truncated".into()))?;
+        self.pos += 1;
+        Ok(v)
+    }
+
+    fn u32(&mut self) -> Result<u32, CommError> {
+        let end = self.pos + 4;
+        let s = self
+            .buf
+            .get(self.pos..end)
+            .ok_or_else(|| CommError::Protocol("truncated u32".into()))?;
+        self.pos = end;
+        Ok(u32::from_le_bytes(s.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, CommError> {
+        let end = self.pos + 8;
+        let s = self
+            .buf
+            .get(self.pos..end)
+            .ok_or_else(|| CommError::Protocol("truncated u64".into()))?;
+        self.pos = end;
+        Ok(u64::from_le_bytes(s.try_into().unwrap()))
+    }
+
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8], CommError> {
+        let end = self.pos + n;
+        let s = self
+            .buf
+            .get(self.pos..end)
+            .ok_or_else(|| CommError::Protocol("truncated payload".into()))?;
+        self.pos = end;
+        Ok(s)
+    }
+}
+
+fn put_block(b: &mut Vec<u8>, c: &Compressed) {
+    b.push(c.scheme as u8);
+    put_u64(b, c.n as u64);
+    put_u32(b, c.payload.len() as u32);
+    b.extend_from_slice(&c.payload);
+}
+
+fn get_block(r: &mut Reader) -> Result<Compressed, CommError> {
+    let scheme = SchemeId::from_u8(r.u8()?)
+        .ok_or_else(|| CommError::Protocol("bad scheme id".into()))?;
+    let n = r.u64()? as usize;
+    let plen = r.u32()? as usize;
+    let payload = r.bytes(plen)?.to_vec();
+    Ok(Compressed { scheme, n, payload })
+}
+
+/// Encode a message body (without the length prefix).
+pub fn encode_body(msg: &Message) -> Vec<u8> {
+    let mut b = Vec::with_capacity(32 + msg.payload_bytes());
+    match msg {
+        Message::Push { key, iter, worker, data } => {
+            b.push(TAG_PUSH);
+            put_u64(&mut b, *key);
+            put_u64(&mut b, *iter);
+            put_u32(&mut b, *worker);
+            put_block(&mut b, data);
+        }
+        Message::Pull { key, iter, worker } => {
+            b.push(TAG_PULL);
+            put_u64(&mut b, *key);
+            put_u64(&mut b, *iter);
+            put_u32(&mut b, *worker);
+        }
+        Message::PullResp { key, iter, data } => {
+            b.push(TAG_PULL_RESP);
+            put_u64(&mut b, *key);
+            put_u64(&mut b, *iter);
+            put_block(&mut b, data);
+        }
+        Message::Ack { key, iter } => {
+            b.push(TAG_ACK);
+            put_u64(&mut b, *key);
+            put_u64(&mut b, *iter);
+        }
+        Message::Shutdown => b.push(TAG_SHUTDOWN),
+    }
+    b
+}
+
+/// Encode a full frame (length prefix + body).
+pub fn encode(msg: &Message) -> Vec<u8> {
+    let body = encode_body(msg);
+    let mut out = Vec::with_capacity(4 + body.len());
+    put_u32(&mut out, body.len() as u32);
+    out.extend_from_slice(&body);
+    out
+}
+
+/// Decode a message body (frame already stripped of its length prefix).
+pub fn decode_body(buf: &[u8]) -> Result<Message, CommError> {
+    let mut r = Reader { buf, pos: 0 };
+    let tag = r.u8()?;
+    let msg = match tag {
+        TAG_PUSH => Message::Push {
+            key: r.u64()?,
+            iter: r.u64()?,
+            worker: r.u32()?,
+            data: get_block(&mut r)?,
+        },
+        TAG_PULL => Message::Pull { key: r.u64()?, iter: r.u64()?, worker: r.u32()? },
+        TAG_PULL_RESP => Message::PullResp { key: r.u64()?, iter: r.u64()?, data: get_block(&mut r)? },
+        TAG_ACK => Message::Ack { key: r.u64()?, iter: r.u64()? },
+        TAG_SHUTDOWN => Message::Shutdown,
+        t => return Err(CommError::Protocol(format!("unknown tag {t}"))),
+    };
+    if r.pos != buf.len() {
+        return Err(CommError::Protocol(format!("{} trailing bytes", buf.len() - r.pos)));
+    }
+    Ok(msg)
+}
+
+/// Wire size of a message, including the 4-byte length prefix.
+pub fn frame_bytes(msg: &Message) -> usize {
+    4 + encode_body(msg).len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::forall;
+
+    fn sample_block(g: &mut crate::testutil::Gen) -> Compressed {
+        let scheme = *g.choose(&[
+            SchemeId::Identity,
+            SchemeId::Fp16,
+            SchemeId::OneBit,
+            SchemeId::TopK,
+            SchemeId::RandomK,
+            SchemeId::LinearDither,
+            SchemeId::NaturalDither,
+        ]);
+        let plen = g.usize_in(0, 64);
+        let payload = (0..plen).map(|_| (g.u64() & 0xFF) as u8).collect();
+        Compressed { scheme, n: g.usize_in(0, 1000), payload }
+    }
+
+    #[test]
+    fn roundtrip_all_message_kinds() {
+        forall(200, 0xf4a3e, |g| {
+            let msg = match g.usize_in(0, 4) {
+                0 => Message::Push {
+                    key: g.u64(),
+                    iter: g.u64(),
+                    worker: (g.u64() & 0xFFFF) as u32,
+                    data: sample_block(g),
+                },
+                1 => Message::Pull { key: g.u64(), iter: g.u64(), worker: 3 },
+                2 => Message::PullResp { key: g.u64(), iter: g.u64(), data: sample_block(g) },
+                3 => Message::Ack { key: g.u64(), iter: g.u64() },
+                _ => Message::Shutdown,
+            };
+            let enc = encode(&msg);
+            let len = u32::from_le_bytes(enc[..4].try_into().unwrap()) as usize;
+            if len != enc.len() - 4 {
+                return Err("length prefix wrong".into());
+            }
+            let dec = decode_body(&enc[4..]).map_err(|e| e.to_string())?;
+            if dec != msg {
+                return Err(format!("roundtrip mismatch: {msg:?} vs {dec:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(decode_body(&[]).is_err());
+        assert!(decode_body(&[99]).is_err());
+        assert!(decode_body(&[TAG_ACK, 1, 2]).is_err()); // truncated
+        // trailing garbage
+        let mut enc = encode_body(&Message::Shutdown);
+        enc.push(0);
+        assert!(decode_body(&enc).is_err());
+        // bad scheme id inside a block
+        let msg = Message::PullResp {
+            key: 1,
+            iter: 1,
+            data: Compressed { scheme: SchemeId::TopK, n: 4, payload: vec![1, 2, 3] },
+        };
+        let mut enc = encode_body(&msg);
+        enc[17] = 0xEE; // scheme byte (1 tag + 8 key + 8 iter)
+        assert!(decode_body(&enc).is_err());
+    }
+
+    #[test]
+    fn frame_bytes_matches_encoding() {
+        let msg = Message::Ack { key: 7, iter: 9 };
+        assert_eq!(frame_bytes(&msg), encode(&msg).len());
+    }
+}

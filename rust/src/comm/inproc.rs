@@ -1,0 +1,113 @@
+//! In-process transport: mpsc-backed endpoint pairs with frame-accurate
+//! byte accounting. This is the default transport for experiments — it
+//! exercises the full PS/worker protocol without socket overhead, which is
+//! what the Table-6 ablation needs (compression cost, not kernel cost).
+
+use super::{CommError, Endpoint, Message};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::{Arc, Mutex};
+
+pub struct InprocEndpoint {
+    tx: Sender<Message>,
+    rx: Mutex<Receiver<Message>>,
+    sent: Arc<AtomicU64>,
+}
+
+impl Endpoint for InprocEndpoint {
+    fn send(&self, msg: Message) -> Result<(), CommError> {
+        self.sent.fetch_add(super::frame::frame_bytes(&msg) as u64, Ordering::Relaxed);
+        self.tx.send(msg).map_err(|_| CommError::Closed)
+    }
+
+    fn recv(&self) -> Result<Message, CommError> {
+        self.rx.lock().unwrap().recv().map_err(|_| CommError::Closed)
+    }
+
+    fn try_recv(&self) -> Result<Option<Message>, CommError> {
+        match self.rx.lock().unwrap().try_recv() {
+            Ok(m) => Ok(Some(m)),
+            Err(TryRecvError::Empty) => Ok(None),
+            Err(TryRecvError::Disconnected) => Err(CommError::Closed),
+        }
+    }
+
+    fn bytes_sent(&self) -> u64 {
+        self.sent.load(Ordering::Relaxed)
+    }
+}
+
+/// A connected pair of endpoints (worker side, server side).
+pub fn pair() -> (InprocEndpoint, InprocEndpoint) {
+    let (atx, arx) = channel();
+    let (btx, brx) = channel();
+    (
+        InprocEndpoint { tx: atx, rx: Mutex::new(brx), sent: Arc::new(AtomicU64::new(0)) },
+        InprocEndpoint { tx: btx, rx: Mutex::new(arx), sent: Arc::new(AtomicU64::new(0)) },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::frame;
+    use crate::compress::{Compressed, SchemeId};
+
+    #[test]
+    fn pair_is_bidirectional() {
+        let (a, b) = pair();
+        a.send(Message::Ack { key: 1, iter: 2 }).unwrap();
+        assert_eq!(b.recv().unwrap(), Message::Ack { key: 1, iter: 2 });
+        b.send(Message::Shutdown).unwrap();
+        assert_eq!(a.recv().unwrap(), Message::Shutdown);
+    }
+
+    #[test]
+    fn try_recv_nonblocking() {
+        let (a, b) = pair();
+        assert_eq!(b.try_recv().unwrap(), None);
+        a.send(Message::Ack { key: 0, iter: 0 }).unwrap();
+        assert!(b.try_recv().unwrap().is_some());
+        assert_eq!(b.try_recv().unwrap(), None);
+    }
+
+    #[test]
+    fn byte_accounting_matches_frames() {
+        let (a, b) = pair();
+        let m1 = Message::Push {
+            key: 1,
+            iter: 0,
+            worker: 0,
+            data: Compressed { scheme: SchemeId::OneBit, n: 80, payload: vec![0u8; 14] },
+        };
+        let m2 = Message::Pull { key: 1, iter: 0, worker: 0 };
+        let expect = (frame::frame_bytes(&m1) + frame::frame_bytes(&m2)) as u64;
+        a.send(m1).unwrap();
+        a.send(m2).unwrap();
+        assert_eq!(a.bytes_sent(), expect);
+        let _ = b.recv().unwrap();
+        let _ = b.recv().unwrap();
+    }
+
+    #[test]
+    fn closed_peer_is_an_error() {
+        let (a, b) = pair();
+        drop(b);
+        assert_eq!(a.send(Message::Shutdown), Err(CommError::Closed));
+        assert_eq!(a.recv(), Err(CommError::Closed));
+    }
+
+    #[test]
+    fn works_across_threads() {
+        let (a, b) = pair();
+        let t = std::thread::spawn(move || {
+            for i in 0..100u64 {
+                a.send(Message::Ack { key: i, iter: i }).unwrap();
+            }
+        });
+        for i in 0..100u64 {
+            assert_eq!(b.recv().unwrap(), Message::Ack { key: i, iter: i });
+        }
+        t.join().unwrap();
+    }
+}

@@ -1,0 +1,90 @@
+//! Communication substrate: wire framing for compressed gradient blocks,
+//! the push/pull RPC message set, and two interchangeable transports
+//! (in-process channels and TCP over localhost).
+//!
+//! The paper's system uses BytePS's ZeroMQ/RDMA stack; here the same
+//! message flow runs over [`inproc`] for single-process experiments and
+//! [`tcp`] for true multi-process runs. The byte counters the benchmarks
+//! report come from this layer, so wire volume is measured, not assumed.
+
+pub mod frame;
+pub mod inproc;
+pub mod tcp;
+
+use crate::compress::Compressed;
+
+/// Key identifying one gradient tensor (block) in the PS keyspace.
+pub type Key = u64;
+
+/// A push/pull RPC message. `iter` tags the training step so servers can
+/// detect stragglers/duplicates (BSP semantics: one push per worker per
+/// key per iteration).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Message {
+    /// Worker → server: compressed gradient for `key` at step `iter`.
+    Push { key: Key, iter: u64, worker: u32, data: Compressed },
+    /// Worker → server: request the aggregated gradient once ready.
+    Pull { key: Key, iter: u64, worker: u32 },
+    /// Server → worker: aggregated (re-compressed) gradient.
+    PullResp { key: Key, iter: u64, data: Compressed },
+    /// Server → worker: push acknowledged.
+    Ack { key: Key, iter: u64 },
+    /// Graceful shutdown.
+    Shutdown,
+}
+
+impl Message {
+    /// Payload bytes this message contributes to wire traffic (headers are
+    /// accounted by the frame encoder).
+    pub fn payload_bytes(&self) -> usize {
+        match self {
+            Message::Push { data, .. } | Message::PullResp { data, .. } => data.nbytes(),
+            _ => 0,
+        }
+    }
+}
+
+/// A bidirectional, message-oriented channel endpoint.
+pub trait Endpoint: Send {
+    fn send(&self, msg: Message) -> Result<(), CommError>;
+    fn recv(&self) -> Result<Message, CommError>;
+    /// Non-blocking receive.
+    fn try_recv(&self) -> Result<Option<Message>, CommError>;
+    /// Total bytes sent through this endpoint (frame-encoded size).
+    fn bytes_sent(&self) -> u64;
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CommError {
+    Closed,
+    Protocol(String),
+    Io(String),
+}
+
+impl std::fmt::Display for CommError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CommError::Closed => write!(f, "channel closed"),
+            CommError::Protocol(s) => write!(f, "protocol error: {s}"),
+            CommError::Io(s) => write!(f, "io error: {s}"),
+        }
+    }
+}
+
+impl std::error::Error for CommError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::SchemeId;
+
+    #[test]
+    fn payload_bytes_only_for_data_messages() {
+        let data = Compressed { scheme: SchemeId::Identity, n: 2, payload: vec![0u8; 8] };
+        assert_eq!(Message::Push { key: 1, iter: 0, worker: 0, data: data.clone() }.payload_bytes(), 8);
+        assert_eq!(Message::PullResp { key: 1, iter: 0, data }.payload_bytes(), 8);
+        assert_eq!(Message::Pull { key: 1, iter: 0, worker: 0 }.payload_bytes(), 0);
+        assert_eq!(Message::Ack { key: 1, iter: 0 }.payload_bytes(), 0);
+        assert_eq!(Message::Shutdown.payload_bytes(), 0);
+    }
+}

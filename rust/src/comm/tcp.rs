@@ -1,0 +1,169 @@
+//! TCP transport: the same frame protocol over real sockets, for
+//! multi-process runs (`bytepsc server` / `bytepsc worker`). Localhost by
+//! default; nothing here assumes a single machine.
+
+use super::{frame, CommError, Endpoint, Message};
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+pub struct TcpEndpoint {
+    // Separate read/write halves so send and recv don't serialize on one lock.
+    reader: Mutex<TcpStream>,
+    writer: Mutex<TcpStream>,
+    sent: Arc<AtomicU64>,
+}
+
+impl TcpEndpoint {
+    pub fn from_stream(stream: TcpStream) -> std::io::Result<Self> {
+        stream.set_nodelay(true)?;
+        let reader = stream.try_clone()?;
+        Ok(TcpEndpoint {
+            reader: Mutex::new(reader),
+            writer: Mutex::new(stream),
+            sent: Arc::new(AtomicU64::new(0)),
+        })
+    }
+
+    pub fn connect<A: ToSocketAddrs>(addr: A) -> std::io::Result<Self> {
+        Self::from_stream(TcpStream::connect(addr)?)
+    }
+}
+
+fn read_exact(stream: &mut TcpStream, buf: &mut [u8]) -> Result<(), CommError> {
+    stream.read_exact(buf).map_err(|e| {
+        if e.kind() == std::io::ErrorKind::UnexpectedEof {
+            CommError::Closed
+        } else {
+            CommError::Io(e.to_string())
+        }
+    })
+}
+
+impl Endpoint for TcpEndpoint {
+    fn send(&self, msg: Message) -> Result<(), CommError> {
+        let bytes = frame::encode(&msg);
+        self.sent.fetch_add(bytes.len() as u64, Ordering::Relaxed);
+        let mut w = self.writer.lock().unwrap();
+        w.write_all(&bytes).map_err(|e| CommError::Io(e.to_string()))
+    }
+
+    fn recv(&self) -> Result<Message, CommError> {
+        let mut r = self.reader.lock().unwrap();
+        let mut len_buf = [0u8; 4];
+        read_exact(&mut r, &mut len_buf)?;
+        let len = u32::from_le_bytes(len_buf) as usize;
+        if len > 1 << 30 {
+            return Err(CommError::Protocol(format!("frame too large: {len}")));
+        }
+        let mut body = vec![0u8; len];
+        read_exact(&mut r, &mut body)?;
+        frame::decode_body(&body)
+    }
+
+    fn try_recv(&self) -> Result<Option<Message>, CommError> {
+        // Peek the stream without blocking.
+        let r = self.reader.lock().unwrap();
+        r.set_nonblocking(true).map_err(|e| CommError::Io(e.to_string()))?;
+        let mut len_buf = [0u8; 4];
+        let peeked = r.peek(&mut len_buf);
+        r.set_nonblocking(false).map_err(|e| CommError::Io(e.to_string()))?;
+        drop(r);
+        match peeked {
+            Ok(4) => self.recv().map(Some),
+            Ok(_) => Ok(None), // partial header not yet arrived
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => Ok(None),
+            Err(e) => Err(CommError::Io(e.to_string())),
+        }
+    }
+
+    fn bytes_sent(&self) -> u64 {
+        self.sent.load(Ordering::Relaxed)
+    }
+}
+
+/// Listen on `addr` and accept exactly `n` connections (one per worker).
+pub fn accept_n<A: ToSocketAddrs>(addr: A, n: usize) -> std::io::Result<(Vec<TcpEndpoint>, u16)> {
+    let listener = TcpListener::bind(addr)?;
+    let port = listener.local_addr()?.port();
+    let mut eps = Vec::with_capacity(n);
+    for _ in 0..n {
+        let (stream, _) = listener.accept()?;
+        eps.push(TcpEndpoint::from_stream(stream)?);
+    }
+    Ok((eps, port))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{Compressed, SchemeId};
+
+    #[test]
+    fn tcp_roundtrip() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let ep = TcpEndpoint::from_stream(stream).unwrap();
+            loop {
+                match ep.recv().unwrap() {
+                    Message::Shutdown => break,
+                    m @ Message::Push { .. } => {
+                        if let Message::Push { key, iter, .. } = &m {
+                            ep.send(Message::Ack { key: *key, iter: *iter }).unwrap();
+                        }
+                    }
+                    _ => panic!("unexpected"),
+                }
+            }
+        });
+
+        let client = TcpEndpoint::connect(addr).unwrap();
+        let data = Compressed {
+            scheme: SchemeId::TopK,
+            n: 1000,
+            payload: (0..123u32).flat_map(|v| v.to_le_bytes()).collect(),
+        };
+        for i in 0..10u64 {
+            client.send(Message::Push { key: 5, iter: i, worker: 0, data: data.clone() }).unwrap();
+            assert_eq!(client.recv().unwrap(), Message::Ack { key: 5, iter: i });
+        }
+        client.send(Message::Shutdown).unwrap();
+        server.join().unwrap();
+        assert!(client.bytes_sent() > 10 * data.nbytes() as u64);
+    }
+
+    #[test]
+    fn accept_n_connects_all() {
+        let handle = std::thread::spawn(|| accept_n("127.0.0.1:0", 0).map(|(_, p)| p));
+        let port = handle.join().unwrap().unwrap();
+        assert!(port > 0);
+    }
+
+    #[test]
+    fn large_frame_roundtrip() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let payload: Vec<u8> = (0..4_000_000usize).map(|i| (i % 251) as u8).collect();
+        let expect = payload.clone();
+        let server = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let ep = TcpEndpoint::from_stream(stream).unwrap();
+            match ep.recv().unwrap() {
+                Message::PullResp { data, .. } => assert_eq!(data.payload, expect),
+                _ => panic!("unexpected"),
+            }
+        });
+        let client = TcpEndpoint::connect(addr).unwrap();
+        client
+            .send(Message::PullResp {
+                key: 0,
+                iter: 0,
+                data: Compressed { scheme: SchemeId::Identity, n: 1_000_000, payload },
+            })
+            .unwrap();
+        server.join().unwrap();
+    }
+}

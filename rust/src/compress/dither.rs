@@ -1,0 +1,405 @@
+//! Stochastic dithering quantizers.
+//!
+//! * [`LinearDither`] — b-bit uniform stochastic quantization with a
+//!   per-tensor max-|x| scale (QSGD-style; paper uses 5 bits for CNNs and
+//!   7 bits for BERT).
+//! * [`NaturalDither`] — power-of-two levels with stochastic rounding
+//!   (Horváth et al. '19 natural compression; paper uses 3 bits).
+//!
+//! Both are **unbiased conditional on the scale** (the scale is a
+//! deterministic function of `x`), so they run under Alg. 3 without error
+//! feedback. The same numerics are implemented as the L1 Pallas kernel in
+//! `python/compile/kernels/quantize.py` and cross-checked in
+//! `rust/tests/pallas_parity.rs`.
+
+use super::{Compressed, Compressor, Ctx, SchemeId};
+use crate::util::max_abs;
+
+/// Pack a stream of `bits`-wide codes into bytes (LSB-first).
+pub(crate) struct BitPacker {
+    buf: Vec<u8>,
+    acc: u64,
+    nbits: u32,
+}
+
+impl BitPacker {
+    pub fn new(capacity_codes: usize, bits: u32) -> Self {
+        BitPacker {
+            buf: Vec::with_capacity((capacity_codes * bits as usize).div_ceil(8)),
+            acc: 0,
+            nbits: 0,
+        }
+    }
+
+    #[inline]
+    pub fn push(&mut self, code: u32, bits: u32) {
+        debug_assert!(bits <= 32 && (code as u64) < (1u64 << bits));
+        self.acc |= (code as u64) << self.nbits;
+        self.nbits += bits;
+        while self.nbits >= 8 {
+            self.buf.push((self.acc & 0xFF) as u8);
+            self.acc >>= 8;
+            self.nbits -= 8;
+        }
+    }
+
+    pub fn finish(mut self) -> Vec<u8> {
+        if self.nbits > 0 {
+            self.buf.push((self.acc & 0xFF) as u8);
+        }
+        self.buf
+    }
+}
+
+/// Unpack `bits`-wide codes (LSB-first).
+pub(crate) struct BitUnpacker<'a> {
+    buf: &'a [u8],
+    byte: usize,
+    acc: u64,
+    nbits: u32,
+}
+
+impl<'a> BitUnpacker<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        BitUnpacker { buf, byte: 0, acc: 0, nbits: 0 }
+    }
+
+    #[inline]
+    pub fn pull(&mut self, bits: u32) -> u32 {
+        while self.nbits < bits {
+            self.acc |= (self.buf[self.byte] as u64) << self.nbits;
+            self.byte += 1;
+            self.nbits += 8;
+        }
+        let v = (self.acc & ((1u64 << bits) - 1)) as u32;
+        self.acc >>= bits;
+        self.nbits -= bits;
+        v
+    }
+}
+
+/// b-bit linear (uniform) stochastic quantization.
+///
+/// With `L = 2^(b-1) - 1` levels per sign and scale `s = max|x|`, each value
+/// maps to `round_stochastic(x / s * L)` ∈ `[-L, L]`, stored as `b`-bit
+/// offset codes. `E[decode] = x`; worst-case ω per Definition 1 is bounded
+/// by `d / L²` after normalization (tested statistically).
+pub struct LinearDither {
+    pub bits: u32,
+}
+
+impl LinearDither {
+    pub fn new(bits: u32) -> Self {
+        assert!((2..=16).contains(&bits), "linear dithering bits must be in [2,16], got {bits}");
+        LinearDither { bits }
+    }
+
+    fn levels(&self) -> i64 {
+        (1i64 << (self.bits - 1)) - 1
+    }
+}
+
+impl Compressor for LinearDither {
+    fn name(&self) -> &'static str {
+        "linear_dither"
+    }
+
+    fn id(&self) -> SchemeId {
+        SchemeId::LinearDither
+    }
+
+    fn unbiased(&self) -> bool {
+        true
+    }
+
+    fn compress(&self, x: &[f32], ctx: &mut Ctx) -> Compressed {
+        let scale = max_abs(x);
+        let l = self.levels();
+        let mut payload = Vec::new();
+        super::put_f32(&mut payload, scale);
+        let mut packer = BitPacker::new(x.len(), self.bits);
+        if scale > 0.0 {
+            let inv = l as f32 / scale;
+            for &v in x {
+                let q = v * inv; // in [-L, L]
+                let lo = q.floor();
+                let p = q - lo;
+                let level = lo as i64 + if (ctx.rng.next_f32() as f32) < p { 1 } else { 0 };
+                let level = level.clamp(-l, l);
+                packer.push((level + l) as u32, self.bits);
+            }
+        } else {
+            for _ in x {
+                packer.push(l as u32, self.bits); // code for level 0
+            }
+        }
+        payload.extend_from_slice(&packer.finish());
+        Compressed { scheme: SchemeId::LinearDither, n: x.len(), payload }
+    }
+
+    fn decompress(&self, c: &Compressed, out: &mut [f32]) {
+        assert_eq!(out.len(), c.n);
+        let scale = super::get_f32(&c.payload, 0);
+        let l = self.levels();
+        let step = if l > 0 { scale / l as f32 } else { 0.0 };
+        let mut up = BitUnpacker::new(&c.payload[4..]);
+        for o in out.iter_mut() {
+            let code = up.pull(self.bits) as i64 - l;
+            *o = code as f32 * step;
+        }
+    }
+
+    fn wire_nbytes(&self, n: usize) -> usize {
+        4 + (n * self.bits as usize).div_ceil(8)
+    }
+}
+
+/// b-bit natural (power-of-two) stochastic quantization.
+///
+/// Levels are `{0} ∪ {±s·2^-j : j = 0..2^(b-1)-2}` with `s = max|x|`.
+/// A magnitude `u ∈ (0, s]` lands between two adjacent powers of two and is
+/// rounded up with probability `(u - 2^p)/2^p`, which is unbiased; below the
+/// smallest level it is rounded against 0 (also unbiased).
+pub struct NaturalDither {
+    pub bits: u32,
+}
+
+impl NaturalDither {
+    pub fn new(bits: u32) -> Self {
+        assert!((2..=8).contains(&bits), "natural dithering bits must be in [2,8], got {bits}");
+        NaturalDither { bits }
+    }
+
+    /// Number of nonzero magnitude slots.
+    fn slots(&self) -> u32 {
+        (1u32 << (self.bits - 1)) - 1
+    }
+}
+
+impl Compressor for NaturalDither {
+    fn name(&self) -> &'static str {
+        "natural_dither"
+    }
+
+    fn id(&self) -> SchemeId {
+        SchemeId::NaturalDither
+    }
+
+    fn unbiased(&self) -> bool {
+        true
+    }
+
+    fn compress(&self, x: &[f32], ctx: &mut Ctx) -> Compressed {
+        let scale = max_abs(x);
+        let slots = self.slots(); // exponents j = 0..slots-1 => levels 2^-j
+        let min_exp = -(slots as i32 - 1);
+        let mut payload = Vec::new();
+        super::put_f32(&mut payload, scale);
+        let mut packer = BitPacker::new(x.len(), self.bits);
+        for &v in x {
+            // Code layout (2·slots + 1 = 2^b − 1 codes):
+            //   0            => zero
+            //   1 + j        => +scale · 2^-j   (j = 0..slots-1)
+            //   1 + slots + j => −scale · 2^-j
+            let code: u32 = if scale == 0.0 || v == 0.0 {
+                0
+            } else {
+                let u = (v.abs() / scale).min(1.0); // in (0, 1]
+                // Perf (EXPERIMENTS.md §Perf): floor(log2(u)) and the
+                // round-up probability come straight from the f32 bit
+                // pattern — for normal u = 2^e·(1+m/2^23) the probability
+                // (u − 2^e)/2^e equals m·2^-23 — replacing per-element
+                // log2/exp2 libm calls.
+                let bits = u.to_bits();
+                let e = (((bits >> 23) & 0xFF) as i32 - 127).clamp(min_exp - 1, 0);
+                let exp = if e < min_exp {
+                    // Below the smallest level: round between 0 and 2^min_exp.
+                    let hi = f32::from_bits(((min_exp + 127) as u32) << 23);
+                    if ctx.rng.next_f32() < u / hi {
+                        min_exp
+                    } else {
+                        i32::MIN // rounded to zero
+                    }
+                } else {
+                    // Between 2^e and 2^(e+1): round up w.p. mantissa·2^-23.
+                    let p = (bits & 0x7F_FFFF) as f32 * (1.0 / (1u32 << 23) as f32);
+                    if ctx.rng.next_f32() < p {
+                        (e + 1).min(0)
+                    } else {
+                        e
+                    }
+                };
+                if exp == i32::MIN {
+                    0
+                } else {
+                    let j = (-exp) as u32; // 0..slots-1
+                    if v < 0.0 {
+                        1 + slots + j
+                    } else {
+                        1 + j
+                    }
+                }
+            };
+            packer.push(code, self.bits);
+        }
+        payload.extend_from_slice(&packer.finish());
+        Compressed { scheme: SchemeId::NaturalDither, n: x.len(), payload }
+    }
+
+    fn decompress(&self, c: &Compressed, out: &mut [f32]) {
+        assert_eq!(out.len(), c.n);
+        let scale = super::get_f32(&c.payload, 0);
+        let mut up = BitUnpacker::new(&c.payload[4..]);
+        for o in out.iter_mut() {
+            let code = up.pull(self.bits);
+            *o = decode_natural(code, scale, self.bits);
+        }
+    }
+
+    fn wire_nbytes(&self, n: usize) -> usize {
+        4 + (n * self.bits as usize).div_ceil(8)
+    }
+}
+
+fn decode_natural(code: u32, scale: f32, bits: u32) -> f32 {
+    if code == 0 {
+        return 0.0;
+    }
+    let slots = (1u32 << (bits - 1)) - 1;
+    let c = code - 1;
+    let j = c % slots;
+    let sign = if c / slots == 1 { -1.0f32 } else { 1.0 };
+    sign * scale * (-(j as f32)).exp2()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::forall;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn bitpacker_roundtrip() {
+        for bits in [2u32, 3, 5, 7, 11, 16] {
+            let codes: Vec<u32> = (0..257).map(|i| (i * 2654435761u64 as usize) as u32 & ((1 << bits) - 1)).collect();
+            let mut p = BitPacker::new(codes.len(), bits);
+            for &c in &codes {
+                p.push(c, bits);
+            }
+            let buf = p.finish();
+            assert_eq!(buf.len(), (codes.len() * bits as usize).div_ceil(8));
+            let mut u = BitUnpacker::new(&buf);
+            for &c in &codes {
+                assert_eq!(u.pull(bits), c, "bits={bits}");
+            }
+        }
+    }
+
+    #[test]
+    fn linear_dither_unbiased_statistical() {
+        let n = 32;
+        let x: Vec<f32> = (0..n).map(|i| ((i as f32) * 0.41).sin() * 2.0).collect();
+        let q = LinearDither::new(5);
+        let mut rng = Xoshiro256::seed_from_u64(77);
+        let mut mean = vec![0.0f64; n];
+        let trials = 6000;
+        for _ in 0..trials {
+            let c = q.compress(&x, &mut Ctx::new(&mut rng));
+            let mut out = vec![0.0f32; n];
+            q.decompress(&c, &mut out);
+            for (m, o) in mean.iter_mut().zip(&out) {
+                *m += *o as f64;
+            }
+        }
+        for i in 0..n {
+            let m = mean[i] / trials as f64;
+            // step = scale/L = 2/15 ≈ 0.133; mean error should be << step/10
+            assert!((m - x[i] as f64).abs() < 0.02, "i={i} m={m} x={}", x[i]);
+        }
+    }
+
+    #[test]
+    fn linear_dither_error_bounded_by_step() {
+        forall(100, 0x11d, |g| {
+            let n = g.usize_in(1, 300);
+            let x = g.f32_vec(n, 6.0);
+            let q = LinearDither::new(5);
+            let mut rng = Xoshiro256::seed_from_u64(g.seed());
+            let c = q.compress(&x, &mut Ctx::new(&mut rng));
+            let mut out = vec![0.0f32; n];
+            q.decompress(&c, &mut out);
+            let scale = crate::util::max_abs(&x);
+            let step = scale / 15.0;
+            for i in 0..n {
+                if (out[i] - x[i]).abs() > step + 1e-6 {
+                    return Err(format!("i={i} err={} step={step}", (out[i] - x[i]).abs()));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn linear_dither_zero_tensor() {
+        let x = vec![0.0f32; 33];
+        let q = LinearDither::new(5);
+        let mut rng = Xoshiro256::seed_from_u64(0);
+        let c = q.compress(&x, &mut Ctx::new(&mut rng));
+        let mut out = vec![1.0f32; 33];
+        q.decompress(&c, &mut out);
+        assert!(out.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn natural_dither_decodes_to_power_of_two_levels() {
+        forall(50, 0x9a7, |g| {
+            let n = g.usize_in(1, 200);
+            let x = g.f32_vec(n, 3.0);
+            let q = NaturalDither::new(3);
+            let mut rng = Xoshiro256::seed_from_u64(g.seed());
+            let c = q.compress(&x, &mut Ctx::new(&mut rng));
+            let mut out = vec![0.0f32; n];
+            q.decompress(&c, &mut out);
+            let scale = crate::util::max_abs(&x);
+            for (i, &o) in out.iter().enumerate() {
+                if o == 0.0 {
+                    continue;
+                }
+                let ratio = (o.abs() / scale) as f64;
+                let j = -ratio.log2();
+                if (j - j.round()).abs() > 1e-5 || !(0.0..=2.1).contains(&j) {
+                    return Err(format!("i={i} decode {o} not a 2^-j level (scale {scale})"));
+                }
+                // sign must match the input's sign
+                if o.signum() != x[i].signum() {
+                    return Err(format!("i={i} sign flipped"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn natural_dither_unbiased_statistical() {
+        let n = 16;
+        let x: Vec<f32> = (0..n).map(|i| ((i as f32) - 7.5) * 0.13).collect();
+        let q = NaturalDither::new(3);
+        let mut rng = Xoshiro256::seed_from_u64(99);
+        let mut mean = vec![0.0f64; n];
+        let trials = 20_000;
+        for _ in 0..trials {
+            let c = q.compress(&x, &mut Ctx::new(&mut rng));
+            let mut out = vec![0.0f32; n];
+            q.decompress(&c, &mut out);
+            for (m, o) in mean.iter_mut().zip(&out) {
+                *m += *o as f64;
+            }
+        }
+        let scale = crate::util::max_abs(&x) as f64;
+        for i in 0..n {
+            let m = mean[i] / trials as f64;
+            // Natural dithering variance is large; tolerance ~2% of scale.
+            assert!((m - x[i] as f64).abs() < 0.03 * scale + 0.01, "i={i} m={m} x={}", x[i]);
+        }
+    }
+}

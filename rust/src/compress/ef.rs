@@ -1,0 +1,253 @@
+//! Error-feedback residual state (paper §3.1, Alg. 4).
+//!
+//! Workers keep one residual `e_{t,i}` per tensor key; servers keep one
+//! `ẽ_t` per key. [`EfState`] owns those buffers and implements the
+//! correct-compress-update cycle:
+//!
+//! ```text
+//! q   = g + e            (correct)
+//! δ   = C(q)             (compress)
+//! e'  = q − δ            (residual update — fused when the scheme allows)
+//! ```
+//!
+//! The fused path (§4.2.2 "Operator Fusion") asks the compressor to emit
+//! the residual during compression (O(k) zero-fill for sparse schemes, one
+//! pass for sign/fp16) instead of decompress-then-subtract (O(2d) plus an
+//! allocation). The ablation toggle keeps both paths available.
+
+use super::{Compressed, Compressor, Ctx};
+use std::collections::HashMap;
+
+/// Residual store keyed by tensor id.
+pub struct EfState {
+    residuals: HashMap<u64, Vec<f32>>,
+    /// Use the compressor's fused residual path (§4.2.2).
+    pub fused: bool,
+}
+
+impl EfState {
+    pub fn new(fused: bool) -> Self {
+        EfState { residuals: HashMap::new(), fused }
+    }
+
+    /// Total f32 elements held as residual state (for memory accounting).
+    pub fn state_elems(&self) -> usize {
+        self.residuals.values().map(|v| v.len()).sum()
+    }
+
+    /// Peek at a residual (tests / diagnostics).
+    pub fn residual(&self, key: u64) -> Option<&[f32]> {
+        self.residuals.get(&key).map(|v| v.as_slice())
+    }
+
+    /// One EF cycle for tensor `key` with gradient `g`:
+    /// returns `C(g + e)` and stores the new residual.
+    pub fn compress(
+        &mut self,
+        key: u64,
+        g: &[f32],
+        comp: &dyn Compressor,
+        ctx: &mut Ctx,
+    ) -> Compressed {
+        let e = self
+            .residuals
+            .entry(key)
+            .or_insert_with(|| vec![0.0f32; g.len()]);
+        assert_eq!(e.len(), g.len(), "tensor {key} changed size");
+        // q = g + e, computed into the residual buffer (it will be
+        // overwritten with the new residual anyway).
+        for (ei, gi) in e.iter_mut().zip(g) {
+            *ei += gi;
+        }
+        if self.fused {
+            // e' emitted in place by the compressor.
+            comp.compress_ef_fused(e, ctx)
+        } else {
+            // Naive: compress a copy, then decompress and subtract.
+            let q = e.clone();
+            let c = comp.compress(&q, ctx);
+            let mut dec = vec![0.0f32; q.len()];
+            comp.decompress(&c, &mut dec);
+            for (ei, (qi, di)) in e.iter_mut().zip(q.iter().zip(&dec)) {
+                *ei = qi - di;
+            }
+            c
+        }
+    }
+
+    /// Same cycle but `g` arrives as an owned buffer that may be consumed
+    /// (server-side: the aggregated Δ). Avoids one copy in the fused path.
+    pub fn compress_owned(
+        &mut self,
+        key: u64,
+        mut g: Vec<f32>,
+        comp: &dyn Compressor,
+        ctx: &mut Ctx,
+    ) -> Compressed {
+        match self.residuals.get(&key) {
+            Some(e) => {
+                assert_eq!(e.len(), g.len(), "tensor {key} changed size");
+                for (gi, ei) in g.iter_mut().zip(e) {
+                    *gi += ei;
+                }
+            }
+            None => {}
+        }
+        if self.fused {
+            let c = comp.compress_ef_fused(&mut g, ctx);
+            self.residuals.insert(key, g);
+            c
+        } else {
+            let c = comp.compress(&g, ctx);
+            let mut dec = vec![0.0f32; g.len()];
+            comp.decompress(&c, &mut dec);
+            for (gi, di) in g.iter_mut().zip(&dec) {
+                *gi -= di;
+            }
+            self.residuals.insert(key, g);
+            c
+        }
+    }
+
+    /// Drop all residual state (e.g. between training phases).
+    pub fn reset(&mut self) {
+        self.residuals.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::by_name;
+    use crate::testutil::forall;
+    use crate::util::rng::Xoshiro256;
+
+    /// EF invariant: decode(δ_t) + e_{t+1} == g_t + e_t exactly
+    /// (compression "loses nothing", it only defers).
+    #[test]
+    fn ef_conserves_mass() {
+        for scheme in ["topk", "onebit", "randomk", "fp16"] {
+            forall(60, 0xef0, |g| {
+                let n = g.usize_in(1, 200);
+                let steps = g.usize_in(1, 5);
+                let comp = by_name(scheme, 0.1).unwrap();
+                let mut ef = EfState::new(true);
+                let mut rng = Xoshiro256::seed_from_u64(g.seed());
+                for _ in 0..steps {
+                    let grad = g.f32_vec(n, 2.0);
+                    let e_before: Vec<f32> =
+                        ef.residual(1).map(|e| e.to_vec()).unwrap_or_else(|| vec![0.0; n]);
+                    let c = ef.compress(1, &grad, comp.as_ref(), &mut Ctx::new(&mut rng));
+                    let mut dec = vec![0.0f32; n];
+                    comp.decompress(&c, &mut dec);
+                    let e_after = ef.residual(1).unwrap();
+                    for i in 0..n {
+                        let lhs = dec[i] + e_after[i];
+                        let rhs = grad[i] + e_before[i];
+                        if (lhs - rhs).abs() > 1e-4 * rhs.abs().max(1.0) {
+                            return Err(format!(
+                                "{scheme}: mass not conserved at {i}: {lhs} vs {rhs}"
+                            ));
+                        }
+                    }
+                }
+                Ok(())
+            });
+        }
+    }
+
+    /// Fused and naive residual paths must produce identical wire bytes and
+    /// (numerically) identical residuals when driven by the same RNG.
+    #[test]
+    fn fused_equals_naive_over_time() {
+        for scheme in ["topk", "onebit", "fp16", "randomk"] {
+            let comp = by_name(scheme, 0.05).unwrap();
+            let mut fused = EfState::new(true);
+            let mut naive = EfState::new(false);
+            let mut rf = Xoshiro256::seed_from_u64(42);
+            let mut rn = Xoshiro256::seed_from_u64(42);
+            let mut data_rng = Xoshiro256::seed_from_u64(7);
+            for step in 0..8 {
+                let mut grad = vec![0.0f32; 256];
+                data_rng.fill_normal(&mut grad, 1.0);
+                let cf = fused.compress(3, &grad, comp.as_ref(), &mut Ctx::new(&mut rf));
+                let cn = naive.compress(3, &grad, comp.as_ref(), &mut Ctx::new(&mut rn));
+                assert_eq!(cf, cn, "{scheme} wire mismatch at step {step}");
+                let ef_res = fused.residual(3).unwrap();
+                let en_res = naive.residual(3).unwrap();
+                for i in 0..256 {
+                    assert!(
+                        (ef_res[i] - en_res[i]).abs() < 1e-5,
+                        "{scheme} residual mismatch at step {step}, idx {i}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// With the identity compressor, EF is a no-op: residuals stay zero and
+    /// the wire carries the exact gradient (Alg. 4 degenerates to Alg. 1).
+    #[test]
+    fn identity_degenerates_to_plain_pushpull() {
+        let comp = by_name("identity", 0.0).unwrap();
+        let mut ef = EfState::new(true);
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        for _ in 0..4 {
+            let grad: Vec<f32> = (0..64).map(|i| (i as f32).sin()).collect();
+            let c = ef.compress(9, &grad, comp.as_ref(), &mut Ctx::new(&mut rng));
+            let mut dec = vec![0.0f32; 64];
+            comp.decompress(&c, &mut dec);
+            assert_eq!(dec, grad);
+            assert!(ef.residual(9).unwrap().iter().all(|&v| v == 0.0));
+        }
+    }
+
+    /// Residual norm stays bounded for δ-approximate compressors
+    /// (Lemma 2's geometric-series argument, checked empirically).
+    #[test]
+    fn residual_norm_bounded() {
+        let comp = by_name("topk", 0.25).unwrap();
+        let mut ef = EfState::new(true);
+        let mut rng = Xoshiro256::seed_from_u64(5);
+        let mut data_rng = Xoshiro256::seed_from_u64(6);
+        let mut max_norm: f32 = 0.0;
+        for _ in 0..200 {
+            let mut grad = vec![0.0f32; 128];
+            data_rng.fill_normal(&mut grad, 1.0);
+            let _ = ef.compress(1, &grad, comp.as_ref(), &mut Ctx::new(&mut rng));
+            max_norm = max_norm.max(crate::util::l2_norm(ef.residual(1).unwrap()));
+        }
+        // Lemma-2 style bound: sqrt(1-δ)/(1-sqrt(1-δ)) * max||g|| with
+        // δ >= k/d = 0.25 => factor ≈ 6.46; ||g|| ~ sqrt(128) ≈ 11.3.
+        // Generous envelope:
+        assert!(max_norm < 6.46 * 16.0, "residual norm {max_norm} unbounded?");
+    }
+
+    #[test]
+    fn compress_owned_matches_compress() {
+        let comp = by_name("topk", 0.1).unwrap();
+        let mut a = EfState::new(true);
+        let mut b = EfState::new(true);
+        let mut ra = Xoshiro256::seed_from_u64(2);
+        let mut rb = Xoshiro256::seed_from_u64(2);
+        let mut data_rng = Xoshiro256::seed_from_u64(3);
+        for _ in 0..5 {
+            let mut grad = vec![0.0f32; 100];
+            data_rng.fill_normal(&mut grad, 1.0);
+            let ca = a.compress(1, &grad, comp.as_ref(), &mut Ctx::new(&mut ra));
+            let cb = b.compress_owned(1, grad.clone(), comp.as_ref(), &mut Ctx::new(&mut rb));
+            assert_eq!(ca, cb);
+            assert_eq!(a.residual(1).unwrap(), b.residual(1).unwrap());
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "changed size")]
+    fn size_change_panics() {
+        let comp = by_name("topk", 0.5).unwrap();
+        let mut ef = EfState::new(true);
+        let mut rng = Xoshiro256::seed_from_u64(0);
+        let _ = ef.compress(1, &[1.0, 2.0], comp.as_ref(), &mut Ctx::new(&mut rng));
+        let _ = ef.compress(1, &[1.0, 2.0, 3.0], comp.as_ref(), &mut Ctx::new(&mut rng));
+    }
+}

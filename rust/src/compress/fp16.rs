@@ -1,0 +1,137 @@
+//! FP16 conversion compressor — the paper's "NAG (FP16)" baseline and the
+//! intra-node compression stage (§4.1.1).
+
+use super::{Compressed, Compressor, Ctx, SchemeId};
+use crate::parallel::parallel_for_chunks;
+use crate::util::f16::{f16_bits_to_f32, f32_to_f16_bits};
+
+/// Round-to-nearest-even f32→f16 per element; 2 bytes on the wire.
+///
+/// Deterministic rounding makes it *biased* in the Definition-1 sense, but
+/// its relative error (≤ 2^-11 for normals) is far below any gradient noise
+/// floor, so the paper runs it without error feedback. We still implement
+/// the fused-EF path so it can be ablated.
+pub struct Fp16;
+
+impl Compressor for Fp16 {
+    fn name(&self) -> &'static str {
+        "fp16"
+    }
+
+    fn id(&self) -> SchemeId {
+        SchemeId::Fp16
+    }
+
+    fn unbiased(&self) -> bool {
+        false
+    }
+
+    fn compress(&self, x: &[f32], ctx: &mut Ctx) -> Compressed {
+        let mut payload = vec![0u8; 2 * x.len()];
+        if ctx.intra_threads > 1 {
+            // Chunk the output; each 2-byte slot depends only on x[i].
+            parallel_for_chunks(ctx.intra_threads, &mut payload[..], |off, chunk| {
+                debug_assert_eq!(off % 2, 0);
+                let base = off / 2;
+                for (j, pair) in chunk.chunks_exact_mut(2).enumerate() {
+                    let bits = f32_to_f16_bits(x[base + j]);
+                    pair.copy_from_slice(&bits.to_le_bytes());
+                }
+            });
+        } else {
+            for (i, &v) in x.iter().enumerate() {
+                let bits = f32_to_f16_bits(v);
+                payload[2 * i..2 * i + 2].copy_from_slice(&bits.to_le_bytes());
+            }
+        }
+        Compressed { scheme: SchemeId::Fp16, n: x.len(), payload }
+    }
+
+    fn decompress(&self, c: &Compressed, out: &mut [f32]) {
+        assert_eq!(out.len(), c.n);
+        for (i, o) in out.iter_mut().enumerate() {
+            let bits = u16::from_le_bytes(c.payload[2 * i..2 * i + 2].try_into().unwrap());
+            *o = f16_bits_to_f32(bits);
+        }
+    }
+
+    fn add_decompressed(&self, c: &Compressed, acc: &mut [f32]) {
+        assert_eq!(acc.len(), c.n);
+        for (i, a) in acc.iter_mut().enumerate() {
+            let bits = u16::from_le_bytes(c.payload[2 * i..2 * i + 2].try_into().unwrap());
+            *a += f16_bits_to_f32(bits);
+        }
+    }
+
+    fn wire_nbytes(&self, n: usize) -> usize {
+        2 * n
+    }
+
+    fn compress_ef_fused(&self, q: &mut [f32], _ctx: &mut Ctx) -> Compressed {
+        // Single pass: emit bits and residual together.
+        let mut payload = vec![0u8; 2 * q.len()];
+        for (i, v) in q.iter_mut().enumerate() {
+            let bits = f32_to_f16_bits(*v);
+            payload[2 * i..2 * i + 2].copy_from_slice(&bits.to_le_bytes());
+            *v -= f16_bits_to_f32(bits);
+        }
+        Compressed { scheme: SchemeId::Fp16, n: q.len(), payload }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn roundtrip_error_is_tiny() {
+        let x: Vec<f32> = (0..2048).map(|i| ((i as f32) * 0.7).sin() * 10.0).collect();
+        let mut rng = Xoshiro256::seed_from_u64(0);
+        let mut ctx = Ctx::new(&mut rng);
+        let c = Fp16.compress(&x, &mut ctx);
+        let mut out = vec![0.0f32; x.len()];
+        Fp16.decompress(&c, &mut out);
+        for (a, b) in x.iter().zip(&out) {
+            let rel = if *a == 0.0 { b.abs() } else { ((a - b) / a).abs() };
+            assert!(rel <= 1.0 / 2048.0 + 1e-7, "a={a} b={b}");
+        }
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let x: Vec<f32> = (0..300_000).map(|i| ((i as f32) * 0.001).cos() * 3.0).collect();
+        let mut rng = Xoshiro256::seed_from_u64(0);
+        let serial = Fp16.compress(&x, &mut Ctx::new(&mut rng));
+        let mut rng2 = Xoshiro256::seed_from_u64(0);
+        let par = Fp16.compress(&x, &mut Ctx::with_threads(&mut rng2, 4));
+        assert_eq!(serial, par);
+    }
+
+    #[test]
+    fn fused_residual_matches_naive() {
+        let x: Vec<f32> = (0..777).map(|i| (i as f32 * 0.31).tan().clamp(-5.0, 5.0)).collect();
+        let mut rng = Xoshiro256::seed_from_u64(0);
+        let mut q = x.clone();
+        let c = Fp16.compress_ef_fused(&mut q, &mut Ctx::new(&mut rng));
+        let mut dec = vec![0.0f32; x.len()];
+        Fp16.decompress(&c, &mut dec);
+        for i in 0..x.len() {
+            assert!((q[i] - (x[i] - dec[i])).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn delta_approximate_contract() {
+        // ||C(x)-x||^2 <= (1-δ)||x||^2 with 1-δ ≈ 2^-22 for fp16 normals.
+        let x: Vec<f32> = (0..4096).map(|i| ((i as f32) * 1.7).sin() + 0.01).collect();
+        let mut rng = Xoshiro256::seed_from_u64(0);
+        let mut ctx = Ctx::new(&mut rng);
+        let c = Fp16.compress(&x, &mut ctx);
+        let mut out = vec![0.0f32; x.len()];
+        Fp16.decompress(&c, &mut out);
+        let err: f64 = x.iter().zip(&out).map(|(a, b)| ((a - b) as f64).powi(2)).sum();
+        let norm: f64 = x.iter().map(|a| (*a as f64).powi(2)).sum();
+        assert!(err < norm * 1e-5, "err={err} norm={norm}");
+    }
+}

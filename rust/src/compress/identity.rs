@@ -1,0 +1,92 @@
+//! Identity "compressor" — full-precision baseline (paper's plain NAG/LANS).
+
+use super::{Compressed, Compressor, Ctx, SchemeId};
+
+/// Sends raw f32 bytes. `C(x) = x`, so it is trivially unbiased with ω = 0
+/// and δ = 1; both sync algorithms degenerate to Alg. 1 (tested in `optim`).
+pub struct Identity;
+
+impl Compressor for Identity {
+    fn name(&self) -> &'static str {
+        "identity"
+    }
+
+    fn id(&self) -> SchemeId {
+        SchemeId::Identity
+    }
+
+    fn unbiased(&self) -> bool {
+        true
+    }
+
+    fn compress(&self, x: &[f32], _ctx: &mut Ctx) -> Compressed {
+        let mut payload = Vec::with_capacity(4 * x.len());
+        for &v in x {
+            payload.extend_from_slice(&v.to_le_bytes());
+        }
+        Compressed { scheme: SchemeId::Identity, n: x.len(), payload }
+    }
+
+    fn decompress(&self, c: &Compressed, out: &mut [f32]) {
+        assert_eq!(out.len(), c.n);
+        for (i, o) in out.iter_mut().enumerate() {
+            *o = super::get_f32(&c.payload, 4 * i);
+        }
+    }
+
+    fn add_decompressed(&self, c: &Compressed, acc: &mut [f32]) {
+        assert_eq!(acc.len(), c.n);
+        for (i, a) in acc.iter_mut().enumerate() {
+            *a += super::get_f32(&c.payload, 4 * i);
+        }
+    }
+
+    fn wire_nbytes(&self, n: usize) -> usize {
+        4 * n
+    }
+
+    fn compress_ef_fused(&self, q: &mut [f32], ctx: &mut Ctx) -> Compressed {
+        // Residual is exactly zero — skip the decompress round trip.
+        let c = self.compress(q, ctx);
+        q.fill(0.0);
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn exact_roundtrip() {
+        let x: Vec<f32> = (0..257).map(|i| (i as f32).sqrt() - 8.0).collect();
+        let mut rng = Xoshiro256::seed_from_u64(0);
+        let mut ctx = Ctx::new(&mut rng);
+        let c = Identity.compress(&x, &mut ctx);
+        assert_eq!(c.nbytes(), 4 * x.len());
+        let mut out = vec![0.0f32; x.len()];
+        Identity.decompress(&c, &mut out);
+        assert_eq!(out, x);
+    }
+
+    #[test]
+    fn residual_is_zero() {
+        let mut q = vec![1.5f32, -2.0, 3.25];
+        let mut rng = Xoshiro256::seed_from_u64(0);
+        let mut ctx = Ctx::new(&mut rng);
+        let _ = Identity.compress_ef_fused(&mut q, &mut ctx);
+        assert_eq!(q, vec![0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn accumulate_adds() {
+        let x = vec![1.0f32, 2.0, 3.0];
+        let mut rng = Xoshiro256::seed_from_u64(0);
+        let mut ctx = Ctx::new(&mut rng);
+        let c = Identity.compress(&x, &mut ctx);
+        let mut acc = vec![10.0f32, 20.0, 30.0];
+        Identity.add_decompressed(&c, &mut acc);
+        assert_eq!(acc, vec![11.0, 22.0, 33.0]);
+    }
+}

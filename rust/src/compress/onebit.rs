@@ -1,0 +1,201 @@
+//! Scaled 1-bit (sign) compressor — `C(v) = ‖v‖₁/d · sign(v)`
+//! (Karimireddy et al. '19; dist-EF-SGD, Zheng et al. '19).
+//!
+//! δ-approximate with δ = ‖v‖₁² / (d·‖v‖₂²) ∈ (0, 1]; must run under error
+//! feedback (paper Alg. 4). Wire format: `[scale: f32][bitmap: ceil(d/8)]`,
+//! i.e. ~32× smaller than f32.
+
+use super::{Compressed, Compressor, Ctx, SchemeId};
+use crate::parallel::parallel_map_chunks;
+
+pub struct ScaledOneBit;
+
+impl ScaledOneBit {
+    fn scale_of(x: &[f32], intra_threads: usize) -> f32 {
+        if x.is_empty() {
+            return 0.0;
+        }
+        let l1: f64 = if intra_threads > 1 {
+            parallel_map_chunks(intra_threads, x, |_, c| {
+                c.iter().map(|v| v.abs() as f64).sum::<f64>()
+            })
+            .into_iter()
+            .sum()
+        } else {
+            x.iter().map(|v| v.abs() as f64).sum()
+        };
+        (l1 / x.len() as f64) as f32
+    }
+}
+
+impl Compressor for ScaledOneBit {
+    fn name(&self) -> &'static str {
+        "onebit"
+    }
+
+    fn id(&self) -> SchemeId {
+        SchemeId::OneBit
+    }
+
+    fn unbiased(&self) -> bool {
+        false
+    }
+
+    fn compress(&self, x: &[f32], ctx: &mut Ctx) -> Compressed {
+        let scale = Self::scale_of(x, ctx.intra_threads);
+        let nbytes = x.len().div_ceil(8);
+        let mut payload = Vec::with_capacity(4 + nbytes);
+        super::put_f32(&mut payload, scale);
+        payload.resize(4 + nbytes, 0);
+        let bits = &mut payload[4..];
+        for (i, &v) in x.iter().enumerate() {
+            // sign(0) := +1, consistent with the paper's scaled-sign operator.
+            if v >= 0.0 {
+                bits[i / 8] |= 1 << (i % 8);
+            }
+        }
+        Compressed { scheme: SchemeId::OneBit, n: x.len(), payload }
+    }
+
+    fn decompress(&self, c: &Compressed, out: &mut [f32]) {
+        assert_eq!(out.len(), c.n);
+        let scale = super::get_f32(&c.payload, 0);
+        let bits = &c.payload[4..];
+        for (i, o) in out.iter_mut().enumerate() {
+            *o = if bits[i / 8] & (1 << (i % 8)) != 0 { scale } else { -scale };
+        }
+    }
+
+    fn add_decompressed(&self, c: &Compressed, acc: &mut [f32]) {
+        assert_eq!(acc.len(), c.n);
+        let scale = super::get_f32(&c.payload, 0);
+        let bits = &c.payload[4..];
+        for (i, a) in acc.iter_mut().enumerate() {
+            *a += if bits[i / 8] & (1 << (i % 8)) != 0 { scale } else { -scale };
+        }
+    }
+
+    fn wire_nbytes(&self, n: usize) -> usize {
+        4 + n.div_ceil(8)
+    }
+
+    fn compress_ef_fused(&self, q: &mut [f32], ctx: &mut Ctx) -> Compressed {
+        // Single pass after the scale reduction: emit bit + residual together.
+        let scale = Self::scale_of(q, ctx.intra_threads);
+        let nbytes = q.len().div_ceil(8);
+        let mut payload = Vec::with_capacity(4 + nbytes);
+        super::put_f32(&mut payload, scale);
+        payload.resize(4 + nbytes, 0);
+        let bits = &mut payload[4..];
+        for (i, v) in q.iter_mut().enumerate() {
+            if *v >= 0.0 {
+                bits[i / 8] |= 1 << (i % 8);
+                *v -= scale;
+            } else {
+                *v += scale;
+            }
+        }
+        Compressed { scheme: SchemeId::OneBit, n: q.len(), payload }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::forall;
+    use crate::util::rng::Xoshiro256;
+    use crate::util::{l1_norm, l2_norm};
+
+    #[test]
+    fn decode_is_scaled_sign() {
+        let x = vec![3.0f32, -1.0, 0.5, -0.5];
+        let mut rng = Xoshiro256::seed_from_u64(0);
+        let c = ScaledOneBit.compress(&x, &mut Ctx::new(&mut rng));
+        assert_eq!(c.nbytes(), 4 + 1);
+        let mut out = vec![0.0f32; 4];
+        ScaledOneBit.decompress(&c, &mut out);
+        let scale = l1_norm(&x) / 4.0; // = 1.25
+        assert_eq!(out, vec![scale, -scale, scale, -scale]);
+    }
+
+    #[test]
+    fn delta_approximate_contract_property() {
+        // Definition 2: ||C(x) - x||^2 <= (1 - δ) ||x||^2 with
+        // δ = ||x||_1^2 / (d ||x||_2^2). Check the exact identity.
+        forall(200, 0x1b17, |g| {
+            let n = g.usize_in(1, 400);
+            let x = g.f32_vec(n, 10.0);
+            if l2_norm(&x) == 0.0 {
+                return Ok(());
+            }
+            let mut rng = Xoshiro256::seed_from_u64(g.seed());
+            let c = ScaledOneBit.compress(&x, &mut Ctx::new(&mut rng));
+            let mut out = vec![0.0f32; n];
+            ScaledOneBit.decompress(&c, &mut out);
+            let err2: f64 =
+                x.iter().zip(&out).map(|(a, b)| ((a - b) as f64).powi(2)).sum();
+            let norm2 = (l2_norm(&x) as f64).powi(2);
+            let delta = (l1_norm(&x) as f64).powi(2) / (n as f64 * norm2);
+            let bound = (1.0 - delta) * norm2;
+            // Small f32 slack on the exact identity.
+            if err2 > bound + 1e-3 * norm2 + 1e-6 {
+                return Err(format!("err2={err2} bound={bound} n={n}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fused_residual_matches_naive() {
+        forall(100, 0xfeed, |g| {
+            let n = g.usize_in(1, 300);
+            let x = g.f32_vec(n, 4.0);
+            let mut rng = Xoshiro256::seed_from_u64(1);
+            let mut q = x.clone();
+            let c = ScaledOneBit.compress_ef_fused(&mut q, &mut Ctx::new(&mut rng));
+            let mut dec = vec![0.0f32; n];
+            ScaledOneBit.decompress(&c, &mut dec);
+            for i in 0..n {
+                let naive = x[i] - dec[i];
+                if (q[i] - naive).abs() > 1e-5 {
+                    return Err(format!("i={i} fused={} naive={}", q[i], naive));
+                }
+            }
+            // Both compress paths must agree on the wire bytes too.
+            let mut rng2 = Xoshiro256::seed_from_u64(1);
+            let c2 = ScaledOneBit.compress(&x, &mut Ctx::new(&mut rng2));
+            if c != c2 {
+                return Err("fused and plain compress disagree".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn parallel_scale_matches_serial() {
+        let x: Vec<f32> = (0..400_000).map(|i| ((i as f32) * 0.003).sin()).collect();
+        let mut r1 = Xoshiro256::seed_from_u64(0);
+        let mut r2 = Xoshiro256::seed_from_u64(0);
+        let a = ScaledOneBit.compress(&x, &mut Ctx::new(&mut r1));
+        let b = ScaledOneBit.compress(&x, &mut Ctx::with_threads(&mut r2, 4));
+        // Parallel L1 reduction reassociates f64 adds; scales agree to ~1e-6 rel.
+        let sa = super::super::get_f32(&a.payload, 0);
+        let sb = super::super::get_f32(&b.payload, 0);
+        assert!(((sa - sb) / sa).abs() < 1e-5);
+        assert_eq!(a.payload[4..], b.payload[4..]);
+    }
+
+    #[test]
+    fn empty_and_all_zero() {
+        let mut rng = Xoshiro256::seed_from_u64(0);
+        let c = ScaledOneBit.compress(&[], &mut Ctx::new(&mut rng));
+        let mut out: Vec<f32> = vec![];
+        ScaledOneBit.decompress(&c, &mut out);
+
+        let z = vec![0.0f32; 17];
+        let c = ScaledOneBit.compress(&z, &mut Ctx::new(&mut rng));
+        let mut out = vec![1.0f32; 17];
+        ScaledOneBit.decompress(&c, &mut out);
+        assert!(out.iter().all(|&v| v == 0.0));
+    }
+}

@@ -1,0 +1,254 @@
+//! Random-k sparsifier — send k uniformly sampled coordinates
+//! (Stich et al. '18 with EF; Horváth & Richtárik '21 unbiased variant).
+//!
+//! Wire format: `[k: u32][seed: u64][values: k × f32]`. The index set is
+//! regenerated from the 8-byte seed on the receiver, so random-k ships
+//! only ~4 bytes per kept element — the paper's fastest method (Table 2).
+//!
+//! Two modes:
+//! * `rescale = false` (EF mode, the paper's "Random-k with EF"): values
+//!   sent verbatim; biased, δ = k/d in expectation.
+//! * `rescale = true` (unbiased ω-compressor for Alg. 3): values scaled by
+//!   d/k so `E[C(x)] = x`, with ω = d/k − 1 (Definition 1).
+
+use super::{Compressed, Compressor, Ctx, SchemeId};
+use crate::util::rng::Xoshiro256;
+
+pub struct RandomK {
+    pub ratio: f64,
+    pub rescale: bool,
+}
+
+impl RandomK {
+    pub fn new(ratio: f64, rescale: bool) -> Self {
+        assert!(ratio > 0.0 && ratio <= 1.0, "random-k ratio must be in (0,1], got {ratio}");
+        RandomK { ratio, rescale }
+    }
+
+    pub fn k_for(&self, n: usize) -> usize {
+        ((self.ratio * n as f64).ceil() as usize).clamp(1, n.max(1))
+    }
+
+    fn indices_from_seed(seed: u64, n: usize, k: usize) -> Vec<u32> {
+        Xoshiro256::seed_from_u64(seed).sample_indices(n, k)
+    }
+}
+
+impl Compressor for RandomK {
+    fn name(&self) -> &'static str {
+        if self.rescale {
+            "randomk_unbiased"
+        } else {
+            "randomk"
+        }
+    }
+
+    fn id(&self) -> SchemeId {
+        SchemeId::RandomK
+    }
+
+    fn unbiased(&self) -> bool {
+        self.rescale
+    }
+
+    fn compress(&self, x: &[f32], ctx: &mut Ctx) -> Compressed {
+        if x.is_empty() {
+            let mut payload = Vec::with_capacity(12);
+            super::put_u32(&mut payload, 0);
+            super::put_u64(&mut payload, 0);
+            return Compressed { scheme: SchemeId::RandomK, n: 0, payload };
+        }
+        let k = self.k_for(x.len());
+        let seed = ctx.rng.next_u64();
+        let idx = Self::indices_from_seed(seed, x.len(), k);
+        let gain = if self.rescale { x.len() as f32 / k as f32 } else { 1.0 };
+        let mut payload = Vec::with_capacity(12 + 4 * k);
+        super::put_u32(&mut payload, k as u32);
+        super::put_u64(&mut payload, seed);
+        for &i in &idx {
+            super::put_f32(&mut payload, x[i as usize] * gain);
+        }
+        Compressed { scheme: SchemeId::RandomK, n: x.len(), payload }
+    }
+
+    fn decompress(&self, c: &Compressed, out: &mut [f32]) {
+        assert_eq!(out.len(), c.n);
+        out.fill(0.0);
+        self.add_decompressed(c, out);
+    }
+
+    fn add_decompressed(&self, c: &Compressed, acc: &mut [f32]) {
+        assert_eq!(acc.len(), c.n);
+        let k = super::get_u32(&c.payload, 0) as usize;
+        if k == 0 {
+            return;
+        }
+        let seed = super::get_u64(&c.payload, 4);
+        let idx = Self::indices_from_seed(seed, c.n, k);
+        for (j, &i) in idx.iter().enumerate() {
+            acc[i as usize] += super::get_f32(&c.payload, 12 + 4 * j);
+        }
+    }
+
+    fn wire_nbytes(&self, n: usize) -> usize {
+        if n == 0 {
+            return 12;
+        }
+        12 + 4 * self.k_for(n)
+    }
+
+    /// Fused residual: zero-fill the sampled coordinates (O(k)).
+    /// Only valid without rescaling (EF mode); rescaled mode falls back to
+    /// the naive residual, which is what the theory prescribes anyway
+    /// (unbiased compressors run without EF, paper §3.2).
+    fn compress_ef_fused(&self, q: &mut [f32], ctx: &mut Ctx) -> Compressed {
+        if self.rescale {
+            // E[C(x)] = x but C(x) ≠ x pointwise; residual needs the decode.
+            let c = self.compress(q, ctx);
+            let mut dec = vec![0.0f32; q.len()];
+            self.decompress(&c, &mut dec);
+            for (qi, di) in q.iter_mut().zip(&dec) {
+                *qi -= di;
+            }
+            return c;
+        }
+        if q.is_empty() {
+            let mut payload = Vec::with_capacity(12);
+            super::put_u32(&mut payload, 0);
+            super::put_u64(&mut payload, 0);
+            return Compressed { scheme: SchemeId::RandomK, n: 0, payload };
+        }
+        let k = self.k_for(q.len());
+        let seed = ctx.rng.next_u64();
+        let idx = Self::indices_from_seed(seed, q.len(), k);
+        let mut payload = Vec::with_capacity(12 + 4 * k);
+        super::put_u32(&mut payload, k as u32);
+        super::put_u64(&mut payload, seed);
+        for &i in &idx {
+            super::put_f32(&mut payload, q[i as usize]);
+            q[i as usize] = 0.0;
+        }
+        Compressed { scheme: SchemeId::RandomK, n: q.len(), payload }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::forall;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn decode_reconstructs_sampled_coords() {
+        let x: Vec<f32> = (0..100).map(|i| (i + 1) as f32).collect();
+        let rk = RandomK::new(0.1, false);
+        let mut rng = Xoshiro256::seed_from_u64(7);
+        let c = rk.compress(&x, &mut Ctx::new(&mut rng));
+        assert_eq!(c.nbytes(), 12 + 4 * 10);
+        let mut out = vec![0.0f32; 100];
+        rk.decompress(&c, &mut out);
+        let kept: Vec<usize> = out.iter().enumerate().filter(|(_, v)| **v != 0.0).map(|(i, _)| i).collect();
+        assert_eq!(kept.len(), 10);
+        for &i in &kept {
+            assert_eq!(out[i], x[i]);
+        }
+    }
+
+    #[test]
+    fn unbiased_mode_statistical() {
+        // E[C(x)]_i == x_i: average many independent compressions.
+        let n = 64;
+        let x: Vec<f32> = (0..n).map(|i| (i as f32 * 0.3).sin() + 0.5).collect();
+        let rk = RandomK::new(0.25, true);
+        let mut rng = Xoshiro256::seed_from_u64(123);
+        let mut mean = vec![0.0f64; n];
+        let trials = 4000;
+        for _ in 0..trials {
+            let c = rk.compress(&x, &mut Ctx::new(&mut rng));
+            let mut out = vec![0.0f32; n];
+            rk.decompress(&c, &mut out);
+            for (m, o) in mean.iter_mut().zip(&out) {
+                *m += *o as f64;
+            }
+        }
+        for i in 0..n {
+            let m = mean[i] / trials as f64;
+            assert!(
+                (m - x[i] as f64).abs() < 0.15,
+                "coord {i}: mean={m} expected={}",
+                x[i]
+            );
+        }
+    }
+
+    #[test]
+    fn omega_contract_property() {
+        // Definition 1 second moment: E||C(x)-x||^2 <= ω||x||^2 with
+        // ω = d/k - 1. Check the average over repeats stays under ω||x||².
+        forall(20, 0x5eed, |g| {
+            let n = g.usize_in(8, 128);
+            let x = g.f32_vec(n, 2.0);
+            let norm2: f64 = x.iter().map(|v| (*v as f64).powi(2)).sum();
+            if norm2 < 1e-12 {
+                return Ok(());
+            }
+            let rk = RandomK::new(0.25, true);
+            let k = rk.k_for(n);
+            let omega = n as f64 / k as f64 - 1.0;
+            let mut rng = Xoshiro256::seed_from_u64(g.seed());
+            let mut err_sum = 0.0f64;
+            let trials = 300;
+            for _ in 0..trials {
+                let c = rk.compress(&x, &mut Ctx::new(&mut rng));
+                let mut out = vec![0.0f32; n];
+                rk.decompress(&c, &mut out);
+                err_sum += x.iter().zip(&out).map(|(a, b)| ((a - b) as f64).powi(2)).sum::<f64>();
+            }
+            let mean_err = err_sum / trials as f64;
+            // Allow 40% statistical slack on the expectation bound.
+            if mean_err > omega * norm2 * 1.4 + 1e-9 {
+                return Err(format!("mean_err={mean_err} omega*norm2={}", omega * norm2));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn seed_coded_indices_are_stable_across_decode() {
+        let x: Vec<f32> = (0..500).map(|i| (i as f32).cos()).collect();
+        let rk = RandomK::new(0.05, false);
+        let mut rng = Xoshiro256::seed_from_u64(5);
+        let c = rk.compress(&x, &mut Ctx::new(&mut rng));
+        let mut out1 = vec![0.0f32; 500];
+        let mut out2 = vec![0.0f32; 500];
+        rk.decompress(&c, &mut out1);
+        rk.decompress(&c, &mut out2);
+        assert_eq!(out1, out2);
+    }
+
+    #[test]
+    fn fused_residual_matches_naive_ef_mode() {
+        forall(100, 0x4a11, |g| {
+            let n = g.usize_in(1, 200);
+            let x = g.f32_vec(n, 5.0);
+            let rk = RandomK::new(0.2, false);
+            // Same rng seed for both paths => same sampled indices.
+            let mut r1 = Xoshiro256::seed_from_u64(11);
+            let mut r2 = Xoshiro256::seed_from_u64(11);
+            let mut q = x.clone();
+            let c_fused = rk.compress_ef_fused(&mut q, &mut Ctx::new(&mut r1));
+            let c_plain = rk.compress(&x, &mut Ctx::new(&mut r2));
+            if c_fused != c_plain {
+                return Err("wire mismatch".into());
+            }
+            let mut dec = vec![0.0f32; n];
+            rk.decompress(&c_fused, &mut dec);
+            for i in 0..n {
+                if (q[i] - (x[i] - dec[i])).abs() > 1e-9 {
+                    return Err(format!("residual mismatch at {i}"));
+                }
+            }
+            Ok(())
+        });
+    }
+}

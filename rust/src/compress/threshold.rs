@@ -1,0 +1,139 @@
+//! Size-threshold bypass (paper §4.2.3).
+//!
+//! Small tensors pay a fixed compression overhead that exceeds the wire
+//! saving, so tensors under a byte threshold (default 1 MiB) are sent in
+//! full precision. Implemented as a wrapper compressor so the rest of the
+//! stack stays scheme-agnostic.
+
+use super::{identity::Identity, Compressed, Compressor, Ctx, SchemeId};
+use std::sync::Arc;
+
+pub struct SizeThreshold {
+    pub inner: Arc<dyn Compressor>,
+    /// Tensors with fewer than `threshold_bytes` of f32 data bypass `inner`.
+    pub threshold_bytes: usize,
+}
+
+impl SizeThreshold {
+    pub fn new(inner: Arc<dyn Compressor>, threshold_bytes: usize) -> Self {
+        SizeThreshold { inner, threshold_bytes }
+    }
+
+    #[inline]
+    pub fn bypasses(&self, n: usize) -> bool {
+        4 * n < self.threshold_bytes
+    }
+}
+
+impl Compressor for SizeThreshold {
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+
+    fn id(&self) -> SchemeId {
+        // Wire blocks carry the *actual* scheme id per block, so threshold
+        // wrapping stays transparent to the receiver.
+        self.inner.id()
+    }
+
+    fn unbiased(&self) -> bool {
+        // Identity is unbiased, so the wrapper inherits the inner contract.
+        self.inner.unbiased()
+    }
+
+    fn compress(&self, x: &[f32], ctx: &mut Ctx) -> Compressed {
+        if self.bypasses(x.len()) {
+            Identity.compress(x, ctx)
+        } else {
+            self.inner.compress(x, ctx)
+        }
+    }
+
+    fn decompress(&self, c: &Compressed, out: &mut [f32]) {
+        // Dispatch on the block's own scheme id — a bypassed block arrives
+        // as Identity regardless of the configured scheme.
+        if c.scheme == SchemeId::Identity {
+            Identity.decompress(c, out)
+        } else {
+            self.inner.decompress(c, out)
+        }
+    }
+
+    fn add_decompressed(&self, c: &Compressed, acc: &mut [f32]) {
+        if c.scheme == SchemeId::Identity {
+            Identity.add_decompressed(c, acc)
+        } else {
+            self.inner.add_decompressed(c, acc)
+        }
+    }
+
+    fn wire_nbytes(&self, n: usize) -> usize {
+        if self.bypasses(n) {
+            Identity.wire_nbytes(n)
+        } else {
+            self.inner.wire_nbytes(n)
+        }
+    }
+
+    fn compress_ef_fused(&self, q: &mut [f32], ctx: &mut Ctx) -> Compressed {
+        if self.bypasses(q.len()) {
+            Identity.compress_ef_fused(q, ctx)
+        } else {
+            self.inner.compress_ef_fused(q, ctx)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::by_name;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn small_tensor_bypasses_to_identity() {
+        let t = SizeThreshold::new(by_name("topk", 0.01).unwrap(), 1024);
+        let x: Vec<f32> = (0..100).map(|i| i as f32).collect(); // 400 B < 1 KiB
+        let mut rng = Xoshiro256::seed_from_u64(0);
+        let c = t.compress(&x, &mut Ctx::new(&mut rng));
+        assert_eq!(c.scheme, SchemeId::Identity);
+        let mut out = vec![0.0f32; 100];
+        t.decompress(&c, &mut out);
+        assert_eq!(out, x);
+    }
+
+    #[test]
+    fn large_tensor_uses_inner() {
+        let t = SizeThreshold::new(by_name("topk", 0.01).unwrap(), 1024);
+        let x: Vec<f32> = (0..1000).map(|i| i as f32).collect(); // 4 KB >= 1 KiB
+        let mut rng = Xoshiro256::seed_from_u64(0);
+        let c = t.compress(&x, &mut Ctx::new(&mut rng));
+        assert_eq!(c.scheme, SchemeId::TopK);
+        assert!(c.nbytes() < 400);
+    }
+
+    #[test]
+    fn boundary_is_strictly_less_than() {
+        let t = SizeThreshold::new(by_name("onebit", 0.0).unwrap(), 400);
+        assert!(t.bypasses(99)); // 396 < 400
+        assert!(!t.bypasses(100)); // 400 !< 400
+    }
+
+    #[test]
+    fn fused_ef_respects_bypass() {
+        let t = SizeThreshold::new(by_name("topk", 0.01).unwrap(), 1024);
+        let mut q = vec![1.0f32; 10];
+        let mut rng = Xoshiro256::seed_from_u64(0);
+        let c = t.compress_ef_fused(&mut q, &mut Ctx::new(&mut rng));
+        assert_eq!(c.scheme, SchemeId::Identity);
+        assert!(q.iter().all(|&v| v == 0.0)); // identity residual is zero
+    }
+
+    #[test]
+    fn wire_nbytes_tracks_bypass() {
+        let t = SizeThreshold::new(by_name("topk", 0.01).unwrap(), 1 << 20);
+        assert_eq!(t.wire_nbytes(100), 400); // bypass: raw f32
+        let big = 1 << 20;
+        assert!(t.wire_nbytes(big) < 4 * big / 10); // compressed
+    }
+}

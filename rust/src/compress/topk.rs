@@ -1,0 +1,296 @@
+//! Top-k sparsifier — keep the k largest-magnitude coordinates
+//! (Stich et al. '18; the paper's best-performing method for BERT).
+//!
+//! δ-approximate with δ ≥ k/d. Must run under error feedback. Wire format:
+//! `[k: u32][indices: k × u32][values: k × f32]`, i.e. 8 bytes per kept
+//! element — with k = 0.1% that is the paper's 333× rate vs FP16.
+//!
+//! Selection is a full O(d) quickselect on CPU (the paper's rationale for
+//! CPU compressors: top-k parallelizes poorly on GPU, §4.1.2).
+
+use super::{Compressed, Compressor, Ctx, SchemeId};
+
+pub struct TopK {
+    /// Fraction of coordinates kept, in (0, 1].
+    pub ratio: f64,
+}
+
+impl TopK {
+    pub fn new(ratio: f64) -> Self {
+        assert!(ratio > 0.0 && ratio <= 1.0, "top-k ratio must be in (0,1], got {ratio}");
+        TopK { ratio }
+    }
+
+    pub fn k_for(&self, n: usize) -> usize {
+        ((self.ratio * n as f64).ceil() as usize).clamp(1, n.max(1))
+    }
+
+    /// Indices of the k largest |x| values, ascending. Ties broken by
+    /// lower index (deterministic).
+    ///
+    /// Perf note (EXPERIMENTS.md §Perf): quickselect runs on the raw
+    /// magnitude *bits* (|f32| bits order like u32 for non-NaN), not on an
+    /// index permutation with an indirect comparator — ~3x faster on the
+    /// 2M-element micro-bench and allocation-free index collection.
+    fn select(&self, x: &[f32], k: usize) -> Vec<u32> {
+        debug_assert!(k >= 1 && k <= x.len());
+        if k == x.len() {
+            return (0..x.len() as u32).collect();
+        }
+        // |x| bit patterns: for finite f32, (bits & 0x7FFF_FFFF) orders
+        // identically to the magnitude.
+        let mut keys: Vec<u32> = x.iter().map(|v| v.to_bits() & 0x7FFF_FFFF).collect();
+        // k-th largest key = (n-k)-th smallest.
+        let nth = keys.len() - k;
+        let (_, &mut thr, _) = keys.select_nth_unstable(nth);
+        // Collect strictly-above-threshold indices, then fill remaining
+        // slots with ==threshold entries in index order (lower index wins).
+        let mut idx = Vec::with_capacity(k);
+        for (i, v) in x.iter().enumerate() {
+            if (v.to_bits() & 0x7FFF_FFFF) > thr {
+                idx.push(i as u32);
+            }
+        }
+        if idx.len() < k {
+            for (i, v) in x.iter().enumerate() {
+                if (v.to_bits() & 0x7FFF_FFFF) == thr {
+                    idx.push(i as u32);
+                    if idx.len() == k {
+                        break;
+                    }
+                }
+            }
+            idx.sort_unstable();
+        }
+        debug_assert_eq!(idx.len(), k);
+        idx
+    }
+}
+
+impl Compressor for TopK {
+    fn name(&self) -> &'static str {
+        "topk"
+    }
+
+    fn id(&self) -> SchemeId {
+        SchemeId::TopK
+    }
+
+    fn unbiased(&self) -> bool {
+        false
+    }
+
+    fn compress(&self, x: &[f32], _ctx: &mut Ctx) -> Compressed {
+        if x.is_empty() {
+            let mut payload = Vec::with_capacity(4);
+            super::put_u32(&mut payload, 0);
+            return Compressed { scheme: SchemeId::TopK, n: 0, payload };
+        }
+        let k = self.k_for(x.len());
+        let idx = self.select(x, k);
+        let mut payload = Vec::with_capacity(4 + 8 * k);
+        super::put_u32(&mut payload, k as u32);
+        for &i in &idx {
+            super::put_u32(&mut payload, i);
+        }
+        for &i in &idx {
+            super::put_f32(&mut payload, x[i as usize]);
+        }
+        Compressed { scheme: SchemeId::TopK, n: x.len(), payload }
+    }
+
+    fn decompress(&self, c: &Compressed, out: &mut [f32]) {
+        assert_eq!(out.len(), c.n);
+        out.fill(0.0);
+        self.add_decompressed(c, out);
+    }
+
+    /// O(k) sparse accumulate — the server aggregation fast path.
+    fn add_decompressed(&self, c: &Compressed, acc: &mut [f32]) {
+        assert_eq!(acc.len(), c.n);
+        let k = super::get_u32(&c.payload, 0) as usize;
+        let vals_off = 4 + 4 * k;
+        for j in 0..k {
+            let i = super::get_u32(&c.payload, 4 + 4 * j) as usize;
+            acc[i] += super::get_f32(&c.payload, vals_off + 4 * j);
+        }
+    }
+
+    fn wire_nbytes(&self, n: usize) -> usize {
+        if n == 0 {
+            return 4;
+        }
+        4 + 8 * self.k_for(n)
+    }
+
+    /// §4.2.2 fused residual: copy-free — the residual is `q` with the
+    /// selected k coordinates zero-filled. O(k) after selection instead of
+    /// an O(d) decompress + subtract.
+    fn compress_ef_fused(&self, q: &mut [f32], _ctx: &mut Ctx) -> Compressed {
+        if q.is_empty() {
+            let mut payload = Vec::with_capacity(4);
+            super::put_u32(&mut payload, 0);
+            return Compressed { scheme: SchemeId::TopK, n: 0, payload };
+        }
+        let k = self.k_for(q.len());
+        let idx = self.select(q, k);
+        let mut payload = Vec::with_capacity(4 + 8 * k);
+        super::put_u32(&mut payload, k as u32);
+        for &i in &idx {
+            super::put_u32(&mut payload, i);
+        }
+        for &i in &idx {
+            super::put_f32(&mut payload, q[i as usize]);
+            q[i as usize] = 0.0; // zero-fill: residual for kept coords is 0
+        }
+        Compressed { scheme: SchemeId::TopK, n: q.len(), payload }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::forall;
+    use crate::util::l2_norm;
+    use crate::util::rng::Xoshiro256;
+
+    fn ctx(rng: &mut Xoshiro256) -> Ctx<'_> {
+        Ctx::new(rng)
+    }
+
+    #[test]
+    fn keeps_the_largest() {
+        let x = vec![0.1f32, -5.0, 0.2, 3.0, -0.05, 1.0];
+        let t = TopK::new(0.5); // k = 3
+        let mut rng = Xoshiro256::seed_from_u64(0);
+        let c = t.compress(&x, &mut ctx(&mut rng));
+        let mut out = vec![0.0f32; 6];
+        t.decompress(&c, &mut out);
+        assert_eq!(out, vec![0.0, -5.0, 0.0, 3.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn k_at_least_one_and_ceil() {
+        assert_eq!(TopK::new(0.001).k_for(100), 1);
+        assert_eq!(TopK::new(0.001).k_for(1500), 2);
+        assert_eq!(TopK::new(1.0).k_for(7), 7);
+    }
+
+    #[test]
+    fn delta_approximate_contract_property() {
+        // Definition 2 with δ = k/d: ||C(x)-x||^2 <= (1 - k/d)||x||^2.
+        forall(200, 0x70cc, |g| {
+            let n = g.usize_in(1, 500);
+            let x = g.f32_vec(n, 8.0);
+            let ratio = g.f64_in(0.01, 1.0);
+            let t = TopK::new(ratio);
+            let k = t.k_for(n);
+            let mut rng = Xoshiro256::seed_from_u64(g.seed());
+            let c = t.compress(&x, &mut ctx(&mut rng));
+            let mut out = vec![0.0f32; n];
+            t.decompress(&c, &mut out);
+            let err2: f64 = x.iter().zip(&out).map(|(a, b)| ((a - b) as f64).powi(2)).sum();
+            let norm2 = (l2_norm(&x) as f64).powi(2);
+            let bound = (1.0 - k as f64 / n as f64) * norm2;
+            if err2 > bound + 1e-5 * norm2 + 1e-9 {
+                return Err(format!("err2={err2} bound={bound} n={n} k={k}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn kept_set_is_magnitude_optimal() {
+        forall(100, 0xabc, |g| {
+            let n = g.usize_in(2, 200);
+            let x = g.f32_vec(n, 5.0);
+            let t = TopK::new(0.25);
+            let k = t.k_for(n);
+            let mut rng = Xoshiro256::seed_from_u64(0);
+            let c = t.compress(&x, &mut ctx(&mut rng));
+            let mut out = vec![0.0f32; n];
+            t.decompress(&c, &mut out);
+            let kept_min = out
+                .iter()
+                .filter(|v| **v != 0.0)
+                .map(|v| v.abs())
+                .fold(f32::INFINITY, f32::min);
+            let dropped_max = x
+                .iter()
+                .zip(&out)
+                .filter(|(_, o)| **o == 0.0)
+                .map(|(v, _)| v.abs())
+                .fold(0.0f32, f32::max);
+            // every kept magnitude >= every dropped magnitude
+            if out.iter().filter(|v| **v != 0.0).count() == k && kept_min + 1e-9 < dropped_max {
+                return Err(format!("kept_min={kept_min} < dropped_max={dropped_max}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fused_residual_is_zero_filled_copy() {
+        forall(100, 0xd00d, |g| {
+            let n = g.usize_in(1, 300);
+            let x = g.f32_vec(n, 3.0);
+            let t = TopK::new(0.1);
+            let mut rng = Xoshiro256::seed_from_u64(0);
+            let mut q = x.clone();
+            let c = t.compress_ef_fused(&mut q, &mut ctx(&mut rng));
+            // fused wire == plain wire
+            let mut rng2 = Xoshiro256::seed_from_u64(0);
+            let c2 = t.compress(&x, &mut ctx(&mut rng2));
+            if c != c2 {
+                return Err("fused and plain compress disagree".into());
+            }
+            // residual == x - decode(c)
+            let mut dec = vec![0.0f32; n];
+            t.decompress(&c, &mut dec);
+            for i in 0..n {
+                if (q[i] - (x[i] - dec[i])).abs() > 1e-9 {
+                    return Err(format!("residual mismatch at {i}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn sparse_accumulate_matches_dense() {
+        let x: Vec<f32> = (0..1000).map(|i| ((i * 31) % 97) as f32 - 48.0).collect();
+        let t = TopK::new(0.02);
+        let mut rng = Xoshiro256::seed_from_u64(0);
+        let c = t.compress(&x, &mut ctx(&mut rng));
+        let mut acc1 = vec![1.0f32; 1000];
+        t.add_decompressed(&c, &mut acc1);
+        let mut dense = vec![0.0f32; 1000];
+        t.decompress(&c, &mut dense);
+        let acc2: Vec<f32> = dense.iter().map(|v| v + 1.0).collect();
+        assert_eq!(acc1, acc2);
+    }
+
+    #[test]
+    fn ties_are_deterministic() {
+        let x = vec![1.0f32; 10];
+        let t = TopK::new(0.3); // k = 3 of 10 equal values
+        let mut r1 = Xoshiro256::seed_from_u64(1);
+        let mut r2 = Xoshiro256::seed_from_u64(2);
+        let c1 = t.compress(&x, &mut ctx(&mut r1));
+        let c2 = t.compress(&x, &mut ctx(&mut r2));
+        assert_eq!(c1, c2);
+        let mut out = vec![0.0f32; 10];
+        t.decompress(&c1, &mut out);
+        // lowest indices win ties
+        assert_eq!(out, vec![1.0, 1.0, 1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn empty_input() {
+        let t = TopK::new(0.5);
+        let mut rng = Xoshiro256::seed_from_u64(0);
+        let c = t.compress(&[], &mut ctx(&mut rng));
+        let mut out: Vec<f32> = vec![];
+        t.decompress(&c, &mut out);
+    }
+}

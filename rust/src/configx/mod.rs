@@ -1,0 +1,480 @@
+//! Typed run configuration, loaded from JSON files or CLI overrides.
+//!
+//! The config system mirrors what a user of BytePS would set through
+//! environment variables and launcher flags: cluster shape, compression
+//! scheme + parameters, optimizer hyper-parameters, model/artifact choice,
+//! and the system-optimization toggles ablated in Table 6.
+
+pub mod json;
+
+use json::{Json, JsonError};
+use std::fmt;
+use std::path::Path;
+
+/// Which gradient synchronization path to use (paper Alg. 1/3/4).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SyncMode {
+    /// Alg. 1: full-precision push/pull.
+    Full,
+    /// Alg. 3: two-way compression, no error feedback (unbiased compressors).
+    Compressed,
+    /// Alg. 4: two-way compression with worker + server error feedback.
+    CompressedEf,
+}
+
+impl SyncMode {
+    pub fn parse(s: &str) -> Result<Self, ConfigError> {
+        match s {
+            "full" => Ok(SyncMode::Full),
+            "compressed" => Ok(SyncMode::Compressed),
+            "compressed_ef" | "ef" => Ok(SyncMode::CompressedEf),
+            _ => Err(ConfigError(format!("unknown sync mode '{s}'"))),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SyncMode::Full => "full",
+            SyncMode::Compressed => "compressed",
+            SyncMode::CompressedEf => "compressed_ef",
+        }
+    }
+}
+
+/// Compression scheme selection + parameters (paper §5.1 method list).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CompressionConfig {
+    /// "identity" | "fp16" | "onebit" | "topk" | "randomk" |
+    /// "linear_dither" | "natural_dither"
+    pub scheme: String,
+    /// top-k/random-k ratio (fraction of elements kept) or dithering bit
+    /// count, depending on scheme. top-k: 0.001 = paper's k=0.1%;
+    /// random-k: 1/32; linear dithering: 5 or 7 (bits); natural: 3 (bits).
+    pub param: f64,
+    /// Tensors smaller than this many BYTES bypass compression (§4.2.3).
+    pub size_threshold: usize,
+    /// Use the fused EF residual update (§4.2.2). Ablation toggle.
+    pub fused_residual: bool,
+    /// Sync algorithm to drive with this compressor.
+    pub sync: SyncMode,
+}
+
+impl Default for CompressionConfig {
+    fn default() -> Self {
+        CompressionConfig {
+            scheme: "topk".into(),
+            param: 0.001,
+            size_threshold: 1 << 20, // 1 MiB, the paper's default
+            fused_residual: true,
+            sync: SyncMode::CompressedEf,
+        }
+    }
+}
+
+/// Optimizer selection + hyper-parameters.
+#[derive(Clone, Debug, PartialEq)]
+pub struct OptimizerConfig {
+    /// "lans" | "clan" | "nag" | "adam" | "sgd"
+    pub name: String,
+    pub lr: f64,
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+    /// Weight decay λ (LANS step 13).
+    pub weight_decay: f64,
+    /// Momentum for NAG/SGD.
+    pub momentum: f64,
+    /// φ clamp bounds (Assumption 4): φ(z) = clamp(z, phi_lo, phi_hi).
+    pub phi_lo: f64,
+    pub phi_hi: f64,
+    /// Linear warmup steps then constant (paper uses warmup for e2e runs).
+    pub warmup_steps: usize,
+}
+
+impl Default for OptimizerConfig {
+    fn default() -> Self {
+        OptimizerConfig {
+            name: "clan".into(),
+            lr: 1e-3,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-6,
+            weight_decay: 0.01,
+            momentum: 0.9,
+            phi_lo: 0.01,
+            phi_hi: 10.0,
+            warmup_steps: 0,
+        }
+    }
+}
+
+/// Cluster topology (real in-process nodes + simulated wire).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClusterConfig {
+    /// Number of worker nodes (paper: 1–8 P3.16xlarge).
+    pub nodes: usize,
+    /// Simulated GPU ranks per node (paper: 8× V100).
+    pub gpus_per_node: usize,
+    /// Parameter-server instances. Paper §4.2.5 co-locates 2 per node.
+    pub servers: usize,
+    /// Inter-node bandwidth in Gbit/s for the simulated wire (paper: 25).
+    pub net_gbps: f64,
+    /// Per-message one-way latency in microseconds.
+    pub latency_us: f64,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig { nodes: 4, gpus_per_node: 8, servers: 8, net_gbps: 25.0, latency_us: 25.0 }
+    }
+}
+
+/// System-optimization toggles — the Table 6 ablation axes.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SystemConfig {
+    /// CPU threads for the compression pool (inter-task parallelism).
+    pub compress_threads: usize,
+    /// Intra-task chunked parallelism within one compression job.
+    pub intra_threads: usize,
+    /// §4.2.2 fused residual (mirrors CompressionConfig.fused_residual).
+    pub operator_fusion: bool,
+    /// §4.2.3 size threshold active.
+    pub size_threshold_on: bool,
+    /// §4.2.4 workload-balanced shard assignment (compressed tensors get
+    /// more server shards).
+    pub workload_balance: bool,
+    /// §4.2.5 extra co-located servers (2 per node instead of 1).
+    pub more_servers: bool,
+    /// §4.2.6 NUMA/affinity tuning.
+    pub numa_tuning: bool,
+}
+
+impl Default for SystemConfig {
+    fn default() -> Self {
+        SystemConfig {
+            compress_threads: 4,
+            intra_threads: 2,
+            operator_fusion: true,
+            size_threshold_on: true,
+            workload_balance: true,
+            more_servers: true,
+            numa_tuning: true,
+        }
+    }
+}
+
+/// Training-run config: model/artifact + schedule.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TrainConfig {
+    /// Artifact name, e.g. "transformer_mini" (see artifacts/manifest.json).
+    pub model: String,
+    pub steps: usize,
+    pub batch_per_worker: usize,
+    pub seed: u64,
+    /// Log every N steps.
+    pub log_every: usize,
+    /// Difficulty of the synthetic classification task (classifier models
+    /// only; see `data::ClassifyTask`).
+    pub task_difficulty: f64,
+    pub optimizer: OptimizerConfig,
+    pub compression: CompressionConfig,
+    pub cluster: ClusterConfig,
+    pub system: SystemConfig,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            model: "transformer_tiny".into(),
+            steps: 100,
+            batch_per_worker: 8,
+            seed: 42,
+            log_every: 10,
+            task_difficulty: 0.55,
+            optimizer: OptimizerConfig::default(),
+            compression: CompressionConfig::default(),
+            cluster: ClusterConfig::default(),
+            system: SystemConfig::default(),
+        }
+    }
+}
+
+/// Config load/parse error.
+#[derive(Debug, Clone)]
+pub struct ConfigError(pub String);
+
+impl fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "config error: {}", self.0)
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+impl From<JsonError> for ConfigError {
+    fn from(e: JsonError) -> Self {
+        ConfigError(e.to_string())
+    }
+}
+
+fn f(v: &Json, key: &str, default: f64) -> f64 {
+    v.get(key).and_then(Json::as_f64).unwrap_or(default)
+}
+
+fn u(v: &Json, key: &str, default: usize) -> usize {
+    v.get(key).and_then(Json::as_usize).unwrap_or(default)
+}
+
+fn b(v: &Json, key: &str, default: bool) -> bool {
+    v.get(key).and_then(Json::as_bool).unwrap_or(default)
+}
+
+fn s(v: &Json, key: &str, default: &str) -> String {
+    v.get(key).and_then(Json::as_str).unwrap_or(default).to_string()
+}
+
+impl TrainConfig {
+    /// Parse from a JSON document. Missing fields fall back to defaults, so
+    /// configs stay terse; unknown fields are rejected to catch typos.
+    pub fn from_json(v: &Json) -> Result<Self, ConfigError> {
+        let d = TrainConfig::default();
+        let obj = v.as_obj().ok_or_else(|| ConfigError("top level must be an object".into()))?;
+        const KNOWN: [&str; 11] = [
+            "model", "steps", "batch_per_worker", "seed", "log_every", "task_difficulty",
+            "optimizer", "compression", "cluster", "system", "comment",
+        ];
+        for k in obj.keys() {
+            if !KNOWN.contains(&k.as_str()) {
+                return Err(ConfigError(format!("unknown config field '{k}'")));
+            }
+        }
+        let od = OptimizerConfig::default();
+        let o = v.get("optimizer").cloned().unwrap_or(Json::Obj(Default::default()));
+        let optimizer = OptimizerConfig {
+            name: s(&o, "name", &od.name),
+            lr: f(&o, "lr", od.lr),
+            beta1: f(&o, "beta1", od.beta1),
+            beta2: f(&o, "beta2", od.beta2),
+            eps: f(&o, "eps", od.eps),
+            weight_decay: f(&o, "weight_decay", od.weight_decay),
+            momentum: f(&o, "momentum", od.momentum),
+            phi_lo: f(&o, "phi_lo", od.phi_lo),
+            phi_hi: f(&o, "phi_hi", od.phi_hi),
+            warmup_steps: u(&o, "warmup_steps", od.warmup_steps),
+        };
+        let cd = CompressionConfig::default();
+        let c = v.get("compression").cloned().unwrap_or(Json::Obj(Default::default()));
+        let compression = CompressionConfig {
+            scheme: s(&c, "scheme", &cd.scheme),
+            param: f(&c, "param", cd.param),
+            size_threshold: u(&c, "size_threshold", cd.size_threshold),
+            fused_residual: b(&c, "fused_residual", cd.fused_residual),
+            sync: SyncMode::parse(&s(&c, "sync", cd.sync.name()))?,
+        };
+        let kd = ClusterConfig::default();
+        let k = v.get("cluster").cloned().unwrap_or(Json::Obj(Default::default()));
+        let cluster = ClusterConfig {
+            nodes: u(&k, "nodes", kd.nodes),
+            gpus_per_node: u(&k, "gpus_per_node", kd.gpus_per_node),
+            servers: u(&k, "servers", kd.servers),
+            net_gbps: f(&k, "net_gbps", kd.net_gbps),
+            latency_us: f(&k, "latency_us", kd.latency_us),
+        };
+        let sd = SystemConfig::default();
+        let y = v.get("system").cloned().unwrap_or(Json::Obj(Default::default()));
+        let system = SystemConfig {
+            compress_threads: u(&y, "compress_threads", sd.compress_threads),
+            intra_threads: u(&y, "intra_threads", sd.intra_threads),
+            operator_fusion: b(&y, "operator_fusion", sd.operator_fusion),
+            size_threshold_on: b(&y, "size_threshold_on", sd.size_threshold_on),
+            workload_balance: b(&y, "workload_balance", sd.workload_balance),
+            more_servers: b(&y, "more_servers", sd.more_servers),
+            numa_tuning: b(&y, "numa_tuning", sd.numa_tuning),
+        };
+        let cfg = TrainConfig {
+            model: s(v, "model", &d.model),
+            steps: u(v, "steps", d.steps),
+            batch_per_worker: u(v, "batch_per_worker", d.batch_per_worker),
+            seed: u(v, "seed", d.seed as usize) as u64,
+            log_every: u(v, "log_every", d.log_every),
+            task_difficulty: f(v, "task_difficulty", d.task_difficulty),
+            optimizer,
+            compression,
+            cluster,
+            system,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn from_str(src: &str) -> Result<Self, ConfigError> {
+        Self::from_json(&Json::parse(src)?)
+    }
+
+    pub fn from_file(path: &Path) -> Result<Self, ConfigError> {
+        let src = std::fs::read_to_string(path)
+            .map_err(|e| ConfigError(format!("read {}: {e}", path.display())))?;
+        Self::from_str(&src)
+    }
+
+    /// Sanity checks that would otherwise surface as confusing panics deep
+    /// in the engine.
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        if self.cluster.nodes == 0 {
+            return Err(ConfigError("cluster.nodes must be >= 1".into()));
+        }
+        if self.cluster.servers == 0 {
+            return Err(ConfigError("cluster.servers must be >= 1".into()));
+        }
+        if self.optimizer.lr <= 0.0 {
+            return Err(ConfigError("optimizer.lr must be > 0".into()));
+        }
+        if !(0.0..1.0).contains(&self.optimizer.beta1)
+            || !(0.0..1.0).contains(&self.optimizer.beta2)
+        {
+            return Err(ConfigError("beta1/beta2 must be in [0, 1)".into()));
+        }
+        match self.compression.scheme.as_str() {
+            "topk" | "randomk" => {
+                if !(0.0 < self.compression.param && self.compression.param <= 1.0) {
+                    return Err(ConfigError("top-k/random-k param must be in (0, 1]".into()));
+                }
+            }
+            "linear_dither" | "natural_dither" => {
+                if !(1.0..=16.0).contains(&self.compression.param) {
+                    return Err(ConfigError("dithering bits must be in [1, 16]".into()));
+                }
+            }
+            "identity" | "fp16" | "onebit" => {}
+            other => return Err(ConfigError(format!("unknown compression scheme '{other}'"))),
+        }
+        if self.compression.sync == SyncMode::Compressed
+            && matches!(self.compression.scheme.as_str(), "topk" | "onebit")
+        {
+            // Biased compressors without EF diverge (paper §3.1) — allow it
+            // only behind the explicit scheme name for ablation studies.
+            // We warn rather than reject.
+        }
+        Ok(())
+    }
+
+    /// Serialize back to JSON (for run provenance in metrics dumps).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("model", Json::str(self.model.clone())),
+            ("steps", Json::num(self.steps as f64)),
+            ("batch_per_worker", Json::num(self.batch_per_worker as f64)),
+            ("seed", Json::num(self.seed as f64)),
+            ("log_every", Json::num(self.log_every as f64)),
+            ("task_difficulty", Json::num(self.task_difficulty)),
+            (
+                "optimizer",
+                Json::obj(vec![
+                    ("name", Json::str(self.optimizer.name.clone())),
+                    ("lr", Json::num(self.optimizer.lr)),
+                    ("beta1", Json::num(self.optimizer.beta1)),
+                    ("beta2", Json::num(self.optimizer.beta2)),
+                    ("eps", Json::num(self.optimizer.eps)),
+                    ("weight_decay", Json::num(self.optimizer.weight_decay)),
+                    ("momentum", Json::num(self.optimizer.momentum)),
+                    ("phi_lo", Json::num(self.optimizer.phi_lo)),
+                    ("phi_hi", Json::num(self.optimizer.phi_hi)),
+                    ("warmup_steps", Json::num(self.optimizer.warmup_steps as f64)),
+                ]),
+            ),
+            (
+                "compression",
+                Json::obj(vec![
+                    ("scheme", Json::str(self.compression.scheme.clone())),
+                    ("param", Json::num(self.compression.param)),
+                    ("size_threshold", Json::num(self.compression.size_threshold as f64)),
+                    ("fused_residual", Json::Bool(self.compression.fused_residual)),
+                    ("sync", Json::str(self.compression.sync.name())),
+                ]),
+            ),
+            (
+                "cluster",
+                Json::obj(vec![
+                    ("nodes", Json::num(self.cluster.nodes as f64)),
+                    ("gpus_per_node", Json::num(self.cluster.gpus_per_node as f64)),
+                    ("servers", Json::num(self.cluster.servers as f64)),
+                    ("net_gbps", Json::num(self.cluster.net_gbps)),
+                    ("latency_us", Json::num(self.cluster.latency_us)),
+                ]),
+            ),
+            (
+                "system",
+                Json::obj(vec![
+                    ("compress_threads", Json::num(self.system.compress_threads as f64)),
+                    ("intra_threads", Json::num(self.system.intra_threads as f64)),
+                    ("operator_fusion", Json::Bool(self.system.operator_fusion)),
+                    ("size_threshold_on", Json::Bool(self.system.size_threshold_on)),
+                    ("workload_balance", Json::Bool(self.system.workload_balance)),
+                    ("more_servers", Json::Bool(self.system.more_servers)),
+                    ("numa_tuning", Json::Bool(self.system.numa_tuning)),
+                ]),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        TrainConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn parse_partial_config_uses_defaults() {
+        let cfg = TrainConfig::from_str(
+            r#"{"model": "transformer_mini", "compression": {"scheme": "onebit"}}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.model, "transformer_mini");
+        assert_eq!(cfg.compression.scheme, "onebit");
+        assert_eq!(cfg.steps, TrainConfig::default().steps);
+        assert_eq!(cfg.cluster.net_gbps, 25.0);
+    }
+
+    #[test]
+    fn unknown_top_level_field_rejected() {
+        let err = TrainConfig::from_str(r#"{"modle": "typo"}"#).unwrap_err();
+        assert!(err.0.contains("modle"));
+    }
+
+    #[test]
+    fn invalid_values_rejected() {
+        assert!(TrainConfig::from_str(r#"{"optimizer": {"lr": -1}}"#).is_err());
+        assert!(TrainConfig::from_str(r#"{"compression": {"scheme": "topk", "param": 0}}"#)
+            .is_err());
+        assert!(TrainConfig::from_str(r#"{"compression": {"scheme": "nope"}}"#).is_err());
+        assert!(TrainConfig::from_str(r#"{"cluster": {"nodes": 0}}"#).is_err());
+        assert!(TrainConfig::from_str(
+            r#"{"compression": {"scheme": "linear_dither", "param": 40}}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_config() {
+        let mut cfg = TrainConfig::default();
+        cfg.model = "transformer_base100m".into();
+        cfg.compression.scheme = "linear_dither".into();
+        cfg.compression.param = 7.0;
+        cfg.compression.sync = SyncMode::Compressed;
+        cfg.system.numa_tuning = false;
+        let rt = TrainConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(rt, cfg);
+    }
+
+    #[test]
+    fn sync_mode_names_roundtrip() {
+        for m in [SyncMode::Full, SyncMode::Compressed, SyncMode::CompressedEf] {
+            assert_eq!(SyncMode::parse(m.name()).unwrap(), m);
+        }
+        assert!(SyncMode::parse("bogus").is_err());
+    }
+}

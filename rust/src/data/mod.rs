@@ -1,0 +1,260 @@
+//! Synthetic data generation: Zipf-distributed token streams with Markov
+//! structure (so an LM has something to learn), MLM masking, and the
+//! synthetic classification tasks used as the GLUE substitute (Table 4).
+//!
+//! Everything is seed-deterministic so runs are reproducible and all
+//! workers/methods see identical data order at equal seeds.
+
+use crate::util::rng::Xoshiro256;
+
+/// Reserved token ids.
+pub const PAD: i32 = 0;
+pub const MASK: i32 = 1;
+pub const FIRST_REGULAR: i32 = 2;
+
+/// An MLM training batch (flat row-major buffers + shapes).
+#[derive(Clone, Debug)]
+pub struct MlmBatch {
+    pub tokens: Vec<i32>,
+    pub targets: Vec<i32>,
+    pub mask: Vec<f32>,
+    pub batch: usize,
+    pub seq: usize,
+}
+
+/// Zipf + first-order-Markov token source: token t+1 is, with probability
+/// `coherence`, a deterministic function of token t (learnable structure);
+/// otherwise a fresh Zipf draw (noise floor). This gives loss curves the
+/// same "fast drop, long tail" shape as real-corpus MLM.
+pub struct Corpus {
+    rng: Xoshiro256,
+    vocab: usize,
+    /// CDF for Zipf(1.0) over the regular tokens.
+    cdf: Vec<f64>,
+    coherence: f64,
+    prev: i32,
+}
+
+impl Corpus {
+    pub fn new(vocab: usize, seed: u64) -> Self {
+        assert!(vocab as i32 > FIRST_REGULAR + 1);
+        let n = vocab - FIRST_REGULAR as usize;
+        let mut weights: Vec<f64> = (1..=n).map(|r| 1.0 / r as f64).collect();
+        let total: f64 = weights.iter().sum();
+        let mut acc = 0.0;
+        for w in &mut weights {
+            acc += *w / total;
+            *w = acc;
+        }
+        Corpus {
+            rng: Xoshiro256::seed_from_u64(seed),
+            vocab,
+            cdf: weights,
+            coherence: 0.5,
+            prev: FIRST_REGULAR,
+        }
+    }
+
+    fn zipf(&mut self) -> i32 {
+        let u = self.rng.next_f64();
+        // binary search the CDF
+        let idx = self.cdf.partition_point(|&c| c < u);
+        FIRST_REGULAR + idx.min(self.cdf.len() - 1) as i32
+    }
+
+    /// Next token in the stream.
+    pub fn next_token(&mut self) -> i32 {
+        let t = if self.rng.next_f64() < self.coherence {
+            // Deterministic successor: affine map in the regular range.
+            let n = self.vocab as i64 - FIRST_REGULAR as i64;
+            let x = self.prev as i64 - FIRST_REGULAR as i64;
+            FIRST_REGULAR + ((x * 31 + 7) % n) as i32
+        } else {
+            self.zipf()
+        };
+        self.prev = t;
+        t
+    }
+
+    /// Sample an MLM batch: `mask_frac` of positions are replaced with
+    /// [MASK] and contribute to the loss (BERT's 15% default).
+    pub fn mlm_batch(&mut self, batch: usize, seq: usize, mask_frac: f64) -> MlmBatch {
+        let n = batch * seq;
+        let mut tokens = Vec::with_capacity(n);
+        for _ in 0..n {
+            tokens.push(self.next_token());
+        }
+        let targets = tokens.clone();
+        let mut mask = vec![0.0f32; n];
+        for i in 0..n {
+            if self.rng.next_f64() < mask_frac {
+                tokens[i] = MASK;
+                mask[i] = 1.0;
+            }
+        }
+        // Guarantee at least one masked position (loss must be defined).
+        if mask.iter().all(|&m| m == 0.0) {
+            let i = self.rng.below(n as u64) as usize;
+            tokens[i] = MASK;
+            mask[i] = 1.0;
+        }
+        MlmBatch { tokens, targets, mask, batch, seq }
+    }
+}
+
+/// A synthetic classification task (GLUE substitute): each class is a
+/// distinct token distribution; `difficulty` ∈ (0, 1] scales class
+/// separation (1 = trivially separable, → 0 = chance).
+pub struct ClassifyTask {
+    rng: Xoshiro256,
+    vocab: usize,
+    classes: usize,
+    difficulty: f64,
+    pub name: &'static str,
+}
+
+impl ClassifyTask {
+    pub fn new(name: &'static str, vocab: usize, classes: usize, difficulty: f64, seed: u64) -> Self {
+        assert!(classes >= 2 && (0.0..=1.0).contains(&difficulty));
+        ClassifyTask { rng: Xoshiro256::seed_from_u64(seed), vocab, classes, difficulty, name }
+    }
+
+    /// The paper's four GLUE tasks mapped to four difficulties (MNLI-m is
+    /// hardest, SST-2 easiest — mirroring the paper's accuracy ordering).
+    pub fn glue_suite(vocab: usize, seed: u64) -> Vec<ClassifyTask> {
+        vec![
+            ClassifyTask::new("MNLI-m*", vocab, 4, 0.35, seed ^ 1),
+            ClassifyTask::new("QNLI*", vocab, 4, 0.55, seed ^ 2),
+            ClassifyTask::new("SST-2*", vocab, 4, 0.75, seed ^ 3),
+            ClassifyTask::new("MRPC*", vocab, 4, 0.45, seed ^ 4),
+        ]
+    }
+
+    /// Sample (tokens, labels): class c biases tokens toward the band
+    /// `[c·V/C, (c+1)·V/C)` with probability `difficulty`.
+    pub fn batch(&mut self, batch: usize, seq: usize) -> (Vec<i32>, Vec<i32>) {
+        let mut tokens = Vec::with_capacity(batch * seq);
+        let mut labels = Vec::with_capacity(batch);
+        let band = (self.vocab - FIRST_REGULAR as usize) / self.classes;
+        for _ in 0..batch {
+            let label = self.rng.below(self.classes as u64) as i32;
+            labels.push(label);
+            for _ in 0..seq {
+                let t = if self.rng.next_f64() < self.difficulty {
+                    FIRST_REGULAR
+                        + (label as usize * band) as i32
+                        + self.rng.below(band as u64) as i32
+                } else {
+                    FIRST_REGULAR + self.rng.below((self.vocab - FIRST_REGULAR as usize) as u64) as i32
+                };
+                tokens.push(t);
+            }
+        }
+        (tokens, labels)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tokens_in_vocab_range() {
+        let mut c = Corpus::new(256, 1);
+        for _ in 0..10_000 {
+            let t = c.next_token();
+            assert!((FIRST_REGULAR..256).contains(&t));
+        }
+    }
+
+    #[test]
+    fn zipf_head_is_heavy() {
+        let mut c = Corpus::new(1024, 2);
+        c.coherence = 0.0; // pure Zipf
+        let mut head = 0usize;
+        let n = 20_000;
+        for _ in 0..n {
+            if c.next_token() < FIRST_REGULAR + 10 {
+                head += 1;
+            }
+        }
+        // Zipf(1.0) over ~1k tokens: top-10 mass ≈ H(10)/H(1022) ≈ 0.39
+        assert!(head as f64 / n as f64 > 0.25, "head mass {}", head as f64 / n as f64);
+    }
+
+    #[test]
+    fn mlm_batch_invariants() {
+        let mut c = Corpus::new(512, 3);
+        let b = c.mlm_batch(4, 32, 0.15);
+        assert_eq!(b.tokens.len(), 128);
+        assert_eq!(b.targets.len(), 128);
+        assert_eq!(b.mask.len(), 128);
+        let masked = b.mask.iter().filter(|&&m| m == 1.0).count();
+        assert!(masked >= 1);
+        for i in 0..128 {
+            if b.mask[i] == 1.0 {
+                assert_eq!(b.tokens[i], MASK);
+                assert_ne!(b.targets[i], MASK);
+            } else {
+                assert_eq!(b.tokens[i], b.targets[i]);
+            }
+        }
+        // masking rate near 15%
+        assert!((masked as f64 / 128.0 - 0.15).abs() < 0.15);
+    }
+
+    #[test]
+    fn mlm_batch_always_has_a_masked_position() {
+        let mut c = Corpus::new(64, 4);
+        for _ in 0..50 {
+            let b = c.mlm_batch(1, 4, 0.0); // 0% would otherwise mask nothing
+            assert!(b.mask.iter().any(|&m| m == 1.0));
+        }
+    }
+
+    #[test]
+    fn classify_task_is_learnable_and_difficulty_ordered() {
+        // A trivial band classifier should reach high accuracy on easy
+        // tasks and lower on hard ones.
+        let eval = |difficulty: f64| -> f64 {
+            let mut t = ClassifyTask::new("t", 1024, 4, difficulty, 9);
+            let band = (1024 - FIRST_REGULAR as usize) / 4;
+            let (tokens, labels) = t.batch(400, 16);
+            let mut correct = 0;
+            for (i, &label) in labels.iter().enumerate() {
+                // majority-band vote
+                let mut counts = [0usize; 4];
+                for &tok in &tokens[i * 16..(i + 1) * 16] {
+                    let c = ((tok - FIRST_REGULAR) as usize / band).min(3);
+                    counts[c] += 1;
+                }
+                let pred = counts.iter().enumerate().max_by_key(|(_, c)| **c).unwrap().0;
+                if pred == label as usize {
+                    correct += 1;
+                }
+            }
+            correct as f64 / labels.len() as f64
+        };
+        let easy = eval(0.75);
+        let hard = eval(0.2);
+        assert!(easy > 0.9, "easy task acc {easy}");
+        assert!(hard < easy, "hard {hard} !< easy {easy}");
+    }
+
+    #[test]
+    fn glue_suite_has_four_named_tasks() {
+        let suite = ClassifyTask::glue_suite(2048, 1);
+        assert_eq!(suite.len(), 4);
+        assert_eq!(suite[0].name, "MNLI-m*");
+    }
+
+    #[test]
+    fn determinism_per_seed() {
+        let mut a = Corpus::new(128, 42);
+        let mut b = Corpus::new(128, 42);
+        let ba = a.mlm_batch(2, 8, 0.15);
+        let bb = b.mlm_batch(2, 8, 0.15);
+        assert_eq!(ba.tokens, bb.tokens);
+        assert_eq!(ba.mask, bb.mask);
+    }
+}

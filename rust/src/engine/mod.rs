@@ -1,0 +1,458 @@
+//! Training engine: wires the PJRT runtime (L2 artifacts), the data
+//! generators, the comm fabric (workers + parameter servers), and the
+//! optimizer into the full CLAN training loop (Alg. 5).
+//!
+//! The comm fabric is reusable without a model ([`CommFabric`]): benches
+//! drive it with synthetic gradients to measure the pure system cost,
+//! which is how the Table-6 ablation rows are produced.
+
+use crate::comm::Endpoint;
+use crate::compress::threshold::SizeThreshold;
+use crate::compress::Compressor;
+use crate::configx::{SyncMode, TrainConfig};
+use crate::data::Corpus;
+use crate::metrics::Breakdown;
+use crate::optim::{blocks::Block, WarmupSchedule};
+use crate::ps::{Server, ServerOptions, ServerStats, ShardPlan};
+use crate::runtime::{self, Manifest, Runtime};
+use crate::worker::WorkerComm;
+use anyhow::{Context, Result};
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Per-exchange timing/volume stats (summed over workers).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CommStats {
+    pub compress_s: f64,
+    pub decompress_s: f64,
+    pub wire_bytes: u64,
+}
+
+/// Workers + servers wired over in-process endpoints.
+pub struct CommFabric {
+    workers: Vec<WorkerComm>,
+    servers: Vec<Server>,
+    blocks: Vec<Block>,
+    dim: usize,
+    iter: u64,
+}
+
+impl CommFabric {
+    /// Build a fabric for `blocks` over a flat `dim`-vector, as configured
+    /// (scheme, sync mode, threshold, fusion, shard balance, servers).
+    pub fn new(cfg: &TrainConfig, blocks: Vec<Block>, dim: usize) -> Result<CommFabric> {
+        let n_workers = cfg.cluster.nodes;
+        let n_servers = if cfg.system.more_servers { cfg.cluster.servers.max(2) } else { 1 };
+        let inner = crate::compress::by_name(&cfg.compression.scheme, cfg.compression.param)
+            .map_err(anyhow::Error::msg)?;
+        let comp: Arc<dyn Compressor> = if cfg.system.size_threshold_on {
+            Arc::new(SizeThreshold::new(inner, cfg.compression.size_threshold))
+        } else {
+            inner
+        };
+        let sync =
+            if comp.name() == "identity" { SyncMode::Full } else { cfg.compression.sync };
+        let fused = cfg.system.operator_fusion && cfg.compression.fused_residual;
+
+        // Shard plan (§4.2.4): compressed keys cost ~4x their size in server
+        // CPU (decompress xN + compress); bypassed keys are memcpy-cheap.
+        let costs: Vec<f64> = blocks
+            .iter()
+            .map(|b| {
+                let bypass = cfg.system.size_threshold_on && 4 * b.len < cfg.compression.size_threshold;
+                b.len as f64 * if bypass { 1.0 } else { 4.0 }
+            })
+            .collect();
+        let plan = if cfg.system.workload_balance {
+            ShardPlan::balanced(&costs, n_servers)
+        } else {
+            ShardPlan::round_robin(blocks.len(), n_servers)
+        };
+
+        // Endpoint mesh: one pair per (worker, server).
+        let mut worker_eps: Vec<Vec<Box<dyn Endpoint>>> = (0..n_workers)
+            .map(|_| Vec::with_capacity(n_servers))
+            .collect();
+        let mut servers = Vec::with_capacity(n_servers);
+        for s in 0..n_servers {
+            let mut server_side = Vec::with_capacity(n_workers);
+            for w in worker_eps.iter_mut() {
+                let (wep, sep) = crate::comm::inproc::pair();
+                w.push(Box::new(wep) as Box<dyn Endpoint>);
+                server_side.push(sep);
+            }
+            servers.push(Server::spawn(
+                ServerOptions {
+                    comp: Arc::clone(&comp),
+                    sync,
+                    fused,
+                    n_workers,
+                    intra_threads: cfg.system.intra_threads,
+                    seed: cfg.seed ^ (s as u64).wrapping_mul(0xD1B54A32D192ED03),
+                },
+                server_side,
+            ));
+        }
+
+        let workers = worker_eps
+            .into_iter()
+            .enumerate()
+            .map(|(w, eps)| {
+                WorkerComm::new(
+                    w as u32,
+                    Arc::clone(&comp),
+                    sync,
+                    fused,
+                    cfg.system.intra_threads,
+                    cfg.seed,
+                    eps,
+                    plan.clone(),
+                )
+            })
+            .collect();
+
+        Ok(CommFabric { workers, servers, blocks, dim, iter: 0 })
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    pub fn blocks(&self) -> &[Block] {
+        &self.blocks
+    }
+
+    /// One BSP exchange (Alg. 3/4 end to end over the message fabric):
+    /// every worker pushes all its blocks, then pulls all aggregates.
+    /// Returns worker 0's aggregated gradient (all workers receive the
+    /// same bytes) plus summed stats.
+    pub fn exchange(&mut self, per_worker_grads: &[Vec<f32>]) -> (Vec<f32>, CommStats) {
+        assert_eq!(per_worker_grads.len(), self.workers.len());
+        for g in per_worker_grads {
+            assert_eq!(g.len(), self.dim);
+        }
+        let iter = self.iter;
+        self.iter += 1;
+        let blocks = &self.blocks;
+        let dim = self.dim;
+        let results: Vec<(Vec<f32>, CommStats)> = std::thread::scope(|s| {
+            let handles: Vec<_> = self
+                .workers
+                .iter_mut()
+                .zip(per_worker_grads)
+                .map(|(wc, grad)| {
+                    s.spawn(move || {
+                        let mut stats = CommStats::default();
+                        let before = wc.bytes_sent();
+                        for (k, b) in blocks.iter().enumerate() {
+                            let (_, dt) = wc.push(k as u64, iter, &grad[b.range()]);
+                            stats.compress_s += dt;
+                        }
+                        let mut agg = vec![0.0f32; dim];
+                        for (k, b) in blocks.iter().enumerate() {
+                            let (rx_bytes, dt) = wc.pull(k as u64, iter, &mut agg[b.range()]);
+                            stats.wire_bytes += rx_bytes as u64;
+                            stats.decompress_s += dt;
+                        }
+                        stats.wire_bytes += wc.bytes_sent() - before;
+                        (agg, stats)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("worker thread panicked")).collect()
+        });
+        let mut total = CommStats::default();
+        for (_, st) in &results {
+            total.compress_s += st.compress_s;
+            total.decompress_s += st.decompress_s;
+            total.wire_bytes += st.wire_bytes;
+        }
+        (results.into_iter().next().unwrap().0, total)
+    }
+
+    /// Shut everything down; returns per-server stats.
+    pub fn shutdown(self) -> Vec<ServerStats> {
+        for w in &self.workers {
+            w.shutdown();
+        }
+        drop(self.workers);
+        self.servers.into_iter().map(|s| s.join()).collect()
+    }
+}
+
+/// Full training-run report.
+#[derive(Debug, Default)]
+pub struct EngineReport {
+    /// (step, mean training loss over workers)
+    pub losses: Vec<(usize, f64)>,
+    /// (step, eval loss) — held-out corpus.
+    pub eval_losses: Vec<(usize, f64)>,
+    pub breakdown: Breakdown,
+    pub wire_bytes: u64,
+    pub elapsed_s: f64,
+    pub steps: usize,
+    /// Total f32s a full-precision run would have moved (for rate reports).
+    pub full_precision_bytes: u64,
+    /// Final flat parameter vector (for downstream eval / finetuning).
+    pub final_params: Vec<f32>,
+}
+
+impl EngineReport {
+    pub fn compression_rate(&self) -> f64 {
+        self.full_precision_bytes as f64 / self.wire_bytes.max(1) as f64
+    }
+
+    pub fn final_loss(&self) -> f64 {
+        self.losses.last().map(|(_, l)| *l).unwrap_or(f64::NAN)
+    }
+}
+
+/// Train a model end to end per the config. This is the paper's Alg. 5
+/// running over real message passing with the PJRT-compiled model.
+pub fn train(cfg: &TrainConfig, art_dir: &Path) -> Result<EngineReport> {
+    let rt = Runtime::cpu()?;
+    let manifest = Manifest::load(art_dir)?;
+    let entry = manifest.model(&cfg.model)?.clone();
+    let train_exe = rt
+        .load_hlo(&manifest.dir.join(&entry.train_hlo))
+        .context("compile train artifact")?;
+    let eval_exe = rt.load_hlo(&manifest.dir.join(&entry.eval_hlo)).context("compile eval artifact")?;
+
+    let mut params = manifest.load_init_params(&entry)?;
+    let blocks = manifest.blocks(&entry);
+    let dim = entry.total_params;
+    let mut opt = crate::optim::build(&cfg.optimizer, blocks.clone(), dim)
+        .map_err(anyhow::Error::msg)?;
+    let schedule = WarmupSchedule {
+        base_lr: cfg.optimizer.lr,
+        warmup_steps: cfg.optimizer.warmup_steps,
+        total_steps: 0,
+    };
+
+    let mut fabric = CommFabric::new(cfg, blocks, dim)?;
+    let n_workers = fabric.n_workers();
+    let mut corpora: Vec<Corpus> =
+        (0..n_workers).map(|w| Corpus::new(entry.vocab, cfg.seed ^ (w as u64) << 17)).collect();
+    let mut heldout = Corpus::new(entry.vocab, cfg.seed ^ 0xE7A1);
+    let mut tasks: Vec<crate::data::ClassifyTask> = (0..n_workers)
+        .map(|w| crate::data::ClassifyTask::new("train", entry.vocab, entry.num_classes.max(2), 0.55, cfg.seed ^ (w as u64) << 9))
+        .collect();
+
+    let mut report = EngineReport::default();
+    let run_start = Instant::now();
+
+    for step in 0..cfg.steps {
+        opt.set_lr(schedule.lr_at(step) as f32);
+
+        // 1. Per-worker forward/backward through PJRT.
+        let t = Instant::now();
+        let mut grads = Vec::with_capacity(n_workers);
+        let mut loss_sum = 0.0f64;
+        for w in 0..n_workers {
+            let mut inputs = runtime::param_literals(&entry, &params)?;
+            if entry.num_classes > 0 {
+                let (tokens, labels) = tasks[w].batch(entry.batch, entry.seq);
+                inputs.push(runtime::i32_literal(&tokens, &[entry.batch, entry.seq])?);
+                inputs.push(runtime::i32_literal(&labels, &[entry.batch])?);
+            } else {
+                let b = corpora[w].mlm_batch(entry.batch, entry.seq, 0.15);
+                inputs.push(runtime::i32_literal(&b.tokens, &[entry.batch, entry.seq])?);
+                inputs.push(runtime::i32_literal(&b.targets, &[entry.batch, entry.seq])?);
+                inputs.push(runtime::f32_literal(&b.mask, &[entry.batch, entry.seq])?);
+            }
+            let outputs = train_exe.run(&inputs)?;
+            let (loss, flat) = runtime::collect_grads(&entry, &outputs)?;
+            loss_sum += loss as f64;
+            grads.push(flat);
+        }
+        report.breakdown.compute_s += t.elapsed().as_secs_f64();
+
+        // 2. Compressed push/pull over the fabric.
+        let t = Instant::now();
+        let (agg, stats) = fabric.exchange(&grads);
+        let wall = t.elapsed().as_secs_f64();
+        report.breakdown.compress_s += stats.compress_s;
+        report.breakdown.decompress_s += stats.decompress_s;
+        report.breakdown.wire_s += (wall - stats.compress_s - stats.decompress_s).max(0.0);
+        report.wire_bytes += stats.wire_bytes;
+        report.full_precision_bytes += (n_workers * 2 * 4 * dim) as u64;
+
+        // 3. Optimizer update (identical on every worker; applied once to
+        // the replicated parameter vector).
+        let t = Instant::now();
+        opt.step(&mut params, &agg);
+        report.breakdown.optimizer_s += t.elapsed().as_secs_f64();
+
+        let mean_loss = loss_sum / n_workers as f64;
+        report.losses.push((step, mean_loss));
+
+        if cfg.log_every > 0 && (step % cfg.log_every == 0 || step + 1 == cfg.steps) {
+            // Held-out eval (MLM models only; classifier eval needs labels
+            // from its task, handled by the examples directly).
+            if entry.num_classes == 0 {
+                let b = heldout.mlm_batch(entry.batch, entry.seq, 0.15);
+                let mut inputs = runtime::param_literals(&entry, &params)?;
+                inputs.push(runtime::i32_literal(&b.tokens, &[entry.batch, entry.seq])?);
+                inputs.push(runtime::i32_literal(&b.targets, &[entry.batch, entry.seq])?);
+                inputs.push(runtime::f32_literal(&b.mask, &[entry.batch, entry.seq])?);
+                let out = eval_exe.run(&inputs)?;
+                let eval_loss = out[0].to_vec::<f32>()?[0] as f64;
+                report.eval_losses.push((step, eval_loss));
+            }
+        }
+    }
+
+    report.steps = cfg.steps;
+    report.elapsed_s = run_start.elapsed().as_secs_f64();
+    report.final_params = params;
+    fabric.shutdown();
+    Ok(report)
+}
+
+/// Evaluate a classifier checkpoint on `n_batches` held-out batches of the
+/// given task; returns (mean loss, mean accuracy).
+pub fn eval_classifier(
+    model: &str,
+    art_dir: &Path,
+    params: &[f32],
+    task: &mut crate::data::ClassifyTask,
+    n_batches: usize,
+) -> Result<(f64, f64)> {
+    let rt = Runtime::cpu()?;
+    let manifest = Manifest::load(art_dir)?;
+    let entry = manifest.model(model)?.clone();
+    let exe = rt.load_hlo(&manifest.dir.join(&entry.eval_hlo))?;
+    let mut loss_sum = 0.0;
+    let mut acc_sum = 0.0;
+    for _ in 0..n_batches {
+        let (tokens, labels) = task.batch(entry.batch, entry.seq);
+        let mut inputs = runtime::param_literals(&entry, params)?;
+        inputs.push(runtime::i32_literal(&tokens, &[entry.batch, entry.seq])?);
+        inputs.push(runtime::i32_literal(&labels, &[entry.batch])?);
+        let out = exe.run(&inputs)?;
+        loss_sum += out[0].to_vec::<f32>()?[0] as f64;
+        acc_sum += out[1].to_vec::<f32>()?[0] as f64;
+    }
+    Ok((loss_sum / n_batches as f64, acc_sum / n_batches as f64))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::by_name;
+    use crate::optim::sync::CompressEfPushPull;
+    use crate::testutil::assert_allclose;
+    use crate::util::rng::Xoshiro256;
+
+    fn cfg_with(scheme: &str, param: f64, sync: SyncMode, nodes: usize) -> TrainConfig {
+        let mut cfg = TrainConfig::default();
+        cfg.cluster.nodes = nodes;
+        cfg.cluster.servers = 2;
+        cfg.compression.scheme = scheme.into();
+        cfg.compression.param = param;
+        cfg.compression.sync = sync;
+        cfg.compression.size_threshold = 0; // compress everything
+        cfg.system.size_threshold_on = false;
+        cfg
+    }
+
+    /// The distributed fabric must be bit-identical to the in-memory
+    /// reference (Alg. 4) for deterministic compressors.
+    #[test]
+    fn fabric_matches_reference_alg4_topk() {
+        let dim = 300;
+        let nodes = 3;
+        let cfg = cfg_with("topk", 0.1, SyncMode::CompressedEf, nodes);
+        let blocks = crate::optim::blocks::from_shapes(&[
+            ("a".into(), 100),
+            ("b".into(), 150),
+            ("c".into(), 50),
+        ]);
+        let mut fabric = CommFabric::new(&cfg, blocks.clone(), dim).unwrap();
+
+        // Reference: one EF push/pull per block per round.
+        let comp = by_name("topk", 0.1).unwrap();
+        let mut refs: Vec<CompressEfPushPull> = (0..blocks.len())
+            .map(|_| CompressEfPushPull::new(comp.clone(), nodes, 1, true))
+            .collect();
+
+        let mut data_rng = Xoshiro256::seed_from_u64(5);
+        for _round in 0..4 {
+            let grads: Vec<Vec<f32>> = (0..nodes)
+                .map(|_| {
+                    let mut g = vec![0.0f32; dim];
+                    data_rng.fill_normal(&mut g, 1.0);
+                    g
+                })
+                .collect();
+            let (got, stats) = fabric.exchange(&grads);
+            assert!(stats.wire_bytes > 0);
+            let mut want = vec![0.0f32; dim];
+            for (k, b) in blocks.iter().enumerate() {
+                let per_block: Vec<Vec<f32>> =
+                    grads.iter().map(|g| g[b.range()].to_vec()).collect();
+                let p = refs[k].round(k as u64, &per_block);
+                want[b.range()].copy_from_slice(&p);
+            }
+            assert_allclose(&got, &want, 1e-6, 1e-5, "fabric vs reference Alg.4");
+        }
+        fabric.shutdown();
+    }
+
+    #[test]
+    fn fabric_full_precision_is_exact_mean() {
+        let dim = 128;
+        let nodes = 4;
+        let cfg = cfg_with("identity", 0.0, SyncMode::Full, nodes);
+        let blocks = crate::optim::blocks::single(dim);
+        let mut fabric = CommFabric::new(&cfg, blocks, dim).unwrap();
+        let grads: Vec<Vec<f32>> =
+            (0..nodes).map(|w| (0..dim).map(|i| (w * dim + i) as f32).collect()).collect();
+        let (got, _) = fabric.exchange(&grads);
+        for i in 0..dim {
+            let want: f32 = (0..nodes).map(|w| (w * dim + i) as f32).sum::<f32>() / nodes as f32;
+            assert!((got[i] - want).abs() < 1e-4);
+        }
+        let stats = fabric.shutdown();
+        assert_eq!(stats.iter().map(|s| s.pushes).sum::<u64>(), nodes as u64);
+    }
+
+    #[test]
+    fn fabric_compression_reduces_wire_bytes() {
+        let dim = 100_000;
+        let nodes = 2;
+        let blocks = crate::optim::blocks::single(dim);
+        let run = |scheme: &str, param: f64, sync: SyncMode| -> u64 {
+            let cfg = cfg_with(scheme, param, sync, nodes);
+            let mut fabric = CommFabric::new(&cfg, blocks.clone(), dim).unwrap();
+            let grads: Vec<Vec<f32>> = (0..nodes)
+                .map(|w| (0..dim).map(|i| ((w + i) as f32 * 0.001).sin()).collect())
+                .collect();
+            let (_, stats) = fabric.exchange(&grads);
+            fabric.shutdown();
+            stats.wire_bytes
+        };
+        let full = run("identity", 0.0, SyncMode::Full);
+        let topk = run("topk", 0.001, SyncMode::CompressedEf);
+        let onebit = run("onebit", 0.0, SyncMode::CompressedEf);
+        assert!(topk < full / 100, "topk {topk} vs full {full}");
+        assert!(onebit < full / 20, "onebit {onebit} vs full {full}");
+    }
+
+    #[test]
+    fn size_threshold_bypasses_small_blocks() {
+        let dim = 1000;
+        let nodes = 2;
+        let mut cfg = cfg_with("topk", 0.01, SyncMode::CompressedEf, nodes);
+        cfg.system.size_threshold_on = true;
+        cfg.compression.size_threshold = 10_000; // 4*1000 < 10k -> bypass
+        let blocks = crate::optim::blocks::single(dim);
+        let mut fabric = CommFabric::new(&cfg, blocks, dim).unwrap();
+        let grads: Vec<Vec<f32>> = (0..nodes).map(|_| vec![1.0f32; dim]).collect();
+        let (got, _) = fabric.exchange(&grads);
+        // bypassed => exact mean, not top-k sparsified
+        assert!(got.iter().all(|&v| (v - 1.0).abs() < 1e-6));
+        fabric.shutdown();
+    }
+}

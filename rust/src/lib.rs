@@ -1,0 +1,48 @@
+//! # BytePS-Compress
+//!
+//! A reproduction of *"Compressed Communication for Distributed Training:
+//! Adaptive Methods and System"* (CS.DC 2021) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the coordinator: parameter servers, workers,
+//!   CPU-side gradient compressors, the CLAN/LANS optimizer family, and the
+//!   training engine. Python is never on the step path.
+//! * **L2** — the JAX model (`python/compile/model.py`), AOT-lowered to HLO
+//!   text and executed here through the PJRT CPU client ([`runtime`]).
+//! * **L1** — Pallas kernels (`python/compile/kernels/`) that lower into the
+//!   same HLO artifacts (fused LANS update, fused attention, dithering
+//!   quantizer).
+//!
+//! See `DESIGN.md` for the full system inventory and the per-experiment
+//! index, and `EXPERIMENTS.md` for paper-vs-measured results.
+//!
+//! ## Quick tour
+//!
+//! ```no_run
+//! use byteps_compress::compress::{self, Compressor, Ctx};
+//! use byteps_compress::util::rng::Xoshiro256;
+//!
+//! let topk = compress::by_name("topk", 0.001).unwrap();
+//! let mut rng = Xoshiro256::seed_from_u64(7);
+//! let grad = vec![0.5f32; 1 << 20];
+//! let wire = topk.compress(&grad, &mut Ctx::new(&mut rng));
+//! let mut out = vec![0.0; grad.len()];
+//! topk.decompress(&wire, &mut out);
+//! assert!(wire.nbytes() < 4 * grad.len() / 100); // >100x smaller
+//! ```
+
+pub mod cli;
+pub mod comm;
+pub mod compress;
+pub mod configx;
+pub mod data;
+pub mod engine;
+pub mod metrics;
+pub mod optim;
+pub mod parallel;
+pub mod ps;
+pub mod runtime;
+pub mod simnet;
+pub mod testutil;
+pub mod util;
+pub mod worker;

@@ -1,0 +1,172 @@
+//! `bytepsc` — the BytePS-Compress launcher.
+//!
+//! Subcommands:
+//!   train     run a training job (config file + flag overrides)
+//!   inspect   print artifact manifest / model info
+//!   calibrate measure compressor speeds on this host (feeds simnet)
+
+use byteps_compress::cli::{usage, Args, Opt};
+use byteps_compress::compress;
+use byteps_compress::configx::{SyncMode, TrainConfig};
+use byteps_compress::engine;
+use byteps_compress::metrics::markdown_table;
+use byteps_compress::runtime::Manifest;
+use byteps_compress::simnet::CompressorProfile;
+use std::path::{Path, PathBuf};
+
+fn opts() -> Vec<Opt> {
+    vec![
+        Opt { name: "config", takes_value: true, help: "JSON config file (see configs/)" },
+        Opt { name: "artifacts", takes_value: true, help: "artifacts directory (default: artifacts)" },
+        Opt { name: "model", takes_value: true, help: "model name from the manifest" },
+        Opt { name: "steps", takes_value: true, help: "training steps" },
+        Opt { name: "nodes", takes_value: true, help: "worker nodes" },
+        Opt { name: "servers", takes_value: true, help: "parameter servers" },
+        Opt { name: "scheme", takes_value: true, help: "compressor: identity|fp16|onebit|topk|randomk|linear_dither|natural_dither" },
+        Opt { name: "param", takes_value: true, help: "compressor parameter (ratio or bits)" },
+        Opt { name: "sync", takes_value: true, help: "full|compressed|compressed_ef" },
+        Opt { name: "optimizer", takes_value: true, help: "lans|clan|nag|adam|sgd" },
+        Opt { name: "lr", takes_value: true, help: "learning rate" },
+        Opt { name: "seed", takes_value: true, help: "RNG seed" },
+        Opt { name: "log-every", takes_value: true, help: "logging interval" },
+    ]
+}
+
+fn apply_overrides(cfg: &mut TrainConfig, a: &Args) -> Result<(), String> {
+    if let Some(m) = a.get("model") {
+        cfg.model = m.into();
+    }
+    cfg.steps = a.usize_or("steps", cfg.steps)?;
+    cfg.cluster.nodes = a.usize_or("nodes", cfg.cluster.nodes)?;
+    cfg.cluster.servers = a.usize_or("servers", cfg.cluster.servers)?;
+    if let Some(s) = a.get("scheme") {
+        cfg.compression.scheme = s.into();
+    }
+    cfg.compression.param = a.f64_or("param", cfg.compression.param)?;
+    if let Some(s) = a.get("sync") {
+        cfg.compression.sync = SyncMode::parse(s).map_err(|e| e.to_string())?;
+    }
+    if let Some(o) = a.get("optimizer") {
+        cfg.optimizer.name = o.into();
+    }
+    cfg.optimizer.lr = a.f64_or("lr", cfg.optimizer.lr)?;
+    cfg.seed = a.u64_or("seed", cfg.seed)?;
+    cfg.log_every = a.usize_or("log-every", cfg.log_every)?;
+    cfg.validate().map_err(|e| e.to_string())?;
+    Ok(())
+}
+
+fn cmd_train(a: &Args) -> anyhow::Result<()> {
+    let mut cfg = match a.get("config") {
+        Some(path) => TrainConfig::from_file(Path::new(path)).map_err(|e| anyhow::anyhow!("{e}"))?,
+        None => TrainConfig::default(),
+    };
+    apply_overrides(&mut cfg, a).map_err(anyhow::Error::msg)?;
+    let art = PathBuf::from(a.get_or("artifacts", "artifacts"));
+    eprintln!(
+        "training {} | {} steps x {} nodes | {} ({}, param {}) | optimizer {}",
+        cfg.model,
+        cfg.steps,
+        cfg.cluster.nodes,
+        cfg.compression.scheme,
+        cfg.compression.sync.name(),
+        cfg.compression.param,
+        cfg.optimizer.name
+    );
+    let report = engine::train(&cfg, &art)?;
+    for (step, loss) in &report.losses {
+        if cfg.log_every > 0 && (step % cfg.log_every == 0 || step + 1 == cfg.steps) {
+            println!("step {step:>6}  loss {loss:.4}");
+        }
+    }
+    println!(
+        "\ndone in {:.1}s | final loss {:.4} | wire {} | compression rate vs f32: {:.1}x",
+        report.elapsed_s,
+        report.final_loss(),
+        byteps_compress::util::human_bytes(report.wire_bytes as usize),
+        report.compression_rate()
+    );
+    let b = &report.breakdown;
+    println!(
+        "breakdown: compute {:.2}s | compress {:.2}s | decompress {:.2}s | wire/other {:.2}s | optimizer {:.2}s",
+        b.compute_s, b.compress_s, b.decompress_s, b.wire_s, b.optimizer_s
+    );
+    Ok(())
+}
+
+fn cmd_inspect(a: &Args) -> anyhow::Result<()> {
+    let art = PathBuf::from(a.get_or("artifacts", "artifacts"));
+    let man = Manifest::load(&art)?;
+    let mut rows = Vec::new();
+    for (name, e) in &man.models {
+        rows.push(vec![
+            name.clone(),
+            format!("{:.2}M", e.total_params as f64 / 1e6),
+            e.params.len().to_string(),
+            format!("{}x{}", e.batch, e.seq),
+            e.vocab.to_string(),
+            if e.num_classes > 0 { format!("classifier({})", e.num_classes) } else { "mlm".into() },
+        ]);
+    }
+    println!(
+        "{}",
+        markdown_table(&["model", "params", "tensors", "batch", "vocab", "head"], &rows)
+    );
+    println!("kernels: {:?}", man.kernels.keys().collect::<Vec<_>>());
+    Ok(())
+}
+
+fn cmd_calibrate(_a: &Args) -> anyhow::Result<()> {
+    let n = 1 << 21;
+    println!("measuring compressor throughput on {} elements:\n", n);
+    let mut rows = Vec::new();
+    for (label, comp) in compress::paper_suite() {
+        let p = CompressorProfile::measure(label, comp.as_ref(), n, 0.0);
+        rows.push(vec![
+            label.to_string(),
+            format!("{:.2}", p.compress_ns_per_elem),
+            format!("{:.2}", p.decompress_ns_per_elem),
+            format!("{:.3}", p.param),
+            format!("{:.0}x", 4.0 / p.param),
+        ]);
+    }
+    println!(
+        "{}",
+        markdown_table(
+            &["method", "compress ns/elem", "decompress ns/elem", "wire B/elem", "rate vs f32"],
+            &rows
+        )
+    );
+    Ok(())
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let opts = opts();
+    let subcommands = [
+        ("train", "run a training job"),
+        ("inspect", "print artifact manifest info"),
+        ("calibrate", "measure compressor speeds on this host"),
+    ];
+    let args = match Args::parse(&argv, true, &opts) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n");
+            eprintln!("{}", usage("bytepsc", "BytePS-Compress / CLAN reproduction", &subcommands, &opts));
+            std::process::exit(2);
+        }
+    };
+    let result = match args.subcommand.as_deref() {
+        Some("train") => cmd_train(&args),
+        Some("inspect") => cmd_inspect(&args),
+        Some("calibrate") => cmd_calibrate(&args),
+        _ => {
+            println!("{}", usage("bytepsc", "BytePS-Compress / CLAN reproduction", &subcommands, &opts));
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

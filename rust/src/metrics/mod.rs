@@ -1,0 +1,256 @@
+//! Run metrics: step-time breakdowns, throughput counters, and the
+//! markdown/CSV emitters the benchmark harnesses use to print paper-style
+//! tables.
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+/// Per-step wall-time breakdown (Fig. 2's computation/communication split;
+/// compression counts as communication, as in the paper §5.1.1).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Breakdown {
+    pub compute_s: f64,
+    pub compress_s: f64,
+    pub decompress_s: f64,
+    pub wire_s: f64,
+    pub optimizer_s: f64,
+    pub other_s: f64,
+}
+
+impl Breakdown {
+    pub fn total(&self) -> f64 {
+        self.compute_s
+            + self.compress_s
+            + self.decompress_s
+            + self.wire_s
+            + self.optimizer_s
+            + self.other_s
+    }
+
+    /// Paper convention: "communication" = wire + (de)compression.
+    pub fn communication(&self) -> f64 {
+        self.compress_s + self.decompress_s + self.wire_s
+    }
+
+    pub fn add(&mut self, o: &Breakdown) {
+        self.compute_s += o.compute_s;
+        self.compress_s += o.compress_s;
+        self.decompress_s += o.decompress_s;
+        self.wire_s += o.wire_s;
+        self.optimizer_s += o.optimizer_s;
+        self.other_s += o.other_s;
+    }
+
+    pub fn scale(&self, f: f64) -> Breakdown {
+        Breakdown {
+            compute_s: self.compute_s * f,
+            compress_s: self.compress_s * f,
+            decompress_s: self.decompress_s * f,
+            wire_s: self.wire_s * f,
+            optimizer_s: self.optimizer_s * f,
+            other_s: self.other_s * f,
+        }
+    }
+}
+
+/// Accumulates named durations, counters and series over a run.
+#[derive(Default, Debug)]
+pub struct Metrics {
+    durations: BTreeMap<String, (u64, Duration)>,
+    counters: BTreeMap<String, u64>,
+    series: BTreeMap<String, Vec<(f64, f64)>>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, name: &str, d: Duration) {
+        let e = self.durations.entry(name.to_string()).or_insert((0, Duration::ZERO));
+        e.0 += 1;
+        e.1 += d;
+    }
+
+    pub fn count(&mut self, name: &str, by: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += by;
+    }
+
+    /// Append an (x, y) point to a named series (e.g. loss vs step).
+    pub fn point(&mut self, series: &str, x: f64, y: f64) {
+        self.series.entry(series.to_string()).or_default().push((x, y));
+    }
+
+    pub fn total_seconds(&self, name: &str) -> f64 {
+        self.durations.get(name).map(|(_, d)| d.as_secs_f64()).unwrap_or(0.0)
+    }
+
+    pub fn mean_seconds(&self, name: &str) -> f64 {
+        self.durations
+            .get(name)
+            .map(|(n, d)| if *n > 0 { d.as_secs_f64() / *n as f64 } else { 0.0 })
+            .unwrap_or(0.0)
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn series(&self, name: &str) -> &[(f64, f64)] {
+        self.series.get(name).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    /// Dump everything as JSON (run provenance; consumed by EXPERIMENTS.md
+    /// tooling).
+    pub fn to_json(&self) -> crate::configx::json::Json {
+        use crate::configx::json::Json;
+        let mut obj = BTreeMap::new();
+        let mut dur = BTreeMap::new();
+        for (k, (n, d)) in &self.durations {
+            dur.insert(
+                k.clone(),
+                Json::obj(vec![
+                    ("count", Json::num(*n as f64)),
+                    ("total_s", Json::num(d.as_secs_f64())),
+                ]),
+            );
+        }
+        obj.insert("durations".to_string(), Json::Obj(dur));
+        let mut ctr = BTreeMap::new();
+        for (k, v) in &self.counters {
+            ctr.insert(k.clone(), Json::num(*v as f64));
+        }
+        obj.insert("counters".to_string(), Json::Obj(ctr));
+        let mut ser = BTreeMap::new();
+        for (k, pts) in &self.series {
+            ser.insert(
+                k.clone(),
+                Json::Arr(
+                    pts.iter()
+                        .map(|(x, y)| Json::Arr(vec![Json::num(*x), Json::num(*y)]))
+                        .collect(),
+                ),
+            );
+        }
+        obj.insert("series".to_string(), Json::Obj(ser));
+        Json::Obj(obj)
+    }
+}
+
+/// Render a markdown table: header row + rows. Column widths auto-sized.
+pub fn markdown_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let ncol = headers.len();
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        assert_eq!(row.len(), ncol, "row arity mismatch");
+        for (i, cell) in row.iter().enumerate() {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+        let mut line = String::from("|");
+        for (c, w) in cells.iter().zip(widths) {
+            line.push_str(&format!(" {:<w$} |", c, w = w));
+        }
+        line.push('\n');
+        line
+    };
+    let mut out = String::new();
+    out.push_str(&fmt_row(
+        &headers.iter().map(|s| s.to_string()).collect::<Vec<_>>(),
+        &widths,
+    ));
+    let mut sep = String::from("|");
+    for w in &widths {
+        sep.push_str(&format!("{:-<w$}|", "", w = w + 2));
+    }
+    sep.push('\n');
+    out.push_str(&sep);
+    for row in rows {
+        out.push_str(&fmt_row(row, &widths));
+    }
+    out
+}
+
+/// ASCII bar chart for quick terminal visualisation of a breakdown figure.
+pub fn ascii_bars(items: &[(String, f64)], width: usize) -> String {
+    let max = items.iter().map(|(_, v)| *v).fold(0.0f64, f64::max).max(1e-12);
+    let name_w = items.iter().map(|(n, _)| n.len()).max().unwrap_or(0);
+    let mut out = String::new();
+    for (name, v) in items {
+        let n = ((v / max) * width as f64).round() as usize;
+        out.push_str(&format!("{:<name_w$} |{:<width$}| {:.3}\n", name, "█".repeat(n), v));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn breakdown_totals() {
+        let b = Breakdown {
+            compute_s: 1.0,
+            compress_s: 0.25,
+            decompress_s: 0.25,
+            wire_s: 0.5,
+            optimizer_s: 0.1,
+            other_s: 0.0,
+        };
+        assert!((b.total() - 2.1).abs() < 1e-12);
+        assert!((b.communication() - 1.0).abs() < 1e-12);
+        let d = b.scale(2.0);
+        assert!((d.total() - 4.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn metrics_accumulate() {
+        let mut m = Metrics::new();
+        m.record("step", Duration::from_millis(100));
+        m.record("step", Duration::from_millis(300));
+        m.count("bytes", 42);
+        m.count("bytes", 8);
+        m.point("loss", 1.0, 9.0);
+        assert!((m.total_seconds("step") - 0.4).abs() < 1e-9);
+        assert!((m.mean_seconds("step") - 0.2).abs() < 1e-9);
+        assert_eq!(m.counter("bytes"), 50);
+        assert_eq!(m.series("loss"), &[(1.0, 9.0)]);
+        assert_eq!(m.counter("missing"), 0);
+    }
+
+    #[test]
+    fn metrics_json_parses() {
+        let mut m = Metrics::new();
+        m.record("x", Duration::from_secs(1));
+        m.count("c", 3);
+        m.point("s", 0.0, 1.5);
+        let j = m.to_json();
+        let s = j.pretty();
+        let back = crate::configx::json::Json::parse(&s).unwrap();
+        assert_eq!(back.get("counters").unwrap().get("c").unwrap().as_usize(), Some(3));
+    }
+
+    #[test]
+    fn markdown_table_shape() {
+        let t = markdown_table(
+            &["Algorithm", "Time"],
+            &[
+                vec!["NAG".into(), "148.88 m".into()],
+                vec!["Top-k with EF".into(), "145.00 m".into()],
+            ],
+        );
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].contains("Algorithm"));
+        assert!(lines[1].starts_with("|-"));
+        assert!(lines[3].contains("Top-k"));
+    }
+
+    #[test]
+    fn ascii_bars_render() {
+        let s = ascii_bars(&[("a".into(), 1.0), ("bb".into(), 2.0)], 10);
+        assert!(s.lines().count() == 2);
+        assert!(s.contains("██████████"));
+    }
+}

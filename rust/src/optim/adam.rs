@@ -1,0 +1,84 @@
+//! Adam (Kingma & Ba '15) with decoupled weight decay — baseline for the
+//! adaptive-method comparisons (paper §2.2).
+
+use super::Optimizer;
+
+pub struct Adam {
+    lr: f32,
+    beta1: f32,
+    beta2: f32,
+    eps: f32,
+    weight_decay: f32,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    t: usize,
+}
+
+impl Adam {
+    pub fn new(dim: usize, lr: f32, beta1: f32, beta2: f32, eps: f32, weight_decay: f32) -> Self {
+        Adam { lr, beta1, beta2, eps, weight_decay, m: vec![0.0; dim], v: vec![0.0; dim], t: 0 }
+    }
+}
+
+impl Optimizer for Adam {
+    fn name(&self) -> &'static str {
+        "adam"
+    }
+
+    fn step(&mut self, params: &mut [f32], grad: &[f32]) {
+        assert_eq!(params.len(), self.m.len());
+        assert_eq!(grad.len(), self.m.len());
+        self.t += 1;
+        let bc1 = 1.0 - self.beta1.powi(self.t as i32);
+        let bc2 = 1.0 - self.beta2.powi(self.t as i32);
+        for i in 0..params.len() {
+            let g = grad[i];
+            self.m[i] = self.beta1 * self.m[i] + (1.0 - self.beta1) * g;
+            self.v[i] = self.beta2 * self.v[i] + (1.0 - self.beta2) * g * g;
+            let mhat = self.m[i] / bc1;
+            let vhat = self.v[i] / bc2;
+            params[i] -=
+                self.lr * (mhat / (vhat.sqrt() + self.eps) + self.weight_decay * params[i]);
+        }
+    }
+
+    fn lr(&self) -> f32 {
+        self.lr
+    }
+
+    fn set_lr(&mut self, lr: f32) {
+        self.lr = lr;
+    }
+
+    fn t(&self) -> usize {
+        self.t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::l2_norm;
+
+    #[test]
+    fn converges_on_quadratic() {
+        let dim = 16;
+        let mut opt = Adam::new(dim, 0.05, 0.9, 0.999, 1e-8, 0.0);
+        let mut x = vec![1.0f32; dim];
+        for _ in 0..600 {
+            let g: Vec<f32> = x.iter().map(|x| 2.0 * x).collect();
+            opt.step(&mut x, &g);
+        }
+        assert!(l2_norm(&x) < 1e-2);
+    }
+
+    #[test]
+    fn first_step_is_lr_sized() {
+        // Bias correction makes the first update ≈ lr·sign(g).
+        let mut opt = Adam::new(2, 0.1, 0.9, 0.999, 1e-8, 0.0);
+        let mut x = vec![0.0f32; 2];
+        opt.step(&mut x, &[3.0, -0.001]);
+        assert!((x[0] + 0.1).abs() < 1e-4);
+        assert!((x[1] - 0.1).abs() < 1e-4);
+    }
+}

@@ -1,0 +1,97 @@
+//! Parameter block structure for block-wise (layer-wise) adaptivity.
+//!
+//! LANS/LAMB normalize the update direction per *block* — in practice, per
+//! parameter tensor (Alg. 2 partitions the gradient into B blocks G_b).
+//! Blocks are derived from the artifact manifest's parameter list and
+//! address a single flat f32 buffer.
+
+/// One contiguous block of the flat parameter vector.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Block {
+    pub name: String,
+    pub offset: usize,
+    pub len: usize,
+}
+
+impl Block {
+    pub fn range(&self) -> std::ops::Range<usize> {
+        self.offset..self.offset + self.len
+    }
+}
+
+/// Build a block list from `(name, numel)` pairs laid out back-to-back.
+pub fn from_shapes(shapes: &[(String, usize)]) -> Vec<Block> {
+    let mut out = Vec::with_capacity(shapes.len());
+    let mut offset = 0;
+    for (name, numel) in shapes {
+        out.push(Block { name: name.clone(), offset, len: *numel });
+        offset += numel;
+    }
+    out
+}
+
+/// Total length covered by the blocks (== flat buffer dim).
+pub fn total_len(blocks: &[Block]) -> usize {
+    blocks.iter().map(|b| b.len).sum()
+}
+
+/// One block spanning the whole vector (degenerate case: per-block LANS
+/// becomes globally-normalized LANS).
+pub fn single(dim: usize) -> Vec<Block> {
+    vec![Block { name: "all".into(), offset: 0, len: dim }]
+}
+
+/// Validate that blocks tile `[0, dim)` exactly, in order, without overlap.
+pub fn validate(blocks: &[Block], dim: usize) -> Result<(), String> {
+    let mut expect = 0usize;
+    for b in blocks {
+        if b.offset != expect {
+            return Err(format!("block '{}' starts at {} expected {}", b.name, b.offset, expect));
+        }
+        if b.len == 0 {
+            return Err(format!("block '{}' is empty", b.name));
+        }
+        expect += b.len;
+    }
+    if expect != dim {
+        return Err(format!("blocks cover {expect} elements, buffer has {dim}"));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layout_is_contiguous() {
+        let blocks = from_shapes(&[
+            ("embed".into(), 100),
+            ("w1".into(), 50),
+            ("b1".into(), 10),
+        ]);
+        assert_eq!(blocks[1].offset, 100);
+        assert_eq!(blocks[2].range(), 150..160);
+        assert_eq!(total_len(&blocks), 160);
+        validate(&blocks, 160).unwrap();
+    }
+
+    #[test]
+    fn validate_catches_gaps_and_overlap() {
+        let mut blocks = from_shapes(&[("a".into(), 10), ("b".into(), 10)]);
+        blocks[1].offset = 11;
+        assert!(validate(&blocks, 20).is_err());
+        blocks[1].offset = 9;
+        assert!(validate(&blocks, 20).is_err());
+        let blocks = from_shapes(&[("a".into(), 10)]);
+        assert!(validate(&blocks, 11).is_err());
+        assert!(validate(&[], 0).is_ok());
+    }
+
+    #[test]
+    fn single_block_covers_all() {
+        let b = single(42);
+        validate(&b, 42).unwrap();
+        assert_eq!(b[0].name, "all");
+    }
+}

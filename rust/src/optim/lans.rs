@@ -1,0 +1,273 @@
+//! LANS (Zheng et al. '20) — Algorithm 2 of the paper, block-wise.
+//!
+//! Per block `b` at step `t` with aggregated gradient `g̃`:
+//!
+//! ```text
+//! m   = β₁ m + (1−β₁) g̃                 v = β₂ v + (1−β₂) g̃²
+//! m̂   = m / (1−β₁ᵗ)                      v̂ = v / (1−β₂ᵗ)
+//! r   = m̂ / (√v̂ + ε)                     c = g̃ / (√v̂ + ε)
+//! d   = φ(‖x_b‖)[ β₁ (r+λx)/‖r+λx‖ + (1−β₁)(c+λx)/‖c+λx‖ ]
+//! x   ← x − η d
+//! ```
+//!
+//! `φ(z) = clamp(z, φ_lo, φ_hi)` satisfies Assumption 4
+//! (0 < α_l ≤ φ ≤ α_u). CLAN (Alg. 5) is exactly this update applied to a
+//! compressed-aggregated gradient; there is deliberately no separate CLAN
+//! update code to keep the "same convergence as full precision" claim
+//! structural. The same math runs as the L1 Pallas kernel
+//! (`python/compile/kernels/fused_lans.py`) and both are cross-checked.
+
+use super::blocks::Block;
+use super::Optimizer;
+use crate::util::clamp;
+
+#[derive(Clone, Debug)]
+pub struct LansParams {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    /// Weight decay λ.
+    pub weight_decay: f32,
+    /// φ clamp bounds (Assumption 4).
+    pub phi_lo: f32,
+    pub phi_hi: f32,
+}
+
+impl Default for LansParams {
+    fn default() -> Self {
+        LansParams {
+            lr: 1e-3,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-6,
+            weight_decay: 0.01,
+            phi_lo: 0.01,
+            phi_hi: 10.0,
+        }
+    }
+}
+
+impl LansParams {
+    pub fn from_cfg(cfg: &crate::configx::OptimizerConfig) -> Self {
+        LansParams {
+            lr: cfg.lr as f32,
+            beta1: cfg.beta1 as f32,
+            beta2: cfg.beta2 as f32,
+            eps: cfg.eps as f32,
+            weight_decay: cfg.weight_decay as f32,
+            phi_lo: cfg.phi_lo as f32,
+            phi_hi: cfg.phi_hi as f32,
+        }
+    }
+}
+
+pub struct Lans {
+    pub params: LansParams,
+    blocks: Vec<Block>,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    t: usize,
+}
+
+impl Lans {
+    pub fn new(blocks: Vec<Block>, dim: usize, params: LansParams) -> Self {
+        super::blocks::validate(&blocks, dim).expect("invalid block structure");
+        Lans { params, blocks, m: vec![0.0; dim], v: vec![0.0; dim], t: 0 }
+    }
+
+    pub fn blocks(&self) -> &[Block] {
+        &self.blocks
+    }
+
+    /// First/second moment state (exposed for the Pallas parity test).
+    pub fn state(&self) -> (&[f32], &[f32]) {
+        (&self.m, &self.v)
+    }
+
+    fn step_block(&mut self, b: usize, x: &mut [f32], g: &[f32]) {
+        let p = &self.params;
+        let range = self.blocks[b].range();
+        let (lo, hi) = (range.start, range.end);
+        let bc1 = 1.0 - p.beta1.powi(self.t as i32);
+        let bc2 = 1.0 - p.beta2.powi(self.t as i32);
+
+        // Moment update + ratio terms, single pass.
+        let mut x_norm2 = 0.0f64;
+        let mut r_norm2 = 0.0f64;
+        let mut c_norm2 = 0.0f64;
+        // r_buf/c_buf hold (r + λx) and (c + λx); sized per block.
+        let mut r_buf = vec![0.0f32; hi - lo];
+        let mut c_buf = vec![0.0f32; hi - lo];
+        for (j, i) in (lo..hi).enumerate() {
+            let gi = g[i];
+            let mi = p.beta1 * self.m[i] + (1.0 - p.beta1) * gi;
+            let vi = p.beta2 * self.v[i] + (1.0 - p.beta2) * gi * gi;
+            self.m[i] = mi;
+            self.v[i] = vi;
+            let mhat = mi / bc1;
+            let vhat = vi / bc2;
+            let denom = vhat.sqrt() + p.eps;
+            let xi = x[i];
+            let r = mhat / denom + p.weight_decay * xi;
+            let c = gi / denom + p.weight_decay * xi;
+            r_buf[j] = r;
+            c_buf[j] = c;
+            x_norm2 += (xi as f64) * (xi as f64);
+            r_norm2 += (r as f64) * (r as f64);
+            c_norm2 += (c as f64) * (c as f64);
+        }
+        let phi = clamp((x_norm2.sqrt()) as f32, p.phi_lo, p.phi_hi);
+        let r_scale = if r_norm2 > 0.0 { p.beta1 * phi / (r_norm2.sqrt() as f32) } else { 0.0 };
+        let c_scale =
+            if c_norm2 > 0.0 { (1.0 - p.beta1) * phi / (c_norm2.sqrt() as f32) } else { 0.0 };
+        for (j, i) in (lo..hi).enumerate() {
+            x[i] -= p.lr * (r_scale * r_buf[j] + c_scale * c_buf[j]);
+        }
+    }
+}
+
+impl Optimizer for Lans {
+    fn name(&self) -> &'static str {
+        "lans"
+    }
+
+    fn step(&mut self, params: &mut [f32], grad: &[f32]) {
+        assert_eq!(params.len(), self.m.len());
+        assert_eq!(grad.len(), self.m.len());
+        self.t += 1;
+        for b in 0..self.blocks.len() {
+            self.step_block(b, params, grad);
+        }
+    }
+
+    fn lr(&self) -> f32 {
+        self.params.lr
+    }
+
+    fn set_lr(&mut self, lr: f32) {
+        self.params.lr = lr;
+    }
+
+    fn t(&self) -> usize {
+        self.t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::blocks;
+    use crate::util::l2_norm;
+
+    fn quad_grad(x: &[f32], a: &[f32], b: &[f32]) -> Vec<f32> {
+        // f(x) = 0.5 Σ a_i x_i² − b_i x_i  =>  ∇f = a·x − b
+        x.iter().zip(a.iter().zip(b)).map(|(x, (a, b))| a * x - b).collect()
+    }
+
+    #[test]
+    fn converges_on_quadratic() {
+        let dim = 32;
+        let a: Vec<f32> = (0..dim).map(|i| 1.0 + (i % 5) as f32).collect();
+        let b: Vec<f32> = (0..dim).map(|i| ((i as f32) * 0.7).sin()).collect();
+        let blocks = blocks::from_shapes(&[("w0".into(), 16), ("w1".into(), 16)]);
+        let mut opt = Lans::new(blocks, dim, LansParams { lr: 0.05, ..Default::default() });
+        let mut x = vec![0.5f32; dim];
+        for t in 0..800 {
+            // LANS takes normalized steps, so a constant lr orbits the
+            // optimum at radius ~η·φ; decay the lr to land on it.
+            opt.set_lr(0.05 * 0.995f32.powi(t));
+            let g = quad_grad(&x, &a, &b);
+            opt.step(&mut x, &g);
+        }
+        let g = quad_grad(&x, &a, &b);
+        assert!(l2_norm(&g) < 0.05, "final grad norm {}", l2_norm(&g));
+    }
+
+    #[test]
+    fn update_norm_bounded_by_phi_and_lr() {
+        // ||Δx_b|| <= η φ(||x_b||) — equation (2) in the appendix.
+        let dim = 64;
+        let p = LansParams { lr: 0.1, phi_hi: 2.0, ..Default::default() };
+        let mut opt = Lans::new(blocks::single(dim), dim, p.clone());
+        let mut x: Vec<f32> = (0..dim).map(|i| ((i as f32) * 0.3).cos()).collect();
+        let x0 = x.clone();
+        let g: Vec<f32> = (0..dim).map(|i| ((i as f32) * 1.1).sin() * 3.0).collect();
+        opt.step(&mut x, &g);
+        let delta: Vec<f32> = x.iter().zip(&x0).map(|(a, b)| a - b).collect();
+        let bound = p.lr * p.phi_hi + 1e-6;
+        assert!(l2_norm(&delta) <= bound, "||Δx||={} bound={}", l2_norm(&delta), bound);
+    }
+
+    #[test]
+    fn zero_gradient_moves_only_by_weight_decay() {
+        let dim = 8;
+        let mut opt = Lans::new(
+            blocks::single(dim),
+            dim,
+            LansParams { weight_decay: 0.0, ..Default::default() },
+        );
+        let mut x = vec![1.0f32; dim];
+        let x0 = x.clone();
+        opt.step(&mut x, &vec![0.0; dim]);
+        // g=0, wd=0 => m=v=0 => r=c=0 => no movement.
+        assert_eq!(x, x0);
+    }
+
+    #[test]
+    fn block_updates_are_independent() {
+        // Changing the gradient of block 2 must not affect block 1's update.
+        let dim = 20;
+        let blks = blocks::from_shapes(&[("a".into(), 10), ("b".into(), 10)]);
+        let p = LansParams::default();
+        let g1: Vec<f32> = (0..dim).map(|i| (i as f32 * 0.37).sin()).collect();
+        let mut g2 = g1.clone();
+        for v in &mut g2[10..] {
+            *v *= -3.0;
+        }
+        let x_init: Vec<f32> = (0..dim).map(|i| 0.1 * i as f32).collect();
+
+        let mut o1 = Lans::new(blks.clone(), dim, p.clone());
+        let mut x1 = x_init.clone();
+        o1.step(&mut x1, &g1);
+
+        let mut o2 = Lans::new(blks, dim, p);
+        let mut x2 = x_init.clone();
+        o2.step(&mut x2, &g2);
+
+        assert_eq!(&x1[..10], &x2[..10]);
+        assert_ne!(&x1[10..], &x2[10..]);
+    }
+
+    #[test]
+    fn bias_correction_active_on_first_step() {
+        // After one step from m=v=0: m̂ = g, v̂ = g², so r = sign-ish g/(|g|+ε).
+        let dim = 4;
+        let mut opt = Lans::new(
+            blocks::single(dim),
+            dim,
+            LansParams { weight_decay: 0.0, lr: 1.0, phi_lo: 1.0, phi_hi: 1.0, ..Default::default() },
+        );
+        let mut x = vec![0.0f32; dim];
+        let g = vec![0.5f32, -0.5, 0.25, -0.25];
+        opt.step(&mut x, &g);
+        // With φ≡1 and unit bias-corrected ratios, both r and c equal
+        // g/(|g|+ε) ≈ sign(g), so d ≈ sign(g)/||sign(g)|| = sign(g)/2.
+        for i in 0..dim {
+            assert!(
+                (x[i] + 0.5 * g[i].signum()).abs() < 1e-3,
+                "x[{i}]={} g={}",
+                x[i],
+                g[i]
+            );
+        }
+    }
+
+    #[test]
+    fn lr_setter_takes_effect() {
+        let dim = 4;
+        let mut opt = Lans::new(blocks::single(dim), dim, LansParams::default());
+        opt.set_lr(0.5);
+        assert_eq!(opt.lr(), 0.5);
+    }
+}

@@ -1,0 +1,70 @@
+//! Plain (heavy-ball) SGD — the simplest baseline, used by the convergence
+//! benches and for error-feedback theory sanity checks.
+
+use super::Optimizer;
+
+pub struct Sgd {
+    lr: f32,
+    momentum: f32,
+    weight_decay: f32,
+    u: Vec<f32>,
+    t: usize,
+}
+
+impl Sgd {
+    pub fn new(dim: usize, lr: f32, momentum: f32, weight_decay: f32) -> Self {
+        Sgd { lr, momentum, weight_decay, u: vec![0.0; dim], t: 0 }
+    }
+}
+
+impl Optimizer for Sgd {
+    fn name(&self) -> &'static str {
+        "sgd"
+    }
+
+    fn step(&mut self, params: &mut [f32], grad: &[f32]) {
+        assert_eq!(params.len(), self.u.len());
+        self.t += 1;
+        for i in 0..params.len() {
+            let g = grad[i] + self.weight_decay * params[i];
+            self.u[i] = self.momentum * self.u[i] + g;
+            params[i] -= self.lr * self.u[i];
+        }
+    }
+
+    fn lr(&self) -> f32 {
+        self.lr
+    }
+
+    fn set_lr(&mut self, lr: f32) {
+        self.lr = lr;
+    }
+
+    fn t(&self) -> usize {
+        self.t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_momentum_is_plain_gd() {
+        let mut opt = Sgd::new(2, 0.5, 0.0, 0.0);
+        let mut x = vec![1.0f32, 2.0];
+        opt.step(&mut x, &[1.0, 1.0]);
+        assert_eq!(x, vec![0.5, 1.5]);
+    }
+
+    #[test]
+    fn converges_on_quadratic() {
+        let mut opt = Sgd::new(4, 0.1, 0.9, 0.0);
+        let mut x = vec![1.0f32; 4];
+        for _ in 0..300 {
+            let g: Vec<f32> = x.iter().map(|x| *x).collect();
+            opt.step(&mut x, &g);
+        }
+        assert!(crate::util::l2_norm(&x) < 1e-3);
+    }
+}

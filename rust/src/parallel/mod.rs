@@ -1,0 +1,311 @@
+//! In-tree parallelism substrate (paper §4.2.1 "Parallel CPU Compressors").
+//!
+//! Two kinds of parallelism, mirroring the paper:
+//!
+//! * **inter-task** — a persistent [`ThreadPool`] runs many independent
+//!   compression / decompression jobs concurrently (the paper launches
+//!   "dozens of compression and decompression jobs" on CPU threads);
+//! * **intra-task** — [`parallel_for_chunks`] splits one large tensor
+//!   across threads (the paper uses OpenMP+SIMD inside a job).
+//!
+//! `rayon` is unavailable offline, so both are built on `std::thread`.
+//! The pool degrades gracefully to inline execution when built with one
+//! thread — that is exactly the "compression w/o optimization" row of the
+//! Table 6 ablation.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Tracks outstanding jobs so callers can block until the pool drains.
+struct Pending {
+    count: Mutex<usize>,
+    cv: Condvar,
+}
+
+/// A fixed-size persistent thread pool.
+pub struct ThreadPool {
+    tx: Option<Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+    pending: Arc<Pending>,
+    threads: usize,
+}
+
+impl ThreadPool {
+    /// Create a pool with `threads` workers. `threads == 0` is promoted
+    /// to 1. With `threads == 1` the pool still has one real worker (jobs
+    /// are asynchronous but serialized), matching a single compression
+    /// stream.
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let pending = Arc::new(Pending { count: Mutex::new(0), cv: Condvar::new() });
+        let mut workers = Vec::with_capacity(threads);
+        for i in 0..threads {
+            let rx: Arc<Mutex<Receiver<Job>>> = Arc::clone(&rx);
+            let pending = Arc::clone(&pending);
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("bytepsc-pool-{i}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let rx = rx.lock().unwrap();
+                            rx.recv()
+                        };
+                        match job {
+                            Ok(job) => {
+                                job();
+                                let mut c = pending.count.lock().unwrap();
+                                *c -= 1;
+                                if *c == 0 {
+                                    pending.cv.notify_all();
+                                }
+                            }
+                            Err(_) => break, // pool dropped
+                        }
+                    })
+                    .expect("spawn pool worker"),
+            );
+        }
+        ThreadPool { tx: Some(tx), workers, pending, threads }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Submit an owned job (inter-task parallelism).
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        {
+            let mut c = self.pending.count.lock().unwrap();
+            *c += 1;
+        }
+        self.tx
+            .as_ref()
+            .expect("pool alive")
+            .send(Box::new(f))
+            .expect("pool worker alive");
+    }
+
+    /// Block until every submitted job has completed.
+    pub fn wait(&self) {
+        let mut c = self.pending.count.lock().unwrap();
+        while *c > 0 {
+            c = self.pending.cv.wait(c).unwrap();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.wait();
+        drop(self.tx.take()); // disconnect => workers exit
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Minimum chunk size for intra-task splitting: below this the spawn
+/// overhead dominates any parallel gain (measured; see EXPERIMENTS.md §Perf).
+pub const MIN_CHUNK: usize = 64 * 1024;
+
+/// Split `data` into at most `threads` contiguous chunks and run `f` on each
+/// chunk concurrently (scoped threads; no allocation of jobs). `f` receives
+/// `(chunk_start_offset, chunk)` so callers can index auxiliary state.
+pub fn parallel_for_chunks<T, F>(threads: usize, data: &mut [T], f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let n = data.len();
+    let threads = effective_threads(threads, n);
+    if threads <= 1 {
+        f(0, data);
+        return;
+    }
+    let chunk = n.div_ceil(threads);
+    std::thread::scope(|s| {
+        let mut rest = data;
+        let mut off = 0;
+        let mut handles = Vec::with_capacity(threads);
+        while !rest.is_empty() {
+            let take = chunk.min(rest.len());
+            let (head, tail) = rest.split_at_mut(take);
+            let fr = &f;
+            handles.push(s.spawn(move || fr(off, head)));
+            off += take;
+            rest = tail;
+        }
+        for h in handles {
+            h.join().expect("parallel_for_chunks worker panicked");
+        }
+    });
+}
+
+/// Read-only variant: map each chunk to a value, collecting in order.
+pub fn parallel_map_chunks<T, R, F>(threads: usize, data: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &[T]) -> R + Sync,
+{
+    let n = data.len();
+    let threads = effective_threads(threads, n);
+    if threads <= 1 {
+        return vec![f(0, data)];
+    }
+    let chunk = n.div_ceil(threads);
+    std::thread::scope(|s| {
+        let mut handles = Vec::with_capacity(threads);
+        let mut off = 0;
+        while off < n {
+            let end = (off + chunk).min(n);
+            let slice = &data[off..end];
+            let fr = &f;
+            let o = off;
+            handles.push(s.spawn(move || fr(o, slice)));
+            off = end;
+        }
+        handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
+    })
+}
+
+/// How many threads are worth using for `n` elements.
+fn effective_threads(requested: usize, n: usize) -> usize {
+    if requested <= 1 || n < 2 * MIN_CHUNK {
+        1
+    } else {
+        requested.min(n.div_ceil(MIN_CHUNK)).max(1)
+    }
+}
+
+/// A cheap atomic work-stealing index for dynamic scheduling across a set
+/// of heterogeneous tasks (used by the server to balance per-tensor work,
+/// paper §4.2.4).
+pub struct WorkQueue {
+    next: AtomicUsize,
+    total: usize,
+}
+
+impl WorkQueue {
+    pub fn new(total: usize) -> Self {
+        WorkQueue { next: AtomicUsize::new(0), total }
+    }
+
+    /// Claim the next task index, or None when exhausted.
+    pub fn claim(&self) -> Option<usize> {
+        let i = self.next.fetch_add(1, Ordering::Relaxed);
+        if i < self.total {
+            Some(i)
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn pool_wait_is_reusable() {
+        let pool = ThreadPool::new(2);
+        let counter = Arc::new(AtomicU64::new(0));
+        for round in 1..=3u64 {
+            for _ in 0..10 {
+                let c = Arc::clone(&counter);
+                pool.execute(move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+            pool.wait();
+            assert_eq!(counter.load(Ordering::SeqCst), round * 10);
+        }
+    }
+
+    #[test]
+    fn single_thread_pool_serializes() {
+        let pool = ThreadPool::new(1);
+        let log = Arc::new(Mutex::new(Vec::new()));
+        for i in 0..20 {
+            let log = Arc::clone(&log);
+            pool.execute(move || log.lock().unwrap().push(i));
+        }
+        pool.wait();
+        let log = log.lock().unwrap();
+        assert_eq!(*log, (0..20).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn chunked_for_covers_every_element() {
+        let mut data = vec![0i32; 1_000_000];
+        parallel_for_chunks(4, &mut data, |off, chunk| {
+            for (i, v) in chunk.iter_mut().enumerate() {
+                *v = (off + i) as i32;
+            }
+        });
+        for (i, v) in data.iter().enumerate() {
+            assert_eq!(*v, i as i32);
+        }
+    }
+
+    #[test]
+    fn chunked_for_small_input_runs_inline() {
+        let mut data = vec![1u8; 100];
+        parallel_for_chunks(8, &mut data, |_, chunk| {
+            for v in chunk {
+                *v += 1;
+            }
+        });
+        assert!(data.iter().all(|&v| v == 2));
+    }
+
+    #[test]
+    fn map_chunks_partial_sums() {
+        let data: Vec<f64> = (0..500_000).map(|i| i as f64).collect();
+        let partials = parallel_map_chunks(4, &data, |_, c| c.iter().sum::<f64>());
+        let total: f64 = partials.iter().sum();
+        let n = data.len() as f64;
+        assert_eq!(total, n * (n - 1.0) / 2.0);
+    }
+
+    #[test]
+    fn work_queue_claims_each_once() {
+        let q = Arc::new(WorkQueue::new(1000));
+        let seen = Arc::new(Mutex::new(vec![false; 1000]));
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let q = Arc::clone(&q);
+                let seen = Arc::clone(&seen);
+                s.spawn(move || {
+                    while let Some(i) = q.claim() {
+                        let mut seen = seen.lock().unwrap();
+                        assert!(!seen[i], "index {i} claimed twice");
+                        seen[i] = true;
+                    }
+                });
+            }
+        });
+        assert!(seen.lock().unwrap().iter().all(|&b| b));
+    }
+}

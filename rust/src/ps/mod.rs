@@ -1,0 +1,509 @@
+//! Parameter server (paper §4.1.2): key-sharded gradient aggregation with
+//! two-way compression and server-side error feedback.
+//!
+//! One [`Server`] owns a shard of the keyspace. Per key and iteration it
+//! collects one compressed push per worker, decompresses and averages them
+//! (`Δ_t = 1/n Σ δ_t,i [+ ẽ_t]`), re-compresses the aggregate (`p_t =
+//! C(Δ_t)`, the second "way"), and answers the workers' pulls. Exactly
+//! Algorithm 3/4's server side; Algorithm 1 falls out with the identity
+//! compressor.
+//!
+//! Shard assignment across multiple servers lives in [`ShardPlan`] and
+//! implements the paper's workload balancing (§4.2.4): keys that undergo
+//! compression carry extra CPU cost, so they are weighted heavier than
+//! bypassed (small) keys when balancing.
+
+use crate::comm::{Endpoint, Key, Message};
+use crate::compress::ef::EfState;
+use crate::compress::{Compressor, Ctx};
+use crate::configx::SyncMode;
+use crate::util::rng::Xoshiro256;
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+/// Server behaviour knobs.
+#[derive(Clone)]
+pub struct ServerOptions {
+    pub comp: Arc<dyn Compressor>,
+    pub sync: SyncMode,
+    /// Fused EF residual update (§4.2.2).
+    pub fused: bool,
+    pub n_workers: usize,
+    /// Intra-task threads for (de)compression (§4.2.1).
+    pub intra_threads: usize,
+    pub seed: u64,
+}
+
+struct KeyState {
+    iter: u64,
+    acc: Vec<f32>,
+    count: usize,
+    ready: Option<crate::compress::Compressed>,
+    /// The previous iteration's aggregate. BSP lets a fast worker *push*
+    /// iteration i+1 (which rolls this key over) before a slow worker has
+    /// *pulled* iteration i — the slow pull must still be servable.
+    /// Workers never lag more than one iteration (they pull i before
+    /// pushing i+1), so one slot suffices.
+    prev: Option<(u64, crate::compress::Compressed)>,
+    /// Queued pulls as (iter, worker).
+    pending: Vec<(u64, u32)>,
+}
+
+/// Statistics returned on shutdown.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct ServerStats {
+    pub pushes: u64,
+    pub pulls: u64,
+    pub decompress_s: f64,
+    pub compress_s: f64,
+}
+
+/// The server's synchronous core: feed it messages, collect replies.
+/// Separated from the I/O loop so tests can drive it deterministically.
+pub struct ServerCore {
+    opts: ServerOptions,
+    ef: EfState,
+    rng: Xoshiro256,
+    keys: HashMap<Key, KeyState>,
+    pub stats: ServerStats,
+}
+
+impl ServerCore {
+    pub fn new(opts: ServerOptions) -> Self {
+        let rng = Xoshiro256::seed_from_u64(opts.seed);
+        ServerCore { ef: EfState::new(opts.fused), rng, keys: HashMap::new(), stats: ServerStats::default(), opts }
+    }
+
+    /// Handle one message; returns (worker, reply) pairs to send.
+    pub fn handle(&mut self, from: u32, msg: Message) -> Vec<(u32, Message)> {
+        match msg {
+            Message::Push { key, iter, worker, data } => {
+                debug_assert_eq!(from, worker);
+                let st = self.keys.entry(key).or_insert_with(|| KeyState {
+                    iter,
+                    acc: vec![0.0; data.n],
+                    count: 0,
+                    ready: None,
+                    prev: None,
+                    pending: Vec::new(),
+                });
+                if st.iter != iter {
+                    // New iteration for this key: retire the completed
+                    // aggregate (slow workers may still pull it) and reset
+                    // the accumulator.
+                    assert!(
+                        st.count == 0 || st.count == self.opts.n_workers,
+                        "key {key}: iteration {iter} started before {} finished",
+                        st.iter
+                    );
+                    if let Some(p) = st.ready.take() {
+                        st.prev = Some((st.iter, p));
+                    }
+                    st.iter = iter;
+                    st.count = 0;
+                    st.acc.clear();
+                    st.acc.resize(data.n, 0.0);
+                }
+                let t = std::time::Instant::now();
+                self.opts.comp.add_decompressed(&data, &mut st.acc);
+                self.stats.decompress_s += t.elapsed().as_secs_f64();
+                st.count += 1;
+                self.stats.pushes += 1;
+                let mut replies = vec![(worker, Message::Ack { key, iter })];
+                if st.count == self.opts.n_workers {
+                    // Aggregate complete: average + second-way compression.
+                    let inv = 1.0 / self.opts.n_workers as f32;
+                    for a in &mut st.acc {
+                        *a *= inv;
+                    }
+                    let t = std::time::Instant::now();
+                    let acc = std::mem::take(&mut st.acc);
+                    let p = match self.opts.sync {
+                        SyncMode::CompressedEf => self.ef.compress_owned(
+                            key,
+                            acc,
+                            self.opts.comp.as_ref(),
+                            &mut Ctx::with_threads(&mut self.rng, self.opts.intra_threads),
+                        ),
+                        _ => self.opts.comp.compress(
+                            &acc,
+                            &mut Ctx::with_threads(&mut self.rng, self.opts.intra_threads),
+                        ),
+                    };
+                    self.stats.compress_s += t.elapsed().as_secs_f64();
+                    st.ready = Some(p.clone());
+                    let served: Vec<(u64, u32)> = std::mem::take(&mut st.pending);
+                    for (piter, w) in served {
+                        if piter == iter {
+                            replies.push((w, Message::PullResp { key, iter, data: p.clone() }));
+                        } else {
+                            st.pending.push((piter, w)); // still waiting
+                        }
+                    }
+                }
+                replies
+            }
+            Message::Pull { key, iter, worker } => {
+                self.stats.pulls += 1;
+                let st = self.keys.get_mut(&key).expect("pull before any push");
+                if st.iter == iter {
+                    if let Some(p) = &st.ready {
+                        return vec![(worker, Message::PullResp { key, iter, data: p.clone() })];
+                    }
+                } else if let Some((piter, p)) = &st.prev {
+                    // A pull lagging one iteration behind a fast pusher.
+                    if *piter == iter {
+                        return vec![(worker, Message::PullResp { key, iter, data: p.clone() })];
+                    }
+                }
+                assert!(
+                    st.iter <= iter,
+                    "key {key}: pull for iteration {iter} older than the retired slot (now {})",
+                    st.iter
+                );
+                st.pending.push((iter, worker));
+                vec![]
+            }
+            Message::Shutdown => vec![],
+            other => panic!("server got unexpected message {other:?}"),
+        }
+    }
+}
+
+/// A running server thread serving a set of worker endpoints.
+pub struct Server {
+    handle: Option<JoinHandle<ServerStats>>,
+}
+
+impl Server {
+    /// Spawn the I/O loop: a receiver thread per worker endpoint feeding
+    /// the single aggregator (the paper's servers are single-threaded per
+    /// shard too; parallelism comes from having many servers/shards).
+    pub fn spawn<E: Endpoint + Sync + 'static>(opts: ServerOptions, endpoints: Vec<E>) -> Server {
+        let n = endpoints.len();
+        let handle = std::thread::Builder::new()
+            .name("bytepsc-server".into())
+            .spawn(move || {
+                let endpoints: Vec<Arc<E>> = endpoints.into_iter().map(Arc::new).collect();
+                let (tx, rx) = std::sync::mpsc::channel::<(u32, Message)>();
+                let mut recv_threads = Vec::new();
+                for (i, ep) in endpoints.iter().enumerate() {
+                    let ep = Arc::clone(ep);
+                    let tx = tx.clone();
+                    recv_threads.push(std::thread::spawn(move || loop {
+                        match ep.recv() {
+                            Ok(Message::Shutdown) | Err(_) => {
+                                let _ = tx.send((i as u32, Message::Shutdown));
+                                break;
+                            }
+                            Ok(m) => {
+                                if tx.send((i as u32, m)).is_err() {
+                                    break;
+                                }
+                            }
+                        }
+                    }));
+                }
+                drop(tx);
+                let mut core = ServerCore::new(opts);
+                let mut live = n;
+                while live > 0 {
+                    let Ok((from, msg)) = rx.recv() else { break };
+                    if matches!(msg, Message::Shutdown) {
+                        live -= 1;
+                        continue;
+                    }
+                    for (to, reply) in core.handle(from, msg) {
+                        // A dropped worker is a shutdown in progress.
+                        let _ = endpoints[to as usize].send(reply);
+                    }
+                }
+                for t in recv_threads {
+                    let _ = t.join();
+                }
+                core.stats
+            })
+            .expect("spawn server");
+        Server { handle: Some(handle) }
+    }
+
+    /// Wait for the server to drain (workers must send Shutdown first).
+    pub fn join(mut self) -> ServerStats {
+        self.handle.take().unwrap().join().expect("server panicked")
+    }
+}
+
+/// Key → server assignment with workload balancing (§4.2.4).
+#[derive(Clone, Debug)]
+pub struct ShardPlan {
+    pub assignment: Vec<usize>,
+}
+
+impl ShardPlan {
+    /// Greedy least-loaded assignment. `cost(key)` should reflect server
+    /// CPU work: compressed keys cost `numel × compress_factor`, bypassed
+    /// keys just `numel` (decompress-free memcpy aggregation).
+    pub fn balanced(costs: &[f64], servers: usize) -> ShardPlan {
+        assert!(servers >= 1);
+        let mut order: Vec<usize> = (0..costs.len()).collect();
+        order.sort_by(|a, b| costs[*b].partial_cmp(&costs[*a]).unwrap());
+        let mut load = vec![0.0f64; servers];
+        let mut assignment = vec![0usize; costs.len()];
+        for k in order {
+            let s = (0..servers).min_by(|a, b| load[*a].partial_cmp(&load[*b]).unwrap()).unwrap();
+            assignment[k] = s;
+            load[s] += costs[k];
+        }
+        ShardPlan { assignment }
+    }
+
+    /// Naive round-robin (the ablation's "no workload balance" arm).
+    pub fn round_robin(keys: usize, servers: usize) -> ShardPlan {
+        ShardPlan { assignment: (0..keys).map(|k| k % servers).collect() }
+    }
+
+    pub fn server_of(&self, key: Key) -> usize {
+        self.assignment[key as usize]
+    }
+
+    /// Max/mean load ratio under `costs` (1.0 = perfectly balanced).
+    pub fn imbalance(&self, costs: &[f64]) -> f64 {
+        let servers = self.assignment.iter().max().map(|m| m + 1).unwrap_or(1);
+        let mut load = vec![0.0f64; servers];
+        for (k, &s) in self.assignment.iter().enumerate() {
+            load[s] += costs[k];
+        }
+        let max = load.iter().cloned().fold(0.0f64, f64::max);
+        let mean = load.iter().sum::<f64>() / servers as f64;
+        if mean == 0.0 {
+            1.0
+        } else {
+            max / mean
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::by_name;
+
+    fn opts(scheme: &str, sync: SyncMode, workers: usize) -> ServerOptions {
+        ServerOptions {
+            comp: by_name(scheme, 0.25).unwrap(),
+            sync,
+            fused: true,
+            n_workers: workers,
+            intra_threads: 1,
+            seed: 7,
+        }
+    }
+
+    fn push(core: &mut ServerCore, key: Key, iter: u64, worker: u32, g: &[f32]) -> Vec<(u32, Message)> {
+        let mut rng = Xoshiro256::seed_from_u64(worker as u64 + 100);
+        let data = core.opts.comp.compress(g, &mut Ctx::new(&mut rng));
+        core.handle(worker, Message::Push { key, iter, worker, data })
+    }
+
+    #[test]
+    fn aggregates_identity_to_exact_mean() {
+        let mut core = ServerCore::new(opts("identity", SyncMode::Full, 2));
+        let r1 = push(&mut core, 0, 0, 0, &[1.0, 2.0]);
+        assert_eq!(r1.len(), 1); // just the ack
+        let r2 = push(&mut core, 0, 0, 1, &[3.0, 6.0]);
+        assert_eq!(r2.len(), 1);
+        // Now pull
+        let r = core.handle(0, Message::Pull { key: 0, iter: 0, worker: 0 });
+        let Message::PullResp { data, .. } = &r[0].1 else { panic!() };
+        let mut out = vec![0.0f32; 2];
+        core.opts.comp.decompress(data, &mut out);
+        assert_eq!(out, vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn pull_before_complete_is_queued() {
+        let mut core = ServerCore::new(opts("identity", SyncMode::Full, 2));
+        push(&mut core, 5, 0, 0, &[1.0]);
+        let r = core.handle(1, Message::Pull { key: 5, iter: 0, worker: 1 });
+        assert!(r.is_empty()); // queued
+        let r = push(&mut core, 5, 0, 1, &[3.0]);
+        // ack + the queued pull's response
+        assert_eq!(r.len(), 2);
+        assert!(matches!(r[1].1, Message::PullResp { .. }));
+        assert_eq!(r[1].0, 1);
+    }
+
+    #[test]
+    fn iterations_reset_accumulator() {
+        let mut core = ServerCore::new(opts("identity", SyncMode::Full, 1));
+        push(&mut core, 0, 0, 0, &[10.0]);
+        push(&mut core, 0, 1, 0, &[2.0]);
+        let r = core.handle(0, Message::Pull { key: 0, iter: 1, worker: 0 });
+        let Message::PullResp { data, .. } = &r[0].1 else { panic!() };
+        let mut out = vec![0.0f32; 1];
+        core.opts.comp.decompress(data, &mut out);
+        assert_eq!(out, vec![2.0]); // not 12.0
+    }
+
+    #[test]
+    fn server_ef_residual_accumulates_under_topk() {
+        // Two workers with different dominant coordinates: the server's
+        // second-way top-k can keep only one of them per round; ẽ must
+        // carry the other forward and flush it on a later round
+        // (Alg. 4's server side). Uses dim=8 so topk(0.25) keeps 2 of 8 —
+        // workers' spikes at idx 0 and idx 1, aggregate keeps both unless
+        // the residual game forces deferral; use k=1 via dim=4.
+        let mut core = ServerCore::new(opts("topk", SyncMode::CompressedEf, 2));
+        let ga = vec![1.0f32, 0.0, 0.0, 0.0]; // worker 0's spike
+        let gb = vec![0.0f32, 0.9, 0.0, 0.0]; // worker 1's spike
+        let mut seen_idx1 = false;
+        for iter in 0..10u64 {
+            push(&mut core, 0, iter, 0, &ga);
+            push(&mut core, 0, iter, 1, &gb);
+            let r = core.handle(0, Message::Pull { key: 0, iter, worker: 0 });
+            let Message::PullResp { data, .. } = &r[0].1 else { panic!() };
+            let mut p = vec![0.0f32; 4];
+            core.opts.comp.decompress(data, &mut p);
+            if iter == 0 {
+                // Round 0: Δ = [0.5, 0.45, 0, 0]; top-1 keeps idx 0 only.
+                assert_eq!(p, vec![0.5, 0.0, 0.0, 0.0]);
+            }
+            if p[1] > 0.0 {
+                seen_idx1 = true;
+            }
+        }
+        // Round 1: Δ = [0.5, 0.45 + 0.45(ẽ), 0, 0] → idx 1 wins and flushes.
+        assert!(seen_idx1, "server EF never flushed the deferred coordinate");
+    }
+
+    /// Regression (deadlock found in CI): a fast worker may push iteration
+    /// i+1 — rolling the key over — before a slow worker pulls iteration i.
+    /// The retired aggregate must still be servable.
+    #[test]
+    fn late_pull_after_rollover_is_served() {
+        let mut core = ServerCore::new(opts("identity", SyncMode::Full, 2));
+        push(&mut core, 0, 0, 0, &[2.0]);
+        push(&mut core, 0, 0, 1, &[4.0]); // iter 0 completes: mean = 3.0
+        // Fast worker 0 pulls iter 0 and immediately pushes iter 1.
+        let r = core.handle(0, Message::Pull { key: 0, iter: 0, worker: 0 });
+        assert!(matches!(r[0].1, Message::PullResp { .. }));
+        push(&mut core, 0, 1, 0, &[10.0]);
+        // Slow worker 1 now pulls iter 0 — must be served from the retired
+        // slot, not panic or hang.
+        let r = core.handle(1, Message::Pull { key: 0, iter: 0, worker: 1 });
+        assert_eq!(r.len(), 1);
+        let Message::PullResp { iter, data, .. } = &r[0].1 else { panic!() };
+        assert_eq!(*iter, 0);
+        let mut out = vec![0.0f32; 1];
+        core.opts.comp.decompress(data, &mut out);
+        assert_eq!(out, vec![3.0]);
+        // And worker 1 proceeding to iter 1 still works.
+        push(&mut core, 0, 1, 1, &[20.0]);
+        let r = core.handle(1, Message::Pull { key: 0, iter: 1, worker: 1 });
+        let Message::PullResp { data, .. } = &r[0].1 else { panic!() };
+        let mut out = vec![0.0f32; 1];
+        core.opts.comp.decompress(data, &mut out);
+        assert_eq!(out, vec![15.0]);
+    }
+
+    /// A pull that arrives before its iteration completes, while a previous
+    /// iteration is retired, must queue (not be served stale data).
+    #[test]
+    fn pending_pull_for_future_iter_waits() {
+        let mut core = ServerCore::new(opts("identity", SyncMode::Full, 2));
+        push(&mut core, 0, 0, 0, &[1.0]);
+        push(&mut core, 0, 0, 1, &[3.0]);
+        let _ = core.handle(0, Message::Pull { key: 0, iter: 0, worker: 0 });
+        push(&mut core, 0, 1, 0, &[5.0]);
+        // worker 0 pulls iter 1 before worker 1 pushed it: queued.
+        let r = core.handle(0, Message::Pull { key: 0, iter: 1, worker: 0 });
+        assert!(r.is_empty());
+        // worker 1 completes iter 1: the queued pull is answered with iter-1
+        // data (not the retired iter-0 aggregate).
+        let r = push(&mut core, 0, 1, 1, &[7.0]);
+        let resp = r.iter().find(|(w, m)| *w == 0 && matches!(m, Message::PullResp { .. }));
+        let Some((_, Message::PullResp { iter, data, .. })) = resp else { panic!("no resp") };
+        assert_eq!(*iter, 1);
+        let mut out = vec![0.0f32; 1];
+        core.opts.comp.decompress(data, &mut out);
+        assert_eq!(out, vec![6.0]);
+    }
+
+    #[test]
+    fn threaded_server_roundtrip_over_inproc() {
+        let workers = 3;
+        let dim = 64;
+        let mut worker_eps = Vec::new();
+        let mut server_eps = Vec::new();
+        for _ in 0..workers {
+            let (w, s) = crate::comm::inproc::pair();
+            worker_eps.push(w);
+            server_eps.push(s);
+        }
+        let server = Server::spawn(opts("identity", SyncMode::Full, workers), server_eps);
+        let handles: Vec<_> = worker_eps
+            .into_iter()
+            .enumerate()
+            .map(|(w, ep)| {
+                std::thread::spawn(move || {
+                    let comp = by_name("identity", 0.0).unwrap();
+                    let mut rng = Xoshiro256::seed_from_u64(w as u64);
+                    let g: Vec<f32> = (0..dim).map(|i| (w * dim + i) as f32).collect();
+                    for iter in 0..5u64 {
+                        let data = comp.compress(&g, &mut Ctx::new(&mut rng));
+                        ep.send(Message::Push { key: 0, iter, worker: w as u32, data }).unwrap();
+                        // ack may arrive before or after we pull; consume both.
+                        ep.send(Message::Pull { key: 0, iter, worker: w as u32 }).unwrap();
+                        let mut got_resp = None;
+                        while got_resp.is_none() {
+                            match ep.recv().unwrap() {
+                                Message::Ack { .. } => {}
+                                Message::PullResp { data, .. } => got_resp = Some(data),
+                                m => panic!("unexpected {m:?}"),
+                            }
+                        }
+                        let mut out = vec![0.0f32; dim];
+                        comp.decompress(&got_resp.unwrap(), &mut out);
+                        // mean over workers of (w*dim + i)
+                        for (i, v) in out.iter().enumerate() {
+                            let expect = (0..workers).map(|ww| (ww * dim + i) as f32).sum::<f32>()
+                                / workers as f32;
+                            assert!((v - expect).abs() < 1e-4);
+                        }
+                    }
+                    ep.send(Message::Shutdown).unwrap();
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let stats = server.join();
+        assert_eq!(stats.pushes, 15);
+    }
+
+    #[test]
+    fn shard_plan_balances_better_than_round_robin() {
+        // One huge tensor + many small ones (a transformer's shape).
+        let mut costs = vec![1000.0];
+        costs.extend(std::iter::repeat(10.0).take(40));
+        let bal = ShardPlan::balanced(&costs, 4);
+        let rr = ShardPlan::round_robin(costs.len(), 4);
+        assert!(bal.imbalance(&costs) <= rr.imbalance(&costs));
+        // balanced puts the huge tensor alone-ish: its server gets few others
+        let big_server = bal.server_of(0);
+        let others = bal.assignment.iter().skip(1).filter(|&&s| s == big_server).count();
+        assert!(others <= 5, "{others} small tensors share the big server");
+    }
+
+    #[test]
+    fn shard_plan_covers_all_servers() {
+        let costs = vec![1.0; 16];
+        let plan = ShardPlan::balanced(&costs, 4);
+        for s in 0..4 {
+            assert!(plan.assignment.iter().any(|&x| x == s));
+        }
+        assert!((plan.imbalance(&costs) - 1.0).abs() < 1e-9);
+    }
+}

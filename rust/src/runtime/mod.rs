@@ -1,0 +1,286 @@
+//! PJRT runtime: load the AOT artifacts (`artifacts/*.hlo.txt`) and execute
+//! them from the rust hot path.
+//!
+//! Pipeline per artifact (see /opt/xla-example/load_hlo):
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `PjRtClient::compile` → `execute`. All executables are compiled once at
+//! startup and reused every step; Python never runs at training time.
+
+use crate::configx::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One model's manifest entry (see `python/compile/aot.py`).
+#[derive(Clone, Debug)]
+pub struct ModelEntry {
+    pub name: String,
+    pub train_hlo: String,
+    pub eval_hlo: String,
+    pub init_params: String,
+    /// (name, shape, numel) in flat-layout order.
+    pub params: Vec<(String, Vec<usize>, usize)>,
+    /// (name, shape, dtype) of batch inputs appended after the params.
+    pub batch_inputs: Vec<(String, Vec<usize>, String)>,
+    pub train_outputs: usize,
+    pub eval_outputs: usize,
+    pub total_params: usize,
+    pub vocab: usize,
+    pub seq: usize,
+    pub batch: usize,
+    pub num_classes: usize,
+}
+
+/// A standalone kernel artifact entry.
+#[derive(Clone, Debug)]
+pub struct KernelEntry {
+    pub hlo: String,
+    pub n: usize,
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: BTreeMap<String, ModelEntry>,
+    pub kernels: BTreeMap<String, KernelEntry>,
+}
+
+fn shape_of(j: &Json) -> Vec<usize> {
+    j.as_arr()
+        .map(|a| a.iter().filter_map(Json::as_usize).collect())
+        .unwrap_or_default()
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let src = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {} (run `make artifacts`)", path.display()))?;
+        let j = Json::parse(&src).map_err(|e| anyhow!("parse manifest: {e}"))?;
+        let mut models = BTreeMap::new();
+        for (name, m) in j.req("models").map_err(|e| anyhow!("{e}"))?.as_obj().unwrap() {
+            let cfg = m.get("config").cloned().unwrap_or(Json::Obj(Default::default()));
+            let get_usize = |v: &Json, k: &str| v.get(k).and_then(Json::as_usize).unwrap_or(0);
+            models.insert(
+                name.clone(),
+                ModelEntry {
+                    name: name.clone(),
+                    train_hlo: m.get("train_hlo").and_then(Json::as_str).unwrap_or("").into(),
+                    eval_hlo: m.get("eval_hlo").and_then(Json::as_str).unwrap_or("").into(),
+                    init_params: m.get("init_params").and_then(Json::as_str).unwrap_or("").into(),
+                    params: m
+                        .get("params")
+                        .and_then(Json::as_arr)
+                        .map(|a| {
+                            a.iter()
+                                .map(|p| {
+                                    (
+                                        p.get("name").and_then(Json::as_str).unwrap_or("").to_string(),
+                                        shape_of(p.get("shape").unwrap_or(&Json::Null)),
+                                        p.get("numel").and_then(Json::as_usize).unwrap_or(0),
+                                    )
+                                })
+                                .collect()
+                        })
+                        .unwrap_or_default(),
+                    batch_inputs: m
+                        .get("batch_inputs")
+                        .and_then(Json::as_arr)
+                        .map(|a| {
+                            a.iter()
+                                .map(|p| {
+                                    (
+                                        p.get("name").and_then(Json::as_str).unwrap_or("").to_string(),
+                                        shape_of(p.get("shape").unwrap_or(&Json::Null)),
+                                        p.get("dtype").and_then(Json::as_str).unwrap_or("f32").to_string(),
+                                    )
+                                })
+                                .collect()
+                        })
+                        .unwrap_or_default(),
+                    train_outputs: get_usize(m, "train_outputs"),
+                    eval_outputs: get_usize(m, "eval_outputs"),
+                    total_params: get_usize(m, "total_params"),
+                    vocab: get_usize(&cfg, "vocab"),
+                    seq: get_usize(&cfg, "seq"),
+                    batch: get_usize(&cfg, "batch"),
+                    num_classes: get_usize(&cfg, "num_classes"),
+                },
+            );
+        }
+        let mut kernels = BTreeMap::new();
+        if let Some(ks) = j.get("kernels").and_then(Json::as_obj) {
+            for (name, k) in ks {
+                kernels.insert(
+                    name.clone(),
+                    KernelEntry {
+                        hlo: k.get("hlo").and_then(Json::as_str).unwrap_or("").into(),
+                        n: k.get("n").and_then(Json::as_usize).unwrap_or(0),
+                    },
+                );
+            }
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), models, kernels })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelEntry> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow!("model '{name}' not in manifest (have: {:?})", self.models.keys()))
+    }
+
+    /// Load the initial-parameter blob as one flat f32 vector.
+    pub fn load_init_params(&self, entry: &ModelEntry) -> Result<Vec<f32>> {
+        let path = self.dir.join(&entry.init_params);
+        let bytes = std::fs::read(&path).with_context(|| format!("read {}", path.display()))?;
+        if bytes.len() != 4 * entry.total_params {
+            bail!("init blob {} has {} bytes, expected {}", path.display(), bytes.len(), 4 * entry.total_params);
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+            .collect())
+    }
+
+    /// LANS block structure: one block per parameter tensor.
+    pub fn blocks(&self, entry: &ModelEntry) -> Vec<crate::optim::blocks::Block> {
+        crate::optim::blocks::from_shapes(
+            &entry.params.iter().map(|(n, _, numel)| (n.clone(), *numel)).collect::<Vec<_>>(),
+        )
+    }
+}
+
+/// The PJRT CPU client + executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+/// One compiled artifact.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        Ok(Runtime { client: xla::PjRtClient::cpu()? })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact.
+    pub fn load_hlo(&self, path: &Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compile {}", path.display()))?;
+        Ok(Executable { exe })
+    }
+}
+
+impl Executable {
+    /// Execute with literal inputs; unwraps the top-level tuple
+    /// (aot.py lowers with `return_tuple=True`).
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self.exe.execute::<xla::Literal>(inputs)?;
+        let lit = result[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+}
+
+/// Build the literal inputs for a train/eval step: per-tensor f32 views of
+/// the flat parameter vector, followed by the batch literals.
+pub fn param_literals(entry: &ModelEntry, flat: &[f32]) -> Result<Vec<xla::Literal>> {
+    assert_eq!(flat.len(), entry.total_params);
+    let mut out = Vec::with_capacity(entry.params.len());
+    let mut off = 0usize;
+    for (_, shape, numel) in &entry.params {
+        let lit = xla::Literal::vec1(&flat[off..off + numel]);
+        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        out.push(if dims.len() == 1 { lit } else { lit.reshape(&dims)? });
+        off += numel;
+    }
+    Ok(out)
+}
+
+/// An i32 batch tensor literal.
+pub fn i32_literal(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(data);
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(if dims.len() == 1 { lit } else { lit.reshape(&dims)? })
+}
+
+/// An f32 batch tensor literal.
+pub fn f32_literal(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(data);
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(if dims.len() == 1 { lit } else { lit.reshape(&dims)? })
+}
+
+/// Flatten `(loss, *grads)` train-step outputs into (loss, flat_grad).
+pub fn collect_grads(entry: &ModelEntry, outputs: &[xla::Literal]) -> Result<(f32, Vec<f32>)> {
+    if outputs.len() != entry.train_outputs {
+        bail!("expected {} outputs, got {}", entry.train_outputs, outputs.len());
+    }
+    let loss = outputs[0].to_vec::<f32>()?[0];
+    let mut flat = Vec::with_capacity(entry.total_params);
+    for (lit, (name, _, numel)) in outputs[1..].iter().zip(&entry.params) {
+        let v = lit.to_vec::<f32>()?;
+        if v.len() != *numel {
+            bail!("grad '{name}' has {} elems, expected {numel}", v.len());
+        }
+        flat.extend_from_slice(&v);
+    }
+    Ok((loss, flat))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parse_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("bytepsc-manifest-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"version":1,"kernels":{"lans_update":{"hlo":"k.hlo.txt","n":1024}},
+                "models":{"m":{"train_hlo":"t.hlo.txt","eval_hlo":"e.hlo.txt",
+                "init_params":"i.bin","train_outputs":3,"eval_outputs":1,
+                "total_params":12,
+                "config":{"vocab":8,"seq":4,"batch":2,"num_classes":0},
+                "params":[{"name":"a","shape":[2,3],"numel":6},
+                          {"name":"b","shape":[6],"numel":6}],
+                "batch_inputs":[{"name":"tokens","shape":[2,4],"dtype":"i32"}]}}}"#,
+        )
+        .unwrap();
+        // init blob: 12 f32
+        let blob: Vec<u8> = (0..12).flat_map(|i| (i as f32).to_le_bytes()).collect();
+        std::fs::write(dir.join("i.bin"), &blob).unwrap();
+
+        let m = Manifest::load(&dir).unwrap();
+        let e = m.model("m").unwrap();
+        assert_eq!(e.params.len(), 2);
+        assert_eq!(e.params[0].1, vec![2, 3]);
+        assert_eq!(e.vocab, 8);
+        assert_eq!(m.kernels["lans_update"].n, 1024);
+        let init = m.load_init_params(e).unwrap();
+        assert_eq!(init.len(), 12);
+        assert_eq!(init[5], 5.0);
+        let blocks = m.blocks(e);
+        assert_eq!(blocks.len(), 2);
+        crate::optim::blocks::validate(&blocks, 12).unwrap();
+        assert!(m.model("nope").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_manifest_is_helpful_error() {
+        let err = Manifest::load(Path::new("/nonexistent-dir-xyz")).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

@@ -1,0 +1,190 @@
+//! In-tree property-testing mini-framework (proptest is unavailable
+//! offline). Deterministic: every case derives from a root seed, and a
+//! failure message reports the case index + seed so it can be replayed.
+
+use crate::util::rng::Xoshiro256;
+
+/// Per-case value generator.
+pub struct Gen {
+    rng: Xoshiro256,
+    case_seed: u64,
+}
+
+impl Gen {
+    fn new(case_seed: u64) -> Self {
+        Gen { rng: Xoshiro256::seed_from_u64(case_seed), case_seed }
+    }
+
+    /// The seed identifying this case (for deriving auxiliary RNGs that
+    /// must be stable per case).
+    pub fn seed(&self) -> u64 {
+        self.case_seed
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    /// Uniform usize in `[lo, hi]` (inclusive).
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        lo + self.rng.below((hi - lo + 1) as u64) as usize
+    }
+
+    /// Uniform f64 in `[lo, hi)`.
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.rng.next_f64()
+    }
+
+    /// Uniform f32 in `[-amp, amp)`.
+    pub fn f32_amp(&mut self, amp: f32) -> f32 {
+        self.rng.range_f32(-amp, amp)
+    }
+
+    /// Vector of `n` uniform f32 in `[-amp, amp)`, with occasional special
+    /// structure mixed in (all-zero, single-spike, constant) to hit edge
+    /// cases a plain uniform sampler would rarely produce.
+    pub fn f32_vec(&mut self, n: usize, amp: f32) -> Vec<f32> {
+        match self.rng.below(10) {
+            0 => vec![0.0; n],
+            1 => {
+                let mut v = vec![0.0f32; n];
+                if n > 0 {
+                    let i = self.rng.below(n as u64) as usize;
+                    v[i] = self.f32_amp(amp);
+                }
+                v
+            }
+            2 => vec![self.f32_amp(amp); n],
+            _ => (0..n).map(|_| self.f32_amp(amp)).collect(),
+        }
+    }
+
+    /// Vector of iid N(0, sigma²) samples.
+    pub fn normal_vec(&mut self, n: usize, sigma: f32) -> Vec<f32> {
+        let mut v = vec![0.0f32; n];
+        self.rng.fill_normal(&mut v, sigma);
+        v
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.rng.below(items.len() as u64) as usize]
+    }
+}
+
+/// Run `prop` on `cases` generated inputs. Panics with the case index and
+/// seed on the first failure.
+pub fn forall<F>(cases: usize, root_seed: u64, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    let mut seeder = Xoshiro256::seed_from_u64(root_seed);
+    for case in 0..cases {
+        let case_seed = seeder.next_u64();
+        let mut g = Gen::new(case_seed);
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property failed on case {case}/{cases} (case_seed={case_seed:#x}, \
+                 root_seed={root_seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Assert two f32 slices are element-wise close.
+pub fn assert_allclose(a: &[f32], b: &[f32], atol: f32, rtol: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for i in 0..a.len() {
+        let tol = atol + rtol * b[i].abs();
+        assert!(
+            (a[i] - b[i]).abs() <= tol,
+            "{what}: mismatch at {i}: {} vs {} (tol {tol})",
+            a[i],
+            b[i]
+        );
+    }
+}
+
+/// Relative L2 distance ‖a−b‖/max(‖b‖, eps) — scalar summary for
+/// loss-curve and gradient comparisons.
+pub fn rel_l2(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for (x, y) in a.iter().zip(b) {
+        num += ((x - y) as f64).powi(2);
+        den += (*y as f64).powi(2);
+    }
+    (num / den.max(1e-30)).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_runs_every_case() {
+        let counter = std::cell::Cell::new(0usize);
+        forall(37, 1, |_| {
+            counter.set(counter.get() + 1);
+            Ok(())
+        });
+        assert_eq!(counter.get(), 37);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn forall_reports_failures() {
+        forall(10, 2, |g| {
+            if g.usize_in(0, 9) < 10 {
+                Err("always fails".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn gen_is_deterministic_per_seed() {
+        let mut collected = Vec::new();
+        forall(5, 99, |g| {
+            collected.push(g.u64());
+            Ok(())
+        });
+        let mut second = Vec::new();
+        forall(5, 99, |g| {
+            second.push(g.u64());
+            Ok(())
+        });
+        assert_eq!(collected, second);
+    }
+
+    #[test]
+    fn usize_in_is_inclusive() {
+        forall(200, 3, |g| {
+            let v = g.usize_in(5, 7);
+            if (5..=7).contains(&v) {
+                Ok(())
+            } else {
+                Err(format!("{v} out of [5,7]"))
+            }
+        });
+    }
+
+    #[test]
+    fn rel_l2_zero_for_equal() {
+        let a = vec![1.0f32, -2.0, 3.0];
+        assert_eq!(rel_l2(&a, &a), 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "mismatch at 1")]
+    fn allclose_catches_mismatch() {
+        assert_allclose(&[1.0, 2.0], &[1.0, 2.1], 1e-3, 1e-3, "t");
+    }
+}

@@ -1,0 +1,191 @@
+//! IEEE-754 binary16 (and bfloat16) conversion, bit-exact, in-tree.
+//!
+//! The FP16 compressor (paper §4.1.1: intra-node conversion and the
+//! "NAG (FP16)" baseline) needs f32↔f16 with round-to-nearest-even.
+//! `half` is unavailable offline, so the conversion is implemented here
+//! with the standard bit manipulation.
+
+/// Convert f32 to IEEE binary16 bits with round-to-nearest-even.
+/// Overflow saturates to ±inf; subnormals are produced where required.
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let mant = bits & 0x007F_FFFF;
+
+    if exp == 0xFF {
+        // Inf / NaN
+        return if mant == 0 {
+            sign | 0x7C00
+        } else {
+            sign | 0x7E00 // quiet NaN
+        };
+    }
+
+    // Re-bias: f32 exp bias 127, f16 bias 15.
+    let unbiased = exp - 127;
+    if unbiased > 15 {
+        return sign | 0x7C00; // overflow -> inf
+    }
+    if unbiased >= -14 {
+        // Normal f16. 10-bit mantissa; round to nearest even on bit 13.
+        let mut m = mant >> 13;
+        let rest = mant & 0x1FFF;
+        if rest > 0x1000 || (rest == 0x1000 && (m & 1) == 1) {
+            m += 1;
+        }
+        let mut e = (unbiased + 15) as u32;
+        if m == 0x400 {
+            // Mantissa rounding overflowed into the exponent.
+            m = 0;
+            e += 1;
+            if e >= 31 {
+                return sign | 0x7C00;
+            }
+        }
+        return sign | ((e as u16) << 10) | (m as u16);
+    }
+    if unbiased >= -25 {
+        // Subnormal f16 (−25 covers values that round up into the smallest
+        // subnormal, e.g. 0.9999·2^-24).
+        let full = mant | 0x0080_0000; // implicit leading 1
+        let shift = (-14 - unbiased) as u32 + 13;
+        let m = full >> shift;
+        let rest = full & ((1u32 << shift) - 1);
+        let half = 1u32 << (shift - 1);
+        let m = if rest > half || (rest == half && (m & 1) == 1) {
+            m + 1
+        } else {
+            m
+        };
+        return sign | (m as u16);
+    }
+    sign // underflow -> signed zero
+}
+
+/// Convert IEEE binary16 bits to f32 (exact).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let mant = (h & 0x03FF) as u32;
+    let bits = match (exp, mant) {
+        (0, 0) => sign,
+        (0, m) => {
+            // Subnormal: normalize.
+            let lead = m.leading_zeros() - 21; // zeros within the 10-bit field
+            let m = (m << (lead + 1)) & 0x03FF;
+            let e = 127 - 15 - lead;
+            sign | (e << 23) | (m << 13)
+        }
+        (0x1F, 0) => sign | 0x7F80_0000,
+        (0x1F, m) => sign | 0x7F80_0000 | (m << 13),
+        (e, m) => sign | ((e + 127 - 15) << 23) | (m << 13),
+    };
+    f32::from_bits(bits)
+}
+
+/// Round-trip f32 through f16 (the FP16 compressor's value transform).
+#[inline]
+pub fn f16_round(x: f32) -> f32 {
+    f16_bits_to_f32(f32_to_f16_bits(x))
+}
+
+/// Convert f32 to bfloat16 bits with round-to-nearest-even.
+pub fn f32_to_bf16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        return ((bits >> 16) as u16) | 0x0040; // keep sign, force quiet
+    }
+    let round_bit = 0x0000_8000u32;
+    let lsb = (bits >> 16) & 1;
+    let rest = bits & 0x0000_FFFF;
+    let mut hi = (bits >> 16) as u16;
+    if rest > round_bit || (rest == round_bit && lsb == 1) {
+        hi = hi.wrapping_add(1);
+    }
+    hi
+}
+
+/// Convert bfloat16 bits to f32 (exact).
+#[inline]
+pub fn bf16_bits_to_f32(h: u16) -> f32 {
+    f32::from_bits((h as u32) << 16)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_values() {
+        // Values exactly representable in f16 must round-trip bit-exact.
+        for &v in &[0.0f32, -0.0, 1.0, -1.0, 0.5, 2.0, 65504.0, -65504.0, 0.25] {
+            assert_eq!(f16_round(v), v, "v={v}");
+        }
+        assert_eq!(f32_to_f16_bits(1.0), 0x3C00);
+        assert_eq!(f32_to_f16_bits(-2.0), 0xC000);
+        assert_eq!(f16_bits_to_f32(0x7C00), f32::INFINITY);
+        assert_eq!(f16_bits_to_f32(0xFC00), f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn overflow_saturates_to_inf() {
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(1e6)), f32::INFINITY);
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(-1e6)), f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn nan_stays_nan() {
+        assert!(f16_bits_to_f32(f32_to_f16_bits(f32::NAN)).is_nan());
+    }
+
+    #[test]
+    fn subnormals() {
+        let tiny = 5.96e-8f32; // smallest positive f16 subnormal ~5.96e-8
+        let rt = f16_round(tiny);
+        assert!(rt > 0.0 && (rt - tiny).abs() / tiny < 0.5);
+        // Deep underflow flushes to zero with preserved sign.
+        assert_eq!(f16_round(1e-10), 0.0);
+        assert_eq!(f16_round(-1e-10).to_bits(), (-0.0f32).to_bits());
+    }
+
+    #[test]
+    fn relative_error_bound_for_normals() {
+        // f16 has 11 bits of significand => rel err <= 2^-11 for normals.
+        let mut state = 123u64;
+        for _ in 0..10_000 {
+            let r = crate::util::rng::splitmix64(&mut state);
+            let v = ((r as f64 / u64::MAX as f64) * 2.0 - 1.0) as f32 * 100.0;
+            if v.abs() < 6.2e-5 {
+                continue; // skip subnormal range
+            }
+            let rt = f16_round(v);
+            let rel = ((rt - v) / v).abs();
+            assert!(rel <= 1.0 / 2048.0 + 1e-7, "v={v} rt={rt} rel={rel}");
+        }
+    }
+
+    #[test]
+    fn round_to_nearest_even() {
+        // 1 + 2^-11 is exactly halfway between 1.0 and 1+2^-10:
+        // must round to even mantissa (1.0).
+        let halfway = 1.0 + 2f32.powi(-11);
+        assert_eq!(f16_round(halfway), 1.0);
+        // 1 + 3*2^-11 is halfway between 1+2^-10 and 1+2^-9: rounds up to even.
+        let halfway2 = 1.0 + 3.0 * 2f32.powi(-11);
+        assert_eq!(f16_round(halfway2), 1.0 + 2.0 * 2f32.powi(-10));
+    }
+
+    #[test]
+    fn bf16_roundtrip() {
+        for &v in &[0.0f32, 1.0, -1.0, 3.140625, 1e30, -1e-30] {
+            let rt = bf16_bits_to_f32(f32_to_bf16_bits(v));
+            if v == 0.0 {
+                assert_eq!(rt, 0.0);
+            } else {
+                assert!(((rt - v) / v).abs() <= 1.0 / 256.0, "v={v} rt={rt}");
+            }
+        }
+        assert!(bf16_bits_to_f32(f32_to_bf16_bits(f32::NAN)).is_nan());
+    }
+}

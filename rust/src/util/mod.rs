@@ -1,0 +1,78 @@
+//! Small self-contained utilities shared across the stack.
+//!
+//! Everything here is dependency-free by design: the offline build only
+//! carries the `xla` crate's closure, so the PRNG, half-precision
+//! conversion, and stats helpers that would normally come from `rand`,
+//! `half`, and friends live in-tree.
+
+pub mod f16;
+pub mod rng;
+pub mod stats;
+pub mod timer;
+
+/// Clamp `v` into `[lo, hi]`.
+#[inline]
+pub fn clamp(v: f32, lo: f32, hi: f32) -> f32 {
+    v.max(lo).min(hi)
+}
+
+/// L2 norm of a slice.
+#[inline]
+pub fn l2_norm(x: &[f32]) -> f32 {
+    x.iter().map(|v| (*v as f64) * (*v as f64)).sum::<f64>().sqrt() as f32
+}
+
+/// L1 norm of a slice.
+#[inline]
+pub fn l1_norm(x: &[f32]) -> f32 {
+    x.iter().map(|v| v.abs() as f64).sum::<f64>() as f32
+}
+
+/// Maximum absolute value of a slice (0.0 for empty input).
+#[inline]
+pub fn max_abs(x: &[f32]) -> f32 {
+    x.iter().fold(0.0f32, |m, v| m.max(v.abs()))
+}
+
+/// Human-readable byte count, e.g. `528.0 MiB`.
+pub fn human_bytes(n: usize) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u + 1 < UNITS.len() {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{} {}", n, UNITS[0])
+    } else {
+        format!("{:.1} {}", v, UNITS[u])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn norms() {
+        assert_eq!(l2_norm(&[3.0, 4.0]), 5.0);
+        assert_eq!(l1_norm(&[-3.0, 4.0]), 7.0);
+        assert_eq!(max_abs(&[-3.0, 2.0]), 3.0);
+        assert_eq!(max_abs(&[]), 0.0);
+    }
+
+    #[test]
+    fn clamp_basic() {
+        assert_eq!(clamp(5.0, 0.0, 1.0), 1.0);
+        assert_eq!(clamp(-5.0, 0.0, 1.0), 0.0);
+        assert_eq!(clamp(0.5, 0.0, 1.0), 0.5);
+    }
+
+    #[test]
+    fn bytes_formatting() {
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(2048), "2.0 KiB");
+        assert_eq!(human_bytes(528 * 1024 * 1024), "528.0 MiB");
+    }
+}

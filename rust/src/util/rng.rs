@@ -1,0 +1,232 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! The `rand` crate is unavailable offline, so this module provides a
+//! xoshiro256** generator (Blackman & Vigna) seeded through SplitMix64 —
+//! the same construction `rand_xoshiro` uses. Every stochastic component
+//! in the system (random-k sampling, dithering, synthetic data, property
+//! tests) draws from this so runs are reproducible from a single seed.
+
+/// SplitMix64 step — used for seeding and as a cheap standalone generator.
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// xoshiro256** PRNG. Fast, high-quality, 256-bit state.
+#[derive(Clone, Debug)]
+pub struct Xoshiro256 {
+    s: [u64; 4],
+}
+
+impl Xoshiro256 {
+    /// Seed via SplitMix64 expansion, like `rand_xoshiro`.
+    pub fn seed_from_u64(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Xoshiro256 { s }
+    }
+
+    /// Next raw 64-bit output.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in `[0, 1)` with 53 bits of precision.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in `[0, 1)` as f32.
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform integer in `[0, n)` (n > 0), Lemire's method.
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (n as u128);
+        let mut l = m as u64;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128) * (n as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform in `[lo, hi)`.
+    #[inline]
+    pub fn range_f32(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.next_f32()
+    }
+
+    /// Standard normal sample (Box–Muller; one value per call, unpaired).
+    pub fn normal(&mut self) -> f32 {
+        let u1 = self.next_f64().max(1e-300);
+        let u2 = self.next_f64();
+        ((-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()) as f32
+    }
+
+    /// Fill `out` with iid N(0, sigma^2) samples.
+    pub fn fill_normal(&mut self, out: &mut [f32], sigma: f32) {
+        for v in out.iter_mut() {
+            *v = self.normal() * sigma;
+        }
+    }
+
+    /// Sample `k` distinct indices from `[0, n)` (Floyd's algorithm, then
+    /// sorted for cache-friendly consumption). Requires `k <= n`.
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<u32> {
+        assert!(k <= n, "sample_indices: k={} > n={}", k, n);
+        // Floyd's: for j in n-k..n, pick t in [0, j]; insert t or j.
+        let mut set = std::collections::HashSet::with_capacity(k * 2);
+        let mut out = Vec::with_capacity(k);
+        for j in (n - k)..n {
+            let t = self.below(j as u64 + 1) as u32;
+            if set.insert(t) {
+                out.push(t);
+            } else {
+                set.insert(j as u32);
+                out.push(j as u32);
+            }
+        }
+        out.sort_unstable();
+        out
+    }
+
+    /// Split into an independent stream (jump-free construction: reseed
+    /// from the current stream; adequate for workload generation).
+    pub fn fork(&mut self) -> Xoshiro256 {
+        Xoshiro256::seed_from_u64(self.next_u64())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Xoshiro256::seed_from_u64(42);
+        let mut b = Xoshiro256::seed_from_u64(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn uniform_unit_interval() {
+        let mut r = Xoshiro256::seed_from_u64(1);
+        let mut sum = 0.0;
+        const N: usize = 20_000;
+        for _ in 0..N {
+            let v = r.next_f32();
+            assert!((0.0..1.0).contains(&v));
+            sum += v as f64;
+        }
+        let mean = sum / N as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn below_is_in_range_and_roughly_uniform() {
+        let mut r = Xoshiro256::seed_from_u64(2);
+        let mut counts = [0usize; 7];
+        for _ in 0..70_000 {
+            counts[r.below(7) as usize] += 1;
+        }
+        for &c in &counts {
+            assert!((8_000..12_000).contains(&c), "counts={counts:?}");
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Xoshiro256::seed_from_u64(3);
+        const N: usize = 50_000;
+        let (mut s1, mut s2) = (0.0f64, 0.0f64);
+        for _ in 0..N {
+            let v = r.normal() as f64;
+            s1 += v;
+            s2 += v * v;
+        }
+        let mean = s1 / N as f64;
+        let var = s2 / N as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn sample_indices_distinct_sorted() {
+        let mut r = Xoshiro256::seed_from_u64(4);
+        for &(n, k) in &[(10usize, 10usize), (100, 7), (1000, 100), (5, 0)] {
+            let idx = r.sample_indices(n, k);
+            assert_eq!(idx.len(), k);
+            for w in idx.windows(2) {
+                assert!(w[0] < w[1], "not strictly sorted: {idx:?}");
+            }
+            for &i in &idx {
+                assert!((i as usize) < n);
+            }
+        }
+    }
+
+    #[test]
+    fn sample_indices_is_uniform_ish() {
+        // Each index should appear with probability k/n.
+        let mut r = Xoshiro256::seed_from_u64(5);
+        let (n, k, trials) = (20usize, 5usize, 20_000usize);
+        let mut counts = vec![0usize; n];
+        for _ in 0..trials {
+            for i in r.sample_indices(n, k) {
+                counts[i as usize] += 1;
+            }
+        }
+        let expect = trials * k / n; // 5000
+        for &c in &counts {
+            assert!(
+                (c as f64 - expect as f64).abs() < expect as f64 * 0.1,
+                "counts={counts:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn forks_are_decorrelated() {
+        let mut a = Xoshiro256::seed_from_u64(42);
+        let mut b = a.fork();
+        let matches = (0..1000).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(matches, 0);
+    }
+}

@@ -1,0 +1,157 @@
+//! Wall-clock timing helpers for the custom benchmark harness (criterion is
+//! unavailable offline; `cargo bench` runs `harness = false` binaries built
+//! on these primitives).
+
+use std::time::{Duration, Instant};
+
+/// A simple stopwatch.
+#[derive(Debug)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e3
+    }
+
+    pub fn restart(&mut self) -> Duration {
+        let e = self.start.elapsed();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// Benchmark result: per-iteration timing summary.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub std_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+}
+
+impl BenchResult {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+
+    /// Throughput in items/s given items processed per iteration.
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / (self.mean_ns / 1e9)
+    }
+}
+
+impl std::fmt::Display for BenchResult {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<40} {:>10.3} ms/iter (±{:.3}, min {:.3}, max {:.3}, n={})",
+            self.name,
+            self.mean_ns / 1e6,
+            self.std_ns / 1e6,
+            self.min_ns / 1e6,
+            self.max_ns / 1e6,
+            self.iters
+        )
+    }
+}
+
+/// Run `f` for `warmup` + `iters` iterations and collect timing stats.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_nanos() as f64);
+    }
+    let mut s = crate::util::stats::Summary::new();
+    for &x in &samples {
+        s.add(x);
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_ns: s.mean(),
+        std_ns: s.std(),
+        min_ns: s.min(),
+        max_ns: s.max(),
+    }
+}
+
+/// Run `f` repeatedly until `budget` elapses (at least once), returning stats.
+pub fn bench_for<F: FnMut()>(name: &str, budget: Duration, mut f: F) -> BenchResult {
+    // One calibration call, also serves as warmup.
+    let t = Instant::now();
+    f();
+    let first = t.elapsed();
+    let mut samples = vec![first.as_nanos() as f64];
+    let deadline = Instant::now() + budget;
+    while Instant::now() < deadline {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_nanos() as f64);
+        if samples.len() > 10_000 {
+            break;
+        }
+    }
+    let mut s = crate::util::stats::Summary::new();
+    for &x in &samples {
+        s.add(x);
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters: samples.len(),
+        mean_ns: s.mean(),
+        std_ns: s.std(),
+        min_ns: s.min(),
+        max_ns: s.max(),
+    }
+}
+
+/// Prevent the optimizer from discarding a value (std::hint::black_box is
+/// stable; thin wrapper for call-site clarity).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_numbers() {
+        let r = bench("noop-spin", 2, 20, || {
+            let mut acc = 0u64;
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+            black_box(acc);
+        });
+        assert_eq!(r.iters, 20);
+        assert!(r.mean_ns > 0.0);
+        assert!(r.min_ns <= r.mean_ns && r.mean_ns <= r.max_ns);
+    }
+
+    #[test]
+    fn bench_for_respects_budget_loosely() {
+        let r = bench_for("sleepless", Duration::from_millis(10), || {
+            black_box(1 + 1);
+        });
+        assert!(r.iters >= 1);
+    }
+}

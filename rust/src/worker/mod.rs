@@ -1,0 +1,202 @@
+//! Worker node: the intra-node stage (simulated multi-GPU ring all-reduce
+//! with FP16 conversion, §4.1.1) and the inter-node client side of
+//! Algorithms 3/4 (EF-compress, push, pull, decompress).
+
+use crate::comm::{Endpoint, Key, Message};
+use crate::compress::ef::EfState;
+use crate::compress::{Compressor, Ctx};
+use crate::configx::SyncMode;
+use crate::util::f16::f16_round;
+use crate::util::rng::Xoshiro256;
+use std::sync::Arc;
+
+/// Ring all-reduce (average) across the node's GPU ranks with the paper's
+/// intra-node FP16 stage: every partial sum that crosses the (simulated)
+/// NVLink is rounded to f16, exactly like reducing f16 tensors with NCCL.
+/// All ranks end with the same averaged gradient; rank 0's copy is
+/// returned.
+pub fn ring_allreduce_fp16(rank_grads: &mut Vec<Vec<f32>>) -> Vec<f32> {
+    let ranks = rank_grads.len();
+    assert!(ranks >= 1);
+    let dim = rank_grads[0].len();
+    if ranks == 1 {
+        return rank_grads[0].clone();
+    }
+    for g in rank_grads.iter() {
+        assert_eq!(g.len(), dim);
+    }
+    // Reduce-scatter: chunk c accumulates around the ring in f16.
+    let chunk = dim.div_ceil(ranks);
+    let ranges: Vec<std::ops::Range<usize>> = (0..ranks)
+        .map(|c| (c * chunk).min(dim)..((c + 1) * chunk).min(dim))
+        .collect();
+    for c in 0..ranks {
+        // Chunk c is owned by rank c after the scatter; accumulate ranks
+        // one hop at a time with f16 rounding on the wire.
+        let mut acc: Vec<f32> =
+            rank_grads[(c + 1) % ranks][ranges[c].clone()].iter().map(|&v| f16_round(v)).collect();
+        for hop in 2..=ranks {
+            let r = (c + hop) % ranks;
+            for (a, &v) in acc.iter_mut().zip(&rank_grads[r][ranges[c].clone()]) {
+                *a = f16_round(*a + f16_round(v));
+            }
+        }
+        let inv = 1.0 / ranks as f32;
+        for (i, a) in ranges[c].clone().zip(acc) {
+            let avg = f16_round(a * inv);
+            // All-gather: broadcast the reduced chunk to every rank.
+            for g in rank_grads.iter_mut() {
+                g[i] = avg;
+            }
+        }
+    }
+    rank_grads[0].clone()
+}
+
+/// Inter-node client: one per worker node. Owns the worker-side EF
+/// residuals and the RNG stream for stochastic compressors.
+pub struct WorkerComm {
+    pub worker_id: u32,
+    comp: Arc<dyn Compressor>,
+    sync: SyncMode,
+    ef: EfState,
+    rng: Xoshiro256,
+    intra_threads: usize,
+    /// endpoints[s] talks to server s.
+    endpoints: Vec<Box<dyn Endpoint>>,
+    plan: crate::ps::ShardPlan,
+}
+
+impl WorkerComm {
+    pub fn new(
+        worker_id: u32,
+        comp: Arc<dyn Compressor>,
+        sync: SyncMode,
+        fused: bool,
+        intra_threads: usize,
+        seed: u64,
+        endpoints: Vec<Box<dyn Endpoint>>,
+        plan: crate::ps::ShardPlan,
+    ) -> Self {
+        WorkerComm {
+            worker_id,
+            comp,
+            sync,
+            ef: EfState::new(fused),
+            rng: Xoshiro256::seed_from_u64(seed ^ (worker_id as u64).wrapping_mul(0x9E3779B97F4A7C15)),
+            intra_threads,
+            endpoints,
+            plan,
+        }
+    }
+
+    /// Push one tensor (Alg. 3/4 worker side, compress step included).
+    /// Returns (compressed wire bytes, compression seconds).
+    pub fn push(&mut self, key: Key, iter: u64, grad: &[f32]) -> (usize, f64) {
+        let t = std::time::Instant::now();
+        let data = match self.sync {
+            SyncMode::CompressedEf => {
+                let mut ctx = Ctx::with_threads(&mut self.rng, self.intra_threads);
+                self.ef.compress(key, grad, self.comp.as_ref(), &mut ctx)
+            }
+            _ => {
+                let mut ctx = Ctx::with_threads(&mut self.rng, self.intra_threads);
+                self.comp.compress(grad, &mut ctx)
+            }
+        };
+        let dt = t.elapsed().as_secs_f64();
+        let nbytes = data.nbytes();
+        let server = self.plan.server_of(key);
+        self.endpoints[server]
+            .send(Message::Push { key, iter, worker: self.worker_id, data })
+            .expect("server alive");
+        (nbytes, dt)
+    }
+
+    /// Pull one tensor's aggregate into `out`; blocks until available.
+    /// Returns (received wire bytes, decompression seconds) — the pull
+    /// direction of the two-way compression accounting.
+    pub fn pull(&mut self, key: Key, iter: u64, out: &mut [f32]) -> (usize, f64) {
+        let server = self.plan.server_of(key);
+        self.endpoints[server]
+            .send(Message::Pull { key, iter, worker: self.worker_id })
+            .expect("server alive");
+        loop {
+            match self.endpoints[server].recv().expect("server alive") {
+                Message::Ack { .. } => {}
+                m @ Message::PullResp { .. } => {
+                    let nbytes = crate::comm::frame::frame_bytes(&m);
+                    let Message::PullResp { key: k, iter: i, data } = m else { unreachable!() };
+                    assert_eq!((k, i), (key, iter), "out-of-order pull response");
+                    let t = std::time::Instant::now();
+                    self.comp.decompress(&data, out);
+                    return (nbytes, t.elapsed().as_secs_f64());
+                }
+                m => panic!("worker got unexpected {m:?}"),
+            }
+        }
+    }
+
+    /// Total bytes this worker has sent.
+    pub fn bytes_sent(&self) -> u64 {
+        self.endpoints.iter().map(|e| e.bytes_sent()).sum()
+    }
+
+    /// Send shutdown to every server this worker talks to.
+    pub fn shutdown(&self) {
+        for ep in &self.endpoints {
+            let _ = ep.send(Message::Shutdown);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::forall;
+
+    #[test]
+    fn ring_allreduce_is_mean_up_to_f16() {
+        forall(50, 0x41b1u64, |g| {
+            let ranks = g.usize_in(1, 8);
+            let dim = g.usize_in(1, 300);
+            let grads: Vec<Vec<f32>> = (0..ranks).map(|_| g.f32_vec(dim, 2.0)).collect();
+            let mut work = grads.clone();
+            let out = ring_allreduce_fp16(&mut work);
+            for i in 0..dim {
+                let mean: f32 = grads.iter().map(|gr| gr[i]).sum::<f32>() / ranks as f32;
+                // f16 rounding at each of up to `ranks` hops: generous bound.
+                let tol = 1e-2 * mean.abs().max(1.0) * ranks as f32;
+                if (out[i] - mean).abs() > tol {
+                    return Err(format!("i={i} out={} mean={mean} ranks={ranks}", out[i]));
+                }
+            }
+            // all ranks converged to the same values
+            for r in 1..ranks {
+                if work[r] != work[0] {
+                    return Err("ranks disagree after allgather".into());
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn single_rank_is_identity() {
+        let mut grads = vec![vec![1.0f32, -2.5, 3.25]];
+        let out = ring_allreduce_fp16(&mut grads);
+        assert_eq!(out, vec![1.0, -2.5, 3.25]);
+    }
+
+    #[test]
+    fn allreduce_values_are_f16_representable() {
+        let mut grads = vec![
+            (0..100).map(|i| (i as f32) * 0.013).collect::<Vec<_>>(),
+            (0..100).map(|i| (i as f32) * -0.007).collect::<Vec<_>>(),
+        ];
+        let out = ring_allreduce_fp16(&mut grads);
+        for v in out {
+            assert_eq!(v, f16_round(v), "output {v} not f16-representable");
+        }
+    }
+}

@@ -1,0 +1,159 @@
+//! Cross-layer numerics: the AOT-compiled Pallas kernels (L1, executed via
+//! PJRT) must match the pure-rust L3 implementations.
+//!
+//!     rust CPU impl  ==  Pallas kernel (interpret)  ==  jnp oracle
+//!
+//! The python side of this triangle is covered by pytest; this closes the
+//! rust side. Requires `make artifacts`.
+
+use byteps_compress::compress::{by_name, Ctx};
+use byteps_compress::optim::{blocks, lans::Lans, lans::LansParams, Optimizer};
+use byteps_compress::runtime::{Manifest, Runtime};
+use byteps_compress::testutil::assert_allclose;
+use byteps_compress::util::rng::Xoshiro256;
+use std::path::Path;
+
+fn artifacts() -> Option<Manifest> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    Manifest::load(&dir).ok()
+}
+
+#[test]
+fn lans_update_artifact_matches_rust_optimizer() {
+    let Some(man) = artifacts() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let k = &man.kernels["lans_update"];
+    let n = k.n;
+    let rt = Runtime::cpu().unwrap();
+    let exe = rt.load_hlo(&man.dir.join(&k.hlo)).unwrap();
+
+    let mut rng = Xoshiro256::seed_from_u64(42);
+    let mut m = vec![0.0f32; n];
+    let mut v = vec![0.0f32; n];
+    let mut g = vec![0.0f32; n];
+    let mut x = vec![0.0f32; n];
+    rng.fill_normal(&mut m, 0.1);
+    for vi in v.iter_mut() {
+        *vi = rng.next_f32() * 0.01;
+    }
+    rng.fill_normal(&mut g, 1.0);
+    rng.fill_normal(&mut x, 1.0);
+
+    // Artifact lowered with lr=1e-3, β1=.9, β2=.999, eps=1e-6, wd=.01,
+    // φ∈[.01,10] at t=3 — mirror in the rust optimizer. The rust Lans
+    // tracks t internally, so step it twice with the recovered state.
+    let t = 3.0f32;
+
+    let inputs = vec![
+        xla::Literal::vec1(&m),
+        xla::Literal::vec1(&v),
+        xla::Literal::vec1(&g),
+        xla::Literal::vec1(&x),
+        xla::Literal::vec1(&[t]),
+    ];
+    let out = exe.run(&inputs).unwrap();
+    assert_eq!(out.len(), 3);
+    let m_new = out[0].to_vec::<f32>().unwrap();
+    let v_new = out[1].to_vec::<f32>().unwrap();
+    let x_new = out[2].to_vec::<f32>().unwrap();
+
+    // Rust reference: construct a Lans at t=2 with state (m, v) and step
+    // once (its internal t becomes 3), matching the kernel's bias
+    // correction at t=3.
+    let params = LansParams { lr: 1e-3, ..Default::default() };
+    let mut lans = Lans::new(blocks::single(n), n, params);
+    // Drive the internal state to (m, v, t=2) by two crafted steps is
+    // awkward; instead exploit that the kernel is a pure function and
+    // compare against a direct rust transcription.
+    let (beta1, beta2, eps, wd, lr) = (0.9f32, 0.999f32, 1e-6f32, 0.01f32, 1e-3f32);
+    let bc1 = 1.0 - beta1.powi(3);
+    let bc2 = 1.0 - beta2.powi(3);
+    let mut r = vec![0.0f32; n];
+    let mut c = vec![0.0f32; n];
+    let mut m_want = vec![0.0f32; n];
+    let mut v_want = vec![0.0f32; n];
+    for i in 0..n {
+        m_want[i] = beta1 * m[i] + (1.0 - beta1) * g[i];
+        v_want[i] = beta2 * v[i] + (1.0 - beta2) * g[i] * g[i];
+        let denom = (v_want[i] / bc2).sqrt() + eps;
+        r[i] = m_want[i] / bc1 / denom + wd * x[i];
+        c[i] = g[i] / denom + wd * x[i];
+    }
+    let norm = |v: &[f32]| v.iter().map(|a| (*a as f64).powi(2)).sum::<f64>().sqrt() as f32;
+    let phi = norm(&x).clamp(0.01, 10.0);
+    let rs = beta1 * phi / norm(&r);
+    let cs = (1.0 - beta1) * phi / norm(&c);
+    let x_want: Vec<f32> =
+        (0..n).map(|i| x[i] - lr * (rs * r[i] + cs * c[i])).collect();
+
+    assert_allclose(&m_new, &m_want, 1e-5, 1e-4, "kernel m' vs rust");
+    assert_allclose(&v_new, &v_want, 1e-6, 1e-4, "kernel v' vs rust");
+    assert_allclose(&x_new, &x_want, 1e-5, 1e-4, "kernel x' vs rust");
+
+    // And the Lans struct itself agrees at t=1 (fresh state, both sides).
+    let inputs = vec![
+        xla::Literal::vec1(&vec![0.0f32; n]),
+        xla::Literal::vec1(&vec![0.0f32; n]),
+        xla::Literal::vec1(&g),
+        xla::Literal::vec1(&x),
+        xla::Literal::vec1(&[1.0f32]),
+    ];
+    let out = exe.run(&inputs).unwrap();
+    let x_kernel = out[2].to_vec::<f32>().unwrap();
+    let mut x_rust = x.clone();
+    lans.step(&mut x_rust, &g);
+    assert_allclose(&x_kernel, &x_rust, 1e-5, 1e-4, "kernel step vs Lans::step at t=1");
+}
+
+#[test]
+fn dither_quantize_artifact_matches_rust_formula() {
+    let Some(man) = artifacts() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let k = &man.kernels["dither_quantize"];
+    let n = k.n;
+    let rt = Runtime::cpu().unwrap();
+    let exe = rt.load_hlo(&man.dir.join(&k.hlo)).unwrap();
+
+    let mut rng = Xoshiro256::seed_from_u64(7);
+    let mut x = vec![0.0f32; n];
+    rng.fill_normal(&mut x, 2.0);
+    let u: Vec<f32> = (0..n).map(|_| rng.next_f32()).collect();
+
+    let out = exe
+        .run(&[xla::Literal::vec1(&x), xla::Literal::vec1(&u)])
+        .unwrap();
+    let kernel = out[0].to_vec::<f32>().unwrap();
+
+    // Rust transcription of the same quantizer (bits=5), same uniforms.
+    let levels = 15.0f32;
+    let scale = byteps_compress::util::max_abs(&x);
+    let inv = levels / scale;
+    let step = scale / levels;
+    let want: Vec<f32> = x
+        .iter()
+        .zip(&u)
+        .map(|(&xi, &ui)| {
+            let q = xi * inv;
+            let lo = q.floor();
+            let level = (lo + if ui < q - lo { 1.0 } else { 0.0 }).clamp(-levels, levels);
+            level * step
+        })
+        .collect();
+    assert_allclose(&kernel, &want, 1e-6, 1e-5, "dither kernel vs rust");
+
+    // Statistical tie-back to the actual wire compressor: same bit width
+    // => same step size and error bound.
+    let comp = by_name("linear_dither", 5.0).unwrap();
+    let mut rng2 = Xoshiro256::seed_from_u64(1);
+    let w = comp.compress(&x, &mut Ctx::new(&mut rng2));
+    let mut dec = vec![0.0f32; n];
+    comp.decompress(&w, &mut dec);
+    for i in 0..n {
+        assert!((dec[i] - x[i]).abs() <= step + 1e-5, "wire compressor off-grid at {i}");
+        assert!((kernel[i] - x[i]).abs() <= step + 1e-5, "kernel off-grid at {i}");
+    }
+}
