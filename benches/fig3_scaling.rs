@@ -69,5 +69,28 @@ fn main() {
             )
         );
     }
+    // §4.2.1 pipeline ablation: scaling with block-pipelined vs serialized
+    // CPU compression (overlap off so the comm path is fully visible).
+    println!("\n# Pipeline ablation — top-k scaling, pipelined vs serialized compression\n");
+    let comp = compress::by_name("topk", 0.001).unwrap();
+    let prof = CompressorProfile::measure("topk", comp.as_ref(), 1 << 21, 0.001);
+    let mut w = Workload::vgg16();
+    w.overlap = 0.0;
+    let mut rows = Vec::new();
+    for pipeline in [true, false] {
+        let mut cells =
+            vec![if pipeline { "pipelined".to_string() } else { "serialized".to_string() }];
+        for nodes in [1usize, 2, 4, 8] {
+            let mut c = Cluster::default();
+            c.nodes = nodes;
+            c.pipeline = pipeline;
+            cells.push(format!("{:.1}%", simnet::scaling_efficiency(&w, &c, &prof) * 100.0));
+        }
+        rows.push(cells);
+    }
+    println!(
+        "{}",
+        markdown_table(&["compression", "1 node", "2 nodes", "4 nodes", "8 nodes"], &rows)
+    );
     println!("paper shape check: all compressed methods ≥ NAG; VGG16 NAG ≈ ideal 40%.");
 }

@@ -10,7 +10,18 @@
 //! Ack       body := [key u64][iter u64]
 //! Shutdown  body := (empty)
 //! block := [scheme u8][n u64][payload_len u32][payload …]
+//! key   := [block_idx : 24 bits][tensor_id : 40 bits]   (see comm::BlockKey)
 //! ```
+//!
+//! The `key` field carries the pipeline's block sub-key (§4.2.1): tensor id
+//! in the low 40 bits, block index in the high 24. A whole tensor is block
+//! 0, so pre-pipeline keys decode unchanged.
+//!
+//! Decoding validates the block payload against its scheme
+//! ([`crate::compress::validate_wire`]): a corrupt or malicious frame —
+//! truncated payload, inconsistent `k`, out-of-range top-k index — is
+//! rejected as [`CommError::Protocol`] at the wire boundary instead of
+//! panicking inside the server's decompressor.
 
 use super::{CommError, Message};
 use crate::compress::{Compressed, SchemeId};
@@ -85,7 +96,9 @@ fn get_block(r: &mut Reader) -> Result<Compressed, CommError> {
     let n = r.u64()? as usize;
     let plen = r.u32()? as usize;
     let payload = r.bytes(plen)?.to_vec();
-    Ok(Compressed { scheme, n, payload })
+    let c = Compressed { scheme, n, payload };
+    crate::compress::validate_wire(&c).map_err(CommError::Protocol)?;
+    Ok(c)
 }
 
 /// Encode a message body (without the length prefix).
@@ -163,19 +176,57 @@ mod tests {
     use super::*;
     use crate::testutil::forall;
 
+    /// A structurally valid wire block (decode now validates payloads, so
+    /// random bytes no longer roundtrip).
     fn sample_block(g: &mut crate::testutil::Gen) -> Compressed {
-        let scheme = *g.choose(&[
-            SchemeId::Identity,
-            SchemeId::Fp16,
-            SchemeId::OneBit,
-            SchemeId::TopK,
-            SchemeId::RandomK,
-            SchemeId::LinearDither,
-            SchemeId::NaturalDither,
-        ]);
-        let plen = g.usize_in(0, 64);
-        let payload = (0..plen).map(|_| (g.u64() & 0xFF) as u8).collect();
-        Compressed { scheme, n: g.usize_in(0, 1000), payload }
+        let rand_bytes = |g: &mut crate::testutil::Gen, len: usize| -> Vec<u8> {
+            (0..len).map(|_| (g.u64() & 0xFF) as u8).collect()
+        };
+        match g.usize_in(0, 6) {
+            0 => {
+                let n = g.usize_in(0, 32);
+                Compressed { scheme: SchemeId::Identity, n, payload: rand_bytes(g, 4 * n) }
+            }
+            5 | 6 => {
+                // Dither blocks: any payload inside the validation envelope
+                // spanned by 2..=16 bits per element (plus the f32 scale).
+                let scheme =
+                    if g.bool() { SchemeId::LinearDither } else { SchemeId::NaturalDither };
+                let n = g.usize_in(0, 32);
+                let lo = 4 + (2 * n).div_ceil(8);
+                let hi = 4 + 2 * n;
+                let len = g.usize_in(lo, hi);
+                Compressed { scheme, n, payload: rand_bytes(g, len) }
+            }
+            1 => {
+                let n = g.usize_in(0, 32);
+                Compressed { scheme: SchemeId::Fp16, n, payload: rand_bytes(g, 2 * n) }
+            }
+            2 => {
+                let n = g.usize_in(0, 32);
+                Compressed { scheme: SchemeId::OneBit, n, payload: rand_bytes(g, 4 + n.div_ceil(8)) }
+            }
+            3 => {
+                let n = g.usize_in(1, 32);
+                let k = g.usize_in(1, n);
+                let mut payload = Vec::new();
+                payload.extend_from_slice(&(k as u32).to_le_bytes());
+                for _ in 0..k {
+                    payload.extend_from_slice(&(g.usize_in(0, n - 1) as u32).to_le_bytes());
+                }
+                payload.extend_from_slice(&rand_bytes(g, 4 * k));
+                Compressed { scheme: SchemeId::TopK, n, payload }
+            }
+            _ => {
+                let n = g.usize_in(1, 32);
+                let k = g.usize_in(1, n);
+                let mut payload = Vec::new();
+                payload.extend_from_slice(&(k as u32).to_le_bytes());
+                payload.extend_from_slice(&g.u64().to_le_bytes()); // seed
+                payload.extend_from_slice(&rand_bytes(g, 4 * k));
+                Compressed { scheme: SchemeId::RandomK, n, payload }
+            }
+        }
     }
 
     #[test]
@@ -230,5 +281,96 @@ mod tests {
     fn frame_bytes_matches_encoding() {
         let msg = Message::Ack { key: 7, iter: 9 };
         assert_eq!(frame_bytes(&msg), encode(&msg).len());
+    }
+
+    /// One representative message per tag, each with a data block where the
+    /// format carries one.
+    fn one_of_each_tag() -> Vec<Message> {
+        let block = Compressed {
+            scheme: SchemeId::TopK,
+            n: 8,
+            payload: {
+                let mut p = Vec::new();
+                p.extend_from_slice(&2u32.to_le_bytes());
+                p.extend_from_slice(&1u32.to_le_bytes());
+                p.extend_from_slice(&5u32.to_le_bytes());
+                p.extend_from_slice(&1.5f32.to_le_bytes());
+                p.extend_from_slice(&(-2.5f32).to_le_bytes());
+                p
+            },
+        };
+        vec![
+            Message::Push { key: 0x0000_0A00_0000_0003, iter: 7, worker: 2, data: block.clone() },
+            Message::Pull { key: 11, iter: 7, worker: 2 },
+            Message::PullResp { key: 11, iter: 7, data: block },
+            Message::Ack { key: 11, iter: 7 },
+            Message::Shutdown,
+        ]
+    }
+
+    /// Every proper prefix of every message body must fail to decode —
+    /// truncation at any field boundary (and inside any field) is an error,
+    /// never a silently shorter message.
+    #[test]
+    fn every_truncation_of_every_tag_is_rejected() {
+        for msg in one_of_each_tag() {
+            let body = encode_body(&msg);
+            // Sanity: the full body decodes back.
+            assert_eq!(decode_body(&body).unwrap(), msg);
+            for cut in 0..body.len() {
+                assert!(
+                    decode_body(&body[..cut]).is_err(),
+                    "truncation to {cut}/{} bytes of {msg:?} decoded",
+                    body.len()
+                );
+            }
+        }
+    }
+
+    /// Appending trailing garbage to any message is rejected too.
+    #[test]
+    fn trailing_bytes_rejected_for_every_tag() {
+        for msg in one_of_each_tag() {
+            let mut body = encode_body(&msg);
+            body.push(0);
+            assert!(decode_body(&body).is_err(), "{msg:?} accepted trailing byte");
+        }
+    }
+
+    /// Corrupt block payloads inside Push/PullResp are rejected at decode
+    /// (the server-crash class: out-of-range top-k indices, bad k).
+    #[test]
+    fn corrupt_block_payload_rejected_at_decode() {
+        let msgs = one_of_each_tag();
+        // msgs[0] is the Push with a 2-entry top-k block on n = 8.
+        let body = encode_body(&msgs[0]);
+        // Body layout: tag(1) key(8) iter(8) worker(4) scheme(1) n(8) plen(4) payload.
+        let payload_at = 1 + 8 + 8 + 4 + 1 + 8 + 4;
+        // First index (little-endian u32 after the k header) -> 0xFFFF_FFFF.
+        let mut bad = body.clone();
+        for b in &mut bad[payload_at + 4..payload_at + 8] {
+            *b = 0xFF;
+        }
+        let err = decode_body(&bad).unwrap_err();
+        assert!(matches!(err, CommError::Protocol(_)), "got {err:?}");
+        // k header inflated beyond n.
+        let mut bad = body.clone();
+        bad[payload_at] = 200;
+        assert!(decode_body(&bad).is_err());
+        // Declared payload length larger than the remaining bytes.
+        let mut bad = body;
+        let plen_at = 1 + 8 + 8 + 4 + 1 + 8;
+        bad[plen_at] = 0xFF;
+        assert!(decode_body(&bad).is_err());
+    }
+
+    #[test]
+    fn key_sub_key_survives_the_wire() {
+        use crate::comm::BlockKey;
+        let key = BlockKey::new(123, 45).pack();
+        let msg = Message::Ack { key, iter: 0 };
+        let enc = encode_body(&msg);
+        let Message::Ack { key: k, .. } = decode_body(&enc).unwrap() else { panic!() };
+        assert_eq!(BlockKey::unpack(k), BlockKey::new(123, 45));
     }
 }

@@ -97,6 +97,33 @@ mod tests {
         assert_eq!(a.recv(), Err(CommError::Closed));
     }
 
+    /// The block pipeline sends from many compression jobs concurrently
+    /// through one shared endpoint — this test also pins the `Sync`
+    /// property of `InprocEndpoint` at compile time.
+    #[test]
+    fn concurrent_senders_on_one_endpoint() {
+        let (a, b) = pair();
+        std::thread::scope(|s| {
+            for t in 0..4u64 {
+                let a = &a;
+                s.spawn(move || {
+                    for i in 0..50u64 {
+                        a.send(Message::Ack { key: t, iter: i }).unwrap();
+                    }
+                });
+            }
+        });
+        let mut counts = [0usize; 4];
+        for _ in 0..200 {
+            match b.recv().unwrap() {
+                Message::Ack { key, .. } => counts[key as usize] += 1,
+                m => panic!("unexpected {m:?}"),
+            }
+        }
+        assert!(counts.iter().all(|&c| c == 50), "{counts:?}");
+        assert_eq!(b.try_recv().unwrap(), None);
+    }
+
     #[test]
     fn works_across_threads() {
         let (a, b) = pair();

@@ -13,8 +13,51 @@ pub mod tcp;
 
 use crate::compress::Compressed;
 
-/// Key identifying one gradient tensor (block) in the PS keyspace.
+/// Key identifying one gradient *block* in the PS keyspace.
+///
+/// Since the §4.2.1 pipeline, a key is a packed [`BlockKey`]: the low
+/// [`BLOCK_SHIFT`] bits carry the tensor id and the high bits the block
+/// index within that tensor. Whole-tensor keys are simply block 0, so a
+/// plain tensor id is a valid `Key` unchanged (`pack(t, 0) == t`).
 pub type Key = u64;
+
+/// Bit position where the block-index sub-key starts inside a [`Key`].
+pub const BLOCK_SHIFT: u32 = 40;
+
+/// Maximum number of blocks a single tensor may be partitioned into.
+pub const MAX_BLOCKS_PER_TENSOR: u64 = 1 << (64 - BLOCK_SHIFT);
+
+/// Structured form of a wire [`Key`]: `(tensor id, block index)`.
+///
+/// The pipeline (worker::pipeline, §4.2.1/§4.2.3) partitions large tensors
+/// into fixed-size blocks and gives each block its own key so that blocks
+/// ship, aggregate, and re-compress independently — including on different
+/// server shards (§4.2.4).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct BlockKey {
+    /// Tensor id (the pre-pipeline key), < 2^40.
+    pub tensor: u64,
+    /// Block index within the tensor's partition.
+    pub block: u32,
+}
+
+impl BlockKey {
+    pub fn new(tensor: u64, block: u32) -> BlockKey {
+        assert!(tensor < 1 << BLOCK_SHIFT, "tensor id {tensor} exceeds {BLOCK_SHIFT} bits");
+        assert!((block as u64) < MAX_BLOCKS_PER_TENSOR, "block index {block} too large");
+        BlockKey { tensor, block }
+    }
+
+    /// Pack into the wire key. Block 0 packs to the bare tensor id.
+    pub fn pack(self) -> Key {
+        (self.block as u64) << BLOCK_SHIFT | self.tensor
+    }
+
+    /// Recover the structured key from a wire key.
+    pub fn unpack(key: Key) -> BlockKey {
+        BlockKey { tensor: key & ((1u64 << BLOCK_SHIFT) - 1), block: (key >> BLOCK_SHIFT) as u32 }
+    }
+}
 
 /// A push/pull RPC message. `iter` tags the training step so servers can
 /// detect stragglers/duplicates (BSP semantics: one push per worker per
@@ -45,7 +88,11 @@ impl Message {
 }
 
 /// A bidirectional, message-oriented channel endpoint.
-pub trait Endpoint: Send {
+///
+/// `Sync` is required: the push/pull pipeline sends from many compression
+/// jobs concurrently through one shared endpoint (both transports take
+/// `&self` and lock internally).
+pub trait Endpoint: Send + Sync {
     fn send(&self, msg: Message) -> Result<(), CommError>;
     fn recv(&self) -> Result<Message, CommError>;
     /// Non-blocking receive.
@@ -77,6 +124,28 @@ impl std::error::Error for CommError {}
 mod tests {
     use super::*;
     use crate::compress::SchemeId;
+
+    #[test]
+    fn block_key_roundtrip_and_tensor_compat() {
+        // Block 0 packs to the bare tensor id (pre-pipeline keys unchanged).
+        assert_eq!(BlockKey::new(17, 0).pack(), 17);
+        assert_eq!(BlockKey::unpack(17), BlockKey { tensor: 17, block: 0 });
+        // Roundtrip across the sub-key boundary.
+        for (t, b) in [(0u64, 0u32), (1, 1), (12345, 7), ((1 << 40) - 1, 1_000_000)] {
+            let k = BlockKey::new(t, b).pack();
+            assert_eq!(BlockKey::unpack(k), BlockKey { tensor: t, block: b });
+        }
+        // Distinct blocks of the same tensor get distinct keys.
+        assert_ne!(BlockKey::new(3, 0).pack(), BlockKey::new(3, 1).pack());
+        // Distinct tensors never collide even at high block indices.
+        assert_ne!(BlockKey::new(0, 1).pack(), BlockKey::new(1, 1).pack());
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds")]
+    fn block_key_rejects_oversized_tensor_id() {
+        let _ = BlockKey::new(1 << BLOCK_SHIFT, 0);
+    }
 
     #[test]
     fn payload_bytes_only_for_data_messages() {

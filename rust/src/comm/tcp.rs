@@ -63,14 +63,21 @@ impl Endpoint for TcpEndpoint {
     }
 
     fn try_recv(&self) -> Result<Option<Message>, CommError> {
-        // Peek the stream without blocking.
+        // Peek the stream without blocking. Whatever peek returns, restore
+        // blocking mode *first* — leaving the socket non-blocking would
+        // turn every later recv() into a WouldBlock error.
         let r = self.reader.lock().unwrap();
         r.set_nonblocking(true).map_err(|e| CommError::Io(e.to_string()))?;
         let mut len_buf = [0u8; 4];
         let peeked = r.peek(&mut len_buf);
-        r.set_nonblocking(false).map_err(|e| CommError::Io(e.to_string()))?;
+        let restored = r.set_nonblocking(false);
         drop(r);
+        restored.map_err(|e| CommError::Io(e.to_string()))?;
         match peeked {
+            // A readable socket peeking 0 bytes is EOF: the peer closed the
+            // connection. Reporting it as "partial header" (Ok(None)) made
+            // callers busy-poll a dead socket forever.
+            Ok(0) => Err(CommError::Closed),
             Ok(4) => self.recv().map(Some),
             Ok(_) => Ok(None), // partial header not yet arrived
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => Ok(None),
@@ -121,10 +128,22 @@ mod tests {
         });
 
         let client = TcpEndpoint::connect(addr).unwrap();
+        // A structurally valid top-k block (decode validates payloads now):
+        // k = 123 indices then 123 values over n = 1000.
         let data = Compressed {
             scheme: SchemeId::TopK,
             n: 1000,
-            payload: (0..123u32).flat_map(|v| v.to_le_bytes()).collect(),
+            payload: {
+                let mut p = Vec::new();
+                p.extend_from_slice(&123u32.to_le_bytes());
+                for i in 0..123u32 {
+                    p.extend_from_slice(&(i * 8).to_le_bytes());
+                }
+                for i in 0..123 {
+                    p.extend_from_slice(&(i as f32).to_le_bytes());
+                }
+                p
+            },
         };
         for i in 0..10u64 {
             client.send(Message::Push { key: 5, iter: i, worker: 0, data: data.clone() }).unwrap();
@@ -133,6 +152,57 @@ mod tests {
         client.send(Message::Shutdown).unwrap();
         server.join().unwrap();
         assert!(client.bytes_sent() > 10 * data.nbytes() as u64);
+    }
+
+    /// Regression: peer closes the socket -> try_recv must surface
+    /// CommError::Closed instead of returning Ok(None) forever.
+    #[test]
+    fn try_recv_reports_peer_close() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (stream, _) = listener.accept().unwrap();
+        let ep = TcpEndpoint::from_stream(stream).unwrap();
+        // Nothing sent yet: a quiet socket is Ok(None).
+        assert_eq!(ep.try_recv().unwrap(), None);
+        drop(client); // peer closes -> FIN
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+        loop {
+            match ep.try_recv() {
+                Err(CommError::Closed) => break,
+                Ok(None) => {
+                    // FIN may not have arrived yet; poll briefly.
+                    assert!(std::time::Instant::now() < deadline, "try_recv never saw EOF");
+                    std::thread::sleep(std::time::Duration::from_millis(5));
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        // And the socket is back in blocking mode: recv reports Closed too.
+        assert_eq!(ep.recv(), Err(CommError::Closed));
+    }
+
+    #[test]
+    fn try_recv_delivers_when_data_present() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpEndpoint::connect(addr).unwrap();
+        let (stream, _) = listener.accept().unwrap();
+        let ep = TcpEndpoint::from_stream(stream).unwrap();
+        client.send(Message::Ack { key: 3, iter: 4 }).unwrap();
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+        loop {
+            match ep.try_recv().unwrap() {
+                Some(m) => {
+                    assert_eq!(m, Message::Ack { key: 3, iter: 4 });
+                    break;
+                }
+                None => {
+                    assert!(std::time::Instant::now() < deadline, "message never arrived");
+                    std::thread::sleep(std::time::Duration::from_millis(2));
+                }
+            }
+        }
     }
 
     #[test]

@@ -67,7 +67,11 @@ impl<'a> BitUnpacker<'a> {
     #[inline]
     pub fn pull(&mut self, bits: u32) -> u32 {
         while self.nbits < bits {
-            self.acc |= (self.buf[self.byte] as u64) << self.nbits;
+            // Wire-data guard: treat bytes past the end of a truncated
+            // payload as zero instead of panicking (structural corruption
+            // is reported upstream by `compress::validate_wire`).
+            let b = self.buf.get(self.byte).copied().unwrap_or(0);
+            self.acc |= (b as u64) << self.nbits;
             self.byte += 1;
             self.nbits += 8;
         }
@@ -139,6 +143,12 @@ impl Compressor for LinearDither {
 
     fn decompress(&self, c: &Compressed, out: &mut [f32]) {
         assert_eq!(out.len(), c.n);
+        // Wire-data guard: a payload without even the scale header decodes
+        // to zeros (reported upstream by `compress::validate_wire`).
+        if c.payload.len() < 4 {
+            out.fill(0.0);
+            return;
+        }
         let scale = super::get_f32(&c.payload, 0);
         let l = self.levels();
         let step = if l > 0 { scale / l as f32 } else { 0.0 };
@@ -248,6 +258,11 @@ impl Compressor for NaturalDither {
 
     fn decompress(&self, c: &Compressed, out: &mut [f32]) {
         assert_eq!(out.len(), c.n);
+        // Wire-data guard (see LinearDither::decompress).
+        if c.payload.len() < 4 {
+            out.fill(0.0);
+            return;
+        }
         let scale = super::get_f32(&c.payload, 0);
         let mut up = BitUnpacker::new(&c.payload[4..]);
         for o in out.iter_mut() {

@@ -49,6 +49,11 @@ impl Compressor for Fp16 {
 
     fn decompress(&self, c: &Compressed, out: &mut [f32]) {
         assert_eq!(out.len(), c.n);
+        // Wire-data guard (reported upstream by `compress::validate_wire`).
+        if c.payload.len() != 2 * c.n {
+            out.fill(0.0);
+            return;
+        }
         for (i, o) in out.iter_mut().enumerate() {
             let bits = u16::from_le_bytes(c.payload[2 * i..2 * i + 2].try_into().unwrap());
             *o = f16_bits_to_f32(bits);
@@ -57,6 +62,11 @@ impl Compressor for Fp16 {
 
     fn add_decompressed(&self, c: &Compressed, acc: &mut [f32]) {
         assert_eq!(acc.len(), c.n);
+        // Wire-data guard against short payloads (reported upstream by
+        // `compress::validate_wire`).
+        if c.payload.len() != 2 * c.n {
+            return;
+        }
         for (i, a) in acc.iter_mut().enumerate() {
             let bits = u16::from_le_bytes(c.payload[2 * i..2 * i + 2].try_into().unwrap());
             *a += f16_bits_to_f32(bits);

@@ -29,6 +29,11 @@ impl Compressor for Identity {
 
     fn decompress(&self, c: &Compressed, out: &mut [f32]) {
         assert_eq!(out.len(), c.n);
+        // Wire-data guard (reported upstream by `compress::validate_wire`).
+        if c.payload.len() != 4 * c.n {
+            out.fill(0.0);
+            return;
+        }
         for (i, o) in out.iter_mut().enumerate() {
             *o = super::get_f32(&c.payload, 4 * i);
         }
@@ -36,6 +41,11 @@ impl Compressor for Identity {
 
     fn add_decompressed(&self, c: &Compressed, acc: &mut [f32]) {
         assert_eq!(acc.len(), c.n);
+        // Wire-data guard against short payloads (reported upstream by
+        // `compress::validate_wire`).
+        if c.payload.len() != 4 * c.n {
+            return;
+        }
         for (i, a) in acc.iter_mut().enumerate() {
             *a += super::get_f32(&c.payload, 4 * i);
         }

@@ -164,6 +164,79 @@ pub fn by_name(scheme: &str, param: f64) -> Result<Arc<dyn Compressor>, String> 
     })
 }
 
+/// Structural validation of a wire block against its declared scheme and
+/// element count. Wire data is untrusted: a corrupt or malicious frame must
+/// be rejected at the transport/server boundary (`comm::frame::decode_body`
+/// and `ps::ServerCore`) instead of panicking deep inside a decompressor.
+///
+/// Checks are parameter-free (the receiver's scheme parameters are not on
+/// the wire): exact payload lengths where the scheme determines them,
+/// length envelopes for the dithering schemes (bit width 2..=16), and —
+/// for top-k — that every index addresses the tensor.
+pub fn validate_wire(c: &Compressed) -> Result<(), String> {
+    let n = c.n;
+    let plen = c.payload.len();
+    match c.scheme {
+        SchemeId::Identity => {
+            if plen != 4 * n {
+                return Err(format!("identity block: payload {plen} B for {n} elems"));
+            }
+        }
+        SchemeId::Fp16 => {
+            if plen != 2 * n {
+                return Err(format!("fp16 block: payload {plen} B for {n} elems"));
+            }
+        }
+        SchemeId::OneBit => {
+            if plen != 4 + n.div_ceil(8) {
+                return Err(format!("onebit block: payload {plen} B for {n} elems"));
+            }
+        }
+        SchemeId::TopK => {
+            if plen < 4 {
+                return Err(format!("topk block: payload {plen} B lacks the k header"));
+            }
+            let k = get_u32(&c.payload, 0) as usize;
+            if k > n {
+                return Err(format!("topk block: k={k} exceeds n={n}"));
+            }
+            if plen != 4 + 8 * k {
+                return Err(format!("topk block: payload {plen} B for k={k}"));
+            }
+            for j in 0..k {
+                let i = get_u32(&c.payload, 4 + 4 * j) as usize;
+                if i >= n {
+                    return Err(format!("topk block: index {i} out of range (n={n})"));
+                }
+            }
+        }
+        SchemeId::RandomK => {
+            if plen < 12 {
+                return Err(format!("randomk block: payload {plen} B lacks the header"));
+            }
+            let k = get_u32(&c.payload, 0) as usize;
+            if k > n {
+                return Err(format!("randomk block: k={k} exceeds n={n}"));
+            }
+            if plen != 12 + 4 * k {
+                return Err(format!("randomk block: payload {plen} B for k={k}"));
+            }
+        }
+        SchemeId::LinearDither | SchemeId::NaturalDither => {
+            // Bit width is receiver config, not wire data: accept the
+            // envelope spanned by 2..=16 bits per element plus the scale.
+            let lo = 4 + (2 * n).div_ceil(8);
+            let hi = 4 + 2 * n;
+            if plen < lo || plen > hi {
+                return Err(format!(
+                    "dither block: payload {plen} B outside [{lo}, {hi}] for {n} elems"
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
 /// All scheme names benchmarked in the paper's Figures 2–4 (with their
 /// paper parameters), in presentation order.
 pub fn paper_suite() -> Vec<(&'static str, Arc<dyn Compressor>)> {
@@ -278,6 +351,68 @@ mod tests {
         let n = 1 << 20;
         let rate = (4 * n) as f64 / c.wire_nbytes(n) as f64;
         assert!(rate > 400.0, "rate={rate}");
+    }
+
+    #[test]
+    fn validate_wire_accepts_every_schemes_output() {
+        let x: Vec<f32> = (0..777).map(|i| ((i as f32) * 0.21).sin()).collect();
+        for (name, c) in paper_suite() {
+            let mut rng = Xoshiro256::seed_from_u64(4);
+            let w = c.compress(&x, &mut Ctx::new(&mut rng));
+            validate_wire(&w).unwrap_or_else(|e| panic!("{name}: {e}"));
+        }
+        // Empty tensors too.
+        for (name, c) in paper_suite() {
+            let mut rng = Xoshiro256::seed_from_u64(4);
+            let w = c.compress(&[], &mut Ctx::new(&mut rng));
+            validate_wire(&w).unwrap_or_else(|e| panic!("{name} empty: {e}"));
+        }
+    }
+
+    #[test]
+    fn validate_wire_rejects_corruption() {
+        // Wrong payload length for the dense schemes.
+        for scheme in [SchemeId::Identity, SchemeId::Fp16, SchemeId::OneBit] {
+            let c = Compressed { scheme, n: 10, payload: vec![0u8; 3] };
+            assert!(validate_wire(&c).is_err(), "{scheme:?}");
+        }
+        // top-k: k exceeding n.
+        let mut payload = Vec::new();
+        put_u32(&mut payload, 5); // k = 5 > n = 4
+        for _ in 0..5 {
+            put_u32(&mut payload, 0);
+        }
+        for _ in 0..5 {
+            put_f32(&mut payload, 1.0);
+        }
+        assert!(validate_wire(&Compressed { scheme: SchemeId::TopK, n: 4, payload }).is_err());
+        // top-k: out-of-range index (the server-crash repro).
+        let mut payload = Vec::new();
+        put_u32(&mut payload, 1);
+        put_u32(&mut payload, 9999); // index >= n
+        put_f32(&mut payload, 1.0);
+        let c = Compressed { scheme: SchemeId::TopK, n: 16, payload };
+        assert!(validate_wire(&c).unwrap_err().contains("out of range"));
+        // top-k: truncated value section.
+        let mut payload = Vec::new();
+        put_u32(&mut payload, 2);
+        put_u32(&mut payload, 0);
+        put_u32(&mut payload, 1);
+        put_f32(&mut payload, 1.0); // second value missing
+        assert!(validate_wire(&Compressed { scheme: SchemeId::TopK, n: 16, payload }).is_err());
+        // randomk: k exceeding n (would panic in sample_indices).
+        let mut payload = Vec::new();
+        put_u32(&mut payload, 8);
+        put_u64(&mut payload, 0xBEEF);
+        for _ in 0..8 {
+            put_f32(&mut payload, 0.5);
+        }
+        assert!(validate_wire(&Compressed { scheme: SchemeId::RandomK, n: 4, payload }).is_err());
+        // dither: payload outside the representable envelope.
+        let c = Compressed { scheme: SchemeId::LinearDither, n: 100, payload: vec![0u8; 4] };
+        assert!(validate_wire(&c).is_err());
+        let c = Compressed { scheme: SchemeId::NaturalDither, n: 4, payload: vec![0u8; 500] };
+        assert!(validate_wire(&c).is_err());
     }
 
     #[test]

@@ -59,6 +59,11 @@ impl Compressor for ScaledOneBit {
 
     fn decompress(&self, c: &Compressed, out: &mut [f32]) {
         assert_eq!(out.len(), c.n);
+        // Wire-data guard (reported upstream by `compress::validate_wire`).
+        if c.payload.len() != 4 + c.n.div_ceil(8) {
+            out.fill(0.0);
+            return;
+        }
         let scale = super::get_f32(&c.payload, 0);
         let bits = &c.payload[4..];
         for (i, o) in out.iter_mut().enumerate() {
@@ -68,6 +73,11 @@ impl Compressor for ScaledOneBit {
 
     fn add_decompressed(&self, c: &Compressed, acc: &mut [f32]) {
         assert_eq!(acc.len(), c.n);
+        // Wire-data guard: a short payload would panic on the bitmap read
+        // (`compress::validate_wire` reports the corruption upstream).
+        if c.payload.len() != 4 + c.n.div_ceil(8) {
+            return;
+        }
         let scale = super::get_f32(&c.payload, 0);
         let bits = &c.payload[4..];
         for (i, a) in acc.iter_mut().enumerate() {

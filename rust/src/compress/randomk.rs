@@ -79,9 +79,18 @@ impl Compressor for RandomK {
 
     fn add_decompressed(&self, c: &Compressed, acc: &mut [f32]) {
         assert_eq!(acc.len(), c.n);
+        // Wire-data guards (see `compress::validate_wire`, which transports
+        // and the server call to *report* corruption): a bad k would panic
+        // inside `sample_indices`, a short payload inside `get_f32`.
+        if c.payload.len() < 12 {
+            return; // malformed: missing k/seed header
+        }
         let k = super::get_u32(&c.payload, 0) as usize;
         if k == 0 {
             return;
+        }
+        if k > c.n || c.payload.len() != 12 + 4 * k {
+            return; // malformed: inconsistent k / payload length
         }
         let seed = super::get_u64(&c.payload, 4);
         let idx = Self::indices_from_seed(seed, c.n, k);

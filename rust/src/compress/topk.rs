@@ -26,20 +26,19 @@ impl TopK {
     }
 
     /// Indices of the k largest |x| values, ascending. Ties broken by
-    /// lower index (deterministic).
+    /// lower index (deterministic). Non-finite values (NaN, ±inf) sort as
+    /// zero magnitude — see [`mag_bits`].
     ///
     /// Perf note (EXPERIMENTS.md §Perf): quickselect runs on the raw
-    /// magnitude *bits* (|f32| bits order like u32 for non-NaN), not on an
-    /// index permutation with an indirect comparator — ~3x faster on the
-    /// 2M-element micro-bench and allocation-free index collection.
+    /// magnitude *bits* (|f32| bits order like u32 for finite values), not
+    /// on an index permutation with an indirect comparator — ~3x faster on
+    /// the 2M-element micro-bench and allocation-free index collection.
     fn select(&self, x: &[f32], k: usize) -> Vec<u32> {
         debug_assert!(k >= 1 && k <= x.len());
         if k == x.len() {
             return (0..x.len() as u32).collect();
         }
-        // |x| bit patterns: for finite f32, (bits & 0x7FFF_FFFF) orders
-        // identically to the magnitude.
-        let mut keys: Vec<u32> = x.iter().map(|v| v.to_bits() & 0x7FFF_FFFF).collect();
+        let mut keys: Vec<u32> = x.iter().map(|v| mag_bits(*v)).collect();
         // k-th largest key = (n-k)-th smallest.
         let nth = keys.len() - k;
         let (_, &mut thr, _) = keys.select_nth_unstable(nth);
@@ -47,13 +46,13 @@ impl TopK {
         // slots with ==threshold entries in index order (lower index wins).
         let mut idx = Vec::with_capacity(k);
         for (i, v) in x.iter().enumerate() {
-            if (v.to_bits() & 0x7FFF_FFFF) > thr {
+            if mag_bits(*v) > thr {
                 idx.push(i as u32);
             }
         }
         if idx.len() < k {
             for (i, v) in x.iter().enumerate() {
-                if (v.to_bits() & 0x7FFF_FFFF) == thr {
+                if mag_bits(*v) == thr {
                     idx.push(i as u32);
                     if idx.len() == k {
                         break;
@@ -64,6 +63,32 @@ impl TopK {
         }
         debug_assert_eq!(idx.len(), k);
         idx
+    }
+}
+
+/// Magnitude ordering key. For finite f32, `bits & 0x7FFF_FFFF` orders
+/// identically to `|v|`; NaN bit patterns (e.g. `0x7FC0_0000`) would sort
+/// *above* infinity under that map and get preferentially selected, then
+/// poison the error-feedback residual forever. Defined behavior: any
+/// non-finite value has zero magnitude (never preferred over real data)
+/// and is shipped as 0.0 if selection is forced to include it.
+#[inline]
+fn mag_bits(v: f32) -> u32 {
+    if v.is_finite() {
+        v.to_bits() & 0x7FFF_FFFF
+    } else {
+        0
+    }
+}
+
+/// A selected value as it goes on the wire: non-finite coordinates are
+/// zeroed so NaN/inf can never propagate through the aggregation path.
+#[inline]
+fn wire_value(v: f32) -> f32 {
+    if v.is_finite() {
+        v
+    } else {
+        0.0
     }
 }
 
@@ -94,7 +119,7 @@ impl Compressor for TopK {
             super::put_u32(&mut payload, i);
         }
         for &i in &idx {
-            super::put_f32(&mut payload, x[i as usize]);
+            super::put_f32(&mut payload, wire_value(x[i as usize]));
         }
         Compressed { scheme: SchemeId::TopK, n: x.len(), payload }
     }
@@ -106,13 +131,28 @@ impl Compressor for TopK {
     }
 
     /// O(k) sparse accumulate — the server aggregation fast path.
+    ///
+    /// The payload is wire data: `k`, the payload length, and every index
+    /// are re-checked against `c.n` so a corrupt or malicious block can
+    /// never index out of bounds. Transports and the server reject such
+    /// blocks up front via [`crate::compress::validate_wire`] (surfacing
+    /// `CommError::Protocol`); the guards here make the scheme panic-free
+    /// even when called directly on unvalidated data.
     fn add_decompressed(&self, c: &Compressed, acc: &mut [f32]) {
         assert_eq!(acc.len(), c.n);
+        if c.payload.len() < 4 {
+            return; // malformed: no k header
+        }
         let k = super::get_u32(&c.payload, 0) as usize;
+        if k > c.n || c.payload.len() != 4 + 8 * k {
+            return; // malformed: inconsistent k / payload length
+        }
         let vals_off = 4 + 4 * k;
         for j in 0..k {
             let i = super::get_u32(&c.payload, 4 + 4 * j) as usize;
-            acc[i] += super::get_f32(&c.payload, vals_off + 4 * j);
+            if let Some(a) = acc.get_mut(i) {
+                *a += super::get_f32(&c.payload, vals_off + 4 * j);
+            }
         }
     }
 
@@ -140,8 +180,11 @@ impl Compressor for TopK {
             super::put_u32(&mut payload, i);
         }
         for &i in &idx {
-            super::put_f32(&mut payload, q[i as usize]);
-            q[i as usize] = 0.0; // zero-fill: residual for kept coords is 0
+            super::put_f32(&mut payload, wire_value(q[i as usize]));
+            // Zero-fill: residual for kept coords is 0. For a selected
+            // non-finite coordinate this also drops the NaN/inf from the
+            // residual instead of carrying it forever.
+            q[i as usize] = 0.0;
         }
         Compressed { scheme: SchemeId::TopK, n: q.len(), payload }
     }
@@ -292,5 +335,103 @@ mod tests {
         let c = t.compress(&[], &mut ctx(&mut rng));
         let mut out: Vec<f32> = vec![];
         t.decompress(&c, &mut out);
+    }
+
+    /// Regression: NaN magnitude bits (0x7FC0_0000) order above infinity,
+    /// so raw-bit selection used to *prefer* NaNs, which then poisoned the
+    /// EF residual forever. Defined behavior: non-finite values have zero
+    /// magnitude and are shipped as 0.0 when selection is forced.
+    #[test]
+    fn non_finite_values_are_never_preferred() {
+        let mut x = vec![0.01f32; 10];
+        x[1] = 1.5;
+        x[3] = f32::NAN;
+        x[5] = -2.0;
+        x[7] = f32::INFINITY;
+        let t = TopK::new(0.2); // k = 2
+        let mut rng = Xoshiro256::seed_from_u64(0);
+        let c = t.compress(&x, &mut ctx(&mut rng));
+        let mut out = vec![0.0f32; 10];
+        t.decompress(&c, &mut out);
+        assert_eq!(out[1], 1.5, "finite spike must win over NaN/inf");
+        assert_eq!(out[5], -2.0);
+        assert!(out.iter().all(|v| v.is_finite()), "decode must stay finite: {out:?}");
+        assert_eq!(out[3], 0.0);
+        assert_eq!(out[7], 0.0);
+    }
+
+    #[test]
+    fn all_nan_input_ships_zeros_and_clears_residual() {
+        let t = TopK::new(1.0); // keep everything: selection forced onto NaNs
+        let mut q = vec![f32::NAN; 4];
+        let mut rng = Xoshiro256::seed_from_u64(0);
+        let c = t.compress_ef_fused(&mut q, &mut ctx(&mut rng));
+        let mut out = vec![1.0f32; 4];
+        t.decompress(&c, &mut out);
+        assert!(out.iter().all(|&v| v == 0.0), "NaNs must ship as 0.0: {out:?}");
+        // The fused residual drops the NaNs rather than carrying them.
+        assert!(q.iter().all(|&v| v == 0.0), "residual must be cleared: {q:?}");
+    }
+
+    #[test]
+    fn nan_does_not_stick_in_error_feedback() {
+        use crate::compress::ef::EfState;
+        let comp = TopK::new(0.25); // k = 1 of 4
+        let mut ef = EfState::new(true);
+        let mut rng = Xoshiro256::seed_from_u64(0);
+        // Step 0: a NaN arrives on one coordinate.
+        let g0 = vec![1.0f32, f32::NAN, 0.1, 0.1];
+        let c = ef.compress(7, &g0, &comp, &mut ctx(&mut rng));
+        let mut out = vec![0.0f32; 4];
+        comp.decompress(&c, &mut out);
+        assert!(out.iter().all(|v| v.is_finite()));
+        // Steps 1..: clean gradients. The wire must stay finite throughout
+        // (the poisoned coordinate stays NaN in the residual — NaN + g is
+        // NaN — but it can never again outrank finite data or be shipped).
+        for _ in 0..5 {
+            let g = vec![0.5f32, 0.2, 0.3, 0.4];
+            let c = ef.compress(7, &g, &comp, &mut ctx(&mut rng));
+            let mut out = vec![0.0f32; 4];
+            comp.decompress(&c, &mut out);
+            assert!(out.iter().all(|v| v.is_finite()), "wire went non-finite: {out:?}");
+        }
+    }
+
+    /// Corrupt wire blocks must not panic (the server-crash repro): bad k,
+    /// bad payload length, and out-of-range indices all degrade to a
+    /// skipped block. Error *reporting* happens upstream via
+    /// `compress::validate_wire`.
+    #[test]
+    fn corrupt_blocks_do_not_panic() {
+        let t = TopK::new(0.5);
+        let mut acc = vec![0.0f32; 8];
+        // Empty payload.
+        let c = Compressed { scheme: SchemeId::TopK, n: 8, payload: vec![] };
+        t.add_decompressed(&c, &mut acc);
+        // k larger than n.
+        let mut payload = Vec::new();
+        crate::compress::put_u32(&mut payload, 100);
+        let c = Compressed { scheme: SchemeId::TopK, n: 8, payload };
+        t.add_decompressed(&c, &mut acc);
+        // Truncated payload (k says 2, only one entry present).
+        let mut payload = Vec::new();
+        crate::compress::put_u32(&mut payload, 2);
+        crate::compress::put_u32(&mut payload, 1);
+        crate::compress::put_f32(&mut payload, 3.0);
+        let c = Compressed { scheme: SchemeId::TopK, n: 8, payload };
+        t.add_decompressed(&c, &mut acc);
+        // Out-of-range index with otherwise consistent layout.
+        let mut payload = Vec::new();
+        crate::compress::put_u32(&mut payload, 2);
+        crate::compress::put_u32(&mut payload, 1);
+        crate::compress::put_u32(&mut payload, 4096); // >= n
+        crate::compress::put_f32(&mut payload, 3.0);
+        crate::compress::put_f32(&mut payload, 5.0);
+        let c = Compressed { scheme: SchemeId::TopK, n: 8, payload };
+        assert!(crate::compress::validate_wire(&c).is_err());
+        t.add_decompressed(&c, &mut acc);
+        // Only the in-range entry of the last block landed.
+        assert_eq!(acc[1], 3.0);
+        assert!(acc.iter().enumerate().all(|(i, &v)| i == 1 || v == 0.0));
     }
 }

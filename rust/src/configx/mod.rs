@@ -7,7 +7,7 @@
 
 pub mod json;
 
-use json::{Json, JsonError};
+use self::json::{Json, JsonError};
 use std::fmt;
 use std::path::Path;
 
@@ -163,6 +163,30 @@ impl Default for SystemConfig {
     }
 }
 
+/// Block-partitioned push/pull pipeline knobs (§4.2.1/§4.2.3): tensors
+/// above `block_bytes` are split into fixed-size blocks, each with its own
+/// wire key, so CPU compression of block i+1 overlaps the in-flight send
+/// of block i.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PipelineConfig {
+    /// Drive per-block compress->push / pull->decompress through the
+    /// worker's thread pool. Off = the serial reference path (the
+    /// "compression w/o pipelining" ablation arm).
+    pub enabled: bool,
+    /// Partition block size in BYTES of f32 data (paper default 4 MiB).
+    /// Tensors at or below this size stay whole.
+    pub block_bytes: usize,
+    /// Max compress/push jobs in flight per worker (bounds the memory held
+    /// by per-block gradient staging copies).
+    pub inflight: usize,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        PipelineConfig { enabled: true, block_bytes: 4 << 20, inflight: 16 }
+    }
+}
+
 /// Training-run config: model/artifact + schedule.
 #[derive(Clone, Debug, PartialEq)]
 pub struct TrainConfig {
@@ -180,6 +204,7 @@ pub struct TrainConfig {
     pub compression: CompressionConfig,
     pub cluster: ClusterConfig,
     pub system: SystemConfig,
+    pub pipeline: PipelineConfig,
 }
 
 impl Default for TrainConfig {
@@ -195,6 +220,7 @@ impl Default for TrainConfig {
             compression: CompressionConfig::default(),
             cluster: ClusterConfig::default(),
             system: SystemConfig::default(),
+            pipeline: PipelineConfig::default(),
         }
     }
 }
@@ -239,9 +265,9 @@ impl TrainConfig {
     pub fn from_json(v: &Json) -> Result<Self, ConfigError> {
         let d = TrainConfig::default();
         let obj = v.as_obj().ok_or_else(|| ConfigError("top level must be an object".into()))?;
-        const KNOWN: [&str; 11] = [
+        const KNOWN: [&str; 12] = [
             "model", "steps", "batch_per_worker", "seed", "log_every", "task_difficulty",
-            "optimizer", "compression", "cluster", "system", "comment",
+            "optimizer", "compression", "cluster", "system", "pipeline", "comment",
         ];
         for k in obj.keys() {
             if !KNOWN.contains(&k.as_str()) {
@@ -291,6 +317,13 @@ impl TrainConfig {
             more_servers: b(&y, "more_servers", sd.more_servers),
             numa_tuning: b(&y, "numa_tuning", sd.numa_tuning),
         };
+        let pd = PipelineConfig::default();
+        let p = v.get("pipeline").cloned().unwrap_or(Json::Obj(Default::default()));
+        let pipeline = PipelineConfig {
+            enabled: b(&p, "enabled", pd.enabled),
+            block_bytes: u(&p, "block_bytes", pd.block_bytes),
+            inflight: u(&p, "inflight", pd.inflight),
+        };
         let cfg = TrainConfig {
             model: s(v, "model", &d.model),
             steps: u(v, "steps", d.steps),
@@ -302,6 +335,7 @@ impl TrainConfig {
             compression,
             cluster,
             system,
+            pipeline,
         };
         cfg.validate()?;
         Ok(cfg)
@@ -347,6 +381,12 @@ impl TrainConfig {
             }
             "identity" | "fp16" | "onebit" => {}
             other => return Err(ConfigError(format!("unknown compression scheme '{other}'"))),
+        }
+        if self.pipeline.block_bytes < 64 {
+            return Err(ConfigError("pipeline.block_bytes must be >= 64".into()));
+        }
+        if self.pipeline.inflight == 0 {
+            return Err(ConfigError("pipeline.inflight must be >= 1".into()));
         }
         if self.compression.sync == SyncMode::Compressed
             && matches!(self.compression.scheme.as_str(), "topk" | "onebit")
@@ -414,6 +454,14 @@ impl TrainConfig {
                     ("numa_tuning", Json::Bool(self.system.numa_tuning)),
                 ]),
             ),
+            (
+                "pipeline",
+                Json::obj(vec![
+                    ("enabled", Json::Bool(self.pipeline.enabled)),
+                    ("block_bytes", Json::num(self.pipeline.block_bytes as f64)),
+                    ("inflight", Json::num(self.pipeline.inflight as f64)),
+                ]),
+            ),
         ])
     }
 }
@@ -466,8 +514,29 @@ mod tests {
         cfg.compression.param = 7.0;
         cfg.compression.sync = SyncMode::Compressed;
         cfg.system.numa_tuning = false;
+        cfg.pipeline.enabled = false;
+        cfg.pipeline.block_bytes = 1 << 20;
+        cfg.pipeline.inflight = 8;
         let rt = TrainConfig::from_json(&cfg.to_json()).unwrap();
         assert_eq!(rt, cfg);
+    }
+
+    #[test]
+    fn pipeline_section_parses_and_validates() {
+        let cfg = TrainConfig::from_str(
+            r#"{"pipeline": {"enabled": false, "block_bytes": 65536, "inflight": 4}}"#,
+        )
+        .unwrap();
+        assert!(!cfg.pipeline.enabled);
+        assert_eq!(cfg.pipeline.block_bytes, 65536);
+        assert_eq!(cfg.pipeline.inflight, 4);
+        // Defaults apply when the section is absent.
+        let cfg = TrainConfig::from_str("{}").unwrap();
+        assert!(cfg.pipeline.enabled);
+        assert_eq!(cfg.pipeline.block_bytes, 4 << 20);
+        // Degenerate knobs rejected.
+        assert!(TrainConfig::from_str(r#"{"pipeline": {"block_bytes": 1}}"#).is_err());
+        assert!(TrainConfig::from_str(r#"{"pipeline": {"inflight": 0}}"#).is_err());
     }
 
     #[test]

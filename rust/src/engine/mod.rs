@@ -15,6 +15,7 @@ use crate::metrics::Breakdown;
 use crate::optim::{blocks::Block, WarmupSchedule};
 use crate::ps::{Server, ServerOptions, ServerStats, ShardPlan};
 use crate::runtime::{self, Manifest, Runtime};
+use crate::worker::pipeline::Partition;
 use crate::worker::WorkerComm;
 use anyhow::{Context, Result};
 use std::path::Path;
@@ -34,13 +35,16 @@ pub struct CommFabric {
     workers: Vec<WorkerComm>,
     servers: Vec<Server>,
     blocks: Vec<Block>,
+    partition: Arc<Partition>,
+    pipelined: bool,
     dim: usize,
     iter: u64,
 }
 
 impl CommFabric {
     /// Build a fabric for `blocks` over a flat `dim`-vector, as configured
-    /// (scheme, sync mode, threshold, fusion, shard balance, servers).
+    /// (scheme, sync mode, threshold, fusion, shard balance, servers,
+    /// pipeline partitioning).
     pub fn new(cfg: &TrainConfig, blocks: Vec<Block>, dim: usize) -> Result<CommFabric> {
         let n_workers = cfg.cluster.nodes;
         let n_servers = if cfg.system.more_servers { cfg.cluster.servers.max(2) } else { 1 };
@@ -55,20 +59,33 @@ impl CommFabric {
             if comp.name() == "identity" { SyncMode::Full } else { cfg.compression.sync };
         let fused = cfg.system.operator_fusion && cfg.compression.fused_residual;
 
-        // Shard plan (§4.2.4): compressed keys cost ~4x their size in server
-        // CPU (decompress xN + compress); bypassed keys are memcpy-cheap.
-        let costs: Vec<f64> = blocks
+        // Block partition (§4.2.1/§4.2.3): the pipeline's wire unit. With
+        // the pipeline off every tensor is one block and the keyspace is
+        // bit-compatible with the pre-pipeline fabric.
+        let partition =
+            Arc::new(Partition::new(&blocks, cfg.pipeline.block_bytes, cfg.pipeline.enabled));
+
+        // Shard plan (§4.2.4), now balancing *blocks*: compressed blocks
+        // cost ~4x their size in server CPU (decompress xN + compress);
+        // bypassed blocks are memcpy-cheap. Splitting big tensors first
+        // means their server-side work spreads across shards too.
+        let items: Vec<(crate::comm::Key, f64)> = partition
+            .subs()
             .iter()
-            .map(|b| {
-                let bypass = cfg.system.size_threshold_on && 4 * b.len < cfg.compression.size_threshold;
-                b.len as f64 * if bypass { 1.0 } else { 4.0 }
+            .map(|sb| {
+                let bypass =
+                    cfg.system.size_threshold_on && 4 * sb.len() < cfg.compression.size_threshold;
+                (sb.key, sb.len() as f64 * if bypass { 1.0 } else { 4.0 })
             })
             .collect();
-        let plan = if cfg.system.workload_balance {
-            ShardPlan::balanced(&costs, n_servers)
+        let plan = Arc::new(if cfg.system.workload_balance {
+            ShardPlan::balanced_keyed(&items, n_servers)
         } else {
-            ShardPlan::round_robin(blocks.len(), n_servers)
-        };
+            ShardPlan::round_robin_keyed(
+                &items.iter().map(|(k, _)| *k).collect::<Vec<_>>(),
+                n_servers,
+            )
+        });
 
         // Endpoint mesh: one pair per (worker, server).
         let mut worker_eps: Vec<Vec<Box<dyn Endpoint>>> = (0..n_workers)
@@ -107,12 +124,22 @@ impl CommFabric {
                     cfg.system.intra_threads,
                     cfg.seed,
                     eps,
-                    plan.clone(),
+                    Arc::clone(&plan),
+                    cfg.system.compress_threads,
+                    cfg.pipeline.inflight,
                 )
             })
             .collect();
 
-        Ok(CommFabric { workers, servers, blocks, dim, iter: 0 })
+        Ok(CommFabric {
+            workers,
+            servers,
+            blocks,
+            partition,
+            pipelined: cfg.pipeline.enabled,
+            dim,
+            iter: 0,
+        })
     }
 
     pub fn n_workers(&self) -> usize {
@@ -123,8 +150,16 @@ impl CommFabric {
         &self.blocks
     }
 
+    /// The wire partition (tensor blocks) this fabric exchanges.
+    pub fn partition(&self) -> &Partition {
+        &self.partition
+    }
+
     /// One BSP exchange (Alg. 3/4 end to end over the message fabric):
     /// every worker pushes all its blocks, then pulls all aggregates.
+    /// With the pipeline enabled, per-block compress→push and
+    /// pull→decompress jobs run through each worker's thread pool
+    /// (§4.2.1); otherwise the serial reference path runs inline.
     /// Returns worker 0's aggregated gradient (all workers receive the
     /// same bytes) plus summed stats.
     pub fn exchange(&mut self, per_worker_grads: &[Vec<f32>]) -> (Vec<f32>, CommStats) {
@@ -134,7 +169,8 @@ impl CommFabric {
         }
         let iter = self.iter;
         self.iter += 1;
-        let blocks = &self.blocks;
+        let partition = &self.partition;
+        let pipelined = self.pipelined;
         let dim = self.dim;
         let results: Vec<(Vec<f32>, CommStats)> = std::thread::scope(|s| {
             let handles: Vec<_> = self
@@ -145,15 +181,23 @@ impl CommFabric {
                     s.spawn(move || {
                         let mut stats = CommStats::default();
                         let before = wc.bytes_sent();
-                        for (k, b) in blocks.iter().enumerate() {
-                            let (_, dt) = wc.push(k as u64, iter, &grad[b.range()]);
-                            stats.compress_s += dt;
-                        }
                         let mut agg = vec![0.0f32; dim];
-                        for (k, b) in blocks.iter().enumerate() {
-                            let (rx_bytes, dt) = wc.pull(k as u64, iter, &mut agg[b.range()]);
-                            stats.wire_bytes += rx_bytes as u64;
+                        if pipelined {
+                            stats.compress_s += wc.push_all(iter, grad, partition);
+                            let (rx_bytes, dt) = wc.pull_all(iter, &mut agg, partition);
+                            stats.wire_bytes += rx_bytes;
                             stats.decompress_s += dt;
+                        } else {
+                            for sb in partition.subs() {
+                                let (_, dt) = wc.push(sb.key, iter, &grad[sb.range.clone()]);
+                                stats.compress_s += dt;
+                            }
+                            for sb in partition.subs() {
+                                let (rx_bytes, dt) =
+                                    wc.pull(sb.key, iter, &mut agg[sb.range.clone()]);
+                                stats.wire_bytes += rx_bytes as u64;
+                                stats.decompress_s += dt;
+                            }
                         }
                         stats.wire_bytes += wc.bytes_sent() - before;
                         (agg, stats)

@@ -29,6 +29,9 @@ fn opts() -> Vec<Opt> {
         Opt { name: "lr", takes_value: true, help: "learning rate" },
         Opt { name: "seed", takes_value: true, help: "RNG seed" },
         Opt { name: "log-every", takes_value: true, help: "logging interval" },
+        Opt { name: "pipeline", takes_value: true, help: "block pipeline: on|off (default on)" },
+        Opt { name: "block-bytes", takes_value: true, help: "pipeline partition block size in bytes" },
+        Opt { name: "inflight", takes_value: true, help: "max in-flight compress jobs per worker" },
     ]
 }
 
@@ -52,6 +55,15 @@ fn apply_overrides(cfg: &mut TrainConfig, a: &Args) -> Result<(), String> {
     cfg.optimizer.lr = a.f64_or("lr", cfg.optimizer.lr)?;
     cfg.seed = a.u64_or("seed", cfg.seed)?;
     cfg.log_every = a.usize_or("log-every", cfg.log_every)?;
+    if let Some(p) = a.get("pipeline") {
+        cfg.pipeline.enabled = match p {
+            "on" | "true" | "1" => true,
+            "off" | "false" | "0" => false,
+            other => return Err(format!("--pipeline: expected on|off, got '{other}'")),
+        };
+    }
+    cfg.pipeline.block_bytes = a.usize_or("block-bytes", cfg.pipeline.block_bytes)?;
+    cfg.pipeline.inflight = a.usize_or("inflight", cfg.pipeline.inflight)?;
     cfg.validate().map_err(|e| e.to_string())?;
     Ok(())
 }
@@ -64,14 +76,19 @@ fn cmd_train(a: &Args) -> anyhow::Result<()> {
     apply_overrides(&mut cfg, a).map_err(anyhow::Error::msg)?;
     let art = PathBuf::from(a.get_or("artifacts", "artifacts"));
     eprintln!(
-        "training {} | {} steps x {} nodes | {} ({}, param {}) | optimizer {}",
+        "training {} | {} steps x {} nodes | {} ({}, param {}) | optimizer {} | pipeline {}",
         cfg.model,
         cfg.steps,
         cfg.cluster.nodes,
         cfg.compression.scheme,
         cfg.compression.sync.name(),
         cfg.compression.param,
-        cfg.optimizer.name
+        cfg.optimizer.name,
+        if cfg.pipeline.enabled {
+            format!("on ({} KiB blocks)", cfg.pipeline.block_bytes / 1024)
+        } else {
+            "off".into()
+        }
     );
     let report = engine::train(&cfg, &art)?;
     for (step, loss) in &report.losses {

@@ -24,6 +24,11 @@ type Job = Box<dyn FnOnce() + Send + 'static>;
 struct Pending {
     count: Mutex<usize>,
     cv: Condvar,
+    /// Jobs that panicked since the last [`ThreadPool::take_panics`]. A
+    /// panicking job must not hang the pool: the worker survives and the
+    /// pending count still drops, so `wait()` terminates and the caller
+    /// can surface the failure.
+    panicked: AtomicUsize,
 }
 
 /// A fixed-size persistent thread pool.
@@ -43,7 +48,8 @@ impl ThreadPool {
         let threads = threads.max(1);
         let (tx, rx) = channel::<Job>();
         let rx = Arc::new(Mutex::new(rx));
-        let pending = Arc::new(Pending { count: Mutex::new(0), cv: Condvar::new() });
+        let pending =
+            Arc::new(Pending { count: Mutex::new(0), cv: Condvar::new(), panicked: AtomicUsize::new(0) });
         let mut workers = Vec::with_capacity(threads);
         for i in 0..threads {
             let rx: Arc<Mutex<Receiver<Job>>> = Arc::clone(&rx);
@@ -58,7 +64,11 @@ impl ThreadPool {
                         };
                         match job {
                             Ok(job) => {
-                                job();
+                                let result =
+                                    std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
+                                if result.is_err() {
+                                    pending.panicked.fetch_add(1, Ordering::SeqCst);
+                                }
                                 let mut c = pending.count.lock().unwrap();
                                 *c -= 1;
                                 if *c == 0 {
@@ -76,6 +86,12 @@ impl ThreadPool {
 
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    /// Number of jobs that panicked since the last call; resets the count.
+    /// Callers that must not swallow failures check this after `wait()`.
+    pub fn take_panics(&self) -> usize {
+        self.pending.panicked.swap(0, Ordering::SeqCst)
     }
 
     /// Submit an owned job (inter-task parallelism).
@@ -184,6 +200,37 @@ fn effective_threads(requested: usize, n: usize) -> usize {
     }
 }
 
+/// A counting semaphore bounding how many pipeline jobs may be in flight
+/// at once (queued or running). The push/pull pipeline (§4.2.1) uses this
+/// to cap the memory held by per-block gradient copies: submission blocks
+/// once `permits` jobs are outstanding and resumes as jobs retire.
+pub struct Semaphore {
+    permits: Mutex<usize>,
+    cv: Condvar,
+}
+
+impl Semaphore {
+    pub fn new(permits: usize) -> Self {
+        Semaphore { permits: Mutex::new(permits.max(1)), cv: Condvar::new() }
+    }
+
+    /// Block until a permit is available, then take it.
+    pub fn acquire(&self) {
+        let mut p = self.permits.lock().unwrap();
+        while *p == 0 {
+            p = self.cv.wait(p).unwrap();
+        }
+        *p -= 1;
+    }
+
+    /// Return a permit.
+    pub fn release(&self) {
+        let mut p = self.permits.lock().unwrap();
+        *p += 1;
+        self.cv.notify_one();
+    }
+}
+
 /// A cheap atomic work-stealing index for dynamic scheduling across a set
 /// of heterogeneous tasks (used by the server to balance per-tensor work,
 /// paper §4.2.4).
@@ -287,6 +334,89 @@ mod tests {
         let total: f64 = partials.iter().sum();
         let n = data.len() as f64;
         assert_eq!(total, n * (n - 1.0) / 2.0);
+    }
+
+    /// Concurrent execute/wait stress backing the push/pull pipeline: many
+    /// submitter threads race `execute` against a waiter calling `wait`,
+    /// across several rounds. Every job must run exactly once and `wait`
+    /// must never return while work is outstanding.
+    #[test]
+    fn pool_concurrent_execute_wait_stress() {
+        let pool = Arc::new(ThreadPool::new(4));
+        for _round in 0..5 {
+            let counter = Arc::new(AtomicU64::new(0));
+            let submitters = 4;
+            let jobs_each = 50;
+            std::thread::scope(|s| {
+                for _ in 0..submitters {
+                    let pool = Arc::clone(&pool);
+                    let counter = Arc::clone(&counter);
+                    s.spawn(move || {
+                        for _ in 0..jobs_each {
+                            let c = Arc::clone(&counter);
+                            pool.execute(move || {
+                                c.fetch_add(1, Ordering::SeqCst);
+                            });
+                        }
+                    });
+                }
+            });
+            // All submissions done; wait must observe every job.
+            pool.wait();
+            assert_eq!(counter.load(Ordering::SeqCst), (submitters * jobs_each) as u64);
+            assert_eq!(pool.take_panics(), 0);
+        }
+    }
+
+    /// A panicking job must not hang the pool (regression for the pipeline:
+    /// a failed send inside a compress job previously killed the worker
+    /// thread with the pending count still nonzero, deadlocking `wait`).
+    #[test]
+    fn panicking_job_does_not_hang_wait() {
+        let pool = ThreadPool::new(2);
+        let counter = Arc::new(AtomicU64::new(0));
+        for i in 0..10 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                if i % 3 == 0 {
+                    panic!("job {i} failed");
+                }
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait();
+        assert_eq!(pool.take_panics(), 4); // i = 0, 3, 6, 9
+        assert_eq!(counter.load(Ordering::SeqCst), 6);
+        // The pool is still usable afterwards.
+        let c = Arc::clone(&counter);
+        pool.execute(move || {
+            c.fetch_add(1, Ordering::SeqCst);
+        });
+        pool.wait();
+        assert_eq!(counter.load(Ordering::SeqCst), 7);
+        assert_eq!(pool.take_panics(), 0);
+    }
+
+    #[test]
+    fn semaphore_bounds_inflight() {
+        let sem = Arc::new(Semaphore::new(3));
+        let pool = ThreadPool::new(3);
+        let inflight = Arc::new(AtomicU64::new(0));
+        let max_seen = Arc::new(AtomicU64::new(0));
+        for _ in 0..60 {
+            sem.acquire();
+            let sem = Arc::clone(&sem);
+            let inflight = Arc::clone(&inflight);
+            let max_seen = Arc::clone(&max_seen);
+            pool.execute(move || {
+                let now = inflight.fetch_add(1, Ordering::SeqCst) + 1;
+                max_seen.fetch_max(now, Ordering::SeqCst);
+                inflight.fetch_sub(1, Ordering::SeqCst);
+                sem.release();
+            });
+        }
+        pool.wait();
+        assert!(max_seen.load(Ordering::SeqCst) <= 3);
     }
 
     #[test]

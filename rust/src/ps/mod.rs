@@ -11,9 +11,17 @@
 //! Shard assignment across multiple servers lives in [`ShardPlan`] and
 //! implements the paper's workload balancing (§4.2.4): keys that undergo
 //! compression carry extra CPU cost, so they are weighted heavier than
-//! bypassed (small) keys when balancing.
+//! bypassed (small) keys when balancing. Since the §4.2.1 pipeline, the
+//! unit of sharding is a *block* ([`crate::comm::BlockKey`]), not a whole
+//! tensor: a large tensor's blocks spread across shards, so its server-side
+//! decompress/aggregate/re-compress work runs on several shards at once.
+//!
+//! Incoming push payloads are untrusted wire data: the server validates
+//! every block against its scheme ([`crate::compress::validate_wire`]) and
+//! rejects corrupt blocks (counted in [`ServerStats::rejected`]) instead of
+//! panicking mid-aggregation.
 
-use crate::comm::{Endpoint, Key, Message};
+use crate::comm::{BlockKey, CommError, Endpoint, Key, Message};
 use crate::compress::ef::EfState;
 use crate::compress::{Compressor, Ctx};
 use crate::configx::SyncMode;
@@ -37,6 +45,11 @@ pub struct ServerOptions {
 
 struct KeyState {
     iter: u64,
+    /// Canonical element count for this key, fixed by the first push.
+    /// Later pushes whose `n` disagrees are rejected at ingress — a
+    /// self-consistent corrupt frame must not resize (or panic on) the
+    /// accumulator.
+    dim: usize,
     acc: Vec<f32>,
     count: usize,
     ready: Option<crate::compress::Compressed>,
@@ -45,6 +58,16 @@ struct KeyState {
     /// *pulled* iteration i — the slow pull must still be servable.
     /// Workers never lag more than one iteration (they pull i before
     /// pushing i+1), so one slot suffices.
+    ///
+    /// This invariant survives the block pipeline: keys are now per-block
+    /// and blocks of one iteration arrive out of order across *different*
+    /// keys, but each `KeyState` is keyed by one block, and every worker
+    /// still completes pull(key, i) before it sends push(key, i+1) — the
+    /// pipelined push phase starts only after the previous exchange's pull
+    /// phase fully drained, and both transports preserve per-endpoint FIFO
+    /// order. So per key the lag stays bounded by one iteration and the
+    /// one-slot rollover is still sufficient (tested in
+    /// `rust/tests/distributed.rs`).
     prev: Option<(u64, crate::compress::Compressed)>,
     /// Queued pulls as (iter, worker).
     pending: Vec<(u64, u32)>,
@@ -55,6 +78,8 @@ struct KeyState {
 pub struct ServerStats {
     pub pushes: u64,
     pub pulls: u64,
+    /// Corrupt push blocks dropped at ingress (wire-validation failures).
+    pub rejected: u64,
     pub decompress_s: f64,
     pub compress_s: f64,
 }
@@ -80,14 +105,36 @@ impl ServerCore {
         match msg {
             Message::Push { key, iter, worker, data } => {
                 debug_assert_eq!(from, worker);
+                // Untrusted wire data: reject corrupt blocks instead of
+                // letting a bad index/length panic the aggregator. (The
+                // TCP transport already rejects these at frame decode;
+                // this also covers the in-process transport.)
+                if let Err(e) = crate::compress::validate_wire(&data) {
+                    eprintln!("server: rejecting corrupt push for key {key} from worker {worker}: {e}");
+                    self.stats.rejected += 1;
+                    return vec![];
+                }
                 let st = self.keys.entry(key).or_insert_with(|| KeyState {
                     iter,
+                    dim: data.n,
                     acc: vec![0.0; data.n],
                     count: 0,
                     ready: None,
                     prev: None,
                     pending: Vec::new(),
                 });
+                // A self-consistent corrupt frame can still carry the wrong
+                // element count for this key; reject it rather than resize
+                // (or panic on) the accumulator.
+                if data.n != st.dim {
+                    eprintln!(
+                        "server: rejecting push for key {key} from worker {worker}: \
+                         n={} but the key has {} elements",
+                        data.n, st.dim
+                    );
+                    self.stats.rejected += 1;
+                    return vec![];
+                }
                 if st.iter != iter {
                     // New iteration for this key: retire the completed
                     // aggregate (slow workers may still pull it) and reset
@@ -103,7 +150,7 @@ impl ServerCore {
                     st.iter = iter;
                     st.count = 0;
                     st.acc.clear();
-                    st.acc.resize(data.n, 0.0);
+                    st.acc.resize(st.dim, 0.0);
                 }
                 let t = std::time::Instant::now();
                 self.opts.comp.add_decompressed(&data, &mut st.acc);
@@ -193,7 +240,18 @@ impl Server {
                     let tx = tx.clone();
                     recv_threads.push(std::thread::spawn(move || loop {
                         match ep.recv() {
-                            Ok(Message::Shutdown) | Err(_) => {
+                            Ok(Message::Shutdown) => {
+                                let _ = tx.send((i as u32, Message::Shutdown));
+                                break;
+                            }
+                            // A corrupt frame is recoverable: recv consumed
+                            // the whole length-prefixed frame before decode
+                            // failed, so the stream is still frame-aligned.
+                            // Drop the frame, keep the worker connected.
+                            Err(CommError::Protocol(e)) => {
+                                eprintln!("server: dropping corrupt frame from worker {i}: {e}");
+                            }
+                            Err(_) => {
                                 let _ = tx.send((i as u32, Message::Shutdown));
                                 break;
                             }
@@ -235,52 +293,110 @@ impl Server {
 }
 
 /// Key → server assignment with workload balancing (§4.2.4).
+///
+/// Since the block pipeline, assignment is keyed by arbitrary (packed)
+/// block keys rather than dense tensor indices: use [`balanced_keyed`] /
+/// [`round_robin_keyed`] for block plans. The dense-index constructors
+/// remain for whole-tensor plans (a tensor id *is* its block-0 key).
+///
+/// [`balanced_keyed`]: ShardPlan::balanced_keyed
+/// [`round_robin_keyed`]: ShardPlan::round_robin_keyed
 #[derive(Clone, Debug)]
 pub struct ShardPlan {
-    pub assignment: Vec<usize>,
+    assignment: HashMap<Key, usize>,
+    servers: usize,
 }
 
 impl ShardPlan {
-    /// Greedy least-loaded assignment. `cost(key)` should reflect server
-    /// CPU work: compressed keys cost `numel × compress_factor`, bypassed
-    /// keys just `numel` (decompress-free memcpy aggregation).
+    /// Greedy least-loaded assignment over dense tensor-id keys
+    /// `0..costs.len()`. `cost(key)` should reflect server CPU work:
+    /// compressed keys cost `numel × compress_factor`, bypassed keys just
+    /// `numel` (decompress-free memcpy aggregation).
     pub fn balanced(costs: &[f64], servers: usize) -> ShardPlan {
-        assert!(servers >= 1);
-        let mut order: Vec<usize> = (0..costs.len()).collect();
-        order.sort_by(|a, b| costs[*b].partial_cmp(&costs[*a]).unwrap());
-        let mut load = vec![0.0f64; servers];
-        let mut assignment = vec![0usize; costs.len()];
-        for k in order {
-            let s = (0..servers).min_by(|a, b| load[*a].partial_cmp(&load[*b]).unwrap()).unwrap();
-            assignment[k] = s;
-            load[s] += costs[k];
-        }
-        ShardPlan { assignment }
+        let items: Vec<(Key, f64)> =
+            costs.iter().enumerate().map(|(k, &c)| (k as Key, c)).collect();
+        Self::balanced_keyed(&items, servers)
     }
 
-    /// Naive round-robin (the ablation's "no workload balance" arm).
+    /// Greedy least-loaded assignment over explicit `(key, cost)` pairs —
+    /// the pipeline's per-block plan. Deterministic: ties in cost break by
+    /// key, ties in load by server index.
+    pub fn balanced_keyed(items: &[(Key, f64)], servers: usize) -> ShardPlan {
+        assert!(servers >= 1);
+        let mut order: Vec<usize> = (0..items.len()).collect();
+        order.sort_by(|a, b| {
+            items[*b]
+                .1
+                .partial_cmp(&items[*a].1)
+                .unwrap()
+                .then_with(|| items[*a].0.cmp(&items[*b].0))
+        });
+        let mut load = vec![0.0f64; servers];
+        let mut assignment = HashMap::with_capacity(items.len());
+        for i in order {
+            let (key, cost) = items[i];
+            let s = (0..servers).min_by(|a, b| load[*a].partial_cmp(&load[*b]).unwrap()).unwrap();
+            assignment.insert(key, s);
+            load[s] += cost;
+        }
+        ShardPlan { assignment, servers }
+    }
+
+    /// Naive round-robin over dense tensor-id keys (the ablation's "no
+    /// workload balance" arm).
     pub fn round_robin(keys: usize, servers: usize) -> ShardPlan {
-        ShardPlan { assignment: (0..keys).map(|k| k % servers).collect() }
+        let keys: Vec<Key> = (0..keys as u64).collect();
+        Self::round_robin_keyed(&keys, servers)
+    }
+
+    /// Round-robin over explicit keys, in the order given.
+    pub fn round_robin_keyed(keys: &[Key], servers: usize) -> ShardPlan {
+        assert!(servers >= 1);
+        let assignment = keys.iter().enumerate().map(|(i, &k)| (k, i % servers)).collect();
+        ShardPlan { assignment, servers }
+    }
+
+    /// Number of servers this plan shards across.
+    pub fn servers(&self) -> usize {
+        self.servers
+    }
+
+    /// Number of keys in the plan.
+    pub fn len(&self) -> usize {
+        self.assignment.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.assignment.is_empty()
     }
 
     pub fn server_of(&self, key: Key) -> usize {
-        self.assignment[key as usize]
+        *self.assignment.get(&key).unwrap_or_else(|| {
+            let bk = BlockKey::unpack(key);
+            panic!("key {key} (tensor {}, block {}) not in the shard plan", bk.tensor, bk.block)
+        })
     }
 
-    /// Max/mean load ratio under `costs` (1.0 = perfectly balanced).
-    pub fn imbalance(&self, costs: &[f64]) -> f64 {
-        let servers = self.assignment.iter().max().map(|m| m + 1).unwrap_or(1);
-        let mut load = vec![0.0f64; servers];
-        for (k, &s) in self.assignment.iter().enumerate() {
-            load[s] += costs[k];
+    /// Max/mean load ratio (1.0 = perfectly balanced), with per-key costs
+    /// supplied by `cost_of`.
+    pub fn imbalance_by<F: Fn(Key) -> f64>(&self, cost_of: F) -> f64 {
+        let mut load = vec![0.0f64; self.servers];
+        for (&k, &s) in &self.assignment {
+            load[s] += cost_of(k);
         }
         let max = load.iter().cloned().fold(0.0f64, f64::max);
-        let mean = load.iter().sum::<f64>() / servers as f64;
+        let mean = load.iter().sum::<f64>() / self.servers.max(1) as f64;
         if mean == 0.0 {
             1.0
         } else {
             max / mean
         }
+    }
+
+    /// Max/mean load ratio for dense tensor-id plans (`key` indexes
+    /// `costs`).
+    pub fn imbalance(&self, costs: &[f64]) -> f64 {
+        self.imbalance_by(|k| costs[k as usize])
     }
 }
 
@@ -493,7 +609,7 @@ mod tests {
         assert!(bal.imbalance(&costs) <= rr.imbalance(&costs));
         // balanced puts the huge tensor alone-ish: its server gets few others
         let big_server = bal.server_of(0);
-        let others = bal.assignment.iter().skip(1).filter(|&&s| s == big_server).count();
+        let others = (1..costs.len()).filter(|&k| bal.server_of(k as Key) == big_server).count();
         assert!(others <= 5, "{others} small tensors share the big server");
     }
 
@@ -502,8 +618,99 @@ mod tests {
         let costs = vec![1.0; 16];
         let plan = ShardPlan::balanced(&costs, 4);
         for s in 0..4 {
-            assert!(plan.assignment.iter().any(|&x| x == s));
+            assert!((0..16).any(|k| plan.server_of(k as Key) == s));
         }
         assert!((plan.imbalance(&costs) - 1.0).abs() < 1e-9);
+    }
+
+    /// Per-block sharding (§4.2.4 under the pipeline): one huge tensor's
+    /// blocks spread over every server instead of pinning one shard.
+    #[test]
+    fn keyed_plan_spreads_blocks_of_one_tensor() {
+        // Tensor 0: 8 blocks of cost 100; tensors 1..5: one block each.
+        let mut items: Vec<(Key, f64)> =
+            (0..8).map(|b| (BlockKey::new(0, b).pack(), 100.0)).collect();
+        for t in 1..5u64 {
+            items.push((BlockKey::new(t, 0).pack(), 10.0));
+        }
+        let plan = ShardPlan::balanced_keyed(&items, 4);
+        assert_eq!(plan.len(), items.len());
+        let servers_of_big: std::collections::HashSet<usize> =
+            (0..8).map(|b| plan.server_of(BlockKey::new(0, b).pack())).collect();
+        assert_eq!(servers_of_big.len(), 4, "big tensor's blocks should span all servers");
+        // Deterministic: same inputs, same plan.
+        let plan2 = ShardPlan::balanced_keyed(&items, 4);
+        for &(k, _) in &items {
+            assert_eq!(plan.server_of(k), plan2.server_of(k));
+        }
+        let imb = plan.imbalance_by(|k| {
+            items.iter().find(|(key, _)| *key == k).map(|(_, c)| *c).unwrap()
+        });
+        let rr = ShardPlan::round_robin_keyed(
+            &items.iter().map(|(k, _)| *k).collect::<Vec<_>>(),
+            4,
+        );
+        let rr_imb = rr.imbalance_by(|k| {
+            items.iter().find(|(key, _)| *key == k).map(|(_, c)| *c).unwrap()
+        });
+        assert!(imb <= rr_imb + 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "not in the shard plan")]
+    fn unknown_key_panics_with_context() {
+        let plan = ShardPlan::balanced(&[1.0, 2.0], 2);
+        let _ = plan.server_of(BlockKey::new(7, 3).pack());
+    }
+
+    /// Corrupt push blocks are dropped at ingress, counted, and never panic
+    /// the aggregator.
+    #[test]
+    fn corrupt_push_is_rejected_not_fatal() {
+        let mut core = ServerCore::new(opts("topk", SyncMode::CompressedEf, 1));
+        let mut payload = Vec::new();
+        payload.extend_from_slice(&1u32.to_le_bytes());
+        payload.extend_from_slice(&500u32.to_le_bytes()); // index >= n
+        payload.extend_from_slice(&1.0f32.to_le_bytes());
+        let bad = crate::compress::Compressed {
+            scheme: crate::compress::SchemeId::TopK,
+            n: 4,
+            payload,
+        };
+        let replies =
+            core.handle(0, Message::Push { key: 0, iter: 0, worker: 0, data: bad });
+        assert!(replies.is_empty());
+        assert_eq!(core.stats.rejected, 1);
+        assert_eq!(core.stats.pushes, 0);
+        // A valid push afterwards still works.
+        let r = push(&mut core, 0, 0, 0, &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(r.len(), 1);
+        assert_eq!(core.stats.pushes, 1);
+    }
+
+    /// A *self-consistent* corrupt frame whose n disagrees with the key's
+    /// established size must be rejected at ingress, not resize or panic
+    /// the accumulator.
+    #[test]
+    fn push_with_wrong_element_count_is_rejected() {
+        let mut core = ServerCore::new(opts("identity", SyncMode::Full, 2));
+        push(&mut core, 0, 0, 0, &[1.0, 2.0, 3.0, 4.0]); // key 0 is 4 elems
+        // Internally-consistent identity block with only 2 elements.
+        let bad = crate::compress::Compressed {
+            scheme: crate::compress::SchemeId::Identity,
+            n: 2,
+            payload: vec![0u8; 8],
+        };
+        let r = core.handle(1, Message::Push { key: 0, iter: 0, worker: 1, data: bad });
+        assert!(r.is_empty());
+        assert_eq!(core.stats.rejected, 1);
+        // The honest worker can still complete the iteration.
+        let r = push(&mut core, 0, 0, 1, &[5.0, 6.0, 7.0, 8.0]);
+        assert_eq!(r.len(), 1);
+        let r = core.handle(0, Message::Pull { key: 0, iter: 0, worker: 0 });
+        let Message::PullResp { data, .. } = &r[0].1 else { panic!() };
+        let mut out = vec![0.0f32; 4];
+        core.opts.comp.decompress(data, &mut out);
+        assert_eq!(out, vec![3.0, 4.0, 5.0, 6.0]);
     }
 }

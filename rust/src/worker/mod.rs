@@ -1,13 +1,20 @@
 //! Worker node: the intra-node stage (simulated multi-GPU ring all-reduce
 //! with FP16 conversion, §4.1.1) and the inter-node client side of
-//! Algorithms 3/4 (EF-compress, push, pull, decompress).
+//! Algorithms 3/4 (EF-compress, push, pull, decompress) — serial per-key
+//! ([`WorkerComm::push`]/[`pull`](WorkerComm::pull)) or block-pipelined
+//! ([`WorkerComm::push_all`]/[`pull_all`](WorkerComm::pull_all), §4.2.1).
+
+pub mod pipeline;
 
 use crate::comm::{Endpoint, Key, Message};
 use crate::compress::ef::EfState;
 use crate::compress::{Compressor, Ctx};
 use crate::configx::SyncMode;
+use crate::parallel::{Semaphore, ThreadPool};
 use crate::util::f16::f16_round;
 use crate::util::rng::Xoshiro256;
+use self::pipeline::{BlockEf, Partition};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 /// Ring all-reduce (average) across the node's GPU ranks with the paper's
@@ -54,20 +61,41 @@ pub fn ring_allreduce_fp16(rank_grads: &mut Vec<Vec<f32>>) -> Vec<f32> {
 }
 
 /// Inter-node client: one per worker node. Owns the worker-side EF
-/// residuals and the RNG stream for stochastic compressors.
+/// residuals, the RNG stream for stochastic compressors, and (for the
+/// pipelined path) the node's CPU compression pool.
 pub struct WorkerComm {
     pub worker_id: u32,
     comp: Arc<dyn Compressor>,
     sync: SyncMode,
+    fused: bool,
+    /// Serial-path residuals (one caller at a time).
     ef: EfState,
+    /// Pipelined-path residuals (per-block locks; see [`BlockEf`]).
+    block_ef: Arc<BlockEf>,
     rng: Xoshiro256,
+    seed: u64,
     intra_threads: usize,
-    /// endpoints[s] talks to server s.
-    endpoints: Vec<Box<dyn Endpoint>>,
-    plan: crate::ps::ShardPlan,
+    /// endpoints[s] talks to server s. Shared so pipeline jobs can send
+    /// from pool threads (both transports lock internally).
+    endpoints: Arc<Vec<Box<dyn Endpoint>>>,
+    plan: Arc<crate::ps::ShardPlan>,
+    /// This node's compression pool (§4.2.1 inter-task parallelism).
+    pool: Arc<ThreadPool>,
+    /// Bounds outstanding compress/push jobs (pipeline.inflight knob).
+    inflight: Arc<Semaphore>,
+}
+
+/// RAII permit: releases its semaphore slot even if the job panics.
+struct Permit(Arc<Semaphore>);
+
+impl Drop for Permit {
+    fn drop(&mut self) {
+        self.0.release();
+    }
 }
 
 impl WorkerComm {
+    #[allow(clippy::too_many_arguments)]
     pub fn new(
         worker_id: u32,
         comp: Arc<dyn Compressor>,
@@ -76,17 +104,24 @@ impl WorkerComm {
         intra_threads: usize,
         seed: u64,
         endpoints: Vec<Box<dyn Endpoint>>,
-        plan: crate::ps::ShardPlan,
+        plan: Arc<crate::ps::ShardPlan>,
+        pool_threads: usize,
+        inflight: usize,
     ) -> Self {
         WorkerComm {
             worker_id,
             comp,
             sync,
+            fused,
             ef: EfState::new(fused),
+            block_ef: Arc::new(BlockEf::new()),
             rng: Xoshiro256::seed_from_u64(seed ^ (worker_id as u64).wrapping_mul(0x9E3779B97F4A7C15)),
+            seed,
             intra_threads,
-            endpoints,
+            endpoints: Arc::new(endpoints),
             plan,
+            pool: Arc::new(ThreadPool::new(pool_threads)),
+            inflight: Arc::new(Semaphore::new(inflight)),
         }
     }
 
@@ -135,6 +170,136 @@ impl WorkerComm {
                 m => panic!("worker got unexpected {m:?}"),
             }
         }
+    }
+
+    /// Pipelined push of every block in `parts` (§4.2.1): each block's
+    /// EF-correct + compress + send runs as one pool job, so compression
+    /// of block *i+1* overlaps the in-flight send of block *i*, and up to
+    /// `pool_threads` blocks compress concurrently. Blocks for different
+    /// server shards interleave, giving the servers work early (§4.2.4).
+    ///
+    /// Returns summed compression seconds across jobs (CPU time, not
+    /// wall time — under the pipeline the wall cost is what shrinks).
+    /// Blocks until every push of this iteration is on the wire, which
+    /// preserves the per-key push-then-pull FIFO order the server's
+    /// one-slot rollover relies on.
+    pub fn push_all(&self, iter: u64, grad: &[f32], parts: &Partition) -> f64 {
+        let compress_ns = Arc::new(AtomicU64::new(0));
+        for sb in parts.subs() {
+            // Bound staging memory: wait for a slot before copying the
+            // next block out of the gradient.
+            self.inflight.acquire();
+            let permit = Permit(Arc::clone(&self.inflight));
+            let g = grad[sb.range.clone()].to_vec();
+            let key = sb.key;
+            let server = self.plan.server_of(key);
+            let endpoints = Arc::clone(&self.endpoints);
+            let block_ef = Arc::clone(&self.block_ef);
+            let comp = Arc::clone(&self.comp);
+            let (sync, fused, intra, worker) =
+                (self.sync, self.fused, self.intra_threads, self.worker_id);
+            let seed = pipeline::job_seed(self.seed, worker, key, iter);
+            let cns = Arc::clone(&compress_ns);
+            self.pool.execute(move || {
+                let _permit = permit; // held (and released) for the job's lifetime
+                let t = std::time::Instant::now();
+                let mut rng = Xoshiro256::seed_from_u64(seed);
+                let mut ctx = Ctx::with_threads(&mut rng, intra);
+                let data = match sync {
+                    SyncMode::CompressedEf => {
+                        block_ef.compress(key, g, comp.as_ref(), fused, &mut ctx)
+                    }
+                    _ => comp.compress(&g, &mut ctx),
+                };
+                cns.fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                endpoints[server]
+                    .send(Message::Push { key, iter, worker, data })
+                    .expect("server alive");
+            });
+        }
+        self.pool.wait();
+        let panics = self.pool.take_panics();
+        assert!(panics == 0, "{panics} push pipeline job(s) panicked");
+        compress_ns.load(Ordering::Relaxed) as f64 * 1e-9
+    }
+
+    /// Pipelined pull of every block in `parts`: all pull requests go out
+    /// first, then one receive loop per server endpoint hands each
+    /// response to the pool for decompression — so decompressing block *i*
+    /// overlaps receiving block *i+1*. Decompressed blocks scatter into
+    /// `out` by their partition ranges.
+    ///
+    /// Returns (received wire bytes, summed decompression seconds).
+    pub fn pull_all(&self, iter: u64, out: &mut [f32], parts: &Partition) -> (u64, f64) {
+        let mut expect = vec![0usize; self.endpoints.len()];
+        for sb in parts.subs() {
+            let s = self.plan.server_of(sb.key);
+            self.endpoints[s]
+                .send(Message::Pull { key: sb.key, iter, worker: self.worker_id })
+                .expect("server alive");
+            expect[s] += 1;
+        }
+        let ranges = parts.ranges_by_key();
+        let (tx, rx) = std::sync::mpsc::channel::<(std::ops::Range<usize>, Vec<f32>)>();
+        let rx_bytes = AtomicU64::new(0);
+        let decompress_ns = Arc::new(AtomicU64::new(0));
+        std::thread::scope(|scope| {
+            let ranges = &ranges;
+            let rx_bytes = &rx_bytes;
+            let pool = &self.pool;
+            let comp = &self.comp;
+            let dns = &decompress_ns;
+            for (sidx, ep) in self.endpoints.iter().enumerate() {
+                let want = expect[sidx];
+                if want == 0 {
+                    continue;
+                }
+                let tx = tx.clone();
+                scope.spawn(move || {
+                    let mut got = 0usize;
+                    while got < want {
+                        match ep.recv().expect("server alive") {
+                            Message::Ack { .. } => {}
+                            m @ Message::PullResp { .. } => {
+                                rx_bytes.fetch_add(
+                                    crate::comm::frame::frame_bytes(&m) as u64,
+                                    Ordering::Relaxed,
+                                );
+                                let Message::PullResp { key, iter: i, data } = m else {
+                                    unreachable!()
+                                };
+                                assert_eq!(i, iter, "pull response for wrong iteration");
+                                let range = ranges
+                                    .get(&key)
+                                    .expect("pull response for unknown block key")
+                                    .clone();
+                                assert_eq!(data.n, range.len(), "block size mismatch on key {key}");
+                                got += 1;
+                                let tx = tx.clone();
+                                let comp = Arc::clone(comp);
+                                let dns = Arc::clone(dns);
+                                pool.execute(move || {
+                                    let t = std::time::Instant::now();
+                                    let mut buf = vec![0.0f32; data.n];
+                                    comp.decompress(&data, &mut buf);
+                                    dns.fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                                    let _ = tx.send((range, buf));
+                                });
+                            }
+                            m => panic!("worker got unexpected {m:?}"),
+                        }
+                    }
+                });
+            }
+        });
+        self.pool.wait();
+        let panics = self.pool.take_panics();
+        assert!(panics == 0, "{panics} pull pipeline job(s) panicked");
+        drop(tx);
+        for (range, buf) in rx {
+            out[range].copy_from_slice(&buf);
+        }
+        (rx_bytes.load(Ordering::Relaxed), decompress_ns.load(Ordering::Relaxed) as f64 * 1e-9)
     }
 
     /// Total bytes this worker has sent.

@@ -1,0 +1,277 @@
+//! Block-partitioned push/pull pipeline (paper §4.2.1 / §4.2.3 / §4.2.4).
+//!
+//! The paper's headline system observation is that two-way compression
+//! only pays off when (de)compression is *pipelined* with communication:
+//! tensors are partitioned into fixed-size blocks, each block gets its own
+//! wire key ([`crate::comm::BlockKey`]), and dozens of CPU compression jobs
+//! run concurrently so that compressing block *i+1* overlaps the in-flight
+//! send of block *i* (and symmetrically, decompression overlaps receive on
+//! the pull side). Compressing each whole tensor inline on the step path —
+//! the pre-pipeline behavior, still available as the serial reference path
+//! — serializes CPU work behind the network, which is exactly what makes
+//! naive compression a net loss (Agarwal et al. '21).
+//!
+//! This module owns the partitioning ([`Partition`]) and the shared
+//! per-block error-feedback state ([`BlockEf`]) that lets many compression
+//! jobs run concurrently: each block's residual is an independent
+//! `Mutex<Vec<f32>>`, so jobs on different blocks never contend beyond a
+//! brief map lookup. The driving loops live in
+//! [`WorkerComm::push_all`](crate::worker::WorkerComm::push_all) /
+//! [`pull_all`](crate::worker::WorkerComm::pull_all).
+
+use crate::comm::{BlockKey, Key};
+use crate::compress::{Compressed, Compressor, Ctx};
+use crate::optim::blocks::Block;
+use std::collections::HashMap;
+use std::ops::Range;
+use std::sync::{Arc, Mutex};
+
+/// One wire unit: a contiguous slice of the flat gradient vector with its
+/// own packed block key.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SubBlock {
+    /// Packed [`BlockKey`] — this block's identity on the wire and in the
+    /// shard plan.
+    pub key: Key,
+    /// The slice of the flat parameter/gradient vector this block covers.
+    pub range: Range<usize>,
+}
+
+impl SubBlock {
+    pub fn len(&self) -> usize {
+        self.range.end - self.range.start
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.range.is_empty()
+    }
+}
+
+/// A tensor list partitioned into fixed-size blocks (§4.2.3).
+///
+/// Tensors strictly larger than `block_elems` are split into
+/// `ceil(len / block_elems)` chunks; smaller tensors stay whole (block 0).
+/// With `split = false` every tensor is a single block whose key equals its
+/// tensor id — bit-compatible with the pre-pipeline keyspace.
+#[derive(Clone, Debug)]
+pub struct Partition {
+    subs: Vec<SubBlock>,
+    block_elems: usize,
+}
+
+impl Partition {
+    /// Partition `blocks` (the model's parameter tensors) with blocks of
+    /// `block_bytes` bytes of f32 data. `split = false` disables
+    /// partitioning (the serial/ablation arm) while keeping the same
+    /// key/plan machinery.
+    pub fn new(blocks: &[Block], block_bytes: usize, split: bool) -> Partition {
+        let block_elems = (block_bytes / 4).max(1);
+        let mut subs = Vec::new();
+        for (t, b) in blocks.iter().enumerate() {
+            let nb = if split && b.len > block_elems { b.len.div_ceil(block_elems) } else { 1 };
+            let chunk = if nb == 1 { b.len } else { block_elems };
+            for j in 0..nb {
+                let lo = b.offset + j * chunk;
+                let hi = (lo + chunk).min(b.offset + b.len);
+                subs.push(SubBlock { key: BlockKey::new(t as u64, j as u32).pack(), range: lo..hi });
+            }
+        }
+        Partition { subs, block_elems }
+    }
+
+    /// The wire units, in tensor order then block order.
+    pub fn subs(&self) -> &[SubBlock] {
+        &self.subs
+    }
+
+    pub fn block_elems(&self) -> usize {
+        self.block_elems
+    }
+
+    /// Number of wire units (>= number of tensors).
+    pub fn len(&self) -> usize {
+        self.subs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.subs.is_empty()
+    }
+
+    /// key -> flat range lookup (used by the pull side to scatter
+    /// decompressed blocks back into the output vector).
+    pub fn ranges_by_key(&self) -> HashMap<Key, Range<usize>> {
+        self.subs.iter().map(|sb| (sb.key, sb.range.clone())).collect()
+    }
+}
+
+/// Concurrent per-block error-feedback store (worker side of Alg. 4 under
+/// the pipeline). Unlike [`crate::compress::ef::EfState`], which assumes a
+/// single caller, each block's residual lives behind its own mutex so
+/// compression jobs for different blocks proceed in parallel.
+#[derive(Default)]
+pub struct BlockEf {
+    residuals: Mutex<HashMap<Key, Arc<Mutex<Vec<f32>>>>>,
+}
+
+impl BlockEf {
+    pub fn new() -> BlockEf {
+        BlockEf::default()
+    }
+
+    fn slot(&self, key: Key, len: usize) -> Arc<Mutex<Vec<f32>>> {
+        let mut map = self.residuals.lock().unwrap();
+        Arc::clone(map.entry(key).or_insert_with(|| Arc::new(Mutex::new(vec![0.0f32; len]))))
+    }
+
+    /// One EF cycle for block `key` over the owned gradient chunk `g`:
+    /// correct (`q = g + e`), compress, store the new residual. Mirrors
+    /// `EfState::compress_owned`, block-locked.
+    pub fn compress(
+        &self,
+        key: Key,
+        mut g: Vec<f32>,
+        comp: &dyn Compressor,
+        fused: bool,
+        ctx: &mut Ctx,
+    ) -> Compressed {
+        let slot = self.slot(key, g.len());
+        let mut e = slot.lock().unwrap();
+        assert_eq!(e.len(), g.len(), "block {key} changed size");
+        for (gi, ei) in g.iter_mut().zip(e.iter()) {
+            *gi += *ei;
+        }
+        if fused {
+            let c = comp.compress_ef_fused(&mut g, ctx);
+            *e = g;
+            c
+        } else {
+            let c = comp.compress(&g, ctx);
+            let mut dec = vec![0.0f32; g.len()];
+            comp.decompress(&c, &mut dec);
+            for (gi, di) in g.iter_mut().zip(&dec) {
+                *gi -= di;
+            }
+            *e = g;
+            c
+        }
+    }
+
+    /// Total f32 elements held as residual state (memory accounting).
+    pub fn state_elems(&self) -> usize {
+        self.residuals.lock().unwrap().values().map(|v| v.lock().unwrap().len()).sum()
+    }
+
+    /// Peek at one block's residual (tests / diagnostics).
+    pub fn residual(&self, key: Key) -> Option<Vec<f32>> {
+        self.residuals.lock().unwrap().get(&key).map(|v| v.lock().unwrap().clone())
+    }
+}
+
+/// Deterministic per-(worker, block, iteration) RNG seed for stochastic
+/// compressors: pipeline job scheduling must never change the stream a
+/// block sees.
+pub fn job_seed(base: u64, worker: u32, key: Key, iter: u64) -> u64 {
+    base ^ (worker as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        ^ key.wrapping_mul(0xD1B5_4A32_D192_ED03)
+        ^ iter.wrapping_mul(0x94D0_49BB_1331_11EB)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::by_name;
+    use crate::optim::blocks::from_shapes;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn partition_tiles_exactly() {
+        let blocks = from_shapes(&[
+            ("a".into(), 1000), // 1000 > 256 -> 4 blocks
+            ("b".into(), 256),  // == block_elems -> whole
+            ("c".into(), 7),    // small -> whole
+            ("d".into(), 513),  // -> 3 blocks (256, 256, 1)
+        ]);
+        let p = Partition::new(&blocks, 1024, true); // 256 elems per block
+        assert_eq!(p.block_elems(), 256);
+        assert_eq!(p.len(), 4 + 1 + 1 + 3);
+        // Ranges tile [0, 1776) in order without gaps or overlap.
+        let mut expect = 0usize;
+        for sb in p.subs() {
+            assert_eq!(sb.range.start, expect, "gap before {:?}", sb);
+            assert!(!sb.is_empty());
+            assert!(sb.len() <= 256);
+            expect = sb.range.end;
+        }
+        assert_eq!(expect, 1776);
+        // Keys are unique and carry the right tensor/block structure.
+        let mut seen = std::collections::HashSet::new();
+        for sb in p.subs() {
+            assert!(seen.insert(sb.key), "duplicate key {}", sb.key);
+        }
+        let bk = BlockKey::unpack(p.subs()[1].key);
+        assert_eq!((bk.tensor, bk.block), (0, 1));
+        // Tensor "d" splits 256 + 256 + 1.
+        let d: Vec<usize> = p.subs().iter().skip(6).map(|sb| sb.len()).collect();
+        assert_eq!(d, vec![256, 256, 1]);
+    }
+
+    #[test]
+    fn partition_disabled_matches_tensor_keys() {
+        let blocks = from_shapes(&[("a".into(), 1000), ("b".into(), 50)]);
+        let p = Partition::new(&blocks, 64, false);
+        assert_eq!(p.len(), 2);
+        assert_eq!(p.subs()[0].key, 0);
+        assert_eq!(p.subs()[1].key, 1);
+        assert_eq!(p.subs()[0].range, 0..1000);
+        assert_eq!(p.subs()[1].range, 1000..1050);
+    }
+
+    #[test]
+    fn block_ef_matches_single_threaded_efstate() {
+        use crate::compress::ef::EfState;
+        let comp = by_name("topk", 0.2).unwrap();
+        let bef = BlockEf::new();
+        let mut ef = EfState::new(true);
+        let mut data_rng = Xoshiro256::seed_from_u64(3);
+        for iter in 0..6u64 {
+            let mut g = vec![0.0f32; 64];
+            data_rng.fill_normal(&mut g, 1.0);
+            let mut r1 = Xoshiro256::seed_from_u64(iter);
+            let mut r2 = Xoshiro256::seed_from_u64(iter);
+            let ca = bef.compress(5, g.clone(), comp.as_ref(), true, &mut Ctx::new(&mut r1));
+            let cb = ef.compress(5, &g, comp.as_ref(), &mut Ctx::new(&mut r2));
+            assert_eq!(ca, cb, "wire mismatch at iter {iter}");
+            assert_eq!(bef.residual(5).unwrap(), ef.residual(5).unwrap().to_vec());
+        }
+    }
+
+    #[test]
+    fn block_ef_is_concurrency_safe_per_block() {
+        let comp = by_name("topk", 0.25).unwrap();
+        let bef = Arc::new(BlockEf::new());
+        std::thread::scope(|s| {
+            for key in 0..8u64 {
+                let bef = Arc::clone(&bef);
+                let comp = comp.clone();
+                s.spawn(move || {
+                    let mut rng = Xoshiro256::seed_from_u64(key);
+                    for _ in 0..20 {
+                        let g: Vec<f32> = (0..32).map(|i| (key as f32) + i as f32).collect();
+                        let _ = bef.compress(key, g, comp.as_ref(), true, &mut Ctx::new(&mut rng));
+                    }
+                });
+            }
+        });
+        assert_eq!(bef.state_elems(), 8 * 32);
+    }
+
+    #[test]
+    fn job_seed_is_distinct_across_axes() {
+        let base = 42;
+        let a = job_seed(base, 0, 1, 0);
+        assert_ne!(a, job_seed(base, 1, 1, 0), "worker must change the seed");
+        assert_ne!(a, job_seed(base, 0, 2, 0), "key must change the seed");
+        assert_ne!(a, job_seed(base, 0, 1, 1), "iter must change the seed");
+        assert_eq!(a, job_seed(base, 0, 1, 0), "seed must be deterministic");
+    }
+}

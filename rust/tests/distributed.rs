@@ -1,7 +1,8 @@
 //! Distributed-system integration: the PS/worker fabric over real message
-//! transports, including TCP, and failure/edge behaviours.
+//! transports, including TCP, the block-partitioned pipeline (§4.2.1), and
+//! failure/edge behaviours.
 
-use byteps_compress::comm::{tcp, Endpoint, Message};
+use byteps_compress::comm::{tcp, BlockKey, CommError, Endpoint, Message};
 use byteps_compress::compress::{by_name, Ctx};
 use byteps_compress::configx::{SyncMode, TrainConfig};
 use byteps_compress::engine::CommFabric;
@@ -9,6 +10,7 @@ use byteps_compress::optim::sync::{full_push_pull, CompressEfPushPull};
 use byteps_compress::ps::{Server, ServerOptions};
 use byteps_compress::testutil::assert_allclose;
 use byteps_compress::util::rng::Xoshiro256;
+use byteps_compress::worker::pipeline::SubBlock;
 
 fn cfg(scheme: &str, param: f64, sync: SyncMode, nodes: usize, servers: usize) -> TrainConfig {
     let mut cfg = TrainConfig::default();
@@ -19,6 +21,15 @@ fn cfg(scheme: &str, param: f64, sync: SyncMode, nodes: usize, servers: usize) -
     cfg.compression.sync = sync;
     cfg.system.size_threshold_on = false;
     cfg
+}
+
+/// Integer-valued gradients: every partial sum is exactly representable in
+/// f32, so aggregation order cannot change the result bits and runs are
+/// comparable bit-for-bit.
+fn integer_grads(nodes: usize, dim: usize) -> Vec<Vec<f32>> {
+    (0..nodes)
+        .map(|w| (0..dim).map(|i| (((w + 1) * ((i % 13) + 1)) as f32) - 7.0).collect())
+        .collect()
 }
 
 /// Multi-server sharding must not change the math: 1-server and 4-server
@@ -54,6 +65,189 @@ fn sharding_is_transparent() {
     let one = run(1);
     let four = run(4);
     assert_allclose(&one, &four, 1e-6, 1e-5, "1-server vs 4-server");
+}
+
+/// Tentpole acceptance: with the identity compressor, the block-partitioned
+/// pipeline is bit-identical to the serial whole-tensor path — partitioning
+/// and job scheduling change *when* work happens, never the bytes.
+#[test]
+fn pipelined_identity_is_bit_identical_to_serial() {
+    let sizes: [usize; 4] = [700, 2048, 96, 3000];
+    let dim: usize = sizes.iter().sum();
+    let nodes = 3;
+    let blocks = byteps_compress::optim::blocks::from_shapes(
+        &sizes.iter().enumerate().map(|(i, &s)| (format!("t{i}"), s)).collect::<Vec<_>>(),
+    );
+    let grads = integer_grads(nodes, dim);
+
+    let run = |pipelined: bool| -> Vec<Vec<f32>> {
+        let mut c = cfg("identity", 0.0, SyncMode::Full, nodes, 2);
+        c.pipeline.enabled = pipelined;
+        c.pipeline.block_bytes = 512 * 4; // 512-elem blocks: every big tensor splits
+        c.pipeline.inflight = 4;
+        let mut fabric = CommFabric::new(&c, blocks.clone(), dim).unwrap();
+        if pipelined {
+            // The partition really is block-level (more wire units than tensors).
+            assert!(fabric.partition().len() > blocks.len());
+        } else {
+            assert_eq!(fabric.partition().len(), blocks.len());
+        }
+        let mut out = Vec::new();
+        for _ in 0..3 {
+            let (agg, stats) = fabric.exchange(&grads);
+            assert!(stats.wire_bytes > 0);
+            out.push(agg);
+        }
+        fabric.shutdown();
+        out
+    };
+
+    let serial = run(false);
+    let pipelined = run(true);
+    for (round, (a, b)) in serial.iter().zip(&pipelined).enumerate() {
+        assert_eq!(a, b, "round {round}: pipelined aggregate differs from serial");
+    }
+    // And both equal the exact mean.
+    let want = full_push_pull(&grads);
+    assert_eq!(serial[0], want);
+}
+
+/// Pipelined top-k + EF equals the in-memory Alg. 4 reference applied
+/// independently per block — per-block keys, residuals, and server EF all
+/// line up under concurrent job scheduling and out-of-order block arrival.
+#[test]
+fn pipelined_topk_ef_matches_per_block_reference() {
+    let nodes = 2;
+    let blocks = byteps_compress::optim::blocks::from_shapes(&[
+        ("big".into(), 1200),
+        ("mid".into(), 800),
+    ]);
+    let dim = 2000;
+    let mut c = cfg("topk", 0.1, SyncMode::CompressedEf, nodes, 3);
+    c.pipeline.enabled = true;
+    c.pipeline.block_bytes = 256 * 4; // 256-elem blocks
+    let mut fabric = CommFabric::new(&c, blocks, dim).unwrap();
+    let subs: Vec<SubBlock> = fabric.partition().subs().to_vec();
+    assert_eq!(subs.len(), 5 + 4, "1200 -> 5 blocks, 800 -> 4 blocks");
+
+    let comp = by_name("topk", 0.1).unwrap();
+    let mut refs: Vec<CompressEfPushPull> = subs
+        .iter()
+        .map(|_| CompressEfPushPull::new(comp.clone(), nodes, 1, true))
+        .collect();
+
+    let mut data_rng = Xoshiro256::seed_from_u64(11);
+    for round in 0..4 {
+        let grads: Vec<Vec<f32>> = (0..nodes)
+            .map(|_| {
+                let mut g = vec![0.0f32; dim];
+                data_rng.fill_normal(&mut g, 1.0);
+                g
+            })
+            .collect();
+        let (got, _) = fabric.exchange(&grads);
+        let mut want = vec![0.0f32; dim];
+        for (j, sb) in subs.iter().enumerate() {
+            let per_block: Vec<Vec<f32>> =
+                grads.iter().map(|g| g[sb.range.clone()].to_vec()).collect();
+            let p = refs[j].round(sb.key, &per_block);
+            want[sb.range.clone()].copy_from_slice(&p);
+        }
+        assert_allclose(&got, &want, 1e-6, 1e-5, &format!("round {round} vs per-block Alg.4"));
+    }
+    fabric.shutdown();
+}
+
+/// The one-slot `prev` rollover invariant holds per block key: many rounds
+/// over many blocks with skewed worker timing (each exchange has workers
+/// finishing in different orders) never deadlock or mis-serve a pull.
+#[test]
+fn pipelined_many_rounds_preserve_rollover_invariant() {
+    let nodes = 4;
+    let sizes: [usize; 3] = [1030, 517, 2051]; // awkward remainders
+    let dim: usize = sizes.iter().sum();
+    let blocks = byteps_compress::optim::blocks::from_shapes(
+        &sizes.iter().enumerate().map(|(i, &s)| (format!("t{i}"), s)).collect::<Vec<_>>(),
+    );
+    let mut c = cfg("topk", 0.05, SyncMode::CompressedEf, nodes, 3);
+    c.pipeline.enabled = true;
+    c.pipeline.block_bytes = 128 * 4; // many small blocks
+    c.pipeline.inflight = 2; // force submission back-pressure
+    let mut fabric = CommFabric::new(&c, blocks, dim).unwrap();
+    let mut data_rng = Xoshiro256::seed_from_u64(21);
+    for _ in 0..8 {
+        let grads: Vec<Vec<f32>> = (0..nodes)
+            .map(|_| {
+                let mut g = vec![0.0f32; dim];
+                data_rng.fill_normal(&mut g, 1.0);
+                g
+            })
+            .collect();
+        let (agg, stats) = fabric.exchange(&grads);
+        assert_eq!(agg.len(), dim);
+        assert!(stats.wire_bytes > 0);
+    }
+    let stats = fabric.shutdown();
+    let pushes: u64 = stats.iter().map(|s| s.pushes).sum();
+    // 8 rounds x 4 workers x (9 + 5 + 17) blocks.
+    let n_blocks = (1030usize.div_ceil(128) + 517usize.div_ceil(128) + 2051usize.div_ceil(128)) as u64;
+    assert_eq!(pushes, 8 * 4 * n_blocks);
+    assert_eq!(stats.iter().map(|s| s.rejected).sum::<u64>(), 0);
+}
+
+/// A corrupt frame arriving over real TCP is rejected at decode as a
+/// protocol error (server-crash regression: out-of-range top-k index).
+#[test]
+fn tcp_corrupt_frame_is_protocol_error() {
+    use std::io::Write;
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let client = std::thread::spawn(move || {
+        let mut s = std::net::TcpStream::connect(addr).unwrap();
+        // Hand-rolled Push frame: topk block n=8 with index 9999.
+        let mut body = Vec::new();
+        body.push(1u8); // TAG_PUSH
+        body.extend_from_slice(&5u64.to_le_bytes()); // key
+        body.extend_from_slice(&0u64.to_le_bytes()); // iter
+        body.extend_from_slice(&0u32.to_le_bytes()); // worker
+        body.push(3u8); // SchemeId::TopK
+        body.extend_from_slice(&8u64.to_le_bytes()); // n
+        body.extend_from_slice(&12u32.to_le_bytes()); // payload len
+        body.extend_from_slice(&1u32.to_le_bytes()); // k = 1
+        body.extend_from_slice(&9999u32.to_le_bytes()); // index out of range
+        body.extend_from_slice(&1.0f32.to_le_bytes());
+        let mut frame = (body.len() as u32).to_le_bytes().to_vec();
+        frame.extend_from_slice(&body);
+        s.write_all(&frame).unwrap();
+    });
+    let (stream, _) = listener.accept().unwrap();
+    let ep = tcp::TcpEndpoint::from_stream(stream).unwrap();
+    let err = ep.recv().unwrap_err();
+    assert!(
+        matches!(err, CommError::Protocol(ref m) if m.contains("out of range")),
+        "expected protocol error, got {err:?}"
+    );
+    client.join().unwrap();
+}
+
+/// A single large tensor partitions into distinct per-block wire keys (the
+/// unit the balanced shard plan spreads across servers — plan behaviour
+/// itself is covered in `ps::tests::keyed_plan_spreads_blocks_of_one_tensor`).
+#[test]
+fn one_tensor_partitions_into_distinct_block_keys() {
+    let dim = 4096;
+    let blocks = byteps_compress::optim::blocks::single(dim);
+    let mut c = cfg("topk", 0.01, SyncMode::CompressedEf, 2, 4);
+    c.pipeline.enabled = true;
+    c.pipeline.block_bytes = 512 * 4;
+    let fabric = CommFabric::new(&c, blocks, dim).unwrap();
+    let keys: Vec<_> = fabric.partition().subs().iter().map(|sb| sb.key).collect();
+    assert_eq!(keys.len(), 8);
+    // All 8 blocks belong to tensor 0 but carry distinct block sub-keys.
+    for (j, &k) in keys.iter().enumerate() {
+        assert_eq!(BlockKey::unpack(k), BlockKey::new(0, j as u32));
+    }
+    fabric.shutdown();
 }
 
 /// The full protocol over real TCP sockets: one server process-equivalent
