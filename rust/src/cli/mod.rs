@@ -19,6 +19,17 @@ pub struct Opt {
     pub help: &'static str,
 }
 
+/// Split a leading subcommand (the first argument, when it does not start
+/// with `-`) from argv. The single source of truth for subcommand
+/// detection: [`Args::parse`] uses it, and launchers that pick a
+/// per-subcommand option list call it first.
+pub fn split_subcommand(argv: &[String]) -> (Option<String>, &[String]) {
+    match argv.first() {
+        Some(first) if !first.starts_with('-') => (Some(first.clone()), &argv[1..]),
+        _ => (None, argv),
+    }
+}
+
 impl Args {
     /// Parse argv (without the program name) against the declared options.
     pub fn parse(
@@ -28,15 +39,9 @@ impl Args {
     ) -> Result<Args, String> {
         let mut flags = BTreeMap::new();
         let mut positional = Vec::new();
-        let mut subcommand = None;
-        let mut it = argv.iter().peekable();
-        if with_subcommand {
-            if let Some(first) = it.peek() {
-                if !first.starts_with('-') {
-                    subcommand = Some(it.next().unwrap().clone());
-                }
-            }
-        }
+        let (subcommand, rest) =
+            if with_subcommand { split_subcommand(argv) } else { (None, argv) };
+        let mut it = rest.iter().peekable();
         while let Some(arg) = it.next() {
             if let Some(stripped) = arg.strip_prefix("--") {
                 let (name, inline_val) = match stripped.split_once('=') {
@@ -175,6 +180,17 @@ mod tests {
         assert!(Args::parse(&argv(&["--verbose=yes"]), false, &opts()).is_err());
         let a = Args::parse(&argv(&["--steps", "abc"]), false, &opts()).unwrap();
         assert!(a.usize_or("steps", 0).is_err());
+    }
+
+    #[test]
+    fn split_subcommand_detects_leading_word() {
+        let (sub, rest) = split_subcommand(&argv(&["worker", "--rank", "1"]));
+        assert_eq!(sub.as_deref(), Some("worker"));
+        assert_eq!(rest, &argv(&["--rank", "1"])[..]);
+        let (sub, rest) = split_subcommand(&argv(&["--rank", "1"]));
+        assert_eq!(sub, None);
+        assert_eq!(rest.len(), 2);
+        assert_eq!(split_subcommand(&[]).0, None);
     }
 
     #[test]

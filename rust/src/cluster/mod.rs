@@ -1,0 +1,588 @@
+//! Multi-process TCP cluster mode: `bytepsc server --listen ADDR --shard I`
+//! and `bytepsc worker --servers A,B,... --rank R` (paper §4, the deployed
+//! BytePS shape: one PS shard and one worker per OS process, connected
+//! over real sockets).
+//!
+//! ## Handshake
+//!
+//! Every worker connects to every server shard (with retry — startup order
+//! is free) and registers before any training traffic:
+//!
+//! ```text
+//! worker                                server shard s
+//!   | -- Hello { worker: rank, n_keys } -->|   validate rank + key count
+//!   | <-- Welcome { n_workers, shard: s,   |
+//!   |               seed, plan } ----------|   full (key -> shard) plan
+//! ```
+//!
+//! The worker *adopts* the run seed and the shard plan from the servers
+//! instead of assuming co-located construction, and cross-checks that all
+//! shards report the same `(n_workers, seed, plan)` and that shard `s`
+//! really was the `s`-th address in `--servers` (the plan's shard indices
+//! are meaningless if the address order disagrees). A malformed or silent
+//! connection is dropped by the server after a read timeout — it never
+//! blocks the accept loop forever, and never reaches the aggregator.
+//!
+//! ## Shutdown
+//!
+//! Workers fan `Shutdown` out to every shard when their run completes
+//! ([`crate::worker::WorkerComm::shutdown`]); a server exits once every
+//! registered worker has said goodbye (or dropped its connection).
+//!
+//! ## Determinism
+//!
+//! Both launchers derive their fabric from the same
+//! [`FabricSpec::from_config`], and the synthetic driver's gradients are
+//! integer-valued, so a cluster run is bit-identical to the single-process
+//! inproc fabric with the identity compressor (tested in
+//! `rust/tests/cluster_tcp.rs`).
+
+use crate::comm::tcp::{connect_retry, TcpEndpoint};
+use crate::comm::{Endpoint, Key, Message};
+use crate::configx::TrainConfig;
+use crate::engine::FabricSpec;
+use crate::optim::blocks::{self, Block};
+use crate::ps::{Server, ServerStats, ShardPlan};
+use crate::util::rng::splitmix64;
+use anyhow::{Context, Result};
+use std::net::{TcpListener, TcpStream};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Per-read timeout while waiting on a handshake frame. Handshakes run on
+/// their own threads and the `Hello` recv is capped at
+/// [`HELLO_FRAME_CAP`] bytes, so even a byte-at-a-time trickler is
+/// bounded to `HELLO_FRAME_CAP x HANDSHAKE_TIMEOUT` on one leaked thread
+/// — it never blocks the accept loop or other registrations.
+pub const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Frame cap for the `Hello` recv (the real frame is 25 bytes): the
+/// server must not allocate an attacker-chosen buffer before the peer has
+/// identified itself.
+pub const HELLO_FRAME_CAP: usize = 64;
+
+/// How long a worker keeps retrying a server address at startup.
+pub const CONNECT_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Fingerprint of everything both ends of the wire must agree on beyond
+/// the partition size: compressor scheme/param, sync mode, fusion, size
+/// threshold, and pipeline shape. Sent in `Hello` and checked at
+/// registration, so a mismatched launch (say, identity servers vs top-k
+/// workers) is rejected loudly instead of training on silently wrong
+/// aggregates.
+pub fn config_fingerprint(cfg: &TrainConfig) -> u64 {
+    let canon = format!(
+        "{}|{}|{}|{}|{}|{}|{}|{}|{}",
+        cfg.compression.scheme,
+        cfg.compression.param.to_bits(),
+        cfg.compression.sync.name(),
+        cfg.compression.fused_residual,
+        cfg.compression.size_threshold,
+        cfg.system.operator_fusion,
+        cfg.system.size_threshold_on,
+        cfg.pipeline.enabled,
+        cfg.pipeline.block_bytes,
+    );
+    // FNV-1a over the canonical string, finished through SplitMix64.
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in canon.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    splitmix64(&mut h)
+}
+
+/// The synthetic model the cluster drivers exchange when no PJRT artifact
+/// is involved: `tensors` equal tensors covering `dim` parameters.
+pub fn synthetic_blocks(dim: usize, tensors: usize) -> Vec<Block> {
+    let tensors = tensors.clamp(1, dim.max(1));
+    let chunk = dim / tensors;
+    let rem = dim % tensors;
+    let shapes: Vec<(String, usize)> = (0..tensors)
+        .map(|t| (format!("t{t}"), chunk + usize::from(t < rem)))
+        .filter(|(_, n)| *n > 0)
+        .collect();
+    blocks::from_shapes(&shapes)
+}
+
+/// Deterministic synthetic gradient for `(seed, worker, iter)`.
+///
+/// Values are small integers, so any summation order produces the exact
+/// same f32 bits — aggregates from a TCP cluster (nondeterministic message
+/// arrival) are comparable bit-for-bit with the inproc fabric.
+pub fn synthetic_grad(seed: u64, worker: u32, iter: u64, dim: usize) -> Vec<f32> {
+    let base = seed
+        ^ (worker as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        ^ (iter + 1).wrapping_mul(0xD1B5_4A32_D192_ED03);
+    (0..dim)
+        .map(|i| {
+            let mut s = base ^ (i as u64 + 1).wrapping_mul(0x94D0_49BB_1331_11EB);
+            (splitmix64(&mut s) % 17) as f32 - 8.0
+        })
+        .collect()
+}
+
+/// Accept-side handshake: expect a (size-capped) `Hello` within
+/// [`HANDSHAKE_TIMEOUT`] per read, validate it, *claim the rank* in
+/// `claimed`, then reply with the prebuilt `Welcome`. Claiming before
+/// replying means a duplicate rank is rejected at the protocol level —
+/// the loser's connection closes before it ever believes it registered.
+/// Any failure just drops this connection — registration keeps going.
+fn handshake_accept(
+    stream: TcpStream,
+    n_workers: usize,
+    n_keys: u64,
+    config: u64,
+    welcome: Message,
+    claimed: &Mutex<Vec<bool>>,
+) -> std::result::Result<(usize, TcpEndpoint), String> {
+    // A listener in non-blocking mode may hand out non-blocking streams on
+    // some platforms; the endpoint expects blocking reads.
+    stream.set_nonblocking(false).map_err(|e| e.to_string())?;
+    let ep = TcpEndpoint::from_stream(stream).map_err(|e| e.to_string())?;
+    ep.set_read_timeout(Some(HANDSHAKE_TIMEOUT)).map_err(|e| e.to_string())?;
+    let hello = ep.recv_bounded(HELLO_FRAME_CAP).map_err(|e| format!("waiting for Hello: {e}"))?;
+    ep.set_read_timeout(None).map_err(|e| e.to_string())?;
+    let Message::Hello { worker, n_keys: got_keys, config: got_config } = hello else {
+        return Err("first frame was not Hello".into());
+    };
+    if worker as usize >= n_workers {
+        return Err(format!("rank {worker} out of range (n_workers {n_workers})"));
+    }
+    if got_keys != n_keys {
+        return Err(format!(
+            "worker {worker} partitions {got_keys} keys, this server expects {n_keys} — \
+             launch configs disagree (dim/tensors/pipeline)"
+        ));
+    }
+    if got_config != config {
+        return Err(format!(
+            "worker {worker}'s compression/pipeline config fingerprint {got_config:#x} \
+             does not match this server's {config:#x} — launch flags disagree \
+             (scheme/param/sync/threshold/pipeline)"
+        ));
+    }
+    {
+        let mut c = claimed.lock().unwrap();
+        if c[worker as usize] {
+            return Err(format!("rank {worker} already registered"));
+        }
+        c[worker as usize] = true;
+    }
+    if let Err(e) = ep.send(welcome) {
+        // Unclaim so the real worker can still take the slot.
+        claimed.lock().unwrap()[worker as usize] = false;
+        return Err(format!("sending Welcome: {e}"));
+    }
+    Ok((worker as usize, ep))
+}
+
+/// Run one PS shard over an already-bound listener: accept and register
+/// `n_workers` connections, then drive [`Server::spawn`] until every
+/// worker shuts down.
+///
+/// Handshakes run on their own threads so a hostile or stalled peer
+/// (silent socket, byte-trickler, bogus first frame) can never block
+/// other workers from registering; such connections are dropped and the
+/// accept loop keeps going.
+pub fn serve(
+    cfg: &TrainConfig,
+    listener: TcpListener,
+    shard: usize,
+    dim: usize,
+    tensors: usize,
+) -> Result<ServerStats> {
+    let blocks = synthetic_blocks(dim, tensors);
+    let spec = FabricSpec::from_config(cfg, &blocks)?;
+    if shard >= spec.n_servers {
+        anyhow::bail!("--shard {shard} out of range: the config derives {} shards", spec.n_servers);
+    }
+    let addr = listener.local_addr().context("listener address")?;
+    eprintln!(
+        "server shard {shard}/{}: listening on {addr}, waiting for {} worker(s)",
+        spec.n_servers, spec.n_workers
+    );
+    let n_workers = spec.n_workers;
+    let n_keys = spec.partition.len() as u64;
+    let config = config_fingerprint(cfg);
+    let welcome = Message::Welcome {
+        n_workers: n_workers as u32,
+        shard: shard as u32,
+        seed: cfg.seed,
+        plan: spec.plan.assignments(),
+    };
+
+    let mut slots: Vec<Option<TcpEndpoint>> = (0..n_workers).map(|_| None).collect();
+    let mut registered = 0usize;
+    {
+        let (tx, rx) = std::sync::mpsc::channel::<(usize, TcpEndpoint)>();
+        let stop = Arc::new(AtomicBool::new(false));
+        let claimed = Arc::new(Mutex::new(vec![false; n_workers]));
+        listener.set_nonblocking(true).context("listener nonblocking")?;
+        let acceptor = {
+            let stop = Arc::clone(&stop);
+            let claimed = Arc::clone(&claimed);
+            let welcome = welcome.clone();
+            std::thread::spawn(move || {
+                while !stop.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, peer)) => {
+                            let tx = tx.clone();
+                            let welcome = welcome.clone();
+                            let claimed = Arc::clone(&claimed);
+                            // Detached on purpose: a stuck handshake must
+                            // not delay anyone; worst case it leaks one
+                            // thread for a bounded time (see
+                            // HANDSHAKE_TIMEOUT) and its send below lands
+                            // in a closed channel.
+                            std::thread::spawn(move || {
+                                match handshake_accept(
+                                    stream, n_workers, n_keys, config, welcome, &claimed,
+                                ) {
+                                    Ok(pair) => {
+                                        let _ = tx.send(pair);
+                                    }
+                                    Err(e) => eprintln!(
+                                        "server shard {shard}: rejecting connection \
+                                         from {peer}: {e}"
+                                    ),
+                                }
+                            });
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(20));
+                        }
+                        Err(e) => {
+                            eprintln!("server shard {shard}: accept failed: {e}");
+                            break;
+                        }
+                    }
+                }
+            })
+        };
+        while registered < n_workers {
+            match rx.recv_timeout(Duration::from_millis(200)) {
+                Ok((rank, ep)) => {
+                    if slots[rank].is_some() {
+                        // Unreachable: handshake_accept claims ranks before
+                        // replying. Kept as a harmless belt-and-braces drop.
+                        eprintln!(
+                            "server shard {shard}: duplicate rank {rank}; dropping the newcomer"
+                        );
+                        continue;
+                    }
+                    eprintln!("server shard {shard}: worker {rank} registered");
+                    slots[rank] = Some(ep);
+                    registered += 1;
+                }
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                    // Sweep for registrants that died before the run
+                    // started (e.g. bailed on a cross-shard seed/plan
+                    // disagreement): release their rank so a relaunched
+                    // worker is not rejected as a duplicate and the shard
+                    // doesn't wedge forever. peer_closed never consumes
+                    // data, so a live worker's early pushes are untouched.
+                    for (rank, slot) in slots.iter_mut().enumerate() {
+                        let dead = matches!(slot, Some(ep) if ep.peer_closed());
+                        if dead {
+                            eprintln!(
+                                "server shard {shard}: worker {rank} disconnected before \
+                                 the run started; releasing its rank"
+                            );
+                            *slot = None;
+                            registered -= 1;
+                            claimed.lock().unwrap()[rank] = false;
+                        }
+                    }
+                }
+                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                    anyhow::bail!(
+                        "server shard {shard}: accept loop died with {registered}/{n_workers} \
+                         workers registered"
+                    );
+                }
+            }
+        }
+        stop.store(true, Ordering::Relaxed);
+        let _ = acceptor.join();
+    }
+    // Endpoint index == worker rank (Server::spawn tags messages by index).
+    let endpoints: Vec<TcpEndpoint> = slots.into_iter().map(|s| s.unwrap()).collect();
+    let server = Server::spawn(spec.server_options(cfg, shard, cfg.seed), endpoints);
+    let stats = server.join();
+    eprintln!(
+        "server shard {shard}: done — {} pushes, {} pulls, {} rejected, {} short iterations, \
+         {} stale pulls, {} early pulls, {} unexpected",
+        stats.pushes, stats.pulls, stats.rejected, stats.short_iters, stats.stale_pulls,
+        stats.early_pulls, stats.unexpected
+    );
+    Ok(stats)
+}
+
+/// `bytepsc server`: bind `listen` and [`serve`] one shard.
+pub fn run_server(
+    cfg: &TrainConfig,
+    listen: &str,
+    shard: usize,
+    dim: usize,
+    tensors: usize,
+) -> Result<ServerStats> {
+    let listener = TcpListener::bind(listen).with_context(|| format!("bind {listen}"))?;
+    serve(cfg, listener, shard, dim, tensors)
+}
+
+/// What a cluster worker run produced (everything a test needs to compare
+/// against the single-process fabric).
+pub struct WorkerRunReport {
+    /// Per-iteration aggregated gradient, as decompressed by this worker.
+    pub aggregates: Vec<Vec<f32>>,
+    /// Mean squared parameter after `iters` SGD steps (the synthetic
+    /// run's "loss": identical aggregates ⇒ identical loss).
+    pub final_loss: f64,
+    /// Bytes this worker pushed onto the wire (frame-encoded).
+    pub wire_bytes: u64,
+}
+
+/// `bytepsc worker`: connect to every server shard, register, run `iters`
+/// synchronous push/pull iterations of the synthetic driver, shut down.
+pub fn run_worker(
+    cfg: &TrainConfig,
+    rank: u32,
+    servers: &[String],
+    dim: usize,
+    tensors: usize,
+    iters: usize,
+    dump: Option<&Path>,
+) -> Result<WorkerRunReport> {
+    // The address list *is* the shard count; pin the local derivation to
+    // it so `FabricSpec` cannot disagree with the fleet being dialed.
+    let mut cfg = cfg.clone();
+    cfg.cluster.addresses = servers.to_vec();
+    let blocks = synthetic_blocks(dim, tensors);
+    let spec = FabricSpec::from_config(&cfg, &blocks)?;
+    if rank as usize >= spec.n_workers {
+        anyhow::bail!("--rank {rank} out of range: the config derives {} workers", spec.n_workers);
+    }
+
+    // Connect + register with every shard; adopt (seed, plan) from the
+    // servers and insist all shards agree.
+    let config = config_fingerprint(&cfg);
+    // The Welcome's size is known up front (header + 12 bytes per plan
+    // entry); cap the read so a mis-dialed port or hostile listener
+    // cannot make this worker allocate an attacker-chosen buffer.
+    let welcome_cap = 64 + 12 * spec.partition.len();
+    let mut endpoints: Vec<Box<dyn Endpoint>> = Vec::with_capacity(servers.len());
+    let mut adopted: Option<(u32, u64, Vec<(Key, u32)>)> = None;
+    for (s, addr) in servers.iter().enumerate() {
+        let ep = connect_retry(addr, CONNECT_TIMEOUT)
+            .with_context(|| format!("worker {rank}: server shard {s}"))?;
+        ep.send(Message::Hello { worker: rank, n_keys: spec.partition.len() as u64, config })
+            .map_err(|e| anyhow::anyhow!("worker {rank}: hello to {addr}: {e}"))?;
+        // Bounded wait: a server that accepted but never answers (or a
+        // mis-dialed port speaking another protocol) should fail the
+        // launch loudly, not hang it.
+        ep.set_read_timeout(Some(HANDSHAKE_TIMEOUT))
+            .map_err(|e| anyhow::anyhow!("worker {rank}: set timeout: {e}"))?;
+        let welcome = ep
+            .recv_bounded(welcome_cap)
+            .map_err(|e| anyhow::anyhow!("worker {rank}: no Welcome from {addr}: {e}"))?;
+        ep.set_read_timeout(None)
+            .map_err(|e| anyhow::anyhow!("worker {rank}: clear timeout: {e}"))?;
+        let Message::Welcome { n_workers, shard, seed, plan } = welcome else {
+            anyhow::bail!("worker {rank}: {addr} replied with something other than Welcome");
+        };
+        if shard as usize != s {
+            anyhow::bail!(
+                "worker {rank}: {addr} is shard {shard} but was listed at position {s}: \
+                 --servers order must match the shard indices"
+            );
+        }
+        if n_workers as usize != spec.n_workers {
+            anyhow::bail!(
+                "worker {rank}: {addr} expects {n_workers} workers, local config says {}",
+                spec.n_workers
+            );
+        }
+        if let Some((_, seed0, plan0)) = &adopted {
+            if *seed0 != seed {
+                anyhow::bail!("worker {rank}: shards disagree on the run seed");
+            }
+            if *plan0 != plan {
+                anyhow::bail!("worker {rank}: shards disagree on the shard plan");
+            }
+        } else {
+            adopted = Some((n_workers, seed, plan));
+        }
+        endpoints.push(Box::new(ep) as Box<dyn Endpoint>);
+        eprintln!("worker {rank}: registered with shard {s} at {addr}");
+    }
+    let (_, seed, plan_entries) = adopted.expect("at least one server");
+    let plan = Arc::new(
+        ShardPlan::from_assignments(&plan_entries, servers.len()).map_err(anyhow::Error::msg)?,
+    );
+    for sb in spec.partition.subs() {
+        if !plan.contains(sb.key) {
+            anyhow::bail!(
+                "worker {rank}: the servers' plan is missing block key {} — \
+                 launch configs disagree",
+                sb.key
+            );
+        }
+    }
+
+    let mut wc = spec.worker_comm(&cfg, rank, seed, endpoints, plan);
+
+    // The synthetic training loop: deterministic gradients, BSP push/pull,
+    // SGD on a local parameter replica (every worker applies the same
+    // aggregate, so replicas never diverge).
+    let lr = cfg.optimizer.lr as f32;
+    let mut params = vec![0.0f32; dim];
+    let mut aggregates = Vec::with_capacity(iters);
+    for it in 0..iters as u64 {
+        let g = synthetic_grad(seed, rank, it, dim);
+        let mut agg = vec![0.0f32; dim];
+        if cfg.pipeline.enabled {
+            wc.push_all(it, &g, &spec.partition);
+            wc.pull_all(it, &mut agg, &spec.partition);
+        } else {
+            for sb in spec.partition.subs() {
+                wc.push(sb.key, it, &g[sb.range.clone()]);
+            }
+            for sb in spec.partition.subs() {
+                wc.pull(sb.key, it, &mut agg[sb.range.clone()]);
+            }
+        }
+        for (p, a) in params.iter_mut().zip(&agg) {
+            *p -= lr * a;
+        }
+        aggregates.push(agg);
+    }
+    wc.shutdown();
+
+    let final_loss =
+        params.iter().map(|&p| p as f64 * p as f64).sum::<f64>() / dim.max(1) as f64;
+    let wire_bytes = wc.bytes_sent();
+    if let Some(path) = dump {
+        write_aggregates(path, &aggregates)
+            .with_context(|| format!("dump {}", path.display()))?;
+    }
+    Ok(WorkerRunReport { aggregates, final_loss, wire_bytes })
+}
+
+/// Binary aggregate dump: `[dim u64le][iters u64le]` then `iters * dim`
+/// f32le values. Written by `bytepsc worker --dump`, read back by the
+/// cluster integration test to compare processes against the inproc
+/// fabric bit-for-bit.
+pub fn write_aggregates(path: &Path, aggs: &[Vec<f32>]) -> std::io::Result<()> {
+    let dim = aggs.first().map_or(0, |a| a.len());
+    let mut buf = Vec::with_capacity(16 + aggs.len() * dim * 4);
+    buf.extend_from_slice(&(dim as u64).to_le_bytes());
+    buf.extend_from_slice(&(aggs.len() as u64).to_le_bytes());
+    for a in aggs {
+        debug_assert_eq!(a.len(), dim);
+        for v in a {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    std::fs::write(path, buf)
+}
+
+/// Read an aggregate dump written by [`write_aggregates`].
+pub fn read_aggregates(path: &Path) -> std::io::Result<Vec<Vec<f32>>> {
+    let bad = |m: &str| std::io::Error::new(std::io::ErrorKind::InvalidData, m.to_string());
+    let buf = std::fs::read(path)?;
+    if buf.len() < 16 {
+        return Err(bad("dump too short"));
+    }
+    let dim = u64::from_le_bytes(buf[0..8].try_into().unwrap()) as usize;
+    let iters = u64::from_le_bytes(buf[8..16].try_into().unwrap()) as usize;
+    let need = iters
+        .checked_mul(dim)
+        .and_then(|x| x.checked_mul(4))
+        .and_then(|x| x.checked_add(16))
+        .ok_or_else(|| bad("dump header overflow"))?;
+    if buf.len() != need {
+        return Err(bad("dump length mismatch"));
+    }
+    let mut out = Vec::with_capacity(iters);
+    let mut pos = 16;
+    for _ in 0..iters {
+        let mut a = Vec::with_capacity(dim);
+        for _ in 0..dim {
+            a.push(f32::from_le_bytes(buf[pos..pos + 4].try_into().unwrap()));
+            pos += 4;
+        }
+        out.push(a);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_blocks_tile_dim() {
+        for (dim, tensors) in [(10, 3), (4096, 4), (7, 1), (5, 9), (1, 1)] {
+            let blocks = synthetic_blocks(dim, tensors);
+            blocks::validate(&blocks, dim).unwrap();
+        }
+    }
+
+    #[test]
+    fn synthetic_grad_is_deterministic_and_integer_valued() {
+        let a = synthetic_grad(7, 1, 3, 256);
+        let b = synthetic_grad(7, 1, 3, 256);
+        assert_eq!(a, b);
+        assert_ne!(a, synthetic_grad(7, 2, 3, 256));
+        assert_ne!(a, synthetic_grad(7, 1, 4, 256));
+        assert_ne!(a, synthetic_grad(8, 1, 3, 256));
+        for &v in &a {
+            assert_eq!(v, v.round(), "{v} not integer-valued");
+            assert!((-8.0..=8.0).contains(&v));
+        }
+        // Not degenerate: more than one distinct value.
+        assert!(a.iter().any(|&v| v != a[0]));
+    }
+
+    #[test]
+    fn config_fingerprint_tracks_wire_relevant_knobs() {
+        let base = TrainConfig::default();
+        let f = config_fingerprint(&base);
+        assert_eq!(f, config_fingerprint(&base.clone()), "deterministic");
+        // Knobs both sides must agree on all move the fingerprint…
+        let mut c = base.clone();
+        c.compression.scheme = "identity".into();
+        assert_ne!(f, config_fingerprint(&c));
+        let mut c = base.clone();
+        c.compression.param = 0.5;
+        assert_ne!(f, config_fingerprint(&c));
+        let mut c = base.clone();
+        c.pipeline.block_bytes /= 2;
+        assert_ne!(f, config_fingerprint(&c));
+        let mut c = base.clone();
+        c.system.size_threshold_on = !c.system.size_threshold_on;
+        assert_ne!(f, config_fingerprint(&c));
+        // …while per-process knobs (rank, threads, addresses) don't.
+        let mut c = base.clone();
+        c.cluster.addresses = vec!["x:1".into()];
+        c.system.compress_threads = 99;
+        assert_eq!(f, config_fingerprint(&c));
+    }
+
+    #[test]
+    fn aggregate_dump_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("bytepsc-dump-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("aggs.bin");
+        let aggs = vec![vec![1.0f32, -2.5, 3.25], vec![0.0, 4.0, -8.0]];
+        write_aggregates(&path, &aggs).unwrap();
+        assert_eq!(read_aggregates(&path).unwrap(), aggs);
+        // Truncated / corrupt files are clean errors.
+        std::fs::write(&path, [0u8; 7]).unwrap();
+        assert!(read_aggregates(&path).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -8,6 +8,9 @@
 //! Pull      body := [key u64][iter u64][worker u32]
 //! PullResp  body := [key u64][iter u64][block]
 //! Ack       body := [key u64][iter u64]
+//! Hello     body := [worker u32][n_keys u64][config u64]
+//! Welcome   body := [n_workers u32][shard u32][seed u64][count u32]
+//!                   ([key u64][server u32]) * count
 //! Shutdown  body := (empty)
 //! block := [scheme u8][n u64][payload_len u32][payload …]
 //! key   := [block_idx : 24 bits][tensor_id : 40 bits]   (see comm::BlockKey)
@@ -15,22 +18,35 @@
 //!
 //! The `key` field carries the pipeline's block sub-key (§4.2.1): tensor id
 //! in the low 40 bits, block index in the high 24. A whole tensor is block
-//! 0, so pre-pipeline keys decode unchanged.
+//! 0, so pre-pipeline keys decode unchanged. `Hello`/`Welcome` are the
+//! cluster-mode registration handshake (see `crate::cluster`).
 //!
 //! Decoding validates the block payload against its scheme
 //! ([`crate::compress::validate_wire`]): a corrupt or malicious frame —
 //! truncated payload, inconsistent `k`, out-of-range top-k index — is
 //! rejected as [`CommError::Protocol`] at the wire boundary instead of
 //! panicking inside the server's decompressor.
+//!
+//! The [`MAX_FRAME_LEN`] cap is enforced *symmetrically*: `recv` rejects
+//! oversized length prefixes, and [`encode`] refuses to serialize a body
+//! that the peer would reject — an oversized tensor surfaces as a
+//! [`CommError`] at the sender instead of a fully-serialized frame that
+//! severs the peer's connection.
 
 use super::{CommError, Message};
 use crate::compress::{Compressed, SchemeId};
+
+/// Maximum frame body size in bytes (the u32 length prefix is excluded).
+/// Enforced on both encode ([`encode`]) and receive (both transports).
+pub const MAX_FRAME_LEN: usize = 1 << 30;
 
 const TAG_PUSH: u8 = 1;
 const TAG_PULL: u8 = 2;
 const TAG_PULL_RESP: u8 = 3;
 const TAG_ACK: u8 = 4;
 const TAG_SHUTDOWN: u8 = 5;
+const TAG_HELLO: u8 = 6;
+const TAG_WELCOME: u8 = 7;
 
 fn put_u32(b: &mut Vec<u8>, v: u32) {
     b.extend_from_slice(&v.to_le_bytes());
@@ -101,9 +117,36 @@ fn get_block(r: &mut Reader) -> Result<Compressed, CommError> {
     Ok(c)
 }
 
+/// Exact encoded body length of a message, computed without serializing.
+/// Keeps [`frame_bytes`] allocation-free and lets [`encode`] reject an
+/// oversized message *before* buffering a gigabyte of doomed bytes.
+pub fn body_len(msg: &Message) -> usize {
+    let block_len = |c: &Compressed| 1 + 8 + 4 + c.payload.len();
+    match msg {
+        Message::Push { data, .. } => 1 + 8 + 8 + 4 + block_len(data),
+        Message::Pull { .. } => 1 + 8 + 8 + 4,
+        Message::PullResp { data, .. } => 1 + 8 + 8 + block_len(data),
+        Message::Ack { .. } => 1 + 8 + 8,
+        Message::Hello { .. } => 1 + 4 + 8 + 8,
+        Message::Welcome { plan, .. } => 1 + 4 + 4 + 8 + 4 + 12 * plan.len(),
+        Message::Shutdown => 1,
+    }
+}
+
+/// Check a message against [`MAX_FRAME_LEN`]; returns its body length.
+pub fn check_len(msg: &Message) -> Result<usize, CommError> {
+    let len = body_len(msg);
+    if len > MAX_FRAME_LEN {
+        return Err(CommError::Protocol(format!(
+            "frame too large to send: {len} bytes (cap {MAX_FRAME_LEN})"
+        )));
+    }
+    Ok(len)
+}
+
 /// Encode a message body (without the length prefix).
 pub fn encode_body(msg: &Message) -> Vec<u8> {
-    let mut b = Vec::with_capacity(32 + msg.payload_bytes());
+    let mut b = Vec::with_capacity(body_len(msg));
     match msg {
         Message::Push { key, iter, worker, data } => {
             b.push(TAG_PUSH);
@@ -129,18 +172,38 @@ pub fn encode_body(msg: &Message) -> Vec<u8> {
             put_u64(&mut b, *key);
             put_u64(&mut b, *iter);
         }
+        Message::Hello { worker, n_keys, config } => {
+            b.push(TAG_HELLO);
+            put_u32(&mut b, *worker);
+            put_u64(&mut b, *n_keys);
+            put_u64(&mut b, *config);
+        }
+        Message::Welcome { n_workers, shard, seed, plan } => {
+            b.push(TAG_WELCOME);
+            put_u32(&mut b, *n_workers);
+            put_u32(&mut b, *shard);
+            put_u64(&mut b, *seed);
+            put_u32(&mut b, plan.len() as u32);
+            for &(key, server) in plan {
+                put_u64(&mut b, key);
+                put_u32(&mut b, server);
+            }
+        }
         Message::Shutdown => b.push(TAG_SHUTDOWN),
     }
+    debug_assert_eq!(b.len(), body_len(msg));
     b
 }
 
-/// Encode a full frame (length prefix + body).
-pub fn encode(msg: &Message) -> Vec<u8> {
-    let body = encode_body(msg);
-    let mut out = Vec::with_capacity(4 + body.len());
-    put_u32(&mut out, body.len() as u32);
-    out.extend_from_slice(&body);
-    out
+/// Encode a full frame (length prefix + body). Fails — before serializing
+/// anything — if the body would exceed [`MAX_FRAME_LEN`], the same cap the
+/// receive path enforces.
+pub fn encode(msg: &Message) -> Result<Vec<u8>, CommError> {
+    let len = check_len(msg)?;
+    let mut out = Vec::with_capacity(4 + len);
+    put_u32(&mut out, len as u32);
+    out.extend_from_slice(&encode_body(msg));
+    Ok(out)
 }
 
 /// Decode a message body (frame already stripped of its length prefix).
@@ -157,6 +220,25 @@ pub fn decode_body(buf: &[u8]) -> Result<Message, CommError> {
         TAG_PULL => Message::Pull { key: r.u64()?, iter: r.u64()?, worker: r.u32()? },
         TAG_PULL_RESP => Message::PullResp { key: r.u64()?, iter: r.u64()?, data: get_block(&mut r)? },
         TAG_ACK => Message::Ack { key: r.u64()?, iter: r.u64()? },
+        TAG_HELLO => Message::Hello { worker: r.u32()?, n_keys: r.u64()?, config: r.u64()? },
+        TAG_WELCOME => {
+            let n_workers = r.u32()?;
+            let shard = r.u32()?;
+            let seed = r.u64()?;
+            let count = r.u32()? as usize;
+            // Untrusted input: bound the allocation by the bytes actually
+            // present (12 per entry) before reserving `count` slots.
+            if count > (buf.len() - r.pos) / 12 {
+                return Err(CommError::Protocol(format!(
+                    "welcome plan claims {count} entries, frame too short"
+                )));
+            }
+            let mut plan = Vec::with_capacity(count);
+            for _ in 0..count {
+                plan.push((r.u64()?, r.u32()?));
+            }
+            Message::Welcome { n_workers, shard, seed, plan }
+        }
         TAG_SHUTDOWN => Message::Shutdown,
         t => return Err(CommError::Protocol(format!("unknown tag {t}"))),
     };
@@ -168,7 +250,7 @@ pub fn decode_body(buf: &[u8]) -> Result<Message, CommError> {
 
 /// Wire size of a message, including the 4-byte length prefix.
 pub fn frame_bytes(msg: &Message) -> usize {
-    4 + encode_body(msg).len()
+    4 + body_len(msg)
 }
 
 #[cfg(test)]
@@ -232,7 +314,7 @@ mod tests {
     #[test]
     fn roundtrip_all_message_kinds() {
         forall(200, 0xf4a3e, |g| {
-            let msg = match g.usize_in(0, 4) {
+            let msg = match g.usize_in(0, 6) {
                 0 => Message::Push {
                     key: g.u64(),
                     iter: g.u64(),
@@ -242,9 +324,23 @@ mod tests {
                 1 => Message::Pull { key: g.u64(), iter: g.u64(), worker: 3 },
                 2 => Message::PullResp { key: g.u64(), iter: g.u64(), data: sample_block(g) },
                 3 => Message::Ack { key: g.u64(), iter: g.u64() },
+                4 => Message::Hello {
+                    worker: (g.u64() & 0xFFFF) as u32,
+                    n_keys: g.u64(),
+                    config: g.u64(),
+                },
+                5 => {
+                    let n = g.usize_in(0, 12);
+                    Message::Welcome {
+                        n_workers: (g.u64() & 0xFF) as u32,
+                        shard: (g.u64() & 0xF) as u32,
+                        seed: g.u64(),
+                        plan: (0..n).map(|_| (g.u64(), (g.u64() & 0x7) as u32)).collect(),
+                    }
+                }
                 _ => Message::Shutdown,
             };
-            let enc = encode(&msg);
+            let enc = encode(&msg).map_err(|e| e.to_string())?;
             let len = u32::from_le_bytes(enc[..4].try_into().unwrap()) as usize;
             if len != enc.len() - 4 {
                 return Err("length prefix wrong".into());
@@ -279,8 +375,51 @@ mod tests {
 
     #[test]
     fn frame_bytes_matches_encoding() {
-        let msg = Message::Ack { key: 7, iter: 9 };
-        assert_eq!(frame_bytes(&msg), encode(&msg).len());
+        for msg in one_of_each_tag() {
+            assert_eq!(frame_bytes(&msg), encode(&msg).unwrap().len(), "{msg:?}");
+            assert_eq!(body_len(&msg), encode_body(&msg).len(), "{msg:?}");
+        }
+    }
+
+    /// Encode enforces the same 1 GiB cap the receive path does: an
+    /// oversized tensor fails at the sender with a protocol error instead
+    /// of being serialized, sent, and severing the peer's connection.
+    #[test]
+    fn oversized_frame_rejected_at_encode() {
+        let n = MAX_FRAME_LEN + 8;
+        // vec![0u8; n] is alloc_zeroed: the kernel hands back lazy zero
+        // pages and nothing below ever touches them (check_len/body_len
+        // only read `payload.len()`), so this costs address space, not
+        // >1 GiB of resident memory.
+        let msg = Message::PullResp {
+            key: 0,
+            iter: 0,
+            data: Compressed { scheme: SchemeId::Identity, n: n / 4, payload: vec![0u8; n] },
+        };
+        let err = encode(&msg).unwrap_err();
+        assert!(
+            matches!(err, CommError::Protocol(ref m) if m.contains("too large")),
+            "got {err:?}"
+        );
+        // check_len agrees without allocating anything.
+        assert!(check_len(&msg).is_err());
+        // Just-under-cap messages still size correctly (frame_bytes is
+        // allocation-free either way).
+        assert_eq!(frame_bytes(&msg), 4 + 1 + 8 + 8 + 1 + 8 + 4 + n);
+    }
+
+    /// A hostile Welcome claiming billions of plan entries must fail fast
+    /// on the length check, not attempt the allocation.
+    #[test]
+    fn welcome_with_inflated_count_rejected() {
+        let msg =
+            Message::Welcome { n_workers: 2, shard: 0, seed: 1, plan: vec![(5, 1), (9, 0)] };
+        let mut body = encode_body(&msg);
+        // count field sits after tag(1) + n_workers(4) + shard(4) + seed(8).
+        let count_at = 1 + 4 + 4 + 8;
+        body[count_at..count_at + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+        let err = decode_body(&body).unwrap_err();
+        assert!(matches!(err, CommError::Protocol(_)), "got {err:?}");
     }
 
     /// One representative message per tag, each with a data block where the
@@ -304,6 +443,8 @@ mod tests {
             Message::Pull { key: 11, iter: 7, worker: 2 },
             Message::PullResp { key: 11, iter: 7, data: block },
             Message::Ack { key: 11, iter: 7 },
+            Message::Hello { worker: 2, n_keys: 9, config: 0xABCD },
+            Message::Welcome { n_workers: 3, shard: 1, seed: 42, plan: vec![(11, 0), (12, 1)] },
             Message::Shutdown,
         ]
     }

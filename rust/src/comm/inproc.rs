@@ -16,7 +16,10 @@ pub struct InprocEndpoint {
 
 impl Endpoint for InprocEndpoint {
     fn send(&self, msg: Message) -> Result<(), CommError> {
-        self.sent.fetch_add(super::frame::frame_bytes(&msg) as u64, Ordering::Relaxed);
+        // Same frame cap as the TCP transport, so a tensor that would be
+        // unsendable over sockets fails identically in-process.
+        let body = super::frame::check_len(&msg)?;
+        self.sent.fetch_add(4 + body as u64, Ordering::Relaxed);
         self.tx.send(msg).map_err(|_| CommError::Closed)
     }
 

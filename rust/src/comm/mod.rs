@@ -72,6 +72,19 @@ pub enum Message {
     PullResp { key: Key, iter: u64, data: Compressed },
     /// Server → worker: push acknowledged.
     Ack { key: Key, iter: u64 },
+    /// Worker → server: cluster-mode registration, the first frame on a
+    /// fresh connection. `n_keys` is the worker's partition size and
+    /// `config` a fingerprint of everything both sides must agree on
+    /// (scheme/param/sync/fusion/threshold/pipeline — see
+    /// `cluster::config_fingerprint`), so a mismatched launch config is
+    /// rejected at registration instead of silently corrupting training.
+    Hello { worker: u32, n_keys: u64, config: u64 },
+    /// Server → worker: handshake reply. The worker adopts `seed` and the
+    /// shard `plan` (`(key, server index)` pairs) from the server instead
+    /// of assuming co-located construction; `shard` is the responding
+    /// server's own index so the worker can verify its `--servers`
+    /// ordering matches the plan.
+    Welcome { n_workers: u32, shard: u32, seed: u64, plan: Vec<(Key, u32)> },
     /// Graceful shutdown.
     Shutdown,
 }
@@ -99,6 +112,27 @@ pub trait Endpoint: Send + Sync {
     fn try_recv(&self) -> Result<Option<Message>, CommError>;
     /// Total bytes sent through this endpoint (frame-encoded size).
     fn bytes_sent(&self) -> u64;
+}
+
+/// Boxed endpoints are endpoints too, so meshes can mix transports
+/// (`engine::EndpointMesh` rows are `Vec<Box<dyn Endpoint>>` and feed
+/// `Server::spawn` / `WorkerComm` unchanged).
+impl Endpoint for Box<dyn Endpoint> {
+    fn send(&self, msg: Message) -> Result<(), CommError> {
+        (**self).send(msg)
+    }
+
+    fn recv(&self) -> Result<Message, CommError> {
+        (**self).recv()
+    }
+
+    fn try_recv(&self) -> Result<Option<Message>, CommError> {
+        (**self).try_recv()
+    }
+
+    fn bytes_sent(&self) -> u64 {
+        (**self).bytes_sent()
+    }
 }
 
 #[derive(Debug, Clone, PartialEq, Eq)]

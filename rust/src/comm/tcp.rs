@@ -1,12 +1,21 @@
-//! TCP transport: the same frame protocol over real sockets, for
-//! multi-process runs (`bytepsc server` / `bytepsc worker`). Localhost by
-//! default; nothing here assumes a single machine.
+//! TCP transport: the same frame protocol over real sockets, driving the
+//! multi-process cluster mode (`bytepsc server --listen ADDR --shard I` /
+//! `bytepsc worker --servers A,B,... --rank R`, see [`crate::cluster`]).
+//! Workers [`connect_retry`] to every server shard at startup and register
+//! with the `Hello`/`Welcome` handshake; servers accept one connection per
+//! worker. Nothing here assumes a single machine — the addresses in
+//! `cluster.addresses` can point anywhere.
+//!
+//! Frames above [`frame::MAX_FRAME_LEN`] are rejected on *both* sides:
+//! `recv` refuses oversized length prefixes and `send` refuses to encode
+//! them in the first place.
 
 use super::{frame, CommError, Endpoint, Message};
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 pub struct TcpEndpoint {
     // Separate read/write halves so send and recv don't serialize on one lock.
@@ -29,6 +38,77 @@ impl TcpEndpoint {
     pub fn connect<A: ToSocketAddrs>(addr: A) -> std::io::Result<Self> {
         Self::from_stream(TcpStream::connect(addr)?)
     }
+
+    /// Bound the time `recv` may block (used for the cluster handshake so
+    /// a connected-but-silent peer cannot stall a server's accept loop).
+    /// `None` restores indefinite blocking.
+    pub fn set_read_timeout(&self, dur: Option<Duration>) -> std::io::Result<()> {
+        self.reader.lock().unwrap().set_read_timeout(dur)
+    }
+
+    /// Non-consuming liveness probe: true once the peer has closed its
+    /// end (FIN observed with no buffered data). Unlike
+    /// [`Endpoint::try_recv`] this never consumes a frame, so it is safe
+    /// to poll on a connection whose traffic someone else will read —
+    /// the cluster accept loop uses it to release the rank of a worker
+    /// that registered and then died before the run started.
+    pub fn peer_closed(&self) -> bool {
+        let r = self.reader.lock().unwrap();
+        if r.set_nonblocking(true).is_err() {
+            return true;
+        }
+        let mut b = [0u8; 1];
+        let peeked = r.peek(&mut b);
+        let restored = r.set_nonblocking(false);
+        matches!(peeked, Ok(0)) || restored.is_err()
+    }
+
+    /// Like [`Endpoint::recv`] but with a caller-chosen frame cap. The
+    /// pre-registration handshake caps at a few dozen bytes so an
+    /// untrusted length prefix cannot make the server allocate a gigabyte
+    /// before the peer has even identified itself.
+    ///
+    /// An over-cap length prefix is *connection-fatal* ([`CommError::Io`],
+    /// not the recoverable `Protocol`): no compliant sender can produce
+    /// one ([`frame::encode`] enforces the same cap), the stream can no
+    /// longer be trusted to be frame-aligned, and draining an
+    /// attacker-declared length (up to 4 GiB) to realign would hand a
+    /// hostile peer exactly the read-pinning the handshake bounds exclude.
+    pub fn recv_bounded(&self, cap: usize) -> Result<Message, CommError> {
+        let mut r = self.reader.lock().unwrap();
+        let mut len_buf = [0u8; 4];
+        read_exact(&mut r, &mut len_buf)?;
+        let len = u32::from_le_bytes(len_buf) as usize;
+        if len > cap {
+            return Err(CommError::Io(format!(
+                "peer claimed an oversized frame: {len} bytes (cap {cap}); dropping connection"
+            )));
+        }
+        let mut body = vec![0u8; len];
+        read_exact(&mut r, &mut body)?;
+        frame::decode_body(&body)
+    }
+}
+
+/// Connect to `addr`, retrying until `timeout` elapses — cluster workers
+/// start before (or while) their servers bind, so first-connect refusal is
+/// normal during startup fan-in.
+pub fn connect_retry(addr: &str, timeout: Duration) -> std::io::Result<TcpEndpoint> {
+    let start = Instant::now();
+    loop {
+        match TcpEndpoint::connect(addr) {
+            Ok(ep) => return Ok(ep),
+            Err(e) => {
+                if start.elapsed() >= timeout {
+                    return Err(std::io::Error::new(
+                        e.kind(),
+                        format!("connect to {addr}: {e} (gave up after {timeout:?})"),
+                    ));
+                }
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
 }
 
 fn read_exact(stream: &mut TcpStream, buf: &mut [u8]) -> Result<(), CommError> {
@@ -43,23 +123,16 @@ fn read_exact(stream: &mut TcpStream, buf: &mut [u8]) -> Result<(), CommError> {
 
 impl Endpoint for TcpEndpoint {
     fn send(&self, msg: Message) -> Result<(), CommError> {
-        let bytes = frame::encode(&msg);
+        // Oversized messages fail here, symmetrically with the recv-side
+        // cap — never serialized, never on the wire.
+        let bytes = frame::encode(&msg)?;
         self.sent.fetch_add(bytes.len() as u64, Ordering::Relaxed);
         let mut w = self.writer.lock().unwrap();
         w.write_all(&bytes).map_err(|e| CommError::Io(e.to_string()))
     }
 
     fn recv(&self) -> Result<Message, CommError> {
-        let mut r = self.reader.lock().unwrap();
-        let mut len_buf = [0u8; 4];
-        read_exact(&mut r, &mut len_buf)?;
-        let len = u32::from_le_bytes(len_buf) as usize;
-        if len > 1 << 30 {
-            return Err(CommError::Protocol(format!("frame too large: {len}")));
-        }
-        let mut body = vec![0u8; len];
-        read_exact(&mut r, &mut body)?;
-        frame::decode_body(&body)
+        self.recv_bounded(frame::MAX_FRAME_LEN)
     }
 
     fn try_recv(&self) -> Result<Option<Message>, CommError> {
@@ -210,6 +283,27 @@ mod tests {
         let handle = std::thread::spawn(|| accept_n("127.0.0.1:0", 0).map(|(_, p)| p));
         let port = handle.join().unwrap().unwrap();
         assert!(port > 0);
+    }
+
+    /// An over-cap length prefix is connection-fatal: `recv_bounded`
+    /// surfaces it as an Io error (not a recoverable Protocol error whose
+    /// "drop the frame, keep the peer" handling would desync the stream),
+    /// and never reads — let alone allocates — the attacker-declared body.
+    #[test]
+    fn recv_bounded_treats_oversized_claim_as_fatal() {
+        use std::io::Write;
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut client = TcpStream::connect(addr).unwrap();
+        let (stream, _) = listener.accept().unwrap();
+        let ep = TcpEndpoint::from_stream(stream).unwrap();
+        // Hand-rolled frame claiming a ~4 GiB body that never arrives.
+        client.write_all(&u32::MAX.to_le_bytes()).unwrap();
+        let err = ep.recv_bounded(64).unwrap_err();
+        assert!(
+            matches!(err, CommError::Io(ref m) if m.contains("oversized")),
+            "got {err:?}"
+        );
     }
 
     #[test]

@@ -121,11 +121,24 @@ pub struct ClusterConfig {
     pub net_gbps: f64,
     /// Per-message one-way latency in microseconds.
     pub latency_us: f64,
+    /// Cluster-mode server listen addresses, indexed by shard
+    /// (`bytepsc server --shard I` binds `addresses[I]`; workers dial the
+    /// whole list). Non-empty ⇒ the shard count is `addresses.len()`,
+    /// overriding `servers`/`more_servers`. Empty (the default) keeps the
+    /// single-process in-proc fabric.
+    pub addresses: Vec<String>,
 }
 
 impl Default for ClusterConfig {
     fn default() -> Self {
-        ClusterConfig { nodes: 4, gpus_per_node: 8, servers: 8, net_gbps: 25.0, latency_us: 25.0 }
+        ClusterConfig {
+            nodes: 4,
+            gpus_per_node: 8,
+            servers: 8,
+            net_gbps: 25.0,
+            latency_us: 25.0,
+            addresses: Vec::new(),
+        }
     }
 }
 
@@ -299,12 +312,26 @@ impl TrainConfig {
         };
         let kd = ClusterConfig::default();
         let k = v.get("cluster").cloned().unwrap_or(Json::Obj(Default::default()));
+        let addresses = match k.get("addresses") {
+            None => kd.addresses.clone(),
+            Some(a) => a
+                .as_arr()
+                .ok_or_else(|| ConfigError("cluster.addresses must be an array".into()))?
+                .iter()
+                .map(|e| {
+                    e.as_str().map(str::to_string).ok_or_else(|| {
+                        ConfigError("cluster.addresses entries must be strings".into())
+                    })
+                })
+                .collect::<Result<Vec<String>, ConfigError>>()?,
+        };
         let cluster = ClusterConfig {
             nodes: u(&k, "nodes", kd.nodes),
             gpus_per_node: u(&k, "gpus_per_node", kd.gpus_per_node),
             servers: u(&k, "servers", kd.servers),
             net_gbps: f(&k, "net_gbps", kd.net_gbps),
             latency_us: f(&k, "latency_us", kd.latency_us),
+            addresses,
         };
         let sd = SystemConfig::default();
         let y = v.get("system").cloned().unwrap_or(Json::Obj(Default::default()));
@@ -359,6 +386,9 @@ impl TrainConfig {
         }
         if self.cluster.servers == 0 {
             return Err(ConfigError("cluster.servers must be >= 1".into()));
+        }
+        if self.cluster.addresses.iter().any(|a| a.is_empty()) {
+            return Err(ConfigError("cluster.addresses entries must be non-empty".into()));
         }
         if self.optimizer.lr <= 0.0 {
             return Err(ConfigError("optimizer.lr must be > 0".into()));
@@ -440,6 +470,16 @@ impl TrainConfig {
                     ("servers", Json::num(self.cluster.servers as f64)),
                     ("net_gbps", Json::num(self.cluster.net_gbps)),
                     ("latency_us", Json::num(self.cluster.latency_us)),
+                    (
+                        "addresses",
+                        Json::Arr(
+                            self.cluster
+                                .addresses
+                                .iter()
+                                .map(|a| Json::str(a.clone()))
+                                .collect(),
+                        ),
+                    ),
                 ]),
             ),
             (
@@ -537,6 +577,23 @@ mod tests {
         // Degenerate knobs rejected.
         assert!(TrainConfig::from_str(r#"{"pipeline": {"block_bytes": 1}}"#).is_err());
         assert!(TrainConfig::from_str(r#"{"pipeline": {"inflight": 0}}"#).is_err());
+    }
+
+    #[test]
+    fn cluster_addresses_parse_and_roundtrip() {
+        let cfg = TrainConfig::from_str(
+            r#"{"cluster": {"addresses": ["127.0.0.1:4000", "127.0.0.1:4001"]}}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.cluster.addresses, vec!["127.0.0.1:4000", "127.0.0.1:4001"]);
+        let rt = TrainConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(rt, cfg);
+        // Defaults to empty (single-process fabric).
+        assert!(TrainConfig::from_str("{}").unwrap().cluster.addresses.is_empty());
+        // Malformed sections rejected.
+        assert!(TrainConfig::from_str(r#"{"cluster": {"addresses": "nope"}}"#).is_err());
+        assert!(TrainConfig::from_str(r#"{"cluster": {"addresses": [7]}}"#).is_err());
+        assert!(TrainConfig::from_str(r#"{"cluster": {"addresses": [""]}}"#).is_err());
     }
 
     #[test]

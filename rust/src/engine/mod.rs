@@ -30,24 +30,38 @@ pub struct CommStats {
     pub wire_bytes: u64,
 }
 
-/// Workers + servers wired over in-process endpoints.
-pub struct CommFabric {
-    workers: Vec<WorkerComm>,
-    servers: Vec<Server>,
-    blocks: Vec<Block>,
-    partition: Arc<Partition>,
-    pipelined: bool,
-    dim: usize,
-    iter: u64,
+/// Transport-agnostic fabric derivation: everything both sides of the wire
+/// must agree on — compressor, sync mode, fusion, block partition, shard
+/// plan, cluster shape — computed once from config + model blocks. The
+/// single-process [`CommFabric`] and the multi-process cluster launchers
+/// ([`crate::cluster`]) both build from this, so the two paths cannot
+/// drift: same config in, same plan and seeds out.
+pub struct FabricSpec {
+    pub comp: Arc<dyn Compressor>,
+    pub sync: SyncMode,
+    pub fused: bool,
+    pub n_workers: usize,
+    pub n_servers: usize,
+    /// Block partition (§4.2.1/§4.2.3): the pipeline's wire unit.
+    pub partition: Arc<Partition>,
+    /// Key → server-shard assignment (§4.2.4).
+    pub plan: Arc<ShardPlan>,
 }
 
-impl CommFabric {
-    /// Build a fabric for `blocks` over a flat `dim`-vector, as configured
-    /// (scheme, sync mode, threshold, fusion, shard balance, servers,
-    /// pipeline partitioning).
-    pub fn new(cfg: &TrainConfig, blocks: Vec<Block>, dim: usize) -> Result<CommFabric> {
+impl FabricSpec {
+    /// Derive the spec from a config (scheme, sync mode, threshold,
+    /// fusion, shard balance, servers, pipeline partitioning).
+    pub fn from_config(cfg: &TrainConfig, blocks: &[Block]) -> Result<FabricSpec> {
         let n_workers = cfg.cluster.nodes;
-        let n_servers = if cfg.system.more_servers { cfg.cluster.servers.max(2) } else { 1 };
+        // Cluster mode pins the shard count to the address list; the
+        // single-process default keeps the §4.2.5 more-servers derivation.
+        let n_servers = if !cfg.cluster.addresses.is_empty() {
+            cfg.cluster.addresses.len()
+        } else if cfg.system.more_servers {
+            cfg.cluster.servers.max(2)
+        } else {
+            1
+        };
         let inner = crate::compress::by_name(&cfg.compression.scheme, cfg.compression.param)
             .map_err(anyhow::Error::msg)?;
         let comp: Arc<dyn Compressor> = if cfg.system.size_threshold_on {
@@ -59,14 +73,13 @@ impl CommFabric {
             if comp.name() == "identity" { SyncMode::Full } else { cfg.compression.sync };
         let fused = cfg.system.operator_fusion && cfg.compression.fused_residual;
 
-        // Block partition (§4.2.1/§4.2.3): the pipeline's wire unit. With
-        // the pipeline off every tensor is one block and the keyspace is
-        // bit-compatible with the pre-pipeline fabric.
+        // With the pipeline off every tensor is one block and the keyspace
+        // is bit-compatible with the pre-pipeline fabric.
         let partition =
-            Arc::new(Partition::new(&blocks, cfg.pipeline.block_bytes, cfg.pipeline.enabled));
+            Arc::new(Partition::new(blocks, cfg.pipeline.block_bytes, cfg.pipeline.enabled));
 
-        // Shard plan (§4.2.4), now balancing *blocks*: compressed blocks
-        // cost ~4x their size in server CPU (decompress xN + compress);
+        // Shard plan (§4.2.4), balancing *blocks*: compressed blocks cost
+        // ~4x their size in server CPU (decompress xN + compress);
         // bypassed blocks are memcpy-cheap. Splitting big tensors first
         // means their server-side work spreads across shards too.
         let items: Vec<(crate::comm::Key, f64)> = partition
@@ -87,47 +100,135 @@ impl CommFabric {
             )
         });
 
-        // Endpoint mesh: one pair per (worker, server).
-        let mut worker_eps: Vec<Vec<Box<dyn Endpoint>>> = (0..n_workers)
-            .map(|_| Vec::with_capacity(n_servers))
-            .collect();
-        let mut servers = Vec::with_capacity(n_servers);
-        for s in 0..n_servers {
-            let mut server_side = Vec::with_capacity(n_workers);
-            for w in worker_eps.iter_mut() {
-                let (wep, sep) = crate::comm::inproc::pair();
-                w.push(Box::new(wep) as Box<dyn Endpoint>);
-                server_side.push(sep);
-            }
-            servers.push(Server::spawn(
-                ServerOptions {
-                    comp: Arc::clone(&comp),
-                    sync,
-                    fused,
-                    n_workers,
-                    intra_threads: cfg.system.intra_threads,
-                    seed: cfg.seed ^ (s as u64).wrapping_mul(0xD1B54A32D192ED03),
-                },
-                server_side,
-            ));
-        }
+        Ok(FabricSpec { comp, sync, fused, n_workers, n_servers, partition, plan })
+    }
 
-        let workers = worker_eps
+    /// Per-shard server RNG seed. One derivation shared by the inproc
+    /// fabric and the cluster `server` subcommand — second-way stochastic
+    /// compression must not depend on how the shard was launched.
+    pub fn server_seed(run_seed: u64, shard: usize) -> u64 {
+        run_seed ^ (shard as u64).wrapping_mul(0xD1B54A32D192ED03)
+    }
+
+    /// Options for server shard `shard` under run seed `run_seed`.
+    pub fn server_options(&self, cfg: &TrainConfig, shard: usize, run_seed: u64) -> ServerOptions {
+        ServerOptions {
+            comp: Arc::clone(&self.comp),
+            sync: self.sync,
+            fused: self.fused,
+            n_workers: self.n_workers,
+            intra_threads: cfg.system.intra_threads,
+            seed: Self::server_seed(run_seed, shard),
+            // A shard serves a subset of the partition; its key count can
+            // never legitimately exceed the whole partition.
+            max_keys: self.partition.len(),
+        }
+    }
+
+    /// Build one worker's comm client over an endpoint row (`endpoints[s]`
+    /// talks to server shard `s`). `run_seed` and `plan` are explicit
+    /// because cluster workers adopt both from the servers' `Welcome`
+    /// rather than their local config.
+    pub fn worker_comm(
+        &self,
+        cfg: &TrainConfig,
+        rank: u32,
+        run_seed: u64,
+        endpoints: Vec<Box<dyn Endpoint>>,
+        plan: Arc<ShardPlan>,
+    ) -> WorkerComm {
+        WorkerComm::new(
+            rank,
+            Arc::clone(&self.comp),
+            self.sync,
+            self.fused,
+            cfg.system.intra_threads,
+            run_seed,
+            endpoints,
+            plan,
+            cfg.system.compress_threads,
+            cfg.pipeline.inflight,
+        )
+    }
+}
+
+/// A fully-wired endpoint mesh: `worker_rows[w][s]` is worker `w`'s
+/// endpoint to server `s`, `server_rows[s][w]` the matching server side.
+/// [`inproc`](EndpointMesh::inproc) builds the single-process mesh;
+/// cluster mode builds one row per OS process over TCP instead and never
+/// holds the whole mesh in one place.
+pub struct EndpointMesh {
+    pub worker_rows: Vec<Vec<Box<dyn Endpoint>>>,
+    pub server_rows: Vec<Vec<Box<dyn Endpoint>>>,
+}
+
+impl EndpointMesh {
+    /// In-process channel mesh: one `inproc::pair` per (worker, server).
+    pub fn inproc(n_workers: usize, n_servers: usize) -> EndpointMesh {
+        let mut worker_rows: Vec<Vec<Box<dyn Endpoint>>> =
+            (0..n_workers).map(|_| Vec::with_capacity(n_servers)).collect();
+        let mut server_rows: Vec<Vec<Box<dyn Endpoint>>> = Vec::with_capacity(n_servers);
+        for _ in 0..n_servers {
+            let mut server_side: Vec<Box<dyn Endpoint>> = Vec::with_capacity(n_workers);
+            for row in worker_rows.iter_mut() {
+                let (wep, sep) = crate::comm::inproc::pair();
+                row.push(Box::new(wep) as Box<dyn Endpoint>);
+                server_side.push(Box::new(sep) as Box<dyn Endpoint>);
+            }
+            server_rows.push(server_side);
+        }
+        EndpointMesh { worker_rows, server_rows }
+    }
+}
+
+/// Workers + servers wired over an endpoint mesh (in-process by default).
+pub struct CommFabric {
+    workers: Vec<WorkerComm>,
+    servers: Vec<Server>,
+    blocks: Vec<Block>,
+    partition: Arc<Partition>,
+    pipelined: bool,
+    dim: usize,
+    iter: u64,
+}
+
+impl CommFabric {
+    /// Build a fabric for `blocks` over a flat `dim`-vector, as configured,
+    /// over in-process channels.
+    pub fn new(cfg: &TrainConfig, blocks: Vec<Block>, dim: usize) -> Result<CommFabric> {
+        let spec = FabricSpec::from_config(cfg, &blocks)?;
+        let mesh = EndpointMesh::inproc(spec.n_workers, spec.n_servers);
+        Self::with_mesh(cfg, spec, blocks, dim, mesh)
+    }
+
+    /// Build a fabric over an explicit endpoint mesh. The mesh shape must
+    /// match the spec (`n_workers` x `n_servers`).
+    pub fn with_mesh(
+        cfg: &TrainConfig,
+        spec: FabricSpec,
+        blocks: Vec<Block>,
+        dim: usize,
+        mesh: EndpointMesh,
+    ) -> Result<CommFabric> {
+        if mesh.worker_rows.len() != spec.n_workers || mesh.server_rows.len() != spec.n_servers {
+            anyhow::bail!(
+                "mesh is {}x{} but the spec needs {}x{} (workers x servers)",
+                mesh.worker_rows.len(),
+                mesh.server_rows.len(),
+                spec.n_workers,
+                spec.n_servers
+            );
+        }
+        let mut servers = Vec::with_capacity(spec.n_servers);
+        for (s, server_side) in mesh.server_rows.into_iter().enumerate() {
+            servers.push(Server::spawn(spec.server_options(cfg, s, cfg.seed), server_side));
+        }
+        let workers = mesh
+            .worker_rows
             .into_iter()
             .enumerate()
             .map(|(w, eps)| {
-                WorkerComm::new(
-                    w as u32,
-                    Arc::clone(&comp),
-                    sync,
-                    fused,
-                    cfg.system.intra_threads,
-                    cfg.seed,
-                    eps,
-                    Arc::clone(&plan),
-                    cfg.system.compress_threads,
-                    cfg.pipeline.inflight,
-                )
+                spec.worker_comm(cfg, w as u32, cfg.seed, eps, Arc::clone(&spec.plan))
             })
             .collect();
 
@@ -135,7 +236,7 @@ impl CommFabric {
             workers,
             servers,
             blocks,
-            partition,
+            partition: Arc::clone(&spec.partition),
             pipelined: cfg.pipeline.enabled,
             dim,
             iter: 0,

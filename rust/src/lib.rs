@@ -32,6 +32,7 @@
 //! ```
 
 pub mod cli;
+pub mod cluster;
 pub mod comm;
 pub mod compress;
 pub mod configx;

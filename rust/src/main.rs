@@ -2,10 +2,13 @@
 //!
 //! Subcommands:
 //!   train     run a training job (config file + flag overrides)
+//!   server    run one parameter-server shard over TCP (cluster mode)
+//!   worker    run one worker over TCP (cluster mode)
 //!   inspect   print artifact manifest / model info
 //!   calibrate measure compressor speeds on this host (feeds simnet)
 
-use byteps_compress::cli::{usage, Args, Opt};
+use byteps_compress::cli::{split_subcommand, usage, Args, Opt};
+use byteps_compress::cluster;
 use byteps_compress::compress;
 use byteps_compress::configx::{SyncMode, TrainConfig};
 use byteps_compress::engine;
@@ -35,13 +38,45 @@ fn opts() -> Vec<Opt> {
     ]
 }
 
-fn apply_overrides(cfg: &mut TrainConfig, a: &Args) -> Result<(), String> {
+/// Flags shared by the cluster subcommands: the synthetic model both sides
+/// exchange (must match across every process of a run).
+fn cluster_shared_opts(o: &mut Vec<Opt>) {
+    o.push(Opt { name: "dim", takes_value: true, help: "synthetic model size in f32 params (must match across processes)" });
+    o.push(Opt { name: "tensors", takes_value: true, help: "synthetic tensor count (must match across processes)" });
+}
+
+fn server_opts() -> Vec<Opt> {
+    let mut o = opts();
+    cluster_shared_opts(&mut o);
+    o.push(Opt { name: "listen", takes_value: true, help: "listen address (default: cluster.addresses[shard])" });
+    o.push(Opt { name: "shard", takes_value: true, help: "this server's shard index (default 0)" });
+    o.push(Opt { name: "shards", takes_value: true, help: "total server shards (default: cluster.addresses length)" });
+    o
+}
+
+fn worker_opts() -> Vec<Opt> {
+    let mut o: Vec<Opt> = opts()
+        .into_iter()
+        // For the worker, --servers is the address list, not a count.
+        .filter(|opt| opt.name != "servers")
+        .collect();
+    cluster_shared_opts(&mut o);
+    o.push(Opt { name: "servers", takes_value: true, help: "comma-separated server addresses, shard order (default: cluster.addresses)" });
+    o.push(Opt { name: "rank", takes_value: true, help: "this worker's rank in [0, nodes)" });
+    o.push(Opt { name: "iters", takes_value: true, help: "synthetic training iterations (default 10)" });
+    o.push(Opt { name: "dump", takes_value: true, help: "write per-iteration aggregates to this file" });
+    o
+}
+
+fn apply_overrides(cfg: &mut TrainConfig, a: &Args, servers_is_count: bool) -> Result<(), String> {
     if let Some(m) = a.get("model") {
         cfg.model = m.into();
     }
     cfg.steps = a.usize_or("steps", cfg.steps)?;
     cfg.cluster.nodes = a.usize_or("nodes", cfg.cluster.nodes)?;
-    cfg.cluster.servers = a.usize_or("servers", cfg.cluster.servers)?;
+    if servers_is_count {
+        cfg.cluster.servers = a.usize_or("servers", cfg.cluster.servers)?;
+    }
     if let Some(s) = a.get("scheme") {
         cfg.compression.scheme = s.into();
     }
@@ -68,12 +103,17 @@ fn apply_overrides(cfg: &mut TrainConfig, a: &Args) -> Result<(), String> {
     Ok(())
 }
 
-fn cmd_train(a: &Args) -> anyhow::Result<()> {
+fn load_config(a: &Args, servers_is_count: bool) -> anyhow::Result<TrainConfig> {
     let mut cfg = match a.get("config") {
         Some(path) => TrainConfig::from_file(Path::new(path)).map_err(|e| anyhow::anyhow!("{e}"))?,
         None => TrainConfig::default(),
     };
-    apply_overrides(&mut cfg, a).map_err(anyhow::Error::msg)?;
+    apply_overrides(&mut cfg, a, servers_is_count).map_err(anyhow::Error::msg)?;
+    Ok(cfg)
+}
+
+fn cmd_train(a: &Args) -> anyhow::Result<()> {
+    let cfg = load_config(a, true)?;
     let art = PathBuf::from(a.get_or("artifacts", "artifacts"));
     eprintln!(
         "training {} | {} steps x {} nodes | {} ({}, param {}) | optimizer {} | pipeline {}",
@@ -107,6 +147,60 @@ fn cmd_train(a: &Args) -> anyhow::Result<()> {
     println!(
         "breakdown: compute {:.2}s | compress {:.2}s | decompress {:.2}s | wire/other {:.2}s | optimizer {:.2}s",
         b.compute_s, b.compress_s, b.decompress_s, b.wire_s, b.optimizer_s
+    );
+    Ok(())
+}
+
+fn cmd_server(a: &Args) -> anyhow::Result<()> {
+    let mut cfg = load_config(a, true)?;
+    let shard = a.usize_or("shard", 0).map_err(anyhow::Error::msg)?;
+    if let Some(n) = a.get("shards") {
+        // Address-less launch: pin the shard count explicitly. (With a
+        // cluster.addresses section the count comes from the list.)
+        let n: usize = n.parse().map_err(|_| anyhow::anyhow!("--shards: '{n}' is not an integer"))?;
+        if n == 0 {
+            anyhow::bail!("--shards must be >= 1");
+        }
+        cfg.cluster.servers = n;
+        cfg.system.more_servers = n > 1;
+    }
+    let listen = match a.get("listen") {
+        Some(l) => l.to_string(),
+        None => cfg.cluster.addresses.get(shard).cloned().ok_or_else(|| {
+            anyhow::anyhow!("no --listen and no cluster.addresses[{shard}] in the config")
+        })?,
+    };
+    let dim = a.usize_or("dim", 1 << 16).map_err(anyhow::Error::msg)?;
+    let tensors = a.usize_or("tensors", 8).map_err(anyhow::Error::msg)?;
+    let stats = cluster::run_server(&cfg, &listen, shard, dim, tensors)?;
+    println!(
+        "shard {shard}: {} pushes | {} pulls | {} rejected | {} short iterations | {} stale pulls",
+        stats.pushes, stats.pulls, stats.rejected, stats.short_iters, stats.stale_pulls
+    );
+    Ok(())
+}
+
+fn cmd_worker(a: &Args) -> anyhow::Result<()> {
+    let cfg = load_config(a, false)?;
+    let servers: Vec<String> = match a.get("servers") {
+        Some(list) => list.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect(),
+        None => cfg.cluster.addresses.clone(),
+    };
+    if servers.is_empty() {
+        anyhow::bail!("no server addresses: pass --servers A,B,... or set cluster.addresses");
+    }
+    let rank = a.usize_or("rank", 0).map_err(anyhow::Error::msg)? as u32;
+    let dim = a.usize_or("dim", 1 << 16).map_err(anyhow::Error::msg)?;
+    let tensors = a.usize_or("tensors", 8).map_err(anyhow::Error::msg)?;
+    let iters = a.usize_or("iters", 10).map_err(anyhow::Error::msg)?;
+    let dump = a.get("dump").map(PathBuf::from);
+    let report =
+        cluster::run_worker(&cfg, rank, &servers, dim, tensors, iters, dump.as_deref())?;
+    println!(
+        "worker {rank}: {} iterations done | final loss {:.9e} | wire {}",
+        iters,
+        report.final_loss,
+        byteps_compress::util::human_bytes(report.wire_bytes as usize)
     );
     Ok(())
 }
@@ -159,26 +253,37 @@ fn cmd_calibrate(_a: &Args) -> anyhow::Result<()> {
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
-    let opts = opts();
     let subcommands = [
         ("train", "run a training job"),
+        ("server", "run one parameter-server shard over TCP (cluster mode)"),
+        ("worker", "run one cluster worker over TCP (cluster mode)"),
         ("inspect", "print artifact manifest info"),
         ("calibrate", "measure compressor speeds on this host"),
     ];
-    let args = match Args::parse(&argv, true, &opts) {
+    // Resolve the subcommand first so each can declare its own flags (the
+    // worker's --servers takes an address list, not a count).
+    let (sub, rest) = split_subcommand(&argv);
+    let opt_list = match sub.as_deref() {
+        Some("server") => server_opts(),
+        Some("worker") => worker_opts(),
+        _ => opts(),
+    };
+    let args = match Args::parse(rest, false, &opt_list) {
         Ok(a) => a,
         Err(e) => {
             eprintln!("error: {e}\n");
-            eprintln!("{}", usage("bytepsc", "BytePS-Compress / CLAN reproduction", &subcommands, &opts));
+            eprintln!("{}", usage("bytepsc", "BytePS-Compress / CLAN reproduction", &subcommands, &opt_list));
             std::process::exit(2);
         }
     };
-    let result = match args.subcommand.as_deref() {
+    let result = match sub.as_deref() {
         Some("train") => cmd_train(&args),
+        Some("server") => cmd_server(&args),
+        Some("worker") => cmd_worker(&args),
         Some("inspect") => cmd_inspect(&args),
         Some("calibrate") => cmd_calibrate(&args),
         _ => {
-            println!("{}", usage("bytepsc", "BytePS-Compress / CLAN reproduction", &subcommands, &opts));
+            println!("{}", usage("bytepsc", "BytePS-Compress / CLAN reproduction", &subcommands, &opt_list));
             Ok(())
         }
     };

@@ -41,15 +41,20 @@ pub struct ServerOptions {
     /// Intra-task threads for (de)compression (§4.2.1).
     pub intra_threads: usize,
     pub seed: u64,
+    /// Cap on distinct keys this shard will materialize state for
+    /// (0 = unlimited). The launchers set it to the partition size so a
+    /// client inventing keys cannot grow server memory without bound.
+    pub max_keys: usize,
 }
 
 struct KeyState {
     iter: u64,
-    /// Canonical element count for this key, fixed by the first push.
-    /// Later pushes whose `n` disagrees are rejected at ingress — a
-    /// self-consistent corrupt frame must not resize (or panic on) the
-    /// accumulator.
-    dim: usize,
+    /// Canonical element count for this key, fixed by the first *push*
+    /// (`None` while the key has only seen pulls — a pull-before-push
+    /// queues rather than panicking the shard). Later pushes whose `n`
+    /// disagrees are rejected at ingress — a self-consistent corrupt frame
+    /// must not resize (or panic on) the accumulator.
+    dim: Option<usize>,
     acc: Vec<f32>,
     count: usize,
     ready: Option<crate::compress::Compressed>,
@@ -69,8 +74,26 @@ struct KeyState {
     /// one-slot rollover is still sufficient (tested in
     /// `rust/tests/distributed.rs`).
     prev: Option<(u64, crate::compress::Compressed)>,
-    /// Queued pulls as (iter, worker).
+    /// Queued pulls as (iter, connection index) — the endpoint to answer
+    /// on, which is the server's ground truth for who is asking (the wire
+    /// `worker` field is untrusted).
     pending: Vec<(u64, u32)>,
+}
+
+impl KeyState {
+    /// Empty state at `iter` — no dimension yet (a *placeholder* until
+    /// the first push establishes the element count).
+    fn fresh(iter: u64) -> KeyState {
+        KeyState {
+            iter,
+            dim: None,
+            acc: Vec::new(),
+            count: 0,
+            ready: None,
+            prev: None,
+            pending: Vec::new(),
+        }
+    }
 }
 
 /// Statistics returned on shutdown.
@@ -78,8 +101,25 @@ struct KeyState {
 pub struct ServerStats {
     pub pushes: u64,
     pub pulls: u64,
-    /// Corrupt push blocks dropped at ingress (wire-validation failures).
+    /// Corrupt push blocks dropped at ingress (wire-validation failures,
+    /// wrong element counts, pushes for already-retired iterations).
     pub rejected: u64,
+    /// Iterations that rolled over with fewer than `n_workers` pushes —
+    /// a rejected corrupt push (or a dead worker) left the round short.
+    /// The shard recovers by discarding the partial accumulator instead
+    /// of asserting; each occurrence is counted here.
+    pub short_iters: u64,
+    /// Pulls dropped because their iteration was already retired past the
+    /// one-slot history (can only happen after a short iteration or a
+    /// hostile client; honest BSP workers never lag two iterations).
+    pub stale_pulls: u64,
+    /// Pulls that arrived before any push had established their key —
+    /// queued until the key appears (reordered cluster startup), where the
+    /// shard previously died on `.expect("pull before any push")`.
+    pub early_pulls: u64,
+    /// Messages a server should never receive (`Welcome`, `PullResp`,
+    /// mid-stream `Hello`, ...) — ignored and counted, never a panic.
+    pub unexpected: u64,
     pub decompress_s: f64,
     pub compress_s: f64,
 }
@@ -91,20 +131,51 @@ pub struct ServerCore {
     ef: EfState,
     rng: Xoshiro256,
     keys: HashMap<Key, KeyState>,
+    /// Keys whose dimension a push has established. Junk *placeholders*
+    /// (pull-created, dim `None`) are budgeted separately so a client
+    /// pulling made-up keys can never starve pushes for real keys.
+    established_keys: usize,
     pub stats: ServerStats,
 }
 
 impl ServerCore {
     pub fn new(opts: ServerOptions) -> Self {
         let rng = Xoshiro256::seed_from_u64(opts.seed);
-        ServerCore { ef: EfState::new(opts.fused), rng, keys: HashMap::new(), stats: ServerStats::default(), opts }
+        ServerCore {
+            ef: EfState::new(opts.fused),
+            rng,
+            keys: HashMap::new(),
+            established_keys: 0,
+            stats: ServerStats::default(),
+            opts,
+        }
     }
 
-    /// Handle one message; returns (worker, reply) pairs to send.
+    /// Whether a push may establish one more key (the real keyspace is
+    /// bounded by the partition; anything past `max_keys` is hostile).
+    fn at_established_capacity(&self) -> bool {
+        self.opts.max_keys > 0 && self.established_keys >= self.opts.max_keys
+    }
+
+    /// Whether creating one more pull-created placeholder would exceed its
+    /// budget (equal to `max_keys`): total key state stays bounded even
+    /// against a client pulling arbitrary made-up keys.
+    fn at_placeholder_capacity(&self, key: Key) -> bool {
+        self.opts.max_keys > 0
+            && !self.keys.contains_key(&key)
+            && self.keys.len() - self.established_keys >= self.opts.max_keys
+    }
+
+    /// Handle one message from connection `from`; returns
+    /// `(connection index, reply)` pairs to send.
     pub fn handle(&mut self, from: u32, msg: Message) -> Vec<(u32, Message)> {
         match msg {
+            // Replies are addressed by `from` — the connection the message
+            // arrived on — never by the wire-supplied `worker` field. A
+            // client lying about (or botching) its id must not be able to
+            // steer replies to another worker or index the endpoint table
+            // out of bounds; the field is kept for diagnostics only.
             Message::Push { key, iter, worker, data } => {
-                debug_assert_eq!(from, worker);
                 // Untrusted wire data: reject corrupt blocks instead of
                 // letting a bad index/length panic the aggregator. (The
                 // TCP transport already rejects these at frame decode;
@@ -114,23 +185,65 @@ impl ServerCore {
                     self.stats.rejected += 1;
                     return vec![];
                 }
-                let st = self.keys.entry(key).or_insert_with(|| KeyState {
-                    iter,
-                    dim: data.n,
-                    acc: vec![0.0; data.n],
-                    count: 0,
-                    ready: None,
-                    prev: None,
-                    pending: Vec::new(),
-                });
-                // A self-consistent corrupt frame can still carry the wrong
-                // element count for this key; reject it rather than resize
-                // (or panic on) the accumulator.
-                if data.n != st.dim {
+                // Every push targets (or establishes) an established key;
+                // placeholders don't consume this budget until a push
+                // gives them a dimension. Checked before touching the map
+                // so a rejected junk push cannot leave a placeholder
+                // behind either. (Hoisted: `st` below holds a &mut borrow
+                // of the key map.)
+                let at_established_cap = self.at_established_capacity();
+                if at_established_cap && !self.keys.contains_key(&key) {
                     eprintln!(
-                        "server: rejecting push for key {key} from worker {worker}: \
-                         n={} but the key has {} elements",
-                        data.n, st.dim
+                        "server: rejecting push for unknown key {key} from worker {worker}: \
+                         shard is at its {}-key capacity",
+                        self.opts.max_keys
+                    );
+                    self.stats.rejected += 1;
+                    return vec![];
+                }
+                let st = self.keys.entry(key).or_insert_with(|| KeyState::fresh(iter));
+                match st.dim {
+                    // A self-consistent corrupt frame can still carry the
+                    // wrong element count for this key; reject it rather
+                    // than resize (or panic on) the accumulator.
+                    Some(d) if data.n != d => {
+                        eprintln!(
+                            "server: rejecting push for key {key} from worker {worker}: \
+                             n={} but the key has {d} elements",
+                            data.n
+                        );
+                        self.stats.rejected += 1;
+                        return vec![];
+                    }
+                    // First push fixes the key's element count. The state
+                    // may be a placeholder from an earlier queued pull, so
+                    // adopt the pusher's iteration clock too — and charge
+                    // the establishment budget now.
+                    None => {
+                        if at_established_cap {
+                            eprintln!(
+                                "server: rejecting push establishing key {key} from worker \
+                                 {worker}: shard is at its {}-key capacity",
+                                self.opts.max_keys
+                            );
+                            self.stats.rejected += 1;
+                            return vec![];
+                        }
+                        st.dim = Some(data.n);
+                        st.acc = vec![0.0; data.n];
+                        st.iter = iter;
+                        self.established_keys += 1;
+                    }
+                    _ => {}
+                }
+                if iter < st.iter {
+                    // A push for an iteration this key already retired — a
+                    // hostile client or a straggler beyond BSP's one-slot
+                    // lag. Unusable either way; drop it, counted.
+                    eprintln!(
+                        "server: rejecting stale push for key {key} iteration {iter} \
+                         from worker {worker} (key is at {})",
+                        st.iter
                     );
                     self.stats.rejected += 1;
                     return vec![];
@@ -138,26 +251,32 @@ impl ServerCore {
                 if st.iter != iter {
                     // New iteration for this key: retire the completed
                     // aggregate (slow workers may still pull it) and reset
-                    // the accumulator.
-                    assert!(
-                        st.count == 0 || st.count == self.opts.n_workers,
-                        "key {key}: iteration {iter} started before {} finished",
-                        st.iter
-                    );
+                    // the accumulator. A short round — a rejected corrupt
+                    // push left `count` below n_workers — is recovered by
+                    // discarding the partial sum, never by asserting the
+                    // shard down on untrusted input.
+                    if st.count != 0 && st.count != self.opts.n_workers {
+                        eprintln!(
+                            "server: key {key} iteration {} was short ({}/{} pushes); \
+                             discarding the partial aggregate",
+                            st.iter, st.count, self.opts.n_workers
+                        );
+                        self.stats.short_iters += 1;
+                    }
                     if let Some(p) = st.ready.take() {
                         st.prev = Some((st.iter, p));
                     }
                     st.iter = iter;
                     st.count = 0;
                     st.acc.clear();
-                    st.acc.resize(st.dim, 0.0);
+                    st.acc.resize(data.n, 0.0);
                 }
                 let t = std::time::Instant::now();
                 self.opts.comp.add_decompressed(&data, &mut st.acc);
                 self.stats.decompress_s += t.elapsed().as_secs_f64();
                 st.count += 1;
                 self.stats.pushes += 1;
-                let mut replies = vec![(worker, Message::Ack { key, iter })];
+                let mut replies = vec![(from, Message::Ack { key, iter })];
                 if st.count == self.opts.n_workers {
                     // Aggregate complete: average + second-way compression.
                     let inv = 1.0 / self.opts.n_workers as f32;
@@ -180,12 +299,21 @@ impl ServerCore {
                     };
                     self.stats.compress_s += t.elapsed().as_secs_f64();
                     st.ready = Some(p.clone());
+                    // The queue fully drains at every completion: matching
+                    // pulls are served, everything else (short-iteration
+                    // leftovers below, placeholder-era junk above) is
+                    // unservable and dropped — nothing hostile can sit in
+                    // `pending` displacing honest pulls forever.
                     let served: Vec<(u64, u32)> = std::mem::take(&mut st.pending);
                     for (piter, w) in served {
                         if piter == iter {
                             replies.push((w, Message::PullResp { key, iter, data: p.clone() }));
                         } else {
-                            st.pending.push((piter, w)); // still waiting
+                            eprintln!(
+                                "server: dropping unservable queued pull for key {key} \
+                                 iteration {piter} from worker {w} (key is at {iter})"
+                            );
+                            self.stats.stale_pulls += 1;
                         }
                     }
                 }
@@ -193,27 +321,93 @@ impl ServerCore {
             }
             Message::Pull { key, iter, worker } => {
                 self.stats.pulls += 1;
-                let st = self.keys.get_mut(&key).expect("pull before any push");
-                if st.iter == iter {
-                    if let Some(p) = &st.ready {
-                        return vec![(worker, Message::PullResp { key, iter, data: p.clone() })];
+                if self.at_placeholder_capacity(key) {
+                    eprintln!(
+                        "server: dropping pull for unknown key {key} from worker {worker}: \
+                         shard is at its placeholder capacity"
+                    );
+                    self.stats.rejected += 1;
+                    return vec![];
+                }
+                // A pull may precede any push for its key — a reordered
+                // startup, or a client probing unknown keys. Queue it (as
+                // a budgeted placeholder) until the key appears instead of
+                // panicking the shard.
+                let st = self.keys.entry(key).or_insert_with(|| KeyState::fresh(iter));
+                if st.dim.is_none() {
+                    self.stats.early_pulls += 1;
+                }
+                if st.dim.is_some() {
+                    if st.iter == iter {
+                        if let Some(p) = &st.ready {
+                            return vec![(from, Message::PullResp { key, iter, data: p.clone() })];
+                        }
+                    } else if let Some((piter, p)) = &st.prev {
+                        // A pull lagging one iteration behind a fast pusher.
+                        if *piter == iter {
+                            return vec![(from, Message::PullResp { key, iter, data: p.clone() })];
+                        }
                     }
-                } else if let Some((piter, p)) = &st.prev {
-                    // A pull lagging one iteration behind a fast pusher.
-                    if *piter == iter {
-                        return vec![(worker, Message::PullResp { key, iter, data: p.clone() })];
+                    if iter < st.iter {
+                        // Older than the one-slot history: unservable.
+                        // Honest BSP workers never lag two iterations, so
+                        // this is a short-iteration leftover or a hostile
+                        // client — count it and drop instead of asserting.
+                        eprintln!(
+                            "server: dropping stale pull for key {key} iteration {iter} \
+                             from worker {worker} (key is at {})",
+                            st.iter
+                        );
+                        self.stats.stale_pulls += 1;
+                        return vec![];
+                    }
+                    if iter > st.iter {
+                        // Impossible for honest traffic: per-connection
+                        // FIFO means a worker's push(key, i) is processed
+                        // before its pull(key, i), so the key's clock has
+                        // always reached `iter` by pull time. Queueing it
+                        // would let a flood of far-future pulls poison the
+                        // pending queue forever — reject instead.
+                        eprintln!(
+                            "server: rejecting future pull for key {key} iteration {iter} \
+                             from worker {worker} (key is at {})",
+                            st.iter
+                        );
+                        self.stats.rejected += 1;
+                        return vec![];
                     }
                 }
-                assert!(
-                    st.iter <= iter,
-                    "key {key}: pull for iteration {iter} older than the retired slot (now {})",
-                    st.iter
-                );
-                st.pending.push((iter, worker));
+                // Honest traffic queues at most one pull per worker per
+                // key; anything past a small multiple is a flood (pulls
+                // for iterations that will never be served) — drop it
+                // rather than grow the queue without bound.
+                if st.pending.len() >= 2 * self.opts.n_workers.max(1) {
+                    eprintln!(
+                        "server: dropping pull for key {key} iteration {iter} from \
+                         worker {worker}: pending queue full"
+                    );
+                    self.stats.stale_pulls += 1;
+                    return vec![];
+                }
+                st.pending.push((iter, from));
                 vec![]
             }
             Message::Shutdown => vec![],
-            other => panic!("server got unexpected message {other:?}"),
+            // Hello/Welcome/PullResp/Ack have no business arriving at a
+            // running server; any client can send them, so they must never
+            // panic the shard — ignore and count.
+            other => {
+                let tag = match other {
+                    Message::Hello { .. } => "Hello",
+                    Message::Welcome { .. } => "Welcome",
+                    Message::PullResp { .. } => "PullResp",
+                    Message::Ack { .. } => "Ack",
+                    _ => "unknown",
+                };
+                eprintln!("server: ignoring unexpected {tag} message from worker {from}");
+                self.stats.unexpected += 1;
+                vec![]
+            }
         }
     }
 }
@@ -273,8 +467,15 @@ impl Server {
                         continue;
                     }
                     for (to, reply) in core.handle(from, msg) {
-                        // A dropped worker is a shutdown in progress.
-                        let _ = endpoints[to as usize].send(reply);
+                        // `to` is always a connection index the core got
+                        // from us, but never trust it enough to index out
+                        // of bounds; a dropped worker is a shutdown in
+                        // progress.
+                        if let Some(ep) = endpoints.get(to as usize) {
+                            let _ = ep.send(reply);
+                        } else {
+                            eprintln!("server: dropping reply to unknown connection {to}");
+                        }
                     }
                 }
                 for t in recv_threads {
@@ -356,6 +557,35 @@ impl ShardPlan {
         ShardPlan { assignment, servers }
     }
 
+    /// Rebuild a plan from explicit `(key, server)` pairs — the form the
+    /// cluster handshake ships in [`crate::comm::Message::Welcome`].
+    /// Assignments pointing past `servers` are rejected (untrusted input).
+    pub fn from_assignments(entries: &[(Key, u32)], servers: usize) -> Result<ShardPlan, String> {
+        if servers == 0 {
+            return Err("shard plan needs at least one server".into());
+        }
+        let mut assignment = HashMap::with_capacity(entries.len());
+        for &(key, s) in entries {
+            if s as usize >= servers {
+                return Err(format!("key {key} assigned to server {s} of {servers}"));
+            }
+            if assignment.insert(key, s as usize).is_some() {
+                return Err(format!("key {key} assigned twice"));
+            }
+        }
+        Ok(ShardPlan { assignment, servers })
+    }
+
+    /// Export the plan as `(key, server)` pairs, sorted by key so two
+    /// plans can be compared structurally (workers cross-check that every
+    /// server shard handed them the same plan).
+    pub fn assignments(&self) -> Vec<(Key, u32)> {
+        let mut out: Vec<(Key, u32)> =
+            self.assignment.iter().map(|(&k, &s)| (k, s as u32)).collect();
+        out.sort_unstable_by_key(|&(k, _)| k);
+        out
+    }
+
     /// Number of servers this plan shards across.
     pub fn servers(&self) -> usize {
         self.servers
@@ -368,6 +598,12 @@ impl ShardPlan {
 
     pub fn is_empty(&self) -> bool {
         self.assignment.is_empty()
+    }
+
+    /// Whether `key` has an assignment (cluster workers verify the plan
+    /// they received covers their whole partition before trusting it).
+    pub fn contains(&self, key: Key) -> bool {
+        self.assignment.contains_key(&key)
     }
 
     pub fn server_of(&self, key: Key) -> usize {
@@ -413,6 +649,7 @@ mod tests {
             n_workers: workers,
             intra_threads: 1,
             seed: 7,
+            max_keys: 0,
         }
     }
 
@@ -686,6 +923,210 @@ mod tests {
         let r = push(&mut core, 0, 0, 0, &[1.0, 2.0, 3.0, 4.0]);
         assert_eq!(r.len(), 1);
         assert_eq!(core.stats.pushes, 1);
+    }
+
+    /// Regression (server panic on untrusted input): a rejected corrupt
+    /// push leaves `count` short; the next iteration's rollover used to
+    /// assert the aggregator down. It must recover — count the short
+    /// iteration, discard the partial sum, and keep serving.
+    #[test]
+    fn short_iteration_after_corrupt_push_recovers() {
+        let mut core = ServerCore::new(opts("identity", SyncMode::Full, 2));
+        // Worker 0's push for iter 0 is corrupt (wrong element count after
+        // the key is established) and gets rejected.
+        push(&mut core, 0, 0, 1, &[1.0, 2.0]);
+        let bad = crate::compress::Compressed {
+            scheme: crate::compress::SchemeId::Identity,
+            n: 1,
+            payload: vec![0u8; 4],
+        };
+        let r = core.handle(0, Message::Push { key: 0, iter: 0, worker: 0, data: bad });
+        assert!(r.is_empty());
+        assert_eq!(core.stats.rejected, 1);
+        // Iteration 0 is now permanently short (count == 1 of 2). Both
+        // workers move on to iteration 1 — this used to panic.
+        push(&mut core, 0, 1, 0, &[10.0, 20.0]);
+        let r = push(&mut core, 0, 1, 1, &[30.0, 40.0]);
+        assert!(!r.is_empty());
+        assert_eq!(core.stats.short_iters, 1);
+        // Iteration 1 completes and serves normally.
+        let r = core.handle(0, Message::Pull { key: 0, iter: 1, worker: 0 });
+        let Message::PullResp { data, .. } = &r[0].1 else { panic!("no resp: {r:?}") };
+        let mut out = vec![0.0f32; 2];
+        core.opts.comp.decompress(data, &mut out);
+        assert_eq!(out, vec![20.0, 30.0]);
+    }
+
+    /// Regression (server panic on untrusted input): a pull for a key with
+    /// no prior push used to hit `.expect("pull before any push")`. It must
+    /// queue and be served once the key appears.
+    #[test]
+    fn pull_before_any_push_queues_and_serves() {
+        let mut core = ServerCore::new(opts("identity", SyncMode::Full, 2));
+        let r = core.handle(1, Message::Pull { key: 7, iter: 0, worker: 1 });
+        assert!(r.is_empty(), "queued, not panicked");
+        assert_eq!(core.stats.early_pulls, 1);
+        push(&mut core, 7, 0, 0, &[2.0]);
+        let r = push(&mut core, 7, 0, 1, &[4.0]);
+        // ack + the queued pull's response
+        let resp = r.iter().find(|(w, m)| *w == 1 && matches!(m, Message::PullResp { .. }));
+        let Some((_, Message::PullResp { data, .. })) = resp else { panic!("no resp: {r:?}") };
+        let mut out = vec![0.0f32; 1];
+        core.opts.comp.decompress(data, &mut out);
+        assert_eq!(out, vec![3.0]);
+        // And the other worker's pull works as before.
+        let r = core.handle(0, Message::Pull { key: 7, iter: 0, worker: 0 });
+        assert!(matches!(r[0].1, Message::PullResp { .. }));
+    }
+
+    /// A pull whose iteration is older than the one-slot history is dropped
+    /// and counted, never an assert.
+    #[test]
+    fn ancient_pull_is_counted_not_fatal() {
+        let mut core = ServerCore::new(opts("identity", SyncMode::Full, 1));
+        for iter in 0..4u64 {
+            push(&mut core, 0, iter, 0, &[iter as f32]);
+        }
+        // Key is at iter 3; prev holds iter 2. A pull for iter 0 is stale.
+        let r = core.handle(0, Message::Pull { key: 0, iter: 0, worker: 0 });
+        assert!(r.is_empty());
+        assert_eq!(core.stats.stale_pulls, 1);
+        // Current iteration still serves.
+        let r = core.handle(0, Message::Pull { key: 0, iter: 3, worker: 0 });
+        assert!(matches!(r[0].1, Message::PullResp { .. }));
+    }
+
+    /// Handshake/reply messages leaking into a running server are ignored
+    /// and counted, never a panic.
+    #[test]
+    fn unexpected_messages_are_counted_not_fatal() {
+        let mut core = ServerCore::new(opts("identity", SyncMode::Full, 1));
+        let r = core.handle(0, Message::Hello { worker: 0, n_keys: 3, config: 0 });
+        assert!(r.is_empty());
+        let r = core.handle(0, Message::Ack { key: 0, iter: 0 });
+        assert!(r.is_empty());
+        assert_eq!(core.stats.unexpected, 2);
+        // Still fully functional afterwards.
+        push(&mut core, 0, 0, 0, &[5.0]);
+        let r = core.handle(0, Message::Pull { key: 0, iter: 0, worker: 0 });
+        assert!(matches!(r[0].1, Message::PullResp { .. }));
+    }
+
+    /// A stale push (older than the key's current iteration) is rejected,
+    /// not allowed to roll the key's clock backwards.
+    #[test]
+    fn backwards_push_is_rejected() {
+        let mut core = ServerCore::new(opts("identity", SyncMode::Full, 1));
+        push(&mut core, 0, 5, 0, &[1.0]);
+        let r = push(&mut core, 0, 2, 0, &[9.0]);
+        assert!(r.is_empty());
+        assert_eq!(core.stats.rejected, 1);
+        // The key still serves iteration 5.
+        let r = core.handle(0, Message::Pull { key: 0, iter: 5, worker: 0 });
+        assert!(matches!(r[0].1, Message::PullResp { .. }));
+    }
+
+    /// Replies route by the connection a message arrived on, never by the
+    /// wire-supplied `worker` field — a spoofed (or out-of-range) id
+    /// cannot steer replies to another worker or index the endpoint table
+    /// out of bounds.
+    #[test]
+    fn replies_route_by_connection_not_wire_field() {
+        let mut core = ServerCore::new(opts("identity", SyncMode::Full, 2));
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let data = core.opts.comp.compress(&[4.0, 6.0], &mut Ctx::new(&mut rng));
+        // Connection 0 claims to be worker 999: ack still goes to 0.
+        let r = core.handle(0, Message::Push { key: 0, iter: 0, worker: 999, data });
+        assert_eq!(r.len(), 1);
+        assert_eq!(r[0].0, 0);
+        assert!(matches!(r[0].1, Message::Ack { .. }));
+        // A queued pull is answered on the connection it arrived on, not
+        // at the spoofed id.
+        let r = core.handle(0, Message::Pull { key: 0, iter: 0, worker: 12345 });
+        assert!(r.is_empty()); // queued: iteration incomplete
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        let data = core.opts.comp.compress(&[1.0, 2.0], &mut Ctx::new(&mut rng));
+        let r = core.handle(1, Message::Push { key: 0, iter: 0, worker: 42, data });
+        assert!(r.iter().any(|(to, m)| *to == 1 && matches!(m, Message::Ack { .. })), "{r:?}");
+        assert!(
+            r.iter().any(|(to, m)| *to == 0 && matches!(m, Message::PullResp { .. })),
+            "{r:?}"
+        );
+    }
+
+    /// A client inventing keys cannot grow server memory without bound:
+    /// pushes past `max_keys` established keys are rejected, pull-created
+    /// placeholders have their own equal budget, and junk placeholders
+    /// never starve traffic for real (established) keys.
+    #[test]
+    fn hostile_key_flood_is_bounded() {
+        let mut o = opts("identity", SyncMode::Full, 1);
+        o.max_keys = 2;
+        let mut core = ServerCore::new(o);
+        push(&mut core, 0, 0, 0, &[1.0]);
+        push(&mut core, 1, 0, 0, &[2.0]);
+        // Established keys at cap: a push for a third key bounces.
+        let r = push(&mut core, 2, 0, 0, &[3.0]);
+        assert!(r.is_empty());
+        assert_eq!(core.stats.rejected, 1);
+        // Pull-created placeholders have their own equal budget…
+        assert!(core.handle(0, Message::Pull { key: 10, iter: 0, worker: 0 }).is_empty());
+        assert!(core.handle(0, Message::Pull { key: 11, iter: 0, worker: 0 }).is_empty());
+        // …beyond which junk-key pulls are dropped…
+        assert!(core.handle(0, Message::Pull { key: 12, iter: 0, worker: 0 }).is_empty());
+        assert_eq!(core.stats.rejected, 2);
+        // …and junk placeholders never block established keys.
+        let r = core.handle(0, Message::Pull { key: 0, iter: 0, worker: 0 });
+        assert!(matches!(r[0].1, Message::PullResp { .. }));
+        let r = push(&mut core, 1, 1, 0, &[5.0]);
+        assert!(!r.is_empty());
+    }
+
+    /// Hostile pulls cannot poison a key's pending queue: future-iteration
+    /// pulls on established keys are rejected outright (honest traffic
+    /// can never produce them — per-connection FIFO processes a worker's
+    /// push before its pull), placeholder floods hit the pending cap, and
+    /// the queue fully drains at every completion.
+    #[test]
+    fn pull_flood_on_one_key_is_bounded() {
+        let mut core = ServerCore::new(opts("identity", SyncMode::Full, 1));
+        push(&mut core, 0, 0, 0, &[1.0]);
+        for _ in 0..5 {
+            let r = core.handle(0, Message::Pull { key: 0, iter: 99, worker: 0 });
+            assert!(r.is_empty());
+        }
+        assert_eq!(core.stats.rejected, 5);
+        // Placeholder floods: pending cap is 2 * n_workers = 2, so of five
+        // queue attempts three are dropped.
+        for i in 0..5u64 {
+            let r = core.handle(0, Message::Pull { key: 7, iter: i, worker: 0 });
+            assert!(r.is_empty());
+        }
+        assert_eq!(core.stats.stale_pulls, 3);
+        // Establishing key 7 at iteration 0 serves the matching queued
+        // pull and drains (drops) the junk one — nothing lingers.
+        let r = push(&mut core, 7, 0, 0, &[1.0]);
+        assert_eq!(r.len(), 2, "ack + the queued iter-0 pull: {r:?}");
+        assert!(r.iter().any(|(_, m)| matches!(m, Message::PullResp { .. })));
+        assert_eq!(core.stats.stale_pulls, 4);
+        // The original key still serves its real iteration.
+        let r = core.handle(0, Message::Pull { key: 0, iter: 0, worker: 0 });
+        assert!(matches!(r[0].1, Message::PullResp { .. }));
+    }
+
+    #[test]
+    fn shard_plan_assignments_roundtrip() {
+        let plan = ShardPlan::balanced(&[5.0, 1.0, 3.0, 2.0], 3);
+        let wire = plan.assignments();
+        let back = ShardPlan::from_assignments(&wire, 3).unwrap();
+        for k in 0..4u64 {
+            assert_eq!(plan.server_of(k), back.server_of(k));
+        }
+        assert_eq!(back.assignments(), wire);
+        // Untrusted input: out-of-range server and duplicate keys rejected.
+        assert!(ShardPlan::from_assignments(&[(0, 3)], 3).is_err());
+        assert!(ShardPlan::from_assignments(&[(0, 0), (0, 1)], 2).is_err());
+        assert!(ShardPlan::from_assignments(&[], 0).is_err());
     }
 
     /// A *self-consistent* corrupt frame whose n disagrees with the key's

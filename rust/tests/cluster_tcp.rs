@@ -1,0 +1,406 @@
+//! Cluster-mode integration: the multi-process TCP fabric (`bytepsc
+//! server` / `bytepsc worker`) must produce the same training run as the
+//! single-process inproc fabric — bit-identical aggregates with the
+//! identity compressor, loss-matching with top-k/EF — and the server
+//! shards must survive hostile/corrupt clients (regression tests for the
+//! panic-on-untrusted-input class).
+
+use byteps_compress::cluster;
+use byteps_compress::comm::tcp::TcpEndpoint;
+use byteps_compress::comm::{Endpoint, Message};
+use byteps_compress::compress::{by_name, Compressed, SchemeId};
+use byteps_compress::configx::{SyncMode, TrainConfig};
+use byteps_compress::engine::CommFabric;
+use byteps_compress::ps::{Server, ServerOptions};
+use byteps_compress::testutil::assert_allclose;
+use std::net::TcpListener;
+use std::time::{Duration, Instant};
+
+/// Base cluster config: `nodes` workers, shards given by `addresses`.
+fn cluster_cfg(scheme: &str, param: f64, sync: SyncMode, nodes: usize) -> TrainConfig {
+    let mut cfg = TrainConfig::default();
+    cfg.cluster.nodes = nodes;
+    cfg.compression.scheme = scheme.into();
+    cfg.compression.param = param;
+    cfg.compression.sync = sync;
+    cfg.system.size_threshold_on = false;
+    cfg.pipeline.block_bytes = 256 * 4; // force real block partitioning
+    cfg.seed = 42;
+    cfg
+}
+
+/// Reference: the same synthetic run over the single-process inproc fabric.
+fn inproc_reference(cfg: &TrainConfig, dim: usize, tensors: usize, iters: usize) -> Vec<Vec<f32>> {
+    let blocks = cluster::synthetic_blocks(dim, tensors);
+    let mut fabric = CommFabric::new(cfg, blocks, dim).unwrap();
+    let mut out = Vec::with_capacity(iters);
+    for it in 0..iters as u64 {
+        let grads: Vec<Vec<f32>> = (0..cfg.cluster.nodes)
+            .map(|w| cluster::synthetic_grad(cfg.seed, w as u32, it, dim))
+            .collect();
+        let (agg, _) = fabric.exchange(&grads);
+        out.push(agg);
+    }
+    fabric.shutdown();
+    out
+}
+
+/// Run a full cluster (threads over real TCP sockets): `n_servers` shards
+/// via [`cluster::serve`], `nodes` workers via [`cluster::run_worker`].
+/// Returns every worker's per-iteration aggregates.
+fn run_thread_cluster(
+    mut cfg: TrainConfig,
+    n_servers: usize,
+    dim: usize,
+    tensors: usize,
+    iters: usize,
+) -> Vec<cluster::WorkerRunReport> {
+    let listeners: Vec<TcpListener> =
+        (0..n_servers).map(|_| TcpListener::bind("127.0.0.1:0").unwrap()).collect();
+    let addrs: Vec<String> =
+        listeners.iter().map(|l| l.local_addr().unwrap().to_string()).collect();
+    cfg.cluster.addresses = addrs.clone();
+
+    let mut server_handles = Vec::new();
+    for (shard, listener) in listeners.into_iter().enumerate() {
+        let cfg = cfg.clone();
+        server_handles.push(std::thread::spawn(move || {
+            cluster::serve(&cfg, listener, shard, dim, tensors).unwrap()
+        }));
+    }
+    let worker_handles: Vec<_> = (0..cfg.cluster.nodes)
+        .map(|rank| {
+            let cfg = cfg.clone();
+            let addrs = addrs.clone();
+            std::thread::spawn(move || {
+                cluster::run_worker(&cfg, rank as u32, &addrs, dim, tensors, iters, None).unwrap()
+            })
+        })
+        .collect();
+    let reports: Vec<cluster::WorkerRunReport> =
+        worker_handles.into_iter().map(|h| h.join().unwrap()).collect();
+    for h in server_handles {
+        let stats = h.join().unwrap();
+        assert_eq!(stats.rejected, 0);
+        assert_eq!(stats.short_iters, 0);
+    }
+    reports
+}
+
+/// Tentpole acceptance (identity): a real TCP cluster completes a training
+/// run whose per-iteration aggregates are bit-identical to the
+/// single-process inproc fabric.
+#[test]
+fn tcp_cluster_identity_bit_identical_to_inproc() {
+    let (dim, tensors, iters, nodes, servers) = (2048, 3, 4, 2, 2);
+    let cfg = cluster_cfg("identity", 0.0, SyncMode::Full, nodes);
+    let mut ref_cfg = cfg.clone();
+    // Same shard count for the reference (addresses drive n_servers).
+    ref_cfg.cluster.addresses = (0..servers).map(|s| format!("ref:{s}")).collect();
+    let want = inproc_reference(&ref_cfg, dim, tensors, iters);
+
+    let reports = run_thread_cluster(cfg, servers, dim, tensors, iters);
+    for (rank, rep) in reports.iter().enumerate() {
+        assert_eq!(rep.aggregates.len(), iters);
+        for (it, (got, expect)) in rep.aggregates.iter().zip(&want).enumerate() {
+            assert_eq!(
+                got, expect,
+                "worker {rank} iteration {it}: TCP aggregate differs from inproc"
+            );
+        }
+        assert!(rep.wire_bytes > 0);
+    }
+}
+
+/// Tentpole acceptance (top-k + EF): the compressed two-way path over TCP
+/// matches the inproc fabric — aggregates allclose and the synthetic
+/// training loss identical.
+#[test]
+fn tcp_cluster_topk_ef_matches_inproc() {
+    let (dim, tensors, iters, nodes, servers) = (1536, 2, 4, 3, 2);
+    let cfg = cluster_cfg("topk", 0.1, SyncMode::CompressedEf, nodes);
+    let mut ref_cfg = cfg.clone();
+    ref_cfg.cluster.addresses = (0..servers).map(|s| format!("ref:{s}")).collect();
+    let want = inproc_reference(&ref_cfg, dim, tensors, iters);
+
+    let reports = run_thread_cluster(cfg.clone(), servers, dim, tensors, iters);
+    // Reference loss: the same SGD replica driven by the inproc aggregates.
+    let lr = cfg.optimizer.lr as f32;
+    let mut params = vec![0.0f32; dim];
+    for agg in &want {
+        for (p, a) in params.iter_mut().zip(agg) {
+            *p -= lr * a;
+        }
+    }
+    let want_loss = params.iter().map(|&p| p as f64 * p as f64).sum::<f64>() / dim as f64;
+    for (rank, rep) in reports.iter().enumerate() {
+        for (it, (got, expect)) in rep.aggregates.iter().zip(&want).enumerate() {
+            assert_allclose(got, expect, 1e-6, 1e-5, &format!("worker {rank} iter {it}"));
+        }
+        assert!(
+            (rep.final_loss - want_loss).abs() <= 1e-12 * want_loss.abs().max(1.0),
+            "worker {rank} loss {} vs inproc {}",
+            rep.final_loss,
+            want_loss
+        );
+    }
+}
+
+/// Stray clients — one that sends a non-Hello frame, one that connects
+/// and stays silent — are isolated on their own handshake threads; the
+/// real workers still register and complete the run.
+#[test]
+fn hostile_connection_does_not_block_registration() {
+    let (dim, tensors, iters, nodes) = (512, 2, 2, 2);
+    let mut cfg = cluster_cfg("identity", 0.0, SyncMode::Full, nodes);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    cfg.cluster.addresses = vec![addr.clone()];
+
+    let scfg = cfg.clone();
+    let server =
+        std::thread::spawn(move || cluster::serve(&scfg, listener, 0, dim, tensors).unwrap());
+
+    // Hostile first contacts, before any real worker: a non-Hello frame
+    // and a connection that never says anything. Neither may block the
+    // workers' registration.
+    let stray = TcpEndpoint::connect(&addr).unwrap();
+    stray.send(Message::Ack { key: 0, iter: 0 }).unwrap();
+    let _silent = std::net::TcpStream::connect(&addr).unwrap();
+
+    let workers: Vec<_> = (0..nodes)
+        .map(|rank| {
+            let cfg = cfg.clone();
+            let addrs = vec![addr.clone()];
+            std::thread::spawn(move || {
+                cluster::run_worker(&cfg, rank as u32, &addrs, dim, tensors, iters, None).unwrap()
+            })
+        })
+        .collect();
+    for w in workers {
+        let rep = w.join().unwrap();
+        assert_eq!(rep.aggregates.len(), iters);
+    }
+    let stats = server.join().unwrap();
+    // Every block key pushed once per worker per iteration.
+    let blocks = cluster::synthetic_blocks(dim, tensors);
+    let n_keys = byteps_compress::worker::pipeline::Partition::new(
+        &blocks,
+        cfg.pipeline.block_bytes,
+        cfg.pipeline.enabled,
+    )
+    .len();
+    assert_eq!(stats.pushes as usize, nodes * iters * n_keys);
+}
+
+fn identity_block(vals: &[f32]) -> Compressed {
+    let mut payload = Vec::with_capacity(4 * vals.len());
+    for v in vals {
+        payload.extend_from_slice(&v.to_le_bytes());
+    }
+    Compressed { scheme: SchemeId::Identity, n: vals.len(), payload }
+}
+
+fn opts_identity(workers: usize) -> ServerOptions {
+    ServerOptions {
+        comp: by_name("identity", 0.0).unwrap(),
+        sync: SyncMode::Full,
+        fused: true,
+        n_workers: workers,
+        intra_threads: 1,
+        seed: 7,
+        max_keys: 0,
+    }
+}
+
+/// Wait for the next non-Ack message on `ep`.
+fn recv_resp(ep: &TcpEndpoint) -> Message {
+    loop {
+        match ep.recv().unwrap() {
+            Message::Ack { .. } => {}
+            m => return m,
+        }
+    }
+}
+
+/// Server-panic regression over real sockets: a corrupt (self-consistent
+/// but wrong-dimension) push is rejected, leaves the iteration short, and
+/// the next iteration recovers instead of panicking the shard.
+#[test]
+fn tcp_corrupt_push_then_next_iteration_recovers() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let accept = std::thread::spawn(move || {
+        let mut eps = Vec::new();
+        for _ in 0..2 {
+            let (s, _) = listener.accept().unwrap();
+            eps.push(TcpEndpoint::from_stream(s).unwrap());
+        }
+        Server::spawn(opts_identity(2), eps)
+    });
+    // Connect order fixes worker index: a = worker 0, b = worker 1.
+    let a = TcpEndpoint::connect(addr).unwrap();
+    let b = TcpEndpoint::connect(addr).unwrap();
+    let server = accept.join().unwrap();
+
+    // Worker 0 establishes key 0 as 2-dimensional at iteration 0.
+    a.send(Message::Push { key: 0, iter: 0, worker: 0, data: identity_block(&[1.0, 3.0]) })
+        .unwrap();
+    assert_eq!(a.recv().unwrap(), Message::Ack { key: 0, iter: 0 });
+    // Worker 1's push is corrupt: wire-valid but the wrong element count.
+    // No ack comes back; iteration 0 is now permanently short.
+    b.send(Message::Push { key: 0, iter: 0, worker: 1, data: identity_block(&[9.0]) }).unwrap();
+    // Both workers move to iteration 1 — this used to assert the shard down.
+    a.send(Message::Push { key: 0, iter: 1, worker: 0, data: identity_block(&[10.0, 20.0]) })
+        .unwrap();
+    b.send(Message::Push { key: 0, iter: 1, worker: 1, data: identity_block(&[30.0, 40.0]) })
+        .unwrap();
+    a.send(Message::Pull { key: 0, iter: 1, worker: 0 }).unwrap();
+    b.send(Message::Pull { key: 0, iter: 1, worker: 1 }).unwrap();
+    for ep in [&a, &b] {
+        let Message::PullResp { iter, data, .. } = recv_resp(ep) else { panic!("no resp") };
+        assert_eq!(iter, 1);
+        assert_eq!(data.n, 2);
+        let comp = by_name("identity", 0.0).unwrap();
+        let mut out = vec![0.0f32; 2];
+        comp.decompress(&data, &mut out);
+        assert_eq!(out, vec![20.0, 30.0]);
+    }
+    a.send(Message::Shutdown).unwrap();
+    b.send(Message::Shutdown).unwrap();
+    let stats = server.join();
+    assert_eq!(stats.rejected, 1);
+    assert_eq!(stats.short_iters, 1);
+    assert_eq!(stats.pushes, 3);
+}
+
+/// Server-panic regression over real sockets: a pull for a key no push has
+/// ever touched queues (previously `.expect("pull before any push")`
+/// killed the shard) and is served once the key appears.
+#[test]
+fn tcp_pull_before_any_push_is_served_later() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let accept = std::thread::spawn(move || {
+        let (s, _) = listener.accept().unwrap();
+        Server::spawn(opts_identity(1), vec![TcpEndpoint::from_stream(s).unwrap()])
+    });
+    let ep = TcpEndpoint::connect(addr).unwrap();
+    let server = accept.join().unwrap();
+
+    // Pull first — reordered startup. The shard must stay alive.
+    ep.send(Message::Pull { key: 3, iter: 0, worker: 0 }).unwrap();
+    // Now the push arrives; the queued pull must be answered.
+    ep.send(Message::Push { key: 3, iter: 0, worker: 0, data: identity_block(&[5.0, -2.0]) })
+        .unwrap();
+    let Message::PullResp { key, iter, data } = recv_resp(&ep) else { panic!("no resp") };
+    assert_eq!((key, iter), (3, 0));
+    let comp = by_name("identity", 0.0).unwrap();
+    let mut out = vec![0.0f32; 2];
+    comp.decompress(&data, &mut out);
+    assert_eq!(out, vec![5.0, -2.0]);
+    ep.send(Message::Shutdown).unwrap();
+    let stats = server.join();
+    assert_eq!(stats.pulls, 1);
+    assert_eq!(stats.early_pulls, 1);
+    assert_eq!(stats.pushes, 1);
+}
+
+/// Wait (bounded) for a child process and assert it exited cleanly.
+fn wait_ok(mut child: std::process::Child, name: &str) {
+    let deadline = Instant::now() + Duration::from_secs(180);
+    loop {
+        match child.try_wait().unwrap() {
+            Some(status) => {
+                assert!(status.success(), "{name} exited with {status}");
+                return;
+            }
+            None => {
+                if Instant::now() > deadline {
+                    let _ = child.kill();
+                    panic!("{name} timed out");
+                }
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+}
+
+fn free_port() -> u16 {
+    TcpListener::bind("127.0.0.1:0").unwrap().local_addr().unwrap().port()
+}
+
+/// The real thing: separate OS processes (`bytepsc server` x2 + `bytepsc
+/// worker` x2) over localhost TCP, aggregates dumped to disk, compared
+/// bit-for-bit against the single-process inproc fabric.
+#[test]
+fn process_cluster_bit_identical_to_inproc() {
+    let bin = env!("CARGO_BIN_EXE_bytepsc");
+    let (dim, tensors, iters, nodes, servers) = (3000usize, 3usize, 4usize, 2usize, 2usize);
+    let seed = 42u64;
+    let addrs: Vec<String> =
+        (0..servers).map(|_| format!("127.0.0.1:{}", free_port())).collect();
+    let dir = std::env::temp_dir().join(format!("bytepsc-cluster-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let s = |v: &str| v.to_string();
+    let mut children = Vec::new();
+    for (shard, addr) in addrs.iter().enumerate() {
+        let args: Vec<String> = vec![
+            s("server"),
+            s("--listen"), addr.clone(),
+            s("--shard"), shard.to_string(),
+            s("--shards"), servers.to_string(),
+            s("--nodes"), nodes.to_string(),
+            s("--scheme"), s("identity"),
+            s("--dim"), dim.to_string(),
+            s("--tensors"), tensors.to_string(),
+            s("--seed"), seed.to_string(),
+        ];
+        let child =
+            std::process::Command::new(bin).args(&args).spawn().expect("spawn server");
+        children.push((child, format!("server {shard}")));
+    }
+    let server_list = addrs.join(",");
+    let mut dumps = Vec::new();
+    for rank in 0..nodes {
+        let dump = dir.join(format!("worker{rank}.aggs"));
+        let args: Vec<String> = vec![
+            s("worker"),
+            s("--servers"), server_list.clone(),
+            s("--rank"), rank.to_string(),
+            s("--nodes"), nodes.to_string(),
+            s("--scheme"), s("identity"),
+            s("--dim"), dim.to_string(),
+            s("--tensors"), tensors.to_string(),
+            s("--iters"), iters.to_string(),
+            s("--seed"), seed.to_string(),
+            s("--dump"), dump.to_str().unwrap().to_string(),
+        ];
+        let child =
+            std::process::Command::new(bin).args(&args).spawn().expect("spawn worker");
+        children.push((child, format!("worker {rank}")));
+        dumps.push(dump);
+    }
+    for (child, name) in children {
+        wait_ok(child, &name);
+    }
+
+    // Reference: identical config through the inproc fabric. The CLI uses
+    // TrainConfig::default() + the flags above; mirror that here.
+    let mut cfg = TrainConfig::default();
+    cfg.cluster.nodes = nodes;
+    cfg.cluster.addresses = addrs;
+    cfg.compression.scheme = "identity".into();
+    cfg.seed = seed;
+    let want = inproc_reference(&cfg, dim, tensors, iters);
+
+    for (rank, dump) in dumps.iter().enumerate() {
+        let got = cluster::read_aggregates(dump).unwrap();
+        assert_eq!(got.len(), iters, "worker {rank} dumped {} iterations", got.len());
+        for (it, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(g, w, "worker {rank} iteration {it}: process aggregate != inproc");
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}

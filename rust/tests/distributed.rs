@@ -276,6 +276,7 @@ fn tcp_fabric_matches_reference() {
                 n_workers: workers,
                 intra_threads: 1,
                 seed: 99,
+                max_keys: 0,
             },
             eps,
         );
