@@ -92,5 +92,26 @@ fn main() {
         "{}",
         markdown_table(&["compression", "1 node", "2 nodes", "4 nodes", "8 nodes"], &rows)
     );
+
+    // Degraded-round sensitivity: scaling efficiency with occasional push
+    // loss absorbed by the server's iteration deadline (strict BSP would
+    // not scale at all — one lost push hangs the run).
+    println!("\n# Degraded rounds — top-k scaling under push loss (iter deadline 250 ms)\n");
+    let mut rows = Vec::new();
+    for loss in [0.0, 1e-5, 1e-4] {
+        let mut cells = vec![format!("loss {loss:.0e}")];
+        for nodes in [1usize, 2, 4, 8] {
+            let mut c = Cluster::default();
+            c.nodes = nodes;
+            c.push_loss = loss;
+            c.iter_deadline_s = 0.25;
+            cells.push(format!("{:.1}%", simnet::scaling_efficiency(&w, &c, &prof) * 100.0));
+        }
+        rows.push(cells);
+    }
+    println!(
+        "{}",
+        markdown_table(&["push loss", "1 node", "2 nodes", "4 nodes", "8 nodes"], &rows)
+    );
     println!("paper shape check: all compressed methods ≥ NAG; VGG16 NAG ≈ ideal 40%.");
 }

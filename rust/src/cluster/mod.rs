@@ -67,14 +67,17 @@ pub const HELLO_FRAME_CAP: usize = 64;
 pub const CONNECT_TIMEOUT: Duration = Duration::from_secs(30);
 
 /// Fingerprint of everything both ends of the wire must agree on beyond
-/// the partition size: compressor scheme/param, sync mode, fusion, size
-/// threshold, and pipeline shape. Sent in `Hello` and checked at
-/// registration, so a mismatched launch (say, identity servers vs top-k
-/// workers) is rejected loudly instead of training on silently wrong
-/// aggregates.
+/// the partition size: the frame wire-format version
+/// ([`crate::comm::frame::WIRE_VERSION`]), compressor scheme/param, sync
+/// mode, fusion, size threshold, and pipeline shape. Sent in `Hello` and
+/// checked at registration, so a mismatched launch (say, identity
+/// servers vs top-k workers — or a pre-`served_with` binary against a
+/// post-`served_with` fleet) is rejected loudly instead of training on
+/// silently wrong aggregates.
 pub fn config_fingerprint(cfg: &TrainConfig) -> u64 {
     let canon = format!(
-        "{}|{}|{}|{}|{}|{}|{}|{}|{}",
+        "wire{}|{}|{}|{}|{}|{}|{}|{}|{}|{}",
+        crate::comm::frame::WIRE_VERSION,
         cfg.compression.scheme,
         cfg.compression.param.to_bits(),
         cfg.compression.sync.name(),
@@ -92,6 +95,31 @@ pub fn config_fingerprint(cfg: &TrainConfig) -> u64 {
         h = h.wrapping_mul(0x0000_0100_0000_01B3);
     }
     splitmix64(&mut h)
+}
+
+/// A fault-injection order for `bytepsc worker --drop-push KEY@ITER`: the
+/// worker's push for block `key` at iteration `iter` is dropped before
+/// the wire, simulating a lost push so a cluster run can exercise the
+/// server's iteration deadline (degraded rounds) end to end.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PushDrop {
+    pub key: Key,
+    pub iter: u64,
+}
+
+impl PushDrop {
+    /// Parse the CLI form `KEY@ITER` (both decimal; `KEY` is the packed
+    /// block key, see [`crate::comm::BlockKey`]).
+    pub fn parse(s: &str) -> Result<PushDrop, String> {
+        let (key, iter) = s
+            .split_once('@')
+            .ok_or_else(|| format!("--drop-push: expected KEY@ITER, got '{s}'"))?;
+        let key: Key =
+            key.parse().map_err(|_| format!("--drop-push: '{key}' is not a key"))?;
+        let iter: u64 =
+            iter.parse().map_err(|_| format!("--drop-push: '{iter}' is not an iteration"))?;
+        Ok(PushDrop { key, iter })
+    }
 }
 
 /// The synthetic model the cluster drivers exchange when no PJRT artifact
@@ -312,12 +340,7 @@ pub fn serve(
     let endpoints: Vec<TcpEndpoint> = slots.into_iter().map(|s| s.unwrap()).collect();
     let server = Server::spawn(spec.server_options(cfg, shard, cfg.seed), endpoints);
     let stats = server.join();
-    eprintln!(
-        "server shard {shard}: done — {} pushes, {} pulls, {} rejected, {} short iterations, \
-         {} stale pulls, {} early pulls, {} unexpected",
-        stats.pushes, stats.pulls, stats.rejected, stats.short_iters, stats.stale_pulls,
-        stats.early_pulls, stats.unexpected
-    );
+    eprintln!("server shard {shard}: done — {stats}");
     Ok(stats)
 }
 
@@ -343,10 +366,14 @@ pub struct WorkerRunReport {
     pub final_loss: f64,
     /// Bytes this worker pushed onto the wire (frame-encoded).
     pub wire_bytes: u64,
+    /// Worker-side liveness counters: degraded rounds pulled, pushes
+    /// dropped by fault injection, windowed-push stalls.
+    pub counters: crate::worker::WorkerCounters,
 }
 
 /// `bytepsc worker`: connect to every server shard, register, run `iters`
 /// synchronous push/pull iterations of the synthetic driver, shut down.
+/// `drop` is the optional fault-injection order (`--drop-push`).
 pub fn run_worker(
     cfg: &TrainConfig,
     rank: u32,
@@ -355,6 +382,7 @@ pub fn run_worker(
     tensors: usize,
     iters: usize,
     dump: Option<&Path>,
+    drop: Option<PushDrop>,
 ) -> Result<WorkerRunReport> {
     // The address list *is* the shard count; pin the local derivation to
     // it so `FabricSpec` cannot disagree with the fleet being dialed.
@@ -433,6 +461,45 @@ pub fn run_worker(
     }
 
     let mut wc = spec.worker_comm(&cfg, rank, seed, endpoints, plan);
+    if let Some(d) = drop {
+        if !spec.partition.subs().iter().any(|sb| sb.key == d.key) {
+            anyhow::bail!(
+                "worker {rank}: --drop-push key {} is not in this run's partition",
+                d.key
+            );
+        }
+        if d.iter >= iters as u64 {
+            // A drop that can never fire would silently measure nothing —
+            // the same misconfiguration class the key check above catches.
+            anyhow::bail!(
+                "worker {rank}: --drop-push iteration {} is beyond --iters {iters}",
+                d.iter
+            );
+        }
+        if spec.n_workers < 2 {
+            // With one worker, the dropped round has *zero* pushes and the
+            // deadline never arms (it needs at least one) — the run would
+            // hang instead of degrading.
+            anyhow::bail!(
+                "worker {rank}: --drop-push needs at least 2 workers (a 1-worker round \
+                 with its only push dropped never completes, deadline or not)"
+            );
+        }
+        if cfg.server.iter_deadline().is_none() {
+            // The deadline is a *server*-side, per-process knob, so this
+            // worker cannot know the fleet's true setting — but when the
+            // whole run shares one config (the documented recipe), an
+            // unset deadline means the dropped round will stall every
+            // pull forever. Warn loudly rather than bail: the servers may
+            // legitimately have been armed separately.
+            eprintln!(
+                "worker {rank}: WARNING: --drop-push with no server.iter_deadline_ms in \
+                 this config — unless the servers were launched with a deadline, the \
+                 faulted iteration will hang under strict BSP"
+            );
+        }
+        wc.inject_push_drop(d.key, d.iter);
+    }
 
     // The synthetic training loop: deterministic gradients, BSP push/pull,
     // SGD on a local parameter replica (every worker applies the same
@@ -464,11 +531,12 @@ pub fn run_worker(
     let final_loss =
         params.iter().map(|&p| p as f64 * p as f64).sum::<f64>() / dim.max(1) as f64;
     let wire_bytes = wc.bytes_sent();
+    let counters = wc.counters();
     if let Some(path) = dump {
         write_aggregates(path, &aggregates)
             .with_context(|| format!("dump {}", path.display()))?;
     }
-    Ok(WorkerRunReport { aggregates, final_loss, wire_bytes })
+    Ok(WorkerRunReport { aggregates, final_loss, wire_bytes, counters })
 }
 
 /// Binary aggregate dump: `[dim u64le][iters u64le]` then `iters * dim`
@@ -565,11 +633,26 @@ mod tests {
         let mut c = base.clone();
         c.system.size_threshold_on = !c.system.size_threshold_on;
         assert_ne!(f, config_fingerprint(&c));
-        // …while per-process knobs (rank, threads, addresses) don't.
+        // …while per-process knobs (rank, threads, addresses, the
+        // server's iteration deadline, worker ack windowing) don't: the
+        // bytes on the wire mean the same thing regardless.
         let mut c = base.clone();
         c.cluster.addresses = vec!["x:1".into()];
         c.system.compress_threads = 99;
+        c.server.iter_deadline_ms = 500;
+        c.pipeline.ack_window = false;
         assert_eq!(f, config_fingerprint(&c));
+    }
+
+    #[test]
+    fn push_drop_parses_cli_form() {
+        assert_eq!(PushDrop::parse("7@3").unwrap(), PushDrop { key: 7, iter: 3 });
+        let key = crate::comm::BlockKey::new(2, 5).pack();
+        let parsed = PushDrop::parse(&format!("{key}@0")).unwrap();
+        assert_eq!(parsed, PushDrop { key, iter: 0 });
+        assert!(PushDrop::parse("7").is_err());
+        assert!(PushDrop::parse("x@1").is_err());
+        assert!(PushDrop::parse("1@y").is_err());
     }
 
     #[test]

@@ -6,7 +6,7 @@
 //! frame := [len: u32le] [tag: u8] body
 //! Push      body := [key u64][iter u64][worker u32][block]
 //! Pull      body := [key u64][iter u64][worker u32]
-//! PullResp  body := [key u64][iter u64][block]
+//! PullResp  body := [key u64][iter u64][served u16][block]
 //! Ack       body := [key u64][iter u64]
 //! Hello     body := [worker u32][n_keys u64][config u64]
 //! Welcome   body := [n_workers u32][shard u32][seed u64][count u32]
@@ -19,7 +19,10 @@
 //! The `key` field carries the pipeline's block sub-key (§4.2.1): tensor id
 //! in the low 40 bits, block index in the high 24. A whole tensor is block
 //! 0, so pre-pipeline keys decode unchanged. `Hello`/`Welcome` are the
-//! cluster-mode registration handshake (see `crate::cluster`).
+//! cluster-mode registration handshake (see `crate::cluster`). The
+//! `served` count on `PullResp` is the number of worker contributions in
+//! the aggregate — smaller than the run's worker count when the server's
+//! iteration deadline completed the round degraded (see `crate::ps`).
 //!
 //! Decoding validates the block payload against its scheme
 //! ([`crate::compress::validate_wire`]): a corrupt or malicious frame —
@@ -40,6 +43,13 @@ use crate::compress::{Compressed, SchemeId};
 /// Enforced on both encode ([`encode`]) and receive (both transports).
 pub const MAX_FRAME_LEN: usize = 1 << 30;
 
+/// Wire-format version, bumped whenever a frame layout changes
+/// incompatibly (v2: `PullResp` gained the `served_with: u16` field).
+/// Folded into the cluster registration fingerprint
+/// (`cluster::config_fingerprint`) so mixed-version binaries fail loudly
+/// at the handshake instead of misparsing each other's frames mid-run.
+pub const WIRE_VERSION: u32 = 2;
+
 const TAG_PUSH: u8 = 1;
 const TAG_PULL: u8 = 2;
 const TAG_PULL_RESP: u8 = 3;
@@ -47,6 +57,10 @@ const TAG_ACK: u8 = 4;
 const TAG_SHUTDOWN: u8 = 5;
 const TAG_HELLO: u8 = 6;
 const TAG_WELCOME: u8 = 7;
+
+fn put_u16(b: &mut Vec<u8>, v: u16) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
 
 fn put_u32(b: &mut Vec<u8>, v: u32) {
     b.extend_from_slice(&v.to_le_bytes());
@@ -66,6 +80,16 @@ impl<'a> Reader<'a> {
         let v = *self.buf.get(self.pos).ok_or_else(|| CommError::Protocol("truncated".into()))?;
         self.pos += 1;
         Ok(v)
+    }
+
+    fn u16(&mut self) -> Result<u16, CommError> {
+        let end = self.pos + 2;
+        let s = self
+            .buf
+            .get(self.pos..end)
+            .ok_or_else(|| CommError::Protocol("truncated u16".into()))?;
+        self.pos = end;
+        Ok(u16::from_le_bytes(s.try_into().unwrap()))
     }
 
     fn u32(&mut self) -> Result<u32, CommError> {
@@ -125,7 +149,7 @@ pub fn body_len(msg: &Message) -> usize {
     match msg {
         Message::Push { data, .. } => 1 + 8 + 8 + 4 + block_len(data),
         Message::Pull { .. } => 1 + 8 + 8 + 4,
-        Message::PullResp { data, .. } => 1 + 8 + 8 + block_len(data),
+        Message::PullResp { data, .. } => 1 + 8 + 8 + 2 + block_len(data),
         Message::Ack { .. } => 1 + 8 + 8,
         Message::Hello { .. } => 1 + 4 + 8 + 8,
         Message::Welcome { plan, .. } => 1 + 4 + 4 + 8 + 4 + 12 * plan.len(),
@@ -161,10 +185,11 @@ pub fn encode_body(msg: &Message) -> Vec<u8> {
             put_u64(&mut b, *iter);
             put_u32(&mut b, *worker);
         }
-        Message::PullResp { key, iter, data } => {
+        Message::PullResp { key, iter, served_with, data } => {
             b.push(TAG_PULL_RESP);
             put_u64(&mut b, *key);
             put_u64(&mut b, *iter);
+            put_u16(&mut b, *served_with);
             put_block(&mut b, data);
         }
         Message::Ack { key, iter } => {
@@ -218,7 +243,12 @@ pub fn decode_body(buf: &[u8]) -> Result<Message, CommError> {
             data: get_block(&mut r)?,
         },
         TAG_PULL => Message::Pull { key: r.u64()?, iter: r.u64()?, worker: r.u32()? },
-        TAG_PULL_RESP => Message::PullResp { key: r.u64()?, iter: r.u64()?, data: get_block(&mut r)? },
+        TAG_PULL_RESP => Message::PullResp {
+            key: r.u64()?,
+            iter: r.u64()?,
+            served_with: r.u16()?,
+            data: get_block(&mut r)?,
+        },
         TAG_ACK => Message::Ack { key: r.u64()?, iter: r.u64()? },
         TAG_HELLO => Message::Hello { worker: r.u32()?, n_keys: r.u64()?, config: r.u64()? },
         TAG_WELCOME => {
@@ -322,7 +352,12 @@ mod tests {
                     data: sample_block(g),
                 },
                 1 => Message::Pull { key: g.u64(), iter: g.u64(), worker: 3 },
-                2 => Message::PullResp { key: g.u64(), iter: g.u64(), data: sample_block(g) },
+                2 => Message::PullResp {
+                    key: g.u64(),
+                    iter: g.u64(),
+                    served_with: (g.u64() & 0xFFFF) as u16,
+                    data: sample_block(g),
+                },
                 3 => Message::Ack { key: g.u64(), iter: g.u64() },
                 4 => Message::Hello {
                     worker: (g.u64() & 0xFFFF) as u32,
@@ -366,10 +401,11 @@ mod tests {
         let msg = Message::PullResp {
             key: 1,
             iter: 1,
+            served_with: 1,
             data: Compressed { scheme: SchemeId::TopK, n: 4, payload: vec![1, 2, 3] },
         };
         let mut enc = encode_body(&msg);
-        enc[17] = 0xEE; // scheme byte (1 tag + 8 key + 8 iter)
+        enc[19] = 0xEE; // scheme byte (1 tag + 8 key + 8 iter + 2 served)
         assert!(decode_body(&enc).is_err());
     }
 
@@ -394,6 +430,7 @@ mod tests {
         let msg = Message::PullResp {
             key: 0,
             iter: 0,
+            served_with: 1,
             data: Compressed { scheme: SchemeId::Identity, n: n / 4, payload: vec![0u8; n] },
         };
         let err = encode(&msg).unwrap_err();
@@ -405,7 +442,7 @@ mod tests {
         assert!(check_len(&msg).is_err());
         // Just-under-cap messages still size correctly (frame_bytes is
         // allocation-free either way).
-        assert_eq!(frame_bytes(&msg), 4 + 1 + 8 + 8 + 1 + 8 + 4 + n);
+        assert_eq!(frame_bytes(&msg), 4 + 1 + 8 + 8 + 2 + 1 + 8 + 4 + n);
     }
 
     /// A hostile Welcome claiming billions of plan entries must fail fast
@@ -441,7 +478,7 @@ mod tests {
         vec![
             Message::Push { key: 0x0000_0A00_0000_0003, iter: 7, worker: 2, data: block.clone() },
             Message::Pull { key: 11, iter: 7, worker: 2 },
-            Message::PullResp { key: 11, iter: 7, data: block },
+            Message::PullResp { key: 11, iter: 7, served_with: 3, data: block },
             Message::Ack { key: 11, iter: 7 },
             Message::Hello { worker: 2, n_keys: 9, config: 0xABCD },
             Message::Welcome { n_workers: 3, shard: 1, seed: 42, plan: vec![(11, 0), (12, 1)] },

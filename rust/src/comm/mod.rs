@@ -68,8 +68,16 @@ pub enum Message {
     Push { key: Key, iter: u64, worker: u32, data: Compressed },
     /// Worker → server: request the aggregated gradient once ready.
     Pull { key: Key, iter: u64, worker: u32 },
-    /// Server → worker: aggregated (re-compressed) gradient.
-    PullResp { key: Key, iter: u64, data: Compressed },
+    /// Server → worker: aggregated (re-compressed) gradient. `served_with`
+    /// is the number of worker contributions in the aggregate: equal to
+    /// the run's worker count for a full BSP round, smaller when the
+    /// server's iteration deadline completed the round *degraded* (a push
+    /// was lost or rejected and the deadline elapsed). Workers use it to
+    /// tell a degraded round from a full one — the lost contribution
+    /// becomes an observable, counted event instead of a silent one —
+    /// without a separate NACK message (see DESIGN.md §Cluster mode for
+    /// the precise convergence semantics).
+    PullResp { key: Key, iter: u64, served_with: u16, data: Compressed },
     /// Server → worker: push acknowledged.
     Ack { key: Key, iter: u64 },
     /// Worker → server: cluster-mode registration, the first frame on a
@@ -185,7 +193,10 @@ mod tests {
     fn payload_bytes_only_for_data_messages() {
         let data = Compressed { scheme: SchemeId::Identity, n: 2, payload: vec![0u8; 8] };
         assert_eq!(Message::Push { key: 1, iter: 0, worker: 0, data: data.clone() }.payload_bytes(), 8);
-        assert_eq!(Message::PullResp { key: 1, iter: 0, data }.payload_bytes(), 8);
+        assert_eq!(
+            Message::PullResp { key: 1, iter: 0, served_with: 2, data }.payload_bytes(),
+            8
+        );
         assert_eq!(Message::Pull { key: 1, iter: 0, worker: 0 }.payload_bytes(), 0);
         assert_eq!(Message::Ack { key: 1, iter: 0 }.payload_bytes(), 0);
         assert_eq!(Message::Shutdown.payload_bytes(), 0);

@@ -325,6 +325,7 @@ mod tests {
             .send(Message::PullResp {
                 key: 0,
                 iter: 0,
+                served_with: 1,
                 data: Compressed { scheme: SchemeId::Identity, n: 1_000_000, payload },
             })
             .unwrap();

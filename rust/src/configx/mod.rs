@@ -176,6 +176,28 @@ impl Default for SystemConfig {
     }
 }
 
+/// Parameter-server behavior knobs (per-process; never part of the wire
+/// fingerprint — workers don't need to agree on them).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ServerConfig {
+    /// Iteration deadline in milliseconds for degraded rounds: once a
+    /// shard has at least one push for an iteration and this long
+    /// elapses without the round completing, it serves the partial
+    /// aggregate with `served_with < n_workers` on the wire instead of
+    /// stalling every worker's pull on a lost/rejected push. `0` (the
+    /// default) keeps strict BSP — bit-identical to the pre-deadline
+    /// server.
+    pub iter_deadline_ms: u64,
+}
+
+impl ServerConfig {
+    /// The deadline as an `Option<Duration>` (`0` = unset/strict BSP).
+    pub fn iter_deadline(&self) -> Option<std::time::Duration> {
+        (self.iter_deadline_ms > 0)
+            .then(|| std::time::Duration::from_millis(self.iter_deadline_ms))
+    }
+}
+
 /// Block-partitioned push/pull pipeline knobs (§4.2.1/§4.2.3): tensors
 /// above `block_bytes` are split into fixed-size blocks, each with its own
 /// wire key, so CPU compression of block i+1 overlaps the in-flight send
@@ -190,13 +212,20 @@ pub struct PipelineConfig {
     /// Tensors at or below this size stay whole.
     pub block_bytes: usize,
     /// Max compress/push jobs in flight per worker (bounds the memory held
-    /// by per-block gradient staging copies).
+    /// by per-block gradient staging copies; with `ack_window` on, also
+    /// bounds sent-but-unacked pushes).
     pub inflight: usize,
+    /// Drain server acks concurrently with the push phase, making
+    /// `inflight` a true sliding window over unacked pushes instead of a
+    /// phase barrier that parks every ack in the socket buffer until the
+    /// pull phase. Wire traffic is identical either way (per-block job
+    /// seeds); off = the legacy barrier for ablation.
+    pub ack_window: bool,
 }
 
 impl Default for PipelineConfig {
     fn default() -> Self {
-        PipelineConfig { enabled: true, block_bytes: 4 << 20, inflight: 16 }
+        PipelineConfig { enabled: true, block_bytes: 4 << 20, inflight: 16, ack_window: true }
     }
 }
 
@@ -218,6 +247,7 @@ pub struct TrainConfig {
     pub cluster: ClusterConfig,
     pub system: SystemConfig,
     pub pipeline: PipelineConfig,
+    pub server: ServerConfig,
 }
 
 impl Default for TrainConfig {
@@ -234,6 +264,7 @@ impl Default for TrainConfig {
             cluster: ClusterConfig::default(),
             system: SystemConfig::default(),
             pipeline: PipelineConfig::default(),
+            server: ServerConfig::default(),
         }
     }
 }
@@ -278,9 +309,9 @@ impl TrainConfig {
     pub fn from_json(v: &Json) -> Result<Self, ConfigError> {
         let d = TrainConfig::default();
         let obj = v.as_obj().ok_or_else(|| ConfigError("top level must be an object".into()))?;
-        const KNOWN: [&str; 12] = [
+        const KNOWN: [&str; 13] = [
             "model", "steps", "batch_per_worker", "seed", "log_every", "task_difficulty",
-            "optimizer", "compression", "cluster", "system", "pipeline", "comment",
+            "optimizer", "compression", "cluster", "system", "pipeline", "server", "comment",
         ];
         for k in obj.keys() {
             if !KNOWN.contains(&k.as_str()) {
@@ -350,6 +381,12 @@ impl TrainConfig {
             enabled: b(&p, "enabled", pd.enabled),
             block_bytes: u(&p, "block_bytes", pd.block_bytes),
             inflight: u(&p, "inflight", pd.inflight),
+            ack_window: b(&p, "ack_window", pd.ack_window),
+        };
+        let vd = ServerConfig::default();
+        let sv = v.get("server").cloned().unwrap_or(Json::Obj(Default::default()));
+        let server = ServerConfig {
+            iter_deadline_ms: u(&sv, "iter_deadline_ms", vd.iter_deadline_ms as usize) as u64,
         };
         let cfg = TrainConfig {
             model: s(v, "model", &d.model),
@@ -363,6 +400,7 @@ impl TrainConfig {
             cluster,
             system,
             pipeline,
+            server,
         };
         cfg.validate()?;
         Ok(cfg)
@@ -500,7 +538,15 @@ impl TrainConfig {
                     ("enabled", Json::Bool(self.pipeline.enabled)),
                     ("block_bytes", Json::num(self.pipeline.block_bytes as f64)),
                     ("inflight", Json::num(self.pipeline.inflight as f64)),
+                    ("ack_window", Json::Bool(self.pipeline.ack_window)),
                 ]),
+            ),
+            (
+                "server",
+                Json::obj(vec![(
+                    "iter_deadline_ms",
+                    Json::num(self.server.iter_deadline_ms as f64),
+                )]),
             ),
         ])
     }
@@ -557,8 +603,31 @@ mod tests {
         cfg.pipeline.enabled = false;
         cfg.pipeline.block_bytes = 1 << 20;
         cfg.pipeline.inflight = 8;
+        cfg.pipeline.ack_window = false;
+        cfg.server.iter_deadline_ms = 250;
         let rt = TrainConfig::from_json(&cfg.to_json()).unwrap();
         assert_eq!(rt, cfg);
+    }
+
+    #[test]
+    fn server_section_parses_and_defaults_to_strict_bsp() {
+        // Absent section = strict BSP (no deadline).
+        let cfg = TrainConfig::from_str("{}").unwrap();
+        assert_eq!(cfg.server.iter_deadline_ms, 0);
+        assert_eq!(cfg.server.iter_deadline(), None);
+        // Explicit deadline parses and converts.
+        let cfg =
+            TrainConfig::from_str(r#"{"server": {"iter_deadline_ms": 150}}"#).unwrap();
+        assert_eq!(cfg.server.iter_deadline_ms, 150);
+        assert_eq!(
+            cfg.server.iter_deadline(),
+            Some(std::time::Duration::from_millis(150))
+        );
+        // ack_window knob parses; defaults on.
+        assert!(TrainConfig::from_str("{}").unwrap().pipeline.ack_window);
+        let cfg =
+            TrainConfig::from_str(r#"{"pipeline": {"ack_window": false}}"#).unwrap();
+        assert!(!cfg.pipeline.ack_window);
     }
 
     #[test]

@@ -122,6 +122,7 @@ impl FabricSpec {
             // A shard serves a subset of the partition; its key count can
             // never legitimately exceed the whole partition.
             max_keys: self.partition.len(),
+            iter_deadline: cfg.server.iter_deadline(),
         }
     }
 
@@ -148,6 +149,8 @@ impl FabricSpec {
             plan,
             cfg.system.compress_threads,
             cfg.pipeline.inflight,
+            cfg.pipeline.ack_window,
+            self.n_workers,
         )
     }
 }
@@ -583,6 +586,51 @@ mod tests {
         let onebit = run("onebit", 0.0, SyncMode::CompressedEf);
         assert!(topk < full / 100, "topk {topk} vs full {full}");
         assert!(onebit < full / 20, "onebit {onebit} vs full {full}");
+    }
+
+    /// Windowed pushes (`pipeline.ack_window`, acks drained during the
+    /// push phase) must be bit-identical to the legacy phase barrier:
+    /// per-block job seeds make the wire bytes independent of job
+    /// scheduling for deterministic compressors, and the window only
+    /// changes *when* acks are read, not what is sent.
+    #[test]
+    fn ack_window_matches_phase_barrier() {
+        let dim = 1500;
+        let nodes = 2;
+        let blocks =
+            crate::optim::blocks::from_shapes(&[("a".into(), 1000), ("b".into(), 500)]);
+        for (scheme, param, sync) in
+            [("identity", 0.0, SyncMode::Full), ("topk", 0.1, SyncMode::CompressedEf)]
+        {
+            let run = |ack_window: bool| -> Vec<Vec<f32>> {
+                let mut cfg = cfg_with(scheme, param, sync, nodes);
+                cfg.pipeline.enabled = true;
+                cfg.pipeline.block_bytes = 256 * 4;
+                // A window smaller than the block count forces real
+                // sliding (acks must drain for the phase to finish).
+                cfg.pipeline.inflight = 2;
+                cfg.pipeline.ack_window = ack_window;
+                let mut fabric = CommFabric::new(&cfg, blocks.clone(), dim).unwrap();
+                let mut rng = Xoshiro256::seed_from_u64(11);
+                let mut out = Vec::new();
+                for _ in 0..3 {
+                    let grads: Vec<Vec<f32>> = (0..nodes)
+                        .map(|_| {
+                            let mut g = vec![0.0f32; dim];
+                            rng.fill_normal(&mut g, 1.0);
+                            g
+                        })
+                        .collect();
+                    let (agg, _) = fabric.exchange(&grads);
+                    out.push(agg);
+                }
+                fabric.shutdown();
+                out
+            };
+            let windowed = run(true);
+            let barrier = run(false);
+            assert_eq!(windowed, barrier, "{scheme}: windowed pushes diverged from barrier");
+        }
     }
 
     #[test]

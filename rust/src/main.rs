@@ -34,7 +34,9 @@ fn opts() -> Vec<Opt> {
         Opt { name: "log-every", takes_value: true, help: "logging interval" },
         Opt { name: "pipeline", takes_value: true, help: "block pipeline: on|off (default on)" },
         Opt { name: "block-bytes", takes_value: true, help: "pipeline partition block size in bytes" },
-        Opt { name: "inflight", takes_value: true, help: "max in-flight compress jobs per worker" },
+        Opt { name: "inflight", takes_value: true, help: "max in-flight (unacked) push jobs per worker" },
+        Opt { name: "ack-window", takes_value: true, help: "drain acks during the push phase: on|off (default on)" },
+        Opt { name: "iter-deadline-ms", takes_value: true, help: "server iteration deadline for degraded rounds (0 = strict BSP)" },
     ]
 }
 
@@ -65,6 +67,7 @@ fn worker_opts() -> Vec<Opt> {
     o.push(Opt { name: "rank", takes_value: true, help: "this worker's rank in [0, nodes)" });
     o.push(Opt { name: "iters", takes_value: true, help: "synthetic training iterations (default 10)" });
     o.push(Opt { name: "dump", takes_value: true, help: "write per-iteration aggregates to this file" });
+    o.push(Opt { name: "drop-push", takes_value: true, help: "fault injection: drop the push for KEY@ITER (tests the server deadline)" });
     o
 }
 
@@ -99,6 +102,15 @@ fn apply_overrides(cfg: &mut TrainConfig, a: &Args, servers_is_count: bool) -> R
     }
     cfg.pipeline.block_bytes = a.usize_or("block-bytes", cfg.pipeline.block_bytes)?;
     cfg.pipeline.inflight = a.usize_or("inflight", cfg.pipeline.inflight)?;
+    if let Some(w) = a.get("ack-window") {
+        cfg.pipeline.ack_window = match w {
+            "on" | "true" | "1" => true,
+            "off" | "false" | "0" => false,
+            other => return Err(format!("--ack-window: expected on|off, got '{other}'")),
+        };
+    }
+    cfg.server.iter_deadline_ms =
+        a.u64_or("iter-deadline-ms", cfg.server.iter_deadline_ms)?;
     cfg.validate().map_err(|e| e.to_string())?;
     Ok(())
 }
@@ -173,10 +185,14 @@ fn cmd_server(a: &Args) -> anyhow::Result<()> {
     let dim = a.usize_or("dim", 1 << 16).map_err(anyhow::Error::msg)?;
     let tensors = a.usize_or("tensors", 8).map_err(anyhow::Error::msg)?;
     let stats = cluster::run_server(&cfg, &listen, shard, dim, tensors)?;
-    println!(
-        "shard {shard}: {} pushes | {} pulls | {} rejected | {} short iterations | {} stale pulls",
-        stats.pushes, stats.pulls, stats.rejected, stats.short_iters, stats.stale_pulls
-    );
+    // The full counter set (ServerStats's Display — one rendering shared
+    // with cluster::serve's stderr line), flushed on clean shutdown, so a
+    // cluster run is diagnosable from the process output alone: degraded/
+    // late tell the deadline story, rejected/short/stale/early the
+    // hostile-input one.
+    println!("shard {shard}: {stats}");
+    use std::io::Write;
+    std::io::stdout().flush().ok();
     Ok(())
 }
 
@@ -194,14 +210,21 @@ fn cmd_worker(a: &Args) -> anyhow::Result<()> {
     let tensors = a.usize_or("tensors", 8).map_err(anyhow::Error::msg)?;
     let iters = a.usize_or("iters", 10).map_err(anyhow::Error::msg)?;
     let dump = a.get("dump").map(PathBuf::from);
+    let drop = a.get("drop-push").map(cluster::PushDrop::parse).transpose().map_err(anyhow::Error::msg)?;
     let report =
-        cluster::run_worker(&cfg, rank, &servers, dim, tensors, iters, dump.as_deref())?;
+        cluster::run_worker(&cfg, rank, &servers, dim, tensors, iters, dump.as_deref(), drop)?;
     println!(
-        "worker {rank}: {} iterations done | final loss {:.9e} | wire {}",
+        "worker {rank}: {} iterations done | final loss {:.9e} | wire {} | \
+         {} degraded pulls | {} dropped pushes | {} window stalls",
         iters,
         report.final_loss,
-        byteps_compress::util::human_bytes(report.wire_bytes as usize)
+        byteps_compress::util::human_bytes(report.wire_bytes as usize),
+        report.counters.degraded_responses,
+        report.counters.dropped_pushes,
+        report.counters.window_stalls
     );
+    use std::io::Write;
+    std::io::stdout().flush().ok();
     Ok(())
 }
 

@@ -20,6 +20,24 @@
 //! every block against its scheme ([`crate::compress::validate_wire`]) and
 //! rejects corrupt blocks (counted in [`ServerStats::rejected`]) instead of
 //! panicking mid-aggregation.
+//!
+//! ## Iteration deadline (degraded rounds)
+//!
+//! Strict BSP has a liveness hole: if one worker's push for iteration *t*
+//! is lost or rejected, the round never reaches `n_workers` pushes and
+//! every worker's pull for *t* waits forever. With
+//! [`ServerOptions::iter_deadline`] set, a round that has at least one
+//! push and has been open longer than the deadline is *sealed* with the
+//! contributions it has: the partial sum is averaged over the pushes
+//! actually received, second-way-compressed as usual, and served with
+//! `served_with < n_workers` on the wire so workers can tell a degraded
+//! round from a full one ([`ServerStats::degraded_iters`]). A push that
+//! arrives after its round was sealed is dropped and counted
+//! ([`ServerStats::late_pushes`]) — it is never merged retroactively,
+//! which would hand different workers different aggregates for the same
+//! iteration. With the deadline unset the server is bit-identical to the
+//! strict-BSP aggregator (no timer, no polling, no wire change beyond the
+//! constant `served_with == n_workers` tag).
 
 use crate::comm::{BlockKey, CommError, Endpoint, Key, Message};
 use crate::compress::ef::EfState;
@@ -29,6 +47,7 @@ use crate::util::rng::Xoshiro256;
 use std::collections::HashMap;
 use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 /// Server behaviour knobs.
 #[derive(Clone)]
@@ -45,6 +64,12 @@ pub struct ServerOptions {
     /// (0 = unlimited). The launchers set it to the partition size so a
     /// client inventing keys cannot grow server memory without bound.
     pub max_keys: usize,
+    /// Iteration deadline for degraded rounds (`server.iter_deadline_ms`):
+    /// a round with at least one push that stays incomplete this long is
+    /// sealed and served partial (`served_with < n_workers`). `None` =
+    /// strict BSP — a lost push stalls its iteration's pulls forever, but
+    /// behavior is bit-identical to the pre-deadline server.
+    pub iter_deadline: Option<Duration>,
 }
 
 struct KeyState {
@@ -56,8 +81,21 @@ struct KeyState {
     /// must not resize (or panic on) the accumulator.
     dim: Option<usize>,
     acc: Vec<f32>,
-    count: usize,
-    ready: Option<crate::compress::Compressed>,
+    /// Connection indices that contributed to the current round, in
+    /// arrival order. The *connection* is the trusted identity (the wire
+    /// `worker` field is not), and deduplicating on it keeps a
+    /// retransmitting or hostile client from completing a round early
+    /// with one worker double-counted — which would also make the
+    /// `served_with` tag lie about how many workers the aggregate holds.
+    contributors: Vec<u32>,
+    /// When the current round's first push arrived — the iteration
+    /// deadline's clock. `None` while the round is empty or already
+    /// sealed.
+    round_started: Option<Instant>,
+    /// The sealed aggregate for `iter`, tagged with how many worker
+    /// contributions it holds (`served_with`: `n_workers` for a full BSP
+    /// round, fewer for a deadline-degraded one).
+    ready: Option<(u16, crate::compress::Compressed)>,
     /// The previous iteration's aggregate. BSP lets a fast worker *push*
     /// iteration i+1 (which rolls this key over) before a slow worker has
     /// *pulled* iteration i — the slow pull must still be servable.
@@ -73,7 +111,14 @@ struct KeyState {
     /// order. So per key the lag stays bounded by one iteration and the
     /// one-slot rollover is still sufficient (tested in
     /// `rust/tests/distributed.rs`).
-    prev: Option<(u64, crate::compress::Compressed)>,
+    ///
+    /// The *iteration deadline* is the one exception: it can seal rounds
+    /// without a stalled worker's push, so the clock may advance two or
+    /// more past a live-but-delayed worker. Such a worker's pull finds
+    /// neither `ready` nor `prev` and is answered with the retired
+    /// marker ([`retired_marker`], `served_with == 0`) so it fails
+    /// loudly instead of hanging on a reply that cannot come.
+    prev: Option<(u64, u16, crate::compress::Compressed)>,
     /// Queued pulls as (iter, connection index) — the endpoint to answer
     /// on, which is the server's ground truth for who is asking (the wire
     /// `worker` field is untrusted).
@@ -88,7 +133,8 @@ impl KeyState {
             iter,
             dim: None,
             acc: Vec::new(),
-            count: 0,
+            contributors: Vec::new(),
+            round_started: None,
             ready: None,
             prev: None,
             pending: Vec::new(),
@@ -120,8 +166,63 @@ pub struct ServerStats {
     /// Messages a server should never receive (`Welcome`, `PullResp`,
     /// mid-stream `Hello`, ...) — ignored and counted, never a panic.
     pub unexpected: u64,
+    /// Rounds sealed by the iteration deadline with fewer than `n_workers`
+    /// contributions and served degraded (`served_with < n_workers`).
+    /// Disjoint from `short_iters`, which counts partial rounds that were
+    /// *discarded unserved* at rollover — a deadline-sealed round is never
+    /// double-counted there.
+    pub degraded_iters: u64,
+    /// Pushes that arrived for a round already sealed (completed normally
+    /// or by the deadline) — dropped and counted, never merged
+    /// retroactively into an aggregate other workers may have pulled.
+    pub late_pushes: u64,
     pub decompress_s: f64,
     pub compress_s: f64,
+}
+
+/// Reply for an unservable pull: a `PullResp` whose `served_with` is 0
+/// and whose block is empty. No real aggregate can have zero
+/// contributors, so the marker is unambiguous on the wire. It exists
+/// because the iteration deadline breaks strict BSP's guarantee that the
+/// key clock never advances two past a live worker: a worker delayed
+/// ~2 deadlines can ask for an iteration already evicted from the
+/// one-slot history, and silently dropping that pull would hang it
+/// forever — the marker lets it fail loudly instead.
+fn retired_marker(key: Key, iter: u64) -> Message {
+    Message::PullResp {
+        key,
+        iter,
+        served_with: 0,
+        data: crate::compress::Compressed {
+            scheme: crate::compress::SchemeId::Identity,
+            n: 0,
+            payload: Vec::new(),
+        },
+    }
+}
+
+/// The one canonical rendering of the counter set, shared by every
+/// shutdown line (`bytepsc server` stdout, `cluster::serve` stderr) so a
+/// new counter cannot be added to one surface and silently missed on the
+/// other — EXPERIMENTS.md's degraded-round recipe reads these lines.
+impl std::fmt::Display for ServerStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} pushes | {} pulls | {} rejected | {} short iterations | \
+             {} degraded iterations | {} late pushes | {} stale pulls | \
+             {} early pulls | {} unexpected",
+            self.pushes,
+            self.pulls,
+            self.rejected,
+            self.short_iters,
+            self.degraded_iters,
+            self.late_pushes,
+            self.stale_pulls,
+            self.early_pulls,
+            self.unexpected
+        )
+    }
 }
 
 /// The server's synchronous core: feed it messages, collect replies.
@@ -237,85 +338,106 @@ impl ServerCore {
                     _ => {}
                 }
                 if iter < st.iter {
-                    // A push for an iteration this key already retired — a
-                    // hostile client or a straggler beyond BSP's one-slot
-                    // lag. Unusable either way; drop it, counted.
+                    // A push for an iteration this key already retired.
+                    // If it targets the just-retired (one-slot history)
+                    // round, it is the honest straggler the degraded-round
+                    // protocol tolerates — its round was sealed and rolled
+                    // over before the push landed — and belongs in the
+                    // `late_pushes` telemetry, not the corruption counter.
+                    // Anything older is a hostile client or a straggler
+                    // beyond BSP's lag bound. Unusable either way; drop.
+                    if st.prev.as_ref().is_some_and(|(piter, _, _)| *piter == iter) {
+                        eprintln!(
+                            "server: dropping late push for key {key} iteration {iter} \
+                             from worker {worker}: the round was sealed and retired"
+                        );
+                        self.stats.late_pushes += 1;
+                    } else {
+                        eprintln!(
+                            "server: rejecting stale push for key {key} iteration {iter} \
+                             from worker {worker} (key is at {})",
+                            st.iter
+                        );
+                        self.stats.rejected += 1;
+                    }
+                    return vec![];
+                }
+                if st.iter != iter {
+                    // New iteration for this key: retire the sealed
+                    // aggregate (slow workers may still pull it) and reset
+                    // the accumulator. A short round — a rejected corrupt
+                    // push left `count` below n_workers and no deadline
+                    // sealed it — is recovered by discarding the partial
+                    // sum, never by asserting the shard down on untrusted
+                    // input. A deadline-sealed degraded round has
+                    // `ready.is_some()` and was already counted in
+                    // `degraded_iters`; it must not be double-counted as
+                    // short here.
+                    if !st.contributors.is_empty()
+                        && st.contributors.len() != self.opts.n_workers
+                        && st.ready.is_none()
+                    {
+                        eprintln!(
+                            "server: key {key} iteration {} was short ({}/{} pushes); \
+                             discarding the partial aggregate",
+                            st.iter,
+                            st.contributors.len(),
+                            self.opts.n_workers
+                        );
+                        self.stats.short_iters += 1;
+                    }
+                    if let Some((served, p)) = st.ready.take() {
+                        st.prev = Some((st.iter, served, p));
+                    }
+                    st.iter = iter;
+                    st.contributors.clear();
+                    st.round_started = None;
+                    st.acc.clear();
+                    st.acc.resize(data.n, 0.0);
+                } else if st.ready.is_some() {
+                    // The round for `iter` is already sealed — by a full
+                    // BSP completion (this is a duplicate push) or by the
+                    // iteration deadline (this is the late straggler the
+                    // degraded-round protocol tolerates). Either way the
+                    // aggregate may already be in other workers' hands:
+                    // merging retroactively would hand different workers
+                    // different bytes for the same iteration. Drop it,
+                    // counted — a rejected or late push is never
+                    // resurrected.
                     eprintln!(
-                        "server: rejecting stale push for key {key} iteration {iter} \
-                         from worker {worker} (key is at {})",
-                        st.iter
+                        "server: dropping late push for key {key} iteration {iter} from \
+                         worker {worker}: the round is already sealed"
+                    );
+                    self.stats.late_pushes += 1;
+                    return vec![];
+                }
+                if st.contributors.contains(&from) {
+                    // A second push from the same connection for an open
+                    // round — a retransmitting or hostile client. Counting
+                    // it would complete the round early with one worker
+                    // double-counted (and `served_with` lying about it);
+                    // the connection index is the trusted identity, never
+                    // the wire `worker` field.
+                    eprintln!(
+                        "server: rejecting duplicate push for key {key} iteration {iter} \
+                         from connection {from} (claims worker {worker})"
                     );
                     self.stats.rejected += 1;
                     return vec![];
                 }
-                if st.iter != iter {
-                    // New iteration for this key: retire the completed
-                    // aggregate (slow workers may still pull it) and reset
-                    // the accumulator. A short round — a rejected corrupt
-                    // push left `count` below n_workers — is recovered by
-                    // discarding the partial sum, never by asserting the
-                    // shard down on untrusted input.
-                    if st.count != 0 && st.count != self.opts.n_workers {
-                        eprintln!(
-                            "server: key {key} iteration {} was short ({}/{} pushes); \
-                             discarding the partial aggregate",
-                            st.iter, st.count, self.opts.n_workers
-                        );
-                        self.stats.short_iters += 1;
-                    }
-                    if let Some(p) = st.ready.take() {
-                        st.prev = Some((st.iter, p));
-                    }
-                    st.iter = iter;
-                    st.count = 0;
-                    st.acc.clear();
-                    st.acc.resize(data.n, 0.0);
+                let t = Instant::now();
+                if st.contributors.is_empty() {
+                    // First push of the round starts the deadline clock.
+                    st.round_started = Some(t);
                 }
-                let t = std::time::Instant::now();
                 self.opts.comp.add_decompressed(&data, &mut st.acc);
                 self.stats.decompress_s += t.elapsed().as_secs_f64();
-                st.count += 1;
+                st.contributors.push(from);
                 self.stats.pushes += 1;
+                let complete = st.contributors.len() == self.opts.n_workers;
                 let mut replies = vec![(from, Message::Ack { key, iter })];
-                if st.count == self.opts.n_workers {
-                    // Aggregate complete: average + second-way compression.
-                    let inv = 1.0 / self.opts.n_workers as f32;
-                    for a in &mut st.acc {
-                        *a *= inv;
-                    }
-                    let t = std::time::Instant::now();
-                    let acc = std::mem::take(&mut st.acc);
-                    let p = match self.opts.sync {
-                        SyncMode::CompressedEf => self.ef.compress_owned(
-                            key,
-                            acc,
-                            self.opts.comp.as_ref(),
-                            &mut Ctx::with_threads(&mut self.rng, self.opts.intra_threads),
-                        ),
-                        _ => self.opts.comp.compress(
-                            &acc,
-                            &mut Ctx::with_threads(&mut self.rng, self.opts.intra_threads),
-                        ),
-                    };
-                    self.stats.compress_s += t.elapsed().as_secs_f64();
-                    st.ready = Some(p.clone());
-                    // The queue fully drains at every completion: matching
-                    // pulls are served, everything else (short-iteration
-                    // leftovers below, placeholder-era junk above) is
-                    // unservable and dropped — nothing hostile can sit in
-                    // `pending` displacing honest pulls forever.
-                    let served: Vec<(u64, u32)> = std::mem::take(&mut st.pending);
-                    for (piter, w) in served {
-                        if piter == iter {
-                            replies.push((w, Message::PullResp { key, iter, data: p.clone() }));
-                        } else {
-                            eprintln!(
-                                "server: dropping unservable queued pull for key {key} \
-                                 iteration {piter} from worker {w} (key is at {iter})"
-                            );
-                            self.stats.stale_pulls += 1;
-                        }
-                    }
+                if complete {
+                    self.seal_round(key, &mut replies);
                 }
                 replies
             }
@@ -327,7 +449,10 @@ impl ServerCore {
                          shard is at its placeholder capacity"
                     );
                     self.stats.rejected += 1;
-                    return vec![];
+                    // Unservable-pull policy: always answer (see
+                    // retired_marker) — a dropped pull must never become
+                    // a silent hang on the puller's side.
+                    return vec![(from, retired_marker(key, iter))];
                 }
                 // A pull may precede any push for its key — a reordered
                 // startup, or a client probing unknown keys. Queue it (as
@@ -339,43 +464,72 @@ impl ServerCore {
                 }
                 if st.dim.is_some() {
                     if st.iter == iter {
-                        if let Some(p) = &st.ready {
-                            return vec![(from, Message::PullResp { key, iter, data: p.clone() })];
+                        if let Some((served, p)) = &st.ready {
+                            return vec![(
+                                from,
+                                Message::PullResp {
+                                    key,
+                                    iter,
+                                    served_with: *served,
+                                    data: p.clone(),
+                                },
+                            )];
                         }
-                    } else if let Some((piter, p)) = &st.prev {
+                    } else if let Some((piter, served, p)) = &st.prev {
                         // A pull lagging one iteration behind a fast pusher.
                         if *piter == iter {
-                            return vec![(from, Message::PullResp { key, iter, data: p.clone() })];
+                            return vec![(
+                                from,
+                                Message::PullResp {
+                                    key,
+                                    iter,
+                                    served_with: *served,
+                                    data: p.clone(),
+                                },
+                            )];
                         }
                     }
                     if iter < st.iter {
                         // Older than the one-slot history: unservable.
-                        // Honest BSP workers never lag two iterations, so
-                        // this is a short-iteration leftover or a hostile
-                        // client — count it and drop instead of asserting.
+                        // Under strict BSP only a hostile client gets
+                        // here, but the iteration deadline can advance
+                        // the key clock past a live worker that stalls
+                        // for ~2 deadlines — answer with the retired
+                        // marker so it fails loudly instead of waiting
+                        // forever for a reply that cannot come.
                         eprintln!(
-                            "server: dropping stale pull for key {key} iteration {iter} \
+                            "server: retiring stale pull for key {key} iteration {iter} \
                              from worker {worker} (key is at {})",
                             st.iter
                         );
                         self.stats.stale_pulls += 1;
-                        return vec![];
+                        return vec![(from, retired_marker(key, iter))];
                     }
-                    if iter > st.iter {
-                        // Impossible for honest traffic: per-connection
-                        // FIFO means a worker's push(key, i) is processed
-                        // before its pull(key, i), so the key's clock has
-                        // always reached `iter` by pull time. Queueing it
-                        // would let a flood of far-future pulls poison the
-                        // pending queue forever — reject instead.
+                    if iter > st.iter.saturating_add(1) {
+                        // Impossible for honest traffic even with lost
+                        // pushes: a worker only advances to iteration i+1
+                        // after its pull for i completed, so its future
+                        // lag is bounded by one. Queueing beyond that
+                        // would let a flood of far-future pulls poison
+                        // the pending queue forever — reject instead.
                         eprintln!(
                             "server: rejecting future pull for key {key} iteration {iter} \
                              from worker {worker} (key is at {})",
                             st.iter
                         );
                         self.stats.rejected += 1;
-                        return vec![];
+                        // Honest traffic cannot get here, but answer
+                        // anyway — a dropped pull must never become a
+                        // silent hang.
+                        return vec![(from, retired_marker(key, iter))];
                     }
+                    // iter == st.iter with no sealed aggregate falls
+                    // through to the queue, as does iter == st.iter + 1:
+                    // the puller's own push for that round may have been
+                    // lost (per-connection FIFO no longer implies the
+                    // key's clock reached `iter` once pushes can be
+                    // dropped), and rejecting it would strand the worker
+                    // forever — the deadline seal serves the queue.
                 }
                 // Honest traffic queues at most one pull per worker per
                 // key; anything past a small multiple is a flood (pulls
@@ -387,7 +541,7 @@ impl ServerCore {
                          worker {worker}: pending queue full"
                     );
                     self.stats.stale_pulls += 1;
-                    return vec![];
+                    return vec![(from, retired_marker(key, iter))];
                 }
                 st.pending.push((iter, from));
                 vec![]
@@ -409,6 +563,107 @@ impl ServerCore {
                 vec![]
             }
         }
+    }
+
+    /// Seal the current round of `key` with the contributions present:
+    /// average over the pushes actually received, run the second-way
+    /// compression, stash the aggregate (tagged with its `served_with`
+    /// count) and answer every matching queued pull. Shared by normal BSP
+    /// completion (`count == n_workers`) and the iteration deadline
+    /// (`count < n_workers`, a degraded round). For a full round the
+    /// averaging divisor equals `n_workers`, so the strict-BSP path is
+    /// bit-identical to the pre-deadline server.
+    fn seal_round(&mut self, key: Key, replies: &mut Vec<(u32, Message)>) {
+        let st = self.keys.get_mut(&key).expect("sealing an unknown key");
+        debug_assert!(st.ready.is_none(), "sealing an already-sealed round");
+        debug_assert!(!st.contributors.is_empty(), "sealing an empty round");
+        let count = st.contributors.len();
+        let served = count.min(u16::MAX as usize) as u16;
+        if count < self.opts.n_workers {
+            eprintln!(
+                "server: iteration deadline — serving key {key} iteration {} degraded \
+                 ({}/{} pushes)",
+                st.iter, count, self.opts.n_workers
+            );
+            self.stats.degraded_iters += 1;
+        }
+        let inv = 1.0 / count as f32;
+        for a in &mut st.acc {
+            *a *= inv;
+        }
+        let iter = st.iter;
+        let t = Instant::now();
+        let acc = std::mem::take(&mut st.acc);
+        let p = match self.opts.sync {
+            SyncMode::CompressedEf => self.ef.compress_owned(
+                key,
+                acc,
+                self.opts.comp.as_ref(),
+                &mut Ctx::with_threads(&mut self.rng, self.opts.intra_threads),
+            ),
+            _ => self
+                .opts
+                .comp
+                .compress(&acc, &mut Ctx::with_threads(&mut self.rng, self.opts.intra_threads)),
+        };
+        self.stats.compress_s += t.elapsed().as_secs_f64();
+        st.ready = Some((served, p.clone()));
+        st.round_started = None;
+        // The queue fully drains at every seal: matching pulls are served,
+        // everything else (short-iteration leftovers, placeholder-era
+        // junk) is unservable and dropped — nothing hostile can sit in
+        // `pending` displacing honest pulls forever.
+        let pending: Vec<(u64, u32)> = std::mem::take(&mut st.pending);
+        for (piter, w) in pending {
+            if piter == iter {
+                replies.push((
+                    w,
+                    Message::PullResp { key, iter, served_with: served, data: p.clone() },
+                ));
+            } else {
+                eprintln!(
+                    "server: retiring unservable queued pull for key {key} \
+                     iteration {piter} from worker {w} (key is at {iter})"
+                );
+                self.stats.stale_pulls += 1;
+                replies.push((w, retired_marker(key, piter)));
+            }
+        }
+    }
+
+    /// Iteration-deadline sweep: seal every round that has at least one
+    /// push, has not completed, and saw its first push at least
+    /// [`ServerOptions::iter_deadline`] ago — serving pulls a *partial*
+    /// aggregate marked `served_with < n_workers` instead of stalling
+    /// every worker forever on a lost or rejected push. Returns the
+    /// replies to send (queued pulls for the sealed iterations). No-op
+    /// when the deadline is unset.
+    ///
+    /// `now` is an explicit argument so tests can drive the clock
+    /// deterministically; the I/O loop passes `Instant::now()`.
+    pub fn poll_deadlines(&mut self, now: Instant) -> Vec<(u32, Message)> {
+        let Some(deadline) = self.opts.iter_deadline else {
+            return Vec::new();
+        };
+        let mut due: Vec<Key> = self
+            .keys
+            .iter()
+            .filter(|(_, st)| {
+                !st.contributors.is_empty()
+                    && st.ready.is_none()
+                    && st
+                        .round_started
+                        .is_some_and(|t0| now.saturating_duration_since(t0) >= deadline)
+            })
+            .map(|(&k, _)| k)
+            .collect();
+        // Deterministic seal order (HashMap iteration order is not).
+        due.sort_unstable();
+        let mut replies = Vec::new();
+        for key in due {
+            self.seal_round(key, &mut replies);
+        }
+        replies
     }
 }
 
@@ -459,14 +714,43 @@ impl Server {
                 }
                 drop(tx);
                 let mut core = ServerCore::new(opts);
+                // With an iteration deadline the aggregator wakes at a
+                // fraction of it to sweep for overdue rounds; without one
+                // it blocks indefinitely — zero polling overhead, exactly
+                // the strict-BSP loop.
+                let tick = core.opts.iter_deadline.map(|d| (d / 4).max(Duration::from_millis(1)));
+                let mut last_poll = Instant::now();
                 let mut live = n;
                 while live > 0 {
-                    let Ok((from, msg)) = rx.recv() else { break };
-                    if matches!(msg, Message::Shutdown) {
-                        live -= 1;
-                        continue;
+                    let received = match tick {
+                        None => match rx.recv() {
+                            Ok(m) => Some(m),
+                            Err(_) => break,
+                        },
+                        Some(t) => match rx.recv_timeout(t) {
+                            Ok(m) => Some(m),
+                            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => None,
+                            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break,
+                        },
+                    };
+                    let mut replies = Vec::new();
+                    if let Some((from, msg)) = received {
+                        if matches!(msg, Message::Shutdown) {
+                            live -= 1;
+                        } else {
+                            replies = core.handle(from, msg);
+                        }
                     }
-                    for (to, reply) in core.handle(from, msg) {
+                    if let Some(t) = tick {
+                        // Sweep on idle ticks, and at most once per tick
+                        // under a message flood (the sweep walks every
+                        // key).
+                        if last_poll.elapsed() >= t {
+                            replies.extend(core.poll_deadlines(Instant::now()));
+                            last_poll = Instant::now();
+                        }
+                    }
+                    for (to, reply) in replies {
                         // `to` is always a connection index the core got
                         // from us, but never trust it enough to index out
                         // of bounds; a dropped worker is a shutdown in
@@ -650,7 +934,22 @@ mod tests {
             intra_threads: 1,
             seed: 7,
             max_keys: 0,
+            iter_deadline: None,
         }
+    }
+
+    /// Same, with an iteration deadline. Tests drive `poll_deadlines`
+    /// with explicit clocks, so the duration's magnitude is irrelevant.
+    fn opts_deadline(scheme: &str, sync: SyncMode, workers: usize) -> ServerOptions {
+        ServerOptions {
+            iter_deadline: Some(std::time::Duration::from_millis(50)),
+            ..opts(scheme, sync, workers)
+        }
+    }
+
+    /// A clock strictly past every configured test deadline.
+    fn after_deadline() -> Instant {
+        Instant::now() + std::time::Duration::from_secs(3600)
     }
 
     fn push(core: &mut ServerCore, key: Key, iter: u64, worker: u32, g: &[f32]) -> Vec<(u32, Message)> {
@@ -987,9 +1286,13 @@ mod tests {
         for iter in 0..4u64 {
             push(&mut core, 0, iter, 0, &[iter as f32]);
         }
-        // Key is at iter 3; prev holds iter 2. A pull for iter 0 is stale.
+        // Key is at iter 3; prev holds iter 2. A pull for iter 0 is stale
+        // and answered with the retired marker (served_with == 0, empty
+        // block) so the puller can fail loudly instead of hanging.
         let r = core.handle(0, Message::Pull { key: 0, iter: 0, worker: 0 });
-        assert!(r.is_empty());
+        assert_eq!(r.len(), 1);
+        let Message::PullResp { iter, served_with, data, .. } = &r[0].1 else { panic!("{r:?}") };
+        assert_eq!((*iter, *served_with, data.n), (0, 0, 0));
         assert_eq!(core.stats.stale_pulls, 1);
         // Current iteration still serves.
         let r = core.handle(0, Message::Pull { key: 0, iter: 3, worker: 0 });
@@ -1072,8 +1375,10 @@ mod tests {
         // Pull-created placeholders have their own equal budget…
         assert!(core.handle(0, Message::Pull { key: 10, iter: 0, worker: 0 }).is_empty());
         assert!(core.handle(0, Message::Pull { key: 11, iter: 0, worker: 0 }).is_empty());
-        // …beyond which junk-key pulls are dropped…
-        assert!(core.handle(0, Message::Pull { key: 12, iter: 0, worker: 0 }).is_empty());
+        // …beyond which junk-key pulls bounce with the retired marker…
+        let r = core.handle(0, Message::Pull { key: 12, iter: 0, worker: 0 });
+        assert_eq!(r.len(), 1);
+        assert!(matches!(r[0].1, Message::PullResp { served_with: 0, .. }), "{r:?}");
         assert_eq!(core.stats.rejected, 2);
         // …and junk placeholders never block established keys.
         let r = core.handle(0, Message::Pull { key: 0, iter: 0, worker: 0 });
@@ -1092,22 +1397,36 @@ mod tests {
         let mut core = ServerCore::new(opts("identity", SyncMode::Full, 1));
         push(&mut core, 0, 0, 0, &[1.0]);
         for _ in 0..5 {
+            // Far-future pulls are rejected — answered with the retired
+            // marker, never a silent drop.
             let r = core.handle(0, Message::Pull { key: 0, iter: 99, worker: 0 });
-            assert!(r.is_empty());
+            assert_eq!(r.len(), 1);
+            let Message::PullResp { served_with, .. } = &r[0].1 else { panic!("{r:?}") };
+            assert_eq!(*served_with, 0);
         }
         assert_eq!(core.stats.rejected, 5);
         // Placeholder floods: pending cap is 2 * n_workers = 2, so of five
-        // queue attempts three are dropped.
+        // queue attempts three are dropped (marker-answered).
         for i in 0..5u64 {
             let r = core.handle(0, Message::Pull { key: 7, iter: i, worker: 0 });
-            assert!(r.is_empty());
+            if i < 2 {
+                assert!(r.is_empty(), "pull {i} should queue: {r:?}");
+            } else {
+                assert_eq!(r.len(), 1, "pull {i} should bounce with a marker: {r:?}");
+            }
         }
         assert_eq!(core.stats.stale_pulls, 3);
         // Establishing key 7 at iteration 0 serves the matching queued
-        // pull and drains (drops) the junk one — nothing lingers.
+        // pull and drains the junk one with a retired marker — nothing
+        // lingers, nothing is silently dropped.
         let r = push(&mut core, 7, 0, 0, &[1.0]);
-        assert_eq!(r.len(), 2, "ack + the queued iter-0 pull: {r:?}");
-        assert!(r.iter().any(|(_, m)| matches!(m, Message::PullResp { .. })));
+        assert_eq!(r.len(), 3, "ack + served iter-0 pull + retired iter-1 marker: {r:?}");
+        assert!(r
+            .iter()
+            .any(|(_, m)| matches!(m, Message::PullResp { served_with: 1.., .. })));
+        assert!(r
+            .iter()
+            .any(|(_, m)| matches!(m, Message::PullResp { served_with: 0, .. })));
         assert_eq!(core.stats.stale_pulls, 4);
         // The original key still serves its real iteration.
         let r = core.handle(0, Message::Pull { key: 0, iter: 0, worker: 0 });
@@ -1153,5 +1472,320 @@ mod tests {
         let mut out = vec![0.0f32; 4];
         core.opts.comp.decompress(data, &mut out);
         assert_eq!(out, vec![3.0, 4.0, 5.0, 6.0]);
+    }
+
+    /// The iteration deadline seals a round that has at least one push:
+    /// the partial aggregate (averaged over the pushes received) is served
+    /// with `served_with < n_workers`, and a full round still reports
+    /// `served_with == n_workers`.
+    #[test]
+    fn deadline_seals_partial_round_and_serves_degraded() {
+        let mut core = ServerCore::new(opts_deadline("identity", SyncMode::Full, 2));
+        push(&mut core, 0, 0, 0, &[2.0, 4.0]);
+        // Worker 1 pulls before its (lost) push completed the round: queued.
+        let r = core.handle(1, Message::Pull { key: 0, iter: 0, worker: 1 });
+        assert!(r.is_empty());
+        let replies = core.poll_deadlines(after_deadline());
+        assert_eq!(replies.len(), 1, "the queued pull must be answered: {replies:?}");
+        let (to, Message::PullResp { iter, served_with, data, .. }) = &replies[0] else {
+            panic!("not a PullResp: {replies:?}")
+        };
+        assert_eq!((*to, *iter, *served_with), (1, 0, 1));
+        let mut out = vec![0.0f32; 2];
+        core.opts.comp.decompress(data, &mut out);
+        // Averaged over the one contribution received, not n_workers.
+        assert_eq!(out, vec![2.0, 4.0]);
+        assert_eq!(core.stats.degraded_iters, 1);
+        assert_eq!(core.stats.short_iters, 0);
+        // A later pull for the sealed iteration is served the same bytes.
+        let r = core.handle(0, Message::Pull { key: 0, iter: 0, worker: 0 });
+        let Message::PullResp { served_with, .. } = &r[0].1 else { panic!("{r:?}") };
+        assert_eq!(*served_with, 1);
+    }
+
+    /// With no deadline configured, `poll_deadlines` is a strict no-op —
+    /// the incomplete round keeps waiting (strict BSP).
+    #[test]
+    fn deadline_unset_poll_is_noop() {
+        let mut core = ServerCore::new(opts("identity", SyncMode::Full, 2));
+        push(&mut core, 0, 0, 0, &[1.0]);
+        assert!(core.poll_deadlines(after_deadline()).is_empty());
+        assert_eq!(core.stats.degraded_iters, 0);
+        // The pull still queues rather than being served partial.
+        let r = core.handle(1, Message::Pull { key: 0, iter: 0, worker: 1 });
+        assert!(r.is_empty());
+    }
+
+    /// A round sealed by the deadline must not be counted *again* as a
+    /// short iteration when the key rolls over, and the next iteration
+    /// completes as a normal full round.
+    #[test]
+    fn deadline_does_not_double_count_short_iters() {
+        let mut core = ServerCore::new(opts_deadline("identity", SyncMode::Full, 2));
+        push(&mut core, 0, 0, 0, &[2.0]);
+        assert!(core.poll_deadlines(after_deadline()).is_empty()); // nothing queued
+        assert_eq!(core.stats.degraded_iters, 1);
+        // Both workers proceed to iteration 1; the rollover must not see a
+        // "short" round — the partial was served, not lost.
+        push(&mut core, 0, 1, 0, &[10.0]);
+        let r = push(&mut core, 0, 1, 1, &[20.0]);
+        assert!(!r.is_empty());
+        assert_eq!(core.stats.short_iters, 0);
+        assert_eq!(core.stats.degraded_iters, 1);
+        let r = core.handle(0, Message::Pull { key: 0, iter: 1, worker: 0 });
+        let Message::PullResp { served_with, data, .. } = &r[0].1 else { panic!("{r:?}") };
+        assert_eq!(*served_with, 2);
+        let mut out = vec![0.0f32; 1];
+        core.opts.comp.decompress(data, &mut out);
+        assert_eq!(out, vec![15.0]);
+    }
+
+    /// A push rejected before the deadline fired stays rejected: when the
+    /// same worker re-sends a now-valid push for the sealed round, it is
+    /// dropped as late (`late_pushes`) — the aggregate other workers may
+    /// already hold never changes retroactively.
+    #[test]
+    fn deadline_does_not_resurrect_rejected_push() {
+        let mut core = ServerCore::new(opts_deadline("identity", SyncMode::Full, 2));
+        push(&mut core, 0, 0, 0, &[6.0, 8.0]);
+        // Worker 1's push is corrupt (wrong element count) and rejected.
+        let bad = crate::compress::Compressed {
+            scheme: crate::compress::SchemeId::Identity,
+            n: 1,
+            payload: vec![0u8; 4],
+        };
+        let r = core.handle(1, Message::Push { key: 0, iter: 0, worker: 1, data: bad });
+        assert!(r.is_empty());
+        assert_eq!(core.stats.rejected, 1);
+        // Deadline fires: round sealed with worker 0's contribution only.
+        core.poll_deadlines(after_deadline());
+        assert_eq!(core.stats.degraded_iters, 1);
+        // Worker 1 retries with a valid push for the sealed iteration: no
+        // ack, counted late, aggregate untouched.
+        let r = push(&mut core, 0, 0, 1, &[100.0, 200.0]);
+        assert!(r.is_empty(), "late push must not be acked: {r:?}");
+        assert_eq!(core.stats.late_pushes, 1);
+        let r = core.handle(0, Message::Pull { key: 0, iter: 0, worker: 0 });
+        let Message::PullResp { served_with, data, .. } = &r[0].1 else { panic!("{r:?}") };
+        assert_eq!(*served_with, 1);
+        let mut out = vec![0.0f32; 2];
+        core.opts.comp.decompress(data, &mut out);
+        assert_eq!(out, vec![6.0, 8.0]);
+        // And a second sweep never re-seals the same round.
+        assert!(core.poll_deadlines(after_deadline()).is_empty());
+        assert_eq!(core.stats.degraded_iters, 1);
+    }
+
+    /// A degraded aggregate retires into the one-slot history like any
+    /// other: a slow worker pulling the sealed iteration after a rollover
+    /// still gets the partial aggregate with its `served_with` tag.
+    #[test]
+    fn degraded_aggregate_survives_rollover() {
+        let mut core = ServerCore::new(opts_deadline("identity", SyncMode::Full, 2));
+        push(&mut core, 0, 0, 0, &[4.0]);
+        core.poll_deadlines(after_deadline());
+        assert_eq!(core.stats.degraded_iters, 1);
+        // The fast worker moves on, rolling the key over.
+        push(&mut core, 0, 1, 0, &[10.0]);
+        let r = core.handle(1, Message::Pull { key: 0, iter: 0, worker: 1 });
+        let Message::PullResp { iter, served_with, data, .. } = &r[0].1 else {
+            panic!("{r:?}")
+        };
+        assert_eq!((*iter, *served_with), (0, 1));
+        let mut out = vec![0.0f32; 1];
+        core.opts.comp.decompress(data, &mut out);
+        assert_eq!(out, vec![4.0]);
+        assert_eq!(core.stats.short_iters, 0);
+        // The straggler whose push finally lands after the rollover is
+        // counted as a *late* push (the tolerated event), not rejected
+        // (the corruption counter) — and still changes nothing.
+        let r = push(&mut core, 0, 0, 1, &[99.0]);
+        assert!(r.is_empty());
+        assert_eq!(core.stats.late_pushes, 1);
+        assert_eq!(core.stats.rejected, 0);
+        let r = core.handle(1, Message::Pull { key: 0, iter: 0, worker: 1 });
+        let Message::PullResp { served_with, .. } = &r[0].1 else { panic!("{r:?}") };
+        assert_eq!(*served_with, 1);
+    }
+
+    /// The deadline never seals empty rounds or pull-created placeholders
+    /// (`early_pulls` keys with no dimension), and the placeholder budget
+    /// is unaffected by the sweep: the queued pull is still answered by
+    /// the establishing push, not by the timer.
+    #[test]
+    fn deadline_ignores_placeholders_and_empty_rounds() {
+        let mut o = opts_deadline("identity", SyncMode::Full, 2);
+        o.max_keys = 2;
+        let mut core = ServerCore::new(o);
+        // Pull for a key no push has established: a budgeted placeholder.
+        let r = core.handle(1, Message::Pull { key: 9, iter: 0, worker: 1 });
+        assert!(r.is_empty());
+        assert_eq!(core.stats.early_pulls, 1);
+        // The sweep must not seal (or panic on) the dimension-less
+        // placeholder, nor a fully-idle established key.
+        assert!(core.poll_deadlines(after_deadline()).is_empty());
+        assert_eq!(core.stats.degraded_iters, 0);
+        // The placeholder still works once pushes establish it.
+        push(&mut core, 9, 0, 0, &[1.0]);
+        let r = push(&mut core, 9, 0, 1, &[3.0]);
+        assert!(
+            r.iter().any(|(w, m)| *w == 1 && matches!(m, Message::PullResp { .. })),
+            "queued early pull unanswered: {r:?}"
+        );
+        // And the placeholder budget is still enforced after a sweep
+        // (over-budget pulls bounce with the retired marker).
+        assert!(core.handle(0, Message::Pull { key: 20, iter: 0, worker: 0 }).is_empty());
+        assert!(core.handle(0, Message::Pull { key: 21, iter: 0, worker: 0 }).is_empty());
+        let before = core.stats.rejected;
+        let r = core.handle(0, Message::Pull { key: 22, iter: 0, worker: 0 });
+        assert!(matches!(r[0].1, Message::PullResp { served_with: 0, .. }), "{r:?}");
+        assert_eq!(core.stats.rejected, before + 1, "placeholder budget must still cap");
+    }
+
+    /// A worker that stalls ~2 deadlines while the deadline advances the
+    /// key clock past it gets the retired marker (`served_with == 0`,
+    /// empty block) for its late pull — never a silent drop that would
+    /// hang it forever (strict BSP made this state unreachable; the
+    /// deadline does not).
+    #[test]
+    fn deadline_lagged_worker_gets_retired_marker() {
+        let mut core = ServerCore::new(opts_deadline("identity", SyncMode::Full, 2));
+        // Round 0 completes fully; worker 1 then stalls before pulling.
+        push(&mut core, 0, 0, 0, &[1.0]);
+        push(&mut core, 0, 0, 1, &[3.0]);
+        // Worker 0 pulls 0 and pushes 1; the deadline seals round 1
+        // degraded; worker 0 pulls 1 and pushes 2 — evicting round 0
+        // from the one-slot history.
+        let _ = core.handle(0, Message::Pull { key: 0, iter: 0, worker: 0 });
+        push(&mut core, 0, 1, 0, &[5.0]);
+        core.poll_deadlines(after_deadline());
+        let _ = core.handle(0, Message::Pull { key: 0, iter: 1, worker: 0 });
+        push(&mut core, 0, 2, 0, &[7.0]);
+        // Worker 1 finally asks for round 0 — two behind the clock.
+        let r = core.handle(1, Message::Pull { key: 0, iter: 0, worker: 1 });
+        assert_eq!(r.len(), 1);
+        let Message::PullResp { iter, served_with, data, .. } = &r[0].1 else {
+            panic!("{r:?}")
+        };
+        assert_eq!((*iter, *served_with, data.n), (0, 0, 0));
+        assert_eq!(core.stats.stale_pulls, 1);
+    }
+
+    /// A duplicate push from one *connection* for an open round must not
+    /// complete the round early with that worker double-counted — the
+    /// `served_with` tag would lie about how many workers the aggregate
+    /// holds. The connection index is the identity; the wire `worker`
+    /// field is untrusted.
+    #[test]
+    fn duplicate_push_from_same_connection_is_rejected() {
+        let mut core = ServerCore::new(opts("identity", SyncMode::Full, 2));
+        push(&mut core, 0, 0, 0, &[4.0]);
+        let r = push(&mut core, 0, 0, 0, &[4.0]);
+        assert!(r.is_empty(), "duplicate must not be acked: {r:?}");
+        assert_eq!(core.stats.rejected, 1);
+        assert_eq!(core.stats.pushes, 1);
+        // The honest peer still completes the round with the true mean
+        // over *distinct* contributors.
+        let r = push(&mut core, 0, 0, 1, &[8.0]);
+        assert!(!r.is_empty());
+        let r = core.handle(0, Message::Pull { key: 0, iter: 0, worker: 0 });
+        let Message::PullResp { served_with, data, .. } = &r[0].1 else { panic!("{r:?}") };
+        assert_eq!(*served_with, 2);
+        let mut out = vec![0.0f32; 1];
+        core.opts.comp.decompress(data, &mut out);
+        assert_eq!(out, vec![6.0]);
+    }
+
+    /// Race regression (found in review): a worker whose push for a round
+    /// was lost can have its *pull* for that round reach the server
+    /// before the surviving worker's push — the key is still one
+    /// iteration behind, and the old "future pull" rejection stranded
+    /// the worker forever (the deadline seal only answers *queued*
+    /// pulls). One-iteration-ahead pulls must queue; further ahead stays
+    /// rejected (honest lag is bounded by one even with losses).
+    #[test]
+    fn pull_ahead_of_lost_push_queues_and_deadline_serves_it() {
+        let mut core = ServerCore::new(opts_deadline("identity", SyncMode::Full, 2));
+        // Iteration 0 completes normally for both workers.
+        push(&mut core, 0, 0, 0, &[1.0]);
+        push(&mut core, 0, 0, 1, &[3.0]);
+        // Worker 1's push for iteration 1 is lost; its pull arrives while
+        // the key is still at iteration 0. It must queue, not be rejected.
+        let r = core.handle(1, Message::Pull { key: 0, iter: 1, worker: 1 });
+        assert!(r.is_empty());
+        assert_eq!(core.stats.rejected, 0);
+        // The surviving push arrives and the deadline seals the round:
+        // the queued one-ahead pull is answered.
+        push(&mut core, 0, 1, 0, &[10.0]);
+        let replies = core.poll_deadlines(after_deadline());
+        assert_eq!(replies.len(), 1, "queued pull unanswered: {replies:?}");
+        let (to, Message::PullResp { iter, served_with, data, .. }) = &replies[0] else {
+            panic!("not a PullResp: {replies:?}")
+        };
+        assert_eq!((*to, *iter, *served_with), (1, 1, 1));
+        let mut out = vec![0.0f32; 1];
+        core.opts.comp.decompress(data, &mut out);
+        assert_eq!(out, vec![10.0]);
+        // Beyond the one-iteration lag bound is still rejected — with a
+        // retired marker, never a silent drop.
+        let r = core.handle(1, Message::Pull { key: 0, iter: 5, worker: 1 });
+        assert_eq!(r.len(), 1);
+        assert!(matches!(r[0].1, Message::PullResp { served_with: 0, .. }), "{r:?}");
+        assert_eq!(core.stats.rejected, 1);
+    }
+
+    /// End-to-end over the threaded I/O loop: one worker of two goes
+    /// silent for an iteration; the deadline completes the round and both
+    /// the live worker's pull and the run itself finish (no hang). Named
+    /// `degraded` so CI's liveness step (and the generic step's skip
+    /// filter) catch it — it hangs, not fails, on regression.
+    #[test]
+    fn threaded_server_degraded_round_unblocks_pull() {
+        let (w0, s0) = crate::comm::inproc::pair();
+        let (w1, s1) = crate::comm::inproc::pair();
+        let mut o = opts("identity", SyncMode::Full, 2);
+        o.iter_deadline = Some(std::time::Duration::from_millis(50));
+        let server = Server::spawn(o, vec![s0, s1]);
+        // Worker 1 registers its presence with iteration 0 then goes
+        // silent for iteration 1.
+        let comp = by_name("identity", 0.0).unwrap();
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let mk = |v: &[f32], rng: &mut Xoshiro256| {
+            let mut c = Ctx::new(rng);
+            comp.compress(v, &mut c)
+        };
+        let d0 = mk(&[1.0], &mut rng);
+        let d1 = mk(&[3.0], &mut rng);
+        w0.send(Message::Push { key: 0, iter: 0, worker: 0, data: d0 }).unwrap();
+        w1.send(Message::Push { key: 0, iter: 0, worker: 1, data: d1 }).unwrap();
+        // Pull iteration 0 and *wait for the response* before pushing
+        // iteration 1: the two connections feed the aggregator through
+        // independent reader threads, so without this barrier w0's
+        // iter-1 push could overtake w1's iter-0 push and roll the round
+        // over short (a real short_iter, failing the assertion below).
+        let recv_resp = |ep: &crate::comm::inproc::InprocEndpoint| loop {
+            match ep.recv().unwrap() {
+                Message::Ack { .. } => {}
+                m @ Message::PullResp { .. } => break m,
+                m => panic!("unexpected {m:?}"),
+            }
+        };
+        w0.send(Message::Pull { key: 0, iter: 0, worker: 0 }).unwrap();
+        let _ = recv_resp(&w0);
+        // Iteration 1: only worker 0 pushes, then pulls.
+        let d2 = mk(&[10.0], &mut rng);
+        w0.send(Message::Push { key: 0, iter: 1, worker: 0, data: d2 }).unwrap();
+        w0.send(Message::Pull { key: 0, iter: 1, worker: 0 }).unwrap();
+        let resp = recv_resp(&w0);
+        let Message::PullResp { iter, served_with, data, .. } = resp else { unreachable!() };
+        assert_eq!((iter, served_with), (1, 1));
+        let mut out = vec![0.0f32; 1];
+        comp.decompress(&data, &mut out);
+        assert_eq!(out, vec![10.0]);
+        w0.send(Message::Shutdown).unwrap();
+        w1.send(Message::Shutdown).unwrap();
+        let stats = server.join();
+        assert_eq!(stats.degraded_iters, 1);
+        assert_eq!(stats.short_iters, 0);
     }
 }

@@ -191,6 +191,16 @@ pub struct Cluster {
     pub pipeline: bool,
     /// Partition block size in bytes for the pipeline depth estimate.
     pub pipeline_block_bytes: usize,
+    /// Probability that any single block-push is lost or rejected in a
+    /// round (models the degraded-round protocol; 0 = perfect network,
+    /// the default — the model is then bit-identical to the lossless
+    /// one).
+    pub push_loss: f64,
+    /// Server iteration deadline in seconds (`server.iter_deadline_ms`):
+    /// a round with a lost push stalls for the deadline, then completes
+    /// *degraded* instead of hanging. Only meaningful with
+    /// `push_loss > 0`.
+    pub iter_deadline_s: f64,
 }
 
 impl Default for Cluster {
@@ -206,8 +216,46 @@ impl Default for Cluster {
             cpu_scale: 48.0,
             pipeline: true,
             pipeline_block_bytes: 4 << 20,
+            push_loss: 0.0,
+            iter_deadline_s: 0.0,
         }
     }
+}
+
+/// Number of pushes one sync round carries (every node pushes every wire
+/// unit of the gradient). With the pipeline on, the wire unit is a block
+/// of `pipeline_block_bytes`; off, whole tensors ship — the workload
+/// abstraction has no tensor count, so the model conservatively treats
+/// the unpipelined gradient as one push per node (a lower bound on loss
+/// exposure, mirroring how `step_breakdown` gates its block math on
+/// `c.pipeline`).
+fn round_pushes(w: &Workload, c: &Cluster) -> f64 {
+    let blocks = if c.pipeline {
+        (w.grad_bytes() as f64 / c.pipeline_block_bytes.max(1) as f64).ceil().max(1.0)
+    } else {
+        1.0
+    };
+    blocks * c.nodes as f64
+}
+
+/// Probability a sync round completes *degraded* under the iteration-
+/// deadline protocol: at least one of the round's block-pushes is lost
+/// (independent losses at `push_loss` each). Zero on a single node —
+/// the model has no inter-node push/pull there (matching `wire_s`). This
+/// is the round-level quantity the degraded-round recipe in
+/// EXPERIMENTS.md measures on a real cluster (`Σ degraded_iters / iters`
+/// across shards, for rare faults).
+pub fn degraded_round_rate(w: &Workload, c: &Cluster) -> f64 {
+    if c.push_loss <= 0.0 || c.nodes <= 1 {
+        return 0.0;
+    }
+    1.0 - (1.0 - c.push_loss.min(1.0)).powf(round_pushes(w, c))
+}
+
+/// Expected per-round stall from degraded rounds: a lossy round waits out
+/// the server's iteration deadline before its pulls are served.
+pub fn degraded_wait_s(w: &Workload, c: &Cluster) -> f64 {
+    degraded_round_rate(w, c) * c.iter_deadline_s
 }
 
 /// Paper §5.1.2 ideal scaling efficiency:
@@ -268,6 +316,11 @@ pub fn step_breakdown(w: &Workload, c: &Cluster, p: &CompressorProfile) -> Break
         wire_s + cpu_s + intra_s
     };
     let comm_total = comm_per_round * w.sync_rounds;
+    // Degraded rounds (lost pushes under the iteration deadline) stall
+    // the *pull phase* for the deadline — after backprop has finished —
+    // so unlike regular communication the stall can never hide behind
+    // backprop. Added after the overlap subtraction; lands in `other_s`.
+    let degraded_total = degraded_wait_s(w, c) * w.sync_rounds;
 
     // Overlap: what fraction of communication hides behind backprop.
     let hidden = (comm_total.min(w.tbp_s)) * w.overlap;
@@ -278,8 +331,10 @@ pub fn step_breakdown(w: &Workload, c: &Cluster, p: &CompressorProfile) -> Break
         wire_s: (intra_s + wire_s) * w.sync_rounds,
         optimizer_s: 0.0,
         // `other_s` reconciles pipelining + overlap so total() = step time:
-        // total = tfp + tbp + comm_total - hidden.
-        other_s: comm_total - hidden - (cpu_s + intra_s + wire_s) * w.sync_rounds,
+        // total = tfp + tbp + comm_total + degraded_total - hidden.
+        other_s: comm_total + degraded_total
+            - hidden
+            - (cpu_s + intra_s + wire_s) * w.sync_rounds,
     }
 }
 
@@ -450,6 +505,56 @@ mod tests {
         deep.pipeline_block_bytes = 1 << 20;
         let t_deep = step_breakdown(&w, &deep, &p);
         assert!(t_deep.total() <= t_on.total() + 1e-12);
+    }
+
+    /// Degraded-round model: zero loss is a strict no-op on the breakdown;
+    /// with loss, the rate grows in loss and block count, is a proper
+    /// probability, and the deadline stall shows up in step time.
+    #[test]
+    fn degraded_round_model_shapes() {
+        let mut w = Workload::vgg16();
+        // No backprop overlap: the deadline stall must be fully visible in
+        // step time (with overlap it could hide behind tbp).
+        w.overlap = 0.0;
+        let clean = Cluster::default();
+        assert_eq!(degraded_round_rate(&w, &clean), 0.0);
+        let p = default_profile("topk", 0.001);
+        let base = step_time(&w, &clean, &p);
+
+        let mut lossy = clean.clone();
+        lossy.push_loss = 1e-4;
+        lossy.iter_deadline_s = 0.25;
+        let rate = degraded_round_rate(&w, &lossy);
+        assert!(rate > 0.0 && rate < 1.0, "rate {rate}");
+        // More loss, more degraded rounds.
+        let mut worse = lossy.clone();
+        worse.push_loss = 1e-3;
+        assert!(degraded_round_rate(&w, &worse) > rate);
+        // Smaller blocks => more pushes per round => more exposure.
+        let mut fine = lossy.clone();
+        fine.pipeline_block_bytes = 1 << 20;
+        assert!(degraded_round_rate(&w, &fine) > rate);
+        // The deadline stall lands on the step time, and the breakdown
+        // still reconciles (total = components).
+        let t_lossy = step_time(&w, &lossy, &p);
+        let expect = degraded_wait_s(&w, &lossy) * w.sync_rounds;
+        assert!(
+            (t_lossy - base - expect).abs() < 1e-9,
+            "lossy {t_lossy} vs base {base} + stall {expect}"
+        );
+        // Certain loss degrades every round.
+        let mut dead = lossy.clone();
+        dead.push_loss = 1.0;
+        assert!((degraded_round_rate(&w, &dead) - 1.0).abs() < 1e-12);
+        // The stall is a pull-phase barrier after backprop: even with
+        // full backprop overlap it lands on step time in full.
+        let mut wo = Workload::vgg16();
+        wo.overlap = 1.0;
+        let mut lossy_o = lossy.clone();
+        lossy_o.push_loss = 1e-4;
+        let dt = step_time(&wo, &lossy_o, &p) - step_time(&wo, &clean, &p);
+        let want = degraded_wait_s(&wo, &lossy_o) * wo.sync_rounds;
+        assert!((dt - want).abs() < 1e-9, "overlap hid the deadline stall: {dt} vs {want}");
     }
 
     #[test]

@@ -13,9 +13,19 @@ use crate::configx::SyncMode;
 use crate::parallel::{Semaphore, ThreadPool};
 use crate::util::f16::f16_round;
 use crate::util::rng::Xoshiro256;
-use self::pipeline::{BlockEf, Partition};
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use self::pipeline::{BlockEf, Partition, PushWindow};
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// How long a windowed push phase waits on a full window before declaring
+/// the phase stalled (counted in [`WorkerCounters::window_stalls`]) and
+/// finishing it unwindowed. A full window that never drains means the
+/// server stopped acking — e.g. it deadline-sealed the round and drops
+/// this worker's late pushes unacked — and liveness beats the
+/// staging-memory bound then; the stall is paid at most once per phase.
+pub const ACK_STALL_TIMEOUT: Duration = Duration::from_secs(5);
 
 /// Ring all-reduce (average) across the node's GPU ranks with the paper's
 /// intra-node FP16 stage: every partial sum that crosses the (simulated)
@@ -81,8 +91,66 @@ pub struct WorkerComm {
     plan: Arc<crate::ps::ShardPlan>,
     /// This node's compression pool (§4.2.1 inter-task parallelism).
     pool: Arc<ThreadPool>,
-    /// Bounds outstanding compress/push jobs (pipeline.inflight knob).
+    /// Bounds outstanding compress/push jobs (pipeline.inflight knob) on
+    /// the phase-barrier path; the windowed path builds a fresh
+    /// [`PushWindow`] of the same capacity per phase instead.
     inflight: Arc<Semaphore>,
+    /// `pipeline.inflight` as a number (the window capacity).
+    inflight_cap: usize,
+    /// Windowed pushes (`pipeline.ack_window`): drain acks concurrently
+    /// with the push phase so `inflight` is a true sliding window instead
+    /// of a phase barrier that parks every ack in the socket buffer.
+    ack_window: bool,
+    /// Worker count of the run — how many contributions a full (non-
+    /// degraded) aggregate carries; `served_with` below this marks a
+    /// degraded round.
+    n_workers: usize,
+    /// Pull responses whose `served_with` was below `n_workers` — rounds
+    /// the server completed degraded under its iteration deadline.
+    degraded_responses: AtomicU64,
+    /// Pushes this worker dropped via the fault-injection hook (shared
+    /// with pipeline jobs, hence the Arc).
+    dropped_pushes: Arc<AtomicU64>,
+    /// Push phases whose window stalled past [`ACK_STALL_TIMEOUT`] and
+    /// finished unwindowed (at most one count per phase).
+    window_stalls: AtomicU64,
+    /// Fault-injection hook: `(key, iter)` pushes to drop before the wire
+    /// (each fires once). Tests use it to simulate a lost push.
+    drop_pushes: Arc<Mutex<HashSet<(Key, u64)>>>,
+}
+
+/// Worker-side liveness counters (see [`WorkerComm::counters`]).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WorkerCounters {
+    /// Pull responses served from a degraded round
+    /// (`served_with < n_workers`).
+    pub degraded_responses: u64,
+    /// Pushes dropped by the fault-injection hook.
+    pub dropped_pushes: u64,
+    /// Push phases whose window stalled past [`ACK_STALL_TIMEOUT`]
+    /// (acks stopped draining; the phase finished unwindowed). At most
+    /// one per push phase.
+    pub window_stalls: u64,
+}
+
+/// The fault hook applied to a compressed push about to hit the wire
+/// (shared by the serial and pipelined paths so their drop semantics —
+/// post-compression, counted, logged — can never diverge). Returns
+/// whether the push was dropped; each `(key, iter)` entry fires once.
+fn push_drop_faulted(
+    worker_id: u32,
+    drop_pushes: &Mutex<HashSet<(Key, u64)>>,
+    dropped: &AtomicU64,
+    key: Key,
+    iter: u64,
+) -> bool {
+    if drop_pushes.lock().unwrap().remove(&(key, iter)) {
+        dropped.fetch_add(1, Ordering::Relaxed);
+        eprintln!("worker {worker_id}: fault injection dropped push key {key} iter {iter}");
+        true
+    } else {
+        false
+    }
 }
 
 /// RAII permit: releases its semaphore slot even if the job panics.
@@ -107,6 +175,8 @@ impl WorkerComm {
         plan: Arc<crate::ps::ShardPlan>,
         pool_threads: usize,
         inflight: usize,
+        ack_window: bool,
+        n_workers: usize,
     ) -> Self {
         WorkerComm {
             worker_id,
@@ -122,6 +192,37 @@ impl WorkerComm {
             plan,
             pool: Arc::new(ThreadPool::new(pool_threads)),
             inflight: Arc::new(Semaphore::new(inflight)),
+            inflight_cap: inflight.max(1),
+            ack_window,
+            n_workers,
+            degraded_responses: AtomicU64::new(0),
+            dropped_pushes: Arc::new(AtomicU64::new(0)),
+            window_stalls: AtomicU64::new(0),
+            drop_pushes: Arc::new(Mutex::new(HashSet::new())),
+        }
+    }
+
+    /// Fault-injection hook: drop this worker's push for `(key, iter)`
+    /// before it reaches the wire, exactly once — simulating a lost push
+    /// so tests can exercise the server's iteration deadline.
+    pub fn inject_push_drop(&self, key: Key, iter: u64) {
+        self.drop_pushes.lock().unwrap().insert((key, iter));
+    }
+
+    /// Worker-side liveness counters: degraded rounds seen, pushes
+    /// dropped by fault injection, windowed-push stalls.
+    pub fn counters(&self) -> WorkerCounters {
+        WorkerCounters {
+            degraded_responses: self.degraded_responses.load(Ordering::Relaxed),
+            dropped_pushes: self.dropped_pushes.load(Ordering::Relaxed),
+            window_stalls: self.window_stalls.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Note a pull response's `served_with` tag (degraded-round metric).
+    fn note_served_with(&self, served_with: u16) {
+        if (served_with as usize) < self.n_workers {
+            self.degraded_responses.fetch_add(1, Ordering::Relaxed);
         }
     }
 
@@ -140,6 +241,12 @@ impl WorkerComm {
             }
         };
         let dt = t.elapsed().as_secs_f64();
+        // Fault injection checks *after* compression: a lost push is lost
+        // on the wire, not before the EF residual update — exactly the
+        // failure the degraded-round protocol is specified against.
+        if push_drop_faulted(self.worker_id, &self.drop_pushes, &self.dropped_pushes, key, iter) {
+            return (0, dt);
+        }
         let nbytes = data.nbytes();
         let server = self.plan.server_of(key);
         self.endpoints[server]
@@ -161,8 +268,17 @@ impl WorkerComm {
                 Message::Ack { .. } => {}
                 m @ Message::PullResp { .. } => {
                     let nbytes = crate::comm::frame::frame_bytes(&m);
-                    let Message::PullResp { key: k, iter: i, data } = m else { unreachable!() };
+                    let Message::PullResp { key: k, iter: i, served_with, data } = m else {
+                        unreachable!()
+                    };
                     assert_eq!((k, i), (key, iter), "out-of-order pull response");
+                    assert_ne!(
+                        served_with, 0,
+                        "server retired iteration {iter} for key {key} before this \
+                         worker's pull: the worker lagged past the deadline history \
+                         and cannot continue consistently"
+                    );
+                    self.note_served_with(served_with);
                     let t = std::time::Instant::now();
                     self.comp.decompress(&data, out);
                     return (nbytes, t.elapsed().as_secs_f64());
@@ -178,6 +294,14 @@ impl WorkerComm {
     /// `pool_threads` blocks compress concurrently. Blocks for different
     /// server shards interleave, giving the servers work early (§4.2.4).
     ///
+    /// With `pipeline.ack_window` on (the default), server acks drain
+    /// *during* the phase and `pipeline.inflight` is a true sliding
+    /// window over unacked pushes; off, the legacy phase barrier runs
+    /// (slots free on send, acks wait in the socket until the pull
+    /// phase). Both paths emit identical wire traffic — per-block job
+    /// seeds make the streams independent of scheduling — so they are
+    /// bit-identical for deterministic compressors.
+    ///
     /// Returns summed compression seconds across jobs (CPU time, not
     /// wall time — under the pipeline the wall cost is what shrinks).
     /// Blocks until every push of this iteration is on the wire, which
@@ -185,42 +309,181 @@ impl WorkerComm {
     /// one-slot rollover relies on.
     pub fn push_all(&self, iter: u64, grad: &[f32], parts: &Partition) -> f64 {
         let compress_ns = Arc::new(AtomicU64::new(0));
+        if self.ack_window {
+            self.push_all_windowed(iter, grad, parts, &compress_ns);
+        } else {
+            self.push_all_barrier(iter, grad, parts, &compress_ns);
+        }
+        let panics = self.pool.take_panics();
+        assert!(panics == 0, "{panics} push pipeline job(s) panicked");
+        compress_ns.load(Ordering::Relaxed) as f64 * 1e-9
+    }
+
+    /// One push job: EF-correct + compress block `key`, then send it —
+    /// unless the fault hook drops it, in which case `on_drop` runs (the
+    /// windowed path frees the window slot: no ack will ever come).
+    /// `on_drop` is dropped uncalled on the normal path, so a barrier
+    /// permit captured in it still releases at job end either way.
+    fn push_job(
+        &self,
+        iter: u64,
+        key: Key,
+        g: Vec<f32>,
+        compress_ns: &Arc<AtomicU64>,
+        on_drop: impl FnOnce() + Send + 'static,
+    ) {
+        let server = self.plan.server_of(key);
+        let endpoints = Arc::clone(&self.endpoints);
+        let block_ef = Arc::clone(&self.block_ef);
+        let comp = Arc::clone(&self.comp);
+        let drop_pushes = Arc::clone(&self.drop_pushes);
+        let dropped = Arc::clone(&self.dropped_pushes);
+        let (sync, fused, intra, worker) =
+            (self.sync, self.fused, self.intra_threads, self.worker_id);
+        let seed = pipeline::job_seed(self.seed, worker, key, iter);
+        let cns = Arc::clone(compress_ns);
+        self.pool.execute(move || {
+            let t = std::time::Instant::now();
+            let mut rng = Xoshiro256::seed_from_u64(seed);
+            let mut ctx = Ctx::with_threads(&mut rng, intra);
+            let data = match sync {
+                SyncMode::CompressedEf => {
+                    block_ef.compress(key, g, comp.as_ref(), fused, &mut ctx)
+                }
+                _ => comp.compress(&g, &mut ctx),
+            };
+            cns.fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            // Fault injection after compression: the push is lost on the
+            // wire, not before the EF residual update.
+            if push_drop_faulted(worker, &drop_pushes, &dropped, key, iter) {
+                on_drop();
+                return;
+            }
+            endpoints[server]
+                .send(Message::Push { key, iter, worker, data })
+                .expect("server alive");
+        });
+    }
+
+    /// Legacy phase-barrier push: window slots free when the job ends
+    /// (send returned); acks park in the transport until the pull phase
+    /// reads past them.
+    fn push_all_barrier(
+        &self,
+        iter: u64,
+        grad: &[f32],
+        parts: &Partition,
+        compress_ns: &Arc<AtomicU64>,
+    ) {
         for sb in parts.subs() {
             // Bound staging memory: wait for a slot before copying the
             // next block out of the gradient.
             self.inflight.acquire();
             let permit = Permit(Arc::clone(&self.inflight));
             let g = grad[sb.range.clone()].to_vec();
-            let key = sb.key;
-            let server = self.plan.server_of(key);
-            let endpoints = Arc::clone(&self.endpoints);
-            let block_ef = Arc::clone(&self.block_ef);
-            let comp = Arc::clone(&self.comp);
-            let (sync, fused, intra, worker) =
-                (self.sync, self.fused, self.intra_threads, self.worker_id);
-            let seed = pipeline::job_seed(self.seed, worker, key, iter);
-            let cns = Arc::clone(&compress_ns);
-            self.pool.execute(move || {
-                let _permit = permit; // held (and released) for the job's lifetime
-                let t = std::time::Instant::now();
-                let mut rng = Xoshiro256::seed_from_u64(seed);
-                let mut ctx = Ctx::with_threads(&mut rng, intra);
-                let data = match sync {
-                    SyncMode::CompressedEf => {
-                        block_ef.compress(key, g, comp.as_ref(), fused, &mut ctx)
-                    }
-                    _ => comp.compress(&g, &mut ctx),
-                };
-                cns.fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
-                endpoints[server]
-                    .send(Message::Push { key, iter, worker, data })
-                    .expect("server alive");
-            });
+            self.push_job(iter, sb.key, g, compress_ns, move || drop(permit));
         }
         self.pool.wait();
-        let panics = self.pool.take_panics();
-        assert!(panics == 0, "{panics} push pipeline job(s) panicked");
-        compress_ns.load(Ordering::Relaxed) as f64 * 1e-9
+    }
+
+    /// Windowed push: per-endpoint ack drainers run concurrently with the
+    /// push jobs, freeing a window slot per ack — `pipeline.inflight`
+    /// bounds *unacked* pushes, so the server→worker ack stream can never
+    /// back up the socket however small `pipeline.block_bytes` gets.
+    ///
+    /// Safe to drain here: during a push phase the only server→worker
+    /// traffic is this iteration's acks (per-connection FIFO means the
+    /// server emits every ack for a worker's iteration-*t* pushes before
+    /// any iteration-*t* `PullResp`, and the previous pull phase fully
+    /// drained the stream).
+    fn push_all_windowed(
+        &self,
+        iter: u64,
+        grad: &[f32],
+        parts: &Partition,
+        compress_ns: &Arc<AtomicU64>,
+    ) {
+        // Fresh window per phase: slots cannot leak across iterations
+        // even when acks go missing (a deadline-sealed round drops late
+        // pushes unacked).
+        let window = Arc::new(PushWindow::new(self.inflight_cap, ACK_STALL_TIMEOUT));
+        let mut expect = vec![0usize; self.endpoints.len()];
+        for sb in parts.subs() {
+            expect[self.plan.server_of(sb.key)] += 1;
+        }
+        let stop = AtomicBool::new(false);
+        std::thread::scope(|scope| {
+            for (s, ep) in self.endpoints.iter().enumerate() {
+                if expect[s] == 0 {
+                    continue;
+                }
+                let want = expect[s];
+                let window = Arc::clone(&window);
+                let stop = &stop;
+                scope.spawn(move || {
+                    let mut acked = 0usize;
+                    // Poll with exponential backoff (50 µs → 1 ms): a
+                    // blocking read timeout cannot be used here — it
+                    // could fire mid-frame and desync the stream — and
+                    // the backoff keeps an idle drainer at ~1 kHz of
+                    // try_recv syscalls instead of tens of kHz.
+                    let min_idle = Duration::from_micros(50);
+                    let max_idle = Duration::from_millis(1);
+                    let mut idle = min_idle;
+                    while acked < want {
+                        match ep.try_recv() {
+                            Ok(Some(Message::Ack { iter: i, .. })) => {
+                                debug_assert_eq!(i, iter, "ack from a different iteration");
+                                acked += 1;
+                                window.close();
+                                idle = min_idle;
+                            }
+                            Ok(Some(m)) => {
+                                panic!("worker got unexpected {m:?} during push phase")
+                            }
+                            Ok(None) => {
+                                if stop.load(Ordering::Acquire) {
+                                    // Phase over; unarrived acks belong to
+                                    // lost/late pushes and the pull phase
+                                    // skips any stragglers.
+                                    break;
+                                }
+                                std::thread::sleep(idle);
+                                idle = (idle * 2).min(max_idle);
+                            }
+                            // Connection died: the send side will surface
+                            // the error; don't spin on it here.
+                            Err(_) => break,
+                        }
+                    }
+                });
+            }
+            // One stall latches for the whole phase: a full window that
+            // outlived ACK_STALL_TIMEOUT means acks stopped (the server
+            // deadline-sealed a round and drops this worker's late pushes
+            // unacked) — waiting the timeout again per block would turn
+            // one degraded round into an O(blocks × timeout) stall, so
+            // the rest of the phase proceeds unwindowed. The latch also
+            // keeps the accounting honest: unslotted pushes' acks would
+            // otherwise free slots they never held.
+            let mut stalled = false;
+            for sb in parts.subs() {
+                if !stalled && !window.open() {
+                    stalled = true;
+                    self.window_stalls.fetch_add(1, Ordering::Relaxed);
+                    eprintln!(
+                        "worker {}: push window stalled (no acks for {:?}); \
+                         finishing this phase unwindowed",
+                        self.worker_id, ACK_STALL_TIMEOUT
+                    );
+                }
+                let g = grad[sb.range.clone()].to_vec();
+                let window = Arc::clone(&window);
+                self.push_job(iter, sb.key, g, compress_ns, move || window.close());
+            }
+            self.pool.wait();
+            stop.store(true, Ordering::Release);
+        });
     }
 
     /// Pipelined pull of every block in `parts`: all pull requests go out
@@ -249,6 +512,7 @@ impl WorkerComm {
             let pool = &self.pool;
             let comp = &self.comp;
             let dns = &decompress_ns;
+            let this = &*self;
             for (sidx, ep) in self.endpoints.iter().enumerate() {
                 let want = expect[sidx];
                 if want == 0 {
@@ -265,10 +529,19 @@ impl WorkerComm {
                                     crate::comm::frame::frame_bytes(&m) as u64,
                                     Ordering::Relaxed,
                                 );
-                                let Message::PullResp { key, iter: i, data } = m else {
+                                let Message::PullResp { key, iter: i, served_with, data } = m
+                                else {
                                     unreachable!()
                                 };
                                 assert_eq!(i, iter, "pull response for wrong iteration");
+                                assert_ne!(
+                                    served_with, 0,
+                                    "server retired iteration {iter} for key {key} \
+                                     before this worker's pull: the worker lagged \
+                                     past the deadline history and cannot continue \
+                                     consistently"
+                                );
+                                this.note_served_with(served_with);
                                 let range = ranges
                                     .get(&key)
                                     .expect("pull response for unknown block key")

@@ -24,7 +24,8 @@ use crate::compress::{Compressed, Compressor, Ctx};
 use crate::optim::blocks::Block;
 use std::collections::HashMap;
 use std::ops::Range;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 /// One wire unit: a contiguous slice of the flat gradient vector with its
 /// own packed block key.
@@ -167,6 +168,75 @@ impl BlockEf {
     }
 }
 
+/// Sliding send window for the pipelined push phase (`pipeline.inflight`
+/// as a *real* window): bounds how many pushes are in flight — staged,
+/// compressing, or sent-but-unacked — at once. Unlike the old
+/// phase-barrier accounting (slot freed when the send returned), a slot
+/// stays taken until the server's `Ack` drains back, so the window also
+/// bounds the server→worker ack backlog and small `pipeline.block_bytes`
+/// partitions no longer rely on socket buffers swallowing an unbounded
+/// ack stream (DESIGN.md §Cluster mode, backpressure envelope).
+///
+/// One window is created per push phase, so slots can never leak across
+/// iterations. [`open`](PushWindow::open) gives up after `stall_timeout`
+/// and lets the caller proceed: a server that stops acking (it
+/// deadline-sealed the round and drops late pushes unacked) degrades the
+/// memory bound instead of deadlocking the phase. After a timed-out open
+/// the caller must stop opening for the rest of the phase (the push
+/// phase latches a stall — see `WorkerComm::push_all`): it bounds the
+/// total stall to one timeout, and it keeps accounting exact, since an
+/// unslotted push's eventual ack would free a slot it never held.
+/// [`close`](PushWindow::close) additionally saturates at zero, so
+/// surplus closes can never underflow the counter.
+pub struct PushWindow {
+    in_flight: Mutex<usize>,
+    cv: Condvar,
+    cap: usize,
+    stall_timeout: Duration,
+}
+
+impl PushWindow {
+    pub fn new(cap: usize, stall_timeout: Duration) -> PushWindow {
+        PushWindow { in_flight: Mutex::new(0), cv: Condvar::new(), cap: cap.max(1), stall_timeout }
+    }
+
+    /// Take a slot, waiting for acks to free one. Returns `false` when the
+    /// window stayed full past `stall_timeout` — the caller proceeds
+    /// anyway (liveness over the memory bound) and should count the stall.
+    pub fn open(&self) -> bool {
+        let deadline = Instant::now() + self.stall_timeout;
+        let mut in_flight = self.in_flight.lock().unwrap();
+        while *in_flight >= self.cap {
+            let now = Instant::now();
+            if now >= deadline {
+                return false;
+            }
+            let (guard, timeout) = self.cv.wait_timeout(in_flight, deadline - now).unwrap();
+            in_flight = guard;
+            if timeout.timed_out() && *in_flight >= self.cap {
+                return false;
+            }
+        }
+        *in_flight += 1;
+        true
+    }
+
+    /// Free a slot — an ack drained, or the push was dropped before the
+    /// wire (fault injection) and no ack will ever come.
+    pub fn close(&self) {
+        let mut in_flight = self.in_flight.lock().unwrap();
+        if *in_flight > 0 {
+            *in_flight -= 1;
+            self.cv.notify_one();
+        }
+    }
+
+    /// Slots currently taken (tests / diagnostics).
+    pub fn in_flight(&self) -> usize {
+        *self.in_flight.lock().unwrap()
+    }
+}
+
 /// Deterministic per-(worker, block, iteration) RNG seed for stochastic
 /// compressors: pipeline job scheduling must never change the stream a
 /// block sees.
@@ -263,6 +333,45 @@ mod tests {
             }
         });
         assert_eq!(bef.state_elems(), 8 * 32);
+    }
+
+    #[test]
+    fn push_window_bounds_in_flight_and_saturates() {
+        let w = PushWindow::new(2, Duration::from_millis(10));
+        assert!(w.open());
+        assert!(w.open());
+        assert_eq!(w.in_flight(), 2);
+        // Full window: open times out rather than blocking forever.
+        let t = Instant::now();
+        assert!(!w.open(), "third open must time out");
+        // Lower bound is loose: condvar timeouts may round slightly.
+        assert!(t.elapsed() >= Duration::from_millis(5));
+        // An ack frees a slot.
+        w.close();
+        assert!(w.open());
+        // close saturates at zero: surplus acks can never inflate capacity.
+        for _ in 0..10 {
+            w.close();
+        }
+        assert_eq!(w.in_flight(), 0);
+        assert!(w.open());
+        assert!(w.open());
+        assert!(!w.open());
+    }
+
+    #[test]
+    fn push_window_open_unblocks_on_concurrent_close() {
+        let w = Arc::new(PushWindow::new(1, Duration::from_secs(10)));
+        assert!(w.open());
+        let w2 = Arc::clone(&w);
+        let closer = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            w2.close();
+        });
+        let t = Instant::now();
+        assert!(w.open(), "open must succeed once the slot frees");
+        assert!(t.elapsed() < Duration::from_secs(5));
+        closer.join().unwrap();
     }
 
     #[test]

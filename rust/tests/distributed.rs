@@ -277,6 +277,7 @@ fn tcp_fabric_matches_reference() {
                 intra_threads: 1,
                 seed: 99,
                 max_keys: 0,
+                iter_deadline: None,
             },
             eps,
         );
