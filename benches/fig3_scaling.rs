@@ -70,20 +70,29 @@ fn main() {
         );
     }
     // §4.2.1 pipeline ablation: scaling with block-pipelined vs serialized
-    // CPU compression (overlap off so the comm path is fully visible).
-    println!("\n# Pipeline ablation — top-k scaling, pipelined vs serialized compression\n");
+    // CPU compression (overlap off so the comm path is fully visible) —
+    // plus the server arm: a pipelined worker against an *unstaged*
+    // 1-thread PS shard (`server.compress_threads = 0`), whose
+    // decode/encode serializes after the wire instead of overlapping it.
+    println!(
+        "\n# Pipeline ablation — top-k scaling: pipelined vs serialized vs 1-thread ps\n"
+    );
     let comp = compress::by_name("topk", 0.001).unwrap();
     let prof = CompressorProfile::measure("topk", comp.as_ref(), 1 << 21, 0.001);
     let mut w = Workload::vgg16();
     w.overlap = 0.0;
     let mut rows = Vec::new();
-    for pipeline in [true, false] {
-        let mut cells =
-            vec![if pipeline { "pipelined".to_string() } else { "serialized".to_string() }];
+    for (label, pipeline, server_pipeline) in [
+        ("pipelined + staged ps", true, true),
+        ("pipelined, 1-thr ps", true, false),
+        ("serialized", false, true),
+    ] {
+        let mut cells = vec![label.to_string()];
         for nodes in [1usize, 2, 4, 8] {
             let mut c = Cluster::default();
             c.nodes = nodes;
             c.pipeline = pipeline;
+            c.server_pipeline = server_pipeline;
             cells.push(format!("{:.1}%", simnet::scaling_efficiency(&w, &c, &prof) * 100.0));
         }
         rows.push(cells);

@@ -634,13 +634,18 @@ mod tests {
         c.system.size_threshold_on = !c.system.size_threshold_on;
         assert_ne!(f, config_fingerprint(&c));
         // …while per-process knobs (rank, threads, addresses, the
-        // server's iteration deadline, worker ack windowing) don't: the
-        // bytes on the wire mean the same thing regardless.
+        // server's iteration deadline + auto-tuning + staged pipeline,
+        // worker ack windowing) don't: the bytes on the wire mean the
+        // same thing regardless.
         let mut c = base.clone();
         c.cluster.addresses = vec!["x:1".into()];
         c.system.compress_threads = 99;
         c.server.iter_deadline_ms = 500;
+        c.server.compress_threads = 7;
         c.pipeline.ack_window = false;
+        assert_eq!(f, config_fingerprint(&c));
+        let mut c = base.clone();
+        c.server.iter_deadline_auto_margin = 2.0;
         assert_eq!(f, config_fingerprint(&c));
     }
 

@@ -18,6 +18,39 @@
 use super::{Compressed, Compressor, Ctx};
 use std::collections::HashMap;
 
+/// One EF compress cycle over an owned buffer, map-free: correct with the
+/// residual (if any), compress, return `(wire block, new residual)`. This
+/// is Algorithm 4's compress step, and it exists exactly **once**: both
+/// [`EfState::compress_owned`] (single-threaded residual map) and the
+/// staged server encode (`ps::stage::encode_aggregate`, per-key residual
+/// lending) call it, so the two paths can never drift numerically.
+pub fn compress_cycle(
+    comp: &dyn Compressor,
+    fused: bool,
+    ctx: &mut Ctx,
+    mut g: Vec<f32>,
+    residual: Option<&[f32]>,
+) -> (Compressed, Vec<f32>) {
+    if let Some(e) = residual {
+        assert_eq!(e.len(), g.len(), "EF residual size drifted");
+        for (gi, ei) in g.iter_mut().zip(e) {
+            *gi += *ei;
+        }
+    }
+    if fused {
+        let c = comp.compress_ef_fused(&mut g, ctx);
+        (c, g)
+    } else {
+        let c = comp.compress(&g, ctx);
+        let mut dec = vec![0.0f32; g.len()];
+        comp.decompress(&c, &mut dec);
+        for (gi, di) in g.iter_mut().zip(&dec) {
+            *gi -= *di;
+        }
+        (c, g)
+    }
+}
+
 /// Residual store keyed by tensor id.
 pub struct EfState {
     residuals: HashMap<u64, Vec<f32>>,
@@ -77,36 +110,18 @@ impl EfState {
 
     /// Same cycle but `g` arrives as an owned buffer that may be consumed
     /// (server-side: the aggregated Δ). Avoids one copy in the fused path.
+    /// Thin wrapper over the shared [`compress_cycle`] kernel.
     pub fn compress_owned(
         &mut self,
         key: u64,
-        mut g: Vec<f32>,
+        g: Vec<f32>,
         comp: &dyn Compressor,
         ctx: &mut Ctx,
     ) -> Compressed {
-        match self.residuals.get(&key) {
-            Some(e) => {
-                assert_eq!(e.len(), g.len(), "tensor {key} changed size");
-                for (gi, ei) in g.iter_mut().zip(e) {
-                    *gi += ei;
-                }
-            }
-            None => {}
-        }
-        if self.fused {
-            let c = comp.compress_ef_fused(&mut g, ctx);
-            self.residuals.insert(key, g);
-            c
-        } else {
-            let c = comp.compress(&g, ctx);
-            let mut dec = vec![0.0f32; g.len()];
-            comp.decompress(&c, &mut dec);
-            for (gi, di) in g.iter_mut().zip(&dec) {
-                *gi -= di;
-            }
-            self.residuals.insert(key, g);
-            c
-        }
+        let residual = self.residuals.get(&key).map(|e| e.as_slice());
+        let (c, e) = compress_cycle(comp, self.fused, ctx, g, residual);
+        self.residuals.insert(key, e);
+        c
     }
 
     /// Drop all residual state (e.g. between training phases).

@@ -188,6 +188,20 @@ pub struct ServerConfig {
     /// default) keeps strict BSP — bit-identical to the pre-deadline
     /// server.
     pub iter_deadline_ms: u64,
+    /// CPU threads for the server shard's staged decode/encode pool
+    /// (`bytepsc server --compress-threads`). `0` (the default) keeps the
+    /// synchronous reference path: every stage runs inline on the shard's
+    /// I/O thread. Any value `> 0` turns the shard into the staged
+    /// ingress → decode → reduce → seal → encode pipeline, bit-identical
+    /// to `0` for every compressor in `compress::paper_suite()`.
+    pub compress_threads: usize,
+    /// Deadline auto-tuning (`--deadline-auto-margin`): with
+    /// `iter_deadline_ms = 0` and this margin `> 0`, each shard derives
+    /// its own deadline as observed p99 full-round latency × margin,
+    /// re-evaluated at every sealed full round. `0` (the default) = off.
+    /// Setting both this and `iter_deadline_ms` is a config error — the
+    /// static knob would silently win.
+    pub iter_deadline_auto_margin: f64,
 }
 
 impl ServerConfig {
@@ -387,6 +401,12 @@ impl TrainConfig {
         let sv = v.get("server").cloned().unwrap_or(Json::Obj(Default::default()));
         let server = ServerConfig {
             iter_deadline_ms: u(&sv, "iter_deadline_ms", vd.iter_deadline_ms as usize) as u64,
+            compress_threads: u(&sv, "compress_threads", vd.compress_threads),
+            iter_deadline_auto_margin: f(
+                &sv,
+                "iter_deadline_auto_margin",
+                vd.iter_deadline_auto_margin,
+            ),
         };
         let cfg = TrainConfig {
             model: s(v, "model", &d.model),
@@ -455,6 +475,20 @@ impl TrainConfig {
         }
         if self.pipeline.inflight == 0 {
             return Err(ConfigError("pipeline.inflight must be >= 1".into()));
+        }
+        if self.server.iter_deadline_auto_margin < 0.0
+            || !self.server.iter_deadline_auto_margin.is_finite()
+        {
+            return Err(ConfigError(
+                "server.iter_deadline_auto_margin must be a finite value >= 0".into(),
+            ));
+        }
+        if self.server.iter_deadline_auto_margin > 0.0 && self.server.iter_deadline_ms > 0 {
+            return Err(ConfigError(
+                "server.iter_deadline_auto_margin requires iter_deadline_ms = 0 \
+                 (the static deadline would silently win)"
+                    .into(),
+            ));
         }
         if self.compression.sync == SyncMode::Compressed
             && matches!(self.compression.scheme.as_str(), "topk" | "onebit")
@@ -543,10 +577,14 @@ impl TrainConfig {
             ),
             (
                 "server",
-                Json::obj(vec![(
-                    "iter_deadline_ms",
-                    Json::num(self.server.iter_deadline_ms as f64),
-                )]),
+                Json::obj(vec![
+                    ("iter_deadline_ms", Json::num(self.server.iter_deadline_ms as f64)),
+                    ("compress_threads", Json::num(self.server.compress_threads as f64)),
+                    (
+                        "iter_deadline_auto_margin",
+                        Json::num(self.server.iter_deadline_auto_margin),
+                    ),
+                ]),
             ),
         ])
     }
@@ -605,6 +643,12 @@ mod tests {
         cfg.pipeline.inflight = 8;
         cfg.pipeline.ack_window = false;
         cfg.server.iter_deadline_ms = 250;
+        cfg.server.compress_threads = 3;
+        let rt = TrainConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(rt, cfg);
+        // Auto-margin roundtrips too (only valid with the static knob 0).
+        cfg.server.iter_deadline_ms = 0;
+        cfg.server.iter_deadline_auto_margin = 2.5;
         let rt = TrainConfig::from_json(&cfg.to_json()).unwrap();
         assert_eq!(rt, cfg);
     }
@@ -628,6 +672,31 @@ mod tests {
         let cfg =
             TrainConfig::from_str(r#"{"pipeline": {"ack_window": false}}"#).unwrap();
         assert!(!cfg.pipeline.ack_window);
+    }
+
+    #[test]
+    fn server_staged_and_auto_deadline_knobs_parse_and_validate() {
+        // Defaults: synchronous reference path, no auto-tuning.
+        let cfg = TrainConfig::from_str("{}").unwrap();
+        assert_eq!(cfg.server.compress_threads, 0);
+        assert_eq!(cfg.server.iter_deadline_auto_margin, 0.0);
+        // Explicit staged shard + auto margin.
+        let cfg = TrainConfig::from_str(
+            r#"{"server": {"compress_threads": 4, "iter_deadline_auto_margin": 3.0}}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.server.compress_threads, 4);
+        assert_eq!(cfg.server.iter_deadline_auto_margin, 3.0);
+        // Auto margin alongside a static deadline is ambiguous: rejected.
+        assert!(TrainConfig::from_str(
+            r#"{"server": {"iter_deadline_ms": 100, "iter_deadline_auto_margin": 3.0}}"#
+        )
+        .is_err());
+        // Negative margin rejected.
+        assert!(TrainConfig::from_str(
+            r#"{"server": {"iter_deadline_auto_margin": -1.0}}"#
+        )
+        .is_err());
     }
 
     #[test]

@@ -13,6 +13,7 @@ use crate::configx::{SyncMode, TrainConfig};
 use crate::data::Corpus;
 use crate::metrics::Breakdown;
 use crate::optim::{blocks::Block, WarmupSchedule};
+use crate::parallel::ThreadPool;
 use crate::ps::{Server, ServerOptions, ServerStats, ShardPlan};
 use crate::runtime::{self, Manifest, Runtime};
 use crate::worker::pipeline::Partition;
@@ -123,6 +124,8 @@ impl FabricSpec {
             // never legitimately exceed the whole partition.
             max_keys: self.partition.len(),
             iter_deadline: cfg.server.iter_deadline(),
+            compress_threads: cfg.server.compress_threads,
+            deadline_auto_margin: cfg.server.iter_deadline_auto_margin,
         }
     }
 
@@ -222,9 +225,20 @@ impl CommFabric {
                 spec.n_servers
             );
         }
+        // Staged shards (§4.2.1 server side): in-process, every co-located
+        // shard shares ONE decode/encode pool — they model one machine's
+        // compression CPUs, and per-shard pools would oversubscribe it.
+        // Cluster mode gives each shard its own pool instead (one shard
+        // per OS process owns its CPUs; see `cluster::serve`).
+        let shared_pool: Option<Arc<ThreadPool>> = (cfg.server.compress_threads > 0)
+            .then(|| Arc::new(ThreadPool::new(cfg.server.compress_threads)));
         let mut servers = Vec::with_capacity(spec.n_servers);
         for (s, server_side) in mesh.server_rows.into_iter().enumerate() {
-            servers.push(Server::spawn(spec.server_options(cfg, s, cfg.seed), server_side));
+            servers.push(Server::spawn_with_pool(
+                spec.server_options(cfg, s, cfg.seed),
+                server_side,
+                shared_pool.clone(),
+            ));
         }
         let workers = mesh
             .worker_rows
@@ -631,6 +645,43 @@ mod tests {
             let barrier = run(false);
             assert_eq!(windowed, barrier, "{scheme}: windowed pushes diverged from barrier");
         }
+    }
+
+    /// Acceptance at the fabric level: staged server shards
+    /// (`server.compress_threads > 0`, one pool shared across the
+    /// in-process shards) produce bit-identical aggregates to the
+    /// synchronous reference — the §4.2.1 server pipeline moves work in
+    /// time, never changes the bytes. The new reduce is summed in
+    /// worker-index order, so this holds regardless of message arrival
+    /// order across the two runs.
+    #[test]
+    fn staged_server_fabric_is_bit_identical_to_sync() {
+        let dim = 1200;
+        let nodes = 3;
+        let blocks =
+            crate::optim::blocks::from_shapes(&[("a".into(), 800), ("b".into(), 400)]);
+        let run = |threads: usize| -> Vec<Vec<f32>> {
+            let mut cfg = cfg_with("topk", 0.1, SyncMode::CompressedEf, nodes);
+            cfg.pipeline.block_bytes = 256 * 4; // real block partitioning
+            cfg.server.compress_threads = threads;
+            let mut fabric = CommFabric::new(&cfg, blocks.clone(), dim).unwrap();
+            let mut rng = Xoshiro256::seed_from_u64(9);
+            let mut out = Vec::new();
+            for _ in 0..4 {
+                let grads: Vec<Vec<f32>> = (0..nodes)
+                    .map(|_| {
+                        let mut g = vec![0.0f32; dim];
+                        rng.fill_normal(&mut g, 1.0);
+                        g
+                    })
+                    .collect();
+                let (agg, _) = fabric.exchange(&grads);
+                out.push(agg);
+            }
+            fabric.shutdown();
+            out
+        };
+        assert_eq!(run(0), run(4), "staged shards diverged from the synchronous reference");
     }
 
     #[test]

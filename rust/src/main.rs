@@ -53,6 +53,8 @@ fn server_opts() -> Vec<Opt> {
     o.push(Opt { name: "listen", takes_value: true, help: "listen address (default: cluster.addresses[shard])" });
     o.push(Opt { name: "shard", takes_value: true, help: "this server's shard index (default 0)" });
     o.push(Opt { name: "shards", takes_value: true, help: "total server shards (default: cluster.addresses length)" });
+    o.push(Opt { name: "compress-threads", takes_value: true, help: "staged shard pipeline: decode/encode pool threads (0 = synchronous reference)" });
+    o.push(Opt { name: "deadline-auto-margin", takes_value: true, help: "auto-tune the iter deadline: p99 round latency x margin (0 = off; needs --iter-deadline-ms 0)" });
     o
 }
 
@@ -165,6 +167,14 @@ fn cmd_train(a: &Args) -> anyhow::Result<()> {
 
 fn cmd_server(a: &Args) -> anyhow::Result<()> {
     let mut cfg = load_config(a, true)?;
+    cfg.server.compress_threads =
+        a.usize_or("compress-threads", cfg.server.compress_threads).map_err(anyhow::Error::msg)?;
+    cfg.server.iter_deadline_auto_margin = a
+        .f64_or("deadline-auto-margin", cfg.server.iter_deadline_auto_margin)
+        .map_err(anyhow::Error::msg)?;
+    // The flags above can produce combinations load_config never saw
+    // (e.g. an auto margin on top of a config-file deadline).
+    cfg.validate().map_err(|e| anyhow::anyhow!("{e}"))?;
     let shard = a.usize_or("shard", 0).map_err(anyhow::Error::msg)?;
     if let Some(n) = a.get("shards") {
         // Address-less launch: pin the shard count explicitly. (With a

@@ -114,6 +114,44 @@ impl ThreadPool {
             c = self.pending.cv.wait(c).unwrap();
         }
     }
+
+    /// Submit a job that produces a value and get a [`JobHandle`] to its
+    /// result — the cross-stage completion primitive: one pipeline stage
+    /// submits, a downstream stage (or the same thread, later) takes the
+    /// result without parking a pool worker in between. The staged server
+    /// shard uses channel sinks for its fan-in instead; this is the
+    /// one-shot form for callers that want a single result back.
+    pub fn submit<R, F>(&self, f: F) -> JobHandle<R>
+    where
+        R: Send + 'static,
+        F: FnOnce() -> R + Send + 'static,
+    {
+        let (tx, rx) = channel();
+        self.execute(move || {
+            let _ = tx.send(f());
+        });
+        JobHandle { rx }
+    }
+}
+
+/// One-shot handle to a [`ThreadPool::submit`] job's result.
+pub struct JobHandle<R> {
+    rx: Receiver<R>,
+}
+
+impl<R> JobHandle<R> {
+    /// Block for the result. `None` if the job panicked — the pool counts
+    /// the panic ([`ThreadPool::take_panics`]) and the handle must not
+    /// hang on a value that will never come.
+    pub fn wait(self) -> Option<R> {
+        self.rx.recv().ok()
+    }
+
+    /// Non-blocking poll: `Some` once the job finished, `None` while it
+    /// is still running (or if it panicked — check `take_panics`).
+    pub fn try_take(&self) -> Option<R> {
+        self.rx.try_recv().ok()
+    }
 }
 
 impl Drop for ThreadPool {
@@ -395,6 +433,26 @@ mod tests {
         pool.wait();
         assert_eq!(counter.load(Ordering::SeqCst), 7);
         assert_eq!(pool.take_panics(), 0);
+    }
+
+    #[test]
+    fn submit_returns_results_and_survives_panics() {
+        let pool = ThreadPool::new(2);
+        let handles: Vec<_> = (0..10u64).map(|i| pool.submit(move || i * i)).collect();
+        let got: Vec<Option<u64>> = handles.into_iter().map(|h| h.wait()).collect();
+        for (i, v) in got.iter().enumerate() {
+            assert_eq!(*v, Some((i * i) as u64));
+        }
+        // A panicking job resolves to None instead of hanging the handle.
+        let h = pool.submit(|| -> u64 { panic!("job failed") });
+        assert_eq!(h.wait(), None);
+        pool.wait();
+        assert_eq!(pool.take_panics(), 1);
+        // try_take: not ready until the job ran, then exactly once.
+        let h = pool.submit(|| 42u64);
+        pool.wait();
+        assert_eq!(h.try_take(), Some(42));
+        assert_eq!(h.try_take(), None);
     }
 
     #[test]

@@ -1,0 +1,1819 @@
+//! The server shard's round/rollover state machine (paper §4.1.2), shared
+//! by both executors: the synchronous reference path
+//! (`server.compress_threads = 0`, every stage inline on the I/O thread)
+//! and the staged pipeline (`> 0`, decode/encode as pool jobs — see
+//! [`crate::ps::stage`]).
+//!
+//! All *decisions* — wire validation, key budgets, dedup, stale/late
+//! classification, rollover, seal order — happen here on the control
+//! thread in message order, so the two executors decide identically. The
+//! float work is factored into three deterministic steps:
+//!
+//! * **decode** — each accepted push becomes a dense contribution vector
+//!   ([`stage::decode_contribution`], pure);
+//! * **reduce** — at seal time the contributions are summed in
+//!   *connection-index order* and averaged, so the f32 bits never depend
+//!   on arrival or decode-completion order;
+//! * **encode** — the second-way compression draws from a per-(key, iter)
+//!   RNG ([`stage::seal_seed`]) and carries the key's server-EF residual,
+//!   which is *lent* to the in-flight encode job — the next encode of the
+//!   same key cannot start until the residual returns, so EF state is
+//!   never raced and per-key encode order is iteration order.
+//!
+//! A sealed round whose decodes or encode are still in flight lives in the
+//! key's seal pipeline: late pushes for it are dropped (never merged), a
+//! second deadline sweep cannot re-seal it, pulls for it join the seal's
+//! waiter list and are answered with the exact sealed bytes when the
+//! encode lands — including after a rollover retired it into the one-slot
+//! `prev` history.
+
+use crate::comm::{Key, Message};
+use crate::compress::{Compressed, Compressor};
+use crate::configx::SyncMode;
+use crate::parallel::ThreadPool;
+use crate::ps::stage::{self, EventSink, Executor, StageEvent};
+use crate::ps::stats::ServerStats;
+use std::collections::{HashMap, VecDeque};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Full rounds a shard must observe before deadline auto-tuning
+/// (`server.iter_deadline_auto_margin`) derives its first deadline — a
+/// p99 over fewer rounds is noise.
+pub const AUTO_DEADLINE_MIN_ROUNDS: u64 = 8;
+
+/// Floor for an auto-tuned deadline: however tight the observed p99, the
+/// derived deadline never drops below this (normal scheduling jitter at
+/// sub-millisecond deadlines would seal healthy rounds).
+pub const AUTO_DEADLINE_FLOOR: Duration = Duration::from_millis(1);
+
+/// Server behaviour knobs.
+#[derive(Clone)]
+pub struct ServerOptions {
+    pub comp: Arc<dyn Compressor>,
+    pub sync: SyncMode,
+    /// Fused EF residual update (§4.2.2).
+    pub fused: bool,
+    pub n_workers: usize,
+    /// Intra-task threads for (de)compression (§4.2.1).
+    pub intra_threads: usize,
+    pub seed: u64,
+    /// Cap on distinct keys this shard will materialize state for
+    /// (0 = unlimited). The launchers set it to the partition size so a
+    /// client inventing keys cannot grow server memory without bound.
+    pub max_keys: usize,
+    /// Iteration deadline for degraded rounds (`server.iter_deadline_ms`):
+    /// a round with at least one push that stays incomplete this long is
+    /// sealed and served partial (`served_with < n_workers`). `None` =
+    /// strict BSP — a lost push stalls its iteration's pulls forever, but
+    /// behavior is bit-identical to the pre-deadline server — unless
+    /// `deadline_auto_margin` derives one from observed round latencies.
+    pub iter_deadline: Option<Duration>,
+    /// Width of the shard's staged decode/encode pool
+    /// (`server.compress_threads`). `0` = the synchronous reference path:
+    /// every stage runs inline on the I/O thread, exactly the
+    /// pre-staged shard. Any value `> 0` is bit-identical to `0` for the
+    /// whole `compress::paper_suite()` (tested in [`crate::ps::stage`]).
+    pub compress_threads: usize,
+    /// Deadline auto-tuning (`server.iter_deadline_auto_margin`): with
+    /// `iter_deadline` unset and this margin `> 0`, the shard derives its
+    /// deadline as observed p99 full-round latency × margin (floored at
+    /// [`AUTO_DEADLINE_FLOOR`]), re-evaluated at every sealed full round
+    /// once [`AUTO_DEADLINE_MIN_ROUNDS`] rounds are on record. `0` = off.
+    pub deadline_auto_margin: f64,
+}
+
+/// A sealed round whose bytes are not ready yet: its seal was decided (by
+/// count or by the deadline) but decodes may still be in flight, and the
+/// encode behind them. Lives in its key's FIFO seal pipeline; at most the
+/// front seal is ever being encoded.
+struct Seal {
+    iter: u64,
+    /// Contributions in the aggregate — the wire `served_with` tag.
+    served: u16,
+    /// Averaging divisor (= contributor count; `served` saturates at
+    /// `u16::MAX`, the divisor must not).
+    count: usize,
+    /// Connections to answer with the sealed bytes when the encode lands:
+    /// pulls queued before the seal plus pulls that arrived while it was
+    /// in flight.
+    waiters: Vec<u32>,
+    /// Decode results collected so far, in arrival order (sorted by
+    /// connection index at reduce time).
+    decoded: Vec<(u32, Vec<f32>)>,
+    /// Decode jobs still in flight for this round.
+    awaiting: usize,
+}
+
+/// An encode job in flight for this key (at most one; EF residual lending
+/// serializes them). Pulls for `iter` arriving meanwhile join `waiters`.
+struct EncodeSlot {
+    iter: u64,
+    waiters: Vec<u32>,
+}
+
+struct KeyState {
+    iter: u64,
+    /// Canonical element count for this key, fixed by the first *push*
+    /// (`None` while the key has only seen pulls — a pull-before-push
+    /// queues rather than panicking the shard). Later pushes whose `n`
+    /// disagrees are rejected at ingress — a self-consistent corrupt frame
+    /// must not resize (or panic on) the reducer.
+    dim: Option<usize>,
+    /// Connection indices that contributed to the current round, in
+    /// arrival order. The *connection* is the trusted identity (the wire
+    /// `worker` field is not), and deduplicating on it keeps a
+    /// retransmitting or hostile client from completing a round early
+    /// with one worker double-counted — which would also make the
+    /// `served_with` tag lie about how many workers the aggregate holds.
+    contributors: Vec<u32>,
+    /// Decode results for the current (open) round, in arrival order.
+    /// The float sum is deferred to seal time so it can run in
+    /// connection-index order — the price is holding up to `n_workers`
+    /// decoded vectors per open round instead of one accumulator.
+    decoded: Vec<(u32, Vec<f32>)>,
+    /// Decode jobs in flight for the current round.
+    inflight_decodes: usize,
+    /// When the current round's first push arrived — the iteration
+    /// deadline's clock. `None` while the round is empty or already
+    /// sealed.
+    round_started: Option<Instant>,
+    /// Sealed rounds whose bytes are not ready yet, FIFO by iteration.
+    /// Always empty on the synchronous path (seals complete inline).
+    seals: VecDeque<Seal>,
+    /// The encode job in flight for this key, if any.
+    encoding: Option<EncodeSlot>,
+    /// Server-side EF residual (`ẽ`, Alg. 4). `None` before the first
+    /// EF seal — and while lent to an in-flight encode job, which is what
+    /// serializes encodes of one key.
+    residual: Option<Vec<f32>>,
+    /// The sealed aggregate for `iter`, tagged with how many worker
+    /// contributions it holds (`served_with`: `n_workers` for a full BSP
+    /// round, fewer for a deadline-degraded one).
+    ready: Option<(u16, Compressed)>,
+    /// The previous iteration's aggregate. BSP lets a fast worker *push*
+    /// iteration i+1 (which rolls this key over) before a slow worker has
+    /// *pulled* iteration i — the slow pull must still be servable.
+    /// Workers never lag more than one iteration (they pull i before
+    /// pushing i+1), so one slot suffices.
+    ///
+    /// This invariant survives the block pipeline: keys are now per-block
+    /// and blocks of one iteration arrive out of order across *different*
+    /// keys, but each `KeyState` is keyed by one block, and every worker
+    /// still completes pull(key, i) before it sends push(key, i+1) — the
+    /// pipelined push phase starts only after the previous exchange's pull
+    /// phase fully drained, and both transports preserve per-endpoint FIFO
+    /// order. So per key the lag stays bounded by one iteration and the
+    /// one-slot rollover is still sufficient (tested in
+    /// `rust/tests/distributed.rs`).
+    ///
+    /// The *iteration deadline* is the one exception: it can seal rounds
+    /// without a stalled worker's push, so the clock may advance two or
+    /// more past a live-but-delayed worker. Such a worker's pull finds
+    /// neither `ready` nor `prev` and is answered with the retired
+    /// marker ([`retired_marker`], `served_with == 0`) so it fails
+    /// loudly instead of hanging on a reply that cannot come.
+    ///
+    /// Under the staged executor the retiring round's bytes may still be
+    /// encoding when the rollover happens: the encode completion routes
+    /// here (`on_event`, `Encoded`) instead of into `ready`.
+    prev: Option<(u64, u16, Compressed)>,
+    /// Queued pulls as (iter, connection index) — the endpoint to answer
+    /// on, which is the server's ground truth for who is asking (the wire
+    /// `worker` field is untrusted).
+    pending: Vec<(u64, u32)>,
+    /// When the most recent *degraded* seal's round started. A late push
+    /// for that round reveals the round's true arrival spread (it did
+    /// complete, just slower than the deadline) — recorded into the
+    /// latency histogram so auto-tuning can *widen* again. Without this
+    /// the tuner ratchets: a too-tight derived deadline seals every round
+    /// degraded, degraded seals never feed the histogram, and no full
+    /// round ever re-runs the derivation.
+    degraded_round_started: Option<(u64, Instant)>,
+}
+
+impl KeyState {
+    /// Empty state at `iter` — no dimension yet (a *placeholder* until
+    /// the first push establishes the element count).
+    fn fresh(iter: u64) -> KeyState {
+        KeyState {
+            iter,
+            dim: None,
+            contributors: Vec::new(),
+            decoded: Vec::new(),
+            inflight_decodes: 0,
+            round_started: None,
+            seals: VecDeque::new(),
+            encoding: None,
+            residual: None,
+            ready: None,
+            prev: None,
+            pending: Vec::new(),
+            degraded_round_started: None,
+        }
+    }
+}
+
+/// Reply for an unservable pull: a `PullResp` whose `served_with` is 0
+/// and whose block is empty. No real aggregate can have zero
+/// contributors, so the marker is unambiguous on the wire. It exists
+/// because the iteration deadline breaks strict BSP's guarantee that the
+/// key clock never advances two past a live worker: a worker delayed
+/// ~2 deadlines can ask for an iteration already evicted from the
+/// one-slot history, and silently dropping that pull would hang it
+/// forever — the marker lets it fail loudly instead.
+fn retired_marker(key: Key, iter: u64) -> Message {
+    Message::PullResp {
+        key,
+        iter,
+        served_with: 0,
+        data: crate::compress::Compressed {
+            scheme: crate::compress::SchemeId::Identity,
+            n: 0,
+            payload: Vec::new(),
+        },
+    }
+}
+
+/// The server's round state machine: feed it messages (and, under the
+/// staged executor, stage-completion events), collect replies. Separated
+/// from the I/O loop so tests can drive it deterministically.
+pub struct ServerCore {
+    pub(crate) opts: ServerOptions,
+    exec: Executor,
+    keys: HashMap<Key, KeyState>,
+    /// Keys whose dimension a push has established. Junk *placeholders*
+    /// (pull-created, dim `None`) are budgeted separately so a client
+    /// pulling made-up keys can never starve pushes for real keys.
+    established_keys: usize,
+    /// Stage jobs (decode + encode) submitted but not yet applied via
+    /// [`on_event`](ServerCore::on_event). Always 0 on the synchronous
+    /// path. The I/O loop drains to 0 before reporting final stats.
+    jobs_in_flight: usize,
+    decode_inflight: usize,
+    encode_inflight: usize,
+    /// Deadline derived by auto-tuning (`deadline_auto_margin`), if any.
+    auto_deadline: Option<Duration>,
+    pub stats: ServerStats,
+}
+
+impl ServerCore {
+    /// Synchronous reference core: every stage runs inline on the caller's
+    /// thread, exactly the pre-staged shard.
+    pub fn new(opts: ServerOptions) -> Self {
+        Self::with_executor(opts, Executor::Inline)
+    }
+
+    /// Staged core: decode/encode run as jobs on `pool`, completions are
+    /// delivered to `sink` and must be fed back through
+    /// [`on_event`](ServerCore::on_event) by the owning loop.
+    pub fn new_staged(opts: ServerOptions, pool: Arc<ThreadPool>, sink: EventSink) -> Self {
+        Self::with_executor(opts, Executor::Pool { pool, sink })
+    }
+
+    fn with_executor(opts: ServerOptions, exec: Executor) -> Self {
+        ServerCore {
+            opts,
+            exec,
+            keys: HashMap::new(),
+            established_keys: 0,
+            jobs_in_flight: 0,
+            decode_inflight: 0,
+            encode_inflight: 0,
+            auto_deadline: None,
+            stats: ServerStats::default(),
+        }
+    }
+
+    /// Stage jobs submitted but not yet applied (0 on the synchronous
+    /// path; the I/O loop drains this to 0 before reporting stats).
+    pub fn jobs_in_flight(&self) -> usize {
+        self.jobs_in_flight
+    }
+
+    /// The deadline in force: the static `server.iter_deadline_ms` knob,
+    /// or the auto-tuned one (`deadline_auto_margin`) once enough full
+    /// rounds are on record. `None` = strict BSP.
+    pub fn current_deadline(&self) -> Option<Duration> {
+        self.opts.iter_deadline.or(self.auto_deadline)
+    }
+
+    /// Whether a push may establish one more key (the real keyspace is
+    /// bounded by the partition; anything past `max_keys` is hostile).
+    fn at_established_capacity(&self) -> bool {
+        self.opts.max_keys > 0 && self.established_keys >= self.opts.max_keys
+    }
+
+    /// Whether creating one more pull-created placeholder would exceed its
+    /// budget (equal to `max_keys`): total key state stays bounded even
+    /// against a client pulling arbitrary made-up keys.
+    fn at_placeholder_capacity(&self, key: Key) -> bool {
+        self.opts.max_keys > 0
+            && !self.keys.contains_key(&key)
+            && self.keys.len() - self.established_keys >= self.opts.max_keys
+    }
+
+    /// Whether the round `st` is currently at (`st.iter`) has been sealed
+    /// — bytes ready, encode in flight, or seal waiting on decodes. A
+    /// push for a sealed round is *late*, never merged.
+    fn round_sealed(st: &KeyState) -> bool {
+        st.ready.is_some()
+            || st.encoding.as_ref().is_some_and(|e| e.iter == st.iter)
+            || st.seals.iter().any(|s| s.iter == st.iter)
+    }
+
+    /// How long `iter`'s round had really been open when a late push for
+    /// it arrived — `Some` only if `iter` is the key's most recent
+    /// *degraded* seal, and at most once per sealed round (the slot is
+    /// consumed): a retransmitting or hostile client re-sending the same
+    /// late push must not record an ever-growing sample each time and
+    /// drag the auto-tuned deadline toward the histogram ceiling. The
+    /// first straggler proves the round would have completed, just slower
+    /// than the deadline; its arrival time is the round's true spread.
+    fn late_round_spread(st: &mut KeyState, iter: u64) -> Option<Duration> {
+        match st.degraded_round_started {
+            Some((di, t0)) if di == iter => {
+                st.degraded_round_started = None;
+                Some(Instant::now().saturating_duration_since(t0))
+            }
+            _ => None,
+        }
+    }
+
+    /// Feed a late-push round spread into the latency histogram and
+    /// re-derive the auto deadline. This is what lets auto-tuning *widen*
+    /// after a too-tight derivation: with every round sealing degraded no
+    /// full round would ever record a latency again, and the tuner would
+    /// ratchet tight forever. Genuinely lost pushes never arrive, so true
+    /// faults contribute nothing — the deadline does not inflate for them.
+    /// Only active when auto-tuning is in force — with a static deadline
+    /// (or none) the histogram keeps its pure full-round-latency meaning
+    /// for the shutdown line and the bench, and a 10-second straggler
+    /// cannot inflate the reported p99.
+    fn note_late_spread(&mut self, spread: Option<Duration>) {
+        if self.opts.iter_deadline.is_some() || self.opts.deadline_auto_margin <= 0.0 {
+            return;
+        }
+        if let Some(d) = spread {
+            self.stats.round_hist.record(d);
+            self.retune_deadline();
+        }
+    }
+
+    /// Attach a pull to the in-flight seal or encode for `iter`, if one
+    /// exists: it will be answered with the sealed bytes when the encode
+    /// lands. Returns whether the pull was taken.
+    fn join_seal(st: &mut KeyState, iter: u64, from: u32) -> bool {
+        match st.encoding.as_mut() {
+            Some(slot) if slot.iter == iter => {
+                slot.waiters.push(from);
+                return true;
+            }
+            _ => {}
+        }
+        if let Some(seal) = st.seals.iter_mut().find(|s| s.iter == iter) {
+            seal.waiters.push(from);
+            return true;
+        }
+        false
+    }
+
+    /// Handle one message from connection `from`; returns
+    /// `(connection index, reply)` pairs to send. On the synchronous path
+    /// every consequence (decode, seal, encode, queued-pull answers) is in
+    /// the returned replies; on the staged path the heavy stages complete
+    /// later through [`on_event`](ServerCore::on_event).
+    pub fn handle(&mut self, from: u32, msg: Message) -> Vec<(u32, Message)> {
+        let t0 = Instant::now();
+        // Ingress time excludes kernel seconds even when kernels run
+        // inline (the synchronous path): subtract what the stages accrued
+        // during this call.
+        let k0 = self.stats.decode_s + self.stats.reduce_s + self.stats.encode_s;
+        let replies = self.handle_inner(from, msg);
+        let kernels = (self.stats.decode_s + self.stats.reduce_s + self.stats.encode_s) - k0;
+        self.stats.ingress_s += (t0.elapsed().as_secs_f64() - kernels).max(0.0);
+        replies
+    }
+
+    fn handle_inner(&mut self, from: u32, msg: Message) -> Vec<(u32, Message)> {
+        match msg {
+            // Replies are addressed by `from` — the connection the message
+            // arrived on — never by the wire-supplied `worker` field. A
+            // client lying about (or botching) its id must not be able to
+            // steer replies to another worker or index the endpoint table
+            // out of bounds; the field is kept for diagnostics only.
+            Message::Push { key, iter, worker, data } => {
+                // Untrusted wire data: reject corrupt blocks instead of
+                // letting a bad index/length panic the decoder. (The
+                // TCP transport already rejects these at frame decode;
+                // this also covers the in-process transport.)
+                if let Err(e) = crate::compress::validate_wire(&data) {
+                    eprintln!("server: rejecting corrupt push for key {key} from worker {worker}: {e}");
+                    self.stats.rejected += 1;
+                    return vec![];
+                }
+                // Every push targets (or establishes) an established key;
+                // placeholders don't consume this budget until a push
+                // gives them a dimension. Checked before touching the map
+                // so a rejected junk push cannot leave a placeholder
+                // behind either. (Hoisted: `st` below holds a &mut borrow
+                // of the key map.)
+                let at_established_cap = self.at_established_capacity();
+                if at_established_cap && !self.keys.contains_key(&key) {
+                    eprintln!(
+                        "server: rejecting push for unknown key {key} from worker {worker}: \
+                         shard is at its {}-key capacity",
+                        self.opts.max_keys
+                    );
+                    self.stats.rejected += 1;
+                    return vec![];
+                }
+                let n_workers = self.opts.n_workers;
+                let max_keys = self.opts.max_keys;
+                let st = self.keys.entry(key).or_insert_with(|| KeyState::fresh(iter));
+                match st.dim {
+                    // A self-consistent corrupt frame can still carry the
+                    // wrong element count for this key; reject it rather
+                    // than resize (or panic on) the reducer.
+                    Some(d) if data.n != d => {
+                        eprintln!(
+                            "server: rejecting push for key {key} from worker {worker}: \
+                             n={} but the key has {d} elements",
+                            data.n
+                        );
+                        self.stats.rejected += 1;
+                        return vec![];
+                    }
+                    // First push fixes the key's element count. The state
+                    // may be a placeholder from an earlier queued pull, so
+                    // adopt the pusher's iteration clock too — and charge
+                    // the establishment budget now.
+                    None => {
+                        if at_established_cap {
+                            eprintln!(
+                                "server: rejecting push establishing key {key} from worker \
+                                 {worker}: shard is at its {max_keys}-key capacity"
+                            );
+                            self.stats.rejected += 1;
+                            return vec![];
+                        }
+                        st.dim = Some(data.n);
+                        st.iter = iter;
+                        self.established_keys += 1;
+                    }
+                    _ => {}
+                }
+                if iter < st.iter {
+                    // A push for an iteration this key already retired.
+                    // If it targets the just-retired (one-slot history)
+                    // round — whose bytes may still be encoding under the
+                    // staged executor — it is the honest straggler the
+                    // degraded-round protocol tolerates, and belongs in
+                    // the `late_pushes` telemetry, not the corruption
+                    // counter. Anything older is a hostile client or a
+                    // straggler beyond BSP's lag bound. Unusable either
+                    // way; drop.
+                    let retired_match = st.prev.as_ref().is_some_and(|(p, _, _)| *p == iter)
+                        || st.encoding.as_ref().is_some_and(|s| s.iter == iter)
+                        || st.seals.iter().any(|s| s.iter == iter);
+                    if retired_match {
+                        eprintln!(
+                            "server: dropping late push for key {key} iteration {iter} \
+                             from worker {worker}: the round was sealed and retired"
+                        );
+                        self.stats.late_pushes += 1;
+                        let spread = Self::late_round_spread(st, iter);
+                        self.note_late_spread(spread);
+                    } else {
+                        eprintln!(
+                            "server: rejecting stale push for key {key} iteration {iter} \
+                             from worker {worker} (key is at {})",
+                            st.iter
+                        );
+                        self.stats.rejected += 1;
+                    }
+                    return vec![];
+                }
+                if st.iter != iter {
+                    // New iteration for this key: retire the sealed
+                    // aggregate (slow workers may still pull it) and reset
+                    // the round. A short round — a rejected corrupt push
+                    // left the round below n_workers and no deadline
+                    // sealed it — is recovered by discarding the partial
+                    // contributions, never by asserting the shard down on
+                    // untrusted input. A sealed round (bytes ready, or
+                    // still in the seal pipeline) was already counted
+                    // where it sealed; it must not be double-counted as
+                    // short here.
+                    let sealed = Self::round_sealed(st);
+                    if !st.contributors.is_empty()
+                        && st.contributors.len() != n_workers
+                        && !sealed
+                    {
+                        eprintln!(
+                            "server: key {key} iteration {} was short ({}/{} pushes); \
+                             discarding the partial round",
+                            st.iter,
+                            st.contributors.len(),
+                            n_workers
+                        );
+                        self.stats.short_iters += 1;
+                    }
+                    if let Some((served, p)) = st.ready.take() {
+                        st.prev = Some((st.iter, served, p));
+                    }
+                    // A seal still in the pipeline routes its bytes into
+                    // `prev` at encode completion (`on_event`); discarded
+                    // partial decodes are dropped here, and any of their
+                    // jobs still in flight become stale events.
+                    st.iter = iter;
+                    st.contributors.clear();
+                    st.decoded.clear();
+                    st.inflight_decodes = 0;
+                    st.round_started = None;
+                } else if Self::round_sealed(st) {
+                    // The round for `iter` is already sealed — by a full
+                    // BSP completion (this is a duplicate push) or by the
+                    // iteration deadline (this is the late straggler the
+                    // degraded-round protocol tolerates). Either way the
+                    // aggregate may already be in other workers' hands:
+                    // merging retroactively would hand different workers
+                    // different bytes for the same iteration. Drop it,
+                    // counted — a rejected or late push is never
+                    // resurrected.
+                    eprintln!(
+                        "server: dropping late push for key {key} iteration {iter} from \
+                         worker {worker}: the round is already sealed"
+                    );
+                    self.stats.late_pushes += 1;
+                    let spread = Self::late_round_spread(st, iter);
+                    self.note_late_spread(spread);
+                    return vec![];
+                }
+                if st.contributors.contains(&from) {
+                    // A second push from the same connection for an open
+                    // round — a retransmitting or hostile client. Counting
+                    // it would complete the round early with one worker
+                    // double-counted (and `served_with` lying about it);
+                    // the connection index is the trusted identity, never
+                    // the wire `worker` field.
+                    eprintln!(
+                        "server: rejecting duplicate push for key {key} iteration {iter} \
+                         from connection {from} (claims worker {worker})"
+                    );
+                    self.stats.rejected += 1;
+                    return vec![];
+                }
+                if st.contributors.is_empty() {
+                    // First push of the round starts the deadline clock.
+                    st.round_started = Some(Instant::now());
+                }
+                st.contributors.push(from);
+                let complete = st.contributors.len() == n_workers;
+                self.stats.pushes += 1;
+                let mut replies = vec![(from, Message::Ack { key, iter })];
+                self.dispatch_decode(key, iter, from, data, &mut replies);
+                if complete {
+                    self.decide_seal(key, &mut replies);
+                }
+                replies
+            }
+            Message::Pull { key, iter, worker } => {
+                self.stats.pulls += 1;
+                if self.at_placeholder_capacity(key) {
+                    eprintln!(
+                        "server: dropping pull for unknown key {key} from worker {worker}: \
+                         shard is at its placeholder capacity"
+                    );
+                    self.stats.rejected += 1;
+                    // Unservable-pull policy: always answer (see
+                    // retired_marker) — a dropped pull must never become
+                    // a silent hang on the puller's side.
+                    return vec![(from, retired_marker(key, iter))];
+                }
+                let n_workers = self.opts.n_workers;
+                // A pull may precede any push for its key — a reordered
+                // startup, or a client probing unknown keys. Queue it (as
+                // a budgeted placeholder) until the key appears instead of
+                // panicking the shard.
+                let st = self.keys.entry(key).or_insert_with(|| KeyState::fresh(iter));
+                if st.dim.is_none() {
+                    self.stats.early_pulls += 1;
+                }
+                if st.dim.is_some() {
+                    if st.iter == iter {
+                        if let Some((served, p)) = &st.ready {
+                            return vec![(
+                                from,
+                                Message::PullResp {
+                                    key,
+                                    iter,
+                                    served_with: *served,
+                                    data: p.clone(),
+                                },
+                            )];
+                        }
+                        // Sealed but still decoding/encoding (staged
+                        // executor): answered with the sealed bytes when
+                        // they land.
+                        if Self::join_seal(st, iter, from) {
+                            return vec![];
+                        }
+                    } else if let Some((piter, served, p)) = &st.prev {
+                        // A pull lagging one iteration behind a fast pusher.
+                        if *piter == iter {
+                            return vec![(
+                                from,
+                                Message::PullResp {
+                                    key,
+                                    iter,
+                                    served_with: *served,
+                                    data: p.clone(),
+                                },
+                            )];
+                        }
+                    }
+                    if iter < st.iter {
+                        // The retired round's bytes may still be in the
+                        // seal pipeline (rollover mid-encode): join it.
+                        if Self::join_seal(st, iter, from) {
+                            return vec![];
+                        }
+                        // Older than the one-slot history: unservable.
+                        // Under strict BSP only a hostile client gets
+                        // here, but the iteration deadline can advance
+                        // the key clock past a live worker that stalls
+                        // for ~2 deadlines — answer with the retired
+                        // marker so it fails loudly instead of waiting
+                        // forever for a reply that cannot come.
+                        eprintln!(
+                            "server: retiring stale pull for key {key} iteration {iter} \
+                             from worker {worker} (key is at {})",
+                            st.iter
+                        );
+                        self.stats.stale_pulls += 1;
+                        return vec![(from, retired_marker(key, iter))];
+                    }
+                    if iter > st.iter.saturating_add(1) {
+                        // Impossible for honest traffic even with lost
+                        // pushes: a worker only advances to iteration i+1
+                        // after its pull for i completed, so its future
+                        // lag is bounded by one. Queueing beyond that
+                        // would let a flood of far-future pulls poison
+                        // the pending queue forever — reject instead.
+                        eprintln!(
+                            "server: rejecting future pull for key {key} iteration {iter} \
+                             from worker {worker} (key is at {})",
+                            st.iter
+                        );
+                        self.stats.rejected += 1;
+                        // Honest traffic cannot get here, but answer
+                        // anyway — a dropped pull must never become a
+                        // silent hang.
+                        return vec![(from, retired_marker(key, iter))];
+                    }
+                    // iter == st.iter with no sealed round falls through
+                    // to the queue, as does iter == st.iter + 1: the
+                    // puller's own push for that round may have been
+                    // lost (per-connection FIFO no longer implies the
+                    // key's clock reached `iter` once pushes can be
+                    // dropped), and rejecting it would strand the worker
+                    // forever — the deadline seal serves the queue.
+                }
+                // Honest traffic queues at most one pull per worker per
+                // key; anything past a small multiple is a flood (pulls
+                // for iterations that will never be served) — drop it
+                // rather than grow the queue without bound.
+                if st.pending.len() >= 2 * n_workers.max(1) {
+                    eprintln!(
+                        "server: dropping pull for key {key} iteration {iter} from \
+                         worker {worker}: pending queue full"
+                    );
+                    self.stats.stale_pulls += 1;
+                    return vec![(from, retired_marker(key, iter))];
+                }
+                st.pending.push((iter, from));
+                vec![]
+            }
+            Message::Shutdown => vec![],
+            // Hello/Welcome/PullResp/Ack have no business arriving at a
+            // running server; any client can send them, so they must never
+            // panic the shard — ignore and count.
+            other => {
+                let tag = match other {
+                    Message::Hello { .. } => "Hello",
+                    Message::Welcome { .. } => "Welcome",
+                    Message::PullResp { .. } => "PullResp",
+                    Message::Ack { .. } => "Ack",
+                    _ => "unknown",
+                };
+                eprintln!("server: ignoring unexpected {tag} message from worker {from}");
+                self.stats.unexpected += 1;
+                vec![]
+            }
+        }
+    }
+
+    /// Apply one stage-job completion. On the synchronous path this is
+    /// called recursively from `handle`/`poll_deadlines`; the staged I/O
+    /// loop calls it with events drained from its channel.
+    pub fn on_event(&mut self, ev: StageEvent) -> Vec<(u32, Message)> {
+        let mut replies = Vec::new();
+        match ev {
+            StageEvent::Decoded { key, iter, from, buf, ns } => {
+                self.stats.decode_s += ns as f64 * 1e-9;
+                self.jobs_in_flight -= 1;
+                self.decode_inflight -= 1;
+                let mut pump = false;
+                if let Some(st) = self.keys.get_mut(&key) {
+                    if let Some(seal) = st.seals.iter_mut().find(|s| s.iter == iter) {
+                        // A decode landing for an already-sealed round
+                        // (the deadline sealed it mid-flight, or the
+                        // completing push's own decode under the pool).
+                        debug_assert!(seal.awaiting > 0, "decode for a fully-decoded seal");
+                        seal.decoded.push((from, buf));
+                        seal.awaiting = seal.awaiting.saturating_sub(1);
+                        pump = seal.awaiting == 0;
+                    } else if st.iter == iter && st.inflight_decodes > 0 {
+                        debug_assert!(
+                            st.contributors.contains(&from),
+                            "decode for a non-contributor"
+                        );
+                        st.decoded.push((from, buf));
+                        st.inflight_decodes -= 1;
+                    }
+                    // else: the round was discarded (short) at rollover
+                    // before this decode landed — drop the result.
+                }
+                if pump {
+                    self.pump_seals(key, &mut replies);
+                }
+            }
+            StageEvent::Encoded { key, iter, served, data, residual, ns } => {
+                self.stats.encode_s += ns as f64 * 1e-9;
+                self.jobs_in_flight -= 1;
+                self.encode_inflight -= 1;
+                if let Some(st) = self.keys.get_mut(&key) {
+                    // Returning the residual is what lets the next encode
+                    // of this key start (EF encodes serialize per key).
+                    st.residual = residual;
+                    if let Some(slot) = st.encoding.take() {
+                        debug_assert_eq!(slot.iter, iter, "encode completion out of order");
+                        for w in slot.waiters {
+                            replies.push((
+                                w,
+                                Message::PullResp {
+                                    key,
+                                    iter,
+                                    served_with: served,
+                                    data: data.clone(),
+                                },
+                            ));
+                        }
+                    }
+                    if st.iter == iter {
+                        st.ready = Some((served, data));
+                    } else if st.iter == iter + 1 {
+                        // The key rolled over while this round was
+                        // encoding: the bytes land straight in the
+                        // one-slot history.
+                        st.prev = Some((iter, served, data));
+                    }
+                    // else: the key advanced two or more mid-encode (only
+                    // hostile traffic can — honest workers pull `iter`
+                    // first, which this completion just answered). The
+                    // bytes are retired; matching pulls were answered
+                    // above, later ones get the retired marker.
+                }
+                self.pump_seals(key, &mut replies);
+            }
+        }
+        replies
+    }
+
+    /// Seal the current round of `key` with the contributions present —
+    /// the *decision*, shared by normal BSP completion
+    /// (`count == n_workers`) and the iteration deadline
+    /// (`count < n_workers`, a degraded round). Drains the pending-pull
+    /// queue exactly like the pre-staged server (matching pulls become
+    /// waiters on the sealed bytes, everything else is unservable and
+    /// marker-answered), then hands the round to the seal pipeline: the
+    /// reduce runs once its decodes land, the encode after that. For a
+    /// full round the averaging divisor equals `n_workers`, so the
+    /// strict-BSP path is bit-identical to the pre-deadline server.
+    fn decide_seal(&mut self, key: Key, replies: &mut Vec<(u32, Message)>) {
+        let n_workers = self.opts.n_workers;
+        let now = Instant::now();
+        let st = self.keys.get_mut(&key).expect("sealing an unknown key");
+        debug_assert!(!Self::round_sealed(st), "sealing an already-sealed round");
+        debug_assert!(!st.contributors.is_empty(), "sealing an empty round");
+        let count = st.contributors.len();
+        let served = count.min(u16::MAX as usize) as u16;
+        let iter = st.iter;
+        let mut full_latency = None;
+        if count < n_workers {
+            eprintln!(
+                "server: iteration deadline — serving key {key} iteration {iter} degraded \
+                 ({count}/{n_workers} pushes)"
+            );
+            self.stats.degraded_iters += 1;
+            // Remember when this round opened: a straggler's late push
+            // will reveal the round's true spread (see note_late_spread).
+            st.degraded_round_started = st.round_started.map(|t0| (iter, t0));
+        } else if let Some(t0) = st.round_started {
+            // Full rounds feed the latency histogram (and deadline
+            // auto-tuning); degraded rounds would just echo the deadline
+            // back.
+            full_latency = Some(now.saturating_duration_since(t0));
+        }
+        // The queue fully drains at every seal: matching pulls wait for
+        // the sealed bytes, everything else (short-iteration leftovers,
+        // placeholder-era junk) is unservable and dropped — nothing
+        // hostile can sit in `pending` displacing honest pulls forever.
+        let pending: Vec<(u64, u32)> = std::mem::take(&mut st.pending);
+        let mut waiters = Vec::new();
+        for (piter, w) in pending {
+            if piter == iter {
+                waiters.push(w);
+            } else {
+                eprintln!(
+                    "server: retiring unservable queued pull for key {key} \
+                     iteration {piter} from worker {w} (key is at {iter})"
+                );
+                self.stats.stale_pulls += 1;
+                replies.push((w, retired_marker(key, piter)));
+            }
+        }
+        st.seals.push_back(Seal {
+            iter,
+            served,
+            count,
+            waiters,
+            decoded: std::mem::take(&mut st.decoded),
+            awaiting: st.inflight_decodes,
+        });
+        st.inflight_decodes = 0;
+        st.round_started = None;
+        if let Some(lat) = full_latency {
+            self.stats.round_hist.record(lat);
+            self.retune_deadline();
+        }
+        self.pump_seals(key, replies);
+    }
+
+    /// Advance `key`'s seal pipeline: while the front seal has every
+    /// decode in hand and no encode is in flight for this key, run the
+    /// *reduce* (sum in connection-index order, average) and dispatch the
+    /// *encode*. On the synchronous path the encode completes inline and
+    /// the loop naturally drains the whole pipeline.
+    fn pump_seals(&mut self, key: Key, replies: &mut Vec<(u32, Message)>) {
+        loop {
+            let Some(st) = self.keys.get_mut(&key) else { return };
+            if st.encoding.is_some() {
+                return;
+            }
+            let Some(front) = st.seals.front() else { return };
+            if front.awaiting > 0 {
+                return;
+            }
+            let seal = st.seals.pop_front().expect("front seal vanished");
+            let dim = st.dim.expect("sealing a dimensionless key");
+            // Reduce: deterministic regardless of arrival or decode
+            // completion order — contributions are summed sorted by
+            // connection index, then averaged over the pushes actually
+            // received.
+            let t = Instant::now();
+            let mut decoded = seal.decoded;
+            decoded.sort_by_key(|(from, _)| *from);
+            let mut acc = vec![0.0f32; dim];
+            for (_, buf) in &decoded {
+                for (a, b) in acc.iter_mut().zip(buf) {
+                    *a += *b;
+                }
+            }
+            let inv = 1.0 / seal.count as f32;
+            for a in &mut acc {
+                *a *= inv;
+            }
+            self.stats.reduce_s += t.elapsed().as_secs_f64();
+            let residual = st.residual.take();
+            st.encoding = Some(EncodeSlot { iter: seal.iter, waiters: seal.waiters });
+            self.dispatch_encode(key, seal.iter, seal.served, acc, residual, replies);
+            // Inline executor: the encode (and its on_event) already ran —
+            // loop to drain any further ready seals. Pool executor: the
+            // encode slot is occupied, so the next iteration returns.
+        }
+    }
+
+    /// Run or submit one decode job for an accepted push.
+    fn dispatch_decode(
+        &mut self,
+        key: Key,
+        iter: u64,
+        from: u32,
+        data: Compressed,
+        replies: &mut Vec<(u32, Message)>,
+    ) {
+        self.jobs_in_flight += 1;
+        self.decode_inflight += 1;
+        self.stats.decode_depth_peak =
+            self.stats.decode_depth_peak.max(self.decode_inflight as u64);
+        if let Some(st) = self.keys.get_mut(&key) {
+            st.inflight_decodes += 1;
+        }
+        if let Executor::Pool { pool, sink } = &self.exec {
+            let comp = Arc::clone(&self.opts.comp);
+            let sink = Arc::clone(sink);
+            pool.execute(move || {
+                let t = Instant::now();
+                let buf = stage::decode_contribution(comp.as_ref(), &data);
+                let ns = t.elapsed().as_nanos() as u64;
+                sink(StageEvent::Decoded { key, iter, from, buf, ns });
+            });
+        } else {
+            let t = Instant::now();
+            let buf = stage::decode_contribution(self.opts.comp.as_ref(), &data);
+            let ns = t.elapsed().as_nanos() as u64;
+            let evs = self.on_event(StageEvent::Decoded { key, iter, from, buf, ns });
+            replies.extend(evs);
+        }
+    }
+
+    /// Run or submit one encode (second-way compression) job for a sealed,
+    /// reduced aggregate.
+    fn dispatch_encode(
+        &mut self,
+        key: Key,
+        iter: u64,
+        served: u16,
+        acc: Vec<f32>,
+        residual: Option<Vec<f32>>,
+        replies: &mut Vec<(u32, Message)>,
+    ) {
+        self.jobs_in_flight += 1;
+        self.encode_inflight += 1;
+        self.stats.encode_depth_peak =
+            self.stats.encode_depth_peak.max(self.encode_inflight as u64);
+        let seed = stage::seal_seed(self.opts.seed, key, iter);
+        if let Executor::Pool { pool, sink } = &self.exec {
+            let comp = Arc::clone(&self.opts.comp);
+            let (sync, fused, intra) = (self.opts.sync, self.opts.fused, self.opts.intra_threads);
+            let sink = Arc::clone(sink);
+            pool.execute(move || {
+                let t = Instant::now();
+                let (data, residual) =
+                    stage::encode_aggregate(comp.as_ref(), sync, fused, intra, seed, acc, residual);
+                let ns = t.elapsed().as_nanos() as u64;
+                sink(StageEvent::Encoded { key, iter, served, data, residual, ns });
+            });
+        } else {
+            let t = Instant::now();
+            let (data, residual) = stage::encode_aggregate(
+                self.opts.comp.as_ref(),
+                self.opts.sync,
+                self.opts.fused,
+                self.opts.intra_threads,
+                seed,
+                acc,
+                residual,
+            );
+            let ns = t.elapsed().as_nanos() as u64;
+            let evs = self.on_event(StageEvent::Encoded { key, iter, served, data, residual, ns });
+            replies.extend(evs);
+        }
+    }
+
+    /// Re-derive the auto-tuned deadline from the round-latency histogram
+    /// (called at every sealed full round). Static `iter_deadline` wins;
+    /// below [`AUTO_DEADLINE_MIN_ROUNDS`] observations nothing is derived.
+    fn retune_deadline(&mut self) {
+        if self.opts.iter_deadline.is_some() || self.opts.deadline_auto_margin <= 0.0 {
+            return;
+        }
+        if self.stats.round_hist.count() < AUTO_DEADLINE_MIN_ROUNDS {
+            return;
+        }
+        let p99 = self.stats.round_hist.quantile(0.99);
+        let derived =
+            Duration::from_secs_f64(p99.as_secs_f64() * self.opts.deadline_auto_margin);
+        self.auto_deadline = Some(derived.max(AUTO_DEADLINE_FLOOR));
+    }
+
+    /// Iteration-deadline sweep: seal every round that has at least one
+    /// push, has not been sealed, and saw its first push at least
+    /// [`current_deadline`](ServerCore::current_deadline) ago — serving
+    /// pulls a *partial* aggregate marked `served_with < n_workers`
+    /// instead of stalling every worker forever on a lost or rejected
+    /// push. Returns the replies to send. No-op when no deadline is in
+    /// force (static or auto-tuned).
+    ///
+    /// `now` is an explicit argument so tests can drive the clock
+    /// deterministically; the I/O loop passes `Instant::now()`. A sealed
+    /// round clears its deadline clock, so a second sweep can never
+    /// double-seal — even while the first seal's decodes or encode are
+    /// still in flight on the staged path.
+    pub fn poll_deadlines(&mut self, now: Instant) -> Vec<(u32, Message)> {
+        let Some(deadline) = self.current_deadline() else {
+            return Vec::new();
+        };
+        let mut due: Vec<Key> = self
+            .keys
+            .iter()
+            .filter(|(_, st)| {
+                !st.contributors.is_empty()
+                    && st
+                        .round_started
+                        .is_some_and(|t0| now.saturating_duration_since(t0) >= deadline)
+            })
+            .map(|(&k, _)| k)
+            .collect();
+        // Deterministic seal order (HashMap iteration order is not).
+        due.sort_unstable();
+        let mut replies = Vec::new();
+        for key in due {
+            self.decide_seal(key, &mut replies);
+        }
+        replies
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{by_name, Ctx};
+    use crate::util::rng::Xoshiro256;
+
+    fn opts(scheme: &str, sync: SyncMode, workers: usize) -> ServerOptions {
+        ServerOptions {
+            comp: by_name(scheme, 0.25).unwrap(),
+            sync,
+            fused: true,
+            n_workers: workers,
+            intra_threads: 1,
+            seed: 7,
+            max_keys: 0,
+            iter_deadline: None,
+            compress_threads: 0,
+            deadline_auto_margin: 0.0,
+        }
+    }
+
+    /// Same, with an iteration deadline. Tests drive `poll_deadlines`
+    /// with explicit clocks, so the duration's magnitude is irrelevant.
+    fn opts_deadline(scheme: &str, sync: SyncMode, workers: usize) -> ServerOptions {
+        ServerOptions {
+            iter_deadline: Some(std::time::Duration::from_millis(50)),
+            ..opts(scheme, sync, workers)
+        }
+    }
+
+    /// A clock strictly past every configured test deadline.
+    fn after_deadline() -> Instant {
+        Instant::now() + std::time::Duration::from_secs(3600)
+    }
+
+    fn push(core: &mut ServerCore, key: Key, iter: u64, worker: u32, g: &[f32]) -> Vec<(u32, Message)> {
+        let mut rng = Xoshiro256::seed_from_u64(worker as u64 + 100);
+        let data = core.opts.comp.compress(g, &mut Ctx::new(&mut rng));
+        core.handle(worker, Message::Push { key, iter, worker, data })
+    }
+
+    #[test]
+    fn aggregates_identity_to_exact_mean() {
+        let mut core = ServerCore::new(opts("identity", SyncMode::Full, 2));
+        let r1 = push(&mut core, 0, 0, 0, &[1.0, 2.0]);
+        assert_eq!(r1.len(), 1); // just the ack
+        let r2 = push(&mut core, 0, 0, 1, &[3.0, 6.0]);
+        assert_eq!(r2.len(), 1);
+        // Now pull
+        let r = core.handle(0, Message::Pull { key: 0, iter: 0, worker: 0 });
+        let Message::PullResp { data, .. } = &r[0].1 else { panic!() };
+        let mut out = vec![0.0f32; 2];
+        core.opts.comp.decompress(data, &mut out);
+        assert_eq!(out, vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn pull_before_complete_is_queued() {
+        let mut core = ServerCore::new(opts("identity", SyncMode::Full, 2));
+        push(&mut core, 5, 0, 0, &[1.0]);
+        let r = core.handle(1, Message::Pull { key: 5, iter: 0, worker: 1 });
+        assert!(r.is_empty()); // queued
+        let r = push(&mut core, 5, 0, 1, &[3.0]);
+        // ack + the queued pull's response
+        assert_eq!(r.len(), 2);
+        assert!(matches!(r[1].1, Message::PullResp { .. }));
+        assert_eq!(r[1].0, 1);
+    }
+
+    #[test]
+    fn iterations_reset_round() {
+        let mut core = ServerCore::new(opts("identity", SyncMode::Full, 1));
+        push(&mut core, 0, 0, 0, &[10.0]);
+        push(&mut core, 0, 1, 0, &[2.0]);
+        let r = core.handle(0, Message::Pull { key: 0, iter: 1, worker: 0 });
+        let Message::PullResp { data, .. } = &r[0].1 else { panic!() };
+        let mut out = vec![0.0f32; 1];
+        core.opts.comp.decompress(data, &mut out);
+        assert_eq!(out, vec![2.0]); // not 12.0
+    }
+
+    #[test]
+    fn server_ef_residual_accumulates_under_topk() {
+        // Two workers with different dominant coordinates: the server's
+        // second-way top-k can keep only one of them per round; ẽ must
+        // carry the other forward and flush it on a later round
+        // (Alg. 4's server side). Uses dim=4 so topk(0.25) keeps 1.
+        let mut core = ServerCore::new(opts("topk", SyncMode::CompressedEf, 2));
+        let ga = vec![1.0f32, 0.0, 0.0, 0.0]; // worker 0's spike
+        let gb = vec![0.0f32, 0.9, 0.0, 0.0]; // worker 1's spike
+        let mut seen_idx1 = false;
+        for iter in 0..10u64 {
+            push(&mut core, 0, iter, 0, &ga);
+            push(&mut core, 0, iter, 1, &gb);
+            let r = core.handle(0, Message::Pull { key: 0, iter, worker: 0 });
+            let Message::PullResp { data, .. } = &r[0].1 else { panic!() };
+            let mut p = vec![0.0f32; 4];
+            core.opts.comp.decompress(data, &mut p);
+            if iter == 0 {
+                // Round 0: Δ = [0.5, 0.45, 0, 0]; top-1 keeps idx 0 only.
+                assert_eq!(p, vec![0.5, 0.0, 0.0, 0.0]);
+            }
+            if p[1] > 0.0 {
+                seen_idx1 = true;
+            }
+        }
+        // Round 1: Δ = [0.5, 0.45 + 0.45(ẽ), 0, 0] → idx 1 wins and flushes.
+        assert!(seen_idx1, "server EF never flushed the deferred coordinate");
+    }
+
+    /// Regression (deadlock found in CI): a fast worker may push iteration
+    /// i+1 — rolling the key over — before a slow worker pulls iteration i.
+    /// The retired aggregate must still be servable.
+    #[test]
+    fn late_pull_after_rollover_is_served() {
+        let mut core = ServerCore::new(opts("identity", SyncMode::Full, 2));
+        push(&mut core, 0, 0, 0, &[2.0]);
+        push(&mut core, 0, 0, 1, &[4.0]); // iter 0 completes: mean = 3.0
+        // Fast worker 0 pulls iter 0 and immediately pushes iter 1.
+        let r = core.handle(0, Message::Pull { key: 0, iter: 0, worker: 0 });
+        assert!(matches!(r[0].1, Message::PullResp { .. }));
+        push(&mut core, 0, 1, 0, &[10.0]);
+        // Slow worker 1 now pulls iter 0 — must be served from the retired
+        // slot, not panic or hang.
+        let r = core.handle(1, Message::Pull { key: 0, iter: 0, worker: 1 });
+        assert_eq!(r.len(), 1);
+        let Message::PullResp { iter, data, .. } = &r[0].1 else { panic!() };
+        assert_eq!(*iter, 0);
+        let mut out = vec![0.0f32; 1];
+        core.opts.comp.decompress(data, &mut out);
+        assert_eq!(out, vec![3.0]);
+        // And worker 1 proceeding to iter 1 still works.
+        push(&mut core, 0, 1, 1, &[20.0]);
+        let r = core.handle(1, Message::Pull { key: 0, iter: 1, worker: 1 });
+        let Message::PullResp { data, .. } = &r[0].1 else { panic!() };
+        let mut out = vec![0.0f32; 1];
+        core.opts.comp.decompress(data, &mut out);
+        assert_eq!(out, vec![15.0]);
+    }
+
+    /// A pull that arrives before its iteration completes, while a previous
+    /// iteration is retired, must queue (not be served stale data).
+    #[test]
+    fn pending_pull_for_future_iter_waits() {
+        let mut core = ServerCore::new(opts("identity", SyncMode::Full, 2));
+        push(&mut core, 0, 0, 0, &[1.0]);
+        push(&mut core, 0, 0, 1, &[3.0]);
+        let _ = core.handle(0, Message::Pull { key: 0, iter: 0, worker: 0 });
+        push(&mut core, 0, 1, 0, &[5.0]);
+        // worker 0 pulls iter 1 before worker 1 pushed it: queued.
+        let r = core.handle(0, Message::Pull { key: 0, iter: 1, worker: 0 });
+        assert!(r.is_empty());
+        // worker 1 completes iter 1: the queued pull is answered with iter-1
+        // data (not the retired iter-0 aggregate).
+        let r = push(&mut core, 0, 1, 1, &[7.0]);
+        let resp = r.iter().find(|(w, m)| *w == 0 && matches!(m, Message::PullResp { .. }));
+        let Some((_, Message::PullResp { iter, data, .. })) = resp else { panic!("no resp") };
+        assert_eq!(*iter, 1);
+        let mut out = vec![0.0f32; 1];
+        core.opts.comp.decompress(data, &mut out);
+        assert_eq!(out, vec![6.0]);
+    }
+
+    /// Corrupt push blocks are dropped at ingress, counted, and never panic
+    /// the shard.
+    #[test]
+    fn corrupt_push_is_rejected_not_fatal() {
+        let mut core = ServerCore::new(opts("topk", SyncMode::CompressedEf, 1));
+        let mut payload = Vec::new();
+        payload.extend_from_slice(&1u32.to_le_bytes());
+        payload.extend_from_slice(&500u32.to_le_bytes()); // index >= n
+        payload.extend_from_slice(&1.0f32.to_le_bytes());
+        let bad = crate::compress::Compressed {
+            scheme: crate::compress::SchemeId::TopK,
+            n: 4,
+            payload,
+        };
+        let replies =
+            core.handle(0, Message::Push { key: 0, iter: 0, worker: 0, data: bad });
+        assert!(replies.is_empty());
+        assert_eq!(core.stats.rejected, 1);
+        assert_eq!(core.stats.pushes, 0);
+        // A valid push afterwards still works.
+        let r = push(&mut core, 0, 0, 0, &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(r.len(), 1);
+        assert_eq!(core.stats.pushes, 1);
+    }
+
+    /// Regression (server panic on untrusted input): a rejected corrupt
+    /// push leaves the round short; the next iteration's rollover used to
+    /// assert the shard down. It must recover — count the short
+    /// iteration, discard the partial round, and keep serving.
+    #[test]
+    fn short_iteration_after_corrupt_push_recovers() {
+        let mut core = ServerCore::new(opts("identity", SyncMode::Full, 2));
+        // Worker 0's push for iter 0 is corrupt (wrong element count after
+        // the key is established) and gets rejected.
+        push(&mut core, 0, 0, 1, &[1.0, 2.0]);
+        let bad = crate::compress::Compressed {
+            scheme: crate::compress::SchemeId::Identity,
+            n: 1,
+            payload: vec![0u8; 4],
+        };
+        let r = core.handle(0, Message::Push { key: 0, iter: 0, worker: 0, data: bad });
+        assert!(r.is_empty());
+        assert_eq!(core.stats.rejected, 1);
+        // Iteration 0 is now permanently short (count == 1 of 2). Both
+        // workers move on to iteration 1 — this used to panic.
+        push(&mut core, 0, 1, 0, &[10.0, 20.0]);
+        let r = push(&mut core, 0, 1, 1, &[30.0, 40.0]);
+        assert!(!r.is_empty());
+        assert_eq!(core.stats.short_iters, 1);
+        // Iteration 1 completes and serves normally.
+        let r = core.handle(0, Message::Pull { key: 0, iter: 1, worker: 0 });
+        let Message::PullResp { data, .. } = &r[0].1 else { panic!("no resp: {r:?}") };
+        let mut out = vec![0.0f32; 2];
+        core.opts.comp.decompress(data, &mut out);
+        assert_eq!(out, vec![20.0, 30.0]);
+    }
+
+    /// Regression (server panic on untrusted input): a pull for a key with
+    /// no prior push used to hit `.expect("pull before any push")`. It must
+    /// queue and be served once the key appears.
+    #[test]
+    fn pull_before_any_push_queues_and_serves() {
+        let mut core = ServerCore::new(opts("identity", SyncMode::Full, 2));
+        let r = core.handle(1, Message::Pull { key: 7, iter: 0, worker: 1 });
+        assert!(r.is_empty(), "queued, not panicked");
+        assert_eq!(core.stats.early_pulls, 1);
+        push(&mut core, 7, 0, 0, &[2.0]);
+        let r = push(&mut core, 7, 0, 1, &[4.0]);
+        // ack + the queued pull's response
+        let resp = r.iter().find(|(w, m)| *w == 1 && matches!(m, Message::PullResp { .. }));
+        let Some((_, Message::PullResp { data, .. })) = resp else { panic!("no resp: {r:?}") };
+        let mut out = vec![0.0f32; 1];
+        core.opts.comp.decompress(data, &mut out);
+        assert_eq!(out, vec![3.0]);
+        // And the other worker's pull works as before.
+        let r = core.handle(0, Message::Pull { key: 7, iter: 0, worker: 0 });
+        assert!(matches!(r[0].1, Message::PullResp { .. }));
+    }
+
+    /// A pull whose iteration is older than the one-slot history is dropped
+    /// and counted, never an assert.
+    #[test]
+    fn ancient_pull_is_counted_not_fatal() {
+        let mut core = ServerCore::new(opts("identity", SyncMode::Full, 1));
+        for iter in 0..4u64 {
+            push(&mut core, 0, iter, 0, &[iter as f32]);
+        }
+        // Key is at iter 3; prev holds iter 2. A pull for iter 0 is stale
+        // and answered with the retired marker (served_with == 0, empty
+        // block) so the puller can fail loudly instead of hanging.
+        let r = core.handle(0, Message::Pull { key: 0, iter: 0, worker: 0 });
+        assert_eq!(r.len(), 1);
+        let Message::PullResp { iter, served_with, data, .. } = &r[0].1 else { panic!("{r:?}") };
+        assert_eq!((*iter, *served_with, data.n), (0, 0, 0));
+        assert_eq!(core.stats.stale_pulls, 1);
+        // Current iteration still serves.
+        let r = core.handle(0, Message::Pull { key: 0, iter: 3, worker: 0 });
+        assert!(matches!(r[0].1, Message::PullResp { .. }));
+    }
+
+    /// Handshake/reply messages leaking into a running server are ignored
+    /// and counted, never a panic.
+    #[test]
+    fn unexpected_messages_are_counted_not_fatal() {
+        let mut core = ServerCore::new(opts("identity", SyncMode::Full, 1));
+        let r = core.handle(0, Message::Hello { worker: 0, n_keys: 3, config: 0 });
+        assert!(r.is_empty());
+        let r = core.handle(0, Message::Ack { key: 0, iter: 0 });
+        assert!(r.is_empty());
+        assert_eq!(core.stats.unexpected, 2);
+        // Still fully functional afterwards.
+        push(&mut core, 0, 0, 0, &[5.0]);
+        let r = core.handle(0, Message::Pull { key: 0, iter: 0, worker: 0 });
+        assert!(matches!(r[0].1, Message::PullResp { .. }));
+    }
+
+    /// A stale push (older than the key's current iteration) is rejected,
+    /// not allowed to roll the key's clock backwards.
+    #[test]
+    fn backwards_push_is_rejected() {
+        let mut core = ServerCore::new(opts("identity", SyncMode::Full, 1));
+        push(&mut core, 0, 5, 0, &[1.0]);
+        let r = push(&mut core, 0, 2, 0, &[9.0]);
+        assert!(r.is_empty());
+        assert_eq!(core.stats.rejected, 1);
+        // The key still serves iteration 5.
+        let r = core.handle(0, Message::Pull { key: 0, iter: 5, worker: 0 });
+        assert!(matches!(r[0].1, Message::PullResp { .. }));
+    }
+
+    /// Replies route by the connection a message arrived on, never by the
+    /// wire-supplied `worker` field — a spoofed (or out-of-range) id
+    /// cannot steer replies to another worker or index the endpoint table
+    /// out of bounds.
+    #[test]
+    fn replies_route_by_connection_not_wire_field() {
+        let mut core = ServerCore::new(opts("identity", SyncMode::Full, 2));
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let data = core.opts.comp.compress(&[4.0, 6.0], &mut Ctx::new(&mut rng));
+        // Connection 0 claims to be worker 999: ack still goes to 0.
+        let r = core.handle(0, Message::Push { key: 0, iter: 0, worker: 999, data });
+        assert_eq!(r.len(), 1);
+        assert_eq!(r[0].0, 0);
+        assert!(matches!(r[0].1, Message::Ack { .. }));
+        // A queued pull is answered on the connection it arrived on, not
+        // at the spoofed id.
+        let r = core.handle(0, Message::Pull { key: 0, iter: 0, worker: 12345 });
+        assert!(r.is_empty()); // queued: iteration incomplete
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        let data = core.opts.comp.compress(&[1.0, 2.0], &mut Ctx::new(&mut rng));
+        let r = core.handle(1, Message::Push { key: 0, iter: 0, worker: 42, data });
+        assert!(r.iter().any(|(to, m)| *to == 1 && matches!(m, Message::Ack { .. })), "{r:?}");
+        assert!(
+            r.iter().any(|(to, m)| *to == 0 && matches!(m, Message::PullResp { .. })),
+            "{r:?}"
+        );
+    }
+
+    /// A client inventing keys cannot grow server memory without bound:
+    /// pushes past `max_keys` established keys are rejected, pull-created
+    /// placeholders have their own equal budget, and junk placeholders
+    /// never starve traffic for real (established) keys.
+    #[test]
+    fn hostile_key_flood_is_bounded() {
+        let mut o = opts("identity", SyncMode::Full, 1);
+        o.max_keys = 2;
+        let mut core = ServerCore::new(o);
+        push(&mut core, 0, 0, 0, &[1.0]);
+        push(&mut core, 1, 0, 0, &[2.0]);
+        // Established keys at cap: a push for a third key bounces.
+        let r = push(&mut core, 2, 0, 0, &[3.0]);
+        assert!(r.is_empty());
+        assert_eq!(core.stats.rejected, 1);
+        // Pull-created placeholders have their own equal budget…
+        assert!(core.handle(0, Message::Pull { key: 10, iter: 0, worker: 0 }).is_empty());
+        assert!(core.handle(0, Message::Pull { key: 11, iter: 0, worker: 0 }).is_empty());
+        // …beyond which junk-key pulls bounce with the retired marker…
+        let r = core.handle(0, Message::Pull { key: 12, iter: 0, worker: 0 });
+        assert_eq!(r.len(), 1);
+        assert!(matches!(r[0].1, Message::PullResp { served_with: 0, .. }), "{r:?}");
+        assert_eq!(core.stats.rejected, 2);
+        // …and junk placeholders never block established keys.
+        let r = core.handle(0, Message::Pull { key: 0, iter: 0, worker: 0 });
+        assert!(matches!(r[0].1, Message::PullResp { .. }));
+        let r = push(&mut core, 1, 1, 0, &[5.0]);
+        assert!(!r.is_empty());
+    }
+
+    /// Hostile pulls cannot poison a key's pending queue: future-iteration
+    /// pulls on established keys are rejected outright (honest traffic
+    /// can never produce them — per-connection FIFO processes a worker's
+    /// push before its pull), placeholder floods hit the pending cap, and
+    /// the queue fully drains at every completion.
+    #[test]
+    fn pull_flood_on_one_key_is_bounded() {
+        let mut core = ServerCore::new(opts("identity", SyncMode::Full, 1));
+        push(&mut core, 0, 0, 0, &[1.0]);
+        for _ in 0..5 {
+            // Far-future pulls are rejected — answered with the retired
+            // marker, never a silent drop.
+            let r = core.handle(0, Message::Pull { key: 0, iter: 99, worker: 0 });
+            assert_eq!(r.len(), 1);
+            let Message::PullResp { served_with, .. } = &r[0].1 else { panic!("{r:?}") };
+            assert_eq!(*served_with, 0);
+        }
+        assert_eq!(core.stats.rejected, 5);
+        // Placeholder floods: pending cap is 2 * n_workers = 2, so of five
+        // queue attempts three are dropped (marker-answered).
+        for i in 0..5u64 {
+            let r = core.handle(0, Message::Pull { key: 7, iter: i, worker: 0 });
+            if i < 2 {
+                assert!(r.is_empty(), "pull {i} should queue: {r:?}");
+            } else {
+                assert_eq!(r.len(), 1, "pull {i} should bounce with a marker: {r:?}");
+            }
+        }
+        assert_eq!(core.stats.stale_pulls, 3);
+        // Establishing key 7 at iteration 0 serves the matching queued
+        // pull and drains the junk one with a retired marker — nothing
+        // lingers, nothing is silently dropped.
+        let r = push(&mut core, 7, 0, 0, &[1.0]);
+        assert_eq!(r.len(), 3, "ack + served iter-0 pull + retired iter-1 marker: {r:?}");
+        assert!(r
+            .iter()
+            .any(|(_, m)| matches!(m, Message::PullResp { served_with: 1.., .. })));
+        assert!(r
+            .iter()
+            .any(|(_, m)| matches!(m, Message::PullResp { served_with: 0, .. })));
+        assert_eq!(core.stats.stale_pulls, 4);
+        // The original key still serves its real iteration.
+        let r = core.handle(0, Message::Pull { key: 0, iter: 0, worker: 0 });
+        assert!(matches!(r[0].1, Message::PullResp { .. }));
+    }
+
+    /// A *self-consistent* corrupt frame whose n disagrees with the key's
+    /// established size must be rejected at ingress, not resize or panic
+    /// the reducer.
+    #[test]
+    fn push_with_wrong_element_count_is_rejected() {
+        let mut core = ServerCore::new(opts("identity", SyncMode::Full, 2));
+        push(&mut core, 0, 0, 0, &[1.0, 2.0, 3.0, 4.0]); // key 0 is 4 elems
+        // Internally-consistent identity block with only 2 elements.
+        let bad = crate::compress::Compressed {
+            scheme: crate::compress::SchemeId::Identity,
+            n: 2,
+            payload: vec![0u8; 8],
+        };
+        let r = core.handle(1, Message::Push { key: 0, iter: 0, worker: 1, data: bad });
+        assert!(r.is_empty());
+        assert_eq!(core.stats.rejected, 1);
+        // The honest worker can still complete the iteration.
+        let r = push(&mut core, 0, 0, 1, &[5.0, 6.0, 7.0, 8.0]);
+        assert_eq!(r.len(), 1);
+        let r = core.handle(0, Message::Pull { key: 0, iter: 0, worker: 0 });
+        let Message::PullResp { data, .. } = &r[0].1 else { panic!() };
+        let mut out = vec![0.0f32; 4];
+        core.opts.comp.decompress(data, &mut out);
+        assert_eq!(out, vec![3.0, 4.0, 5.0, 6.0]);
+    }
+
+    /// The iteration deadline seals a round that has at least one push:
+    /// the partial aggregate (averaged over the pushes received) is served
+    /// with `served_with < n_workers`, and a full round still reports
+    /// `served_with == n_workers`.
+    #[test]
+    fn deadline_seals_partial_round_and_serves_degraded() {
+        let mut core = ServerCore::new(opts_deadline("identity", SyncMode::Full, 2));
+        push(&mut core, 0, 0, 0, &[2.0, 4.0]);
+        // Worker 1 pulls before its (lost) push completed the round: queued.
+        let r = core.handle(1, Message::Pull { key: 0, iter: 0, worker: 1 });
+        assert!(r.is_empty());
+        let replies = core.poll_deadlines(after_deadline());
+        assert_eq!(replies.len(), 1, "the queued pull must be answered: {replies:?}");
+        let (to, Message::PullResp { iter, served_with, data, .. }) = &replies[0] else {
+            panic!("not a PullResp: {replies:?}")
+        };
+        assert_eq!((*to, *iter, *served_with), (1, 0, 1));
+        let mut out = vec![0.0f32; 2];
+        core.opts.comp.decompress(data, &mut out);
+        // Averaged over the one contribution received, not n_workers.
+        assert_eq!(out, vec![2.0, 4.0]);
+        assert_eq!(core.stats.degraded_iters, 1);
+        assert_eq!(core.stats.short_iters, 0);
+        // A later pull for the sealed iteration is served the same bytes.
+        let r = core.handle(0, Message::Pull { key: 0, iter: 0, worker: 0 });
+        let Message::PullResp { served_with, .. } = &r[0].1 else { panic!("{r:?}") };
+        assert_eq!(*served_with, 1);
+    }
+
+    /// With no deadline configured, `poll_deadlines` is a strict no-op —
+    /// the incomplete round keeps waiting (strict BSP).
+    #[test]
+    fn deadline_unset_poll_is_noop() {
+        let mut core = ServerCore::new(opts("identity", SyncMode::Full, 2));
+        push(&mut core, 0, 0, 0, &[1.0]);
+        assert!(core.poll_deadlines(after_deadline()).is_empty());
+        assert_eq!(core.stats.degraded_iters, 0);
+        // The pull still queues rather than being served partial.
+        let r = core.handle(1, Message::Pull { key: 0, iter: 0, worker: 1 });
+        assert!(r.is_empty());
+    }
+
+    /// A round sealed by the deadline must not be counted *again* as a
+    /// short iteration when the key rolls over, and the next iteration
+    /// completes as a normal full round.
+    #[test]
+    fn deadline_does_not_double_count_short_iters() {
+        let mut core = ServerCore::new(opts_deadline("identity", SyncMode::Full, 2));
+        push(&mut core, 0, 0, 0, &[2.0]);
+        assert!(core.poll_deadlines(after_deadline()).is_empty()); // nothing queued
+        assert_eq!(core.stats.degraded_iters, 1);
+        // Both workers proceed to iteration 1; the rollover must not see a
+        // "short" round — the partial was served, not lost.
+        push(&mut core, 0, 1, 0, &[10.0]);
+        let r = push(&mut core, 0, 1, 1, &[20.0]);
+        assert!(!r.is_empty());
+        assert_eq!(core.stats.short_iters, 0);
+        assert_eq!(core.stats.degraded_iters, 1);
+        let r = core.handle(0, Message::Pull { key: 0, iter: 1, worker: 0 });
+        let Message::PullResp { served_with, data, .. } = &r[0].1 else { panic!("{r:?}") };
+        assert_eq!(*served_with, 2);
+        let mut out = vec![0.0f32; 1];
+        core.opts.comp.decompress(data, &mut out);
+        assert_eq!(out, vec![15.0]);
+    }
+
+    /// A push rejected before the deadline fired stays rejected: when the
+    /// same worker re-sends a now-valid push for the sealed round, it is
+    /// dropped as late (`late_pushes`) — the aggregate other workers may
+    /// already hold never changes retroactively.
+    #[test]
+    fn deadline_does_not_resurrect_rejected_push() {
+        let mut core = ServerCore::new(opts_deadline("identity", SyncMode::Full, 2));
+        push(&mut core, 0, 0, 0, &[6.0, 8.0]);
+        // Worker 1's push is corrupt (wrong element count) and rejected.
+        let bad = crate::compress::Compressed {
+            scheme: crate::compress::SchemeId::Identity,
+            n: 1,
+            payload: vec![0u8; 4],
+        };
+        let r = core.handle(1, Message::Push { key: 0, iter: 0, worker: 1, data: bad });
+        assert!(r.is_empty());
+        assert_eq!(core.stats.rejected, 1);
+        // Deadline fires: round sealed with worker 0's contribution only.
+        core.poll_deadlines(after_deadline());
+        assert_eq!(core.stats.degraded_iters, 1);
+        // Worker 1 retries with a valid push for the sealed iteration: no
+        // ack, counted late, aggregate untouched.
+        let r = push(&mut core, 0, 0, 1, &[100.0, 200.0]);
+        assert!(r.is_empty(), "late push must not be acked: {r:?}");
+        assert_eq!(core.stats.late_pushes, 1);
+        let r = core.handle(0, Message::Pull { key: 0, iter: 0, worker: 0 });
+        let Message::PullResp { served_with, data, .. } = &r[0].1 else { panic!("{r:?}") };
+        assert_eq!(*served_with, 1);
+        let mut out = vec![0.0f32; 2];
+        core.opts.comp.decompress(data, &mut out);
+        assert_eq!(out, vec![6.0, 8.0]);
+        // And a second sweep never re-seals the same round.
+        assert!(core.poll_deadlines(after_deadline()).is_empty());
+        assert_eq!(core.stats.degraded_iters, 1);
+    }
+
+    /// A degraded aggregate retires into the one-slot history like any
+    /// other: a slow worker pulling the sealed iteration after a rollover
+    /// still gets the partial aggregate with its `served_with` tag.
+    #[test]
+    fn degraded_aggregate_survives_rollover() {
+        let mut core = ServerCore::new(opts_deadline("identity", SyncMode::Full, 2));
+        push(&mut core, 0, 0, 0, &[4.0]);
+        core.poll_deadlines(after_deadline());
+        assert_eq!(core.stats.degraded_iters, 1);
+        // The fast worker moves on, rolling the key over.
+        push(&mut core, 0, 1, 0, &[10.0]);
+        let r = core.handle(1, Message::Pull { key: 0, iter: 0, worker: 1 });
+        let Message::PullResp { iter, served_with, data, .. } = &r[0].1 else {
+            panic!("{r:?}")
+        };
+        assert_eq!((*iter, *served_with), (0, 1));
+        let mut out = vec![0.0f32; 1];
+        core.opts.comp.decompress(data, &mut out);
+        assert_eq!(out, vec![4.0]);
+        assert_eq!(core.stats.short_iters, 0);
+        // The straggler whose push finally lands after the rollover is
+        // counted as a *late* push (the tolerated event), not rejected
+        // (the corruption counter) — and still changes nothing.
+        let r = push(&mut core, 0, 0, 1, &[99.0]);
+        assert!(r.is_empty());
+        assert_eq!(core.stats.late_pushes, 1);
+        assert_eq!(core.stats.rejected, 0);
+        let r = core.handle(1, Message::Pull { key: 0, iter: 0, worker: 1 });
+        let Message::PullResp { served_with, .. } = &r[0].1 else { panic!("{r:?}") };
+        assert_eq!(*served_with, 1);
+    }
+
+    /// The deadline never seals empty rounds or pull-created placeholders
+    /// (`early_pulls` keys with no dimension), and the placeholder budget
+    /// is unaffected by the sweep: the queued pull is still answered by
+    /// the establishing push, not by the timer.
+    #[test]
+    fn deadline_ignores_placeholders_and_empty_rounds() {
+        let mut o = opts_deadline("identity", SyncMode::Full, 2);
+        o.max_keys = 2;
+        let mut core = ServerCore::new(o);
+        // Pull for a key no push has established: a budgeted placeholder.
+        let r = core.handle(1, Message::Pull { key: 9, iter: 0, worker: 1 });
+        assert!(r.is_empty());
+        assert_eq!(core.stats.early_pulls, 1);
+        // The sweep must not seal (or panic on) the dimension-less
+        // placeholder, nor a fully-idle established key.
+        assert!(core.poll_deadlines(after_deadline()).is_empty());
+        assert_eq!(core.stats.degraded_iters, 0);
+        // The placeholder still works once pushes establish it.
+        push(&mut core, 9, 0, 0, &[1.0]);
+        let r = push(&mut core, 9, 0, 1, &[3.0]);
+        assert!(
+            r.iter().any(|(w, m)| *w == 1 && matches!(m, Message::PullResp { .. })),
+            "queued early pull unanswered: {r:?}"
+        );
+        // And the placeholder budget is still enforced after a sweep
+        // (over-budget pulls bounce with the retired marker).
+        assert!(core.handle(0, Message::Pull { key: 20, iter: 0, worker: 0 }).is_empty());
+        assert!(core.handle(0, Message::Pull { key: 21, iter: 0, worker: 0 }).is_empty());
+        let before = core.stats.rejected;
+        let r = core.handle(0, Message::Pull { key: 22, iter: 0, worker: 0 });
+        assert!(matches!(r[0].1, Message::PullResp { served_with: 0, .. }), "{r:?}");
+        assert_eq!(core.stats.rejected, before + 1, "placeholder budget must still cap");
+    }
+
+    /// A worker that stalls ~2 deadlines while the deadline advances the
+    /// key clock past it gets the retired marker (`served_with == 0`,
+    /// empty block) for its late pull — never a silent drop that would
+    /// hang it forever (strict BSP made this state unreachable; the
+    /// deadline does not).
+    #[test]
+    fn deadline_lagged_worker_gets_retired_marker() {
+        let mut core = ServerCore::new(opts_deadline("identity", SyncMode::Full, 2));
+        // Round 0 completes fully; worker 1 then stalls before pulling.
+        push(&mut core, 0, 0, 0, &[1.0]);
+        push(&mut core, 0, 0, 1, &[3.0]);
+        // Worker 0 pulls 0 and pushes 1; the deadline seals round 1
+        // degraded; worker 0 pulls 1 and pushes 2 — evicting round 0
+        // from the one-slot history.
+        let _ = core.handle(0, Message::Pull { key: 0, iter: 0, worker: 0 });
+        push(&mut core, 0, 1, 0, &[5.0]);
+        core.poll_deadlines(after_deadline());
+        let _ = core.handle(0, Message::Pull { key: 0, iter: 1, worker: 0 });
+        push(&mut core, 0, 2, 0, &[7.0]);
+        // Worker 1 finally asks for round 0 — two behind the clock.
+        let r = core.handle(1, Message::Pull { key: 0, iter: 0, worker: 1 });
+        assert_eq!(r.len(), 1);
+        let Message::PullResp { iter, served_with, data, .. } = &r[0].1 else {
+            panic!("{r:?}")
+        };
+        assert_eq!((*iter, *served_with, data.n), (0, 0, 0));
+        assert_eq!(core.stats.stale_pulls, 1);
+    }
+
+    /// A duplicate push from one *connection* for an open round must not
+    /// complete the round early with that worker double-counted — the
+    /// `served_with` tag would lie about how many workers the aggregate
+    /// holds. The connection index is the identity; the wire `worker`
+    /// field is untrusted.
+    #[test]
+    fn duplicate_push_from_same_connection_is_rejected() {
+        let mut core = ServerCore::new(opts("identity", SyncMode::Full, 2));
+        push(&mut core, 0, 0, 0, &[4.0]);
+        let r = push(&mut core, 0, 0, 0, &[4.0]);
+        assert!(r.is_empty(), "duplicate must not be acked: {r:?}");
+        assert_eq!(core.stats.rejected, 1);
+        assert_eq!(core.stats.pushes, 1);
+        // The honest peer still completes the round with the true mean
+        // over *distinct* contributors.
+        let r = push(&mut core, 0, 0, 1, &[8.0]);
+        assert!(!r.is_empty());
+        let r = core.handle(0, Message::Pull { key: 0, iter: 0, worker: 0 });
+        let Message::PullResp { served_with, data, .. } = &r[0].1 else { panic!("{r:?}") };
+        assert_eq!(*served_with, 2);
+        let mut out = vec![0.0f32; 1];
+        core.opts.comp.decompress(data, &mut out);
+        assert_eq!(out, vec![6.0]);
+    }
+
+    /// Race regression (found in review): a worker whose push for a round
+    /// was lost can have its *pull* for that round reach the server
+    /// before the surviving worker's push — the key is still one
+    /// iteration behind, and the old "future pull" rejection stranded
+    /// the worker forever (the deadline seal only answers *queued*
+    /// pulls). One-iteration-ahead pulls must queue; further ahead stays
+    /// rejected (honest lag is bounded by one even with losses).
+    #[test]
+    fn pull_ahead_of_lost_push_queues_and_deadline_serves_it() {
+        let mut core = ServerCore::new(opts_deadline("identity", SyncMode::Full, 2));
+        // Iteration 0 completes normally for both workers.
+        push(&mut core, 0, 0, 0, &[1.0]);
+        push(&mut core, 0, 0, 1, &[3.0]);
+        // Worker 1's push for iteration 1 is lost; its pull arrives while
+        // the key is still at iteration 0. It must queue, not be rejected.
+        let r = core.handle(1, Message::Pull { key: 0, iter: 1, worker: 1 });
+        assert!(r.is_empty());
+        assert_eq!(core.stats.rejected, 0);
+        // The surviving push arrives and the deadline seals the round:
+        // the queued one-ahead pull is answered.
+        push(&mut core, 0, 1, 0, &[10.0]);
+        let replies = core.poll_deadlines(after_deadline());
+        assert_eq!(replies.len(), 1, "queued pull unanswered: {replies:?}");
+        let (to, Message::PullResp { iter, served_with, data, .. }) = &replies[0] else {
+            panic!("not a PullResp: {replies:?}")
+        };
+        assert_eq!((*to, *iter, *served_with), (1, 1, 1));
+        let mut out = vec![0.0f32; 1];
+        core.opts.comp.decompress(data, &mut out);
+        assert_eq!(out, vec![10.0]);
+        // Beyond the one-iteration lag bound is still rejected — with a
+        // retired marker, never a silent drop.
+        let r = core.handle(1, Message::Pull { key: 0, iter: 5, worker: 1 });
+        assert_eq!(r.len(), 1);
+        assert!(matches!(r[0].1, Message::PullResp { served_with: 0, .. }), "{r:?}");
+        assert_eq!(core.stats.rejected, 1);
+    }
+
+    /// Deadline auto-tuning (`deadline_auto_margin`): below
+    /// [`AUTO_DEADLINE_MIN_ROUNDS`] full rounds no deadline is in force;
+    /// once enough are on record the shard derives p99 × margin (floored
+    /// at [`AUTO_DEADLINE_FLOOR`]), re-evaluated per sealed round, and a
+    /// partial round seals degraded under it.
+    #[test]
+    fn auto_deadline_derives_from_round_latency() {
+        let mut o = opts("identity", SyncMode::Full, 2);
+        o.deadline_auto_margin = 3.0;
+        let mut core = ServerCore::new(o);
+        assert!(core.current_deadline().is_none());
+        for iter in 0..AUTO_DEADLINE_MIN_ROUNDS {
+            push(&mut core, 0, iter, 0, &[1.0]);
+            // Below the warmup no sweep can fire, however late the clock.
+            if iter + 1 < AUTO_DEADLINE_MIN_ROUNDS {
+                assert!(core.poll_deadlines(after_deadline()).is_empty());
+            }
+            push(&mut core, 0, iter, 1, &[3.0]);
+        }
+        assert_eq!(core.stats.round_hist.count(), AUTO_DEADLINE_MIN_ROUNDS);
+        let derived = core.current_deadline().expect("auto deadline after warmup");
+        assert!(derived >= AUTO_DEADLINE_FLOOR, "floor not applied: {derived:?}");
+        // A partial round now seals degraded under the derived deadline.
+        let next = AUTO_DEADLINE_MIN_ROUNDS;
+        push(&mut core, 0, next, 0, &[5.0]);
+        assert!(core.poll_deadlines(after_deadline()).is_empty()); // no queued pull
+        assert_eq!(core.stats.degraded_iters, 1);
+        // Degraded rounds never feed the histogram back directly (they
+        // take exactly the deadline — self-referential)…
+        assert_eq!(core.stats.round_hist.count(), AUTO_DEADLINE_MIN_ROUNDS);
+        let r = core.handle(0, Message::Pull { key: 0, iter: next, worker: 0 });
+        let Message::PullResp { served_with, .. } = &r[0].1 else { panic!("{r:?}") };
+        assert_eq!(*served_with, 1);
+        // …but a straggler's *late push* for the sealed round reveals the
+        // round's true spread and is recorded, so a too-tight derived
+        // deadline can widen again instead of ratcheting degraded forever.
+        let r = push(&mut core, 0, next, 1, &[7.0]);
+        assert!(r.is_empty(), "late push must not be acked: {r:?}");
+        assert_eq!(core.stats.late_pushes, 1);
+        assert_eq!(
+            core.stats.round_hist.count(),
+            AUTO_DEADLINE_MIN_ROUNDS + 1,
+            "late-push spread must feed the histogram (anti-ratchet)"
+        );
+        assert!(core.current_deadline().is_some());
+        // One sample per degraded round: a retransmitting (or hostile)
+        // client re-sending the same late push must not record an
+        // ever-growing spread each time and drag the derived deadline up.
+        let r = push(&mut core, 0, next, 1, &[7.0]);
+        assert!(r.is_empty());
+        assert_eq!(core.stats.late_pushes, 2);
+        assert_eq!(
+            core.stats.round_hist.count(),
+            AUTO_DEADLINE_MIN_ROUNDS + 1,
+            "repeated late pushes must not re-record"
+        );
+    }
+
+    /// A static `iter_deadline` always wins over auto-tuning, and with
+    /// margin 0 nothing is ever derived.
+    #[test]
+    fn auto_deadline_precedence_and_off_switch() {
+        let mut o = opts_deadline("identity", SyncMode::Full, 2);
+        o.deadline_auto_margin = 100.0;
+        let static_d = o.iter_deadline.unwrap();
+        let mut core = ServerCore::new(o);
+        for iter in 0..2 * AUTO_DEADLINE_MIN_ROUNDS {
+            push(&mut core, 0, iter, 0, &[1.0]);
+            push(&mut core, 0, iter, 1, &[3.0]);
+        }
+        assert_eq!(core.current_deadline(), Some(static_d), "static deadline must win");
+        // margin 0: plain strict BSP, full rounds notwithstanding.
+        let mut core = ServerCore::new(opts("identity", SyncMode::Full, 2));
+        for iter in 0..2 * AUTO_DEADLINE_MIN_ROUNDS {
+            push(&mut core, 0, iter, 0, &[1.0]);
+            push(&mut core, 0, iter, 1, &[3.0]);
+        }
+        assert!(core.current_deadline().is_none());
+        assert!(core.poll_deadlines(after_deadline()).is_empty());
+    }
+
+    /// The round-latency histogram records full rounds on every key and
+    /// the stage seconds accumulate even on the synchronous path.
+    #[test]
+    fn stats_track_rounds_and_stage_seconds() {
+        let mut core = ServerCore::new(opts("identity", SyncMode::Full, 2));
+        for key in 0..3u64 {
+            push(&mut core, key, 0, 0, &[1.0, 2.0]);
+            push(&mut core, key, 0, 1, &[3.0, 4.0]);
+        }
+        assert_eq!(core.stats.round_hist.count(), 3);
+        assert_eq!(core.stats.decode_depth_peak, 1, "inline decodes never overlap");
+        assert_eq!(core.stats.encode_depth_peak, 1);
+        assert!(core.stats.ingress_s >= 0.0);
+        assert_eq!(core.jobs_in_flight(), 0);
+    }
+}

@@ -1,20 +1,43 @@
 //! Parameter server (paper §4.1.2): key-sharded gradient aggregation with
-//! two-way compression and server-side error feedback.
+//! two-way compression and server-side error feedback, run as a staged
+//! pipeline per shard.
 //!
 //! One [`Server`] owns a shard of the keyspace. Per key and iteration it
-//! collects one compressed push per worker, decompresses and averages them
+//! collects one compressed push per worker, decodes and averages them
 //! (`Δ_t = 1/n Σ δ_t,i [+ ẽ_t]`), re-compresses the aggregate (`p_t =
 //! C(Δ_t)`, the second "way"), and answers the workers' pulls. Exactly
 //! Algorithm 3/4's server side; Algorithm 1 falls out with the identity
 //! compressor.
 //!
-//! Shard assignment across multiple servers lives in [`ShardPlan`] and
-//! implements the paper's workload balancing (§4.2.4): keys that undergo
-//! compression carry extra CPU cost, so they are weighted heavier than
-//! bypassed (small) keys when balancing. Since the §4.2.1 pipeline, the
-//! unit of sharding is a *block* ([`crate::comm::BlockKey`]), not a whole
-//! tensor: a large tensor's blocks spread across shards, so its server-side
-//! decompress/aggregate/re-compress work runs on several shards at once.
+//! ## Module family
+//!
+//! * [`core`] — the round/rollover state machine ([`ServerCore`]): wire
+//!   validation, key budgets, dedup, seal decisions, the one-slot `prev`
+//!   history, deadline auto-tuning. Every decision runs on the shard's
+//!   single control thread, in message order.
+//! * [`stage`] — the staged executor: pure decode/encode kernels, the
+//!   per-(key, iter) encode seeds, and the [`StageEvent`] plumbing that
+//!   carries pool-job completions back to the control thread.
+//! * [`plan`] — [`ShardPlan`], key → shard assignment with the §4.2.4
+//!   workload balancing (blocks, cost-weighted).
+//! * [`stats`] — [`ServerStats`]: protocol counters, per-stage seconds,
+//!   queue-depth gauges, and the round-latency histogram.
+//!
+//! ## The shard stage pipeline (§4.2.1, server side)
+//!
+//! With `server.compress_threads > 0` a shard runs
+//! ingress → decode → reduce → seal → encode: the I/O loop only frames,
+//! validates and routes messages (*ingress*); each accepted push's
+//! decompression runs as a pool job (*decode*), so decoding worker i+1's
+//! push overlaps ingress of worker i+2's; the control thread sums decoded
+//! contributions in worker-index order at seal time (*reduce*), making
+//! the f32 bits independent of decode completion order; sealing (by count
+//! or deadline) enqueues the second-way compression on the pool
+//! (*encode*), so encoding key k overlaps reducing key k+1; completed
+//! `PullResp`s flow back through the loop (*egress*). With
+//! `compress_threads = 0` every stage runs inline — the synchronous
+//! reference implementation — and the two paths are **bit-identical** for
+//! the whole `compress::paper_suite()` (tested in [`stage`]).
 //!
 //! Incoming push payloads are untrusted wire data: the server validates
 //! every block against its scheme ([`crate::compress::validate_wire`]) and
@@ -37,634 +60,34 @@
 //! which would hand different workers different aggregates for the same
 //! iteration. With the deadline unset the server is bit-identical to the
 //! strict-BSP aggregator (no timer, no polling, no wire change beyond the
-//! constant `served_with == n_workers` tag).
+//! constant `served_with == n_workers` tag) — unless
+//! [`ServerOptions::deadline_auto_margin`] derives a deadline from the
+//! observed p99 full-round latency (re-evaluated per sealed round).
 
-use crate::comm::{BlockKey, CommError, Endpoint, Key, Message};
-use crate::compress::ef::EfState;
-use crate::compress::{Compressor, Ctx};
-use crate::configx::SyncMode;
-use crate::util::rng::Xoshiro256;
-use std::collections::HashMap;
+mod core;
+pub mod plan;
+pub mod stage;
+mod stats;
+
+pub use self::core::{
+    ServerCore, ServerOptions, AUTO_DEADLINE_FLOOR, AUTO_DEADLINE_MIN_ROUNDS,
+};
+pub use self::plan::ShardPlan;
+pub use self::stage::{seal_seed, EventSink, StageEvent};
+pub use self::stats::{LatencyHist, ServerStats, HIST_BUCKETS};
+
+use crate::comm::{CommError, Endpoint, Message};
+use crate::parallel::ThreadPool;
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-/// Server behaviour knobs.
-#[derive(Clone)]
-pub struct ServerOptions {
-    pub comp: Arc<dyn Compressor>,
-    pub sync: SyncMode,
-    /// Fused EF residual update (§4.2.2).
-    pub fused: bool,
-    pub n_workers: usize,
-    /// Intra-task threads for (de)compression (§4.2.1).
-    pub intra_threads: usize,
-    pub seed: u64,
-    /// Cap on distinct keys this shard will materialize state for
-    /// (0 = unlimited). The launchers set it to the partition size so a
-    /// client inventing keys cannot grow server memory without bound.
-    pub max_keys: usize,
-    /// Iteration deadline for degraded rounds (`server.iter_deadline_ms`):
-    /// a round with at least one push that stays incomplete this long is
-    /// sealed and served partial (`served_with < n_workers`). `None` =
-    /// strict BSP — a lost push stalls its iteration's pulls forever, but
-    /// behavior is bit-identical to the pre-deadline server.
-    pub iter_deadline: Option<Duration>,
-}
-
-struct KeyState {
-    iter: u64,
-    /// Canonical element count for this key, fixed by the first *push*
-    /// (`None` while the key has only seen pulls — a pull-before-push
-    /// queues rather than panicking the shard). Later pushes whose `n`
-    /// disagrees are rejected at ingress — a self-consistent corrupt frame
-    /// must not resize (or panic on) the accumulator.
-    dim: Option<usize>,
-    acc: Vec<f32>,
-    /// Connection indices that contributed to the current round, in
-    /// arrival order. The *connection* is the trusted identity (the wire
-    /// `worker` field is not), and deduplicating on it keeps a
-    /// retransmitting or hostile client from completing a round early
-    /// with one worker double-counted — which would also make the
-    /// `served_with` tag lie about how many workers the aggregate holds.
-    contributors: Vec<u32>,
-    /// When the current round's first push arrived — the iteration
-    /// deadline's clock. `None` while the round is empty or already
-    /// sealed.
-    round_started: Option<Instant>,
-    /// The sealed aggregate for `iter`, tagged with how many worker
-    /// contributions it holds (`served_with`: `n_workers` for a full BSP
-    /// round, fewer for a deadline-degraded one).
-    ready: Option<(u16, crate::compress::Compressed)>,
-    /// The previous iteration's aggregate. BSP lets a fast worker *push*
-    /// iteration i+1 (which rolls this key over) before a slow worker has
-    /// *pulled* iteration i — the slow pull must still be servable.
-    /// Workers never lag more than one iteration (they pull i before
-    /// pushing i+1), so one slot suffices.
-    ///
-    /// This invariant survives the block pipeline: keys are now per-block
-    /// and blocks of one iteration arrive out of order across *different*
-    /// keys, but each `KeyState` is keyed by one block, and every worker
-    /// still completes pull(key, i) before it sends push(key, i+1) — the
-    /// pipelined push phase starts only after the previous exchange's pull
-    /// phase fully drained, and both transports preserve per-endpoint FIFO
-    /// order. So per key the lag stays bounded by one iteration and the
-    /// one-slot rollover is still sufficient (tested in
-    /// `rust/tests/distributed.rs`).
-    ///
-    /// The *iteration deadline* is the one exception: it can seal rounds
-    /// without a stalled worker's push, so the clock may advance two or
-    /// more past a live-but-delayed worker. Such a worker's pull finds
-    /// neither `ready` nor `prev` and is answered with the retired
-    /// marker ([`retired_marker`], `served_with == 0`) so it fails
-    /// loudly instead of hanging on a reply that cannot come.
-    prev: Option<(u64, u16, crate::compress::Compressed)>,
-    /// Queued pulls as (iter, connection index) — the endpoint to answer
-    /// on, which is the server's ground truth for who is asking (the wire
-    /// `worker` field is untrusted).
-    pending: Vec<(u64, u32)>,
-}
-
-impl KeyState {
-    /// Empty state at `iter` — no dimension yet (a *placeholder* until
-    /// the first push establishes the element count).
-    fn fresh(iter: u64) -> KeyState {
-        KeyState {
-            iter,
-            dim: None,
-            acc: Vec::new(),
-            contributors: Vec::new(),
-            round_started: None,
-            ready: None,
-            prev: None,
-            pending: Vec::new(),
-        }
-    }
-}
-
-/// Statistics returned on shutdown.
-#[derive(Debug, Default, Clone, Copy)]
-pub struct ServerStats {
-    pub pushes: u64,
-    pub pulls: u64,
-    /// Corrupt push blocks dropped at ingress (wire-validation failures,
-    /// wrong element counts, pushes for already-retired iterations).
-    pub rejected: u64,
-    /// Iterations that rolled over with fewer than `n_workers` pushes —
-    /// a rejected corrupt push (or a dead worker) left the round short.
-    /// The shard recovers by discarding the partial accumulator instead
-    /// of asserting; each occurrence is counted here.
-    pub short_iters: u64,
-    /// Pulls dropped because their iteration was already retired past the
-    /// one-slot history (can only happen after a short iteration or a
-    /// hostile client; honest BSP workers never lag two iterations).
-    pub stale_pulls: u64,
-    /// Pulls that arrived before any push had established their key —
-    /// queued until the key appears (reordered cluster startup), where the
-    /// shard previously died on `.expect("pull before any push")`.
-    pub early_pulls: u64,
-    /// Messages a server should never receive (`Welcome`, `PullResp`,
-    /// mid-stream `Hello`, ...) — ignored and counted, never a panic.
-    pub unexpected: u64,
-    /// Rounds sealed by the iteration deadline with fewer than `n_workers`
-    /// contributions and served degraded (`served_with < n_workers`).
-    /// Disjoint from `short_iters`, which counts partial rounds that were
-    /// *discarded unserved* at rollover — a deadline-sealed round is never
-    /// double-counted there.
-    pub degraded_iters: u64,
-    /// Pushes that arrived for a round already sealed (completed normally
-    /// or by the deadline) — dropped and counted, never merged
-    /// retroactively into an aggregate other workers may have pulled.
-    pub late_pushes: u64,
-    pub decompress_s: f64,
-    pub compress_s: f64,
-}
-
-/// Reply for an unservable pull: a `PullResp` whose `served_with` is 0
-/// and whose block is empty. No real aggregate can have zero
-/// contributors, so the marker is unambiguous on the wire. It exists
-/// because the iteration deadline breaks strict BSP's guarantee that the
-/// key clock never advances two past a live worker: a worker delayed
-/// ~2 deadlines can ask for an iteration already evicted from the
-/// one-slot history, and silently dropping that pull would hang it
-/// forever — the marker lets it fail loudly instead.
-fn retired_marker(key: Key, iter: u64) -> Message {
-    Message::PullResp {
-        key,
-        iter,
-        served_with: 0,
-        data: crate::compress::Compressed {
-            scheme: crate::compress::SchemeId::Identity,
-            n: 0,
-            payload: Vec::new(),
-        },
-    }
-}
-
-/// The one canonical rendering of the counter set, shared by every
-/// shutdown line (`bytepsc server` stdout, `cluster::serve` stderr) so a
-/// new counter cannot be added to one surface and silently missed on the
-/// other — EXPERIMENTS.md's degraded-round recipe reads these lines.
-impl std::fmt::Display for ServerStats {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(
-            f,
-            "{} pushes | {} pulls | {} rejected | {} short iterations | \
-             {} degraded iterations | {} late pushes | {} stale pulls | \
-             {} early pulls | {} unexpected",
-            self.pushes,
-            self.pulls,
-            self.rejected,
-            self.short_iters,
-            self.degraded_iters,
-            self.late_pushes,
-            self.stale_pulls,
-            self.early_pulls,
-            self.unexpected
-        )
-    }
-}
-
-/// The server's synchronous core: feed it messages, collect replies.
-/// Separated from the I/O loop so tests can drive it deterministically.
-pub struct ServerCore {
-    opts: ServerOptions,
-    ef: EfState,
-    rng: Xoshiro256,
-    keys: HashMap<Key, KeyState>,
-    /// Keys whose dimension a push has established. Junk *placeholders*
-    /// (pull-created, dim `None`) are budgeted separately so a client
-    /// pulling made-up keys can never starve pushes for real keys.
-    established_keys: usize,
-    pub stats: ServerStats,
-}
-
-impl ServerCore {
-    pub fn new(opts: ServerOptions) -> Self {
-        let rng = Xoshiro256::seed_from_u64(opts.seed);
-        ServerCore {
-            ef: EfState::new(opts.fused),
-            rng,
-            keys: HashMap::new(),
-            established_keys: 0,
-            stats: ServerStats::default(),
-            opts,
-        }
-    }
-
-    /// Whether a push may establish one more key (the real keyspace is
-    /// bounded by the partition; anything past `max_keys` is hostile).
-    fn at_established_capacity(&self) -> bool {
-        self.opts.max_keys > 0 && self.established_keys >= self.opts.max_keys
-    }
-
-    /// Whether creating one more pull-created placeholder would exceed its
-    /// budget (equal to `max_keys`): total key state stays bounded even
-    /// against a client pulling arbitrary made-up keys.
-    fn at_placeholder_capacity(&self, key: Key) -> bool {
-        self.opts.max_keys > 0
-            && !self.keys.contains_key(&key)
-            && self.keys.len() - self.established_keys >= self.opts.max_keys
-    }
-
-    /// Handle one message from connection `from`; returns
-    /// `(connection index, reply)` pairs to send.
-    pub fn handle(&mut self, from: u32, msg: Message) -> Vec<(u32, Message)> {
-        match msg {
-            // Replies are addressed by `from` — the connection the message
-            // arrived on — never by the wire-supplied `worker` field. A
-            // client lying about (or botching) its id must not be able to
-            // steer replies to another worker or index the endpoint table
-            // out of bounds; the field is kept for diagnostics only.
-            Message::Push { key, iter, worker, data } => {
-                // Untrusted wire data: reject corrupt blocks instead of
-                // letting a bad index/length panic the aggregator. (The
-                // TCP transport already rejects these at frame decode;
-                // this also covers the in-process transport.)
-                if let Err(e) = crate::compress::validate_wire(&data) {
-                    eprintln!("server: rejecting corrupt push for key {key} from worker {worker}: {e}");
-                    self.stats.rejected += 1;
-                    return vec![];
-                }
-                // Every push targets (or establishes) an established key;
-                // placeholders don't consume this budget until a push
-                // gives them a dimension. Checked before touching the map
-                // so a rejected junk push cannot leave a placeholder
-                // behind either. (Hoisted: `st` below holds a &mut borrow
-                // of the key map.)
-                let at_established_cap = self.at_established_capacity();
-                if at_established_cap && !self.keys.contains_key(&key) {
-                    eprintln!(
-                        "server: rejecting push for unknown key {key} from worker {worker}: \
-                         shard is at its {}-key capacity",
-                        self.opts.max_keys
-                    );
-                    self.stats.rejected += 1;
-                    return vec![];
-                }
-                let st = self.keys.entry(key).or_insert_with(|| KeyState::fresh(iter));
-                match st.dim {
-                    // A self-consistent corrupt frame can still carry the
-                    // wrong element count for this key; reject it rather
-                    // than resize (or panic on) the accumulator.
-                    Some(d) if data.n != d => {
-                        eprintln!(
-                            "server: rejecting push for key {key} from worker {worker}: \
-                             n={} but the key has {d} elements",
-                            data.n
-                        );
-                        self.stats.rejected += 1;
-                        return vec![];
-                    }
-                    // First push fixes the key's element count. The state
-                    // may be a placeholder from an earlier queued pull, so
-                    // adopt the pusher's iteration clock too — and charge
-                    // the establishment budget now.
-                    None => {
-                        if at_established_cap {
-                            eprintln!(
-                                "server: rejecting push establishing key {key} from worker \
-                                 {worker}: shard is at its {}-key capacity",
-                                self.opts.max_keys
-                            );
-                            self.stats.rejected += 1;
-                            return vec![];
-                        }
-                        st.dim = Some(data.n);
-                        st.acc = vec![0.0; data.n];
-                        st.iter = iter;
-                        self.established_keys += 1;
-                    }
-                    _ => {}
-                }
-                if iter < st.iter {
-                    // A push for an iteration this key already retired.
-                    // If it targets the just-retired (one-slot history)
-                    // round, it is the honest straggler the degraded-round
-                    // protocol tolerates — its round was sealed and rolled
-                    // over before the push landed — and belongs in the
-                    // `late_pushes` telemetry, not the corruption counter.
-                    // Anything older is a hostile client or a straggler
-                    // beyond BSP's lag bound. Unusable either way; drop.
-                    if st.prev.as_ref().is_some_and(|(piter, _, _)| *piter == iter) {
-                        eprintln!(
-                            "server: dropping late push for key {key} iteration {iter} \
-                             from worker {worker}: the round was sealed and retired"
-                        );
-                        self.stats.late_pushes += 1;
-                    } else {
-                        eprintln!(
-                            "server: rejecting stale push for key {key} iteration {iter} \
-                             from worker {worker} (key is at {})",
-                            st.iter
-                        );
-                        self.stats.rejected += 1;
-                    }
-                    return vec![];
-                }
-                if st.iter != iter {
-                    // New iteration for this key: retire the sealed
-                    // aggregate (slow workers may still pull it) and reset
-                    // the accumulator. A short round — a rejected corrupt
-                    // push left `count` below n_workers and no deadline
-                    // sealed it — is recovered by discarding the partial
-                    // sum, never by asserting the shard down on untrusted
-                    // input. A deadline-sealed degraded round has
-                    // `ready.is_some()` and was already counted in
-                    // `degraded_iters`; it must not be double-counted as
-                    // short here.
-                    if !st.contributors.is_empty()
-                        && st.contributors.len() != self.opts.n_workers
-                        && st.ready.is_none()
-                    {
-                        eprintln!(
-                            "server: key {key} iteration {} was short ({}/{} pushes); \
-                             discarding the partial aggregate",
-                            st.iter,
-                            st.contributors.len(),
-                            self.opts.n_workers
-                        );
-                        self.stats.short_iters += 1;
-                    }
-                    if let Some((served, p)) = st.ready.take() {
-                        st.prev = Some((st.iter, served, p));
-                    }
-                    st.iter = iter;
-                    st.contributors.clear();
-                    st.round_started = None;
-                    st.acc.clear();
-                    st.acc.resize(data.n, 0.0);
-                } else if st.ready.is_some() {
-                    // The round for `iter` is already sealed — by a full
-                    // BSP completion (this is a duplicate push) or by the
-                    // iteration deadline (this is the late straggler the
-                    // degraded-round protocol tolerates). Either way the
-                    // aggregate may already be in other workers' hands:
-                    // merging retroactively would hand different workers
-                    // different bytes for the same iteration. Drop it,
-                    // counted — a rejected or late push is never
-                    // resurrected.
-                    eprintln!(
-                        "server: dropping late push for key {key} iteration {iter} from \
-                         worker {worker}: the round is already sealed"
-                    );
-                    self.stats.late_pushes += 1;
-                    return vec![];
-                }
-                if st.contributors.contains(&from) {
-                    // A second push from the same connection for an open
-                    // round — a retransmitting or hostile client. Counting
-                    // it would complete the round early with one worker
-                    // double-counted (and `served_with` lying about it);
-                    // the connection index is the trusted identity, never
-                    // the wire `worker` field.
-                    eprintln!(
-                        "server: rejecting duplicate push for key {key} iteration {iter} \
-                         from connection {from} (claims worker {worker})"
-                    );
-                    self.stats.rejected += 1;
-                    return vec![];
-                }
-                let t = Instant::now();
-                if st.contributors.is_empty() {
-                    // First push of the round starts the deadline clock.
-                    st.round_started = Some(t);
-                }
-                self.opts.comp.add_decompressed(&data, &mut st.acc);
-                self.stats.decompress_s += t.elapsed().as_secs_f64();
-                st.contributors.push(from);
-                self.stats.pushes += 1;
-                let complete = st.contributors.len() == self.opts.n_workers;
-                let mut replies = vec![(from, Message::Ack { key, iter })];
-                if complete {
-                    self.seal_round(key, &mut replies);
-                }
-                replies
-            }
-            Message::Pull { key, iter, worker } => {
-                self.stats.pulls += 1;
-                if self.at_placeholder_capacity(key) {
-                    eprintln!(
-                        "server: dropping pull for unknown key {key} from worker {worker}: \
-                         shard is at its placeholder capacity"
-                    );
-                    self.stats.rejected += 1;
-                    // Unservable-pull policy: always answer (see
-                    // retired_marker) — a dropped pull must never become
-                    // a silent hang on the puller's side.
-                    return vec![(from, retired_marker(key, iter))];
-                }
-                // A pull may precede any push for its key — a reordered
-                // startup, or a client probing unknown keys. Queue it (as
-                // a budgeted placeholder) until the key appears instead of
-                // panicking the shard.
-                let st = self.keys.entry(key).or_insert_with(|| KeyState::fresh(iter));
-                if st.dim.is_none() {
-                    self.stats.early_pulls += 1;
-                }
-                if st.dim.is_some() {
-                    if st.iter == iter {
-                        if let Some((served, p)) = &st.ready {
-                            return vec![(
-                                from,
-                                Message::PullResp {
-                                    key,
-                                    iter,
-                                    served_with: *served,
-                                    data: p.clone(),
-                                },
-                            )];
-                        }
-                    } else if let Some((piter, served, p)) = &st.prev {
-                        // A pull lagging one iteration behind a fast pusher.
-                        if *piter == iter {
-                            return vec![(
-                                from,
-                                Message::PullResp {
-                                    key,
-                                    iter,
-                                    served_with: *served,
-                                    data: p.clone(),
-                                },
-                            )];
-                        }
-                    }
-                    if iter < st.iter {
-                        // Older than the one-slot history: unservable.
-                        // Under strict BSP only a hostile client gets
-                        // here, but the iteration deadline can advance
-                        // the key clock past a live worker that stalls
-                        // for ~2 deadlines — answer with the retired
-                        // marker so it fails loudly instead of waiting
-                        // forever for a reply that cannot come.
-                        eprintln!(
-                            "server: retiring stale pull for key {key} iteration {iter} \
-                             from worker {worker} (key is at {})",
-                            st.iter
-                        );
-                        self.stats.stale_pulls += 1;
-                        return vec![(from, retired_marker(key, iter))];
-                    }
-                    if iter > st.iter.saturating_add(1) {
-                        // Impossible for honest traffic even with lost
-                        // pushes: a worker only advances to iteration i+1
-                        // after its pull for i completed, so its future
-                        // lag is bounded by one. Queueing beyond that
-                        // would let a flood of far-future pulls poison
-                        // the pending queue forever — reject instead.
-                        eprintln!(
-                            "server: rejecting future pull for key {key} iteration {iter} \
-                             from worker {worker} (key is at {})",
-                            st.iter
-                        );
-                        self.stats.rejected += 1;
-                        // Honest traffic cannot get here, but answer
-                        // anyway — a dropped pull must never become a
-                        // silent hang.
-                        return vec![(from, retired_marker(key, iter))];
-                    }
-                    // iter == st.iter with no sealed aggregate falls
-                    // through to the queue, as does iter == st.iter + 1:
-                    // the puller's own push for that round may have been
-                    // lost (per-connection FIFO no longer implies the
-                    // key's clock reached `iter` once pushes can be
-                    // dropped), and rejecting it would strand the worker
-                    // forever — the deadline seal serves the queue.
-                }
-                // Honest traffic queues at most one pull per worker per
-                // key; anything past a small multiple is a flood (pulls
-                // for iterations that will never be served) — drop it
-                // rather than grow the queue without bound.
-                if st.pending.len() >= 2 * self.opts.n_workers.max(1) {
-                    eprintln!(
-                        "server: dropping pull for key {key} iteration {iter} from \
-                         worker {worker}: pending queue full"
-                    );
-                    self.stats.stale_pulls += 1;
-                    return vec![(from, retired_marker(key, iter))];
-                }
-                st.pending.push((iter, from));
-                vec![]
-            }
-            Message::Shutdown => vec![],
-            // Hello/Welcome/PullResp/Ack have no business arriving at a
-            // running server; any client can send them, so they must never
-            // panic the shard — ignore and count.
-            other => {
-                let tag = match other {
-                    Message::Hello { .. } => "Hello",
-                    Message::Welcome { .. } => "Welcome",
-                    Message::PullResp { .. } => "PullResp",
-                    Message::Ack { .. } => "Ack",
-                    _ => "unknown",
-                };
-                eprintln!("server: ignoring unexpected {tag} message from worker {from}");
-                self.stats.unexpected += 1;
-                vec![]
-            }
-        }
-    }
-
-    /// Seal the current round of `key` with the contributions present:
-    /// average over the pushes actually received, run the second-way
-    /// compression, stash the aggregate (tagged with its `served_with`
-    /// count) and answer every matching queued pull. Shared by normal BSP
-    /// completion (`count == n_workers`) and the iteration deadline
-    /// (`count < n_workers`, a degraded round). For a full round the
-    /// averaging divisor equals `n_workers`, so the strict-BSP path is
-    /// bit-identical to the pre-deadline server.
-    fn seal_round(&mut self, key: Key, replies: &mut Vec<(u32, Message)>) {
-        let st = self.keys.get_mut(&key).expect("sealing an unknown key");
-        debug_assert!(st.ready.is_none(), "sealing an already-sealed round");
-        debug_assert!(!st.contributors.is_empty(), "sealing an empty round");
-        let count = st.contributors.len();
-        let served = count.min(u16::MAX as usize) as u16;
-        if count < self.opts.n_workers {
-            eprintln!(
-                "server: iteration deadline — serving key {key} iteration {} degraded \
-                 ({}/{} pushes)",
-                st.iter, count, self.opts.n_workers
-            );
-            self.stats.degraded_iters += 1;
-        }
-        let inv = 1.0 / count as f32;
-        for a in &mut st.acc {
-            *a *= inv;
-        }
-        let iter = st.iter;
-        let t = Instant::now();
-        let acc = std::mem::take(&mut st.acc);
-        let p = match self.opts.sync {
-            SyncMode::CompressedEf => self.ef.compress_owned(
-                key,
-                acc,
-                self.opts.comp.as_ref(),
-                &mut Ctx::with_threads(&mut self.rng, self.opts.intra_threads),
-            ),
-            _ => self
-                .opts
-                .comp
-                .compress(&acc, &mut Ctx::with_threads(&mut self.rng, self.opts.intra_threads)),
-        };
-        self.stats.compress_s += t.elapsed().as_secs_f64();
-        st.ready = Some((served, p.clone()));
-        st.round_started = None;
-        // The queue fully drains at every seal: matching pulls are served,
-        // everything else (short-iteration leftovers, placeholder-era
-        // junk) is unservable and dropped — nothing hostile can sit in
-        // `pending` displacing honest pulls forever.
-        let pending: Vec<(u64, u32)> = std::mem::take(&mut st.pending);
-        for (piter, w) in pending {
-            if piter == iter {
-                replies.push((
-                    w,
-                    Message::PullResp { key, iter, served_with: served, data: p.clone() },
-                ));
-            } else {
-                eprintln!(
-                    "server: retiring unservable queued pull for key {key} \
-                     iteration {piter} from worker {w} (key is at {iter})"
-                );
-                self.stats.stale_pulls += 1;
-                replies.push((w, retired_marker(key, piter)));
-            }
-        }
-    }
-
-    /// Iteration-deadline sweep: seal every round that has at least one
-    /// push, has not completed, and saw its first push at least
-    /// [`ServerOptions::iter_deadline`] ago — serving pulls a *partial*
-    /// aggregate marked `served_with < n_workers` instead of stalling
-    /// every worker forever on a lost or rejected push. Returns the
-    /// replies to send (queued pulls for the sealed iterations). No-op
-    /// when the deadline is unset.
-    ///
-    /// `now` is an explicit argument so tests can drive the clock
-    /// deterministically; the I/O loop passes `Instant::now()`.
-    pub fn poll_deadlines(&mut self, now: Instant) -> Vec<(u32, Message)> {
-        let Some(deadline) = self.opts.iter_deadline else {
-            return Vec::new();
-        };
-        let mut due: Vec<Key> = self
-            .keys
-            .iter()
-            .filter(|(_, st)| {
-                !st.contributors.is_empty()
-                    && st.ready.is_none()
-                    && st
-                        .round_started
-                        .is_some_and(|t0| now.saturating_duration_since(t0) >= deadline)
-            })
-            .map(|(&k, _)| k)
-            .collect();
-        // Deterministic seal order (HashMap iteration order is not).
-        due.sort_unstable();
-        let mut replies = Vec::new();
-        for key in due {
-            self.seal_round(key, &mut replies);
-        }
-        replies
-    }
+/// Everything the I/O loop multiplexes onto one channel: worker messages
+/// from the per-endpoint reader threads, and stage-job completions from
+/// the staged executor's sink.
+enum LoopEvent {
+    Msg(u32, Message),
+    Stage(StageEvent),
 }
 
 /// A running server thread serving a set of worker endpoints.
@@ -674,15 +97,30 @@ pub struct Server {
 
 impl Server {
     /// Spawn the I/O loop: a receiver thread per worker endpoint feeding
-    /// the single aggregator (the paper's servers are single-threaded per
-    /// shard too; parallelism comes from having many servers/shards).
+    /// the single control thread. With `opts.compress_threads > 0` the
+    /// shard builds its own decode/encode pool (the multi-process cluster
+    /// shape: one shard per OS process owns its CPUs); `0` runs every
+    /// stage inline — the synchronous reference.
     pub fn spawn<E: Endpoint + Sync + 'static>(opts: ServerOptions, endpoints: Vec<E>) -> Server {
+        Self::spawn_with_pool(opts, endpoints, None)
+    }
+
+    /// Spawn with an explicit shared pool: the in-process fabric passes
+    /// one pool to every shard so co-located shards share the machine's
+    /// compression CPUs instead of oversubscribing them
+    /// (`engine::CommFabric`). `None` + `compress_threads > 0` builds a
+    /// private pool; `None` + `0` is the synchronous path.
+    pub fn spawn_with_pool<E: Endpoint + Sync + 'static>(
+        opts: ServerOptions,
+        endpoints: Vec<E>,
+        shared_pool: Option<Arc<ThreadPool>>,
+    ) -> Server {
         let n = endpoints.len();
         let handle = std::thread::Builder::new()
             .name("bytepsc-server".into())
             .spawn(move || {
                 let endpoints: Vec<Arc<E>> = endpoints.into_iter().map(Arc::new).collect();
-                let (tx, rx) = std::sync::mpsc::channel::<(u32, Message)>();
+                let (tx, rx) = std::sync::mpsc::channel::<LoopEvent>();
                 let mut recv_threads = Vec::new();
                 for (i, ep) in endpoints.iter().enumerate() {
                     let ep = Arc::clone(ep);
@@ -690,7 +128,7 @@ impl Server {
                     recv_threads.push(std::thread::spawn(move || loop {
                         match ep.recv() {
                             Ok(Message::Shutdown) => {
-                                let _ = tx.send((i as u32, Message::Shutdown));
+                                let _ = tx.send(LoopEvent::Msg(i as u32, Message::Shutdown));
                                 break;
                             }
                             // A corrupt frame is recoverable: recv consumed
@@ -701,45 +139,65 @@ impl Server {
                                 eprintln!("server: dropping corrupt frame from worker {i}: {e}");
                             }
                             Err(_) => {
-                                let _ = tx.send((i as u32, Message::Shutdown));
+                                let _ = tx.send(LoopEvent::Msg(i as u32, Message::Shutdown));
                                 break;
                             }
                             Ok(m) => {
-                                if tx.send((i as u32, m)).is_err() {
+                                if tx.send(LoopEvent::Msg(i as u32, m)).is_err() {
                                     break;
                                 }
                             }
                         }
                     }));
                 }
+                let staged = opts.compress_threads > 0 || shared_pool.is_some();
+                let mut core = if staged {
+                    let pool = shared_pool
+                        .unwrap_or_else(|| Arc::new(ThreadPool::new(opts.compress_threads)));
+                    let sink_tx = tx.clone();
+                    let sink: EventSink = Arc::new(move |ev| {
+                        let _ = sink_tx.send(LoopEvent::Stage(ev));
+                    });
+                    ServerCore::new_staged(opts, pool, sink)
+                } else {
+                    ServerCore::new(opts)
+                };
                 drop(tx);
-                let mut core = ServerCore::new(opts);
-                // With an iteration deadline the aggregator wakes at a
+                // With a deadline in force the control thread wakes at a
                 // fraction of it to sweep for overdue rounds; without one
                 // it blocks indefinitely — zero polling overhead, exactly
-                // the strict-BSP loop.
-                let tick = core.opts.iter_deadline.map(|d| (d / 4).max(Duration::from_millis(1)));
+                // the strict-BSP loop. Re-evaluated each pass because
+                // auto-tuning can arm a deadline mid-run.
                 let mut last_poll = Instant::now();
                 let mut live = n;
                 while live > 0 {
+                    let tick = core
+                        .current_deadline()
+                        .map(|d| (d / 4).max(Duration::from_millis(1)));
                     let received = match tick {
                         None => match rx.recv() {
-                            Ok(m) => Some(m),
+                            Ok(ev) => Some(ev),
                             Err(_) => break,
                         },
                         Some(t) => match rx.recv_timeout(t) {
-                            Ok(m) => Some(m),
+                            Ok(ev) => Some(ev),
                             Err(std::sync::mpsc::RecvTimeoutError::Timeout) => None,
                             Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break,
                         },
                     };
                     let mut replies = Vec::new();
-                    if let Some((from, msg)) = received {
-                        if matches!(msg, Message::Shutdown) {
-                            live -= 1;
-                        } else {
-                            replies = core.handle(from, msg);
+                    match received {
+                        Some(LoopEvent::Msg(from, msg)) => {
+                            if matches!(msg, Message::Shutdown) {
+                                live -= 1;
+                            } else {
+                                replies = core.handle(from, msg);
+                            }
                         }
+                        Some(LoopEvent::Stage(ev)) => {
+                            replies = core.on_event(ev);
+                        }
+                        None => {}
                     }
                     if let Some(t) = tick {
                         // Sweep on idle ticks, and at most once per tick
@@ -762,6 +220,28 @@ impl Server {
                         }
                     }
                 }
+                // Drain in-flight stage jobs so the final stats (stage
+                // seconds, queue peaks) are complete; straggler replies go
+                // out best-effort (the workers may already be gone).
+                while core.jobs_in_flight() > 0 {
+                    match rx.recv_timeout(Duration::from_secs(10)) {
+                        Ok(LoopEvent::Stage(ev)) => {
+                            for (to, reply) in core.on_event(ev) {
+                                if let Some(ep) = endpoints.get(to as usize) {
+                                    let _ = ep.send(reply);
+                                }
+                            }
+                        }
+                        Ok(LoopEvent::Msg(..)) => {}
+                        Err(_) => {
+                            eprintln!(
+                                "server: {} stage job(s) never reported back on shutdown",
+                                core.jobs_in_flight()
+                            );
+                            break;
+                        }
+                    }
+                }
                 for t in recv_threads {
                     let _ = t.join();
                 }
@@ -777,153 +257,12 @@ impl Server {
     }
 }
 
-/// Key → server assignment with workload balancing (§4.2.4).
-///
-/// Since the block pipeline, assignment is keyed by arbitrary (packed)
-/// block keys rather than dense tensor indices: use [`balanced_keyed`] /
-/// [`round_robin_keyed`] for block plans. The dense-index constructors
-/// remain for whole-tensor plans (a tensor id *is* its block-0 key).
-///
-/// [`balanced_keyed`]: ShardPlan::balanced_keyed
-/// [`round_robin_keyed`]: ShardPlan::round_robin_keyed
-#[derive(Clone, Debug)]
-pub struct ShardPlan {
-    assignment: HashMap<Key, usize>,
-    servers: usize,
-}
-
-impl ShardPlan {
-    /// Greedy least-loaded assignment over dense tensor-id keys
-    /// `0..costs.len()`. `cost(key)` should reflect server CPU work:
-    /// compressed keys cost `numel × compress_factor`, bypassed keys just
-    /// `numel` (decompress-free memcpy aggregation).
-    pub fn balanced(costs: &[f64], servers: usize) -> ShardPlan {
-        let items: Vec<(Key, f64)> =
-            costs.iter().enumerate().map(|(k, &c)| (k as Key, c)).collect();
-        Self::balanced_keyed(&items, servers)
-    }
-
-    /// Greedy least-loaded assignment over explicit `(key, cost)` pairs —
-    /// the pipeline's per-block plan. Deterministic: ties in cost break by
-    /// key, ties in load by server index.
-    pub fn balanced_keyed(items: &[(Key, f64)], servers: usize) -> ShardPlan {
-        assert!(servers >= 1);
-        let mut order: Vec<usize> = (0..items.len()).collect();
-        order.sort_by(|a, b| {
-            items[*b]
-                .1
-                .partial_cmp(&items[*a].1)
-                .unwrap()
-                .then_with(|| items[*a].0.cmp(&items[*b].0))
-        });
-        let mut load = vec![0.0f64; servers];
-        let mut assignment = HashMap::with_capacity(items.len());
-        for i in order {
-            let (key, cost) = items[i];
-            let s = (0..servers).min_by(|a, b| load[*a].partial_cmp(&load[*b]).unwrap()).unwrap();
-            assignment.insert(key, s);
-            load[s] += cost;
-        }
-        ShardPlan { assignment, servers }
-    }
-
-    /// Naive round-robin over dense tensor-id keys (the ablation's "no
-    /// workload balance" arm).
-    pub fn round_robin(keys: usize, servers: usize) -> ShardPlan {
-        let keys: Vec<Key> = (0..keys as u64).collect();
-        Self::round_robin_keyed(&keys, servers)
-    }
-
-    /// Round-robin over explicit keys, in the order given.
-    pub fn round_robin_keyed(keys: &[Key], servers: usize) -> ShardPlan {
-        assert!(servers >= 1);
-        let assignment = keys.iter().enumerate().map(|(i, &k)| (k, i % servers)).collect();
-        ShardPlan { assignment, servers }
-    }
-
-    /// Rebuild a plan from explicit `(key, server)` pairs — the form the
-    /// cluster handshake ships in [`crate::comm::Message::Welcome`].
-    /// Assignments pointing past `servers` are rejected (untrusted input).
-    pub fn from_assignments(entries: &[(Key, u32)], servers: usize) -> Result<ShardPlan, String> {
-        if servers == 0 {
-            return Err("shard plan needs at least one server".into());
-        }
-        let mut assignment = HashMap::with_capacity(entries.len());
-        for &(key, s) in entries {
-            if s as usize >= servers {
-                return Err(format!("key {key} assigned to server {s} of {servers}"));
-            }
-            if assignment.insert(key, s as usize).is_some() {
-                return Err(format!("key {key} assigned twice"));
-            }
-        }
-        Ok(ShardPlan { assignment, servers })
-    }
-
-    /// Export the plan as `(key, server)` pairs, sorted by key so two
-    /// plans can be compared structurally (workers cross-check that every
-    /// server shard handed them the same plan).
-    pub fn assignments(&self) -> Vec<(Key, u32)> {
-        let mut out: Vec<(Key, u32)> =
-            self.assignment.iter().map(|(&k, &s)| (k, s as u32)).collect();
-        out.sort_unstable_by_key(|&(k, _)| k);
-        out
-    }
-
-    /// Number of servers this plan shards across.
-    pub fn servers(&self) -> usize {
-        self.servers
-    }
-
-    /// Number of keys in the plan.
-    pub fn len(&self) -> usize {
-        self.assignment.len()
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.assignment.is_empty()
-    }
-
-    /// Whether `key` has an assignment (cluster workers verify the plan
-    /// they received covers their whole partition before trusting it).
-    pub fn contains(&self, key: Key) -> bool {
-        self.assignment.contains_key(&key)
-    }
-
-    pub fn server_of(&self, key: Key) -> usize {
-        *self.assignment.get(&key).unwrap_or_else(|| {
-            let bk = BlockKey::unpack(key);
-            panic!("key {key} (tensor {}, block {}) not in the shard plan", bk.tensor, bk.block)
-        })
-    }
-
-    /// Max/mean load ratio (1.0 = perfectly balanced), with per-key costs
-    /// supplied by `cost_of`.
-    pub fn imbalance_by<F: Fn(Key) -> f64>(&self, cost_of: F) -> f64 {
-        let mut load = vec![0.0f64; self.servers];
-        for (&k, &s) in &self.assignment {
-            load[s] += cost_of(k);
-        }
-        let max = load.iter().cloned().fold(0.0f64, f64::max);
-        let mean = load.iter().sum::<f64>() / self.servers.max(1) as f64;
-        if mean == 0.0 {
-            1.0
-        } else {
-            max / mean
-        }
-    }
-
-    /// Max/mean load ratio for dense tensor-id plans (`key` indexes
-    /// `costs`).
-    pub fn imbalance(&self, costs: &[f64]) -> f64 {
-        self.imbalance_by(|k| costs[k as usize])
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::compress::by_name;
+    use crate::compress::{by_name, Ctx};
+    use crate::configx::SyncMode;
+    use crate::util::rng::Xoshiro256;
 
     fn opts(scheme: &str, sync: SyncMode, workers: usize) -> ServerOptions {
         ServerOptions {
@@ -935,155 +274,14 @@ mod tests {
             seed: 7,
             max_keys: 0,
             iter_deadline: None,
+            compress_threads: 0,
+            deadline_auto_margin: 0.0,
         }
     }
 
-    /// Same, with an iteration deadline. Tests drive `poll_deadlines`
-    /// with explicit clocks, so the duration's magnitude is irrelevant.
-    fn opts_deadline(scheme: &str, sync: SyncMode, workers: usize) -> ServerOptions {
-        ServerOptions {
-            iter_deadline: Some(std::time::Duration::from_millis(50)),
-            ..opts(scheme, sync, workers)
-        }
-    }
-
-    /// A clock strictly past every configured test deadline.
-    fn after_deadline() -> Instant {
-        Instant::now() + std::time::Duration::from_secs(3600)
-    }
-
-    fn push(core: &mut ServerCore, key: Key, iter: u64, worker: u32, g: &[f32]) -> Vec<(u32, Message)> {
-        let mut rng = Xoshiro256::seed_from_u64(worker as u64 + 100);
-        let data = core.opts.comp.compress(g, &mut Ctx::new(&mut rng));
-        core.handle(worker, Message::Push { key, iter, worker, data })
-    }
-
-    #[test]
-    fn aggregates_identity_to_exact_mean() {
-        let mut core = ServerCore::new(opts("identity", SyncMode::Full, 2));
-        let r1 = push(&mut core, 0, 0, 0, &[1.0, 2.0]);
-        assert_eq!(r1.len(), 1); // just the ack
-        let r2 = push(&mut core, 0, 0, 1, &[3.0, 6.0]);
-        assert_eq!(r2.len(), 1);
-        // Now pull
-        let r = core.handle(0, Message::Pull { key: 0, iter: 0, worker: 0 });
-        let Message::PullResp { data, .. } = &r[0].1 else { panic!() };
-        let mut out = vec![0.0f32; 2];
-        core.opts.comp.decompress(data, &mut out);
-        assert_eq!(out, vec![2.0, 4.0]);
-    }
-
-    #[test]
-    fn pull_before_complete_is_queued() {
-        let mut core = ServerCore::new(opts("identity", SyncMode::Full, 2));
-        push(&mut core, 5, 0, 0, &[1.0]);
-        let r = core.handle(1, Message::Pull { key: 5, iter: 0, worker: 1 });
-        assert!(r.is_empty()); // queued
-        let r = push(&mut core, 5, 0, 1, &[3.0]);
-        // ack + the queued pull's response
-        assert_eq!(r.len(), 2);
-        assert!(matches!(r[1].1, Message::PullResp { .. }));
-        assert_eq!(r[1].0, 1);
-    }
-
-    #[test]
-    fn iterations_reset_accumulator() {
-        let mut core = ServerCore::new(opts("identity", SyncMode::Full, 1));
-        push(&mut core, 0, 0, 0, &[10.0]);
-        push(&mut core, 0, 1, 0, &[2.0]);
-        let r = core.handle(0, Message::Pull { key: 0, iter: 1, worker: 0 });
-        let Message::PullResp { data, .. } = &r[0].1 else { panic!() };
-        let mut out = vec![0.0f32; 1];
-        core.opts.comp.decompress(data, &mut out);
-        assert_eq!(out, vec![2.0]); // not 12.0
-    }
-
-    #[test]
-    fn server_ef_residual_accumulates_under_topk() {
-        // Two workers with different dominant coordinates: the server's
-        // second-way top-k can keep only one of them per round; ẽ must
-        // carry the other forward and flush it on a later round
-        // (Alg. 4's server side). Uses dim=8 so topk(0.25) keeps 2 of 8 —
-        // workers' spikes at idx 0 and idx 1, aggregate keeps both unless
-        // the residual game forces deferral; use k=1 via dim=4.
-        let mut core = ServerCore::new(opts("topk", SyncMode::CompressedEf, 2));
-        let ga = vec![1.0f32, 0.0, 0.0, 0.0]; // worker 0's spike
-        let gb = vec![0.0f32, 0.9, 0.0, 0.0]; // worker 1's spike
-        let mut seen_idx1 = false;
-        for iter in 0..10u64 {
-            push(&mut core, 0, iter, 0, &ga);
-            push(&mut core, 0, iter, 1, &gb);
-            let r = core.handle(0, Message::Pull { key: 0, iter, worker: 0 });
-            let Message::PullResp { data, .. } = &r[0].1 else { panic!() };
-            let mut p = vec![0.0f32; 4];
-            core.opts.comp.decompress(data, &mut p);
-            if iter == 0 {
-                // Round 0: Δ = [0.5, 0.45, 0, 0]; top-1 keeps idx 0 only.
-                assert_eq!(p, vec![0.5, 0.0, 0.0, 0.0]);
-            }
-            if p[1] > 0.0 {
-                seen_idx1 = true;
-            }
-        }
-        // Round 1: Δ = [0.5, 0.45 + 0.45(ẽ), 0, 0] → idx 1 wins and flushes.
-        assert!(seen_idx1, "server EF never flushed the deferred coordinate");
-    }
-
-    /// Regression (deadlock found in CI): a fast worker may push iteration
-    /// i+1 — rolling the key over — before a slow worker pulls iteration i.
-    /// The retired aggregate must still be servable.
-    #[test]
-    fn late_pull_after_rollover_is_served() {
-        let mut core = ServerCore::new(opts("identity", SyncMode::Full, 2));
-        push(&mut core, 0, 0, 0, &[2.0]);
-        push(&mut core, 0, 0, 1, &[4.0]); // iter 0 completes: mean = 3.0
-        // Fast worker 0 pulls iter 0 and immediately pushes iter 1.
-        let r = core.handle(0, Message::Pull { key: 0, iter: 0, worker: 0 });
-        assert!(matches!(r[0].1, Message::PullResp { .. }));
-        push(&mut core, 0, 1, 0, &[10.0]);
-        // Slow worker 1 now pulls iter 0 — must be served from the retired
-        // slot, not panic or hang.
-        let r = core.handle(1, Message::Pull { key: 0, iter: 0, worker: 1 });
-        assert_eq!(r.len(), 1);
-        let Message::PullResp { iter, data, .. } = &r[0].1 else { panic!() };
-        assert_eq!(*iter, 0);
-        let mut out = vec![0.0f32; 1];
-        core.opts.comp.decompress(data, &mut out);
-        assert_eq!(out, vec![3.0]);
-        // And worker 1 proceeding to iter 1 still works.
-        push(&mut core, 0, 1, 1, &[20.0]);
-        let r = core.handle(1, Message::Pull { key: 0, iter: 1, worker: 1 });
-        let Message::PullResp { data, .. } = &r[0].1 else { panic!() };
-        let mut out = vec![0.0f32; 1];
-        core.opts.comp.decompress(data, &mut out);
-        assert_eq!(out, vec![15.0]);
-    }
-
-    /// A pull that arrives before its iteration completes, while a previous
-    /// iteration is retired, must queue (not be served stale data).
-    #[test]
-    fn pending_pull_for_future_iter_waits() {
-        let mut core = ServerCore::new(opts("identity", SyncMode::Full, 2));
-        push(&mut core, 0, 0, 0, &[1.0]);
-        push(&mut core, 0, 0, 1, &[3.0]);
-        let _ = core.handle(0, Message::Pull { key: 0, iter: 0, worker: 0 });
-        push(&mut core, 0, 1, 0, &[5.0]);
-        // worker 0 pulls iter 1 before worker 1 pushed it: queued.
-        let r = core.handle(0, Message::Pull { key: 0, iter: 1, worker: 0 });
-        assert!(r.is_empty());
-        // worker 1 completes iter 1: the queued pull is answered with iter-1
-        // data (not the retired iter-0 aggregate).
-        let r = push(&mut core, 0, 1, 1, &[7.0]);
-        let resp = r.iter().find(|(w, m)| *w == 0 && matches!(m, Message::PullResp { .. }));
-        let Some((_, Message::PullResp { iter, data, .. })) = resp else { panic!("no resp") };
-        assert_eq!(*iter, 1);
-        let mut out = vec![0.0f32; 1];
-        core.opts.comp.decompress(data, &mut out);
-        assert_eq!(out, vec![6.0]);
-    }
-
-    #[test]
-    fn threaded_server_roundtrip_over_inproc() {
+    /// Drive one threaded server end to end over inproc endpoints and
+    /// return its stats; every worker checks the exact per-key means.
+    fn roundtrip(compress_threads: usize, shared: Option<Arc<ThreadPool>>) -> ServerStats {
         let workers = 3;
         let dim = 64;
         let mut worker_eps = Vec::new();
@@ -1093,7 +291,9 @@ mod tests {
             worker_eps.push(w);
             server_eps.push(s);
         }
-        let server = Server::spawn(opts("identity", SyncMode::Full, workers), server_eps);
+        let mut o = opts("identity", SyncMode::Full, workers);
+        o.compress_threads = compress_threads;
+        let server = Server::spawn_with_pool(o, server_eps, shared);
         let handles: Vec<_> = worker_eps
             .into_iter()
             .enumerate()
@@ -1131,607 +331,37 @@ mod tests {
         for h in handles {
             h.join().unwrap();
         }
-        let stats = server.join();
+        server.join()
+    }
+
+    #[test]
+    fn threaded_server_roundtrip_over_inproc() {
+        let stats = roundtrip(0, None);
         assert_eq!(stats.pushes, 15);
     }
 
+    /// The staged I/O loop (decode/encode as pool jobs, completions
+    /// multiplexed with ingress) serves the same exchange: same counters,
+    /// same full-round history, and the loop drains its jobs before
+    /// reporting stats.
     #[test]
-    fn shard_plan_balances_better_than_round_robin() {
-        // One huge tensor + many small ones (a transformer's shape).
-        let mut costs = vec![1000.0];
-        costs.extend(std::iter::repeat(10.0).take(40));
-        let bal = ShardPlan::balanced(&costs, 4);
-        let rr = ShardPlan::round_robin(costs.len(), 4);
-        assert!(bal.imbalance(&costs) <= rr.imbalance(&costs));
-        // balanced puts the huge tensor alone-ish: its server gets few others
-        let big_server = bal.server_of(0);
-        let others = (1..costs.len()).filter(|&k| bal.server_of(k as Key) == big_server).count();
-        assert!(others <= 5, "{others} small tensors share the big server");
+    fn threaded_staged_server_roundtrip_over_inproc() {
+        let stats = roundtrip(4, None);
+        assert_eq!(stats.pushes, 15);
+        assert_eq!(stats.pulls, 15);
+        assert_eq!(stats.round_hist.count(), 5);
+        assert_eq!(stats.rejected, 0);
     }
 
+    /// Shards sharing one pool (the in-process fabric's shape) still
+    /// drain cleanly — the pool outlives each server via its Arc.
     #[test]
-    fn shard_plan_covers_all_servers() {
-        let costs = vec![1.0; 16];
-        let plan = ShardPlan::balanced(&costs, 4);
-        for s in 0..4 {
-            assert!((0..16).any(|k| plan.server_of(k as Key) == s));
-        }
-        assert!((plan.imbalance(&costs) - 1.0).abs() < 1e-9);
-    }
-
-    /// Per-block sharding (§4.2.4 under the pipeline): one huge tensor's
-    /// blocks spread over every server instead of pinning one shard.
-    #[test]
-    fn keyed_plan_spreads_blocks_of_one_tensor() {
-        // Tensor 0: 8 blocks of cost 100; tensors 1..5: one block each.
-        let mut items: Vec<(Key, f64)> =
-            (0..8).map(|b| (BlockKey::new(0, b).pack(), 100.0)).collect();
-        for t in 1..5u64 {
-            items.push((BlockKey::new(t, 0).pack(), 10.0));
-        }
-        let plan = ShardPlan::balanced_keyed(&items, 4);
-        assert_eq!(plan.len(), items.len());
-        let servers_of_big: std::collections::HashSet<usize> =
-            (0..8).map(|b| plan.server_of(BlockKey::new(0, b).pack())).collect();
-        assert_eq!(servers_of_big.len(), 4, "big tensor's blocks should span all servers");
-        // Deterministic: same inputs, same plan.
-        let plan2 = ShardPlan::balanced_keyed(&items, 4);
-        for &(k, _) in &items {
-            assert_eq!(plan.server_of(k), plan2.server_of(k));
-        }
-        let imb = plan.imbalance_by(|k| {
-            items.iter().find(|(key, _)| *key == k).map(|(_, c)| *c).unwrap()
-        });
-        let rr = ShardPlan::round_robin_keyed(
-            &items.iter().map(|(k, _)| *k).collect::<Vec<_>>(),
-            4,
-        );
-        let rr_imb = rr.imbalance_by(|k| {
-            items.iter().find(|(key, _)| *key == k).map(|(_, c)| *c).unwrap()
-        });
-        assert!(imb <= rr_imb + 1e-9);
-    }
-
-    #[test]
-    #[should_panic(expected = "not in the shard plan")]
-    fn unknown_key_panics_with_context() {
-        let plan = ShardPlan::balanced(&[1.0, 2.0], 2);
-        let _ = plan.server_of(BlockKey::new(7, 3).pack());
-    }
-
-    /// Corrupt push blocks are dropped at ingress, counted, and never panic
-    /// the aggregator.
-    #[test]
-    fn corrupt_push_is_rejected_not_fatal() {
-        let mut core = ServerCore::new(opts("topk", SyncMode::CompressedEf, 1));
-        let mut payload = Vec::new();
-        payload.extend_from_slice(&1u32.to_le_bytes());
-        payload.extend_from_slice(&500u32.to_le_bytes()); // index >= n
-        payload.extend_from_slice(&1.0f32.to_le_bytes());
-        let bad = crate::compress::Compressed {
-            scheme: crate::compress::SchemeId::TopK,
-            n: 4,
-            payload,
-        };
-        let replies =
-            core.handle(0, Message::Push { key: 0, iter: 0, worker: 0, data: bad });
-        assert!(replies.is_empty());
-        assert_eq!(core.stats.rejected, 1);
-        assert_eq!(core.stats.pushes, 0);
-        // A valid push afterwards still works.
-        let r = push(&mut core, 0, 0, 0, &[1.0, 2.0, 3.0, 4.0]);
-        assert_eq!(r.len(), 1);
-        assert_eq!(core.stats.pushes, 1);
-    }
-
-    /// Regression (server panic on untrusted input): a rejected corrupt
-    /// push leaves `count` short; the next iteration's rollover used to
-    /// assert the aggregator down. It must recover — count the short
-    /// iteration, discard the partial sum, and keep serving.
-    #[test]
-    fn short_iteration_after_corrupt_push_recovers() {
-        let mut core = ServerCore::new(opts("identity", SyncMode::Full, 2));
-        // Worker 0's push for iter 0 is corrupt (wrong element count after
-        // the key is established) and gets rejected.
-        push(&mut core, 0, 0, 1, &[1.0, 2.0]);
-        let bad = crate::compress::Compressed {
-            scheme: crate::compress::SchemeId::Identity,
-            n: 1,
-            payload: vec![0u8; 4],
-        };
-        let r = core.handle(0, Message::Push { key: 0, iter: 0, worker: 0, data: bad });
-        assert!(r.is_empty());
-        assert_eq!(core.stats.rejected, 1);
-        // Iteration 0 is now permanently short (count == 1 of 2). Both
-        // workers move on to iteration 1 — this used to panic.
-        push(&mut core, 0, 1, 0, &[10.0, 20.0]);
-        let r = push(&mut core, 0, 1, 1, &[30.0, 40.0]);
-        assert!(!r.is_empty());
-        assert_eq!(core.stats.short_iters, 1);
-        // Iteration 1 completes and serves normally.
-        let r = core.handle(0, Message::Pull { key: 0, iter: 1, worker: 0 });
-        let Message::PullResp { data, .. } = &r[0].1 else { panic!("no resp: {r:?}") };
-        let mut out = vec![0.0f32; 2];
-        core.opts.comp.decompress(data, &mut out);
-        assert_eq!(out, vec![20.0, 30.0]);
-    }
-
-    /// Regression (server panic on untrusted input): a pull for a key with
-    /// no prior push used to hit `.expect("pull before any push")`. It must
-    /// queue and be served once the key appears.
-    #[test]
-    fn pull_before_any_push_queues_and_serves() {
-        let mut core = ServerCore::new(opts("identity", SyncMode::Full, 2));
-        let r = core.handle(1, Message::Pull { key: 7, iter: 0, worker: 1 });
-        assert!(r.is_empty(), "queued, not panicked");
-        assert_eq!(core.stats.early_pulls, 1);
-        push(&mut core, 7, 0, 0, &[2.0]);
-        let r = push(&mut core, 7, 0, 1, &[4.0]);
-        // ack + the queued pull's response
-        let resp = r.iter().find(|(w, m)| *w == 1 && matches!(m, Message::PullResp { .. }));
-        let Some((_, Message::PullResp { data, .. })) = resp else { panic!("no resp: {r:?}") };
-        let mut out = vec![0.0f32; 1];
-        core.opts.comp.decompress(data, &mut out);
-        assert_eq!(out, vec![3.0]);
-        // And the other worker's pull works as before.
-        let r = core.handle(0, Message::Pull { key: 7, iter: 0, worker: 0 });
-        assert!(matches!(r[0].1, Message::PullResp { .. }));
-    }
-
-    /// A pull whose iteration is older than the one-slot history is dropped
-    /// and counted, never an assert.
-    #[test]
-    fn ancient_pull_is_counted_not_fatal() {
-        let mut core = ServerCore::new(opts("identity", SyncMode::Full, 1));
-        for iter in 0..4u64 {
-            push(&mut core, 0, iter, 0, &[iter as f32]);
-        }
-        // Key is at iter 3; prev holds iter 2. A pull for iter 0 is stale
-        // and answered with the retired marker (served_with == 0, empty
-        // block) so the puller can fail loudly instead of hanging.
-        let r = core.handle(0, Message::Pull { key: 0, iter: 0, worker: 0 });
-        assert_eq!(r.len(), 1);
-        let Message::PullResp { iter, served_with, data, .. } = &r[0].1 else { panic!("{r:?}") };
-        assert_eq!((*iter, *served_with, data.n), (0, 0, 0));
-        assert_eq!(core.stats.stale_pulls, 1);
-        // Current iteration still serves.
-        let r = core.handle(0, Message::Pull { key: 0, iter: 3, worker: 0 });
-        assert!(matches!(r[0].1, Message::PullResp { .. }));
-    }
-
-    /// Handshake/reply messages leaking into a running server are ignored
-    /// and counted, never a panic.
-    #[test]
-    fn unexpected_messages_are_counted_not_fatal() {
-        let mut core = ServerCore::new(opts("identity", SyncMode::Full, 1));
-        let r = core.handle(0, Message::Hello { worker: 0, n_keys: 3, config: 0 });
-        assert!(r.is_empty());
-        let r = core.handle(0, Message::Ack { key: 0, iter: 0 });
-        assert!(r.is_empty());
-        assert_eq!(core.stats.unexpected, 2);
-        // Still fully functional afterwards.
-        push(&mut core, 0, 0, 0, &[5.0]);
-        let r = core.handle(0, Message::Pull { key: 0, iter: 0, worker: 0 });
-        assert!(matches!(r[0].1, Message::PullResp { .. }));
-    }
-
-    /// A stale push (older than the key's current iteration) is rejected,
-    /// not allowed to roll the key's clock backwards.
-    #[test]
-    fn backwards_push_is_rejected() {
-        let mut core = ServerCore::new(opts("identity", SyncMode::Full, 1));
-        push(&mut core, 0, 5, 0, &[1.0]);
-        let r = push(&mut core, 0, 2, 0, &[9.0]);
-        assert!(r.is_empty());
-        assert_eq!(core.stats.rejected, 1);
-        // The key still serves iteration 5.
-        let r = core.handle(0, Message::Pull { key: 0, iter: 5, worker: 0 });
-        assert!(matches!(r[0].1, Message::PullResp { .. }));
-    }
-
-    /// Replies route by the connection a message arrived on, never by the
-    /// wire-supplied `worker` field — a spoofed (or out-of-range) id
-    /// cannot steer replies to another worker or index the endpoint table
-    /// out of bounds.
-    #[test]
-    fn replies_route_by_connection_not_wire_field() {
-        let mut core = ServerCore::new(opts("identity", SyncMode::Full, 2));
-        let mut rng = Xoshiro256::seed_from_u64(1);
-        let data = core.opts.comp.compress(&[4.0, 6.0], &mut Ctx::new(&mut rng));
-        // Connection 0 claims to be worker 999: ack still goes to 0.
-        let r = core.handle(0, Message::Push { key: 0, iter: 0, worker: 999, data });
-        assert_eq!(r.len(), 1);
-        assert_eq!(r[0].0, 0);
-        assert!(matches!(r[0].1, Message::Ack { .. }));
-        // A queued pull is answered on the connection it arrived on, not
-        // at the spoofed id.
-        let r = core.handle(0, Message::Pull { key: 0, iter: 0, worker: 12345 });
-        assert!(r.is_empty()); // queued: iteration incomplete
-        let mut rng = Xoshiro256::seed_from_u64(2);
-        let data = core.opts.comp.compress(&[1.0, 2.0], &mut Ctx::new(&mut rng));
-        let r = core.handle(1, Message::Push { key: 0, iter: 0, worker: 42, data });
-        assert!(r.iter().any(|(to, m)| *to == 1 && matches!(m, Message::Ack { .. })), "{r:?}");
-        assert!(
-            r.iter().any(|(to, m)| *to == 0 && matches!(m, Message::PullResp { .. })),
-            "{r:?}"
-        );
-    }
-
-    /// A client inventing keys cannot grow server memory without bound:
-    /// pushes past `max_keys` established keys are rejected, pull-created
-    /// placeholders have their own equal budget, and junk placeholders
-    /// never starve traffic for real (established) keys.
-    #[test]
-    fn hostile_key_flood_is_bounded() {
-        let mut o = opts("identity", SyncMode::Full, 1);
-        o.max_keys = 2;
-        let mut core = ServerCore::new(o);
-        push(&mut core, 0, 0, 0, &[1.0]);
-        push(&mut core, 1, 0, 0, &[2.0]);
-        // Established keys at cap: a push for a third key bounces.
-        let r = push(&mut core, 2, 0, 0, &[3.0]);
-        assert!(r.is_empty());
-        assert_eq!(core.stats.rejected, 1);
-        // Pull-created placeholders have their own equal budget…
-        assert!(core.handle(0, Message::Pull { key: 10, iter: 0, worker: 0 }).is_empty());
-        assert!(core.handle(0, Message::Pull { key: 11, iter: 0, worker: 0 }).is_empty());
-        // …beyond which junk-key pulls bounce with the retired marker…
-        let r = core.handle(0, Message::Pull { key: 12, iter: 0, worker: 0 });
-        assert_eq!(r.len(), 1);
-        assert!(matches!(r[0].1, Message::PullResp { served_with: 0, .. }), "{r:?}");
-        assert_eq!(core.stats.rejected, 2);
-        // …and junk placeholders never block established keys.
-        let r = core.handle(0, Message::Pull { key: 0, iter: 0, worker: 0 });
-        assert!(matches!(r[0].1, Message::PullResp { .. }));
-        let r = push(&mut core, 1, 1, 0, &[5.0]);
-        assert!(!r.is_empty());
-    }
-
-    /// Hostile pulls cannot poison a key's pending queue: future-iteration
-    /// pulls on established keys are rejected outright (honest traffic
-    /// can never produce them — per-connection FIFO processes a worker's
-    /// push before its pull), placeholder floods hit the pending cap, and
-    /// the queue fully drains at every completion.
-    #[test]
-    fn pull_flood_on_one_key_is_bounded() {
-        let mut core = ServerCore::new(opts("identity", SyncMode::Full, 1));
-        push(&mut core, 0, 0, 0, &[1.0]);
-        for _ in 0..5 {
-            // Far-future pulls are rejected — answered with the retired
-            // marker, never a silent drop.
-            let r = core.handle(0, Message::Pull { key: 0, iter: 99, worker: 0 });
-            assert_eq!(r.len(), 1);
-            let Message::PullResp { served_with, .. } = &r[0].1 else { panic!("{r:?}") };
-            assert_eq!(*served_with, 0);
-        }
-        assert_eq!(core.stats.rejected, 5);
-        // Placeholder floods: pending cap is 2 * n_workers = 2, so of five
-        // queue attempts three are dropped (marker-answered).
-        for i in 0..5u64 {
-            let r = core.handle(0, Message::Pull { key: 7, iter: i, worker: 0 });
-            if i < 2 {
-                assert!(r.is_empty(), "pull {i} should queue: {r:?}");
-            } else {
-                assert_eq!(r.len(), 1, "pull {i} should bounce with a marker: {r:?}");
-            }
-        }
-        assert_eq!(core.stats.stale_pulls, 3);
-        // Establishing key 7 at iteration 0 serves the matching queued
-        // pull and drains the junk one with a retired marker — nothing
-        // lingers, nothing is silently dropped.
-        let r = push(&mut core, 7, 0, 0, &[1.0]);
-        assert_eq!(r.len(), 3, "ack + served iter-0 pull + retired iter-1 marker: {r:?}");
-        assert!(r
-            .iter()
-            .any(|(_, m)| matches!(m, Message::PullResp { served_with: 1.., .. })));
-        assert!(r
-            .iter()
-            .any(|(_, m)| matches!(m, Message::PullResp { served_with: 0, .. })));
-        assert_eq!(core.stats.stale_pulls, 4);
-        // The original key still serves its real iteration.
-        let r = core.handle(0, Message::Pull { key: 0, iter: 0, worker: 0 });
-        assert!(matches!(r[0].1, Message::PullResp { .. }));
-    }
-
-    #[test]
-    fn shard_plan_assignments_roundtrip() {
-        let plan = ShardPlan::balanced(&[5.0, 1.0, 3.0, 2.0], 3);
-        let wire = plan.assignments();
-        let back = ShardPlan::from_assignments(&wire, 3).unwrap();
-        for k in 0..4u64 {
-            assert_eq!(plan.server_of(k), back.server_of(k));
-        }
-        assert_eq!(back.assignments(), wire);
-        // Untrusted input: out-of-range server and duplicate keys rejected.
-        assert!(ShardPlan::from_assignments(&[(0, 3)], 3).is_err());
-        assert!(ShardPlan::from_assignments(&[(0, 0), (0, 1)], 2).is_err());
-        assert!(ShardPlan::from_assignments(&[], 0).is_err());
-    }
-
-    /// A *self-consistent* corrupt frame whose n disagrees with the key's
-    /// established size must be rejected at ingress, not resize or panic
-    /// the accumulator.
-    #[test]
-    fn push_with_wrong_element_count_is_rejected() {
-        let mut core = ServerCore::new(opts("identity", SyncMode::Full, 2));
-        push(&mut core, 0, 0, 0, &[1.0, 2.0, 3.0, 4.0]); // key 0 is 4 elems
-        // Internally-consistent identity block with only 2 elements.
-        let bad = crate::compress::Compressed {
-            scheme: crate::compress::SchemeId::Identity,
-            n: 2,
-            payload: vec![0u8; 8],
-        };
-        let r = core.handle(1, Message::Push { key: 0, iter: 0, worker: 1, data: bad });
-        assert!(r.is_empty());
-        assert_eq!(core.stats.rejected, 1);
-        // The honest worker can still complete the iteration.
-        let r = push(&mut core, 0, 0, 1, &[5.0, 6.0, 7.0, 8.0]);
-        assert_eq!(r.len(), 1);
-        let r = core.handle(0, Message::Pull { key: 0, iter: 0, worker: 0 });
-        let Message::PullResp { data, .. } = &r[0].1 else { panic!() };
-        let mut out = vec![0.0f32; 4];
-        core.opts.comp.decompress(data, &mut out);
-        assert_eq!(out, vec![3.0, 4.0, 5.0, 6.0]);
-    }
-
-    /// The iteration deadline seals a round that has at least one push:
-    /// the partial aggregate (averaged over the pushes received) is served
-    /// with `served_with < n_workers`, and a full round still reports
-    /// `served_with == n_workers`.
-    #[test]
-    fn deadline_seals_partial_round_and_serves_degraded() {
-        let mut core = ServerCore::new(opts_deadline("identity", SyncMode::Full, 2));
-        push(&mut core, 0, 0, 0, &[2.0, 4.0]);
-        // Worker 1 pulls before its (lost) push completed the round: queued.
-        let r = core.handle(1, Message::Pull { key: 0, iter: 0, worker: 1 });
-        assert!(r.is_empty());
-        let replies = core.poll_deadlines(after_deadline());
-        assert_eq!(replies.len(), 1, "the queued pull must be answered: {replies:?}");
-        let (to, Message::PullResp { iter, served_with, data, .. }) = &replies[0] else {
-            panic!("not a PullResp: {replies:?}")
-        };
-        assert_eq!((*to, *iter, *served_with), (1, 0, 1));
-        let mut out = vec![0.0f32; 2];
-        core.opts.comp.decompress(data, &mut out);
-        // Averaged over the one contribution received, not n_workers.
-        assert_eq!(out, vec![2.0, 4.0]);
-        assert_eq!(core.stats.degraded_iters, 1);
-        assert_eq!(core.stats.short_iters, 0);
-        // A later pull for the sealed iteration is served the same bytes.
-        let r = core.handle(0, Message::Pull { key: 0, iter: 0, worker: 0 });
-        let Message::PullResp { served_with, .. } = &r[0].1 else { panic!("{r:?}") };
-        assert_eq!(*served_with, 1);
-    }
-
-    /// With no deadline configured, `poll_deadlines` is a strict no-op —
-    /// the incomplete round keeps waiting (strict BSP).
-    #[test]
-    fn deadline_unset_poll_is_noop() {
-        let mut core = ServerCore::new(opts("identity", SyncMode::Full, 2));
-        push(&mut core, 0, 0, 0, &[1.0]);
-        assert!(core.poll_deadlines(after_deadline()).is_empty());
-        assert_eq!(core.stats.degraded_iters, 0);
-        // The pull still queues rather than being served partial.
-        let r = core.handle(1, Message::Pull { key: 0, iter: 0, worker: 1 });
-        assert!(r.is_empty());
-    }
-
-    /// A round sealed by the deadline must not be counted *again* as a
-    /// short iteration when the key rolls over, and the next iteration
-    /// completes as a normal full round.
-    #[test]
-    fn deadline_does_not_double_count_short_iters() {
-        let mut core = ServerCore::new(opts_deadline("identity", SyncMode::Full, 2));
-        push(&mut core, 0, 0, 0, &[2.0]);
-        assert!(core.poll_deadlines(after_deadline()).is_empty()); // nothing queued
-        assert_eq!(core.stats.degraded_iters, 1);
-        // Both workers proceed to iteration 1; the rollover must not see a
-        // "short" round — the partial was served, not lost.
-        push(&mut core, 0, 1, 0, &[10.0]);
-        let r = push(&mut core, 0, 1, 1, &[20.0]);
-        assert!(!r.is_empty());
-        assert_eq!(core.stats.short_iters, 0);
-        assert_eq!(core.stats.degraded_iters, 1);
-        let r = core.handle(0, Message::Pull { key: 0, iter: 1, worker: 0 });
-        let Message::PullResp { served_with, data, .. } = &r[0].1 else { panic!("{r:?}") };
-        assert_eq!(*served_with, 2);
-        let mut out = vec![0.0f32; 1];
-        core.opts.comp.decompress(data, &mut out);
-        assert_eq!(out, vec![15.0]);
-    }
-
-    /// A push rejected before the deadline fired stays rejected: when the
-    /// same worker re-sends a now-valid push for the sealed round, it is
-    /// dropped as late (`late_pushes`) — the aggregate other workers may
-    /// already hold never changes retroactively.
-    #[test]
-    fn deadline_does_not_resurrect_rejected_push() {
-        let mut core = ServerCore::new(opts_deadline("identity", SyncMode::Full, 2));
-        push(&mut core, 0, 0, 0, &[6.0, 8.0]);
-        // Worker 1's push is corrupt (wrong element count) and rejected.
-        let bad = crate::compress::Compressed {
-            scheme: crate::compress::SchemeId::Identity,
-            n: 1,
-            payload: vec![0u8; 4],
-        };
-        let r = core.handle(1, Message::Push { key: 0, iter: 0, worker: 1, data: bad });
-        assert!(r.is_empty());
-        assert_eq!(core.stats.rejected, 1);
-        // Deadline fires: round sealed with worker 0's contribution only.
-        core.poll_deadlines(after_deadline());
-        assert_eq!(core.stats.degraded_iters, 1);
-        // Worker 1 retries with a valid push for the sealed iteration: no
-        // ack, counted late, aggregate untouched.
-        let r = push(&mut core, 0, 0, 1, &[100.0, 200.0]);
-        assert!(r.is_empty(), "late push must not be acked: {r:?}");
-        assert_eq!(core.stats.late_pushes, 1);
-        let r = core.handle(0, Message::Pull { key: 0, iter: 0, worker: 0 });
-        let Message::PullResp { served_with, data, .. } = &r[0].1 else { panic!("{r:?}") };
-        assert_eq!(*served_with, 1);
-        let mut out = vec![0.0f32; 2];
-        core.opts.comp.decompress(data, &mut out);
-        assert_eq!(out, vec![6.0, 8.0]);
-        // And a second sweep never re-seals the same round.
-        assert!(core.poll_deadlines(after_deadline()).is_empty());
-        assert_eq!(core.stats.degraded_iters, 1);
-    }
-
-    /// A degraded aggregate retires into the one-slot history like any
-    /// other: a slow worker pulling the sealed iteration after a rollover
-    /// still gets the partial aggregate with its `served_with` tag.
-    #[test]
-    fn degraded_aggregate_survives_rollover() {
-        let mut core = ServerCore::new(opts_deadline("identity", SyncMode::Full, 2));
-        push(&mut core, 0, 0, 0, &[4.0]);
-        core.poll_deadlines(after_deadline());
-        assert_eq!(core.stats.degraded_iters, 1);
-        // The fast worker moves on, rolling the key over.
-        push(&mut core, 0, 1, 0, &[10.0]);
-        let r = core.handle(1, Message::Pull { key: 0, iter: 0, worker: 1 });
-        let Message::PullResp { iter, served_with, data, .. } = &r[0].1 else {
-            panic!("{r:?}")
-        };
-        assert_eq!((*iter, *served_with), (0, 1));
-        let mut out = vec![0.0f32; 1];
-        core.opts.comp.decompress(data, &mut out);
-        assert_eq!(out, vec![4.0]);
-        assert_eq!(core.stats.short_iters, 0);
-        // The straggler whose push finally lands after the rollover is
-        // counted as a *late* push (the tolerated event), not rejected
-        // (the corruption counter) — and still changes nothing.
-        let r = push(&mut core, 0, 0, 1, &[99.0]);
-        assert!(r.is_empty());
-        assert_eq!(core.stats.late_pushes, 1);
-        assert_eq!(core.stats.rejected, 0);
-        let r = core.handle(1, Message::Pull { key: 0, iter: 0, worker: 1 });
-        let Message::PullResp { served_with, .. } = &r[0].1 else { panic!("{r:?}") };
-        assert_eq!(*served_with, 1);
-    }
-
-    /// The deadline never seals empty rounds or pull-created placeholders
-    /// (`early_pulls` keys with no dimension), and the placeholder budget
-    /// is unaffected by the sweep: the queued pull is still answered by
-    /// the establishing push, not by the timer.
-    #[test]
-    fn deadline_ignores_placeholders_and_empty_rounds() {
-        let mut o = opts_deadline("identity", SyncMode::Full, 2);
-        o.max_keys = 2;
-        let mut core = ServerCore::new(o);
-        // Pull for a key no push has established: a budgeted placeholder.
-        let r = core.handle(1, Message::Pull { key: 9, iter: 0, worker: 1 });
-        assert!(r.is_empty());
-        assert_eq!(core.stats.early_pulls, 1);
-        // The sweep must not seal (or panic on) the dimension-less
-        // placeholder, nor a fully-idle established key.
-        assert!(core.poll_deadlines(after_deadline()).is_empty());
-        assert_eq!(core.stats.degraded_iters, 0);
-        // The placeholder still works once pushes establish it.
-        push(&mut core, 9, 0, 0, &[1.0]);
-        let r = push(&mut core, 9, 0, 1, &[3.0]);
-        assert!(
-            r.iter().any(|(w, m)| *w == 1 && matches!(m, Message::PullResp { .. })),
-            "queued early pull unanswered: {r:?}"
-        );
-        // And the placeholder budget is still enforced after a sweep
-        // (over-budget pulls bounce with the retired marker).
-        assert!(core.handle(0, Message::Pull { key: 20, iter: 0, worker: 0 }).is_empty());
-        assert!(core.handle(0, Message::Pull { key: 21, iter: 0, worker: 0 }).is_empty());
-        let before = core.stats.rejected;
-        let r = core.handle(0, Message::Pull { key: 22, iter: 0, worker: 0 });
-        assert!(matches!(r[0].1, Message::PullResp { served_with: 0, .. }), "{r:?}");
-        assert_eq!(core.stats.rejected, before + 1, "placeholder budget must still cap");
-    }
-
-    /// A worker that stalls ~2 deadlines while the deadline advances the
-    /// key clock past it gets the retired marker (`served_with == 0`,
-    /// empty block) for its late pull — never a silent drop that would
-    /// hang it forever (strict BSP made this state unreachable; the
-    /// deadline does not).
-    #[test]
-    fn deadline_lagged_worker_gets_retired_marker() {
-        let mut core = ServerCore::new(opts_deadline("identity", SyncMode::Full, 2));
-        // Round 0 completes fully; worker 1 then stalls before pulling.
-        push(&mut core, 0, 0, 0, &[1.0]);
-        push(&mut core, 0, 0, 1, &[3.0]);
-        // Worker 0 pulls 0 and pushes 1; the deadline seals round 1
-        // degraded; worker 0 pulls 1 and pushes 2 — evicting round 0
-        // from the one-slot history.
-        let _ = core.handle(0, Message::Pull { key: 0, iter: 0, worker: 0 });
-        push(&mut core, 0, 1, 0, &[5.0]);
-        core.poll_deadlines(after_deadline());
-        let _ = core.handle(0, Message::Pull { key: 0, iter: 1, worker: 0 });
-        push(&mut core, 0, 2, 0, &[7.0]);
-        // Worker 1 finally asks for round 0 — two behind the clock.
-        let r = core.handle(1, Message::Pull { key: 0, iter: 0, worker: 1 });
-        assert_eq!(r.len(), 1);
-        let Message::PullResp { iter, served_with, data, .. } = &r[0].1 else {
-            panic!("{r:?}")
-        };
-        assert_eq!((*iter, *served_with, data.n), (0, 0, 0));
-        assert_eq!(core.stats.stale_pulls, 1);
-    }
-
-    /// A duplicate push from one *connection* for an open round must not
-    /// complete the round early with that worker double-counted — the
-    /// `served_with` tag would lie about how many workers the aggregate
-    /// holds. The connection index is the identity; the wire `worker`
-    /// field is untrusted.
-    #[test]
-    fn duplicate_push_from_same_connection_is_rejected() {
-        let mut core = ServerCore::new(opts("identity", SyncMode::Full, 2));
-        push(&mut core, 0, 0, 0, &[4.0]);
-        let r = push(&mut core, 0, 0, 0, &[4.0]);
-        assert!(r.is_empty(), "duplicate must not be acked: {r:?}");
-        assert_eq!(core.stats.rejected, 1);
-        assert_eq!(core.stats.pushes, 1);
-        // The honest peer still completes the round with the true mean
-        // over *distinct* contributors.
-        let r = push(&mut core, 0, 0, 1, &[8.0]);
-        assert!(!r.is_empty());
-        let r = core.handle(0, Message::Pull { key: 0, iter: 0, worker: 0 });
-        let Message::PullResp { served_with, data, .. } = &r[0].1 else { panic!("{r:?}") };
-        assert_eq!(*served_with, 2);
-        let mut out = vec![0.0f32; 1];
-        core.opts.comp.decompress(data, &mut out);
-        assert_eq!(out, vec![6.0]);
-    }
-
-    /// Race regression (found in review): a worker whose push for a round
-    /// was lost can have its *pull* for that round reach the server
-    /// before the surviving worker's push — the key is still one
-    /// iteration behind, and the old "future pull" rejection stranded
-    /// the worker forever (the deadline seal only answers *queued*
-    /// pulls). One-iteration-ahead pulls must queue; further ahead stays
-    /// rejected (honest lag is bounded by one even with losses).
-    #[test]
-    fn pull_ahead_of_lost_push_queues_and_deadline_serves_it() {
-        let mut core = ServerCore::new(opts_deadline("identity", SyncMode::Full, 2));
-        // Iteration 0 completes normally for both workers.
-        push(&mut core, 0, 0, 0, &[1.0]);
-        push(&mut core, 0, 0, 1, &[3.0]);
-        // Worker 1's push for iteration 1 is lost; its pull arrives while
-        // the key is still at iteration 0. It must queue, not be rejected.
-        let r = core.handle(1, Message::Pull { key: 0, iter: 1, worker: 1 });
-        assert!(r.is_empty());
-        assert_eq!(core.stats.rejected, 0);
-        // The surviving push arrives and the deadline seals the round:
-        // the queued one-ahead pull is answered.
-        push(&mut core, 0, 1, 0, &[10.0]);
-        let replies = core.poll_deadlines(after_deadline());
-        assert_eq!(replies.len(), 1, "queued pull unanswered: {replies:?}");
-        let (to, Message::PullResp { iter, served_with, data, .. }) = &replies[0] else {
-            panic!("not a PullResp: {replies:?}")
-        };
-        assert_eq!((*to, *iter, *served_with), (1, 1, 1));
-        let mut out = vec![0.0f32; 1];
-        core.opts.comp.decompress(data, &mut out);
-        assert_eq!(out, vec![10.0]);
-        // Beyond the one-iteration lag bound is still rejected — with a
-        // retired marker, never a silent drop.
-        let r = core.handle(1, Message::Pull { key: 0, iter: 5, worker: 1 });
-        assert_eq!(r.len(), 1);
-        assert!(matches!(r[0].1, Message::PullResp { served_with: 0, .. }), "{r:?}");
-        assert_eq!(core.stats.rejected, 1);
+    fn threaded_staged_server_with_shared_pool() {
+        let pool = Arc::new(ThreadPool::new(2));
+        let stats = roundtrip(2, Some(Arc::clone(&pool)));
+        assert_eq!(stats.pushes, 15);
+        pool.wait();
+        assert_eq!(pool.take_panics(), 0);
     }
 
     /// End-to-end over the threaded I/O loop: one worker of two goes
@@ -1741,10 +371,23 @@ mod tests {
     /// filter) catch it — it hangs, not fails, on regression.
     #[test]
     fn threaded_server_degraded_round_unblocks_pull() {
+        threaded_degraded_round(0);
+    }
+
+    /// Same liveness claim through the staged loop: the deadline tick,
+    /// the seal-with-decodes-in-flight path, and egress all run with
+    /// `compress_threads > 0`. Also named `degraded` for CI's step.
+    #[test]
+    fn threaded_staged_server_degraded_round_unblocks_pull() {
+        threaded_degraded_round(4);
+    }
+
+    fn threaded_degraded_round(compress_threads: usize) {
         let (w0, s0) = crate::comm::inproc::pair();
         let (w1, s1) = crate::comm::inproc::pair();
         let mut o = opts("identity", SyncMode::Full, 2);
         o.iter_deadline = Some(std::time::Duration::from_millis(50));
+        o.compress_threads = compress_threads;
         let server = Server::spawn(o, vec![s0, s1]);
         // Worker 1 registers its presence with iteration 0 then goes
         // silent for iteration 1.
@@ -1759,7 +402,7 @@ mod tests {
         w0.send(Message::Push { key: 0, iter: 0, worker: 0, data: d0 }).unwrap();
         w1.send(Message::Push { key: 0, iter: 0, worker: 1, data: d1 }).unwrap();
         // Pull iteration 0 and *wait for the response* before pushing
-        // iteration 1: the two connections feed the aggregator through
+        // iteration 1: the two connections feed the control thread through
         // independent reader threads, so without this barrier w0's
         // iter-1 push could overtake w1's iter-0 push and roll the round
         // over short (a real short_iter, failing the assertion below).

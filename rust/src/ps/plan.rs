@@ -1,0 +1,231 @@
+//! Key → server assignment with workload balancing (§4.2.4).
+
+use crate::comm::{BlockKey, Key};
+use std::collections::HashMap;
+
+/// Key → server assignment with workload balancing (§4.2.4).
+///
+/// Since the block pipeline, assignment is keyed by arbitrary (packed)
+/// block keys rather than dense tensor indices: use [`balanced_keyed`] /
+/// [`round_robin_keyed`] for block plans. The dense-index constructors
+/// remain for whole-tensor plans (a tensor id *is* its block-0 key).
+///
+/// [`balanced_keyed`]: ShardPlan::balanced_keyed
+/// [`round_robin_keyed`]: ShardPlan::round_robin_keyed
+#[derive(Clone, Debug)]
+pub struct ShardPlan {
+    assignment: HashMap<Key, usize>,
+    servers: usize,
+}
+
+impl ShardPlan {
+    /// Greedy least-loaded assignment over dense tensor-id keys
+    /// `0..costs.len()`. `cost(key)` should reflect server CPU work:
+    /// compressed keys cost `numel × compress_factor`, bypassed keys just
+    /// `numel` (decompress-free memcpy aggregation).
+    pub fn balanced(costs: &[f64], servers: usize) -> ShardPlan {
+        let items: Vec<(Key, f64)> =
+            costs.iter().enumerate().map(|(k, &c)| (k as Key, c)).collect();
+        Self::balanced_keyed(&items, servers)
+    }
+
+    /// Greedy least-loaded assignment over explicit `(key, cost)` pairs —
+    /// the pipeline's per-block plan. Deterministic: ties in cost break by
+    /// key, ties in load by server index.
+    pub fn balanced_keyed(items: &[(Key, f64)], servers: usize) -> ShardPlan {
+        assert!(servers >= 1);
+        let mut order: Vec<usize> = (0..items.len()).collect();
+        order.sort_by(|a, b| {
+            items[*b]
+                .1
+                .partial_cmp(&items[*a].1)
+                .unwrap()
+                .then_with(|| items[*a].0.cmp(&items[*b].0))
+        });
+        let mut load = vec![0.0f64; servers];
+        let mut assignment = HashMap::with_capacity(items.len());
+        for i in order {
+            let (key, cost) = items[i];
+            let s = (0..servers).min_by(|a, b| load[*a].partial_cmp(&load[*b]).unwrap()).unwrap();
+            assignment.insert(key, s);
+            load[s] += cost;
+        }
+        ShardPlan { assignment, servers }
+    }
+
+    /// Naive round-robin over dense tensor-id keys (the ablation's "no
+    /// workload balance" arm).
+    pub fn round_robin(keys: usize, servers: usize) -> ShardPlan {
+        let keys: Vec<Key> = (0..keys as u64).collect();
+        Self::round_robin_keyed(&keys, servers)
+    }
+
+    /// Round-robin over explicit keys, in the order given.
+    pub fn round_robin_keyed(keys: &[Key], servers: usize) -> ShardPlan {
+        assert!(servers >= 1);
+        let assignment = keys.iter().enumerate().map(|(i, &k)| (k, i % servers)).collect();
+        ShardPlan { assignment, servers }
+    }
+
+    /// Rebuild a plan from explicit `(key, server)` pairs — the form the
+    /// cluster handshake ships in [`crate::comm::Message::Welcome`].
+    /// Assignments pointing past `servers` are rejected (untrusted input).
+    pub fn from_assignments(entries: &[(Key, u32)], servers: usize) -> Result<ShardPlan, String> {
+        if servers == 0 {
+            return Err("shard plan needs at least one server".into());
+        }
+        let mut assignment = HashMap::with_capacity(entries.len());
+        for &(key, s) in entries {
+            if s as usize >= servers {
+                return Err(format!("key {key} assigned to server {s} of {servers}"));
+            }
+            if assignment.insert(key, s as usize).is_some() {
+                return Err(format!("key {key} assigned twice"));
+            }
+        }
+        Ok(ShardPlan { assignment, servers })
+    }
+
+    /// Export the plan as `(key, server)` pairs, sorted by key so two
+    /// plans can be compared structurally (workers cross-check that every
+    /// server shard handed them the same plan).
+    pub fn assignments(&self) -> Vec<(Key, u32)> {
+        let mut out: Vec<(Key, u32)> =
+            self.assignment.iter().map(|(&k, &s)| (k, s as u32)).collect();
+        out.sort_unstable_by_key(|&(k, _)| k);
+        out
+    }
+
+    /// Number of servers this plan shards across.
+    pub fn servers(&self) -> usize {
+        self.servers
+    }
+
+    /// Number of keys in the plan.
+    pub fn len(&self) -> usize {
+        self.assignment.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.assignment.is_empty()
+    }
+
+    /// Whether `key` has an assignment (cluster workers verify the plan
+    /// they received covers their whole partition before trusting it).
+    pub fn contains(&self, key: Key) -> bool {
+        self.assignment.contains_key(&key)
+    }
+
+    pub fn server_of(&self, key: Key) -> usize {
+        *self.assignment.get(&key).unwrap_or_else(|| {
+            let bk = BlockKey::unpack(key);
+            panic!("key {key} (tensor {}, block {}) not in the shard plan", bk.tensor, bk.block)
+        })
+    }
+
+    /// Max/mean load ratio (1.0 = perfectly balanced), with per-key costs
+    /// supplied by `cost_of`.
+    pub fn imbalance_by<F: Fn(Key) -> f64>(&self, cost_of: F) -> f64 {
+        let mut load = vec![0.0f64; self.servers];
+        for (&k, &s) in &self.assignment {
+            load[s] += cost_of(k);
+        }
+        let max = load.iter().cloned().fold(0.0f64, f64::max);
+        let mean = load.iter().sum::<f64>() / self.servers.max(1) as f64;
+        if mean == 0.0 {
+            1.0
+        } else {
+            max / mean
+        }
+    }
+
+    /// Max/mean load ratio for dense tensor-id plans (`key` indexes
+    /// `costs`).
+    pub fn imbalance(&self, costs: &[f64]) -> f64 {
+        self.imbalance_by(|k| costs[k as usize])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_plan_balances_better_than_round_robin() {
+        // One huge tensor + many small ones (a transformer's shape).
+        let mut costs = vec![1000.0];
+        costs.extend(std::iter::repeat(10.0).take(40));
+        let bal = ShardPlan::balanced(&costs, 4);
+        let rr = ShardPlan::round_robin(costs.len(), 4);
+        assert!(bal.imbalance(&costs) <= rr.imbalance(&costs));
+        // balanced puts the huge tensor alone-ish: its server gets few others
+        let big_server = bal.server_of(0);
+        let others = (1..costs.len()).filter(|&k| bal.server_of(k as Key) == big_server).count();
+        assert!(others <= 5, "{others} small tensors share the big server");
+    }
+
+    #[test]
+    fn shard_plan_covers_all_servers() {
+        let costs = vec![1.0; 16];
+        let plan = ShardPlan::balanced(&costs, 4);
+        for s in 0..4 {
+            assert!((0..16).any(|k| plan.server_of(k as Key) == s));
+        }
+        assert!((plan.imbalance(&costs) - 1.0).abs() < 1e-9);
+    }
+
+    /// Per-block sharding (§4.2.4 under the pipeline): one huge tensor's
+    /// blocks spread over every server instead of pinning one shard.
+    #[test]
+    fn keyed_plan_spreads_blocks_of_one_tensor() {
+        // Tensor 0: 8 blocks of cost 100; tensors 1..5: one block each.
+        let mut items: Vec<(Key, f64)> =
+            (0..8).map(|b| (BlockKey::new(0, b).pack(), 100.0)).collect();
+        for t in 1..5u64 {
+            items.push((BlockKey::new(t, 0).pack(), 10.0));
+        }
+        let plan = ShardPlan::balanced_keyed(&items, 4);
+        assert_eq!(plan.len(), items.len());
+        let servers_of_big: std::collections::HashSet<usize> =
+            (0..8).map(|b| plan.server_of(BlockKey::new(0, b).pack())).collect();
+        assert_eq!(servers_of_big.len(), 4, "big tensor's blocks should span all servers");
+        // Deterministic: same inputs, same plan.
+        let plan2 = ShardPlan::balanced_keyed(&items, 4);
+        for &(k, _) in &items {
+            assert_eq!(plan.server_of(k), plan2.server_of(k));
+        }
+        let imb = plan.imbalance_by(|k| {
+            items.iter().find(|(key, _)| *key == k).map(|(_, c)| *c).unwrap()
+        });
+        let rr = ShardPlan::round_robin_keyed(
+            &items.iter().map(|(k, _)| *k).collect::<Vec<_>>(),
+            4,
+        );
+        let rr_imb = rr.imbalance_by(|k| {
+            items.iter().find(|(key, _)| *key == k).map(|(_, c)| *c).unwrap()
+        });
+        assert!(imb <= rr_imb + 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "not in the shard plan")]
+    fn unknown_key_panics_with_context() {
+        let plan = ShardPlan::balanced(&[1.0, 2.0], 2);
+        let _ = plan.server_of(BlockKey::new(7, 3).pack());
+    }
+
+    #[test]
+    fn shard_plan_assignments_roundtrip() {
+        let plan = ShardPlan::balanced(&[5.0, 1.0, 3.0, 2.0], 3);
+        let wire = plan.assignments();
+        let back = ShardPlan::from_assignments(&wire, 3).unwrap();
+        for k in 0..4u64 {
+            assert_eq!(plan.server_of(k), back.server_of(k));
+        }
+        assert_eq!(back.assignments(), wire);
+        // Untrusted input: out-of-range server and duplicate keys rejected.
+        assert!(ShardPlan::from_assignments(&[(0, 3)], 3).is_err());
+        assert!(ShardPlan::from_assignments(&[(0, 0), (0, 1)], 2).is_err());
+        assert!(ShardPlan::from_assignments(&[], 0).is_err());
+    }
+}

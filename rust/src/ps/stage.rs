@@ -1,0 +1,416 @@
+//! Staged executor for a server shard (§4.2.1, server side): the pure
+//! compute kernels of the ingress → decode → reduce → seal → encode
+//! pipeline and the event plumbing that carries their results back to the
+//! shard's single control thread.
+//!
+//! ## Determinism contract
+//!
+//! The staged shard must be **bit-identical** to the synchronous reference
+//! (`server.compress_threads = 0`) for every compressor in
+//! `compress::paper_suite()`. Three rules make that hold by construction:
+//!
+//! 1. **Decode is pure.** [`decode_contribution`] turns a validated wire
+//!    block into a dense contribution vector with no shared state, so
+//!    decode jobs can complete in any order.
+//! 2. **Reduce runs in worker-index order.** The control thread defers the
+//!    float sum to seal time and adds contributions sorted by connection
+//!    index ([`crate::ps::ServerCore`]'s reduce step), so the f32 bits
+//!    never depend on arrival or decode-completion order — on either path.
+//! 3. **Encode draws from a per-(key, iteration) RNG.** [`seal_seed`]
+//!    derives the second-way compression's stream the way the worker
+//!    pipeline derives job seeds, so encodes of different keys can run
+//!    concurrently without sharing an RNG, and both paths see the same
+//!    stream. Encodes of *one* key are serialized by lending the key's EF
+//!    residual to the in-flight job and only starting the next encode when
+//!    it returns ([`StageEvent::Encoded`]).
+//!
+//! All *decisions* (validation, dedup, rollover, seal order, counters)
+//! stay on the control thread at ingress, in message order — a decode or
+//! encode job never touches shard state, it only computes.
+
+use crate::comm::Key;
+use crate::compress::{Compressed, Compressor, Ctx};
+use crate::configx::SyncMode;
+use crate::parallel::ThreadPool;
+use crate::util::rng::Xoshiro256;
+use std::sync::Arc;
+
+/// A stage job's completion, delivered back to the shard's control thread
+/// (the I/O loop, or a test driver) which applies it via
+/// [`crate::ps::ServerCore::on_event`]. `ns` is the job's self-measured
+/// CPU nanoseconds, summed into the per-stage stats.
+pub enum StageEvent {
+    /// A push payload finished decoding into a dense contribution.
+    Decoded { key: Key, iter: u64, from: u32, buf: Vec<f32>, ns: u64 },
+    /// A sealed aggregate finished its second-way compression. `residual`
+    /// returns the key's (possibly updated) server-EF residual; handing it
+    /// back is what serializes encodes of the same key.
+    Encoded {
+        key: Key,
+        iter: u64,
+        served: u16,
+        data: Compressed,
+        residual: Option<Vec<f32>>,
+        ns: u64,
+    },
+}
+
+/// Where stage jobs deliver their [`StageEvent`]s. The I/O loop wraps its
+/// own channel sender; tests wrap a plain `mpsc::Sender` and pump
+/// manually.
+pub type EventSink = Arc<dyn Fn(StageEvent) + Send + Sync>;
+
+/// How a shard runs its decode/encode kernels: inline on the control
+/// thread (`compress_threads = 0`, the synchronous reference) or as jobs
+/// on a [`ThreadPool`] whose completions flow back through an
+/// [`EventSink`].
+pub(crate) enum Executor {
+    Inline,
+    Pool { pool: Arc<ThreadPool>, sink: EventSink },
+}
+
+/// Decode one validated push payload into a dense contribution vector:
+/// a zero buffer plus the scheme's sparse-aware `add_decompressed`. Pure —
+/// no shard state, safe to run on any thread in any order.
+pub(crate) fn decode_contribution(comp: &dyn Compressor, data: &Compressed) -> Vec<f32> {
+    let mut buf = vec![0.0f32; data.n];
+    comp.add_decompressed(data, &mut buf);
+    buf
+}
+
+/// Deterministic RNG seed for the second-way compression of `(key, iter)`
+/// under shard seed `seed`. Mirrors `worker::pipeline::job_seed`: encode
+/// scheduling must never change what goes on the wire, so the stream is a
+/// pure function of what is being encoded, not of when.
+pub fn seal_seed(seed: u64, key: Key, iter: u64) -> u64 {
+    seed ^ key.wrapping_mul(0xD1B5_4A32_D192_ED03)
+        ^ (iter + 1).wrapping_mul(0x94D0_49BB_1331_11EB)
+}
+
+/// Second-way compression of a sealed aggregate (the *encode* stage),
+/// including the server-side EF cycle (Alg. 4: correct with `ẽ`,
+/// compress, store the new residual). `residual` is the key's residual
+/// lent by the control thread (`None` on the first seal or for non-EF
+/// sync modes); the updated residual is returned alongside the wire
+/// block. The EF math itself is the one shared
+/// [`crate::compress::ef::compress_cycle`] kernel — the same code
+/// `EfState::compress_owned` runs — with the residual held per key
+/// instead of in a shared map so encodes of different keys can run
+/// concurrently.
+pub(crate) fn encode_aggregate(
+    comp: &dyn Compressor,
+    sync: SyncMode,
+    fused: bool,
+    intra_threads: usize,
+    seed: u64,
+    acc: Vec<f32>,
+    residual: Option<Vec<f32>>,
+) -> (Compressed, Option<Vec<f32>>) {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let mut ctx = Ctx::with_threads(&mut rng, intra_threads);
+    if sync != SyncMode::CompressedEf {
+        return (comp.compress(&acc, &mut ctx), residual);
+    }
+    let (c, e) =
+        crate::compress::ef::compress_cycle(comp, fused, &mut ctx, acc, residual.as_deref());
+    (c, Some(e))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::Message;
+    use crate::compress::{by_name, paper_suite, validate_wire};
+    use crate::ps::{ServerCore, ServerOptions, ServerStats};
+    use std::sync::mpsc;
+    use std::time::{Duration, Instant};
+
+    fn opts(comp: Arc<dyn Compressor>, sync: SyncMode, workers: usize) -> ServerOptions {
+        ServerOptions {
+            comp,
+            sync,
+            fused: true,
+            n_workers: workers,
+            intra_threads: 1,
+            seed: 7,
+            max_keys: 0,
+            iter_deadline: None,
+            compress_threads: 0,
+            deadline_auto_margin: 0.0,
+        }
+    }
+
+    /// A staged core plus the event channel a real I/O loop would own;
+    /// `settle` pumps completions until no stage job is in flight.
+    struct Staged {
+        core: ServerCore,
+        rx: mpsc::Receiver<StageEvent>,
+    }
+
+    impl Staged {
+        fn new(o: ServerOptions, threads: usize) -> Staged {
+            let (tx, rx) = mpsc::channel();
+            let sink: EventSink = Arc::new(move |ev| {
+                let _ = tx.send(ev);
+            });
+            let pool = Arc::new(ThreadPool::new(threads));
+            Staged { core: ServerCore::new_staged(o, pool, sink), rx }
+        }
+
+        fn settle(&mut self) -> Vec<(u32, Message)> {
+            let mut out = Vec::new();
+            while self.core.jobs_in_flight() > 0 {
+                let ev = self
+                    .rx
+                    .recv_timeout(Duration::from_secs(30))
+                    .expect("stage job never reported back");
+                out.extend(self.core.on_event(ev));
+            }
+            out
+        }
+    }
+
+    /// Sort key so reply *content* can be compared across executors whose
+    /// reply *timing* differs (the staged path answers sealed pulls from
+    /// encode completions, the synchronous path inside `handle`).
+    fn reply_key(to: u32, m: &Message) -> (u32, u8, u64, u64, u16, Vec<u8>) {
+        match m {
+            Message::Ack { key, iter } => (to, 0, *key, *iter, 0, Vec::new()),
+            Message::PullResp { key, iter, served_with, data } => {
+                let mut bytes = vec![data.scheme as u8];
+                bytes.extend_from_slice(&(data.n as u64).to_le_bytes());
+                bytes.extend_from_slice(&data.payload);
+                (to, 1, *key, *iter, *served_with, bytes)
+            }
+            other => panic!("server emitted unexpected {other:?}"),
+        }
+    }
+
+    fn sorted_replies(replies: Vec<(u32, Message)>) -> Vec<(u32, u8, u64, u64, u16, Vec<u8>)> {
+        let mut keys: Vec<_> = replies.iter().map(|(to, m)| reply_key(*to, m)).collect();
+        keys.sort();
+        keys
+    }
+
+    fn assert_counters_match(a: &ServerStats, b: &ServerStats, label: &str) {
+        assert_eq!(a.pushes, b.pushes, "{label}: pushes");
+        assert_eq!(a.pulls, b.pulls, "{label}: pulls");
+        assert_eq!(a.rejected, b.rejected, "{label}: rejected");
+        assert_eq!(a.short_iters, b.short_iters, "{label}: short_iters");
+        assert_eq!(a.stale_pulls, b.stale_pulls, "{label}: stale_pulls");
+        assert_eq!(a.early_pulls, b.early_pulls, "{label}: early_pulls");
+        assert_eq!(a.degraded_iters, b.degraded_iters, "{label}: degraded_iters");
+        assert_eq!(a.late_pushes, b.late_pushes, "{label}: late_pushes");
+        assert_eq!(a.unexpected, b.unexpected, "{label}: unexpected");
+    }
+
+    /// Per-(worker, key, iter) push payload, seeded like the worker
+    /// pipeline seeds its jobs, so the script is deterministic.
+    fn push_data(comp: &dyn Compressor, w: u32, key: Key, iter: u64, dim: usize) -> Compressed {
+        let mut rng = Xoshiro256::seed_from_u64(
+            0x5EED ^ (w as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ seal_seed(0, key, iter),
+        );
+        let mut g = vec![0.0f32; dim];
+        rng.fill_normal(&mut g, 1.0);
+        let mut ctx = Ctx::new(&mut rng);
+        comp.compress(&g, &mut ctx)
+    }
+
+    /// The acceptance invariant: with any `compress_threads > 0`, every
+    /// aggregate served is bit-identical to the synchronous shard, for the
+    /// whole paper suite — including queued pulls, an early pull, a
+    /// corrupt push rejected mid-flight, and a duplicate push.
+    #[test]
+    fn staged_matches_synchronous_across_paper_suite() {
+        for (label, comp) in paper_suite() {
+            let sync = if comp.name() == "identity" {
+                SyncMode::Full
+            } else {
+                SyncMode::CompressedEf
+            };
+            let workers = 3usize;
+            let keyspec: [(Key, usize); 3] = [(0, 96), (7, 33), (9, 64)];
+
+            // Script: per iteration, the push order rotates by worker; one
+            // worker's pull lands before its round completes (queued), the
+            // rest after; iteration 1 throws in a corrupt push and a
+            // duplicate, both of which must be rejected identically.
+            let mut script: Vec<(u32, Message)> = Vec::new();
+            // An early pull before any push establishes key 9.
+            script.push((2, Message::Pull { key: 9, iter: 0, worker: 2 }));
+            for iter in 0..4u64 {
+                for &(key, dim) in &keyspec {
+                    for j in 0..workers {
+                        let w = ((j as u64 + iter) % workers as u64) as u32;
+                        if iter == 1 && key == 7 && j == 1 {
+                            // Wire-valid but wrong element count: rejected
+                            // at ingress on both paths, then the honest
+                            // push follows so the round still completes.
+                            let bad = Compressed {
+                                scheme: crate::compress::SchemeId::Identity,
+                                n: 1,
+                                payload: vec![0u8; 4],
+                            };
+                            validate_wire(&bad).unwrap();
+                            script.push((w, Message::Push { key, iter, worker: w, data: bad }));
+                        }
+                        let data = push_data(comp.as_ref(), w, key, iter, dim);
+                        if j == 0 {
+                            // A pull racing ahead of the round: queues.
+                            script.push((w, Message::Pull { key, iter, worker: w }));
+                        }
+                        script.push((w, Message::Push { key, iter, worker: w, data }));
+                        if iter == 2 && key == 0 && j == 0 {
+                            // Duplicate push from the same connection.
+                            let dup = push_data(comp.as_ref(), w, key, iter, dim);
+                            script.push((w, Message::Push { key, iter, worker: w, data: dup }));
+                        }
+                    }
+                    for w in 0..workers as u32 {
+                        script.push((w, Message::Pull { key, iter, worker: w }));
+                    }
+                }
+            }
+
+            let base = opts(comp.clone(), sync, workers);
+            let mut sync_core = ServerCore::new(base.clone());
+            let mut staged = Staged::new(
+                ServerOptions { compress_threads: 4, ..base.clone() },
+                4,
+            );
+
+            let mut sync_replies = Vec::new();
+            let mut staged_replies = Vec::new();
+            for (from, msg) in &script {
+                sync_replies.extend(sync_core.handle(*from, msg.clone()));
+                staged_replies.extend(staged.core.handle(*from, msg.clone()));
+            }
+            staged_replies.extend(staged.settle());
+
+            assert_eq!(
+                sorted_replies(sync_replies),
+                sorted_replies(staged_replies),
+                "{label}: staged shard diverged from the synchronous reference"
+            );
+            assert_counters_match(&sync_core.stats, &staged.core.stats, label);
+            assert!(sync_core.stats.rejected >= 2, "{label}: script faults not exercised");
+        }
+    }
+
+    /// A clock strictly past every configured test deadline.
+    fn after_deadline() -> Instant {
+        Instant::now() + Duration::from_secs(3600)
+    }
+
+    /// The deadline seals a round whose decodes are still in flight: the
+    /// seal decision is taken immediately (no double-serving on a second
+    /// sweep), the sum waits for the decode, and the degraded bytes are
+    /// identical to the synchronous shard's.
+    #[test]
+    fn deadline_seals_round_with_decode_in_flight() {
+        let comp = by_name("topk", 0.25).unwrap();
+        let mut base = opts(comp.clone(), SyncMode::CompressedEf, 2);
+        base.iter_deadline = Some(Duration::from_millis(50));
+
+        let mut sync_core = ServerCore::new(base.clone());
+        let mut staged = Staged::new(ServerOptions { compress_threads: 2, ..base }, 2);
+
+        let data = push_data(comp.as_ref(), 0, 3, 0, 48);
+        let mut sync_replies = sync_core.handle(0, Message::Push { key: 3, iter: 0, worker: 0, data: data.clone() });
+        let mut staged_replies = staged.core.handle(0, Message::Push { key: 3, iter: 0, worker: 0, data });
+        // Worker 1's pull queues on both (its push was "lost").
+        sync_replies.extend(sync_core.handle(1, Message::Pull { key: 3, iter: 0, worker: 1 }));
+        staged_replies.extend(staged.core.handle(1, Message::Pull { key: 3, iter: 0, worker: 1 }));
+        // Seal before pumping any staged event: the decode job's result
+        // has not been applied yet, so the staged sum must wait for it.
+        sync_replies.extend(sync_core.poll_deadlines(after_deadline()));
+        staged_replies.extend(staged.core.poll_deadlines(after_deadline()));
+        // A second sweep must not re-seal on either path.
+        assert!(sync_core.poll_deadlines(after_deadline()).is_empty());
+        assert!(staged.core.poll_deadlines(after_deadline()).is_empty());
+        staged_replies.extend(staged.settle());
+        // And a sweep *after* the encode landed stays a no-op too.
+        assert!(staged.core.poll_deadlines(after_deadline()).is_empty());
+
+        assert_eq!(sorted_replies(sync_replies), sorted_replies(staged_replies));
+        assert_eq!(staged.core.stats.degraded_iters, 1);
+        assert_counters_match(&sync_core.stats, &staged.core.stats, "deadline mid-flight");
+
+        // The straggler's late push after the seal changes nothing.
+        let late = push_data(comp.as_ref(), 1, 3, 0, 48);
+        let r = staged.core.handle(1, Message::Push { key: 3, iter: 0, worker: 1, data: late.clone() });
+        assert!(r.is_empty());
+        let r2 = sync_core.handle(1, Message::Push { key: 3, iter: 0, worker: 1, data: late });
+        assert!(r2.is_empty());
+        assert_eq!(staged.core.stats.late_pushes, 1);
+        assert_eq!(sync_core.stats.late_pushes, 1);
+    }
+
+    /// A key that rolls over while its sealed round is still encoding:
+    /// the encode result lands in the one-slot `prev` history, a straggler
+    /// pull for the sealed iteration is served those exact bytes, and the
+    /// next round completes full — no short-iteration miscount.
+    #[test]
+    fn rollover_mid_encode_lands_in_prev_slot() {
+        let comp = by_name("identity", 0.0).unwrap();
+        let mut base = opts(comp.clone(), SyncMode::Full, 2);
+        base.iter_deadline = Some(Duration::from_millis(50));
+        let mut staged = Staged::new(ServerOptions { compress_threads: 2, ..base.clone() }, 2);
+        let mut sync_core = ServerCore::new(base);
+
+        let mut srep = Vec::new();
+        let mut trep = Vec::new();
+        let mk = |w: u32, iter: u64| push_data(comp.as_ref(), w, 5, iter, 16);
+        // Round 0: only worker 0 pushes; deadline seals it degraded.
+        trep.extend(staged.core.handle(0, Message::Push { key: 5, iter: 0, worker: 0, data: mk(0, 0) }));
+        srep.extend(sync_core.handle(0, Message::Push { key: 5, iter: 0, worker: 0, data: mk(0, 0) }));
+        trep.extend(staged.core.poll_deadlines(after_deadline()));
+        srep.extend(sync_core.poll_deadlines(after_deadline()));
+        // While the staged encode for round 0 is (potentially) still in
+        // flight, both workers push round 1 — the key rolls over with the
+        // seal mid-pipeline.
+        for w in 0..2u32 {
+            trep.extend(staged.core.handle(w, Message::Push { key: 5, iter: 1, worker: w, data: mk(w, 1) }));
+            srep.extend(sync_core.handle(w, Message::Push { key: 5, iter: 1, worker: w, data: mk(w, 1) }));
+        }
+        // Straggler pull for the sealed round 0 (now the retired slot) and
+        // current pulls for round 1.
+        trep.extend(staged.core.handle(1, Message::Pull { key: 5, iter: 0, worker: 1 }));
+        srep.extend(sync_core.handle(1, Message::Pull { key: 5, iter: 0, worker: 1 }));
+        for w in 0..2u32 {
+            trep.extend(staged.core.handle(w, Message::Pull { key: 5, iter: 1, worker: w }));
+            srep.extend(sync_core.handle(w, Message::Pull { key: 5, iter: 1, worker: w }));
+        }
+        trep.extend(staged.settle());
+
+        assert_eq!(sorted_replies(srep), sorted_replies(trep));
+        assert_eq!(staged.core.stats.degraded_iters, 1);
+        assert_eq!(staged.core.stats.short_iters, 0, "sealed rollover must not count short");
+        assert_counters_match(&sync_core.stats, &staged.core.stats, "rollover mid-encode");
+    }
+
+    #[test]
+    fn seal_seed_is_distinct_across_axes() {
+        let a = seal_seed(42, 1, 0);
+        assert_ne!(a, seal_seed(42, 2, 0), "key must change the seed");
+        assert_ne!(a, seal_seed(42, 1, 1), "iter must change the seed");
+        assert_ne!(a, seal_seed(43, 1, 0), "shard seed must change the seed");
+        assert_eq!(a, seal_seed(42, 1, 0), "seed must be deterministic");
+    }
+
+    /// The decode kernel matches the sparse-aware server aggregation it
+    /// replaces: zero buffer + `add_decompressed` for every scheme.
+    #[test]
+    fn decode_contribution_matches_add_decompressed() {
+        for (label, comp) in paper_suite() {
+            let mut rng = Xoshiro256::seed_from_u64(3);
+            let mut g = vec![0.0f32; 200];
+            rng.fill_normal(&mut g, 1.0);
+            let c = comp.compress(&g, &mut Ctx::new(&mut rng));
+            let buf = decode_contribution(comp.as_ref(), &c);
+            let mut want = vec![0.0f32; 200];
+            comp.add_decompressed(&c, &mut want);
+            assert_eq!(buf, want, "{label}");
+        }
+    }
+}

@@ -1,0 +1,234 @@
+//! Server-shard statistics: protocol counters, per-stage seconds for the
+//! staged pipeline (ingress → decode → reduce → seal → encode), queue-depth
+//! gauges, and the fixed-bucket round-latency histogram that feeds deadline
+//! auto-tuning (`server.iter_deadline_auto_margin`).
+//!
+//! Everything here is updated on the shard's single control thread — stage
+//! jobs report their own durations back through
+//! [`StageEvent`](crate::ps::stage::StageEvent)s — so the numbers stay
+//! truthful under concurrency: no counter is ever raced, and a stage's
+//! seconds are the sum of its jobs' self-measured CPU time, not a wall
+//! clock smeared across overlapping work.
+
+use std::time::Duration;
+
+/// Number of log2 buckets in [`LatencyHist`]: bucket `i` covers round
+/// latencies in `[2^i, 2^(i+1))` microseconds, so 32 buckets span 1 µs to
+/// ~71 minutes — far past any sane iteration deadline.
+pub const HIST_BUCKETS: usize = 32;
+
+/// Fixed-bucket (log2, microsecond-based) latency histogram.
+///
+/// Fixed buckets keep the type `Copy` (stats are returned by value on
+/// shutdown) and make `record` O(1) with no allocation on the control
+/// thread. Quantiles are read off the bucket *upper* edges, so a derived
+/// deadline is conservative: never tighter than the true quantile.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LatencyHist {
+    buckets: [u64; HIST_BUCKETS],
+    count: u64,
+}
+
+impl LatencyHist {
+    /// Record one round latency.
+    pub fn record(&mut self, d: Duration) {
+        let us = (d.as_micros().max(1)).min(u64::MAX as u128) as u64;
+        let idx = (63 - us.leading_zeros() as usize).min(HIST_BUCKETS - 1);
+        self.buckets[idx] += 1;
+        self.count += 1;
+    }
+
+    /// Rounds recorded.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Upper-bound quantile `q` in [0, 1]: the smallest bucket upper edge
+    /// below which at least `ceil(q * count)` recorded rounds fall.
+    /// `Duration::ZERO` when empty.
+    pub fn quantile(&self, q: f64) -> Duration {
+        if self.count == 0 {
+            return Duration::ZERO;
+        }
+        let target = ((self.count as f64) * q.clamp(0.0, 1.0)).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b;
+            if seen >= target {
+                return Duration::from_micros(1u64 << (i + 1).min(63));
+            }
+        }
+        // Unreachable: the cumulative sum reaches `count >= target`.
+        Duration::from_micros(1u64 << (HIST_BUCKETS as u32).min(63))
+    }
+
+    /// Fold another histogram in (multi-shard summaries).
+    pub fn merge(&mut self, other: &LatencyHist) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+    }
+}
+
+/// Statistics returned on shutdown.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct ServerStats {
+    pub pushes: u64,
+    pub pulls: u64,
+    /// Corrupt push blocks dropped at ingress (wire-validation failures,
+    /// wrong element counts, pushes for already-retired iterations).
+    pub rejected: u64,
+    /// Iterations that rolled over with fewer than `n_workers` pushes —
+    /// a rejected corrupt push (or a dead worker) left the round short.
+    /// The shard recovers by discarding the partial round instead
+    /// of asserting; each occurrence is counted here.
+    pub short_iters: u64,
+    /// Pulls dropped because their iteration was already retired past the
+    /// one-slot history (can only happen after a short iteration or a
+    /// hostile client; honest BSP workers never lag two iterations).
+    pub stale_pulls: u64,
+    /// Pulls that arrived before any push had established their key —
+    /// queued until the key appears (reordered cluster startup), where the
+    /// shard previously died on `.expect("pull before any push")`.
+    pub early_pulls: u64,
+    /// Messages a server should never receive (`Welcome`, `PullResp`,
+    /// mid-stream `Hello`, ...) — ignored and counted, never a panic.
+    pub unexpected: u64,
+    /// Rounds sealed by the iteration deadline with fewer than `n_workers`
+    /// contributions and served degraded (`served_with < n_workers`).
+    /// Disjoint from `short_iters`, which counts partial rounds that were
+    /// *discarded unserved* at rollover — a deadline-sealed round is never
+    /// double-counted there.
+    pub degraded_iters: u64,
+    /// Pushes that arrived for a round already sealed (completed normally
+    /// or by the deadline) — dropped and counted, never merged
+    /// retroactively into an aggregate other workers may have pulled.
+    pub late_pushes: u64,
+    /// Control-thread seconds spent framing/validating messages and
+    /// driving the round state machine — the *ingress* stage. Excludes
+    /// decode/reduce/encode kernel time even on the synchronous path
+    /// (`compress_threads = 0`), where those kernels run inline.
+    pub ingress_s: f64,
+    /// Summed job seconds decompressing push payloads (the *decode*
+    /// stage). With `compress_threads > 0` these jobs overlap ingress and
+    /// each other, so this is CPU time, not wall time.
+    pub decode_s: f64,
+    /// Control-thread seconds summing decoded contributions in
+    /// worker-index order and averaging (the *reduce* stage).
+    pub reduce_s: f64,
+    /// Summed job seconds on the second-way compression of sealed
+    /// aggregates (the *encode* stage).
+    pub encode_s: f64,
+    /// Peak number of decode jobs in flight at once (queue-depth gauge:
+    /// how much decompression actually overlapped).
+    pub decode_depth_peak: u64,
+    /// Peak number of encode jobs in flight at once (bounded by the
+    /// number of keys — encodes of one key serialize on its EF residual).
+    pub encode_depth_peak: u64,
+    /// Latency of every *full* (non-degraded) round, first push → round
+    /// complete. Degraded rounds are excluded — they take exactly the
+    /// deadline, and feeding them back would make auto-tuning
+    /// self-referential. Under deadline *auto-tuning* only, one extra
+    /// sample per degraded round may be added: the true arrival spread
+    /// revealed by a straggler's late push (the anti-ratchet feedback
+    /// that lets a too-tight derived deadline widen again).
+    pub round_hist: LatencyHist,
+}
+
+/// The one canonical rendering of the counter set, shared by every
+/// shutdown line (`bytepsc server` stdout, `cluster::serve` stderr) so a
+/// new counter cannot be added to one surface and silently missed on the
+/// other — EXPERIMENTS.md's degraded-round recipe reads these lines.
+impl std::fmt::Display for ServerStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} pushes | {} pulls | {} rejected | {} short iterations | \
+             {} degraded iterations | {} late pushes | {} stale pulls | \
+             {} early pulls | {} unexpected",
+            self.pushes,
+            self.pulls,
+            self.rejected,
+            self.short_iters,
+            self.degraded_iters,
+            self.late_pushes,
+            self.stale_pulls,
+            self.early_pulls,
+            self.unexpected
+        )?;
+        if self.round_hist.count() > 0 {
+            write!(
+                f,
+                " | round latency p50/p99 {:.1}/{:.1} ms over {} rounds",
+                self.round_hist.quantile(0.5).as_secs_f64() * 1e3,
+                self.round_hist.quantile(0.99).as_secs_f64() * 1e3,
+                self.round_hist.count()
+            )?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hist_records_and_quantiles() {
+        let mut h = LatencyHist::default();
+        assert_eq!(h.quantile(0.99), Duration::ZERO);
+        // 99 fast rounds (~100 µs) and one slow (~50 ms).
+        for _ in 0..99 {
+            h.record(Duration::from_micros(100));
+        }
+        h.record(Duration::from_millis(50));
+        assert_eq!(h.count(), 100);
+        // p50 sits in the fast bucket: [64, 128) µs → upper edge 128 µs.
+        assert_eq!(h.quantile(0.5), Duration::from_micros(128));
+        // p99 still in the fast bucket (99 of 100 rounds are fast)...
+        assert_eq!(h.quantile(0.99), Duration::from_micros(128));
+        // ...while p100 covers the straggler: [32768, 65536) µs.
+        assert_eq!(h.quantile(1.0), Duration::from_micros(65536));
+        // Quantiles are monotone in q.
+        let mut prev = Duration::ZERO;
+        for q in [0.0, 0.1, 0.5, 0.9, 0.99, 1.0] {
+            let v = h.quantile(q);
+            assert!(v >= prev, "quantile({q}) = {v:?} < {prev:?}");
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn hist_clamps_extremes() {
+        let mut h = LatencyHist::default();
+        h.record(Duration::ZERO); // clamps to the 1 µs bucket
+        h.record(Duration::from_secs(1 << 40)); // clamps to the top bucket
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.quantile(0.25), Duration::from_micros(2));
+        assert_eq!(h.quantile(1.0), Duration::from_micros(1u64 << HIST_BUCKETS as u32));
+    }
+
+    #[test]
+    fn hist_merges() {
+        let mut a = LatencyHist::default();
+        let mut b = LatencyHist::default();
+        a.record(Duration::from_micros(10));
+        b.record(Duration::from_micros(10_000));
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert!(a.quantile(1.0) >= Duration::from_micros(10_000));
+    }
+
+    #[test]
+    fn stats_display_appends_latency_only_when_recorded() {
+        let mut s = ServerStats::default();
+        let line = s.to_string();
+        assert!(line.contains("pushes"));
+        assert!(!line.contains("round latency"));
+        s.round_hist.record(Duration::from_millis(3));
+        let line = s.to_string();
+        assert!(line.contains("round latency"), "{line}");
+        assert!(line.contains("over 1 rounds"), "{line}");
+    }
+}

@@ -189,6 +189,12 @@ pub struct Cluster {
     /// Off = compression serializes behind the network (the
     /// "compression w/o pipelining" ablation arm).
     pub pipeline: bool,
+    /// Staged server shards (`server.compress_threads > 0`): the shard's
+    /// decode/encode CPU work overlaps its ingress (and the wire) like
+    /// the worker pipeline does. Off = the 1-thread reference shard,
+    /// whose aggregation CPU serializes *after* the wire — the
+    /// Agarwal-et-al failure mode on the aggregator side.
+    pub server_pipeline: bool,
     /// Partition block size in bytes for the pipeline depth estimate.
     pub pipeline_block_bytes: usize,
     /// Probability that any single block-push is lost or rejected in a
@@ -215,6 +221,7 @@ impl Default for Cluster {
             compress_threads: 16,
             cpu_scale: 48.0,
             pipeline: true,
+            server_pipeline: true,
             pipeline_block_bytes: 4 << 20,
             push_loss: 0.0,
             iter_deadline_s: 0.0,
@@ -305,13 +312,19 @@ pub fn step_breakdown(w: &Workload, c: &Cluster, p: &CompressorProfile) -> Break
     // (de)compression overlaps the wire — the visible cost is the max of
     // the two plus one block's worth of fill/drain, not their sum. With
     // the pipeline off, compression serializes behind the network in full
-    // (the Agarwal-et-al caution this subsystem exists to fix). NVLink
-    // stage added either way; gradient accumulation repeats the sync.
+    // (the Agarwal-et-al caution this subsystem exists to fix). The
+    // server's share only joins the overlap when its shards are *staged*
+    // (`server_pipeline`, modeling `server.compress_threads > 0`): a
+    // 1-thread shard decodes/encodes on its I/O thread, after the wire.
+    // NVLink stage added either way; gradient accumulation repeats the
+    // sync.
     let cpu_s = compress_s + decompress_s;
+    let overlapped_cpu = if c.server_pipeline { cpu_s } else { cpu_s - server_s };
+    let serial_cpu = cpu_s - overlapped_cpu;
     let comm_per_round = if c.pipeline {
         let depth =
             (w.grad_bytes() as f64 / c.pipeline_block_bytes.max(1) as f64).ceil().max(1.0);
-        wire_s.max(cpu_s) + wire_s.min(cpu_s) / depth + intra_s
+        wire_s.max(overlapped_cpu) + wire_s.min(overlapped_cpu) / depth + serial_cpu + intra_s
     } else {
         wire_s + cpu_s + intra_s
     };
@@ -505,6 +518,45 @@ mod tests {
         deep.pipeline_block_bytes = 1 << 20;
         let t_deep = step_breakdown(&w, &deep, &p);
         assert!(t_deep.total() <= t_on.total() + 1e-12);
+    }
+
+    /// Staged-server model: with `server_pipeline` off, the shard's CPU
+    /// share serializes after the wire instead of overlapping it — step
+    /// time can only grow, by exactly the server share that left the
+    /// overlap (bounded by what the overlap was hiding). Component costs
+    /// are identical either way (staging moves work in time).
+    #[test]
+    fn unstaged_server_serializes_its_cpu_share() {
+        let mut w = Workload::vgg16();
+        w.overlap = 0.0; // comm fully visible
+        let p = CompressorProfile {
+            name: "cpu-heavy".into(),
+            compress_ns_per_elem: 20.0,
+            decompress_ns_per_elem: 10.0,
+            wire_bytes_fn: |n, bpe| (n as f64 * bpe).ceil() as usize,
+            param: 2.0,
+        };
+        let staged = Cluster::default();
+        let mut unstaged = staged.clone();
+        unstaged.server_pipeline = false;
+        let t_staged = step_breakdown(&w, &staged, &p);
+        let t_unstaged = step_breakdown(&w, &unstaged, &p);
+        assert!((t_staged.compress_s - t_unstaged.compress_s).abs() < 1e-12);
+        assert!((t_staged.decompress_s - t_unstaged.decompress_s).abs() < 1e-12);
+        assert!((t_staged.wire_s - t_unstaged.wire_s).abs() < 1e-12);
+        let penalty = t_unstaged.total() - t_staged.total();
+        assert!(penalty > 0.0, "unstaged shard must cost step time, got {penalty}");
+        // With the block pipeline ALSO off everything serializes anyway:
+        // the server knob changes nothing.
+        let mut ser_a = staged.clone();
+        ser_a.pipeline = false;
+        let mut ser_b = unstaged.clone();
+        ser_b.pipeline = false;
+        assert!(
+            (step_breakdown(&w, &ser_a, &p).total() - step_breakdown(&w, &ser_b, &p).total())
+                .abs()
+                < 1e-12
+        );
     }
 
     /// Degraded-round model: zero loss is a strict no-op on the breakdown;

@@ -167,6 +167,37 @@ fn tcp_cluster_topk_ef_matches_inproc() {
     }
 }
 
+/// Staged-shard acceptance over real TCP: servers running the
+/// ingress → decode → reduce → seal → encode pipeline
+/// (`server.compress_threads = 4`) produce aggregates **bit-identical**
+/// to the synchronous inproc reference (`compress_threads = 0`) — for a
+/// compressed two-way EF run, not just identity. Exact equality (not
+/// allclose) is the point: the staged reduce sums in worker-index order,
+/// so the f32 bits are independent of socket arrival order, executor, and
+/// decode completion order.
+#[test]
+fn staged_server_thread_cluster_bit_identical_to_sync() {
+    let (dim, tensors, iters, nodes, servers) = (1536, 2, 4, 3, 2);
+    let mut cfg = cluster_cfg("topk", 0.1, SyncMode::CompressedEf, nodes);
+    cfg.server.compress_threads = 4;
+    let mut ref_cfg = cfg.clone();
+    ref_cfg.server.compress_threads = 0; // the synchronous reference
+    ref_cfg.cluster.addresses = (0..servers).map(|s| format!("ref:{s}")).collect();
+    let want = inproc_reference(&ref_cfg, dim, tensors, iters);
+
+    let reports = run_thread_cluster(cfg, servers, dim, tensors, iters);
+    for (rank, rep) in reports.iter().enumerate() {
+        assert_eq!(rep.aggregates.len(), iters);
+        for (it, (got, expect)) in rep.aggregates.iter().zip(&want).enumerate() {
+            assert_eq!(
+                got, expect,
+                "worker {rank} iteration {it}: staged TCP aggregate differs from the \
+                 synchronous inproc shard"
+            );
+        }
+    }
+}
+
 /// Stray clients — one that sends a non-Hello frame, one that connects
 /// and stays silent — are isolated on their own handshake threads; the
 /// real workers still register and complete the run.
@@ -327,6 +358,8 @@ fn opts_identity(workers: usize) -> ServerOptions {
         seed: 7,
         max_keys: 0,
         iter_deadline: None,
+        compress_threads: 0,
+        deadline_auto_margin: 0.0,
     }
 }
 
@@ -452,9 +485,14 @@ fn free_port() -> u16 {
 
 /// The real thing: separate OS processes (`bytepsc server` x2 + `bytepsc
 /// worker` x2) over localhost TCP, aggregates dumped to disk, compared
-/// bit-for-bit against the single-process inproc fabric.
+/// bit-for-bit against the single-process inproc fabric. The servers run
+/// the *staged* shard pipeline (`--compress-threads 4`) while the inproc
+/// reference runs synchronous shards — so this is also the end-to-end
+/// staged-vs-synchronous bit-identity acceptance over real sockets and
+/// real OS processes. (The degraded-round process test below keeps
+/// `compress_threads = 0`, so CI exercises both paths.)
 #[test]
-fn process_cluster_bit_identical_to_inproc() {
+fn process_cluster_staged_bit_identical_to_inproc() {
     let bin = env!("CARGO_BIN_EXE_bytepsc");
     let (dim, tensors, iters, nodes, servers) = (3000usize, 3usize, 4usize, 2usize, 2usize);
     let seed = 42u64;
@@ -476,6 +514,7 @@ fn process_cluster_bit_identical_to_inproc() {
             s("--dim"), dim.to_string(),
             s("--tensors"), tensors.to_string(),
             s("--seed"), seed.to_string(),
+            s("--compress-threads"), s("4"),
         ];
         let child =
             std::process::Command::new(bin).args(&args).spawn().expect("spawn server");

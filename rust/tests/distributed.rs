@@ -232,7 +232,7 @@ fn tcp_corrupt_frame_is_protocol_error() {
 
 /// A single large tensor partitions into distinct per-block wire keys (the
 /// unit the balanced shard plan spreads across servers — plan behaviour
-/// itself is covered in `ps::tests::keyed_plan_spreads_blocks_of_one_tensor`).
+/// itself is covered in `ps::plan::tests::keyed_plan_spreads_blocks_of_one_tensor`).
 #[test]
 fn one_tensor_partitions_into_distinct_block_keys() {
     let dim = 4096;
@@ -278,6 +278,8 @@ fn tcp_fabric_matches_reference() {
                 seed: 99,
                 max_keys: 0,
                 iter_deadline: None,
+                compress_threads: 0,
+                deadline_auto_margin: 0.0,
             },
             eps,
         );
