@@ -1,60 +1,105 @@
-//! Compressor micro-benchmarks (custom harness; criterion unavailable
-//! offline — `cargo bench` runs this binary).
+//! Compressor kernel micro-benchmarks (custom harness; criterion
+//! unavailable offline — `cargo bench --bench compressors` runs this).
 //!
-//! Prints per-method compress/decompress throughput, wire size, and the
-//! §4.2.2 operator-fusion ablation (fused vs naive EF residual update).
+//! Reports **GB/s** — input f32 bytes per wall second, decimal GB — for
+//! the three hot kernels of every `paper_suite()` scheme (compress,
+//! decompress, EF-fused compress), plus the §4.2.2 operator-fusion
+//! ablation, and writes the whole table to `BENCH_compressors.json`.
+//!
+//! The element count is overridable for the CI smoke leg (which only
+//! checks the bench runs and emits well-formed JSON, not the numbers):
+//! `COMPRESSORS_BENCH_ELEMS=4096 cargo bench --bench compressors`
+//! or `cargo bench --bench compressors -- 4096`.
 
 use byteps_compress::compress::{self, ef::EfState, Ctx};
+use byteps_compress::configx::json::Json;
 use byteps_compress::metrics::markdown_table;
 use byteps_compress::util::rng::Xoshiro256;
-use byteps_compress::util::timer::{bench, black_box};
+use byteps_compress::util::timer::{bench, black_box, BenchResult};
+
+/// GB/s over the uncompressed input (bytes/ns == decimal GB/s).
+fn gbps(r: &BenchResult, bytes: usize) -> f64 {
+    bytes as f64 / r.mean_ns
+}
 
 fn main() {
-    let n = 1 << 21; // 2M elements = 8 MiB, an upper-mid transformer tensor
+    let n: usize = std::env::var("COMPRESSORS_BENCH_ELEMS")
+        .ok()
+        .or_else(|| std::env::args().nth(1))
+        .map(|s| s.parse().expect("element count must be an integer"))
+        .unwrap_or(1 << 21); // 2M elements = 8 MiB, an upper-mid transformer tensor
+    let bytes = 4 * n;
+    let (warmup, iters) = (1usize, 7usize);
+
     let mut rng = Xoshiro256::seed_from_u64(1);
     let mut x = vec![0.0f32; n];
     rng.fill_normal(&mut x, 1.0);
 
-    println!("# compressors micro-bench ({} elements)\n", n);
+    println!(
+        "# compressor kernels ({n} elements, {:.1} MiB input)\n",
+        bytes as f64 / (1 << 20) as f64
+    );
     let mut rows = Vec::new();
+    let mut scheme_docs = Vec::new();
     for (label, comp) in compress::paper_suite() {
         let mut r1 = Xoshiro256::seed_from_u64(2);
-        let rb = bench(&format!("{label} compress"), 1, 7, || {
+        let rc = bench(&format!("{label} compress"), warmup, iters, || {
             let c = comp.compress(&x, &mut Ctx::new(&mut r1));
             black_box(c.nbytes());
         });
         let mut r2 = Xoshiro256::seed_from_u64(2);
         let wire = comp.compress(&x, &mut Ctx::new(&mut r2));
         let mut out = vec![0.0f32; n];
-        let rd = bench(&format!("{label} decompress"), 1, 7, || {
+        let rd = bench(&format!("{label} decompress"), warmup, iters, || {
             comp.decompress(&wire, &mut out);
             black_box(out[0]);
         });
+        // Fused EF cycle on a fresh input copy per iteration (the copy is
+        // part of no scheme's kernel but identical across schemes).
+        let mut r3 = Xoshiro256::seed_from_u64(2);
+        let mut q = vec![0.0f32; n];
+        let rf = bench(&format!("{label} ef-fused"), warmup, iters, || {
+            q.copy_from_slice(&x);
+            let c = comp.compress_ef_fused(&mut q, &mut Ctx::new(&mut r3));
+            black_box(c.nbytes());
+        });
         rows.push(vec![
             label.to_string(),
-            format!("{:.0} M/s", rb.throughput(n as f64) / 1e6),
-            format!("{:.0} M/s", rd.throughput(n as f64) / 1e6),
+            format!("{:.2} GB/s", gbps(&rc, bytes)),
+            format!("{:.2} GB/s", gbps(&rd, bytes)),
+            format!("{:.2} GB/s", gbps(&rf, bytes)),
             format!("{:.3} B/elem", wire.nbytes() as f64 / n as f64),
             format!("{:.0}x", wire.rate_vs_f32()),
         ]);
+        scheme_docs.push(Json::obj(vec![
+            ("label", Json::str(label)),
+            ("name", Json::str(comp.name())),
+            ("compress_gbps", Json::num(gbps(&rc, bytes))),
+            ("decompress_gbps", Json::num(gbps(&rd, bytes))),
+            ("ef_fused_gbps", Json::num(gbps(&rf, bytes))),
+            ("wire_bytes_per_elem", Json::num(wire.nbytes() as f64 / n as f64)),
+            ("rate_vs_f32", Json::num(wire.rate_vs_f32())),
+        ]));
     }
     println!(
         "{}",
         markdown_table(
-            &["method", "compress", "decompress", "wire", "rate vs f32"],
+            &["method", "compress", "decompress", "ef fused", "wire", "rate vs f32"],
             &rows
         )
     );
 
     // §4.2.2 operator-fusion ablation: EF residual update fused vs naive.
-    println!("\n# operator fusion ablation (EF cycle, {} elements)\n", n);
+    println!("\n# operator fusion ablation (EF cycle, {n} elements)\n");
     let mut rows = Vec::new();
+    let mut ablation_docs = Vec::new();
     for scheme in ["topk", "randomk", "onebit", "fp16"] {
         let comp = compress::by_name(scheme, 0.001).unwrap();
+        let mut paths_gbps = Vec::new();
         for (fused, tag) in [(true, "fused"), (false, "naive")] {
             let mut ef = EfState::new(fused);
             let mut r = Xoshiro256::seed_from_u64(3);
-            let res = bench(&format!("{scheme} ef {tag}"), 1, 7, || {
+            let res = bench(&format!("{scheme} ef {tag}"), warmup, iters, || {
                 let c = ef.compress(1, &x, comp.as_ref(), &mut Ctx::new(&mut r));
                 black_box(c.nbytes());
             });
@@ -62,9 +107,30 @@ fn main() {
                 scheme.to_string(),
                 tag.to_string(),
                 format!("{:.2} ms", res.mean_ms()),
-                format!("{:.0} M/s", res.throughput(n as f64) / 1e6),
+                format!("{:.2} GB/s", gbps(&res, bytes)),
             ]);
+            paths_gbps.push(gbps(&res, bytes));
         }
+        ablation_docs.push(Json::obj(vec![
+            ("scheme", Json::str(scheme)),
+            ("fused_gbps", Json::num(paths_gbps[0])),
+            ("naive_gbps", Json::num(paths_gbps[1])),
+            ("fused_speedup", Json::num(paths_gbps[0] / paths_gbps[1])),
+        ]));
     }
     println!("{}", markdown_table(&["scheme", "residual path", "per cycle", "throughput"], &rows));
+
+    let doc = Json::obj(vec![
+        ("bench", Json::str("compressor_kernels")),
+        ("elems", Json::num(n as f64)),
+        ("input_bytes", Json::num(bytes as f64)),
+        ("warmup", Json::num(warmup as f64)),
+        ("iters", Json::num(iters as f64)),
+        ("unit", Json::str("GB/s = uncompressed input f32 bytes per wall second (decimal)")),
+        ("schemes", Json::Arr(scheme_docs)),
+        ("fusion_ablation", Json::Arr(ablation_docs)),
+    ]);
+    std::fs::write("BENCH_compressors.json", doc.pretty())
+        .expect("write BENCH_compressors.json");
+    println!("\nwrote BENCH_compressors.json");
 }

@@ -135,7 +135,11 @@ fn get_block(r: &mut Reader) -> Result<Compressed, CommError> {
         .ok_or_else(|| CommError::Protocol("bad scheme id".into()))?;
     let n = r.u64()? as usize;
     let plen = r.u32()? as usize;
-    let payload = r.bytes(plen)?.to_vec();
+    // The decoded payload is the dominant per-frame allocation on the
+    // server's steady-state recv path; rent it from the pool so consumers
+    // that `give_bytes` it back after use close the recycling loop.
+    let mut payload = super::BufPool::global().rent_bytes_empty();
+    payload.extend_from_slice(r.bytes(plen)?);
     let c = Compressed { scheme, n, payload };
     crate::compress::validate_wire(&c).map_err(CommError::Protocol)?;
     Ok(c)
@@ -171,64 +175,81 @@ pub fn check_len(msg: &Message) -> Result<usize, CommError> {
 /// Encode a message body (without the length prefix).
 pub fn encode_body(msg: &Message) -> Vec<u8> {
     let mut b = Vec::with_capacity(body_len(msg));
+    encode_body_into(msg, &mut b);
+    b
+}
+
+/// Serialize a message body by appending to `b` (no clearing, no length
+/// prefix) — the shared core of [`encode_body`] and [`encode_into`].
+fn encode_body_into(msg: &Message, b: &mut Vec<u8>) {
+    let start = b.len();
     match msg {
         Message::Push { key, iter, worker, data } => {
             b.push(TAG_PUSH);
-            put_u64(&mut b, *key);
-            put_u64(&mut b, *iter);
-            put_u32(&mut b, *worker);
-            put_block(&mut b, data);
+            put_u64(b, *key);
+            put_u64(b, *iter);
+            put_u32(b, *worker);
+            put_block(b, data);
         }
         Message::Pull { key, iter, worker } => {
             b.push(TAG_PULL);
-            put_u64(&mut b, *key);
-            put_u64(&mut b, *iter);
-            put_u32(&mut b, *worker);
+            put_u64(b, *key);
+            put_u64(b, *iter);
+            put_u32(b, *worker);
         }
         Message::PullResp { key, iter, served_with, data } => {
             b.push(TAG_PULL_RESP);
-            put_u64(&mut b, *key);
-            put_u64(&mut b, *iter);
-            put_u16(&mut b, *served_with);
-            put_block(&mut b, data);
+            put_u64(b, *key);
+            put_u64(b, *iter);
+            put_u16(b, *served_with);
+            put_block(b, data);
         }
         Message::Ack { key, iter } => {
             b.push(TAG_ACK);
-            put_u64(&mut b, *key);
-            put_u64(&mut b, *iter);
+            put_u64(b, *key);
+            put_u64(b, *iter);
         }
         Message::Hello { worker, n_keys, config } => {
             b.push(TAG_HELLO);
-            put_u32(&mut b, *worker);
-            put_u64(&mut b, *n_keys);
-            put_u64(&mut b, *config);
+            put_u32(b, *worker);
+            put_u64(b, *n_keys);
+            put_u64(b, *config);
         }
         Message::Welcome { n_workers, shard, seed, plan } => {
             b.push(TAG_WELCOME);
-            put_u32(&mut b, *n_workers);
-            put_u32(&mut b, *shard);
-            put_u64(&mut b, *seed);
-            put_u32(&mut b, plan.len() as u32);
+            put_u32(b, *n_workers);
+            put_u32(b, *shard);
+            put_u64(b, *seed);
+            put_u32(b, plan.len() as u32);
             for &(key, server) in plan {
-                put_u64(&mut b, key);
-                put_u32(&mut b, server);
+                put_u64(b, key);
+                put_u32(b, server);
             }
         }
         Message::Shutdown => b.push(TAG_SHUTDOWN),
     }
-    debug_assert_eq!(b.len(), body_len(msg));
-    b
+    debug_assert_eq!(b.len() - start, body_len(msg));
 }
 
 /// Encode a full frame (length prefix + body). Fails — before serializing
 /// anything — if the body would exceed [`MAX_FRAME_LEN`], the same cap the
 /// receive path enforces.
 pub fn encode(msg: &Message) -> Result<Vec<u8>, CommError> {
-    let len = check_len(msg)?;
-    let mut out = Vec::with_capacity(4 + len);
-    put_u32(&mut out, len as u32);
-    out.extend_from_slice(&encode_body(msg));
+    let mut out = Vec::new();
+    encode_into(msg, &mut out)?;
     Ok(out)
+}
+
+/// Like [`encode`], but serializes into a caller-provided buffer (cleared
+/// first, capacity retained) — the per-connection send scratch of the TCP
+/// transport reuses one buffer across frames instead of allocating each.
+pub fn encode_into(msg: &Message, out: &mut Vec<u8>) -> Result<(), CommError> {
+    let len = check_len(msg)?;
+    out.clear();
+    out.reserve(4 + len);
+    put_u32(out, len as u32);
+    encode_body_into(msg, out);
+    Ok(())
 }
 
 /// Decode a message body (frame already stripped of its length prefix).

@@ -9,7 +9,10 @@
 
 pub mod frame;
 pub mod inproc;
+pub mod pool;
 pub mod tcp;
+
+pub use pool::BufPool;
 
 use crate::compress::Compressed;
 

@@ -1,0 +1,172 @@
+//! Bounded global buffer pool for the hot wire paths.
+//!
+//! The steady-state TCP loop used to allocate per frame: `vec![0u8; len]`
+//! for every received body, a fresh `Vec<u8>` for every encoded frame, a
+//! fresh `Vec<u8>` payload for every decoded block, and `vec![0.0f32; n]`
+//! for every decode/reduce scratch. [`BufPool`] recycles all four:
+//! transports and the staged server *rent* buffers here and *give* them
+//! back when the data they carry dies (see DESIGN.md §Buffer pool for the
+//! ownership rules).
+//!
+//! Recycling is cooperative, not tracked: a buffer that is never given back
+//! is simply dropped by its owner and the pool refills from future gives —
+//! a panicking job can never wedge the pool, it only costs one buffer
+//! (panic safety). The pool is bounded both in buffer count and per-buffer
+//! capacity so a burst or one oversized frame cannot pin memory forever.
+
+use std::sync::{Mutex, MutexGuard};
+
+/// Maximum buffers retained per element type. Sized for the worst
+/// steady-state concurrency in-tree (shards × pipeline depth × in-flight
+/// windows); beyond it, `give_*` simply drops.
+const MAX_POOLED: usize = 64;
+
+/// Buffers with a larger capacity than this are dropped on `give_*` instead
+/// of retained, so one giant frame cannot pin its allocation forever.
+const MAX_RETAINED_CAP: usize = 64 << 20;
+
+/// A bounded LIFO pool of `Vec<u8>` / `Vec<f32>` buffers.
+pub struct BufPool {
+    bytes: Mutex<Vec<Vec<u8>>>,
+    f32s: Mutex<Vec<Vec<f32>>>,
+}
+
+impl BufPool {
+    pub const fn new() -> BufPool {
+        BufPool { bytes: Mutex::new(Vec::new()), f32s: Mutex::new(Vec::new()) }
+    }
+
+    /// The process-wide pool used by the TCP transport, the staged server,
+    /// and the worker pipeline.
+    pub fn global() -> &'static BufPool {
+        static GLOBAL: BufPool = BufPool::new();
+        &GLOBAL
+    }
+
+    // A poisoned mutex only means some thread panicked mid-push/pop; the
+    // Vec-of-Vecs is still structurally valid, so keep serving.
+    fn bytes_guard(&self) -> MutexGuard<'_, Vec<Vec<u8>>> {
+        self.bytes.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn f32s_guard(&self) -> MutexGuard<'_, Vec<Vec<f32>>> {
+        self.f32s.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Rent a zero-filled byte buffer of exactly `len` elements.
+    pub fn rent_bytes(&self, len: usize) -> Vec<u8> {
+        let mut v = self.bytes_guard().pop().unwrap_or_default();
+        v.clear();
+        v.resize(len, 0);
+        v
+    }
+
+    /// Rent an empty byte buffer (for appenders like `frame::encode_into`).
+    pub fn rent_bytes_empty(&self) -> Vec<u8> {
+        let mut v = self.bytes_guard().pop().unwrap_or_default();
+        v.clear();
+        v
+    }
+
+    /// Return a byte buffer to the pool (bounded; excess is dropped).
+    pub fn give_bytes(&self, v: Vec<u8>) {
+        if v.capacity() == 0 || v.capacity() > MAX_RETAINED_CAP {
+            return;
+        }
+        let mut g = self.bytes_guard();
+        if g.len() < MAX_POOLED {
+            g.push(v);
+        }
+    }
+
+    /// Rent a zero-filled f32 buffer of exactly `n` elements.
+    pub fn rent_f32(&self, n: usize) -> Vec<f32> {
+        let mut v = self.f32s_guard().pop().unwrap_or_default();
+        v.clear();
+        v.resize(n, 0.0);
+        v
+    }
+
+    /// Rent an f32 buffer initialized as a copy of `src` (the worker
+    /// pipeline's per-block gradient staging copy).
+    pub fn rent_f32_copy(&self, src: &[f32]) -> Vec<f32> {
+        let mut v = self.f32s_guard().pop().unwrap_or_default();
+        v.clear();
+        v.extend_from_slice(src);
+        v
+    }
+
+    /// Return an f32 buffer to the pool (bounded; excess is dropped).
+    pub fn give_f32(&self, v: Vec<f32>) {
+        if v.capacity() == 0 || v.capacity() * 4 > MAX_RETAINED_CAP {
+            return;
+        }
+        let mut g = self.f32s_guard();
+        if g.len() < MAX_POOLED {
+            g.push(v);
+        }
+    }
+
+    /// Buffers currently pooled, `(bytes, f32s)` — diagnostics/tests.
+    pub fn pooled(&self) -> (usize, usize) {
+        (self.bytes_guard().len(), self.f32s_guard().len())
+    }
+}
+
+impl Default for BufPool {
+    fn default() -> Self {
+        BufPool::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rent_reuses_returned_buffers() {
+        let pool = BufPool::new();
+        let mut a = pool.rent_bytes(100);
+        a[0] = 7;
+        let cap = a.capacity();
+        pool.give_bytes(a);
+        assert_eq!(pool.pooled().0, 1);
+        let b = pool.rent_bytes(50);
+        assert_eq!(b.len(), 50);
+        assert!(b.capacity() >= cap.min(50));
+        assert!(b.iter().all(|&x| x == 0), "rented buffer must be zeroed");
+        assert_eq!(pool.pooled().0, 0);
+    }
+
+    #[test]
+    fn f32_rents_are_zeroed_to_len() {
+        let pool = BufPool::new();
+        let mut a = pool.rent_f32(8);
+        a.fill(3.5);
+        pool.give_f32(a);
+        let b = pool.rent_f32(16);
+        assert_eq!(b.len(), 16);
+        assert!(b.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn pool_is_bounded() {
+        let pool = BufPool::new();
+        for _ in 0..(MAX_POOLED + 10) {
+            pool.give_bytes(vec![0u8; 16]);
+        }
+        assert_eq!(pool.pooled().0, MAX_POOLED);
+        // Zero-capacity and oversized buffers are never retained.
+        pool.give_f32(Vec::new());
+        assert_eq!(pool.pooled().1, 0);
+    }
+
+    #[test]
+    fn empty_rent_has_zero_len() {
+        let pool = BufPool::new();
+        pool.give_bytes(vec![1u8; 32]);
+        let v = pool.rent_bytes_empty();
+        assert!(v.is_empty());
+        assert!(v.capacity() >= 32);
+    }
+}

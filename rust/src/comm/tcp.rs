@@ -17,10 +17,18 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
+/// One half of the connection plus its reusable scratch buffer. Scratch
+/// lives under the same lock as the stream it serves, so the frame in
+/// flight and the buffer holding it can never be split across threads.
+struct Half {
+    stream: TcpStream,
+    scratch: Vec<u8>,
+}
+
 pub struct TcpEndpoint {
     // Separate read/write halves so send and recv don't serialize on one lock.
-    reader: Mutex<TcpStream>,
-    writer: Mutex<TcpStream>,
+    reader: Mutex<Half>,
+    writer: Mutex<Half>,
     sent: Arc<AtomicU64>,
 }
 
@@ -29,8 +37,8 @@ impl TcpEndpoint {
         stream.set_nodelay(true)?;
         let reader = stream.try_clone()?;
         Ok(TcpEndpoint {
-            reader: Mutex::new(reader),
-            writer: Mutex::new(stream),
+            reader: Mutex::new(Half { stream: reader, scratch: Vec::new() }),
+            writer: Mutex::new(Half { stream, scratch: Vec::new() }),
             sent: Arc::new(AtomicU64::new(0)),
         })
     }
@@ -43,7 +51,7 @@ impl TcpEndpoint {
     /// a connected-but-silent peer cannot stall a server's accept loop).
     /// `None` restores indefinite blocking.
     pub fn set_read_timeout(&self, dur: Option<Duration>) -> std::io::Result<()> {
-        self.reader.lock().unwrap().set_read_timeout(dur)
+        self.reader.lock().unwrap().stream.set_read_timeout(dur)
     }
 
     /// Non-consuming liveness probe: true once the peer has closed its
@@ -54,12 +62,12 @@ impl TcpEndpoint {
     /// that registered and then died before the run started.
     pub fn peer_closed(&self) -> bool {
         let r = self.reader.lock().unwrap();
-        if r.set_nonblocking(true).is_err() {
+        if r.stream.set_nonblocking(true).is_err() {
             return true;
         }
         let mut b = [0u8; 1];
-        let peeked = r.peek(&mut b);
-        let restored = r.set_nonblocking(false);
+        let peeked = r.stream.peek(&mut b);
+        let restored = r.stream.set_nonblocking(false);
         matches!(peeked, Ok(0)) || restored.is_err()
     }
 
@@ -75,18 +83,25 @@ impl TcpEndpoint {
     /// attacker-declared length (up to 4 GiB) to realign would hand a
     /// hostile peer exactly the read-pinning the handshake bounds exclude.
     pub fn recv_bounded(&self, cap: usize) -> Result<Message, CommError> {
-        let mut r = self.reader.lock().unwrap();
+        let mut guard = self.reader.lock().unwrap();
+        let Half { stream, scratch } = &mut *guard;
         let mut len_buf = [0u8; 4];
-        read_exact(&mut r, &mut len_buf)?;
+        read_exact(stream, &mut len_buf)?;
         let len = u32::from_le_bytes(len_buf) as usize;
         if len > cap {
             return Err(CommError::Io(format!(
                 "peer claimed an oversized frame: {len} bytes (cap {cap}); dropping connection"
             )));
         }
-        let mut body = vec![0u8; len];
-        read_exact(&mut r, &mut body)?;
-        frame::decode_body(&body)
+        // Per-connection scratch: the body buffer is reused frame to frame,
+        // so the steady-state recv path stops allocating once the buffer
+        // has grown to the connection's largest frame. A recoverable
+        // decode error (`CommError::Protocol`) consumed exactly `len`
+        // bytes, so the stream — and the scratch — stay frame-aligned.
+        scratch.clear();
+        scratch.resize(len, 0);
+        read_exact(stream, scratch)?;
+        frame::decode_body(scratch)
     }
 }
 
@@ -123,12 +138,22 @@ fn read_exact(stream: &mut TcpStream, buf: &mut [u8]) -> Result<(), CommError> {
 
 impl Endpoint for TcpEndpoint {
     fn send(&self, msg: Message) -> Result<(), CommError> {
+        let mut guard = self.writer.lock().unwrap();
+        let Half { stream, scratch } = &mut *guard;
         // Oversized messages fail here, symmetrically with the recv-side
-        // cap — never serialized, never on the wire.
-        let bytes = frame::encode(&msg)?;
-        self.sent.fetch_add(bytes.len() as u64, Ordering::Relaxed);
-        let mut w = self.writer.lock().unwrap();
-        w.write_all(&bytes).map_err(|e| CommError::Io(e.to_string()))
+        // cap — never serialized, never on the wire. Serialization reuses
+        // the connection's send scratch, so a steady stream of frames
+        // costs no allocation once the buffer has grown to the largest.
+        frame::encode_into(&msg, scratch)?;
+        self.sent.fetch_add(scratch.len() as u64, Ordering::Relaxed);
+        let res = stream.write_all(scratch).map_err(|e| CommError::Io(e.to_string()));
+        // The frame is on the wire (or the connection is dead); either way
+        // the message's block payload dies here — recycle it. The in-proc
+        // transport must NOT do this: it hands the message itself over.
+        if let Message::Push { data, .. } | Message::PullResp { data, .. } = msg {
+            super::BufPool::global().give_bytes(data.payload);
+        }
+        res
     }
 
     fn recv(&self) -> Result<Message, CommError> {
@@ -140,10 +165,10 @@ impl Endpoint for TcpEndpoint {
         // blocking mode *first* — leaving the socket non-blocking would
         // turn every later recv() into a WouldBlock error.
         let r = self.reader.lock().unwrap();
-        r.set_nonblocking(true).map_err(|e| CommError::Io(e.to_string()))?;
+        r.stream.set_nonblocking(true).map_err(|e| CommError::Io(e.to_string()))?;
         let mut len_buf = [0u8; 4];
-        let peeked = r.peek(&mut len_buf);
-        let restored = r.set_nonblocking(false);
+        let peeked = r.stream.peek(&mut len_buf);
+        let restored = r.stream.set_nonblocking(false);
         drop(r);
         restored.map_err(|e| CommError::Io(e.to_string()))?;
         match peeked {
@@ -304,6 +329,37 @@ mod tests {
             matches!(err, CommError::Io(ref m) if m.contains("oversized")),
             "got {err:?}"
         );
+    }
+
+    /// A recoverable `Protocol` error (well-framed but undecodable body)
+    /// must leave the pooled/scratch-buffered endpoint frame-aligned: the
+    /// very next recv on the same connection delivers the next frame
+    /// intact. Guards the scratch-reuse recv path against ever consuming
+    /// more or fewer bytes than the length prefix declared.
+    #[test]
+    fn scratch_recv_stays_frame_aligned_after_protocol_error() {
+        use std::io::Write;
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut raw = TcpStream::connect(addr).unwrap();
+        let (stream, _) = listener.accept().unwrap();
+        let ep = TcpEndpoint::from_stream(stream).unwrap();
+
+        // Frame 1: correct length prefix, garbage body (unknown tag).
+        let bad_body = [99u8, 1, 2, 3];
+        raw.write_all(&(bad_body.len() as u32).to_le_bytes()).unwrap();
+        raw.write_all(&bad_body).unwrap();
+        // Frame 2: a good message on the same connection.
+        raw.write_all(&frame::encode(&Message::Ack { key: 7, iter: 9 }).unwrap()).unwrap();
+
+        let err = ep.recv().unwrap_err();
+        assert!(matches!(err, CommError::Protocol(_)), "got {err:?}");
+        assert_eq!(ep.recv().unwrap(), Message::Ack { key: 7, iter: 9 });
+
+        // And a third frame, after the error, still round-trips — the
+        // reader scratch was reused twice by now.
+        raw.write_all(&frame::encode(&Message::Shutdown).unwrap()).unwrap();
+        assert_eq!(ep.recv().unwrap(), Message::Shutdown);
     }
 
     #[test]

@@ -12,7 +12,7 @@
 //! `python/compile/kernels/quantize.py` and cross-checked in
 //! `rust/tests/pallas_parity.rs`.
 
-use super::{Compressed, Compressor, Ctx, SchemeId};
+use super::{kernels, Compressed, Compressor, Ctx, SchemeId};
 use crate::util::max_abs;
 
 /// Pack a stream of `bits`-wide codes into bytes (LSB-first).
@@ -82,6 +82,33 @@ impl<'a> BitUnpacker<'a> {
     }
 }
 
+/// Decode the packed code stream into `out` through `dec`, chunked: eight
+/// codes of `bits` bits always span exactly `bits` whole bytes, so the wide
+/// path stages a `u128` per group and extracts codes with shifts (no
+/// per-code byte feed, no bounds checks). The scalar `BitUnpacker` tail
+/// covers `n % 8` codes and truncated payloads (zero-extended), keeping the
+/// output bit-identical to pulling every code through `BitUnpacker`.
+fn unpack_map(packed: &[u8], bits: u32, out: &mut [f32], mut dec: impl FnMut(u32) -> f32) {
+    let b = bits as usize;
+    let mask = (1u128 << b) - 1;
+    let mut done = 0usize;
+    let mut oc = out.chunks_exact_mut(kernels::CHUNK);
+    for (o, by) in oc.by_ref().zip(packed.chunks_exact(b)) {
+        let o: &mut [f32; kernels::CHUNK] = o.try_into().unwrap();
+        let mut le = [0u8; 16];
+        le[..b].copy_from_slice(by);
+        let acc = u128::from_le_bytes(le);
+        for (i, slot) in o.iter_mut().enumerate() {
+            *slot = dec(((acc >> (i * b)) & mask) as u32);
+        }
+        done += 1;
+    }
+    let mut up = BitUnpacker::new(&packed[done * b..]);
+    for o in out[done * kernels::CHUNK..].iter_mut() {
+        *o = dec(up.pull(bits));
+    }
+}
+
 /// b-bit linear (uniform) stochastic quantization.
 ///
 /// With `L = 2^(b-1) - 1` levels per sign and scale `s = max|x|`, each value
@@ -119,25 +146,43 @@ impl Compressor for LinearDither {
     fn compress(&self, x: &[f32], ctx: &mut Ctx) -> Compressed {
         let scale = max_abs(x);
         let l = self.levels();
-        let mut payload = Vec::new();
+        let mut payload = Vec::with_capacity(self.wire_nbytes(x.len()));
         super::put_f32(&mut payload, scale);
-        let mut packer = BitPacker::new(x.len(), self.bits);
+        // Stage eight codes at a time, then pack them in one byte-aligned
+        // shot (`kernels::pack_codes`). The RNG draw order is unchanged:
+        // exactly one `next_f32` per element, in slice order.
+        let mut codes = [0u32; kernels::CHUNK];
         if scale > 0.0 {
             let inv = l as f32 / scale;
-            for &v in x {
+            let quantize = |v: f32, rng: &mut crate::util::rng::Xoshiro256| {
                 let q = v * inv; // in [-L, L]
                 let lo = q.floor();
                 let p = q - lo;
-                let level = lo as i64 + if (ctx.rng.next_f32() as f32) < p { 1 } else { 0 };
+                let level = lo as i64 + if rng.next_f32() < p { 1 } else { 0 };
                 let level = level.clamp(-l, l);
-                packer.push((level + l) as u32, self.bits);
+                (level + l) as u32
+            };
+            let mut xc = x.chunks_exact(kernels::CHUNK);
+            for c in xc.by_ref() {
+                for (o, &v) in codes.iter_mut().zip(c) {
+                    *o = quantize(v, ctx.rng);
+                }
+                kernels::pack_codes(&codes, self.bits, &mut payload);
             }
+            let rem = xc.remainder();
+            for (o, &v) in codes.iter_mut().zip(rem) {
+                *o = quantize(v, ctx.rng);
+            }
+            kernels::pack_codes(&codes[..rem.len()], self.bits, &mut payload);
         } else {
-            for _ in x {
-                packer.push(l as u32, self.bits); // code for level 0
+            codes.fill(l as u32); // code for level 0; no RNG draws
+            let mut left = x.len();
+            while left >= kernels::CHUNK {
+                kernels::pack_codes(&codes, self.bits, &mut payload);
+                left -= kernels::CHUNK;
             }
+            kernels::pack_codes(&codes[..left], self.bits, &mut payload);
         }
-        payload.extend_from_slice(&packer.finish());
         Compressed { scheme: SchemeId::LinearDither, n: x.len(), payload }
     }
 
@@ -152,11 +197,7 @@ impl Compressor for LinearDither {
         let scale = super::get_f32(&c.payload, 0);
         let l = self.levels();
         let step = if l > 0 { scale / l as f32 } else { 0.0 };
-        let mut up = BitUnpacker::new(&c.payload[4..]);
-        for o in out.iter_mut() {
-            let code = up.pull(self.bits) as i64 - l;
-            *o = code as f32 * step;
-        }
+        unpack_map(&c.payload[4..], self.bits, out, |code| (code as i64 - l) as f32 * step);
     }
 
     fn wire_nbytes(&self, n: usize) -> usize {
@@ -203,56 +244,68 @@ impl Compressor for NaturalDither {
         let scale = max_abs(x);
         let slots = self.slots(); // exponents j = 0..slots-1 => levels 2^-j
         let min_exp = -(slots as i32 - 1);
-        let mut payload = Vec::new();
+        let mut payload = Vec::with_capacity(self.wire_nbytes(x.len()));
         super::put_f32(&mut payload, scale);
-        let mut packer = BitPacker::new(x.len(), self.bits);
-        for &v in x {
-            // Code layout (2·slots + 1 = 2^b − 1 codes):
-            //   0            => zero
-            //   1 + j        => +scale · 2^-j   (j = 0..slots-1)
-            //   1 + slots + j => −scale · 2^-j
-            let code: u32 = if scale == 0.0 || v == 0.0 {
-                0
+        // Code layout (2·slots + 1 = 2^b − 1 codes):
+        //   0            => zero
+        //   1 + j        => +scale · 2^-j   (j = 0..slots-1)
+        //   1 + slots + j => −scale · 2^-j
+        // RNG conditionality is unchanged: exactly one `next_f32` per
+        // nonzero element (none when the scale is zero), in slice order.
+        let quantize = |v: f32, ctx: &mut Ctx| -> u32 {
+            if scale == 0.0 || v == 0.0 {
+                return 0;
+            }
+            let u = (v.abs() / scale).min(1.0); // in (0, 1]
+            // Perf (EXPERIMENTS.md §Perf): floor(log2(u)) and the
+            // round-up probability come straight from the f32 bit
+            // pattern — for normal u = 2^e·(1+m/2^23) the probability
+            // (u − 2^e)/2^e equals m·2^-23 — replacing per-element
+            // log2/exp2 libm calls.
+            let bits = u.to_bits();
+            let e = (((bits >> 23) & 0xFF) as i32 - 127).clamp(min_exp - 1, 0);
+            let exp = if e < min_exp {
+                // Below the smallest level: round between 0 and 2^min_exp.
+                let hi = f32::from_bits(((min_exp + 127) as u32) << 23);
+                if ctx.rng.next_f32() < u / hi {
+                    min_exp
+                } else {
+                    i32::MIN // rounded to zero
+                }
             } else {
-                let u = (v.abs() / scale).min(1.0); // in (0, 1]
-                // Perf (EXPERIMENTS.md §Perf): floor(log2(u)) and the
-                // round-up probability come straight from the f32 bit
-                // pattern — for normal u = 2^e·(1+m/2^23) the probability
-                // (u − 2^e)/2^e equals m·2^-23 — replacing per-element
-                // log2/exp2 libm calls.
-                let bits = u.to_bits();
-                let e = (((bits >> 23) & 0xFF) as i32 - 127).clamp(min_exp - 1, 0);
-                let exp = if e < min_exp {
-                    // Below the smallest level: round between 0 and 2^min_exp.
-                    let hi = f32::from_bits(((min_exp + 127) as u32) << 23);
-                    if ctx.rng.next_f32() < u / hi {
-                        min_exp
-                    } else {
-                        i32::MIN // rounded to zero
-                    }
+                // Between 2^e and 2^(e+1): round up w.p. mantissa·2^-23.
+                let p = (bits & 0x7F_FFFF) as f32 * (1.0 / (1u32 << 23) as f32);
+                if ctx.rng.next_f32() < p {
+                    (e + 1).min(0)
                 } else {
-                    // Between 2^e and 2^(e+1): round up w.p. mantissa·2^-23.
-                    let p = (bits & 0x7F_FFFF) as f32 * (1.0 / (1u32 << 23) as f32);
-                    if ctx.rng.next_f32() < p {
-                        (e + 1).min(0)
-                    } else {
-                        e
-                    }
-                };
-                if exp == i32::MIN {
-                    0
-                } else {
-                    let j = (-exp) as u32; // 0..slots-1
-                    if v < 0.0 {
-                        1 + slots + j
-                    } else {
-                        1 + j
-                    }
+                    e
                 }
             };
-            packer.push(code, self.bits);
+            if exp == i32::MIN {
+                0
+            } else {
+                let j = (-exp) as u32; // 0..slots-1
+                if v < 0.0 {
+                    1 + slots + j
+                } else {
+                    1 + j
+                }
+            }
+        };
+        // Stage eight codes, pack them byte-aligned in one shot.
+        let mut codes = [0u32; kernels::CHUNK];
+        let mut xc = x.chunks_exact(kernels::CHUNK);
+        for c in xc.by_ref() {
+            for (o, &v) in codes.iter_mut().zip(c) {
+                *o = quantize(v, ctx);
+            }
+            kernels::pack_codes(&codes, self.bits, &mut payload);
         }
-        payload.extend_from_slice(&packer.finish());
+        let rem = xc.remainder();
+        for (o, &v) in codes.iter_mut().zip(rem) {
+            *o = quantize(v, ctx);
+        }
+        kernels::pack_codes(&codes[..rem.len()], self.bits, &mut payload);
         Compressed { scheme: SchemeId::NaturalDither, n: x.len(), payload }
     }
 
@@ -264,11 +317,14 @@ impl Compressor for NaturalDither {
             return;
         }
         let scale = super::get_f32(&c.payload, 0);
-        let mut up = BitUnpacker::new(&c.payload[4..]);
-        for o in out.iter_mut() {
-            let code = up.pull(self.bits);
-            *o = decode_natural(code, scale, self.bits);
+        // All 2^b ≤ 256 codes decode to fixed levels: precompute once and
+        // turn the per-element exp2 into a table load (bit-identical — each
+        // table entry *is* `decode_natural` for that code).
+        let mut table = [0.0f32; 256];
+        for (code, t) in table.iter_mut().enumerate().take(1usize << self.bits) {
+            *t = decode_natural(code as u32, scale, self.bits);
         }
+        unpack_map(&c.payload[4..], self.bits, out, |code| table[(code & 0xFF) as usize]);
     }
 
     fn wire_nbytes(&self, n: usize) -> usize {

@@ -15,7 +15,7 @@
 //! pass for sign/fp16) instead of decompress-then-subtract (O(2d) plus an
 //! allocation). The ablation toggle keeps both paths available.
 
-use super::{Compressed, Compressor, Ctx};
+use super::{kernels, Compressed, Compressor, Ctx};
 use std::collections::HashMap;
 
 /// One EF compress cycle over an owned buffer, map-free: correct with the
@@ -33,9 +33,7 @@ pub fn compress_cycle(
 ) -> (Compressed, Vec<f32>) {
     if let Some(e) = residual {
         assert_eq!(e.len(), g.len(), "EF residual size drifted");
-        for (gi, ei) in g.iter_mut().zip(e) {
-            *gi += *ei;
-        }
+        kernels::add_assign(&mut g, e);
     }
     if fused {
         let c = comp.compress_ef_fused(&mut g, ctx);
@@ -44,9 +42,7 @@ pub fn compress_cycle(
         let c = comp.compress(&g, ctx);
         let mut dec = vec![0.0f32; g.len()];
         comp.decompress(&c, &mut dec);
-        for (gi, di) in g.iter_mut().zip(&dec) {
-            *gi -= *di;
-        }
+        kernels::sub_assign(&mut g, &dec);
         (c, g)
     }
 }
@@ -89,9 +85,7 @@ impl EfState {
         assert_eq!(e.len(), g.len(), "tensor {key} changed size");
         // q = g + e, computed into the residual buffer (it will be
         // overwritten with the new residual anyway).
-        for (ei, gi) in e.iter_mut().zip(g) {
-            *ei += gi;
-        }
+        kernels::add_assign(e, g);
         if self.fused {
             // e' emitted in place by the compressor.
             comp.compress_ef_fused(e, ctx)

@@ -1,9 +1,8 @@
 //! FP16 conversion compressor — the paper's "NAG (FP16)" baseline and the
 //! intra-node compression stage (§4.1.1).
 
-use super::{Compressed, Compressor, Ctx, SchemeId};
+use super::{kernels, Compressed, Compressor, Ctx, SchemeId};
 use crate::parallel::parallel_for_chunks;
-use crate::util::f16::{f16_bits_to_f32, f32_to_f16_bits};
 
 /// Round-to-nearest-even f32→f16 per element; 2 bytes on the wire.
 ///
@@ -33,16 +32,10 @@ impl Compressor for Fp16 {
             parallel_for_chunks(ctx.intra_threads, &mut payload[..], |off, chunk| {
                 debug_assert_eq!(off % 2, 0);
                 let base = off / 2;
-                for (j, pair) in chunk.chunks_exact_mut(2).enumerate() {
-                    let bits = f32_to_f16_bits(x[base + j]);
-                    pair.copy_from_slice(&bits.to_le_bytes());
-                }
+                kernels::f32_to_f16_slice(&x[base..base + chunk.len() / 2], chunk);
             });
         } else {
-            for (i, &v) in x.iter().enumerate() {
-                let bits = f32_to_f16_bits(v);
-                payload[2 * i..2 * i + 2].copy_from_slice(&bits.to_le_bytes());
-            }
+            kernels::f32_to_f16_slice(x, &mut payload);
         }
         Compressed { scheme: SchemeId::Fp16, n: x.len(), payload }
     }
@@ -54,10 +47,7 @@ impl Compressor for Fp16 {
             out.fill(0.0);
             return;
         }
-        for (i, o) in out.iter_mut().enumerate() {
-            let bits = u16::from_le_bytes(c.payload[2 * i..2 * i + 2].try_into().unwrap());
-            *o = f16_bits_to_f32(bits);
-        }
+        kernels::f16_to_f32_slice(&c.payload, out);
     }
 
     fn add_decompressed(&self, c: &Compressed, acc: &mut [f32]) {
@@ -67,10 +57,7 @@ impl Compressor for Fp16 {
         if c.payload.len() != 2 * c.n {
             return;
         }
-        for (i, a) in acc.iter_mut().enumerate() {
-            let bits = u16::from_le_bytes(c.payload[2 * i..2 * i + 2].try_into().unwrap());
-            *a += f16_bits_to_f32(bits);
-        }
+        kernels::f16_add_decoded(&c.payload, acc);
     }
 
     fn wire_nbytes(&self, n: usize) -> usize {
@@ -80,11 +67,7 @@ impl Compressor for Fp16 {
     fn compress_ef_fused(&self, q: &mut [f32], _ctx: &mut Ctx) -> Compressed {
         // Single pass: emit bits and residual together.
         let mut payload = vec![0u8; 2 * q.len()];
-        for (i, v) in q.iter_mut().enumerate() {
-            let bits = f32_to_f16_bits(*v);
-            payload[2 * i..2 * i + 2].copy_from_slice(&bits.to_le_bytes());
-            *v -= f16_bits_to_f32(bits);
-        }
+        kernels::f16_encode_residual(q, &mut payload);
         Compressed { scheme: SchemeId::Fp16, n: q.len(), payload }
     }
 }

@@ -1,6 +1,6 @@
 //! Identity "compressor" — full-precision baseline (paper's plain NAG/LANS).
 
-use super::{Compressed, Compressor, Ctx, SchemeId};
+use super::{kernels, Compressed, Compressor, Ctx, SchemeId};
 
 /// Sends raw f32 bytes. `C(x) = x`, so it is trivially unbiased with ω = 0
 /// and δ = 1; both sync algorithms degenerate to Alg. 1 (tested in `optim`).
@@ -21,9 +21,7 @@ impl Compressor for Identity {
 
     fn compress(&self, x: &[f32], _ctx: &mut Ctx) -> Compressed {
         let mut payload = Vec::with_capacity(4 * x.len());
-        for &v in x {
-            payload.extend_from_slice(&v.to_le_bytes());
-        }
+        kernels::f32_to_le_bytes(x, &mut payload);
         Compressed { scheme: SchemeId::Identity, n: x.len(), payload }
     }
 
@@ -34,9 +32,7 @@ impl Compressor for Identity {
             out.fill(0.0);
             return;
         }
-        for (i, o) in out.iter_mut().enumerate() {
-            *o = super::get_f32(&c.payload, 4 * i);
-        }
+        kernels::le_bytes_to_f32(&c.payload, out);
     }
 
     fn add_decompressed(&self, c: &Compressed, acc: &mut [f32]) {
@@ -46,9 +42,7 @@ impl Compressor for Identity {
         if c.payload.len() != 4 * c.n {
             return;
         }
-        for (i, a) in acc.iter_mut().enumerate() {
-            *a += super::get_f32(&c.payload, 4 * i);
-        }
+        kernels::le_bytes_add_f32(&c.payload, acc);
     }
 
     fn wire_nbytes(&self, n: usize) -> usize {

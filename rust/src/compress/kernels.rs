@@ -1,0 +1,437 @@
+//! Chunked, bounds-check-free inner loops shared by the compressors, the
+//! error-feedback cycle, and the server reduce path.
+//!
+//! Everything here is stable Rust: fixed-width chunks via `chunks_exact` /
+//! `chunks_exact_mut`, converted to array references with `try_into()` so
+//! the optimizer sees a compile-time length and drops the per-element bounds
+//! checks, plus an explicit scalar tail for `n % CHUNK != 0`. The loop
+//! bodies avoid float reassociation so every kernel stays **bit-identical**
+//! to the scalar reference implementations in [`crate::compress::reference`]
+//! — the suite in `rust/tests/kernel_identity.rs` pins that contract across
+//! `paper_suite()`, including non-finite inputs and tail-sized blocks.
+
+use crate::util::f16::{f16_bits_to_f32, f32_to_f16_bits};
+
+/// Chunk width for element-wise f32 loops: two 128-bit lanes' worth, wide
+/// enough for SSE2/NEON autovectorization while keeping tails cheap.
+pub const CHUNK: usize = 8;
+
+/// `dst[i] += src[i]` element-wise. Per-lane adds in slice order — no
+/// reassociation, so the result is bit-identical to the scalar loop.
+#[inline]
+pub fn add_assign(dst: &mut [f32], src: &[f32]) {
+    let n = dst.len().min(src.len());
+    let mut d = dst[..n].chunks_exact_mut(CHUNK);
+    let mut s = src[..n].chunks_exact(CHUNK);
+    for (dc, sc) in d.by_ref().zip(s.by_ref()) {
+        let dc: &mut [f32; CHUNK] = dc.try_into().unwrap();
+        let sc: &[f32; CHUNK] = sc.try_into().unwrap();
+        for i in 0..CHUNK {
+            dc[i] += sc[i];
+        }
+    }
+    for (a, b) in d.into_remainder().iter_mut().zip(s.remainder()) {
+        *a += *b;
+    }
+}
+
+/// `dst[i] -= src[i]` element-wise (error-feedback residual decay).
+#[inline]
+pub fn sub_assign(dst: &mut [f32], src: &[f32]) {
+    let n = dst.len().min(src.len());
+    let mut d = dst[..n].chunks_exact_mut(CHUNK);
+    let mut s = src[..n].chunks_exact(CHUNK);
+    for (dc, sc) in d.by_ref().zip(s.by_ref()) {
+        let dc: &mut [f32; CHUNK] = dc.try_into().unwrap();
+        let sc: &[f32; CHUNK] = sc.try_into().unwrap();
+        for i in 0..CHUNK {
+            dc[i] -= sc[i];
+        }
+    }
+    for (a, b) in d.into_remainder().iter_mut().zip(s.remainder()) {
+        *a -= *b;
+    }
+}
+
+/// `x[i] *= s` element-wise (server-side mean scaling).
+#[inline]
+pub fn scale_assign(x: &mut [f32], s: f32) {
+    let mut it = x.chunks_exact_mut(CHUNK);
+    for c in it.by_ref() {
+        let c: &mut [f32; CHUNK] = c.try_into().unwrap();
+        for v in c.iter_mut() {
+            *v *= s;
+        }
+    }
+    for v in it.into_remainder() {
+        *v *= s;
+    }
+}
+
+// --- identity (raw f32) ------------------------------------------------------
+
+/// Append `x` as little-endian f32 bytes to `out` in one resize + bulk loop.
+#[inline]
+pub fn f32_to_le_bytes(x: &[f32], out: &mut Vec<u8>) {
+    let start = out.len();
+    out.resize(start + 4 * x.len(), 0);
+    for (v, o) in x.iter().zip(out[start..].chunks_exact_mut(4)) {
+        o.copy_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// `out[i] = f32::from_le_bytes(bytes[4i..])` for `min` of both lengths.
+#[inline]
+pub fn le_bytes_to_f32(bytes: &[u8], out: &mut [f32]) {
+    for (b, o) in bytes.chunks_exact(4).zip(out.iter_mut()) {
+        *o = f32::from_le_bytes(b.try_into().unwrap());
+    }
+}
+
+/// `acc[i] += f32::from_le_bytes(bytes[4i..])` for `min` of both lengths.
+#[inline]
+pub fn le_bytes_add_f32(bytes: &[u8], acc: &mut [f32]) {
+    for (b, a) in bytes.chunks_exact(4).zip(acc.iter_mut()) {
+        *a += f32::from_le_bytes(b.try_into().unwrap());
+    }
+}
+
+// --- fp16 --------------------------------------------------------------------
+
+/// Encode `src` as little-endian binary16 into `dst` (`2 * src.len()` bytes).
+#[inline]
+pub fn f32_to_f16_slice(src: &[f32], dst: &mut [u8]) {
+    debug_assert_eq!(dst.len(), 2 * src.len());
+    for (v, o) in src.iter().zip(dst.chunks_exact_mut(2)) {
+        o.copy_from_slice(&f32_to_f16_bits(*v).to_le_bytes());
+    }
+}
+
+/// Decode little-endian binary16 from `src` into `dst`.
+#[inline]
+pub fn f16_to_f32_slice(src: &[u8], dst: &mut [f32]) {
+    for (b, o) in src.chunks_exact(2).zip(dst.iter_mut()) {
+        *o = f16_bits_to_f32(u16::from_le_bytes(b.try_into().unwrap()));
+    }
+}
+
+/// `acc[i] += decode(src[2i..])` — the fp16 aggregation path.
+#[inline]
+pub fn f16_add_decoded(src: &[u8], acc: &mut [f32]) {
+    for (b, a) in src.chunks_exact(2).zip(acc.iter_mut()) {
+        *a += f16_bits_to_f32(u16::from_le_bytes(b.try_into().unwrap()));
+    }
+}
+
+/// Fused fp16 encode + residual: write `f16(x[i])` to `dst` and overwrite
+/// `x[i]` with `x[i] - decode(f16(x[i]))` in one pass.
+#[inline]
+pub fn f16_encode_residual(x: &mut [f32], dst: &mut [u8]) {
+    debug_assert_eq!(dst.len(), 2 * x.len());
+    for (v, o) in x.iter_mut().zip(dst.chunks_exact_mut(2)) {
+        let bits = f32_to_f16_bits(*v);
+        o.copy_from_slice(&bits.to_le_bytes());
+        *v -= f16_bits_to_f32(bits);
+    }
+}
+
+// --- scaled one-bit ----------------------------------------------------------
+
+/// Decode one sign bit into `±scale` bit-exactly: `-scale` is an IEEE sign
+/// flip, so XOR-ing the sign bit in matches `if bit { scale } else { -scale }`
+/// for every scale including ±0.0 and non-finite values.
+#[inline(always)]
+fn sign_decode(scale_bits: u32, bit: u32) -> f32 {
+    f32::from_bits(scale_bits ^ ((bit ^ 1) << 31))
+}
+
+/// Pack sign bits of `x` (bit set ⇔ `v >= 0.0`, so sign(0) := +1 and
+/// NaN := −1) into `bits`, LSB-first, `⌈n/8⌉` bytes.
+#[inline]
+pub fn sign_pack(x: &[f32], bits: &mut [u8]) {
+    debug_assert_eq!(bits.len(), x.len().div_ceil(8));
+    let mut xc = x.chunks_exact(CHUNK);
+    let mut bc = bits.iter_mut();
+    for (c, b) in xc.by_ref().zip(bc.by_ref()) {
+        let c: &[f32; CHUNK] = c.try_into().unwrap();
+        let mut byte = 0u8;
+        for (i, v) in c.iter().enumerate() {
+            byte |= ((*v >= 0.0) as u8) << i;
+        }
+        *b = byte;
+    }
+    let rem = xc.remainder();
+    if !rem.is_empty() {
+        let b = bc.next().expect("bitmap sized for input");
+        let mut byte = 0u8;
+        for (i, v) in rem.iter().enumerate() {
+            byte |= ((*v >= 0.0) as u8) << i;
+        }
+        *b = byte;
+    }
+}
+
+/// `out[i] = ±scale` from the packed sign bitmap.
+#[inline]
+pub fn sign_unpack_scaled(bits: &[u8], scale: f32, out: &mut [f32]) {
+    let sb = scale.to_bits();
+    let mut oc = out.chunks_exact_mut(CHUNK);
+    let mut bc = bits.iter();
+    for (c, b) in oc.by_ref().zip(bc.by_ref()) {
+        let c: &mut [f32; CHUNK] = c.try_into().unwrap();
+        let b = *b as u32;
+        for (i, o) in c.iter_mut().enumerate() {
+            *o = sign_decode(sb, (b >> i) & 1);
+        }
+    }
+    let rem = oc.into_remainder();
+    if !rem.is_empty() {
+        let b = bc.next().copied().unwrap_or(0) as u32;
+        for (i, o) in rem.iter_mut().enumerate() {
+            *o = sign_decode(sb, (b >> i) & 1);
+        }
+    }
+}
+
+/// `acc[i] += ±scale` from the packed sign bitmap (IEEE `a - s == a + (-s)`
+/// exactly, so this matches the scalar add/sub branches bit-for-bit).
+#[inline]
+pub fn sign_add_scaled(bits: &[u8], scale: f32, acc: &mut [f32]) {
+    let sb = scale.to_bits();
+    let mut oc = acc.chunks_exact_mut(CHUNK);
+    let mut bc = bits.iter();
+    for (c, b) in oc.by_ref().zip(bc.by_ref()) {
+        let c: &mut [f32; CHUNK] = c.try_into().unwrap();
+        let b = *b as u32;
+        for (i, o) in c.iter_mut().enumerate() {
+            *o += sign_decode(sb, (b >> i) & 1);
+        }
+    }
+    let rem = oc.into_remainder();
+    if !rem.is_empty() {
+        let b = bc.next().copied().unwrap_or(0) as u32;
+        for (i, o) in rem.iter_mut().enumerate() {
+            *o += sign_decode(sb, (b >> i) & 1);
+        }
+    }
+}
+
+/// Fused one-bit encode + residual: set the sign bit and subtract the
+/// decoded `±scale` in one pass. The residual update keeps the scalar
+/// reference's add/sub branch structure (`v -= scale` / `v += scale`) so
+/// even a NaN scale produces bit-identical residuals (`a + s` and
+/// `a - (-s)` may disagree in the NaN sign bit); LLVM if-converts the
+/// branch to a select.
+#[inline]
+pub fn sign_pack_residual(x: &mut [f32], scale: f32, bits: &mut [u8]) {
+    debug_assert_eq!(bits.len(), x.len().div_ceil(8));
+    let mut xc = x.chunks_exact_mut(CHUNK);
+    let mut bc = bits.iter_mut();
+    for (c, b) in xc.by_ref().zip(bc.by_ref()) {
+        let c: &mut [f32; CHUNK] = c.try_into().unwrap();
+        let mut byte = 0u8;
+        for (i, v) in c.iter_mut().enumerate() {
+            if *v >= 0.0 {
+                byte |= 1 << i;
+                *v -= scale;
+            } else {
+                *v += scale;
+            }
+        }
+        *b = byte;
+    }
+    let rem = xc.into_remainder();
+    if !rem.is_empty() {
+        let b = bc.next().expect("bitmap sized for input");
+        let mut byte = 0u8;
+        for (i, v) in rem.iter_mut().enumerate() {
+            if *v >= 0.0 {
+                byte |= 1 << i;
+                *v -= scale;
+            } else {
+                *v += scale;
+            }
+        }
+        *b = byte;
+    }
+}
+
+// --- dithering bit codec -----------------------------------------------------
+
+/// Pack `codes` (each `< 2^bits`, `bits` in 2..=16) LSB-first into `out`,
+/// byte-identical to pushing them through `dither::BitPacker` + `finish()`.
+/// Eight codes of `bits` bits always occupy exactly `bits` whole bytes, so
+/// the wide path stages them in a `u128` and writes those bytes in one shot;
+/// the `< 8`-code tail resumes the identical bit stream with the scalar
+/// accumulator (chunk boundaries fall on byte boundaries by construction).
+#[inline]
+pub fn pack_codes(codes: &[u32], bits: u32, out: &mut Vec<u8>) {
+    let b = bits as usize;
+    debug_assert!((1..=16).contains(&b));
+    let mut cc = codes.chunks_exact(CHUNK);
+    for c in cc.by_ref() {
+        let c: &[u32; CHUNK] = c.try_into().unwrap();
+        let mut acc = 0u128;
+        for (i, &code) in c.iter().enumerate() {
+            acc |= (code as u128) << (i * b);
+        }
+        out.extend_from_slice(&acc.to_le_bytes()[..b]);
+    }
+    let mut acc = 0u64;
+    let mut nbits = 0u32;
+    for &code in cc.remainder() {
+        acc |= (code as u64) << nbits;
+        nbits += bits;
+        while nbits >= 8 {
+            out.push((acc & 0xFF) as u8);
+            acc >>= 8;
+            nbits -= 8;
+        }
+    }
+    if nbits > 0 {
+        out.push((acc & 0xFF) as u8);
+    }
+}
+
+/// Unpack `codes.len()` codes of `bits` bits LSB-first from `buf`,
+/// zero-extending past the end of a truncated buffer exactly like
+/// `dither::BitUnpacker` (wire data is untrusted). The wide path reads
+/// `bits` whole bytes per eight codes; the scalar tail also takes over for
+/// whatever a short buffer cannot back.
+#[inline]
+pub fn unpack_codes(buf: &[u8], bits: u32, codes: &mut [u32]) {
+    let b = bits as usize;
+    debug_assert!((1..=16).contains(&b));
+    let mask = (1u128 << b) - 1;
+    let mut done = 0usize;
+    {
+        let mut cc = codes.chunks_exact_mut(CHUNK);
+        for (c, by) in cc.by_ref().zip(buf.chunks_exact(b)) {
+            let c: &mut [u32; CHUNK] = c.try_into().unwrap();
+            let mut le = [0u8; 16];
+            le[..b].copy_from_slice(by);
+            let acc = u128::from_le_bytes(le);
+            for (i, o) in c.iter_mut().enumerate() {
+                *o = ((acc >> (i * b)) & mask) as u32;
+            }
+            done += 1;
+        }
+    }
+    // Scalar tail: resumes at a byte boundary; `unwrap_or(0)` reproduces the
+    // BitUnpacker truncation behavior.
+    let mut byte = done * b;
+    let mut acc = 0u64;
+    let mut nbits = 0u32;
+    let mask32 = (1u32 << bits) - 1;
+    for o in codes[done * CHUNK..].iter_mut() {
+        while nbits < bits {
+            acc |= (buf.get(byte).copied().unwrap_or(0) as u64) << nbits;
+            byte += 1;
+            nbits += 8;
+        }
+        *o = (acc as u32) & mask32;
+        acc >>= bits;
+        nbits -= bits;
+    }
+}
+
+// --- sparse adds -------------------------------------------------------------
+
+/// `acc[idx[j]] += val[j]` for little-endian u32 indices and f32 values in
+/// separate byte regions (the top-k wire layout). Indices are untrusted wire
+/// data, so out-of-range entries are skipped — the `get_mut` check is the
+/// only branch left in the loop.
+#[inline]
+pub fn sparse_add_le(idx_bytes: &[u8], val_bytes: &[u8], acc: &mut [f32]) {
+    for (ib, vb) in idx_bytes.chunks_exact(4).zip(val_bytes.chunks_exact(4)) {
+        let i = u32::from_le_bytes(ib.try_into().unwrap()) as usize;
+        let v = f32::from_le_bytes(vb.try_into().unwrap());
+        if let Some(a) = acc.get_mut(i) {
+            *a += v;
+        }
+    }
+}
+
+/// `acc[indices[j]] += val[j]` where indices are trusted in-range (random-k
+/// regenerates them from the wire seed, bounded by construction).
+#[inline]
+pub fn sparse_add_indexed(indices: &[u32], val_bytes: &[u8], acc: &mut [f32]) {
+    for (&i, vb) in indices.iter().zip(val_bytes.chunks_exact(4)) {
+        acc[i as usize] += f32::from_le_bytes(vb.try_into().unwrap());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_sub_scale_match_scalar_loops() {
+        let a: Vec<f32> = (0..1003).map(|i| (i as f32 * 0.13).sin()).collect();
+        let b: Vec<f32> = (0..1003).map(|i| (i as f32 * 0.29).cos()).collect();
+        let mut k = a.clone();
+        let mut s = a.clone();
+        add_assign(&mut k, &b);
+        for (x, y) in s.iter_mut().zip(&b) {
+            *x += *y;
+        }
+        let kb: Vec<u32> = k.iter().map(|v| v.to_bits()).collect();
+        let sb: Vec<u32> = s.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(kb, sb);
+        sub_assign(&mut k, &b);
+        for (x, y) in s.iter_mut().zip(&b) {
+            *x -= *y;
+        }
+        assert_eq!(k, s);
+        scale_assign(&mut k, 0.25);
+        for x in s.iter_mut() {
+            *x *= 0.25;
+        }
+        assert_eq!(k, s);
+    }
+
+    #[test]
+    fn sign_decode_is_bit_exact() {
+        for scale in [0.0f32, -0.0, 1.5, f32::INFINITY, f32::MIN_POSITIVE] {
+            let sb = scale.to_bits();
+            assert_eq!(sign_decode(sb, 1).to_bits(), scale.to_bits());
+            assert_eq!(sign_decode(sb, 0).to_bits(), (-scale).to_bits());
+        }
+    }
+
+    #[test]
+    fn pack_unpack_codes_roundtrip_all_widths() {
+        for bits in [2u32, 3, 5, 7, 11, 16] {
+            let mask = (1u32 << bits) - 1;
+            for n in [0usize, 1, 7, 8, 9, 63, 100] {
+                let codes: Vec<u32> = (0..n as u32).map(|i| (i * 2654435761) & mask).collect();
+                let mut packed = Vec::new();
+                pack_codes(&codes, bits, &mut packed);
+                assert_eq!(packed.len(), (n * bits as usize).div_ceil(8));
+                let mut back = vec![0u32; n];
+                unpack_codes(&packed, bits, &mut back);
+                assert_eq!(back, codes, "bits={bits} n={n}");
+                // Truncated buffer zero-extends instead of panicking.
+                if !packed.is_empty() {
+                    let mut short = vec![0u32; n];
+                    unpack_codes(&packed[..packed.len() - 1], bits, &mut short);
+                    assert_eq!(short.len(), n);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sign_roundtrip_tail_sizes() {
+        for n in [0usize, 1, 7, 8, 9, 17, 64, 100] {
+            let x: Vec<f32> = (0..n).map(|i| if i % 3 == 0 { -1.0 } else { 1.0 }).collect();
+            let mut bits = vec![0u8; n.div_ceil(8)];
+            sign_pack(&x, &mut bits);
+            let mut out = vec![0.0f32; n];
+            sign_unpack_scaled(&bits, 2.0, &mut out);
+            for (i, v) in out.iter().enumerate() {
+                assert_eq!(*v, if i % 3 == 0 { -2.0 } else { 2.0 });
+            }
+        }
+    }
+}

@@ -24,8 +24,10 @@ pub mod dither;
 pub mod ef;
 pub mod fp16;
 pub mod identity;
+pub mod kernels;
 pub mod onebit;
 pub mod randomk;
+pub mod reference;
 pub mod threshold;
 pub mod topk;
 

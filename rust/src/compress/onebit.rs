@@ -5,7 +5,7 @@
 //! feedback (paper Alg. 4). Wire format: `[scale: f32][bitmap: ceil(d/8)]`,
 //! i.e. ~32× smaller than f32.
 
-use super::{Compressed, Compressor, Ctx, SchemeId};
+use super::{kernels, Compressed, Compressor, Ctx, SchemeId};
 use crate::parallel::parallel_map_chunks;
 
 pub struct ScaledOneBit;
@@ -47,13 +47,8 @@ impl Compressor for ScaledOneBit {
         let mut payload = Vec::with_capacity(4 + nbytes);
         super::put_f32(&mut payload, scale);
         payload.resize(4 + nbytes, 0);
-        let bits = &mut payload[4..];
-        for (i, &v) in x.iter().enumerate() {
-            // sign(0) := +1, consistent with the paper's scaled-sign operator.
-            if v >= 0.0 {
-                bits[i / 8] |= 1 << (i % 8);
-            }
-        }
+        // sign(0) := +1, consistent with the paper's scaled-sign operator.
+        kernels::sign_pack(x, &mut payload[4..]);
         Compressed { scheme: SchemeId::OneBit, n: x.len(), payload }
     }
 
@@ -65,10 +60,7 @@ impl Compressor for ScaledOneBit {
             return;
         }
         let scale = super::get_f32(&c.payload, 0);
-        let bits = &c.payload[4..];
-        for (i, o) in out.iter_mut().enumerate() {
-            *o = if bits[i / 8] & (1 << (i % 8)) != 0 { scale } else { -scale };
-        }
+        kernels::sign_unpack_scaled(&c.payload[4..], scale, out);
     }
 
     fn add_decompressed(&self, c: &Compressed, acc: &mut [f32]) {
@@ -79,10 +71,7 @@ impl Compressor for ScaledOneBit {
             return;
         }
         let scale = super::get_f32(&c.payload, 0);
-        let bits = &c.payload[4..];
-        for (i, a) in acc.iter_mut().enumerate() {
-            *a += if bits[i / 8] & (1 << (i % 8)) != 0 { scale } else { -scale };
-        }
+        kernels::sign_add_scaled(&c.payload[4..], scale, acc);
     }
 
     fn wire_nbytes(&self, n: usize) -> usize {
@@ -96,15 +85,7 @@ impl Compressor for ScaledOneBit {
         let mut payload = Vec::with_capacity(4 + nbytes);
         super::put_f32(&mut payload, scale);
         payload.resize(4 + nbytes, 0);
-        let bits = &mut payload[4..];
-        for (i, v) in q.iter_mut().enumerate() {
-            if *v >= 0.0 {
-                bits[i / 8] |= 1 << (i % 8);
-                *v -= scale;
-            } else {
-                *v += scale;
-            }
-        }
+        kernels::sign_pack_residual(q, scale, &mut payload[4..]);
         Compressed { scheme: SchemeId::OneBit, n: q.len(), payload }
     }
 }

@@ -94,9 +94,7 @@ impl Compressor for RandomK {
         }
         let seed = super::get_u64(&c.payload, 4);
         let idx = Self::indices_from_seed(seed, c.n, k);
-        for (j, &i) in idx.iter().enumerate() {
-            acc[i as usize] += super::get_f32(&c.payload, 12 + 4 * j);
-        }
+        super::kernels::sparse_add_indexed(&idx, &c.payload[12..], acc);
     }
 
     fn wire_nbytes(&self, n: usize) -> usize {
@@ -116,9 +114,7 @@ impl Compressor for RandomK {
             let c = self.compress(q, ctx);
             let mut dec = vec![0.0f32; q.len()];
             self.decompress(&c, &mut dec);
-            for (qi, di) in q.iter_mut().zip(&dec) {
-                *qi -= di;
-            }
+            super::kernels::sub_assign(q, &dec);
             return c;
         }
         if q.is_empty() {

@@ -1,0 +1,704 @@
+//! Scalar reference compressors — the pre-vectorization implementations,
+//! kept **verbatim** as ground truth for the chunked kernels in
+//! [`crate::compress::kernels`].
+//!
+//! Every scheme's hot loops were rewritten as fixed-width chunked loops
+//! (see EXPERIMENTS.md §Perf); the originals live on here so the
+//! bit-identity suite (`rust/tests/kernel_identity.rs`) can assert that the
+//! fast paths produce byte-identical wire payloads and f32-bit-identical
+//! decompress/EF results across `paper_suite()`. Do not "optimize" this
+//! module: its entire value is staying a frozen, obviously-correct copy.
+
+use super::dither::{BitPacker, BitUnpacker};
+use super::{Compressed, Compressor, Ctx, SchemeId};
+use crate::util::f16::{f16_bits_to_f32, f32_to_f16_bits};
+use crate::util::max_abs;
+use crate::util::rng::Xoshiro256;
+use std::sync::Arc;
+
+/// The scalar counterpart of [`super::ef::compress_cycle`] (Alg. 4 compress
+/// step) with the accumulate/decay loops written element-wise.
+pub fn compress_cycle_scalar(
+    comp: &dyn Compressor,
+    fused: bool,
+    ctx: &mut Ctx,
+    mut g: Vec<f32>,
+    residual: Option<&[f32]>,
+) -> (Compressed, Vec<f32>) {
+    if let Some(e) = residual {
+        assert_eq!(e.len(), g.len(), "EF residual size drifted");
+        for (gi, ei) in g.iter_mut().zip(e) {
+            *gi += *ei;
+        }
+    }
+    if fused {
+        let c = comp.compress_ef_fused(&mut g, ctx);
+        (c, g)
+    } else {
+        let c = comp.compress(&g, ctx);
+        let mut dec = vec![0.0f32; g.len()];
+        comp.decompress(&c, &mut dec);
+        for (gi, di) in g.iter_mut().zip(&dec) {
+            *gi -= *di;
+        }
+        (c, g)
+    }
+}
+
+/// Scalar references for the full paper suite, labels matching
+/// [`super::paper_suite`] pairwise.
+pub fn scalar_suite() -> Vec<(&'static str, Arc<dyn Compressor>)> {
+    vec![
+        ("NAG", Arc::new(ScalarIdentity)),
+        ("NAG (FP16)", Arc::new(ScalarFp16)),
+        ("Scaled 1-bit with EF", Arc::new(ScalarOneBit)),
+        ("Random-k with EF", Arc::new(ScalarRandomK { ratio: 1.0 / 32.0, rescale: false })),
+        ("Top-k with EF", Arc::new(ScalarTopK { ratio: 0.001 })),
+        ("Linear Dithering", Arc::new(ScalarLinearDither { bits: 5 })),
+        ("Natural Dithering", Arc::new(ScalarNaturalDither { bits: 3 })),
+    ]
+}
+
+// --- identity ----------------------------------------------------------------
+
+pub struct ScalarIdentity;
+
+impl Compressor for ScalarIdentity {
+    fn name(&self) -> &'static str {
+        "identity"
+    }
+
+    fn id(&self) -> SchemeId {
+        SchemeId::Identity
+    }
+
+    fn unbiased(&self) -> bool {
+        true
+    }
+
+    fn compress(&self, x: &[f32], _ctx: &mut Ctx) -> Compressed {
+        let mut payload = Vec::with_capacity(4 * x.len());
+        for &v in x {
+            payload.extend_from_slice(&v.to_le_bytes());
+        }
+        Compressed { scheme: SchemeId::Identity, n: x.len(), payload }
+    }
+
+    fn decompress(&self, c: &Compressed, out: &mut [f32]) {
+        assert_eq!(out.len(), c.n);
+        if c.payload.len() != 4 * c.n {
+            out.fill(0.0);
+            return;
+        }
+        for (i, o) in out.iter_mut().enumerate() {
+            *o = super::get_f32(&c.payload, 4 * i);
+        }
+    }
+
+    fn add_decompressed(&self, c: &Compressed, acc: &mut [f32]) {
+        assert_eq!(acc.len(), c.n);
+        if c.payload.len() != 4 * c.n {
+            return;
+        }
+        for (i, a) in acc.iter_mut().enumerate() {
+            *a += super::get_f32(&c.payload, 4 * i);
+        }
+    }
+
+    fn wire_nbytes(&self, n: usize) -> usize {
+        4 * n
+    }
+
+    fn compress_ef_fused(&self, q: &mut [f32], ctx: &mut Ctx) -> Compressed {
+        let c = self.compress(q, ctx);
+        q.fill(0.0);
+        c
+    }
+}
+
+// --- fp16 --------------------------------------------------------------------
+
+pub struct ScalarFp16;
+
+impl Compressor for ScalarFp16 {
+    fn name(&self) -> &'static str {
+        "fp16"
+    }
+
+    fn id(&self) -> SchemeId {
+        SchemeId::Fp16
+    }
+
+    fn unbiased(&self) -> bool {
+        false
+    }
+
+    fn compress(&self, x: &[f32], _ctx: &mut Ctx) -> Compressed {
+        let mut payload = vec![0u8; 2 * x.len()];
+        for (i, &v) in x.iter().enumerate() {
+            let bits = f32_to_f16_bits(v);
+            payload[2 * i..2 * i + 2].copy_from_slice(&bits.to_le_bytes());
+        }
+        Compressed { scheme: SchemeId::Fp16, n: x.len(), payload }
+    }
+
+    fn decompress(&self, c: &Compressed, out: &mut [f32]) {
+        assert_eq!(out.len(), c.n);
+        if c.payload.len() != 2 * c.n {
+            out.fill(0.0);
+            return;
+        }
+        for (i, o) in out.iter_mut().enumerate() {
+            let bits = u16::from_le_bytes(c.payload[2 * i..2 * i + 2].try_into().unwrap());
+            *o = f16_bits_to_f32(bits);
+        }
+    }
+
+    fn add_decompressed(&self, c: &Compressed, acc: &mut [f32]) {
+        assert_eq!(acc.len(), c.n);
+        if c.payload.len() != 2 * c.n {
+            return;
+        }
+        for (i, a) in acc.iter_mut().enumerate() {
+            let bits = u16::from_le_bytes(c.payload[2 * i..2 * i + 2].try_into().unwrap());
+            *a += f16_bits_to_f32(bits);
+        }
+    }
+
+    fn wire_nbytes(&self, n: usize) -> usize {
+        2 * n
+    }
+
+    fn compress_ef_fused(&self, q: &mut [f32], _ctx: &mut Ctx) -> Compressed {
+        let mut payload = vec![0u8; 2 * q.len()];
+        for (i, v) in q.iter_mut().enumerate() {
+            let bits = f32_to_f16_bits(*v);
+            payload[2 * i..2 * i + 2].copy_from_slice(&bits.to_le_bytes());
+            *v -= f16_bits_to_f32(bits);
+        }
+        Compressed { scheme: SchemeId::Fp16, n: q.len(), payload }
+    }
+}
+
+// --- scaled one-bit ----------------------------------------------------------
+
+pub struct ScalarOneBit;
+
+impl ScalarOneBit {
+    fn scale_of(x: &[f32]) -> f32 {
+        if x.is_empty() {
+            return 0.0;
+        }
+        let l1: f64 = x.iter().map(|v| v.abs() as f64).sum();
+        (l1 / x.len() as f64) as f32
+    }
+}
+
+impl Compressor for ScalarOneBit {
+    fn name(&self) -> &'static str {
+        "onebit"
+    }
+
+    fn id(&self) -> SchemeId {
+        SchemeId::OneBit
+    }
+
+    fn unbiased(&self) -> bool {
+        false
+    }
+
+    fn compress(&self, x: &[f32], _ctx: &mut Ctx) -> Compressed {
+        let scale = Self::scale_of(x);
+        let nbytes = x.len().div_ceil(8);
+        let mut payload = Vec::with_capacity(4 + nbytes);
+        super::put_f32(&mut payload, scale);
+        payload.resize(4 + nbytes, 0);
+        let bits = &mut payload[4..];
+        for (i, &v) in x.iter().enumerate() {
+            if v >= 0.0 {
+                bits[i / 8] |= 1 << (i % 8);
+            }
+        }
+        Compressed { scheme: SchemeId::OneBit, n: x.len(), payload }
+    }
+
+    fn decompress(&self, c: &Compressed, out: &mut [f32]) {
+        assert_eq!(out.len(), c.n);
+        if c.payload.len() != 4 + c.n.div_ceil(8) {
+            out.fill(0.0);
+            return;
+        }
+        let scale = super::get_f32(&c.payload, 0);
+        let bits = &c.payload[4..];
+        for (i, o) in out.iter_mut().enumerate() {
+            *o = if bits[i / 8] & (1 << (i % 8)) != 0 { scale } else { -scale };
+        }
+    }
+
+    fn add_decompressed(&self, c: &Compressed, acc: &mut [f32]) {
+        assert_eq!(acc.len(), c.n);
+        if c.payload.len() != 4 + c.n.div_ceil(8) {
+            return;
+        }
+        let scale = super::get_f32(&c.payload, 0);
+        let bits = &c.payload[4..];
+        for (i, a) in acc.iter_mut().enumerate() {
+            *a += if bits[i / 8] & (1 << (i % 8)) != 0 { scale } else { -scale };
+        }
+    }
+
+    fn wire_nbytes(&self, n: usize) -> usize {
+        4 + n.div_ceil(8)
+    }
+
+    fn compress_ef_fused(&self, q: &mut [f32], _ctx: &mut Ctx) -> Compressed {
+        let scale = Self::scale_of(q);
+        let nbytes = q.len().div_ceil(8);
+        let mut payload = Vec::with_capacity(4 + nbytes);
+        super::put_f32(&mut payload, scale);
+        payload.resize(4 + nbytes, 0);
+        let bits = &mut payload[4..];
+        for (i, v) in q.iter_mut().enumerate() {
+            if *v >= 0.0 {
+                bits[i / 8] |= 1 << (i % 8);
+                *v -= scale;
+            } else {
+                *v += scale;
+            }
+        }
+        Compressed { scheme: SchemeId::OneBit, n: q.len(), payload }
+    }
+}
+
+// --- top-k -------------------------------------------------------------------
+
+pub struct ScalarTopK {
+    pub ratio: f64,
+}
+
+impl ScalarTopK {
+    fn k_for(&self, n: usize) -> usize {
+        ((self.ratio * n as f64).ceil() as usize).clamp(1, n.max(1))
+    }
+
+    /// The original selection, including the redundant per-pass `mag_bits`
+    /// recomputation that `TopK::select` no longer does.
+    fn select(&self, x: &[f32], k: usize) -> Vec<u32> {
+        debug_assert!(k >= 1 && k <= x.len());
+        if k == x.len() {
+            return (0..x.len() as u32).collect();
+        }
+        let mut keys: Vec<u32> = x.iter().map(|v| mag_bits(*v)).collect();
+        let nth = keys.len() - k;
+        let (_, &mut thr, _) = keys.select_nth_unstable(nth);
+        let mut idx = Vec::with_capacity(k);
+        for (i, v) in x.iter().enumerate() {
+            if mag_bits(*v) > thr {
+                idx.push(i as u32);
+            }
+        }
+        if idx.len() < k {
+            for (i, v) in x.iter().enumerate() {
+                if mag_bits(*v) == thr {
+                    idx.push(i as u32);
+                    if idx.len() == k {
+                        break;
+                    }
+                }
+            }
+            idx.sort_unstable();
+        }
+        debug_assert_eq!(idx.len(), k);
+        idx
+    }
+}
+
+#[inline]
+fn mag_bits(v: f32) -> u32 {
+    if v.is_finite() {
+        v.to_bits() & 0x7FFF_FFFF
+    } else {
+        0
+    }
+}
+
+#[inline]
+fn wire_value(v: f32) -> f32 {
+    if v.is_finite() {
+        v
+    } else {
+        0.0
+    }
+}
+
+impl Compressor for ScalarTopK {
+    fn name(&self) -> &'static str {
+        "topk"
+    }
+
+    fn id(&self) -> SchemeId {
+        SchemeId::TopK
+    }
+
+    fn unbiased(&self) -> bool {
+        false
+    }
+
+    fn compress(&self, x: &[f32], _ctx: &mut Ctx) -> Compressed {
+        if x.is_empty() {
+            let mut payload = Vec::with_capacity(4);
+            super::put_u32(&mut payload, 0);
+            return Compressed { scheme: SchemeId::TopK, n: 0, payload };
+        }
+        let k = self.k_for(x.len());
+        let idx = self.select(x, k);
+        let mut payload = Vec::with_capacity(4 + 8 * k);
+        super::put_u32(&mut payload, k as u32);
+        for &i in &idx {
+            super::put_u32(&mut payload, i);
+        }
+        for &i in &idx {
+            super::put_f32(&mut payload, wire_value(x[i as usize]));
+        }
+        Compressed { scheme: SchemeId::TopK, n: x.len(), payload }
+    }
+
+    fn decompress(&self, c: &Compressed, out: &mut [f32]) {
+        assert_eq!(out.len(), c.n);
+        out.fill(0.0);
+        self.add_decompressed(c, out);
+    }
+
+    fn add_decompressed(&self, c: &Compressed, acc: &mut [f32]) {
+        assert_eq!(acc.len(), c.n);
+        if c.payload.len() < 4 {
+            return;
+        }
+        let k = super::get_u32(&c.payload, 0) as usize;
+        if k > c.n || c.payload.len() != 4 + 8 * k {
+            return;
+        }
+        let vals_off = 4 + 4 * k;
+        for j in 0..k {
+            let i = super::get_u32(&c.payload, 4 + 4 * j) as usize;
+            if let Some(a) = acc.get_mut(i) {
+                *a += super::get_f32(&c.payload, vals_off + 4 * j);
+            }
+        }
+    }
+
+    fn wire_nbytes(&self, n: usize) -> usize {
+        if n == 0 {
+            return 4;
+        }
+        4 + 8 * self.k_for(n)
+    }
+
+    fn compress_ef_fused(&self, q: &mut [f32], _ctx: &mut Ctx) -> Compressed {
+        if q.is_empty() {
+            let mut payload = Vec::with_capacity(4);
+            super::put_u32(&mut payload, 0);
+            return Compressed { scheme: SchemeId::TopK, n: 0, payload };
+        }
+        let k = self.k_for(q.len());
+        let idx = self.select(q, k);
+        let mut payload = Vec::with_capacity(4 + 8 * k);
+        super::put_u32(&mut payload, k as u32);
+        for &i in &idx {
+            super::put_u32(&mut payload, i);
+        }
+        for &i in &idx {
+            super::put_f32(&mut payload, wire_value(q[i as usize]));
+            q[i as usize] = 0.0;
+        }
+        Compressed { scheme: SchemeId::TopK, n: q.len(), payload }
+    }
+}
+
+// --- random-k ----------------------------------------------------------------
+
+pub struct ScalarRandomK {
+    pub ratio: f64,
+    pub rescale: bool,
+}
+
+impl ScalarRandomK {
+    fn k_for(&self, n: usize) -> usize {
+        ((self.ratio * n as f64).ceil() as usize).clamp(1, n.max(1))
+    }
+
+    fn indices_from_seed(seed: u64, n: usize, k: usize) -> Vec<u32> {
+        Xoshiro256::seed_from_u64(seed).sample_indices(n, k)
+    }
+}
+
+impl Compressor for ScalarRandomK {
+    fn name(&self) -> &'static str {
+        if self.rescale {
+            "randomk_unbiased"
+        } else {
+            "randomk"
+        }
+    }
+
+    fn id(&self) -> SchemeId {
+        SchemeId::RandomK
+    }
+
+    fn unbiased(&self) -> bool {
+        self.rescale
+    }
+
+    fn compress(&self, x: &[f32], ctx: &mut Ctx) -> Compressed {
+        if x.is_empty() {
+            let mut payload = Vec::with_capacity(12);
+            super::put_u32(&mut payload, 0);
+            super::put_u64(&mut payload, 0);
+            return Compressed { scheme: SchemeId::RandomK, n: 0, payload };
+        }
+        let k = self.k_for(x.len());
+        let seed = ctx.rng.next_u64();
+        let idx = Self::indices_from_seed(seed, x.len(), k);
+        let gain = if self.rescale { x.len() as f32 / k as f32 } else { 1.0 };
+        let mut payload = Vec::with_capacity(12 + 4 * k);
+        super::put_u32(&mut payload, k as u32);
+        super::put_u64(&mut payload, seed);
+        for &i in &idx {
+            super::put_f32(&mut payload, x[i as usize] * gain);
+        }
+        Compressed { scheme: SchemeId::RandomK, n: x.len(), payload }
+    }
+
+    fn decompress(&self, c: &Compressed, out: &mut [f32]) {
+        assert_eq!(out.len(), c.n);
+        out.fill(0.0);
+        self.add_decompressed(c, out);
+    }
+
+    fn add_decompressed(&self, c: &Compressed, acc: &mut [f32]) {
+        assert_eq!(acc.len(), c.n);
+        if c.payload.len() < 12 {
+            return;
+        }
+        let k = super::get_u32(&c.payload, 0) as usize;
+        if k == 0 {
+            return;
+        }
+        if k > c.n || c.payload.len() != 12 + 4 * k {
+            return;
+        }
+        let seed = super::get_u64(&c.payload, 4);
+        let idx = Self::indices_from_seed(seed, c.n, k);
+        for (j, &i) in idx.iter().enumerate() {
+            acc[i as usize] += super::get_f32(&c.payload, 12 + 4 * j);
+        }
+    }
+
+    fn wire_nbytes(&self, n: usize) -> usize {
+        if n == 0 {
+            return 12;
+        }
+        12 + 4 * self.k_for(n)
+    }
+
+    fn compress_ef_fused(&self, q: &mut [f32], ctx: &mut Ctx) -> Compressed {
+        if self.rescale {
+            let c = self.compress(q, ctx);
+            let mut dec = vec![0.0f32; q.len()];
+            self.decompress(&c, &mut dec);
+            for (qi, di) in q.iter_mut().zip(&dec) {
+                *qi -= di;
+            }
+            return c;
+        }
+        if q.is_empty() {
+            let mut payload = Vec::with_capacity(12);
+            super::put_u32(&mut payload, 0);
+            super::put_u64(&mut payload, 0);
+            return Compressed { scheme: SchemeId::RandomK, n: 0, payload };
+        }
+        let k = self.k_for(q.len());
+        let seed = ctx.rng.next_u64();
+        let idx = Self::indices_from_seed(seed, q.len(), k);
+        let mut payload = Vec::with_capacity(12 + 4 * k);
+        super::put_u32(&mut payload, k as u32);
+        super::put_u64(&mut payload, seed);
+        for &i in &idx {
+            super::put_f32(&mut payload, q[i as usize]);
+            q[i as usize] = 0.0;
+        }
+        Compressed { scheme: SchemeId::RandomK, n: q.len(), payload }
+    }
+}
+
+// --- linear dithering --------------------------------------------------------
+
+pub struct ScalarLinearDither {
+    pub bits: u32,
+}
+
+impl ScalarLinearDither {
+    fn levels(&self) -> i64 {
+        (1i64 << (self.bits - 1)) - 1
+    }
+}
+
+impl Compressor for ScalarLinearDither {
+    fn name(&self) -> &'static str {
+        "linear_dither"
+    }
+
+    fn id(&self) -> SchemeId {
+        SchemeId::LinearDither
+    }
+
+    fn unbiased(&self) -> bool {
+        true
+    }
+
+    fn compress(&self, x: &[f32], ctx: &mut Ctx) -> Compressed {
+        let scale = max_abs(x);
+        let l = self.levels();
+        let mut payload = Vec::new();
+        super::put_f32(&mut payload, scale);
+        let mut packer = BitPacker::new(x.len(), self.bits);
+        if scale > 0.0 {
+            let inv = l as f32 / scale;
+            for &v in x {
+                let q = v * inv; // in [-L, L]
+                let lo = q.floor();
+                let p = q - lo;
+                let level = lo as i64 + if ctx.rng.next_f32() < p { 1 } else { 0 };
+                let level = level.clamp(-l, l);
+                packer.push((level + l) as u32, self.bits);
+            }
+        } else {
+            for _ in x {
+                packer.push(l as u32, self.bits); // code for level 0
+            }
+        }
+        payload.extend_from_slice(&packer.finish());
+        Compressed { scheme: SchemeId::LinearDither, n: x.len(), payload }
+    }
+
+    fn decompress(&self, c: &Compressed, out: &mut [f32]) {
+        assert_eq!(out.len(), c.n);
+        if c.payload.len() < 4 {
+            out.fill(0.0);
+            return;
+        }
+        let scale = super::get_f32(&c.payload, 0);
+        let l = self.levels();
+        let step = if l > 0 { scale / l as f32 } else { 0.0 };
+        let mut up = BitUnpacker::new(&c.payload[4..]);
+        for o in out.iter_mut() {
+            let code = up.pull(self.bits) as i64 - l;
+            *o = code as f32 * step;
+        }
+    }
+
+    fn wire_nbytes(&self, n: usize) -> usize {
+        4 + (n * self.bits as usize).div_ceil(8)
+    }
+}
+
+// --- natural dithering -------------------------------------------------------
+
+pub struct ScalarNaturalDither {
+    pub bits: u32,
+}
+
+impl ScalarNaturalDither {
+    fn slots(&self) -> u32 {
+        (1u32 << (self.bits - 1)) - 1
+    }
+}
+
+impl Compressor for ScalarNaturalDither {
+    fn name(&self) -> &'static str {
+        "natural_dither"
+    }
+
+    fn id(&self) -> SchemeId {
+        SchemeId::NaturalDither
+    }
+
+    fn unbiased(&self) -> bool {
+        true
+    }
+
+    fn compress(&self, x: &[f32], ctx: &mut Ctx) -> Compressed {
+        let scale = max_abs(x);
+        let slots = self.slots();
+        let min_exp = -(slots as i32 - 1);
+        let mut payload = Vec::new();
+        super::put_f32(&mut payload, scale);
+        let mut packer = BitPacker::new(x.len(), self.bits);
+        for &v in x {
+            let code: u32 = if scale == 0.0 || v == 0.0 {
+                0
+            } else {
+                let u = (v.abs() / scale).min(1.0); // in (0, 1]
+                let bits = u.to_bits();
+                let e = (((bits >> 23) & 0xFF) as i32 - 127).clamp(min_exp - 1, 0);
+                let exp = if e < min_exp {
+                    let hi = f32::from_bits(((min_exp + 127) as u32) << 23);
+                    if ctx.rng.next_f32() < u / hi {
+                        min_exp
+                    } else {
+                        i32::MIN // rounded to zero
+                    }
+                } else {
+                    let p = (bits & 0x7F_FFFF) as f32 * (1.0 / (1u32 << 23) as f32);
+                    if ctx.rng.next_f32() < p {
+                        (e + 1).min(0)
+                    } else {
+                        e
+                    }
+                };
+                if exp == i32::MIN {
+                    0
+                } else {
+                    let j = (-exp) as u32;
+                    if v < 0.0 {
+                        1 + slots + j
+                    } else {
+                        1 + j
+                    }
+                }
+            };
+            packer.push(code, self.bits);
+        }
+        payload.extend_from_slice(&packer.finish());
+        Compressed { scheme: SchemeId::NaturalDither, n: x.len(), payload }
+    }
+
+    fn decompress(&self, c: &Compressed, out: &mut [f32]) {
+        assert_eq!(out.len(), c.n);
+        if c.payload.len() < 4 {
+            out.fill(0.0);
+            return;
+        }
+        let scale = super::get_f32(&c.payload, 0);
+        let mut up = BitUnpacker::new(&c.payload[4..]);
+        for o in out.iter_mut() {
+            let code = up.pull(self.bits);
+            *o = decode_natural_ref(code, scale, self.bits);
+        }
+    }
+
+    fn wire_nbytes(&self, n: usize) -> usize {
+        4 + (n * self.bits as usize).div_ceil(8)
+    }
+}
+
+fn decode_natural_ref(code: u32, scale: f32, bits: u32) -> f32 {
+    if code == 0 {
+        return 0.0;
+    }
+    let slots = (1u32 << (bits - 1)) - 1;
+    let c = code - 1;
+    let j = c % slots;
+    let sign = if c / slots == 1 { -1.0f32 } else { 1.0 };
+    sign * scale * (-(j as f32)).exp2()
+}

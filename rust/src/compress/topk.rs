@@ -38,21 +38,25 @@ impl TopK {
         if k == x.len() {
             return (0..x.len() as u32).collect();
         }
-        let mut keys: Vec<u32> = x.iter().map(|v| mag_bits(*v)).collect();
+        let keys: Vec<u32> = x.iter().map(|v| mag_bits(*v)).collect();
+        // Quickselect permutes its input, so it runs on a scratch copy and
+        // the collection passes below walk the *unpermuted* `keys` — no
+        // per-element `mag_bits` recomputation (is_finite branch per value).
+        let mut scratch = keys.clone();
         // k-th largest key = (n-k)-th smallest.
-        let nth = keys.len() - k;
-        let (_, &mut thr, _) = keys.select_nth_unstable(nth);
+        let nth = scratch.len() - k;
+        let (_, &mut thr, _) = scratch.select_nth_unstable(nth);
         // Collect strictly-above-threshold indices, then fill remaining
         // slots with ==threshold entries in index order (lower index wins).
         let mut idx = Vec::with_capacity(k);
-        for (i, v) in x.iter().enumerate() {
-            if mag_bits(*v) > thr {
+        for (i, &kb) in keys.iter().enumerate() {
+            if kb > thr {
                 idx.push(i as u32);
             }
         }
         if idx.len() < k {
-            for (i, v) in x.iter().enumerate() {
-                if mag_bits(*v) == thr {
+            for (i, &kb) in keys.iter().enumerate() {
+                if kb == thr {
                     idx.push(i as u32);
                     if idx.len() == k {
                         break;
@@ -148,12 +152,7 @@ impl Compressor for TopK {
             return; // malformed: inconsistent k / payload length
         }
         let vals_off = 4 + 4 * k;
-        for j in 0..k {
-            let i = super::get_u32(&c.payload, 4 + 4 * j) as usize;
-            if let Some(a) = acc.get_mut(i) {
-                *a += super::get_f32(&c.payload, vals_off + 4 * j);
-            }
-        }
+        super::kernels::sparse_add_le(&c.payload[4..vals_off], &c.payload[vals_off..], acc);
     }
 
     fn wire_nbytes(&self, n: usize) -> usize {

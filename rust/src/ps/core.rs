@@ -885,16 +885,14 @@ impl ServerCore {
             let t = Instant::now();
             let mut decoded = seal.decoded;
             decoded.sort_by_key(|(from, _)| *from);
-            let mut acc = vec![0.0f32; dim];
-            for (_, buf) in &decoded {
-                for (a, b) in acc.iter_mut().zip(buf) {
-                    *a += *b;
-                }
+            let mut acc = crate::comm::BufPool::global().rent_f32(dim);
+            for (_, buf) in decoded {
+                crate::compress::kernels::add_assign(&mut acc, &buf);
+                // The contribution dies here; recycle it for future decodes.
+                crate::comm::BufPool::global().give_f32(buf);
             }
             let inv = 1.0 / seal.count as f32;
-            for a in &mut acc {
-                *a *= inv;
-            }
+            crate::compress::kernels::scale_assign(&mut acc, inv);
             self.stats.reduce_s += t.elapsed().as_secs_f64();
             let residual = st.residual.take();
             st.encoding = Some(EncodeSlot { iter: seal.iter, waiters: seal.waiters });
@@ -928,12 +926,15 @@ impl ServerCore {
                 let t = Instant::now();
                 let buf = stage::decode_contribution(comp.as_ref(), &data);
                 let ns = t.elapsed().as_nanos() as u64;
+                // The wire payload dies with the decode; recycle it.
+                crate::comm::BufPool::global().give_bytes(data.payload);
                 sink(StageEvent::Decoded { key, iter, from, buf, ns });
             });
         } else {
             let t = Instant::now();
             let buf = stage::decode_contribution(self.opts.comp.as_ref(), &data);
             let ns = t.elapsed().as_nanos() as u64;
+            crate::comm::BufPool::global().give_bytes(data.payload);
             let evs = self.on_event(StageEvent::Decoded { key, iter, from, buf, ns });
             replies.extend(evs);
         }

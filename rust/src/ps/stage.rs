@@ -73,7 +73,9 @@ pub(crate) enum Executor {
 /// a zero buffer plus the scheme's sparse-aware `add_decompressed`. Pure —
 /// no shard state, safe to run on any thread in any order.
 pub(crate) fn decode_contribution(comp: &dyn Compressor, data: &Compressed) -> Vec<f32> {
-    let mut buf = vec![0.0f32; data.n];
+    // Rented, not allocated: the reduce step gives the contribution back to
+    // the pool once it is summed into the aggregate (see ps::core).
+    let mut buf = crate::comm::BufPool::global().rent_f32(data.n);
     comp.add_decompressed(data, &mut buf);
     buf
 }
@@ -109,7 +111,10 @@ pub(crate) fn encode_aggregate(
     let mut rng = Xoshiro256::seed_from_u64(seed);
     let mut ctx = Ctx::with_threads(&mut rng, intra_threads);
     if sync != SyncMode::CompressedEf {
-        return (comp.compress(&acc, &mut ctx), residual);
+        let c = comp.compress(&acc, &mut ctx);
+        // The aggregate dies here (EF keeps it as the residual instead).
+        crate::comm::BufPool::global().give_f32(acc);
+        return (c, residual);
     }
     let (c, e) =
         crate::compress::ef::compress_cycle(comp, fused, &mut ctx, acc, residual.as_deref());

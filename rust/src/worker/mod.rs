@@ -347,10 +347,16 @@ impl WorkerComm {
             let mut rng = Xoshiro256::seed_from_u64(seed);
             let mut ctx = Ctx::with_threads(&mut rng, intra);
             let data = match sync {
+                // EF keeps `g` as the block's new residual (recycling the
+                // displaced one); otherwise the staging copy dies here.
                 SyncMode::CompressedEf => {
                     block_ef.compress(key, g, comp.as_ref(), fused, &mut ctx)
                 }
-                _ => comp.compress(&g, &mut ctx),
+                _ => {
+                    let c = comp.compress(&g, &mut ctx);
+                    crate::comm::BufPool::global().give_f32(g);
+                    c
+                }
             };
             cns.fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
             // Fault injection after compression: the push is lost on the
@@ -380,7 +386,7 @@ impl WorkerComm {
             // next block out of the gradient.
             self.inflight.acquire();
             let permit = Permit(Arc::clone(&self.inflight));
-            let g = grad[sb.range.clone()].to_vec();
+            let g = crate::comm::BufPool::global().rent_f32_copy(&grad[sb.range.clone()]);
             self.push_job(iter, sb.key, g, compress_ns, move || drop(permit));
         }
         self.pool.wait();
@@ -477,7 +483,7 @@ impl WorkerComm {
                         self.worker_id, ACK_STALL_TIMEOUT
                     );
                 }
-                let g = grad[sb.range.clone()].to_vec();
+                let g = crate::comm::BufPool::global().rent_f32_copy(&grad[sb.range.clone()]);
                 let window = Arc::clone(&window);
                 self.push_job(iter, sb.key, g, compress_ns, move || window.close());
             }
@@ -553,9 +559,13 @@ impl WorkerComm {
                                 let dns = Arc::clone(dns);
                                 pool.execute(move || {
                                     let t = std::time::Instant::now();
-                                    let mut buf = vec![0.0f32; data.n];
+                                    let bp = crate::comm::BufPool::global();
+                                    let mut buf = bp.rent_f32(data.n);
                                     comp.decompress(&data, &mut buf);
                                     dns.fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                                    // The response payload dies with the
+                                    // decode; recycle it.
+                                    bp.give_bytes(data.payload);
                                     let _ = tx.send((range, buf));
                                 });
                             }
@@ -571,6 +581,7 @@ impl WorkerComm {
         drop(tx);
         for (range, buf) in rx {
             out[range].copy_from_slice(&buf);
+            crate::comm::BufPool::global().give_f32(buf);
         }
         (rx_bytes.load(Ordering::Relaxed), decompress_ns.load(Ordering::Relaxed) as f64 * 1e-9)
     }

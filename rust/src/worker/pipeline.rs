@@ -138,23 +138,22 @@ impl BlockEf {
         let slot = self.slot(key, g.len());
         let mut e = slot.lock().unwrap();
         assert_eq!(e.len(), g.len(), "block {key} changed size");
-        for (gi, ei) in g.iter_mut().zip(e.iter()) {
-            *gi += *ei;
-        }
-        if fused {
-            let c = comp.compress_ef_fused(&mut g, ctx);
-            *e = g;
-            c
+        crate::compress::kernels::add_assign(&mut g, &e);
+        let pool = crate::comm::BufPool::global();
+        let c = if fused {
+            comp.compress_ef_fused(&mut g, ctx)
         } else {
             let c = comp.compress(&g, ctx);
-            let mut dec = vec![0.0f32; g.len()];
+            let mut dec = pool.rent_f32(g.len());
             comp.decompress(&c, &mut dec);
-            for (gi, di) in g.iter_mut().zip(&dec) {
-                *gi -= di;
-            }
-            *e = g;
+            crate::compress::kernels::sub_assign(&mut g, &dec);
+            pool.give_f32(dec);
             c
-        }
+        };
+        // `g` becomes the new residual; the displaced one is recycled (the
+        // staging copy rented in push_all thus round-trips via the pool).
+        pool.give_f32(std::mem::replace(&mut *e, g));
+        c
     }
 
     /// Total f32 elements held as residual state (memory accounting).

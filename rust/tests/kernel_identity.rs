@@ -1,0 +1,169 @@
+//! Bit-identity: the vectorized compressor kernels vs the frozen scalar
+//! reference (`compress::reference`) across the full `paper_suite()`.
+//!
+//! The cluster/staged bit-exactness guarantees (staged == synchronous
+//! server, fused == naive EF, multi-process == inproc) all assume the
+//! compressors are pure functions of (input, RNG stream). The chunked
+//! rewrites must therefore produce **byte-identical wire payloads** and
+//! **f32-bit-identical** decompress / add_decompressed / EF-residual
+//! results — including non-finite inputs, empty tensors, and tail-sized
+//! blocks (`n % 8 != 0`).
+
+use byteps_compress::compress::reference::{compress_cycle_scalar, scalar_suite};
+use byteps_compress::compress::{ef, paper_suite, Compressor, Ctx};
+use byteps_compress::util::rng::Xoshiro256;
+
+/// Sizes straddling the chunk width: empty, sub-chunk, exact multiples,
+/// off-by-one tails, and larger blocks.
+const SIZES: [usize; 11] = [0, 1, 5, 7, 8, 9, 31, 64, 100, 1000, 1003];
+
+fn bits_of(x: &[f32]) -> Vec<u32> {
+    x.iter().map(|v| v.to_bits()).collect()
+}
+
+/// Test vectors for one size: gaussian data, all zeros, and a gaussian
+/// block with NaN/±inf injected at scattered positions.
+fn inputs(n: usize) -> Vec<Vec<f32>> {
+    let mut rng = Xoshiro256::seed_from_u64(0xC0FFEE ^ n as u64);
+    let mut base = vec![0.0f32; n];
+    rng.fill_normal(&mut base, 1.5);
+    let mut nonfinite = base.clone();
+    for (i, v) in nonfinite.iter_mut().enumerate() {
+        match i % 13 {
+            3 => *v = f32::NAN,
+            7 => *v = f32::INFINITY,
+            11 => *v = f32::NEG_INFINITY,
+            _ => {}
+        }
+    }
+    vec![base, vec![0.0f32; n], nonfinite]
+}
+
+/// NaN-aware bit comparison: equal bits, or both NaN. (A NaN scale reaches
+/// every lane through ±scale decode; IEEE negation and NaN-propagation sign
+/// conventions are the one place x86/ARM scalar-vs-vector codegen may
+/// legitimately differ in the *payload* of a NaN, never in a real value.)
+fn same_f32(a: f32, b: f32) -> bool {
+    a.to_bits() == b.to_bits() || (a.is_nan() && b.is_nan())
+}
+
+fn assert_same_slice(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            same_f32(*x, *y),
+            "{what}: bit mismatch at {i}: {:#010x} vs {:#010x}",
+            x.to_bits(),
+            y.to_bits()
+        );
+    }
+}
+
+fn pattern(n: usize) -> Vec<f32> {
+    (0..n).map(|i| ((i as f32) * 0.37).sin() * 2.0).collect()
+}
+
+#[test]
+fn wire_payloads_are_byte_identical() {
+    for ((label, fast), (slabel, slow)) in paper_suite().iter().zip(scalar_suite().iter()) {
+        assert_eq!(label, slabel, "suite order drifted");
+        for &n in &SIZES {
+            for (case, x) in inputs(n).into_iter().enumerate() {
+                let mut r1 = Xoshiro256::seed_from_u64(42 + n as u64);
+                let mut r2 = Xoshiro256::seed_from_u64(42 + n as u64);
+                let cf = fast.compress(&x, &mut Ctx::new(&mut r1));
+                let cs = slow.compress(&x, &mut Ctx::new(&mut r2));
+                assert_eq!(cf.scheme, cs.scheme, "{label} n={n} case={case}");
+                assert_eq!(cf.n, cs.n, "{label} n={n} case={case}");
+                assert_eq!(cf.payload, cs.payload, "{label} n={n} case={case}: wire bytes differ");
+                // Both RNGs must have consumed the same draw count.
+                assert_eq!(r1.next_u64(), r2.next_u64(), "{label} n={n} case={case}: RNG drifted");
+            }
+        }
+    }
+}
+
+#[test]
+fn decompress_and_accumulate_are_bit_identical() {
+    for ((label, fast), (_, slow)) in paper_suite().iter().zip(scalar_suite().iter()) {
+        for &n in &SIZES {
+            for (case, x) in inputs(n).into_iter().enumerate() {
+                let mut rng = Xoshiro256::seed_from_u64(7 * n as u64 + 1);
+                let c = fast.compress(&x, &mut Ctx::new(&mut rng));
+                let what = format!("{label} n={n} case={case}");
+
+                let mut of = pattern(n);
+                let mut os = pattern(n);
+                fast.decompress(&c, &mut of);
+                slow.decompress(&c, &mut os);
+                assert_same_slice(&of, &os, &format!("{what} decompress"));
+
+                let mut af = pattern(n);
+                let mut as_ = pattern(n);
+                fast.add_decompressed(&c, &mut af);
+                slow.add_decompressed(&c, &mut as_);
+                assert_same_slice(&af, &as_, &format!("{what} add_decompressed"));
+            }
+        }
+    }
+}
+
+#[test]
+fn fused_ef_wire_and_residual_are_bit_identical() {
+    for ((label, fast), (_, slow)) in paper_suite().iter().zip(scalar_suite().iter()) {
+        for &n in &SIZES {
+            for (case, x) in inputs(n).into_iter().enumerate() {
+                let mut r1 = Xoshiro256::seed_from_u64(1000 + n as u64);
+                let mut r2 = Xoshiro256::seed_from_u64(1000 + n as u64);
+                let mut qf = x.clone();
+                let mut qs = x.clone();
+                let cf = fast.compress_ef_fused(&mut qf, &mut Ctx::new(&mut r1));
+                let cs = slow.compress_ef_fused(&mut qs, &mut Ctx::new(&mut r2));
+                let what = format!("{label} n={n} case={case} fused");
+                assert_eq!(cf.payload, cs.payload, "{what}: wire bytes differ");
+                assert_same_slice(&qf, &qs, &format!("{what} residual"));
+            }
+        }
+    }
+}
+
+/// Multi-step EF cycles (Alg. 4): `ef::compress_cycle` (chunked
+/// accumulate/decay) against the scalar cycle, residual carried across
+/// iterations, both fused and naive.
+#[test]
+fn ef_cycle_matches_scalar_cycle_over_time() {
+    for ((label, fast), (_, slow)) in paper_suite().iter().zip(scalar_suite().iter()) {
+        for fused in [true, false] {
+            for &n in &[0usize, 9, 100, 1003] {
+                let mut r1 = Xoshiro256::seed_from_u64(77);
+                let mut r2 = Xoshiro256::seed_from_u64(77);
+                let mut data_rng = Xoshiro256::seed_from_u64(5 + n as u64);
+                let mut ef_fast: Option<Vec<f32>> = None;
+                let mut ef_slow: Option<Vec<f32>> = None;
+                for step in 0..4 {
+                    let mut g = vec![0.0f32; n];
+                    data_rng.fill_normal(&mut g, 1.0);
+                    let (cf, rf) = ef::compress_cycle(
+                        fast.as_ref(),
+                        fused,
+                        &mut Ctx::new(&mut r1),
+                        g.clone(),
+                        ef_fast.as_deref(),
+                    );
+                    let (cs, rs) = compress_cycle_scalar(
+                        slow.as_ref(),
+                        fused,
+                        &mut Ctx::new(&mut r2),
+                        g,
+                        ef_slow.as_deref(),
+                    );
+                    let what = format!("{label} n={n} fused={fused} step={step}");
+                    assert_eq!(cf.payload, cs.payload, "{what}: wire bytes differ");
+                    assert_same_slice(&rf, &rs, &format!("{what} residual"));
+                    ef_fast = Some(rf);
+                    ef_slow = Some(rs);
+                }
+            }
+        }
+    }
+}
