@@ -35,6 +35,10 @@
 //! that the peer would reject — an oversized tensor surfaces as a
 //! [`CommError`] at the sender instead of a fully-serialized frame that
 //! severs the peer's connection.
+// Wire-facing module: the static-invariants lint (rust/src/lint) keeps
+// this file panic-free outside tests, and clippy enforces the same at
+// the `unwrap`/`expect` level.
+#![deny(clippy::unwrap_used, clippy::expect_used)]
 
 use super::{CommError, Message};
 use crate::compress::{Compressed, SchemeId};
@@ -82,34 +86,31 @@ impl<'a> Reader<'a> {
         Ok(v)
     }
 
-    fn u16(&mut self) -> Result<u16, CommError> {
-        let end = self.pos + 2;
+    /// Read exactly `N` bytes as a fixed array. The copy (instead of
+    /// `try_into().unwrap()` on the checked slice) keeps the reader
+    /// panic-free end to end: `bytes()` already guarantees the length,
+    /// so no unreachable error arm is needed.
+    fn array<const N: usize>(&mut self, what: &'static str) -> Result<[u8; N], CommError> {
         let s = self
             .buf
-            .get(self.pos..end)
-            .ok_or_else(|| CommError::Protocol("truncated u16".into()))?;
-        self.pos = end;
-        Ok(u16::from_le_bytes(s.try_into().unwrap()))
+            .get(self.pos..self.pos + N)
+            .ok_or_else(|| CommError::Protocol(format!("truncated {what}")))?;
+        self.pos += N;
+        let mut a = [0u8; N];
+        a.copy_from_slice(s);
+        Ok(a)
+    }
+
+    fn u16(&mut self) -> Result<u16, CommError> {
+        Ok(u16::from_le_bytes(self.array("u16")?))
     }
 
     fn u32(&mut self) -> Result<u32, CommError> {
-        let end = self.pos + 4;
-        let s = self
-            .buf
-            .get(self.pos..end)
-            .ok_or_else(|| CommError::Protocol("truncated u32".into()))?;
-        self.pos = end;
-        Ok(u32::from_le_bytes(s.try_into().unwrap()))
+        Ok(u32::from_le_bytes(self.array("u32")?))
     }
 
     fn u64(&mut self) -> Result<u64, CommError> {
-        let end = self.pos + 8;
-        let s = self
-            .buf
-            .get(self.pos..end)
-            .ok_or_else(|| CommError::Protocol("truncated u64".into()))?;
-        self.pos = end;
-        Ok(u64::from_le_bytes(s.try_into().unwrap()))
+        Ok(u64::from_le_bytes(self.array("u64")?))
     }
 
     fn bytes(&mut self, n: usize) -> Result<&'a [u8], CommError> {
@@ -138,6 +139,7 @@ fn get_block(r: &mut Reader) -> Result<Compressed, CommError> {
     // The decoded payload is the dominant per-frame allocation on the
     // server's steady-state recv path; rent it from the pool so consumers
     // that `give_bytes` it back after use close the recycling loop.
+    // lint: transfers(decode)
     let mut payload = super::BufPool::global().rent_bytes_empty();
     payload.extend_from_slice(r.bytes(plen)?);
     let c = Compressed { scheme, n, payload };
@@ -305,6 +307,7 @@ pub fn frame_bytes(msg: &Message) -> usize {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::testutil::forall;

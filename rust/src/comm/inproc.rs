@@ -2,6 +2,10 @@
 //! byte accounting. This is the default transport for experiments — it
 //! exercises the full PS/worker protocol without socket overhead, which is
 //! what the Table-6 ablation needs (compression cost, not kernel cost).
+// Wire-facing module: the static-invariants lint (rust/src/lint) keeps
+// this file panic-free outside tests, and clippy enforces the same at
+// the `unwrap`/`expect` level.
+#![deny(clippy::unwrap_used, clippy::expect_used)]
 
 use super::{CommError, Endpoint, Message};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -14,6 +18,17 @@ pub struct InprocEndpoint {
     sent: Arc<AtomicU64>,
 }
 
+impl InprocEndpoint {
+    /// Lock the receiver, recovering from mutex poisoning: a `Receiver`
+    /// holds no invariants a panicking holder could half-update, so the
+    /// poison flag carries no information — and propagating the panic
+    /// would cascade one worker thread's failure into every thread
+    /// sharing the endpoint. Same policy as `comm::BufPool`.
+    fn rx(&self) -> std::sync::MutexGuard<'_, Receiver<Message>> {
+        self.rx.lock().unwrap_or_else(|p| p.into_inner())
+    }
+}
+
 impl Endpoint for InprocEndpoint {
     fn send(&self, msg: Message) -> Result<(), CommError> {
         // Same frame cap as the TCP transport, so a tensor that would be
@@ -24,11 +39,11 @@ impl Endpoint for InprocEndpoint {
     }
 
     fn recv(&self) -> Result<Message, CommError> {
-        self.rx.lock().unwrap().recv().map_err(|_| CommError::Closed)
+        self.rx().recv().map_err(|_| CommError::Closed)
     }
 
     fn try_recv(&self) -> Result<Option<Message>, CommError> {
-        match self.rx.lock().unwrap().try_recv() {
+        match self.rx().try_recv() {
             Ok(m) => Ok(Some(m)),
             Err(TryRecvError::Empty) => Ok(None),
             Err(TryRecvError::Disconnected) => Err(CommError::Closed),
@@ -51,6 +66,7 @@ pub fn pair() -> (InprocEndpoint, InprocEndpoint) {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::comm::frame;

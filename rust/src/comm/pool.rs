@@ -13,6 +13,10 @@
 //! a panicking job can never wedge the pool, it only costs one buffer
 //! (panic safety). The pool is bounded both in buffer count and per-buffer
 //! capacity so a burst or one oversized frame cannot pin memory forever.
+// Wire-facing module: the static-invariants lint (rust/src/lint) keeps
+// this file panic-free outside tests, and clippy enforces the same at
+// the `unwrap`/`expect` level.
+#![deny(clippy::unwrap_used, clippy::expect_used)]
 
 use std::sync::{Mutex, MutexGuard};
 
@@ -120,6 +124,7 @@ impl Default for BufPool {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
 

@@ -9,6 +9,10 @@
 //! Frames above [`frame::MAX_FRAME_LEN`] are rejected on *both* sides:
 //! `recv` refuses oversized length prefixes and `send` refuses to encode
 //! them in the first place.
+// Wire-facing module: the static-invariants lint (rust/src/lint) keeps
+// this file panic-free outside tests, and clippy enforces the same at
+// the `unwrap`/`expect` level.
+#![deny(clippy::unwrap_used, clippy::expect_used)]
 
 use super::{frame, CommError, Endpoint, Message};
 use std::io::{Read, Write};
@@ -32,6 +36,17 @@ pub struct TcpEndpoint {
     sent: Arc<AtomicU64>,
 }
 
+/// Lock a connection half, recovering from mutex poisoning instead of
+/// propagating the original panic into every thread that shares the
+/// endpoint. The state under the lock stays usable: the stream handle is
+/// valid at every instant, and a holder that panicked mid-frame leaves at
+/// worst a desynced stream, which the next operation surfaces as a
+/// counted frame/Io error on this one connection — strictly better than
+/// cascading a shard-wide crash. Same policy as `comm::BufPool`.
+fn lock_half(m: &Mutex<Half>) -> std::sync::MutexGuard<'_, Half> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
 impl TcpEndpoint {
     pub fn from_stream(stream: TcpStream) -> std::io::Result<Self> {
         stream.set_nodelay(true)?;
@@ -51,7 +66,7 @@ impl TcpEndpoint {
     /// a connected-but-silent peer cannot stall a server's accept loop).
     /// `None` restores indefinite blocking.
     pub fn set_read_timeout(&self, dur: Option<Duration>) -> std::io::Result<()> {
-        self.reader.lock().unwrap().stream.set_read_timeout(dur)
+        lock_half(&self.reader).stream.set_read_timeout(dur)
     }
 
     /// Non-consuming liveness probe: true once the peer has closed its
@@ -61,7 +76,7 @@ impl TcpEndpoint {
     /// the cluster accept loop uses it to release the rank of a worker
     /// that registered and then died before the run started.
     pub fn peer_closed(&self) -> bool {
-        let r = self.reader.lock().unwrap();
+        let r = lock_half(&self.reader);
         if r.stream.set_nonblocking(true).is_err() {
             return true;
         }
@@ -83,7 +98,7 @@ impl TcpEndpoint {
     /// attacker-declared length (up to 4 GiB) to realign would hand a
     /// hostile peer exactly the read-pinning the handshake bounds exclude.
     pub fn recv_bounded(&self, cap: usize) -> Result<Message, CommError> {
-        let mut guard = self.reader.lock().unwrap();
+        let mut guard = lock_half(&self.reader);
         let Half { stream, scratch } = &mut *guard;
         let mut len_buf = [0u8; 4];
         read_exact(stream, &mut len_buf)?;
@@ -138,7 +153,7 @@ fn read_exact(stream: &mut TcpStream, buf: &mut [u8]) -> Result<(), CommError> {
 
 impl Endpoint for TcpEndpoint {
     fn send(&self, msg: Message) -> Result<(), CommError> {
-        let mut guard = self.writer.lock().unwrap();
+        let mut guard = lock_half(&self.writer);
         let Half { stream, scratch } = &mut *guard;
         // Oversized messages fail here, symmetrically with the recv-side
         // cap — never serialized, never on the wire. Serialization reuses
@@ -164,7 +179,7 @@ impl Endpoint for TcpEndpoint {
         // Peek the stream without blocking. Whatever peek returns, restore
         // blocking mode *first* — leaving the socket non-blocking would
         // turn every later recv() into a WouldBlock error.
-        let r = self.reader.lock().unwrap();
+        let r = lock_half(&self.reader);
         r.stream.set_nonblocking(true).map_err(|e| CommError::Io(e.to_string()))?;
         let mut len_buf = [0u8; 4];
         let peeked = r.stream.peek(&mut len_buf);
@@ -201,6 +216,7 @@ pub fn accept_n<A: ToSocketAddrs>(addr: A, n: usize) -> std::io::Result<(Vec<Tcp
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::compress::{Compressed, SchemeId};

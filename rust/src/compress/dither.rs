@@ -88,6 +88,8 @@ impl<'a> BitUnpacker<'a> {
 /// per-code byte feed, no bounds checks). The scalar `BitUnpacker` tail
 /// covers `n % 8` codes and truncated payloads (zero-extended), keeping the
 /// output bit-identical to pulling every code through `BitUnpacker`.
+// lint: allow(panic, fn) — chunks_exact pairs guarantee the CHUNK-array cast and le[..b] (b ≤ 16)
+// lint: allow(index, fn) — done counts full chunks, so every slice start is ≤ len
 fn unpack_map(packed: &[u8], bits: u32, out: &mut [f32], mut dec: impl FnMut(u32) -> f32) {
     let b = bits as usize;
     let mask = (1u128 << b) - 1;
@@ -187,6 +189,7 @@ impl Compressor for LinearDither {
     }
 
     fn decompress(&self, c: &Compressed, out: &mut [f32]) {
+        // lint: allow(panic) — caller contract, not wire data: the output buffer is rented at c.n
         assert_eq!(out.len(), c.n);
         // Wire-data guard: a payload without even the scale header decodes
         // to zeros (reported upstream by `compress::validate_wire`).
@@ -197,6 +200,7 @@ impl Compressor for LinearDither {
         let scale = super::get_f32(&c.payload, 0);
         let l = self.levels();
         let step = if l > 0 { scale / l as f32 } else { 0.0 };
+        // lint: allow(index) — the length guard above proves payload.len() >= 4
         unpack_map(&c.payload[4..], self.bits, out, |code| (code as i64 - l) as f32 * step);
     }
 
@@ -310,6 +314,7 @@ impl Compressor for NaturalDither {
     }
 
     fn decompress(&self, c: &Compressed, out: &mut [f32]) {
+        // lint: allow(panic) — caller contract, not wire data: the output buffer is rented at c.n
         assert_eq!(out.len(), c.n);
         // Wire-data guard (see LinearDither::decompress).
         if c.payload.len() < 4 {
@@ -324,6 +329,7 @@ impl Compressor for NaturalDither {
         for (code, t) in table.iter_mut().enumerate().take(1usize << self.bits) {
             *t = decode_natural(code as u32, scale, self.bits);
         }
+        // lint: allow(index) — payload.len() >= 4 checked above; code & 0xFF is always < 256
         unpack_map(&c.payload[4..], self.bits, out, |code| table[(code & 0xFF) as usize]);
     }
 

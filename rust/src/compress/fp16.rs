@@ -41,6 +41,7 @@ impl Compressor for Fp16 {
     }
 
     fn decompress(&self, c: &Compressed, out: &mut [f32]) {
+        // lint: allow(panic) — caller contract, not wire data: the output buffer is rented at c.n
         assert_eq!(out.len(), c.n);
         // Wire-data guard (reported upstream by `compress::validate_wire`).
         if c.payload.len() != 2 * c.n {
@@ -51,6 +52,7 @@ impl Compressor for Fp16 {
     }
 
     fn add_decompressed(&self, c: &Compressed, acc: &mut [f32]) {
+        // lint: allow(panic) — caller contract, not wire data: the accumulator is rented at c.n
         assert_eq!(acc.len(), c.n);
         // Wire-data guard against short payloads (reported upstream by
         // `compress::validate_wire`).

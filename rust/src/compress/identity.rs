@@ -26,6 +26,7 @@ impl Compressor for Identity {
     }
 
     fn decompress(&self, c: &Compressed, out: &mut [f32]) {
+        // lint: allow(panic) — caller contract, not wire data: the output buffer is rented at c.n
         assert_eq!(out.len(), c.n);
         // Wire-data guard (reported upstream by `compress::validate_wire`).
         if c.payload.len() != 4 * c.n {
@@ -36,6 +37,7 @@ impl Compressor for Identity {
     }
 
     fn add_decompressed(&self, c: &Compressed, acc: &mut [f32]) {
+        // lint: allow(panic) — caller contract, not wire data: the accumulator is rented at c.n
         assert_eq!(acc.len(), c.n);
         // Wire-data guard against short payloads (reported upstream by
         // `compress::validate_wire`).

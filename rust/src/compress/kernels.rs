@@ -81,6 +81,7 @@ pub fn f32_to_le_bytes(x: &[f32], out: &mut Vec<u8>) {
 }
 
 /// `out[i] = f32::from_le_bytes(bytes[4i..])` for `min` of both lengths.
+// lint: allow(panic, fn) — chunks_exact(4) guarantees the 4-byte array cast
 #[inline]
 pub fn le_bytes_to_f32(bytes: &[u8], out: &mut [f32]) {
     for (b, o) in bytes.chunks_exact(4).zip(out.iter_mut()) {
@@ -89,6 +90,7 @@ pub fn le_bytes_to_f32(bytes: &[u8], out: &mut [f32]) {
 }
 
 /// `acc[i] += f32::from_le_bytes(bytes[4i..])` for `min` of both lengths.
+// lint: allow(panic, fn) — chunks_exact(4) guarantees the 4-byte array cast
 #[inline]
 pub fn le_bytes_add_f32(bytes: &[u8], acc: &mut [f32]) {
     for (b, a) in bytes.chunks_exact(4).zip(acc.iter_mut()) {
@@ -108,6 +110,7 @@ pub fn f32_to_f16_slice(src: &[f32], dst: &mut [u8]) {
 }
 
 /// Decode little-endian binary16 from `src` into `dst`.
+// lint: allow(panic, fn) — chunks_exact(2) guarantees the 2-byte array cast
 #[inline]
 pub fn f16_to_f32_slice(src: &[u8], dst: &mut [f32]) {
     for (b, o) in src.chunks_exact(2).zip(dst.iter_mut()) {
@@ -116,6 +119,7 @@ pub fn f16_to_f32_slice(src: &[u8], dst: &mut [f32]) {
 }
 
 /// `acc[i] += decode(src[2i..])` — the fp16 aggregation path.
+// lint: allow(panic, fn) — chunks_exact(2) guarantees the 2-byte array cast
 #[inline]
 pub fn f16_add_decoded(src: &[u8], acc: &mut [f32]) {
     for (b, a) in src.chunks_exact(2).zip(acc.iter_mut()) {
@@ -172,6 +176,7 @@ pub fn sign_pack(x: &[f32], bits: &mut [u8]) {
 }
 
 /// `out[i] = ±scale` from the packed sign bitmap.
+// lint: allow(panic, fn) — chunks_exact_mut(CHUNK) guarantees the CHUNK-array cast
 #[inline]
 pub fn sign_unpack_scaled(bits: &[u8], scale: f32, out: &mut [f32]) {
     let sb = scale.to_bits();
@@ -195,6 +200,7 @@ pub fn sign_unpack_scaled(bits: &[u8], scale: f32, out: &mut [f32]) {
 
 /// `acc[i] += ±scale` from the packed sign bitmap (IEEE `a - s == a + (-s)`
 /// exactly, so this matches the scalar add/sub branches bit-for-bit).
+// lint: allow(panic, fn) — chunks_exact_mut(CHUNK) guarantees the CHUNK-array cast
 #[inline]
 pub fn sign_add_scaled(bits: &[u8], scale: f32, acc: &mut [f32]) {
     let sb = scale.to_bits();
@@ -298,6 +304,8 @@ pub fn pack_codes(codes: &[u32], bits: u32, out: &mut Vec<u8>) {
 /// `dither::BitUnpacker` (wire data is untrusted). The wide path reads
 /// `bits` whole bytes per eight codes; the scalar tail also takes over for
 /// whatever a short buffer cannot back.
+// lint: allow(panic, fn) — chunks_exact pairs guarantee the CHUNK-array cast and le[..b] (b ≤ 16)
+// lint: allow(index, fn) — done counts full chunks, so every slice start is ≤ len
 #[inline]
 pub fn unpack_codes(buf: &[u8], bits: u32, codes: &mut [u32]) {
     let b = bits as usize;
@@ -341,6 +349,7 @@ pub fn unpack_codes(buf: &[u8], bits: u32, codes: &mut [u32]) {
 /// separate byte regions (the top-k wire layout). Indices are untrusted wire
 /// data, so out-of-range entries are skipped — the `get_mut` check is the
 /// only branch left in the loop.
+// lint: allow(panic, fn) — chunks_exact(4) guarantees the 4-byte array cast
 #[inline]
 pub fn sparse_add_le(idx_bytes: &[u8], val_bytes: &[u8], acc: &mut [f32]) {
     for (ib, vb) in idx_bytes.chunks_exact(4).zip(val_bytes.chunks_exact(4)) {
@@ -354,6 +363,8 @@ pub fn sparse_add_le(idx_bytes: &[u8], val_bytes: &[u8], acc: &mut [f32]) {
 
 /// `acc[indices[j]] += val[j]` where indices are trusted in-range (random-k
 /// regenerates them from the wire seed, bounded by construction).
+// lint: allow(panic, fn) — chunks_exact(4) guarantees the 4-byte array cast
+// lint: allow(index, fn) — random-k regenerates the indices from the wire seed, in range by construction
 #[inline]
 pub fn sparse_add_indexed(indices: &[u32], val_bytes: &[u8], acc: &mut [f32]) {
     for (&i, vb) in indices.iter().zip(val_bytes.chunks_exact(4)) {

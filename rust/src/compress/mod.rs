@@ -262,6 +262,8 @@ pub(crate) fn put_f32(buf: &mut Vec<u8>, v: f32) {
 }
 
 #[inline]
+// lint: allow(panic, fn) — the slice is exactly 4 bytes, so the array cast cannot fail
+// lint: allow(index, fn) — callers read offsets validate_wire already bounded
 pub(crate) fn get_f32(buf: &[u8], off: usize) -> f32 {
     f32::from_le_bytes(buf[off..off + 4].try_into().unwrap())
 }
@@ -272,6 +274,8 @@ pub(crate) fn put_u32(buf: &mut Vec<u8>, v: u32) {
 }
 
 #[inline]
+// lint: allow(panic, fn) — the slice is exactly 4 bytes, so the array cast cannot fail
+// lint: allow(index, fn) — callers read offsets validate_wire already bounded
 pub(crate) fn get_u32(buf: &[u8], off: usize) -> u32 {
     u32::from_le_bytes(buf[off..off + 4].try_into().unwrap())
 }
@@ -282,6 +286,8 @@ pub(crate) fn put_u64(buf: &mut Vec<u8>, v: u64) {
 }
 
 #[inline]
+// lint: allow(panic, fn) — the slice is exactly 8 bytes, so the array cast cannot fail
+// lint: allow(index, fn) — callers read offsets validate_wire already bounded
 pub(crate) fn get_u64(buf: &[u8], off: usize) -> u64 {
     u64::from_le_bytes(buf[off..off + 8].try_into().unwrap())
 }

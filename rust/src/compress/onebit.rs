@@ -53,6 +53,7 @@ impl Compressor for ScaledOneBit {
     }
 
     fn decompress(&self, c: &Compressed, out: &mut [f32]) {
+        // lint: allow(panic) — caller contract, not wire data: the output buffer is rented at c.n
         assert_eq!(out.len(), c.n);
         // Wire-data guard (reported upstream by `compress::validate_wire`).
         if c.payload.len() != 4 + c.n.div_ceil(8) {
@@ -60,10 +61,12 @@ impl Compressor for ScaledOneBit {
             return;
         }
         let scale = super::get_f32(&c.payload, 0);
+        // lint: allow(index) — the length guard above proves payload.len() >= 4
         kernels::sign_unpack_scaled(&c.payload[4..], scale, out);
     }
 
     fn add_decompressed(&self, c: &Compressed, acc: &mut [f32]) {
+        // lint: allow(panic) — caller contract, not wire data: the accumulator is rented at c.n
         assert_eq!(acc.len(), c.n);
         // Wire-data guard: a short payload would panic on the bitmap read
         // (`compress::validate_wire` reports the corruption upstream).
@@ -71,6 +74,7 @@ impl Compressor for ScaledOneBit {
             return;
         }
         let scale = super::get_f32(&c.payload, 0);
+        // lint: allow(index) — the length guard above proves payload.len() >= 4
         kernels::sign_add_scaled(&c.payload[4..], scale, acc);
     }
 

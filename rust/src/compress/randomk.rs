@@ -72,12 +72,14 @@ impl Compressor for RandomK {
     }
 
     fn decompress(&self, c: &Compressed, out: &mut [f32]) {
+        // lint: allow(panic) — caller contract, not wire data: the output buffer is rented at c.n
         assert_eq!(out.len(), c.n);
         out.fill(0.0);
         self.add_decompressed(c, out);
     }
 
     fn add_decompressed(&self, c: &Compressed, acc: &mut [f32]) {
+        // lint: allow(panic) — caller contract, not wire data: the accumulator is rented at c.n
         assert_eq!(acc.len(), c.n);
         // Wire-data guards (see `compress::validate_wire`, which transports
         // and the server call to *report* corruption): a bad k would panic
@@ -94,6 +96,7 @@ impl Compressor for RandomK {
         }
         let seed = super::get_u64(&c.payload, 4);
         let idx = Self::indices_from_seed(seed, c.n, k);
+        // lint: allow(index) — the length guard above proves payload.len() == 12 + 4k
         super::kernels::sparse_add_indexed(&idx, &c.payload[12..], acc);
     }
 

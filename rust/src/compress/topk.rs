@@ -129,6 +129,7 @@ impl Compressor for TopK {
     }
 
     fn decompress(&self, c: &Compressed, out: &mut [f32]) {
+        // lint: allow(panic) — caller contract, not wire data: the output buffer is rented at c.n
         assert_eq!(out.len(), c.n);
         out.fill(0.0);
         self.add_decompressed(c, out);
@@ -143,6 +144,7 @@ impl Compressor for TopK {
     /// `CommError::Protocol`); the guards here make the scheme panic-free
     /// even when called directly on unvalidated data.
     fn add_decompressed(&self, c: &Compressed, acc: &mut [f32]) {
+        // lint: allow(panic) — caller contract, not wire data: the accumulator is rented at c.n
         assert_eq!(acc.len(), c.n);
         if c.payload.len() < 4 {
             return; // malformed: no k header
@@ -152,6 +154,7 @@ impl Compressor for TopK {
             return; // malformed: inconsistent k / payload length
         }
         let vals_off = 4 + 4 * k;
+        // lint: allow(index) — the length guard above proves payload.len() == 4 + 8k
         super::kernels::sparse_add_le(&c.payload[4..vals_off], &c.payload[vals_off..], acc);
     }
 

@@ -38,6 +38,7 @@ pub mod compress;
 pub mod configx;
 pub mod data;
 pub mod engine;
+pub mod lint;
 pub mod metrics;
 pub mod optim;
 pub mod parallel;

@@ -1,0 +1,1307 @@
+//! Static-invariants lint: machine-checked panic-freedom, BufPool
+//! ownership, wire exhaustiveness, and counter-registry coverage.
+//!
+//! PRs 3–6 enforced these properties by review — hand-hunting panics
+//! reachable from hostile bytes, keeping the BufPool rent/give chain
+//! consistent with DESIGN.md prose, keeping every frame tag handled in
+//! every dispatch, and keeping every stats counter on the shutdown
+//! surface. This module turns that review knowledge into executable
+//! checks that run inside tier-1 (`cargo test --test static_invariants`).
+//! It is dependency-free by design (a hand-rolled token scanner, see
+//! [`scan`], instead of `syn`) so the vendored no-network build keeps
+//! working.
+//!
+//! Rule families (see DESIGN.md §Static invariants for the full
+//! contract and annotation grammar):
+//!
+//! 1. **panic-freedom** — `unwrap`/`expect`/`panic!`-family macros and
+//!    unguarded index expressions are forbidden outside `#[cfg(test)]`
+//!    in the wire-facing modules and the compressor decode paths,
+//!    unless annotated with a written reason. `debug_assert*` is always
+//!    allowed: it is stripped from release builds, and the invariants it
+//!    states are exactly the ones worth checking in debug runs.
+//! 2. **pool-ownership** — every `BufPool` rent must be balanced by an
+//!    in-function give or carry a `transfers(<to>)` annotation that is
+//!    cross-validated, in both directions, against the machine-readable
+//!    ownership table in DESIGN.md §Buffer pool.
+//! 3. **wire-exhaustiveness** — every frame tag, `Message` variant, and
+//!    `SchemeId` variant must appear in encode, decode, wire validation,
+//!    and the server ingress dispatch.
+//! 4. **counter-registry** — every `ServerStats` / `WorkerCounters`
+//!    field must appear in its `Display` impl, so no counter can drift
+//!    off the shutdown surface again (the PR 4–5 bug class).
+//!
+//! Annotation grammar (a comment whose text starts with `lint:`):
+//!
+//! - "`lint: allow(panic) — <reason>`" / "`lint: allow(index) — <reason>`"
+//!   cover sites on the same line or the line below.
+//! - "`lint: allow(panic, fn) — <reason>`" (likewise `index, fn`) is
+//!   placed immediately above a `fn` item and covers its whole body —
+//!   for kernels whose every `chunks_exact` cast would otherwise need
+//!   its own line.
+//! - "`lint: transfers(<to>)`" marks a rent whose buffer deliberately
+//!   leaves the renting function; `<to>` must match a row in the
+//!   DESIGN.md ownership table for the same function.
+//!
+//! A missing reason, an unknown directive, or an annotation that covers
+//! nothing (stale after a refactor) is itself an error: annotations are
+//! part of the checked surface, not comments.
+
+pub mod scan;
+
+use scan::{FnSpan, ScannedFile};
+use std::fmt;
+use std::path::Path;
+
+/// One broken invariant. `Display` renders `file:line: [rule] message`
+/// so a red tier-1 run names the file, line, and rule directly.
+#[derive(Clone, Debug)]
+pub struct Violation {
+    pub file: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.msg)
+    }
+}
+
+const RULE_PANIC: &str = "panic-freedom";
+const RULE_POOL: &str = "pool-ownership";
+const RULE_WIRE: &str = "wire-exhaustiveness";
+const RULE_COUNTER: &str = "counter-registry";
+const RULE_ANN: &str = "annotation";
+
+/// Walk `rust/src/**` under `repo_root`, plus `DESIGN.md`, and run every
+/// rule. `Err` is reserved for I/O problems (missing tree); rule
+/// failures come back as `Ok(violations)`.
+pub fn run_all(repo_root: &Path) -> Result<Vec<Violation>, String> {
+    let src_root = repo_root.join("rust").join("src");
+    let mut files = Vec::new();
+    collect_rs(&src_root, &mut files)?;
+    files.sort();
+    let mut sources = Vec::new();
+    for p in &files {
+        let rel = p
+            .strip_prefix(&src_root)
+            .unwrap_or(p)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let text =
+            std::fs::read_to_string(p).map_err(|e| format!("read {}: {e}", p.display()))?;
+        sources.push((rel, ScannedFile::new(text)));
+    }
+    let design_path = repo_root.join("DESIGN.md");
+    let design = std::fs::read_to_string(&design_path)
+        .map_err(|e| format!("read {}: {e}", design_path.display()))?;
+    Ok(run_on(&sources, &design))
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<std::path::PathBuf>) -> Result<(), String> {
+    let entries =
+        std::fs::read_dir(dir).map_err(|e| format!("read_dir {}: {e}", dir.display()))?;
+    for entry in entries {
+        let entry = entry.map_err(|e| format!("read_dir {}: {e}", dir.display()))?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Run every rule over an in-memory source set (`(relative path, scanned
+/// file)` pairs) and the DESIGN.md text. Split out from [`run_all`] so
+/// the lint's own fixture tests can exercise rules without touching disk.
+pub fn run_on(sources: &[(String, ScannedFile)], design_md: &str) -> Vec<Violation> {
+    let mut v = Vec::new();
+    let mut anns: Vec<(usize, Vec<Ann>)> = sources
+        .iter()
+        .enumerate()
+        .map(|(i, (file, sf))| (i, parse_annotations(file, sf, &mut v)))
+        .collect();
+    check_panic_freedom(sources, &mut anns, &mut v);
+    check_pool_ownership(sources, &mut anns, design_md, &mut v);
+    check_wire_exhaustiveness(sources, &mut v);
+    check_counter_registry(sources, &mut v);
+    // a covering annotation that covers nothing is a refactoring leftover
+    for (idx, file_anns) in &anns {
+        for a in file_anns {
+            if !a.used {
+                v.push(Violation {
+                    file: sources[*idx].0.clone(),
+                    line: a.line,
+                    rule: RULE_ANN,
+                    msg: format!(
+                        "stale `lint:` annotation ({}) — it covers no site; remove it",
+                        a.describe()
+                    ),
+                });
+            }
+        }
+    }
+    v.sort_by(|a, b| (&a.file, a.line).cmp(&(&b.file, b.line)));
+    v
+}
+
+// ---------------------------------------------------------------------
+// Annotations
+// ---------------------------------------------------------------------
+
+#[derive(Clone, Debug, PartialEq)]
+enum AnnKind {
+    AllowPanic,
+    AllowIndex,
+    Transfers(String),
+}
+
+#[derive(Clone, Debug)]
+struct Ann {
+    line: usize,
+    line_pos: usize,
+    kind: AnnKind,
+    fn_level: bool,
+    used: bool,
+}
+
+impl Ann {
+    fn describe(&self) -> String {
+        match &self.kind {
+            AnnKind::AllowPanic if self.fn_level => "allow(panic, fn)".into(),
+            AnnKind::AllowPanic => "allow(panic)".into(),
+            AnnKind::AllowIndex if self.fn_level => "allow(index, fn)".into(),
+            AnnKind::AllowIndex => "allow(index)".into(),
+            AnnKind::Transfers(d) => format!("transfers({d})"),
+        }
+    }
+}
+
+fn ann_err(v: &mut Vec<Violation>, file: &str, line: usize, msg: String) {
+    v.push(Violation { file: file.to_string(), line, rule: RULE_ANN, msg });
+}
+
+/// Require a "` — <reason>`" tail (em dash or `--`) and return true when
+/// a non-empty reason is present.
+fn has_reason(tail: &str) -> bool {
+    let t = tail.trim_start();
+    let rest = t.strip_prefix('—').or_else(|| t.strip_prefix("--"));
+    rest.is_some_and(|r| !r.trim().is_empty())
+}
+
+fn parse_annotations(file: &str, sf: &ScannedFile, v: &mut Vec<Violation>) -> Vec<Ann> {
+    let mut anns = Vec::new();
+    for c in sf.line_comments() {
+        let Some(rest) = c.text.strip_prefix("lint:") else { continue };
+        let rest = rest.trim();
+        if let Some(args) = rest.strip_prefix("allow(") {
+            let Some(close) = args.find(')') else {
+                ann_err(v, file, c.line, "malformed `lint: allow(...)` — no `)`".into());
+                continue;
+            };
+            let mut parts = args[..close].split(',').map(str::trim);
+            let what = parts.next().unwrap_or("");
+            let scope = parts.next();
+            let kind = match what {
+                "panic" => AnnKind::AllowPanic,
+                "index" => AnnKind::AllowIndex,
+                other => {
+                    ann_err(
+                        v,
+                        file,
+                        c.line,
+                        format!("unknown allow target `{other}` (want `panic` or `index`)"),
+                    );
+                    continue;
+                }
+            };
+            let fn_level = match scope {
+                None => false,
+                Some("fn") => true,
+                Some(other) => {
+                    ann_err(
+                        v,
+                        file,
+                        c.line,
+                        format!("unknown allow scope `{other}` (only `fn` is valid)"),
+                    );
+                    continue;
+                }
+            };
+            if parts.next().is_some() {
+                ann_err(v, file, c.line, "too many arguments in `lint: allow(...)`".into());
+                continue;
+            }
+            if !has_reason(&args[close + 1..]) {
+                ann_err(
+                    v,
+                    file,
+                    c.line,
+                    format!(
+                        "`lint: {}` is missing its `— <reason>` — every exception \
+                         must say why it is safe",
+                        rest
+                    ),
+                );
+                continue;
+            }
+            anns.push(Ann { line: c.line, line_pos: c.line_pos, kind, fn_level, used: false });
+        } else if let Some(args) = rest.strip_prefix("transfers(") {
+            let Some(close) = args.find(')') else {
+                ann_err(v, file, c.line, "malformed `lint: transfers(...)` — no `)`".into());
+                continue;
+            };
+            let dest = args[..close].trim();
+            if dest.is_empty() {
+                ann_err(v, file, c.line, "`lint: transfers()` needs a destination label".into());
+                continue;
+            }
+            anns.push(Ann {
+                line: c.line,
+                line_pos: c.line_pos,
+                kind: AnnKind::Transfers(dest.to_string()),
+                fn_level: false,
+                used: false,
+            });
+        } else {
+            ann_err(
+                v,
+                file,
+                c.line,
+                format!("unknown `lint:` directive `{rest}` (want allow(...) or transfers(...))"),
+            );
+        }
+    }
+    anns
+}
+
+fn innermost_fn<'a>(fns: &'a [FnSpan], pos: usize) -> Option<&'a FnSpan> {
+    fns.iter()
+        .filter(|f| f.body.contains(&pos))
+        .min_by_key(|f| f.body.end - f.body.start)
+}
+
+/// The `fn` item a fn-level annotation attaches to: the next `fn` at or
+/// below the annotation (annotations go immediately above the item).
+fn attached_fn<'a>(fns: &'a [FnSpan], ann_pos: usize) -> Option<&'a FnSpan> {
+    fns.iter()
+        .filter(|f| f.fn_pos >= ann_pos)
+        .min_by_key(|f| f.fn_pos)
+        .or_else(|| innermost_fn(fns, ann_pos))
+}
+
+// ---------------------------------------------------------------------
+// Rule 1: panic-freedom on untrusted-input paths
+// ---------------------------------------------------------------------
+
+const PANIC_MACROS: &[&str] =
+    &["panic", "assert", "assert_eq", "assert_ne", "unreachable", "todo", "unimplemented"];
+const PANIC_METHODS: &[&str] = &["unwrap", "expect", "unwrap_err", "expect_err"];
+
+/// Keywords that can legitimately precede `[` without forming an index
+/// expression (`&mut [u8]`, `as [u8; 4]`, `for x in [..]`, …).
+const BRACKET_KEYWORDS: &[&str] = &[
+    "mut", "dyn", "as", "in", "ref", "where", "impl", "fn", "for", "const", "static", "type",
+    "else", "move", "return", "break", "continue", "let", "pub", "crate", "super", "match", "if",
+    "unsafe", "extern",
+];
+
+/// Wire-facing modules checked whole-file: every non-test byte of these
+/// can be reached with attacker-controlled frames.
+const WIRE_MODULES: &[&str] = &[
+    "comm/frame.rs",
+    "comm/tcp.rs",
+    "comm/inproc.rs",
+    "comm/pool.rs",
+    "ps/core.rs",
+    "ps/stage.rs",
+];
+
+const SCHEME_DECODE_FNS: &[&str] = &["decompress", "add_decompressed"];
+
+enum PanicScope {
+    WholeFile,
+    Fns(&'static [&'static str]),
+    None,
+}
+
+/// Which part of a file rule 1 covers. Compressor *encode* paths only
+/// ever see locally-produced gradients, so only the decode-side
+/// functions (fed wire bytes) are in scope; `compress/reference.rs` is
+/// the frozen scalar oracle (test-facing only) and `compress/ef.rs` is
+/// encode-side, so both are excluded entirely.
+fn panic_scope(file: &str) -> PanicScope {
+    if WIRE_MODULES.contains(&file) {
+        return PanicScope::WholeFile;
+    }
+    match file {
+        "compress/mod.rs" => PanicScope::Fns(&[
+            "validate_wire",
+            "from_u8",
+            "get_f32",
+            "get_u32",
+            "get_u64",
+            "add_decompressed",
+        ]),
+        "compress/identity.rs" | "compress/fp16.rs" | "compress/onebit.rs"
+        | "compress/topk.rs" | "compress/randomk.rs" | "compress/threshold.rs" => {
+            PanicScope::Fns(SCHEME_DECODE_FNS)
+        }
+        "compress/dither.rs" => {
+            PanicScope::Fns(&["decompress", "add_decompressed", "unpack_map", "pull"])
+        }
+        "compress/kernels.rs" => PanicScope::Fns(&[
+            "le_bytes_to_f32",
+            "le_bytes_add_f32",
+            "f16_to_f32_slice",
+            "f16_add_decoded",
+            "sign_decode",
+            "sign_unpack_scaled",
+            "sign_add_scaled",
+            "unpack_codes",
+            "sparse_add_le",
+            "sparse_add_indexed",
+        ]),
+        _ => PanicScope::None,
+    }
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum SiteKind {
+    Panic,
+    Index,
+}
+
+struct Site {
+    pos: usize,
+    line: usize,
+    kind: SiteKind,
+    what: String,
+}
+
+fn find_sites(sf: &ScannedFile) -> Vec<Site> {
+    let b = sf.src.as_bytes();
+    let mut sites = Vec::new();
+    for (pos, name) in sf.idents() {
+        let end = pos + name.len();
+        let next = sf.next_code_byte(end);
+        let is_macro = next.is_some_and(|n| b[n] == b'!');
+        if is_macro {
+            if PANIC_MACROS.contains(&name) {
+                sites.push(Site {
+                    pos,
+                    line: sf.line_of(pos),
+                    kind: SiteKind::Panic,
+                    what: format!("{name}!"),
+                });
+            }
+            continue;
+        }
+        if PANIC_METHODS.contains(&name)
+            && sf.prev_code_byte(pos).is_some_and(|p| b[p] == b'.')
+            && next.is_some_and(|n| b[n] == b'(')
+        {
+            sites.push(Site {
+                pos,
+                line: sf.line_of(pos),
+                kind: SiteKind::Panic,
+                what: format!(".{name}()"),
+            });
+        }
+    }
+    for (pos, &byte) in b.iter().enumerate() {
+        if byte != b'[' || !sf.is_code(pos) {
+            continue;
+        }
+        let Some(p) = sf.prev_code_byte(pos) else { continue };
+        let pb = b[p];
+        let is_site = if pb == b')' || pb == b']' {
+            true
+        } else if scan::is_ident_byte(pb) {
+            let mut s = p;
+            while s > 0 && sf.is_code(s - 1) && scan::is_ident_byte(b[s - 1]) {
+                s -= 1;
+            }
+            let word = &sf.src[s..=p];
+            // `&'a [u8]` — lifetime-prefixed idents are types, not values
+            let lifetime = s > 0 && b[s - 1] == b'\'';
+            !lifetime && !BRACKET_KEYWORDS.contains(&word)
+        } else {
+            false
+        };
+        if is_site {
+            sites.push(Site {
+                pos,
+                line: sf.line_of(pos),
+                kind: SiteKind::Index,
+                what: "index expression".into(),
+            });
+        }
+    }
+    sites
+}
+
+/// Try to cover `site` with an annotation; marks the annotation used.
+fn cover(anns: &mut [Ann], fns: &[FnSpan], site: &Site) -> bool {
+    let want = match site.kind {
+        SiteKind::Panic => AnnKind::AllowPanic,
+        SiteKind::Index => AnnKind::AllowIndex,
+    };
+    for a in anns.iter_mut() {
+        if a.kind == want && !a.fn_level && (a.line == site.line || a.line + 1 == site.line) {
+            a.used = true;
+            return true;
+        }
+    }
+    let Some(encl) = innermost_fn(fns, site.pos) else { return false };
+    for a in anns.iter_mut() {
+        if a.kind == want && a.fn_level {
+            if let Some(att) = attached_fn(fns, a.line_pos) {
+                if att.fn_pos == encl.fn_pos {
+                    a.used = true;
+                    return true;
+                }
+            }
+        }
+    }
+    false
+}
+
+fn check_panic_freedom(
+    sources: &[(String, ScannedFile)],
+    anns: &mut [(usize, Vec<Ann>)],
+    v: &mut Vec<Violation>,
+) {
+    for (idx, (file, sf)) in sources.iter().enumerate() {
+        let scope = panic_scope(file);
+        if matches!(scope, PanicScope::None) {
+            continue;
+        }
+        let fns = sf.fns();
+        let file_anns = &mut anns[idx].1;
+        for site in find_sites(sf) {
+            if let PanicScope::Fns(list) = &scope {
+                let Some(f) = innermost_fn(&fns, site.pos) else { continue };
+                if !list.contains(&f.name.as_str()) {
+                    continue;
+                }
+            }
+            if cover(file_anns, &fns, &site) {
+                continue;
+            }
+            let hint = match site.kind {
+                SiteKind::Panic => "fix it or annotate `// lint: allow(panic) — <reason>`",
+                SiteKind::Index => {
+                    "use .get()/.get_mut() or annotate `// lint: allow(index) — <reason>`"
+                }
+            };
+            v.push(Violation {
+                file: file.clone(),
+                line: site.line,
+                rule: RULE_PANIC,
+                msg: format!("{} on a wire-facing path — {hint}", site.what),
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Rule 2: BufPool rent/give balance + DESIGN.md ownership table
+// ---------------------------------------------------------------------
+
+#[derive(Clone, Copy, PartialEq, Debug)]
+enum Family {
+    Bytes,
+    F32,
+}
+
+impl Family {
+    fn give(self) -> &'static str {
+        match self {
+            Family::Bytes => "give_bytes",
+            Family::F32 => "give_f32",
+        }
+    }
+}
+
+const RENT_METHODS: &[(&str, Family)] = &[
+    ("rent_bytes", Family::Bytes),
+    ("rent_bytes_empty", Family::Bytes),
+    ("rent_f32", Family::F32),
+    ("rent_f32_copy", Family::F32),
+];
+
+struct TableRow {
+    fn_name: String,
+    family: Family,
+    dest: String,
+    line: usize,
+}
+
+const TABLE_BEGIN: &str = "<!-- lint:pool-ownership -->";
+const TABLE_END: &str = "<!-- /lint:pool-ownership -->";
+
+fn parse_ownership_table(md: &str, v: &mut Vec<Violation>) -> Vec<TableRow> {
+    let design = "DESIGN.md";
+    let mut rows = Vec::new();
+    let mut inside = false;
+    let mut seen_markers = false;
+    for (i, raw) in md.lines().enumerate() {
+        let line = i + 1;
+        let t = raw.trim();
+        if t == TABLE_BEGIN {
+            inside = true;
+            seen_markers = true;
+            continue;
+        }
+        if t == TABLE_END {
+            inside = false;
+            continue;
+        }
+        if !inside || !t.starts_with('|') {
+            continue;
+        }
+        let cells: Vec<String> = t
+            .trim_matches('|')
+            .split('|')
+            .map(|c| c.trim().trim_matches('`').to_string())
+            .collect();
+        if cells.iter().all(|c| c.chars().all(|ch| "-: ".contains(ch))) {
+            continue; // separator row
+        }
+        if cells.first().is_some_and(|c| c.contains("rent site")) {
+            continue; // header row
+        }
+        if cells.len() < 3 {
+            ann_err_table(v, line, "ownership table row needs ≥3 cells (fn, family, to)");
+            continue;
+        }
+        let fn_name = cells[0].rsplit("::").next().unwrap_or("").to_string();
+        let family = match cells[1].as_str() {
+            "bytes" => Family::Bytes,
+            "f32" => Family::F32,
+            other => {
+                ann_err_table(
+                    v,
+                    line,
+                    &format!("ownership table family `{other}` must be `bytes` or `f32`"),
+                );
+                continue;
+            }
+        };
+        rows.push(TableRow { fn_name, family, dest: cells[2].clone(), line });
+    }
+    if !seen_markers {
+        v.push(Violation {
+            file: design.to_string(),
+            line: 1,
+            rule: RULE_POOL,
+            msg: format!(
+                "machine-readable ownership table not found (expected `{TABLE_BEGIN}` … \
+                 `{TABLE_END}` markers in §Buffer pool)"
+            ),
+        });
+    }
+    rows
+}
+
+fn ann_err_table(v: &mut Vec<Violation>, line: usize, msg: &str) {
+    v.push(Violation { file: "DESIGN.md".into(), line, rule: RULE_POOL, msg: msg.to_string() });
+}
+
+fn check_pool_ownership(
+    sources: &[(String, ScannedFile)],
+    anns: &mut [(usize, Vec<Ann>)],
+    design_md: &str,
+    v: &mut Vec<Violation>,
+) {
+    let table = parse_ownership_table(design_md, v);
+    let mut row_matched = vec![false; table.len()];
+    for (idx, (file, sf)) in sources.iter().enumerate() {
+        let b = sf.src.as_bytes();
+        let fns = sf.fns();
+        let file_anns = &mut anns[idx].1;
+        for (pos, name) in sf.idents() {
+            let Some(&(_, family)) = RENT_METHODS.iter().find(|(n, _)| *n == name) else {
+                continue;
+            };
+            // method-call position only: `.rent_*(` — skips the
+            // definitions in comm/pool.rs itself
+            let end = pos + name.len();
+            if !sf.prev_code_byte(pos).is_some_and(|p| b[p] == b'.')
+                || !sf.next_code_byte(end).is_some_and(|n| b[n] == b'(')
+            {
+                continue;
+            }
+            let line = sf.line_of(pos);
+            let encl = innermost_fn(&fns, pos);
+            let fn_name = encl.map(|f| f.name.as_str()).unwrap_or("<top level>");
+            let transfer = file_anns.iter_mut().find(|a| {
+                matches!(a.kind, AnnKind::Transfers(_)) && (a.line == line || a.line + 1 == line)
+            });
+            if let Some(a) = transfer {
+                a.used = true;
+                let AnnKind::Transfers(dest) = a.kind.clone() else { unreachable!() };
+                let row = table
+                    .iter()
+                    .position(|r| r.fn_name == fn_name && r.dest == dest);
+                match row {
+                    Some(r) if table[r].family == family => row_matched[r] = true,
+                    Some(r) => v.push(Violation {
+                        file: file.clone(),
+                        line,
+                        rule: RULE_POOL,
+                        msg: format!(
+                            "`{name}` rents {family:?} but the DESIGN.md row (line {}) for \
+                             `{fn_name}` → `{dest}` says {:?}",
+                            table[r].line, table[r].family
+                        ),
+                    }),
+                    None => v.push(Violation {
+                        file: file.clone(),
+                        line,
+                        rule: RULE_POOL,
+                        msg: format!(
+                            "`transfers({dest})` in `{fn_name}` has no matching row in the \
+                             DESIGN.md §Buffer pool ownership table — code and docs may not drift"
+                        ),
+                    }),
+                }
+                continue;
+            }
+            let give = family.give();
+            let balanced = encl.is_some_and(|f| {
+                sf.idents().iter().any(|(p, n)| {
+                    *n == give
+                        && f.body.contains(p)
+                        && sf.prev_code_byte(*p).is_some_and(|q| b[q] == b'.')
+                })
+            });
+            if !balanced {
+                v.push(Violation {
+                    file: file.clone(),
+                    line,
+                    rule: RULE_POOL,
+                    msg: format!(
+                        "`{name}` in `{fn_name}` has no matching `.{give}` in the same \
+                         function — give the buffer back or annotate \
+                         `// lint: transfers(<to>)` and add the DESIGN.md table row"
+                    ),
+                });
+            }
+        }
+    }
+    for (i, row) in table.iter().enumerate() {
+        if !row_matched[i] {
+            v.push(Violation {
+                file: "DESIGN.md".into(),
+                line: row.line,
+                rule: RULE_POOL,
+                msg: format!(
+                    "ownership table row `{}` → `{}` matches no `transfers` annotation in \
+                     rust/src — stale docs or a silently changed owner",
+                    row.fn_name, row.dest
+                ),
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Rule 3: frame/message/scheme exhaustiveness
+// ---------------------------------------------------------------------
+
+fn get_source<'a>(
+    sources: &'a [(String, ScannedFile)],
+    file: &str,
+    v: &mut Vec<Violation>,
+    rule: &'static str,
+) -> Option<&'a ScannedFile> {
+    let found = sources.iter().find(|(p, _)| p == file).map(|(_, s)| s);
+    if found.is_none() {
+        v.push(Violation {
+            file: file.to_string(),
+            line: 1,
+            rule,
+            msg: format!("expected file `{file}` not found — moved? update rust/src/lint"),
+        });
+    }
+    found
+}
+
+/// Identifiers inside the body of the (first) `fn` named `name`, or
+/// `None` + a violation if the fn is gone.
+fn fn_body_idents(
+    sf: &ScannedFile,
+    file: &str,
+    name: &str,
+    v: &mut Vec<Violation>,
+    rule: &'static str,
+) -> Option<(usize, Vec<String>)> {
+    let Some(f) = sf.fns().into_iter().find(|f| f.name == name) else {
+        v.push(Violation {
+            file: file.to_string(),
+            line: 1,
+            rule,
+            msg: format!("expected `fn {name}` in {file} — renamed? update rust/src/lint"),
+        });
+        return None;
+    };
+    let line = sf.line_of(f.fn_pos);
+    let names = sf
+        .idents()
+        .iter()
+        .filter(|(p, _)| f.body.contains(p))
+        .map(|(_, n)| n.to_string())
+        .collect();
+    Some((line, names))
+}
+
+/// Variant names of `enum <name>`, parsed from top-level comma-separated
+/// segments of the enum body (attributes and discriminants skipped).
+fn enum_variants(sf: &ScannedFile, name: &str) -> Option<Vec<String>> {
+    let b = sf.src.as_bytes();
+    let idents = sf.idents();
+    let mut open = None;
+    for w in idents.windows(2) {
+        if w[0].1 == "enum" && w[1].1 == name {
+            let mut j = w[1].0 + name.len();
+            while j < b.len() {
+                if sf.is_code(j) && b[j] == b'{' {
+                    open = Some(j);
+                    break;
+                }
+                j += 1;
+            }
+            break;
+        }
+    }
+    let open = open?;
+    let close = sf.match_brace(open);
+    let mut variants = Vec::new();
+    let mut depth = 0i64;
+    let mut seg_start = open + 1;
+    let mut cuts = Vec::new();
+    for j in open + 1..close {
+        if !sf.is_code(j) {
+            continue;
+        }
+        match b[j] {
+            b'(' | b'[' | b'{' => depth += 1,
+            b')' | b']' | b'}' => depth -= 1,
+            b',' if depth == 0 => cuts.push(j),
+            _ => {}
+        }
+    }
+    cuts.push(close);
+    for cut in cuts {
+        if let Some(name) = first_ident_skipping_attrs(sf, seg_start, cut) {
+            variants.push(name);
+        }
+        seg_start = cut + 1;
+    }
+    Some(variants)
+}
+
+fn first_ident_skipping_attrs(sf: &ScannedFile, from: usize, to: usize) -> Option<String> {
+    let b = sf.src.as_bytes();
+    let mut j = from;
+    while j < to {
+        if !sf.is_code(j) || b[j].is_ascii_whitespace() {
+            j += 1;
+            continue;
+        }
+        if b[j] == b'#' && j + 1 < to && b[j + 1] == b'[' {
+            let mut depth = 0i64;
+            while j < to {
+                if sf.is_code(j) {
+                    match b[j] {
+                        b'[' => depth += 1,
+                        b']' => {
+                            depth -= 1;
+                            if depth == 0 {
+                                j += 1;
+                                break;
+                            }
+                        }
+                        _ => {}
+                    }
+                }
+                j += 1;
+            }
+            continue;
+        }
+        if b[j].is_ascii_alphabetic() || b[j] == b'_' {
+            let s = j;
+            while j < to && sf.is_code(j) && scan::is_ident_byte(b[j]) {
+                j += 1;
+            }
+            return Some(sf.src[s..j].to_string());
+        }
+        return None;
+    }
+    None
+}
+
+fn require_idents_in_fn(
+    sources: &[(String, ScannedFile)],
+    file: &str,
+    fn_name: &str,
+    wanted: &[String],
+    what: &str,
+    v: &mut Vec<Violation>,
+) {
+    let Some(sf) = get_source(sources, file, v, RULE_WIRE) else { return };
+    let Some((line, names)) = fn_body_idents(sf, file, fn_name, v, RULE_WIRE) else { return };
+    for want in wanted {
+        if !names.iter().any(|n| n == want) {
+            v.push(Violation {
+                file: file.to_string(),
+                line,
+                rule: RULE_WIRE,
+                msg: format!(
+                    "{what} `{want}` is not handled in `fn {fn_name}` — wire dispatch must \
+                     stay exhaustive"
+                ),
+            });
+        }
+    }
+}
+
+fn check_wire_exhaustiveness(sources: &[(String, ScannedFile)], v: &mut Vec<Violation>) {
+    // 3a: every TAG_* const declared in frame.rs appears in encode + decode
+    if let Some(frame) = get_source(sources, "comm/frame.rs", v, RULE_WIRE) {
+        let idents = frame.idents();
+        let mut tags: Vec<String> = Vec::new();
+        for w in idents.windows(2) {
+            if w[0].1 == "const" && w[1].1.starts_with("TAG_") && !tags.contains(&w[1].1.to_string())
+            {
+                tags.push(w[1].1.to_string());
+            }
+        }
+        if tags.is_empty() {
+            v.push(Violation {
+                file: "comm/frame.rs".into(),
+                line: 1,
+                rule: RULE_WIRE,
+                msg: "no `const TAG_*` declarations found — moved? update rust/src/lint".into(),
+            });
+        }
+        for fn_name in ["encode_body_into", "decode_body"] {
+            require_idents_in_fn(sources, "comm/frame.rs", fn_name, &tags, "frame tag", v);
+        }
+    }
+    // 3b: every Message variant appears in frame encode/decode/len and
+    // the server ingress dispatch
+    if let Some(comm) = get_source(sources, "comm/mod.rs", v, RULE_WIRE) {
+        match enum_variants(comm, "Message") {
+            Some(variants) if !variants.is_empty() => {
+                for (file, fn_name) in [
+                    ("comm/frame.rs", "body_len"),
+                    ("comm/frame.rs", "encode_body_into"),
+                    ("comm/frame.rs", "decode_body"),
+                    ("ps/core.rs", "handle_inner"),
+                ] {
+                    require_idents_in_fn(sources, file, fn_name, &variants, "Message variant", v);
+                }
+            }
+            _ => v.push(Violation {
+                file: "comm/mod.rs".into(),
+                line: 1,
+                rule: RULE_WIRE,
+                msg: "could not parse `enum Message` — moved? update rust/src/lint".into(),
+            }),
+        }
+    }
+    // 3c: every SchemeId appears in wire validation and tag decoding
+    if let Some(compress) = get_source(sources, "compress/mod.rs", v, RULE_WIRE) {
+        match enum_variants(compress, "SchemeId") {
+            Some(variants) if !variants.is_empty() => {
+                for fn_name in ["from_u8", "validate_wire"] {
+                    require_idents_in_fn(
+                        sources,
+                        "compress/mod.rs",
+                        fn_name,
+                        &variants,
+                        "SchemeId variant",
+                        v,
+                    );
+                }
+            }
+            _ => v.push(Violation {
+                file: "compress/mod.rs".into(),
+                line: 1,
+                rule: RULE_WIRE,
+                msg: "could not parse `enum SchemeId` — moved? update rust/src/lint".into(),
+            }),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Rule 4: counter registry — every stats field reaches Display
+// ---------------------------------------------------------------------
+
+fn struct_fields(sf: &ScannedFile, name: &str) -> Option<Vec<(usize, String)>> {
+    let b = sf.src.as_bytes();
+    let idents = sf.idents();
+    let mut open = None;
+    for w in idents.windows(2) {
+        if w[0].1 == "struct" && w[1].1 == name {
+            let mut j = w[1].0 + name.len();
+            while j < b.len() {
+                if sf.is_code(j) && b[j] == b'{' {
+                    open = Some(j);
+                    break;
+                }
+                if sf.is_code(j) && b[j] == b';' {
+                    return Some(Vec::new()); // unit struct
+                }
+                j += 1;
+            }
+            break;
+        }
+    }
+    let open = open?;
+    let close = sf.match_brace(open);
+    let mut fields = Vec::new();
+    for (pos, ident) in &idents {
+        if *pos <= open || *pos >= close {
+            continue;
+        }
+        // a field name is an ident directly followed by `:` at struct
+        // top level (types and `pub` never are; `::` paths excluded)
+        let end = pos + ident.len();
+        let Some(n) = sf.next_code_byte(end) else { continue };
+        if b[n] != b':' || (n + 1 < b.len() && b[n + 1] == b':') {
+            continue;
+        }
+        // exclude idents nested in field types like `HashMap<K, V>`
+        let mut depth = 0i64;
+        for j in open + 1..*pos {
+            if sf.is_code(j) {
+                match b[j] {
+                    b'(' | b'[' | b'{' | b'<' => depth += 1,
+                    b')' | b']' | b'}' | b'>' => depth -= 1,
+                    _ => {}
+                }
+            }
+        }
+        if depth == 0 {
+            fields.push((sf.line_of(*pos), ident.to_string()));
+        }
+    }
+    Some(fields)
+}
+
+fn display_body_idents(sf: &ScannedFile, name: &str) -> Option<Vec<String>> {
+    let b = sf.src.as_bytes();
+    let idents = sf.idents();
+    for w in idents.windows(3) {
+        if w[0].1 == "Display" && w[1].1 == "for" && w[2].1 == name {
+            let mut j = w[2].0 + name.len();
+            while j < b.len() && !(sf.is_code(j) && b[j] == b'{') {
+                j += 1;
+            }
+            if j >= b.len() {
+                return None;
+            }
+            let close = sf.match_brace(j);
+            return Some(
+                idents
+                    .iter()
+                    .filter(|(p, _)| *p > j && *p < close)
+                    .map(|(_, n)| n.to_string())
+                    .collect(),
+            );
+        }
+    }
+    None
+}
+
+fn check_counter_registry(sources: &[(String, ScannedFile)], v: &mut Vec<Violation>) {
+    for (file, struct_name) in [("ps/stats.rs", "ServerStats"), ("worker/mod.rs", "WorkerCounters")]
+    {
+        let Some(sf) = get_source(sources, file, v, RULE_COUNTER) else { continue };
+        let Some(fields) = struct_fields(sf, struct_name) else {
+            v.push(Violation {
+                file: file.to_string(),
+                line: 1,
+                rule: RULE_COUNTER,
+                msg: format!("struct `{struct_name}` not found — moved? update rust/src/lint"),
+            });
+            continue;
+        };
+        let Some(display) = display_body_idents(sf, struct_name) else {
+            v.push(Violation {
+                file: file.to_string(),
+                line: 1,
+                rule: RULE_COUNTER,
+                msg: format!(
+                    "`{struct_name}` has no `Display` impl in {file} — counters must have a \
+                     canonical shutdown-surface rendering"
+                ),
+            });
+            continue;
+        };
+        for (line, field) in fields {
+            if !display.iter().any(|n| n == &field) {
+                v.push(Violation {
+                    file: file.to_string(),
+                    line,
+                    rule: RULE_COUNTER,
+                    msg: format!(
+                        "field `{field}` of `{struct_name}` never appears in its Display \
+                         impl — a counter nobody can see is a counter that silently drifts"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // A minimal, internally-consistent fixture tree: every rule family
+    // passes on it, and each test below breaks exactly one thing. The
+    // fixtures are scanned, never compiled, so they only need to *look*
+    // like the real modules.
+
+    const FRAME_OK: &str = r"
+const TAG_A: u8 = 1;
+const TAG_B: u8 = 2;
+fn body_len(m: &Message) -> usize {
+    match m { Message::A => 1, Message::B => 2 }
+}
+fn encode_body_into(m: &Message) -> u8 {
+    match m { Message::A => TAG_A, Message::B => TAG_B }
+}
+fn decode_body(t: u8) -> Message {
+    match t { TAG_A => Message::A, TAG_B => Message::B, _ => Message::A }
+}
+fn get_block(p: &Pool) -> Buf {
+    // lint: transfers(decode) — the decode job gives it back
+    p.rent_bytes_empty()
+}
+";
+
+    const COMM_OK: &str = "pub enum Message { A, B }\n";
+
+    const CORE_OK: &str = r"
+fn handle_inner(m: Message) -> u32 {
+    match m { Message::A => 1, Message::B => 2 }
+}
+";
+
+    const STATS_OK: &str = r#"
+pub struct ServerStats { pub pushes: u64, pub pulls: u64 }
+impl std::fmt::Display for ServerStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{} {}", self.pushes, self.pulls)
+    }
+}
+"#;
+
+    const WORKER_OK: &str = r#"
+pub struct WorkerCounters { pub stalls: u64 }
+impl std::fmt::Display for WorkerCounters {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.stalls)
+    }
+}
+"#;
+
+    const COMPRESS_OK: &str = r"
+pub enum SchemeId { Alpha, Beta }
+fn from_u8(v: u8) -> Option<SchemeId> {
+    match v { 1 => Some(SchemeId::Alpha), 2 => Some(SchemeId::Beta), _ => None }
+}
+fn validate_wire(s: SchemeId) -> bool {
+    matches!(s, SchemeId::Alpha | SchemeId::Beta)
+}
+";
+
+    const DESIGN_OK: &str = r"
+<!-- lint:pool-ownership -->
+| rent site (fn) | family | transfers to | given back by |
+| --- | --- | --- | --- |
+| `frame::get_block` | bytes | `decode` | the decode job |
+<!-- /lint:pool-ownership -->
+";
+
+    fn sources(extra: &[(&str, &str)]) -> Vec<(String, ScannedFile)> {
+        let mut base = vec![
+            ("comm/frame.rs", FRAME_OK),
+            ("comm/mod.rs", COMM_OK),
+            ("ps/core.rs", CORE_OK),
+            ("ps/stats.rs", STATS_OK),
+            ("worker/mod.rs", WORKER_OK),
+            ("compress/mod.rs", COMPRESS_OK),
+        ];
+        for e in extra {
+            if let Some(slot) = base.iter_mut().find(|(p, _)| *p == e.0) {
+                slot.1 = e.1;
+            } else {
+                base.push(*e);
+            }
+        }
+        base.into_iter()
+            .map(|(p, s)| (p.to_string(), ScannedFile::new(s.to_string())))
+            .collect()
+    }
+
+    fn rules(extra: &[(&str, &str)], design: &str) -> Vec<Violation> {
+        run_on(&sources(extra), design)
+    }
+
+    #[test]
+    fn clean_fixture_set_has_no_violations() {
+        let v = rules(&[], DESIGN_OK);
+        assert!(v.is_empty(), "{v:?}");
+    }
+
+    #[test]
+    fn bare_unwrap_in_wire_module_fails() {
+        let frame = format!("{FRAME_OK}\nfn bad(x: Option<u8>) -> u8 {{ x.unwrap() }}\n");
+        let v = rules(&[("comm/frame.rs", &frame)], DESIGN_OK);
+        assert!(v.iter().any(|x| x.rule == RULE_PANIC && x.msg.contains("unwrap")), "{v:?}");
+    }
+
+    #[test]
+    fn annotated_unwrap_passes_and_is_not_stale() {
+        let frame = format!(
+            "{FRAME_OK}\nfn bad(x: Option<u8>) -> u8 {{\n    \
+             // lint: allow(panic) — fixture justification\n    x.unwrap()\n}}\n"
+        );
+        let v = rules(&[("comm/frame.rs", &frame)], DESIGN_OK);
+        assert!(v.iter().all(|x| x.rule != RULE_PANIC), "{v:?}");
+        assert!(v.iter().all(|x| x.rule != RULE_ANN), "{v:?}");
+    }
+
+    #[test]
+    fn fn_level_allow_covers_whole_body() {
+        let frame = format!(
+            "{FRAME_OK}\n// lint: allow(panic, fn) — fixture: every cast is length-checked\n\
+             fn busy(x: Option<u8>, y: Option<u8>) -> u8 {{ x.unwrap() + y.unwrap() }}\n"
+        );
+        let v = rules(&[("comm/frame.rs", &frame)], DESIGN_OK);
+        assert!(v.iter().all(|x| x.rule != RULE_PANIC && x.rule != RULE_ANN), "{v:?}");
+    }
+
+    #[test]
+    fn unguarded_index_fails_and_annotation_clears_it() {
+        let bad = format!("{FRAME_OK}\nfn idx(x: &[u8]) -> u8 {{ x[0] }}\n");
+        let v = rules(&[("comm/frame.rs", &bad)], DESIGN_OK);
+        assert!(v.iter().any(|x| x.rule == RULE_PANIC && x.msg.contains("index")), "{v:?}");
+        let ok = format!(
+            "{FRAME_OK}\nfn idx(x: &[u8]) -> u8 {{\n    \
+             // lint: allow(index) — fixture: caller checks the length\n    x[0]\n}}\n"
+        );
+        let v = rules(&[("comm/frame.rs", &ok)], DESIGN_OK);
+        assert!(v.iter().all(|x| x.rule != RULE_PANIC), "{v:?}");
+    }
+
+    #[test]
+    fn debug_asserts_and_cfg_test_code_are_exempt() {
+        let frame = format!(
+            "{FRAME_OK}\nfn g(x: u8) {{ debug_assert!(x > 0); debug_assert_eq!(x, x); }}\n\
+             #[cfg(test)]\nmod tests {{\n    fn t(x: Option<u8>) -> u8 {{ x.unwrap() }}\n}}\n"
+        );
+        let v = rules(&[("comm/frame.rs", &frame)], DESIGN_OK);
+        assert!(v.iter().all(|x| x.rule != RULE_PANIC), "{v:?}");
+    }
+
+    #[test]
+    fn annotation_missing_reason_is_an_error_and_covers_nothing() {
+        let frame = format!(
+            "{FRAME_OK}\nfn bad(x: Option<u8>) -> u8 {{\n    // lint: allow(panic)\n    \
+             x.unwrap()\n}}\n"
+        );
+        let v = rules(&[("comm/frame.rs", &frame)], DESIGN_OK);
+        assert!(v.iter().any(|x| x.rule == RULE_ANN && x.msg.contains("reason")), "{v:?}");
+        assert!(v.iter().any(|x| x.rule == RULE_PANIC), "{v:?}");
+    }
+
+    #[test]
+    fn unknown_directive_and_stale_annotation_are_errors() {
+        let frame = format!("{FRAME_OK}\n// lint: frobnicate everything\nfn f() {{}}\n");
+        let v = rules(&[("comm/frame.rs", &frame)], DESIGN_OK);
+        assert!(v.iter().any(|x| x.rule == RULE_ANN && x.msg.contains("unknown")), "{v:?}");
+        let frame = format!("{FRAME_OK}\n// lint: allow(panic) — nothing here needs it\nfn f() {{}}\n");
+        let v = rules(&[("comm/frame.rs", &frame)], DESIGN_OK);
+        assert!(v.iter().any(|x| x.rule == RULE_ANN && x.msg.contains("stale")), "{v:?}");
+    }
+
+    #[test]
+    fn unmatched_rent_fails_and_in_fn_give_balances() {
+        let core = format!("{CORE_OK}\nfn leak(p: &Pool) -> Buf {{ p.rent_f32(4) }}\n");
+        let v = rules(&[("ps/core.rs", &core)], DESIGN_OK);
+        assert!(v.iter().any(|x| x.rule == RULE_POOL && x.msg.contains("give_f32")), "{v:?}");
+        let core =
+            format!("{CORE_OK}\nfn sums(p: &Pool) {{ let b = p.rent_f32(4); p.give_f32(b); }}\n");
+        let v = rules(&[("ps/core.rs", &core)], DESIGN_OK);
+        assert!(v.iter().all(|x| x.rule != RULE_POOL), "{v:?}");
+    }
+
+    #[test]
+    fn transfers_must_match_design_table_both_ways() {
+        let core = format!(
+            "{CORE_OK}\nfn hand(p: &Pool) -> Buf {{\n    // lint: transfers(nowhere)\n    \
+             p.rent_f32(4)\n}}\n"
+        );
+        let v = rules(&[("ps/core.rs", &core)], DESIGN_OK);
+        assert!(
+            v.iter().any(|x| x.rule == RULE_POOL && x.msg.contains("no matching row")),
+            "{v:?}"
+        );
+        let design = DESIGN_OK.replace(
+            "<!-- /lint:pool-ownership -->",
+            "| `core::ghost` | f32 | `reduce` | nobody |\n<!-- /lint:pool-ownership -->",
+        );
+        let v = rules(&[], &design);
+        assert!(v.iter().any(|x| x.rule == RULE_POOL && x.file == "DESIGN.md"), "{v:?}");
+    }
+
+    #[test]
+    fn missing_table_markers_is_an_error() {
+        let v = rules(&[], "# a design doc with no machine-readable table\n");
+        assert!(
+            v.iter().any(|x| x.rule == RULE_POOL && x.msg.contains("not found")),
+            "{v:?}"
+        );
+    }
+
+    #[test]
+    fn dropping_a_message_variant_from_dispatch_fails() {
+        let core = "\nfn handle_inner(m: Message) -> u32 {\n    \
+                    match m { Message::A => 1, _ => 0 }\n}\n";
+        let v = rules(&[("ps/core.rs", core)], DESIGN_OK);
+        assert!(
+            v.iter().any(|x| {
+                x.rule == RULE_WIRE && x.msg.contains("`B`") && x.msg.contains("handle_inner")
+            }),
+            "{v:?}"
+        );
+    }
+
+    #[test]
+    fn dropping_a_scheme_from_validate_wire_fails() {
+        let compress =
+            COMPRESS_OK.replace("SchemeId::Alpha | SchemeId::Beta", "SchemeId::Alpha");
+        let v = rules(&[("compress/mod.rs", &compress)], DESIGN_OK);
+        assert!(v.iter().any(|x| x.rule == RULE_WIRE && x.msg.contains("Beta")), "{v:?}");
+    }
+
+    #[test]
+    fn counter_field_missing_from_display_fails() {
+        let stats = STATS_OK.replace("pub pulls: u64 }", "pub pulls: u64, pub ghost: u64 }");
+        let v = rules(&[("ps/stats.rs", &stats)], DESIGN_OK);
+        assert!(v.iter().any(|x| x.rule == RULE_COUNTER && x.msg.contains("ghost")), "{v:?}");
+    }
+}

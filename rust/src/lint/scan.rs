@@ -1,0 +1,557 @@
+//! Comment/string-aware Rust token scanner — the zero-dependency core of
+//! the static-invariants lint (see `crate::lint`).
+//!
+//! This is deliberately *not* a parser. The rules in `crate::lint` only
+//! need to know, for every byte of a source file, whether it is live code
+//! or inert (comment, string/char literal, or part of a `#[cfg(test)]`
+//! item), plus a handful of token-level facts: identifier spans, `fn`
+//! bodies, and per-line comment text. A hand-rolled byte classifier keeps
+//! the vendored build free of `syn`/`proc-macro2` (no network deps), and
+//! the subset of Rust it must understand is small and stable:
+//!
+//!   - line comments and *nested* block comments
+//!   - regular, raw (`r#"…"#`), and byte strings, with escapes
+//!   - char literals vs lifetimes (`'a'` vs `&'a [u8]`)
+//!   - `#[cfg(test)]`-gated items, masked out via brace/semicolon matching
+//!
+//! Anything the classifier cannot understand degrades toward classifying
+//! bytes as code — i.e. toward *more* lint coverage, never silently less.
+
+/// Byte classification. `Test` means "code, but inside a `#[cfg(test)]`
+/// item" — rule checks skip it, brace matching still sees it.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Class {
+    Code,
+    Comment,
+    Str,
+    Test,
+}
+
+/// A `fn` item: its name, the offset of the `fn` keyword, and the byte
+/// range of its body (between, not including, the outer braces). Bodiless
+/// declarations (trait method signatures) are not reported.
+#[derive(Clone, Debug)]
+pub struct FnSpan {
+    pub name: String,
+    pub fn_pos: usize,
+    pub body: std::ops::Range<usize>,
+}
+
+/// One `//`-style comment line, pre-trimmed of slashes and whitespace.
+#[derive(Clone, Debug)]
+pub struct LineComment {
+    pub line: usize,
+    /// Byte offset of the start of the line the comment sits on.
+    pub line_pos: usize,
+    pub text: String,
+}
+
+pub struct ScannedFile {
+    pub src: String,
+    class: Vec<Class>,
+    line_starts: Vec<usize>,
+}
+
+pub fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+fn is_ident_start(b: u8) -> bool {
+    b.is_ascii_alphabetic() || b == b'_'
+}
+
+impl ScannedFile {
+    pub fn new(src: String) -> ScannedFile {
+        let class = classify(src.as_bytes());
+        let class = mask_test_items(src.as_bytes(), class);
+        let mut line_starts = vec![0usize];
+        for (i, &b) in src.as_bytes().iter().enumerate() {
+            if b == b'\n' {
+                line_starts.push(i + 1);
+            }
+        }
+        ScannedFile { src, class, line_starts }
+    }
+
+    pub fn class(&self, pos: usize) -> Class {
+        self.class[pos]
+    }
+
+    pub fn is_code(&self, pos: usize) -> bool {
+        self.class[pos] == Class::Code
+    }
+
+    /// 1-based line number of a byte offset.
+    pub fn line_of(&self, pos: usize) -> usize {
+        match self.line_starts.binary_search(&pos) {
+            Ok(i) => i + 1,
+            Err(i) => i,
+        }
+    }
+
+    /// All live-code identifiers as `(byte offset, text)`.
+    pub fn idents(&self) -> Vec<(usize, &str)> {
+        let b = self.src.as_bytes();
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i < b.len() {
+            if self.class[i] == Class::Code && is_ident_start(b[i]) {
+                let start = i;
+                while i < b.len() && self.class[i] == Class::Code && is_ident_byte(b[i]) {
+                    i += 1;
+                }
+                out.push((start, &self.src[start..i]));
+            } else {
+                i += 1;
+            }
+        }
+        out
+    }
+
+    /// Offset of the previous live-code, non-whitespace byte strictly
+    /// before `pos` (skipping comments and strings), or `None`.
+    pub fn prev_code_byte(&self, pos: usize) -> Option<usize> {
+        let b = self.src.as_bytes();
+        let mut i = pos;
+        while i > 0 {
+            i -= 1;
+            if self.class[i] == Class::Code && !b[i].is_ascii_whitespace() {
+                return Some(i);
+            }
+            if self.class[i] != Class::Code && !matches!(self.class[i], Class::Comment) {
+                // a string literal is a real token: `"x"[0]` — report it
+                return Some(i);
+            }
+        }
+        None
+    }
+
+    /// Offset of the next live-code, non-whitespace byte at or after
+    /// `pos`, skipping comments.
+    pub fn next_code_byte(&self, pos: usize) -> Option<usize> {
+        let b = self.src.as_bytes();
+        let mut i = pos;
+        while i < b.len() {
+            if self.class[i] == Class::Code && !b[i].is_ascii_whitespace() {
+                return Some(i);
+            }
+            i += 1;
+        }
+        None
+    }
+
+    /// Every `fn` item with a body, in source order. Nested functions are
+    /// reported too; callers wanting the innermost enclosing fn of an
+    /// offset should pick the smallest containing body.
+    pub fn fns(&self) -> Vec<FnSpan> {
+        let b = self.src.as_bytes();
+        let mut out = Vec::new();
+        for (pos, name) in self.idents() {
+            if name != "fn" {
+                continue;
+            }
+            // the fn name is the next code identifier ("fn(u64)" fn-pointer
+            // types have none — a delimiter comes first)
+            let Some(np) = self.next_code_byte(pos + 2) else { continue };
+            if !is_ident_start(b[np]) {
+                continue;
+            }
+            let mut ne = np;
+            while ne < b.len() && self.class[ne] == self.class[np] && is_ident_byte(b[ne]) {
+                ne += 1;
+            }
+            let fname = self.src[np..ne].to_string();
+            // body: first `{` at paren/bracket depth 0; a `;` first means
+            // a bodiless declaration. `[u8; 4]` in params hides its `;`
+            // behind bracket depth.
+            let mut depth = 0i64;
+            let mut j = ne;
+            let mut open = None;
+            while j < b.len() {
+                if matches!(self.class[j], Class::Code | Class::Test) {
+                    match b[j] {
+                        b'(' | b'[' => depth += 1,
+                        b')' | b']' => depth -= 1,
+                        b'{' if depth == 0 => {
+                            open = Some(j);
+                            break;
+                        }
+                        b';' if depth == 0 => break,
+                        _ => {}
+                    }
+                }
+                j += 1;
+            }
+            let Some(open) = open else { continue };
+            let close = self.match_brace(open);
+            out.push(FnSpan { name: fname, fn_pos: pos, body: open + 1..close });
+        }
+        out
+    }
+
+    /// Offset of the `}` matching the `{` at `open` (or end of file).
+    pub fn match_brace(&self, open: usize) -> usize {
+        let b = self.src.as_bytes();
+        let mut depth = 0i64;
+        let mut j = open;
+        while j < b.len() {
+            if matches!(self.class[j], Class::Code | Class::Test) {
+                match b[j] {
+                    b'{' => depth += 1,
+                    b'}' => {
+                        depth -= 1;
+                        if depth == 0 {
+                            return j;
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            j += 1;
+        }
+        b.len()
+    }
+
+    /// Comment text per line: everything after `//` (or `///`, `//!`),
+    /// trimmed. Lines whose comment bytes come from a block comment are
+    /// included too — the lint only keys off comments that *start with*
+    /// its marker, so interior prose never matches by accident.
+    pub fn line_comments(&self) -> Vec<LineComment> {
+        let b = self.src.as_bytes();
+        let mut out = Vec::new();
+        for (ln, &start) in self.line_starts.iter().enumerate() {
+            let end = self
+                .line_starts
+                .get(ln + 1)
+                .map(|&e| e - 1)
+                .unwrap_or(self.src.len());
+            let mut text = String::new();
+            for i in start..end {
+                if self.class[i] == Class::Comment {
+                    text.push(b[i] as char);
+                }
+            }
+            let trimmed = text.trim_start_matches(['/', '!']).trim();
+            if !trimmed.is_empty() {
+                out.push(LineComment {
+                    line: ln + 1,
+                    line_pos: start,
+                    text: trimmed.to_string(),
+                });
+            }
+        }
+        out
+    }
+}
+
+fn mark(cls: &mut [Class], from: usize, to: usize, c: Class) {
+    for slot in cls.iter_mut().take(to.min(cls.len())).skip(from) {
+        *slot = c;
+    }
+}
+
+fn classify(b: &[u8]) -> Vec<Class> {
+    let n = b.len();
+    let mut cls = vec![Class::Code; n];
+    let mut i = 0;
+    while i < n {
+        let c = b[i];
+        if c == b'/' && i + 1 < n && b[i + 1] == b'/' {
+            let mut j = i;
+            while j < n && b[j] != b'\n' {
+                j += 1;
+            }
+            mark(&mut cls, i, j, Class::Comment);
+            i = j;
+        } else if c == b'/' && i + 1 < n && b[i + 1] == b'*' {
+            // block comments nest in Rust
+            let mut depth = 1usize;
+            let mut j = i + 2;
+            while j < n && depth > 0 {
+                if b[j] == b'/' && j + 1 < n && b[j + 1] == b'*' {
+                    depth += 1;
+                    j += 2;
+                } else if b[j] == b'*' && j + 1 < n && b[j + 1] == b'/' {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            mark(&mut cls, i, j, Class::Comment);
+            i = j;
+        } else if c == b'"' {
+            let j = skip_plain_string(b, i);
+            mark(&mut cls, i, j, Class::Str);
+            i = j;
+        } else if (c == b'r' || c == b'b') && (i == 0 || !is_ident_byte(b[i - 1])) {
+            if let Some(j) = skip_prefixed_string(b, i) {
+                mark(&mut cls, i, j, Class::Str);
+                i = j;
+            } else {
+                i += 1;
+            }
+        } else if c == b'\'' {
+            if i + 1 < n && b[i + 1] == b'\\' {
+                // escaped char literal: '\n', '\'', '\u{1F600}'
+                let mut j = i + 2;
+                while j < n && b[j] != b'\'' {
+                    j += 1;
+                }
+                let j = (j + 1).min(n);
+                mark(&mut cls, i, j, Class::Str);
+                i = j;
+            } else if i + 1 < n && is_ident_byte(b[i + 1]) && !(i + 2 < n && b[i + 2] == b'\'') {
+                // lifetime or loop label: stays code
+                i += 1;
+            } else {
+                // unescaped char literal, possibly multi-byte UTF-8
+                let mut j = i + 1;
+                let lim = (i + 6).min(n);
+                while j < lim && b[j] != b'\'' {
+                    j += 1;
+                }
+                if j < n && b[j] == b'\'' {
+                    mark(&mut cls, i, j + 1, Class::Str);
+                    i = j + 1;
+                } else {
+                    i += 1;
+                }
+            }
+        } else {
+            i += 1;
+        }
+    }
+    cls
+}
+
+fn skip_plain_string(b: &[u8], start: usize) -> usize {
+    let n = b.len();
+    let mut j = start + 1;
+    while j < n {
+        match b[j] {
+            b'\\' => j += 2,
+            b'"' => return j + 1,
+            _ => j += 1,
+        }
+    }
+    n
+}
+
+/// Raw / byte / raw-byte strings: `r"…"`, `r#"…"#`, `b"…"`, `br#"…"#`.
+/// Returns `None` when `start` is not actually a string prefix (plain
+/// identifier starting with `r`/`b`).
+fn skip_prefixed_string(b: &[u8], start: usize) -> Option<usize> {
+    let n = b.len();
+    let mut j = start;
+    if b[j] == b'b' {
+        j += 1;
+    }
+    let raw = j < n && b[j] == b'r';
+    if raw {
+        j += 1;
+    }
+    let mut hashes = 0usize;
+    if raw {
+        while j < n && b[j] == b'#' {
+            hashes += 1;
+            j += 1;
+        }
+    }
+    if j >= n || b[j] != b'"' {
+        return None;
+    }
+    j += 1;
+    if raw {
+        while j < n {
+            if b[j] == b'"' {
+                let mut k = j + 1;
+                let mut h = 0usize;
+                while k < n && b[k] == b'#' && h < hashes {
+                    k += 1;
+                    h += 1;
+                }
+                if h == hashes {
+                    return Some(k);
+                }
+            }
+            j += 1;
+        }
+        Some(n)
+    } else {
+        // b"…": escapes, no nesting
+        while j < n {
+            match b[j] {
+                b'\\' => j += 2,
+                b'"' => return Some(j + 1),
+                _ => j += 1,
+            }
+        }
+        Some(n)
+    }
+}
+
+/// Reclassify every `#[cfg(test)]` item (attribute + following item, up
+/// to the matching `}` of its first top-level brace block or a `;`) as
+/// `Class::Test`. `cfg(all(test, …))` counts too.
+fn mask_test_items(b: &[u8], mut cls: Vec<Class>) -> Vec<Class> {
+    let n = b.len();
+    let mut i = 0;
+    while i < n {
+        if cls[i] != Class::Code || b[i] != b'#' || i + 1 >= n || b[i + 1] != b'[' {
+            i += 1;
+            continue;
+        }
+        let (attr_end, text) = read_attr(b, &cls, i);
+        let flat: String = text.chars().filter(|c| !c.is_whitespace()).collect();
+        let is_test =
+            flat.contains("cfg(test)") || (flat.contains("cfg(all(") && flat.contains("test"));
+        if !is_test {
+            i = attr_end;
+            continue;
+        }
+        // skip any further attributes and comments, then mask the item
+        let mut j = attr_end;
+        loop {
+            while j < n && (b[j].is_ascii_whitespace() || cls[j] == Class::Comment) {
+                j += 1;
+            }
+            if j + 1 < n && cls[j] == Class::Code && b[j] == b'#' && b[j + 1] == b'[' {
+                j = read_attr(b, &cls, j).0;
+            } else {
+                break;
+            }
+        }
+        let mut depth = 0i64;
+        let mut saw_brace = false;
+        while j < n {
+            if matches!(cls[j], Class::Code | Class::Test) {
+                match b[j] {
+                    b'{' => {
+                        depth += 1;
+                        saw_brace = true;
+                    }
+                    b'}' => {
+                        depth -= 1;
+                        if depth == 0 && saw_brace {
+                            j += 1;
+                            break;
+                        }
+                    }
+                    b';' if depth == 0 => {
+                        j += 1;
+                        break;
+                    }
+                    _ => {}
+                }
+            }
+            j += 1;
+        }
+        mark(&mut cls, i, j, Class::Test);
+        i = j;
+    }
+    cls
+}
+
+/// Read the `#[…]` attribute starting at `start`; returns (end offset,
+/// flattened code-class text between the brackets).
+fn read_attr(b: &[u8], cls: &[Class], start: usize) -> (usize, String) {
+    let n = b.len();
+    let mut j = start + 2;
+    let mut depth = 1i64;
+    let mut text = String::new();
+    while j < n && depth > 0 {
+        if cls[j] == Class::Code {
+            match b[j] {
+                b'[' => depth += 1,
+                b']' => depth -= 1,
+                _ => {}
+            }
+            if depth > 0 {
+                text.push(b[j] as char);
+            }
+        }
+        j += 1;
+    }
+    (j, text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn classes(src: &str) -> (ScannedFile, Vec<Class>) {
+        let sf = ScannedFile::new(src.to_string());
+        let v = (0..src.len()).map(|i| sf.class(i)).collect();
+        (sf, v)
+    }
+
+    #[test]
+    fn strings_and_comments_are_inert() {
+        let src = r##"let a = "x.unwrap()"; // y.unwrap()
+/* z.unwrap() /* nested */ still comment */ let b = r#"raw.unwrap()"#;"##;
+        let sf = ScannedFile::new(src.to_string());
+        for (pos, name) in sf.idents() {
+            assert_ne!(name, "unwrap", "unwrap leaked at {pos}");
+        }
+    }
+
+    #[test]
+    fn lifetimes_are_code_chars_are_not() {
+        let (sf, _) = classes("fn f<'a>(x: &'a [u8]) -> char { 'x' }");
+        let quote = sf.src.find("'x'").unwrap();
+        assert_eq!(sf.class(quote), Class::Str);
+        let lt = sf.src.find("<'a>").unwrap() + 1;
+        assert_eq!(sf.class(lt), Class::Code);
+    }
+
+    #[test]
+    fn escaped_char_and_byte_string() {
+        let src = "let a = '\\n'; let b = b'q'; let c = b\"by\";";
+        let sf = ScannedFile::new(src.to_string());
+        let q = src.find("'\\n'").unwrap();
+        assert_eq!(sf.class(q), Class::Str);
+        let bq = src.find("b'q'").unwrap();
+        assert_eq!(sf.class(bq + 1), Class::Str);
+        let bs = src.find("b\"by\"").unwrap();
+        assert_eq!(sf.class(bs), Class::Str);
+    }
+
+    #[test]
+    fn cfg_test_items_are_masked() {
+        let src = "fn live() { x.unwrap(); }\n#[cfg(test)]\nmod tests {\n    fn t() { y.unwrap(); }\n}\nfn live2() { z[0]; }";
+        let sf = ScannedFile::new(src.to_string());
+        let unwraps: Vec<usize> = sf
+            .idents()
+            .iter()
+            .filter(|(_, n)| *n == "unwrap")
+            .map(|(p, _)| *p)
+            .collect();
+        // only the one in `live` survives masking
+        assert_eq!(unwraps.len(), 1);
+        assert!(unwraps[0] < src.find("#[cfg(test)]").unwrap());
+        // live2 after the masked item is still code
+        let z = src.rfind('z').unwrap();
+        assert_eq!(sf.class(z), Class::Code);
+    }
+
+    #[test]
+    fn fn_spans_skip_declarations_and_match_braces() {
+        let src = "trait T { fn decl(&self) -> u8; }\nfn outer(x: [u8; 4]) -> u8 { if x[0] > 0 { x[1] } else { 0 } }";
+        let sf = ScannedFile::new(src.to_string());
+        let fns = sf.fns();
+        assert_eq!(fns.len(), 1, "{fns:?}");
+        assert_eq!(fns[0].name, "outer");
+        assert_eq!(&src[fns[0].body.end..fns[0].body.end + 1], "}");
+        assert_eq!(fns[0].body.end, src.len() - 1);
+    }
+
+    #[test]
+    fn line_comments_are_collected_trimmed() {
+        let src = "let x = 1; // lint: allow(panic) — why\n/// doc about lint: stuff\nfn f() {}";
+        let sf = ScannedFile::new(src.to_string());
+        let cs = sf.line_comments();
+        assert!(cs.iter().any(|c| c.line == 1 && c.text.starts_with("lint: allow(panic)")));
+        assert!(cs.iter().any(|c| c.line == 2 && c.text.starts_with("doc about")));
+    }
+}

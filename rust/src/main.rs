@@ -223,15 +223,14 @@ fn cmd_worker(a: &Args) -> anyhow::Result<()> {
     let drop = a.get("drop-push").map(cluster::PushDrop::parse).transpose().map_err(anyhow::Error::msg)?;
     let report =
         cluster::run_worker(&cfg, rank, &servers, dim, tensors, iters, dump.as_deref(), drop)?;
+    // Counter tail rendered by WorkerCounters's Display — the one
+    // canonical rendering, kept total by the counter-registry lint.
     println!(
-        "worker {rank}: {} iterations done | final loss {:.9e} | wire {} | \
-         {} degraded pulls | {} dropped pushes | {} window stalls",
+        "worker {rank}: {} iterations done | final loss {:.9e} | wire {} | {}",
         iters,
         report.final_loss,
         byteps_compress::util::human_bytes(report.wire_bytes as usize),
-        report.counters.degraded_responses,
-        report.counters.dropped_pushes,
-        report.counters.window_stalls
+        report.counters
     );
     use std::io::Write;
     std::io::stdout().flush().ok();

@@ -26,6 +26,10 @@
 //! waiter list and are answered with the exact sealed bytes when the
 //! encode lands — including after a rollover retired it into the one-slot
 //! `prev` history.
+// Wire-facing module: the static-invariants lint (rust/src/lint) keeps
+// this file panic-free outside tests, and clippy enforces the same at
+// the `unwrap`/`expect` level.
+#![deny(clippy::unwrap_used, clippy::expect_used)]
 
 use crate::comm::{Key, Message};
 use crate::compress::{Compressed, Compressor};
@@ -804,7 +808,14 @@ impl ServerCore {
     fn decide_seal(&mut self, key: Key, replies: &mut Vec<(u32, Message)>) {
         let n_workers = self.opts.n_workers;
         let now = Instant::now();
-        let st = self.keys.get_mut(&key).expect("sealing an unknown key");
+        let Some(st) = self.keys.get_mut(&key) else {
+            // Every caller just touched this key's state, so a miss here
+            // means shard-internal bookkeeping drifted — count it and keep
+            // the shard serving instead of taking the whole process down.
+            self.stats.internal_errors += 1;
+            eprintln!("server: internal error — sealing unknown key {key}");
+            return;
+        };
         debug_assert!(!Self::round_sealed(st), "sealing an already-sealed round");
         debug_assert!(!st.contributors.is_empty(), "sealing an empty round");
         let count = st.contributors.len();
@@ -876,8 +887,15 @@ impl ServerCore {
             if front.awaiting > 0 {
                 return;
             }
-            let seal = st.seals.pop_front().expect("front seal vanished");
-            let dim = st.dim.expect("sealing a dimensionless key");
+            let (Some(seal), Some(dim)) = (st.seals.pop_front(), st.dim) else {
+                // `front()` above proved a seal exists, and no push is
+                // accepted before the key's dimension is pinned — losing
+                // either here is internal drift, not client input. Count
+                // it and abandon this key's pipeline rather than panic.
+                self.stats.internal_errors += 1;
+                eprintln!("server: internal error — seal pipeline for key {key} lost its state");
+                return;
+            };
             // Reduce: deterministic regardless of arrival or decode
             // completion order — contributions are summed sorted by
             // connection index, then averaged over the pushes actually
@@ -885,6 +903,7 @@ impl ServerCore {
             let t = Instant::now();
             let mut decoded = seal.decoded;
             decoded.sort_by_key(|(from, _)| *from);
+            // lint: transfers(encode)
             let mut acc = crate::comm::BufPool::global().rent_f32(dim);
             for (_, buf) in decoded {
                 crate::compress::kernels::add_assign(&mut acc, &buf);
@@ -1039,6 +1058,7 @@ impl ServerCore {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::compress::{by_name, Ctx};

@@ -27,6 +27,10 @@
 //! All *decisions* (validation, dedup, rollover, seal order, counters)
 //! stay on the control thread at ingress, in message order — a decode or
 //! encode job never touches shard state, it only computes.
+// Wire-facing module: the static-invariants lint (rust/src/lint) keeps
+// this file panic-free outside tests, and clippy enforces the same at
+// the `unwrap`/`expect` level.
+#![deny(clippy::unwrap_used, clippy::expect_used)]
 
 use crate::comm::Key;
 use crate::compress::{Compressed, Compressor, Ctx};
@@ -75,6 +79,7 @@ pub(crate) enum Executor {
 pub(crate) fn decode_contribution(comp: &dyn Compressor, data: &Compressed) -> Vec<f32> {
     // Rented, not allocated: the reduce step gives the contribution back to
     // the pool once it is summed into the aggregate (see ps::core).
+    // lint: transfers(reduce)
     let mut buf = crate::comm::BufPool::global().rent_f32(data.n);
     comp.add_decompressed(data, &mut buf);
     buf
@@ -122,6 +127,7 @@ pub(crate) fn encode_aggregate(
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::comm::Message;
@@ -207,6 +213,8 @@ mod tests {
         assert_eq!(a.degraded_iters, b.degraded_iters, "{label}: degraded_iters");
         assert_eq!(a.late_pushes, b.late_pushes, "{label}: late_pushes");
         assert_eq!(a.unexpected, b.unexpected, "{label}: unexpected");
+        assert_eq!(a.internal_errors, b.internal_errors, "{label}: internal_errors");
+        assert_eq!(a.internal_errors, 0, "{label}: internal errors in a healthy run");
     }
 
     /// Per-(worker, key, iter) push payload, seeded like the worker

@@ -105,6 +105,12 @@ pub struct ServerStats {
     /// or by the deadline) — dropped and counted, never merged
     /// retroactively into an aggregate other workers may have pulled.
     pub late_pushes: u64,
+    /// Shard-internal bookkeeping drift the server recovered from instead
+    /// of panicking (a seal decision for an unknown key, a seal pipeline
+    /// that lost its front seal or dimension). Always 0 in a healthy run;
+    /// any nonzero value is a server bug worth a bisect, which is exactly
+    /// why it is counted and printed rather than asserted away.
+    pub internal_errors: u64,
     /// Control-thread seconds spent framing/validating messages and
     /// driving the round state machine — the *ingress* stage. Excludes
     /// decode/reduce/encode kernel time even on the synchronous path
@@ -146,7 +152,7 @@ impl std::fmt::Display for ServerStats {
             f,
             "{} pushes | {} pulls | {} rejected | {} short iterations | \
              {} degraded iterations | {} late pushes | {} stale pulls | \
-             {} early pulls | {} unexpected",
+             {} early pulls | {} unexpected | {} internal errors",
             self.pushes,
             self.pulls,
             self.rejected,
@@ -155,7 +161,19 @@ impl std::fmt::Display for ServerStats {
             self.late_pushes,
             self.stale_pulls,
             self.early_pulls,
-            self.unexpected
+            self.unexpected,
+            self.internal_errors
+        )?;
+        write!(
+            f,
+            " | stage s ingress/decode/reduce/encode \
+             {:.3}/{:.3}/{:.3}/{:.3} | depth peak decode/encode {}/{}",
+            self.ingress_s,
+            self.decode_s,
+            self.reduce_s,
+            self.encode_s,
+            self.decode_depth_peak,
+            self.encode_depth_peak
         )?;
         if self.round_hist.count() > 0 {
             write!(

@@ -133,6 +133,20 @@ pub struct WorkerCounters {
     pub window_stalls: u64,
 }
 
+/// The one canonical rendering of the worker counter set (mirrors
+/// `ServerStats`'s Display): every shutdown line goes through here, and
+/// the counter-registry lint keeps each field present, so a new counter
+/// cannot be added and silently missed on a report surface.
+impl std::fmt::Display for WorkerCounters {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} degraded pulls | {} dropped pushes | {} window stalls",
+            self.degraded_responses, self.dropped_pushes, self.window_stalls
+        )
+    }
+}
+
 /// The fault hook applied to a compressed push about to hit the wire
 /// (shared by the serial and pipelined paths so their drop semantics —
 /// post-compression, counted, logged — can never diverge). Returns
@@ -386,6 +400,7 @@ impl WorkerComm {
             // next block out of the gradient.
             self.inflight.acquire();
             let permit = Permit(Arc::clone(&self.inflight));
+            // lint: transfers(push-job)
             let g = crate::comm::BufPool::global().rent_f32_copy(&grad[sb.range.clone()]);
             self.push_job(iter, sb.key, g, compress_ns, move || drop(permit));
         }
@@ -483,6 +498,7 @@ impl WorkerComm {
                         self.worker_id, ACK_STALL_TIMEOUT
                     );
                 }
+                // lint: transfers(push-job)
                 let g = crate::comm::BufPool::global().rent_f32_copy(&grad[sb.range.clone()]);
                 let window = Arc::clone(&window);
                 self.push_job(iter, sb.key, g, compress_ns, move || window.close());

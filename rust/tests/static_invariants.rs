@@ -1,0 +1,28 @@
+//! Tier-1 gate for the static-invariants lint (`byteps_compress::lint`).
+//!
+//! Walks the real `rust/src/**` tree plus DESIGN.md and fails with one
+//! line per broken invariant — `file:line: [rule] message` — so a red
+//! run names exactly what drifted. The rule set and annotation grammar
+//! are documented in DESIGN.md §Static invariants; the lint's own
+//! behavior is covered by fixture tests inside `rust/src/lint/`.
+
+use std::path::Path;
+
+#[test]
+fn static_invariants_hold() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let violations = match byteps_compress::lint::run_all(root) {
+        Ok(v) => v,
+        Err(e) => panic!("static-invariants lint could not walk the tree: {e}"),
+    };
+    if !violations.is_empty() {
+        let mut report = String::new();
+        for v in &violations {
+            report.push_str(&format!("  {v}\n"));
+        }
+        panic!(
+            "{} static invariant violation(s) in rust/src (see DESIGN.md §Static invariants):\n{report}",
+            violations.len()
+        );
+    }
+}
