@@ -124,17 +124,26 @@ impl<'a> Reader<'a> {
     }
 }
 
-fn put_block(b: &mut Vec<u8>, c: &Compressed) {
-    b.push(c.scheme as u8);
+fn put_block(b: &mut Vec<u8>, c: &Compressed) -> Result<(), CommError> {
+    b.push(c.scheme.wire_id());
+    // lint: allow(cast: usize -> u64) — widening on every supported (64-bit) target
     put_u64(b, c.n as u64);
-    put_u32(b, c.payload.len() as u32);
+    let plen = u32::try_from(c.payload.len()).map_err(|_| {
+        CommError::Protocol(format!("block payload {} bytes exceeds u32", c.payload.len()))
+    })?;
+    put_u32(b, plen);
     b.extend_from_slice(&c.payload);
+    Ok(())
 }
 
 fn get_block(r: &mut Reader) -> Result<Compressed, CommError> {
     let scheme = SchemeId::from_u8(r.u8()?)
         .ok_or_else(|| CommError::Protocol("bad scheme id".into()))?;
-    let n = r.u64()? as usize;
+    // try_from instead of `as`: a 2^32+ element count in the header must
+    // be a protocol error on every target, never a silent truncation.
+    let n = usize::try_from(r.u64()?)
+        .map_err(|_| CommError::Protocol("block element count exceeds usize".into()))?;
+    // lint: allow(cast: u32 -> usize) — widening on every supported (64-bit) target
     let plen = r.u32()? as usize;
     // The decoded payload is the dominant per-frame allocation on the
     // server's steady-state recv path; rent it from the pool so consumers
@@ -174,16 +183,17 @@ pub fn check_len(msg: &Message) -> Result<usize, CommError> {
     Ok(len)
 }
 
-/// Encode a message body (without the length prefix).
-pub fn encode_body(msg: &Message) -> Vec<u8> {
+/// Encode a message body (without the length prefix). Fails when a
+/// length field (block payload, Welcome plan) exceeds its wire width.
+pub fn encode_body(msg: &Message) -> Result<Vec<u8>, CommError> {
     let mut b = Vec::with_capacity(body_len(msg));
-    encode_body_into(msg, &mut b);
-    b
+    encode_body_into(msg, &mut b)?;
+    Ok(b)
 }
 
 /// Serialize a message body by appending to `b` (no clearing, no length
 /// prefix) — the shared core of [`encode_body`] and [`encode_into`].
-fn encode_body_into(msg: &Message, b: &mut Vec<u8>) {
+fn encode_body_into(msg: &Message, b: &mut Vec<u8>) -> Result<(), CommError> {
     let start = b.len();
     match msg {
         Message::Push { key, iter, worker, data } => {
@@ -191,7 +201,7 @@ fn encode_body_into(msg: &Message, b: &mut Vec<u8>) {
             put_u64(b, *key);
             put_u64(b, *iter);
             put_u32(b, *worker);
-            put_block(b, data);
+            put_block(b, data)?;
         }
         Message::Pull { key, iter, worker } => {
             b.push(TAG_PULL);
@@ -204,7 +214,7 @@ fn encode_body_into(msg: &Message, b: &mut Vec<u8>) {
             put_u64(b, *key);
             put_u64(b, *iter);
             put_u16(b, *served_with);
-            put_block(b, data);
+            put_block(b, data)?;
         }
         Message::Ack { key, iter } => {
             b.push(TAG_ACK);
@@ -222,7 +232,10 @@ fn encode_body_into(msg: &Message, b: &mut Vec<u8>) {
             put_u32(b, *n_workers);
             put_u32(b, *shard);
             put_u64(b, *seed);
-            put_u32(b, plan.len() as u32);
+            let count = u32::try_from(plan.len()).map_err(|_| {
+                CommError::Protocol(format!("welcome plan {} entries exceeds u32", plan.len()))
+            })?;
+            put_u32(b, count);
             for &(key, server) in plan {
                 put_u64(b, key);
                 put_u32(b, server);
@@ -231,6 +244,7 @@ fn encode_body_into(msg: &Message, b: &mut Vec<u8>) {
         Message::Shutdown => b.push(TAG_SHUTDOWN),
     }
     debug_assert_eq!(b.len() - start, body_len(msg));
+    Ok(())
 }
 
 /// Encode a full frame (length prefix + body). Fails — before serializing
@@ -247,10 +261,14 @@ pub fn encode(msg: &Message) -> Result<Vec<u8>, CommError> {
 /// transport reuses one buffer across frames instead of allocating each.
 pub fn encode_into(msg: &Message, out: &mut Vec<u8>) -> Result<(), CommError> {
     let len = check_len(msg)?;
+    // check_len capped `len` at MAX_FRAME_LEN (2^30), so this never fails;
+    // try_from keeps the no-bare-`as` discipline without a panic path.
+    let len32 = u32::try_from(len)
+        .map_err(|_| CommError::Protocol(format!("frame too large to send: {len} bytes")))?;
     out.clear();
     out.reserve(4 + len);
-    put_u32(out, len as u32);
-    encode_body_into(msg, out);
+    put_u32(out, len32);
+    encode_body_into(msg, out)?;
     Ok(())
 }
 
@@ -278,6 +296,7 @@ pub fn decode_body(buf: &[u8]) -> Result<Message, CommError> {
             let n_workers = r.u32()?;
             let shard = r.u32()?;
             let seed = r.u64()?;
+            // lint: allow(cast: u32 -> usize) — widening on every supported (64-bit) target
             let count = r.u32()? as usize;
             // Untrusted input: bound the allocation by the bytes actually
             // present (12 per entry) before reserving `count` slots.
@@ -418,7 +437,7 @@ mod tests {
         assert!(decode_body(&[99]).is_err());
         assert!(decode_body(&[TAG_ACK, 1, 2]).is_err()); // truncated
         // trailing garbage
-        let mut enc = encode_body(&Message::Shutdown);
+        let mut enc = encode_body(&Message::Shutdown).unwrap();
         enc.push(0);
         assert!(decode_body(&enc).is_err());
         // bad scheme id inside a block
@@ -428,7 +447,7 @@ mod tests {
             served_with: 1,
             data: Compressed { scheme: SchemeId::TopK, n: 4, payload: vec![1, 2, 3] },
         };
-        let mut enc = encode_body(&msg);
+        let mut enc = encode_body(&msg).unwrap();
         enc[19] = 0xEE; // scheme byte (1 tag + 8 key + 8 iter + 2 served)
         assert!(decode_body(&enc).is_err());
     }
@@ -437,7 +456,7 @@ mod tests {
     fn frame_bytes_matches_encoding() {
         for msg in one_of_each_tag() {
             assert_eq!(frame_bytes(&msg), encode(&msg).unwrap().len(), "{msg:?}");
-            assert_eq!(body_len(&msg), encode_body(&msg).len(), "{msg:?}");
+            assert_eq!(body_len(&msg), encode_body(&msg).unwrap().len(), "{msg:?}");
         }
     }
 
@@ -475,7 +494,7 @@ mod tests {
     fn welcome_with_inflated_count_rejected() {
         let msg =
             Message::Welcome { n_workers: 2, shard: 0, seed: 1, plan: vec![(5, 1), (9, 0)] };
-        let mut body = encode_body(&msg);
+        let mut body = encode_body(&msg).unwrap();
         // count field sits after tag(1) + n_workers(4) + shard(4) + seed(8).
         let count_at = 1 + 4 + 4 + 8;
         body[count_at..count_at + 4].copy_from_slice(&u32::MAX.to_le_bytes());
@@ -516,7 +535,7 @@ mod tests {
     #[test]
     fn every_truncation_of_every_tag_is_rejected() {
         for msg in one_of_each_tag() {
-            let body = encode_body(&msg);
+            let body = encode_body(&msg).unwrap();
             // Sanity: the full body decodes back.
             assert_eq!(decode_body(&body).unwrap(), msg);
             for cut in 0..body.len() {
@@ -533,7 +552,7 @@ mod tests {
     #[test]
     fn trailing_bytes_rejected_for_every_tag() {
         for msg in one_of_each_tag() {
-            let mut body = encode_body(&msg);
+            let mut body = encode_body(&msg).unwrap();
             body.push(0);
             assert!(decode_body(&body).is_err(), "{msg:?} accepted trailing byte");
         }
@@ -545,7 +564,7 @@ mod tests {
     fn corrupt_block_payload_rejected_at_decode() {
         let msgs = one_of_each_tag();
         // msgs[0] is the Push with a 2-entry top-k block on n = 8.
-        let body = encode_body(&msgs[0]);
+        let body = encode_body(&msgs[0]).unwrap();
         // Body layout: tag(1) key(8) iter(8) worker(4) scheme(1) n(8) plen(4) payload.
         let payload_at = 1 + 8 + 8 + 4 + 1 + 8 + 4;
         // First index (little-endian u32 after the k header) -> 0xFFFF_FFFF.
@@ -571,7 +590,7 @@ mod tests {
         use crate::comm::BlockKey;
         let key = BlockKey::new(123, 45).pack();
         let msg = Message::Ack { key, iter: 0 };
-        let enc = encode_body(&msg);
+        let enc = encode_body(&msg).unwrap();
         let Message::Ack { key: k, .. } = decode_body(&enc).unwrap() else { panic!() };
         assert_eq!(BlockKey::unpack(k), BlockKey::new(123, 45));
     }

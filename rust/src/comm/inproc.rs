@@ -14,7 +14,7 @@ use std::sync::{Arc, Mutex};
 
 pub struct InprocEndpoint {
     tx: Sender<Message>,
-    rx: Mutex<Receiver<Message>>,
+    inbox: Mutex<Receiver<Message>>,
     sent: Arc<AtomicU64>,
 }
 
@@ -24,8 +24,8 @@ impl InprocEndpoint {
     /// poison flag carries no information — and propagating the panic
     /// would cascade one worker thread's failure into every thread
     /// sharing the endpoint. Same policy as `comm::BufPool`.
-    fn rx(&self) -> std::sync::MutexGuard<'_, Receiver<Message>> {
-        self.rx.lock().unwrap_or_else(|p| p.into_inner())
+    fn inbox(&self) -> std::sync::MutexGuard<'_, Receiver<Message>> {
+        self.inbox.lock().unwrap_or_else(|p| p.into_inner())
     }
 }
 
@@ -34,16 +34,18 @@ impl Endpoint for InprocEndpoint {
         // Same frame cap as the TCP transport, so a tensor that would be
         // unsendable over sockets fails identically in-process.
         let body = super::frame::check_len(&msg)?;
+        // lint: allow(cast: usize -> u64) — widening on every supported (64-bit) target
         self.sent.fetch_add(4 + body as u64, Ordering::Relaxed);
         self.tx.send(msg).map_err(|_| CommError::Closed)
     }
 
     fn recv(&self) -> Result<Message, CommError> {
-        self.rx().recv().map_err(|_| CommError::Closed)
+        // lint: allow(block) — the inbox mutex only makes the Receiver shareable; recv() blocking on an empty channel is this method's contract
+        self.inbox().recv().map_err(|_| CommError::Closed)
     }
 
     fn try_recv(&self) -> Result<Option<Message>, CommError> {
-        match self.rx().try_recv() {
+        match self.inbox().try_recv() {
             Ok(m) => Ok(Some(m)),
             Err(TryRecvError::Empty) => Ok(None),
             Err(TryRecvError::Disconnected) => Err(CommError::Closed),
@@ -60,8 +62,8 @@ pub fn pair() -> (InprocEndpoint, InprocEndpoint) {
     let (atx, arx) = channel();
     let (btx, brx) = channel();
     (
-        InprocEndpoint { tx: atx, rx: Mutex::new(brx), sent: Arc::new(AtomicU64::new(0)) },
-        InprocEndpoint { tx: btx, rx: Mutex::new(arx), sent: Arc::new(AtomicU64::new(0)) },
+        InprocEndpoint { tx: atx, inbox: Mutex::new(brx), sent: Arc::new(AtomicU64::new(0)) },
+        InprocEndpoint { tx: btx, inbox: Mutex::new(arx), sent: Arc::new(AtomicU64::new(0)) },
     )
 }
 

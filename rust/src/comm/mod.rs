@@ -47,17 +47,18 @@ pub struct BlockKey {
 impl BlockKey {
     pub fn new(tensor: u64, block: u32) -> BlockKey {
         assert!(tensor < 1 << BLOCK_SHIFT, "tensor id {tensor} exceeds {BLOCK_SHIFT} bits");
-        assert!((block as u64) < MAX_BLOCKS_PER_TENSOR, "block index {block} too large");
+        assert!(u64::from(block) < MAX_BLOCKS_PER_TENSOR, "block index {block} too large");
         BlockKey { tensor, block }
     }
 
     /// Pack into the wire key. Block 0 packs to the bare tensor id.
     pub fn pack(self) -> Key {
-        (self.block as u64) << BLOCK_SHIFT | self.tensor
+        u64::from(self.block) << BLOCK_SHIFT | self.tensor
     }
 
     /// Recover the structured key from a wire key.
     pub fn unpack(key: Key) -> BlockKey {
+        // lint: allow(cast: u64 -> u32, trunc) — after the 40-bit shift only 24 bits remain, always < 2^32
         BlockKey { tensor: key & ((1u64 << BLOCK_SHIFT) - 1), block: (key >> BLOCK_SHIFT) as u32 }
     }
 }

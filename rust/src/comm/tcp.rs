@@ -97,11 +97,13 @@ impl TcpEndpoint {
     /// longer be trusted to be frame-aligned, and draining an
     /// attacker-declared length (up to 4 GiB) to realign would hand a
     /// hostile peer exactly the read-pinning the handshake bounds exclude.
+    // lint: allow(block, fn) — the per-connection reader mutex serializes whole-frame reads; blocking under it IS the framing discipline (scratch + stream must stay paired across the read)
     pub fn recv_bounded(&self, cap: usize) -> Result<Message, CommError> {
         let mut guard = lock_half(&self.reader);
         let Half { stream, scratch } = &mut *guard;
         let mut len_buf = [0u8; 4];
         read_exact(stream, &mut len_buf)?;
+        // lint: allow(cast: u32 -> usize) — widening on every supported (64-bit) target
         let len = u32::from_le_bytes(len_buf) as usize;
         if len > cap {
             return Err(CommError::Io(format!(
@@ -160,7 +162,9 @@ impl Endpoint for TcpEndpoint {
         // the connection's send scratch, so a steady stream of frames
         // costs no allocation once the buffer has grown to the largest.
         frame::encode_into(&msg, scratch)?;
+        // lint: allow(cast: usize -> u64) — widening on every supported (64-bit) target
         self.sent.fetch_add(scratch.len() as u64, Ordering::Relaxed);
+        // lint: allow(block) — the writer mutex exists to serialize whole frames onto the socket; writing outside it would interleave frames
         let res = stream.write_all(scratch).map_err(|e| CommError::Io(e.to_string()));
         // The frame is on the wire (or the connection is dead); either way
         // the message's block payload dies here — recycle it. The in-proc

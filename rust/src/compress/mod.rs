@@ -60,6 +60,20 @@ impl SchemeId {
             _ => return None,
         })
     }
+
+    /// Stable wire discriminant: the exhaustive inverse of [`from_u8`],
+    /// so the frame encoder never needs a raw `as` cast of the enum.
+    pub fn wire_id(self) -> u8 {
+        match self {
+            SchemeId::Identity => 0,
+            SchemeId::Fp16 => 1,
+            SchemeId::OneBit => 2,
+            SchemeId::TopK => 3,
+            SchemeId::RandomK => 4,
+            SchemeId::LinearDither => 5,
+            SchemeId::NaturalDither => 6,
+        }
+    }
 }
 
 /// A compressed gradient block as it travels on the wire.

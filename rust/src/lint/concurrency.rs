@@ -1,0 +1,619 @@
+//! Concurrency-discipline rules: lock-order against the DESIGN.md
+//! §Lock order hierarchy, hold-while-blocking, cross-thread pool
+//! ownership, and integer-cast safety on the wire path.
+//!
+//! All four rules run over the scope-aware primitives in [`flow`]
+//! (guard live ranges, job spans, blocking calls) and are restricted to
+//! the concurrency-bearing module prefixes (`comm/`, `ps/`, `worker/`,
+//! `parallel/`; cast-safety to `comm/` alone). See DESIGN.md §Lock
+//! order and §Static invariants for the full contract.
+
+use std::collections::HashSet;
+
+use super::flow::{self, AcqKind};
+use super::scan::{self, FnSpan, ScannedFile};
+use super::{Ann, AnnKind, Violation, RULE_BLOCK, RULE_CAST, RULE_CROSS, RULE_LOCK};
+
+/// Module prefixes the lock-order / blocking / crossing rules govern.
+const SCOPE_PREFIXES: &[&str] = &["comm/", "ps/", "worker/", "parallel/"];
+
+fn in_scope(file: &str) -> bool {
+    SCOPE_PREFIXES.iter().any(|p| file.starts_with(p))
+}
+
+// ---------------------------------------------------------------------
+// The DESIGN.md §Lock order table
+// ---------------------------------------------------------------------
+
+const LOCK_BEGIN: &str = "<!-- lint:lock-order -->";
+const LOCK_END: &str = "<!-- /lint:lock-order -->";
+
+/// One row of the declared hierarchy: a lock class, the site-text
+/// recognizers that map acquisitions to it, and the set of locks that
+/// may be acquired while it is held (the outgoing edges).
+struct LockClass {
+    rank: u32,
+    name: String,
+    recognizers: Vec<String>,
+    inner: Vec<String>,
+    line: usize,
+}
+
+fn lock_err(v: &mut Vec<Violation>, line: usize, msg: String) {
+    v.push(Violation { file: "DESIGN.md".into(), line, rule: RULE_LOCK, msg });
+}
+
+fn parse_lock_table(md: &str, v: &mut Vec<Violation>) -> Vec<LockClass> {
+    let mut classes: Vec<LockClass> = Vec::new();
+    let mut inside = false;
+    let mut seen_markers = false;
+    for (i, raw) in md.lines().enumerate() {
+        let line = i + 1;
+        let t = raw.trim();
+        if t == LOCK_BEGIN {
+            inside = true;
+            seen_markers = true;
+            continue;
+        }
+        if t == LOCK_END {
+            inside = false;
+            continue;
+        }
+        if !inside || !t.starts_with('|') {
+            continue;
+        }
+        let cells: Vec<String> = t
+            .trim_matches('|')
+            .split('|')
+            .map(|c| c.trim().trim_matches('`').to_string())
+            .collect();
+        if cells.iter().all(|c| c.chars().all(|ch| "-: ".contains(ch))) {
+            continue; // separator row
+        }
+        if cells.first().is_some_and(|c| c.contains("rank")) {
+            continue; // header row
+        }
+        if cells.len() < 4 {
+            lock_err(v, line, "lock table row needs 4 cells (rank, lock, recognizer, may acquire while held)".into());
+            continue;
+        }
+        let Ok(rank) = cells[0].parse::<u32>() else {
+            lock_err(v, line, format!("lock table rank `{}` is not an integer", cells[0]));
+            continue;
+        };
+        let split_list = |cell: &str| -> Vec<String> {
+            cell.split(',')
+                .map(|s| s.trim().trim_matches('`').to_string())
+                .filter(|s| !s.is_empty())
+                .collect()
+        };
+        let recognizers = split_list(&cells[2]);
+        if recognizers.is_empty() {
+            lock_err(v, line, format!("lock `{}` has no recognizers", cells[1]));
+            continue;
+        }
+        classes.push(LockClass {
+            rank,
+            name: cells[1].clone(),
+            recognizers,
+            inner: split_list(&cells[3]),
+            line,
+        });
+    }
+    if !seen_markers {
+        lock_err(
+            v,
+            1,
+            format!(
+                "machine-readable lock hierarchy not found (expected `{LOCK_BEGIN}` … \
+                 `{LOCK_END}` markers in §Lock order)"
+            ),
+        );
+        return Vec::new();
+    }
+    // Config validation: names unique, edges reference declared locks,
+    // no self-edges, every edge strictly rank-increasing.
+    for (i, c) in classes.iter().enumerate() {
+        if classes[..i].iter().any(|o| o.name == c.name) {
+            lock_err(v, c.line, format!("duplicate lock class `{}`", c.name));
+        }
+        for e in &c.inner {
+            if e == &c.name {
+                lock_err(
+                    v,
+                    c.line,
+                    format!("lock `{}` declares itself acquirable while held — self-edges are never legal", c.name),
+                );
+                continue;
+            }
+            match classes.iter().find(|o| &o.name == e) {
+                None => lock_err(
+                    v,
+                    c.line,
+                    format!("edge `{}` → `{e}` references an undeclared lock", c.name),
+                ),
+                Some(o) if o.rank <= c.rank => lock_err(
+                    v,
+                    c.line,
+                    format!(
+                        "edge `{}` (rank {}) → `{e}` (rank {}) breaks rank monotonicity — \
+                         every legal acquisition must go strictly down the hierarchy",
+                        c.name, c.rank, o.rank
+                    ),
+                ),
+                Some(_) => {}
+            }
+        }
+    }
+    classes
+}
+
+/// Map an acquisition site to its lock class: the recognizer must be a
+/// suffix of the site text (line start → token end) on an identifier
+/// boundary; the longest matching recognizer wins.
+fn resolve<'a>(classes: &'a [LockClass], site: &str) -> Option<&'a LockClass> {
+    let mut best: Option<(&LockClass, usize)> = None;
+    for c in classes {
+        for r in &c.recognizers {
+            if !site.ends_with(r.as_str()) {
+                continue;
+            }
+            let start = site.len() - r.len();
+            if start > 0 && scan::is_ident_byte(site.as_bytes()[start - 1]) {
+                continue;
+            }
+            if best.map_or(true, |(_, len)| r.len() > len) {
+                best = Some((c, r.len()));
+            }
+        }
+    }
+    best.map(|(c, _)| c)
+}
+
+/// Try to cover a nested acquisition with a `lock-after(<outer>)`
+/// annotation on its line or the line above; marks it used.
+fn cover_lock_after(anns: &mut [Ann], line: usize, outer: &str) -> bool {
+    for a in anns.iter_mut() {
+        if let AnnKind::LockAfter(n) = &a.kind {
+            if n == outer && (a.line == line || a.line + 1 == line) {
+                a.used = true;
+                return true;
+            }
+        }
+    }
+    false
+}
+
+pub(super) fn check_lock_order(
+    sources: &[(String, ScannedFile)],
+    anns: &mut [(usize, Vec<Ann>)],
+    design_md: &str,
+    v: &mut Vec<Violation>,
+) {
+    let classes = parse_lock_table(design_md, v);
+    if classes.is_empty() {
+        return; // missing/empty table already reported
+    }
+    let mut witnessed: HashSet<(String, String)> = HashSet::new();
+    for (idx, (file, sf)) in sources.iter().enumerate() {
+        if !in_scope(file) {
+            continue;
+        }
+        let acqs = flow::acquisitions(sf);
+        let spans = flow::job_spans(sf);
+        let resolved: Vec<Option<&LockClass>> =
+            acqs.iter().map(|a| resolve(&classes, &a.site)).collect();
+        for (a, r) in acqs.iter().zip(&resolved) {
+            if r.is_none() && a.kind != AcqKind::Momentary {
+                v.push(Violation {
+                    file: file.clone(),
+                    line: a.line,
+                    rule: RULE_LOCK,
+                    msg: format!(
+                        "acquisition `{}` matches no recognizer in the DESIGN.md §Lock order \
+                         table — every lock in scope must be classified",
+                        a.site.trim()
+                    ),
+                });
+            }
+        }
+        let file_anns = &mut anns[idx].1;
+        for (i, outer) in acqs.iter().enumerate() {
+            if outer.kind == AcqKind::Momentary {
+                continue;
+            }
+            let Some(oc) = resolved[i] else { continue };
+            for (j, inner) in acqs.iter().enumerate() {
+                if j == i || inner.pos <= outer.pos || !outer.live.contains(&inner.pos) {
+                    continue;
+                }
+                // A closure handed to another thread does not inherit
+                // the guard: spans entered after the acquisition are
+                // not nested acquisitions (hold-while-blocking owns
+                // the deadlock risk of the job *waiting* on the lock).
+                if spans.iter().any(|s| s.contains(&inner.pos) && !s.contains(&outer.pos)) {
+                    continue;
+                }
+                let Some(ic) = resolved[j] else {
+                    if inner.kind == AcqKind::Momentary {
+                        v.push(Violation {
+                            file: file.clone(),
+                            line: inner.line,
+                            rule: RULE_LOCK,
+                            msg: format!(
+                                "pool touch `{}` inside the guard from line {} matches no \
+                                 recognizer in the DESIGN.md §Lock order table",
+                                inner.token, outer.line
+                            ),
+                        });
+                    }
+                    continue;
+                };
+                if oc.name == ic.name {
+                    if !cover_lock_after(file_anns, inner.line, &oc.name) {
+                        v.push(Violation {
+                            file: file.clone(),
+                            line: inner.line,
+                            rule: RULE_LOCK,
+                            msg: format!(
+                                "`{}` re-acquired while already held (line {}) — \
+                                 self-deadlock; restructure or annotate \
+                                 `// lint: lock-after({}) — <reason>`",
+                                ic.name, outer.line, oc.name
+                            ),
+                        });
+                    }
+                    continue;
+                }
+                if oc.inner.contains(&ic.name) {
+                    witnessed.insert((oc.name.clone(), ic.name.clone()));
+                    continue;
+                }
+                if cover_lock_after(file_anns, inner.line, &oc.name) {
+                    continue;
+                }
+                v.push(Violation {
+                    file: file.clone(),
+                    line: inner.line,
+                    rule: RULE_LOCK,
+                    msg: format!(
+                        "`{}` acquired while `{}` (line {}) is held, but the DESIGN.md §Lock \
+                         order table declares no `{}` → `{}` edge — declare the edge (with \
+                         rationale) or annotate `// lint: lock-after({}) — <reason>`",
+                        ic.name, oc.name, outer.line, oc.name, ic.name, oc.name
+                    ),
+                });
+            }
+        }
+    }
+    // Cross-validation, table → code: a declared edge nobody exercises
+    // is a stale hierarchy claim.
+    for c in &classes {
+        for e in &c.inner {
+            if classes.iter().any(|o| &o.name == e && o.rank > c.rank)
+                && !witnessed.contains(&(c.name.clone(), e.clone()))
+            {
+                lock_err(
+                    v,
+                    c.line,
+                    format!(
+                        "declared edge `{}` → `{e}` is witnessed by no nested acquisition in \
+                         rust/src — stale docs or a silently restructured lock region",
+                        c.name
+                    ),
+                );
+            }
+        }
+    }
+    // Cross-validation, annotation → table: lock-after must name a
+    // declared lock (stale-annotation sweep catches unused ones).
+    for (idx, file_anns) in anns.iter() {
+        for a in file_anns {
+            if let AnnKind::LockAfter(n) = &a.kind {
+                if !classes.iter().any(|c| &c.name == n) {
+                    v.push(Violation {
+                        file: sources[*idx].0.clone(),
+                        line: a.line,
+                        rule: RULE_LOCK,
+                        msg: format!(
+                            "`lock-after({n})` names a lock absent from the DESIGN.md §Lock \
+                             order table"
+                        ),
+                    });
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Hold-while-blocking
+// ---------------------------------------------------------------------
+
+/// Try to cover a blocking site with `allow(block)` (site) or
+/// `allow(block, fn)` (whole enclosing fn); marks the annotation used.
+fn cover_block(anns: &mut [Ann], fns: &[FnSpan], line: usize, pos: usize) -> bool {
+    for a in anns.iter_mut() {
+        if a.kind == AnnKind::AllowBlock && !a.fn_level && (a.line == line || a.line + 1 == line) {
+            a.used = true;
+            return true;
+        }
+    }
+    let Some(encl) = super::innermost_fn(fns, pos) else { return false };
+    for a in anns.iter_mut() {
+        if a.kind == AnnKind::AllowBlock && a.fn_level {
+            if let Some(att) = super::attached_fn(fns, a.line_pos) {
+                if att.fn_pos == encl.fn_pos {
+                    a.used = true;
+                    return true;
+                }
+            }
+        }
+    }
+    false
+}
+
+pub(super) fn check_hold_blocking(
+    sources: &[(String, ScannedFile)],
+    anns: &mut [(usize, Vec<Ann>)],
+    v: &mut Vec<Violation>,
+) {
+    for (idx, (file, sf)) in sources.iter().enumerate() {
+        if !in_scope(file) {
+            continue;
+        }
+        let acqs = flow::acquisitions(sf);
+        let spans = flow::job_spans(sf);
+        let fns = sf.fns();
+        let file_anns = &mut anns[idx].1;
+        for bc in flow::blocking_calls(sf) {
+            let held = acqs.iter().find(|a| {
+                a.kind != AcqKind::Momentary
+                    && bc.pos > a.pos
+                    && a.live.contains(&bc.pos)
+                    // a blocking call inside a job closure runs on
+                    // another thread — the guard is not held there
+                    && !spans.iter().any(|s| s.contains(&bc.pos) && !s.contains(&a.pos))
+            });
+            let Some(g) = held else { continue };
+            if cover_block(file_anns, &fns, bc.line, bc.pos) {
+                continue;
+            }
+            v.push(Violation {
+                file: file.clone(),
+                line: bc.line,
+                rule: RULE_BLOCK,
+                msg: format!(
+                    "blocking `{}` while the guard acquired on line {} is live — narrow the \
+                     guard (explicit `drop(...)` first) or annotate \
+                     `// lint: allow(block) — <reason>`",
+                    bc.token, g.line
+                ),
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Cross-thread pool ownership
+// ---------------------------------------------------------------------
+
+pub(super) fn check_pool_crossing(
+    sources: &[(String, ScannedFile)],
+    anns: &mut [(usize, Vec<Ann>)],
+    v: &mut Vec<Violation>,
+) {
+    for (idx, (file, sf)) in sources.iter().enumerate() {
+        if !in_scope(file) {
+            continue;
+        }
+        let spans = flow::job_spans(sf);
+        if spans.is_empty() {
+            continue; // no cross-thread boundary in this file
+        }
+        let b = sf.src.as_bytes();
+        let fns = sf.fns();
+        let idents = sf.idents();
+        let call_site = |pos: usize, name: &str| {
+            sf.prev_code_byte(pos).is_some_and(|p| b[p] == b'.')
+                && sf.next_code_byte(pos + name.len()).is_some_and(|n| b[n] == b'(')
+        };
+        let file_anns = &anns[idx].1;
+        for &(pos, name) in &idents {
+            let Some(&(_, family)) = super::RENT_METHODS.iter().find(|(n, _)| *n == name)
+            else {
+                continue;
+            };
+            if !call_site(pos, name) {
+                continue;
+            }
+            let line = sf.line_of(pos);
+            // transfers-annotated rents hand the buffer to another
+            // owner by declared design; the pool-ownership rule
+            // cross-validates them against the DESIGN.md table.
+            if file_anns.iter().any(|a| {
+                matches!(a.kind, AnnKind::Transfers(_)) && (a.line == line || a.line + 1 == line)
+            }) {
+                continue;
+            }
+            let Some(encl) = super::innermost_fn(&fns, pos) else { continue };
+            let give = family.give();
+            let gives: Vec<usize> = idents
+                .iter()
+                .filter(|(p, n)| *n == give && encl.body.contains(p) && call_site(*p, n))
+                .map(|(p, _)| *p)
+                .collect();
+            if let Some(si) = flow::innermost_span(&spans, pos) {
+                // Rent executed inside a job closure: its give must be
+                // in the same closure. When no give exists anywhere in
+                // the fn the in-function balance rule already reports.
+                if !gives.is_empty() && !gives.iter().any(|g| spans[si].contains(g)) {
+                    v.push(Violation {
+                        file: file.clone(),
+                        line,
+                        rule: RULE_CROSS,
+                        msg: format!(
+                            "`{name}` runs inside a thread-pool job but its `.{give}` is \
+                             outside the job closure — the give runs on a different thread \
+                             than the rent; give it back inside the job or annotate the rent \
+                             `// lint: transfers(<to>)` with a DESIGN.md table row"
+                        ),
+                    });
+                }
+            } else if let Some(binding) = flow::let_binding(sf, pos) {
+                // Rent on this thread, buffer possibly captured by a
+                // job closure: the capture moves ownership across the
+                // thread boundary, so the give must be in that closure.
+                let captured = spans.iter().find(|s| {
+                    s.start > pos
+                        && encl.body.contains(&s.start)
+                        && idents.iter().any(|(p, n)| s.contains(p) && *n == binding)
+                });
+                if let Some(s) = captured {
+                    if !gives.iter().any(|g| s.contains(g)) {
+                        v.push(Violation {
+                            file: file.clone(),
+                            line,
+                            rule: RULE_CROSS,
+                            msg: format!(
+                                "`{binding}` (rented via `{name}`) is captured by a thread-pool \
+                                 job with no `.{give}` inside that job — the buffer crosses the \
+                                 thread boundary untracked; give it back in the job or annotate \
+                                 the rent `// lint: transfers(<to>)`"
+                            ),
+                        });
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Cast safety (comm/ only)
+// ---------------------------------------------------------------------
+
+const INT_TYPES: &[&str] = &[
+    "u8", "u16", "u32", "u64", "u128", "usize", "i8", "i16", "i32", "i64", "i128", "isize",
+];
+
+/// Casts that can never lose value. `u32 -> usize` and `usize -> u64`
+/// assume a 64-bit target — an assumption this crate makes everywhere
+/// (documented in DESIGN.md §Static invariants) and that the annotation
+/// reason must restate at each site.
+const WIDENING: &[(&str, &str)] = &[
+    ("u8", "u16"),
+    ("u8", "u32"),
+    ("u8", "u64"),
+    ("u8", "u128"),
+    ("u8", "usize"),
+    ("u16", "u32"),
+    ("u16", "u64"),
+    ("u16", "u128"),
+    ("u16", "usize"),
+    ("u32", "u64"),
+    ("u32", "u128"),
+    ("u32", "usize"),
+    ("usize", "u64"),
+    ("usize", "u128"),
+    ("u64", "u128"),
+    ("i8", "i16"),
+    ("i8", "i32"),
+    ("i8", "i64"),
+    ("i8", "i128"),
+    ("i8", "isize"),
+    ("i16", "i32"),
+    ("i16", "i64"),
+    ("i16", "i128"),
+    ("i16", "isize"),
+    ("i32", "i64"),
+    ("i32", "i128"),
+    ("i32", "isize"),
+    ("i64", "i128"),
+    ("isize", "i64"),
+    ("isize", "i128"),
+];
+
+/// The identifier starting at or after `from` (whitespace/comments
+/// skipped), or `None` if the next code byte is not an ident start.
+fn next_ident(sf: &ScannedFile, from: usize) -> Option<String> {
+    let b = sf.src.as_bytes();
+    let mut i = from;
+    while i < b.len() && (!sf.is_code(i) || b[i].is_ascii_whitespace()) {
+        i += 1;
+    }
+    if i >= b.len() || !(b[i].is_ascii_alphabetic() || b[i] == b'_') {
+        return None;
+    }
+    let s = i;
+    while i < b.len() && sf.is_code(i) && scan::is_ident_byte(b[i]) {
+        i += 1;
+    }
+    Some(sf.src[s..i].to_string())
+}
+
+pub(super) fn check_cast_safety(
+    sources: &[(String, ScannedFile)],
+    anns: &mut [(usize, Vec<Ann>)],
+    v: &mut Vec<Violation>,
+) {
+    for (idx, (file, sf)) in sources.iter().enumerate() {
+        if !file.starts_with("comm/") {
+            continue;
+        }
+        let file_anns = &mut anns[idx].1;
+        for (pos, name) in sf.idents() {
+            if name != "as" {
+                continue;
+            }
+            let Some(ty) = next_ident(sf, pos + 2) else { continue };
+            if !INT_TYPES.contains(&ty.as_str()) {
+                continue;
+            }
+            let line = sf.line_of(pos);
+            let ann = file_anns.iter_mut().find(|a| {
+                matches!(a.kind, AnnKind::AllowCast { .. })
+                    && (a.line == line || a.line + 1 == line)
+            });
+            let Some(a) = ann else {
+                v.push(Violation {
+                    file: file.clone(),
+                    line,
+                    rule: RULE_CAST,
+                    msg: format!(
+                        "bare `as {ty}` integer cast on the wire path — use `try_from` with a \
+                         `CommError::Protocol` arm, `{ty}::from` where it compiles, or annotate \
+                         `// lint: allow(cast: <src> -> {ty}) — <reason>`"
+                    ),
+                });
+                continue;
+            };
+            a.used = true;
+            let AnnKind::AllowCast { src, dst, trunc } = a.kind.clone() else { unreachable!() };
+            if dst != ty {
+                v.push(Violation {
+                    file: file.clone(),
+                    line,
+                    rule: RULE_CAST,
+                    msg: format!(
+                        "annotation declares a cast to `{dst}` but the site casts to `{ty}` — \
+                         annotation and code drifted apart"
+                    ),
+                });
+                continue;
+            }
+            if !trunc && !WIDENING.contains(&(src.as_str(), dst.as_str())) {
+                v.push(Violation {
+                    file: file.clone(),
+                    line,
+                    rule: RULE_CAST,
+                    msg: format!(
+                        "`{src} -> {dst}` is not a widening conversion — rewrite with \
+                         `try_from`, or declare `allow(cast: {src} -> {dst}, trunc)` with a \
+                         reason proving the value fits"
+                    ),
+                });
+            }
+        }
+    }
+}

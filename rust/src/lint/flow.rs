@@ -1,0 +1,481 @@
+//! Scope-aware flow primitives for the concurrency lints
+//! (`lint/concurrency`): lock-guard live ranges, thread-pool job spans,
+//! and blocking-call discovery.
+//!
+//! Everything here is computed over [`ScannedFile`]'s class-tagged byte
+//! view — no parser, no AST, the same philosophy as the statement-level
+//! rules in `lint/mod.rs`. The model is deliberately simple and
+//! *documented* where it under- or over-approximates:
+//!
+//! * A guard bound by `let [mut] NAME = <acquisition>.unwrap…;` is
+//!   **named**: it lives from the acquisition to the end of its
+//!   enclosing block, truncated at an explicit `drop(NAME)`. The call
+//!   chain after the acquisition may only pass through
+//!   [`GUARD_CHAIN`] adapters (`unwrap`, `unwrap_or_else`, …) — any
+//!   other method (`.pop()`, `.len()`) consumes the guard within the
+//!   statement, so the binding holds the *result*, not the guard.
+//! * Any other acquisition is a **temporary**: it lives to the end of
+//!   the enclosing statement — the `;` at paren/bracket depth zero, a
+//!   `{` at depth zero (Rust drops `if`/`while` condition temporaries
+//!   before entering the block), or the `)`/`]`/`}` that closes the
+//!   expression it sits in. Known under-approximation: a temporary
+//!   guard in a `match` scrutinee lives through the whole match, but
+//!   this model ends it at the `{`; no such site exists in the tree.
+//! * Pool touches (`rent_*` / `give_*`) are **momentary** acquisitions:
+//!   they take and release a pool lock inside one call, so they have an
+//!   empty live range and only ever appear as the *inner* lock of a
+//!   nested pair.
+
+use super::scan::{is_ident_byte, ScannedFile};
+use std::ops::Range;
+
+/// Helper methods that *return* a `MutexGuard` (or a struct deref-ing
+/// to one) instead of calling `.lock()` at the call site. These are the
+/// acquisition points the `.lock(` pattern alone would miss.
+pub const GUARD_HELPERS: &[&str] = &["lock_half", "bytes_guard", "f32s_guard", "inbox"];
+
+/// `BufPool` touches that acquire and release a pool lock within a
+/// single call — zero-length live range, inner-lock role only.
+pub const MOMENTARY_PREFIXES: &[&str] = &["rent_", "give_"];
+
+/// Adapters that keep a `lock()`-style call chain guard-valued. Any
+/// other trailing method means the statement binds a derived value,
+/// not the guard.
+const GUARD_CHAIN: &[&str] = &["unwrap", "expect", "unwrap_or_else", "expect_err"];
+
+/// Blocking calls for the hold-while-blocking rule. Matched as exact
+/// identifiers in call position, so `wait` does not match
+/// `wait_timeout` and `recv` does not match `try_recv` (those are
+/// different tokens entirely). `read_exact` extends the declared list:
+/// it blocks on the socket exactly like `write_all` does.
+pub const BLOCKING: &[&str] =
+    &["recv", "recv_timeout", "read_exact", "write_all", "connect", "join", "sleep", "wait"];
+
+/// Calls whose argument list hands work to another thread: a closure
+/// passed here runs outside the current stack frame.
+pub const JOB_SPAWNERS: &[&str] = &["execute", "submit", "spawn"];
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AcqKind {
+    /// A literal `.lock(` call.
+    Lock,
+    /// A [`GUARD_HELPERS`] call.
+    Helper,
+    /// A [`MOMENTARY_PREFIXES`] pool touch (empty live range).
+    Momentary,
+}
+
+/// One lock-acquisition site and the live range of the guard it made.
+#[derive(Debug, Clone)]
+pub struct Acquisition {
+    /// Byte offset of the identifier token.
+    pub pos: usize,
+    /// 1-based source line.
+    pub line: usize,
+    /// The token text (`lock`, `bytes_guard`, `rent_f32`, …).
+    pub token: String,
+    /// Source text from the start of the line to the end of the token —
+    /// what lock-class recognizers match against.
+    pub site: String,
+    pub kind: AcqKind,
+    /// Byte range over which the guard is live (empty for momentary).
+    pub live: Range<usize>,
+    /// `let` binding name when the guard is named.
+    pub binding: Option<String>,
+}
+
+/// A blocking call site (see [`BLOCKING`]).
+#[derive(Debug, Clone)]
+pub struct BlockingCall {
+    pub pos: usize,
+    pub line: usize,
+    pub token: String,
+}
+
+/// Position of the `(` opening a call's argument list, if the token at
+/// `pos` (with text `name`) is immediately followed by one.
+fn call_open(sf: &ScannedFile, pos: usize, name: &str) -> Option<usize> {
+    let b = sf.src.as_bytes();
+    let mut i = pos + name.len();
+    while i < b.len() {
+        if sf.is_code(i) && !b[i].is_ascii_whitespace() {
+            return (b[i] == b'(').then_some(i);
+        }
+        i += 1;
+    }
+    None
+}
+
+/// Find the `)` matching the `(` at `open`, skipping non-code bytes.
+pub fn match_paren(sf: &ScannedFile, open: usize) -> Option<usize> {
+    let b = sf.src.as_bytes();
+    let mut depth = 0usize;
+    for i in open..b.len() {
+        if !sf.is_code(i) {
+            continue;
+        }
+        match b[i] {
+            b'(' => depth += 1,
+            b')' => {
+                depth -= 1;
+                if depth == 0 {
+                    return Some(i);
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+/// The identifier token ending immediately before `pos` (whitespace and
+/// comments skipped), if any. Used to drop `fn name(` definitions from
+/// call-site scans.
+fn prev_ident<'a>(sf: &'a ScannedFile, pos: usize) -> Option<&'a str> {
+    let b = sf.src.as_bytes();
+    let mut i = pos;
+    loop {
+        if i == 0 {
+            return None;
+        }
+        i -= 1;
+        if !sf.is_code(i) || b[i].is_ascii_whitespace() {
+            continue;
+        }
+        break;
+    }
+    if !is_ident_byte(b[i]) {
+        return None;
+    }
+    let end = i + 1;
+    let mut s = i;
+    while s > 0 && sf.is_code(s - 1) && is_ident_byte(b[s - 1]) {
+        s -= 1;
+    }
+    Some(&sf.src[s..end])
+}
+
+/// Start of the statement containing `pos`: the byte after the nearest
+/// preceding `;`, `{`, or `}` in code class.
+fn stmt_start(sf: &ScannedFile, pos: usize) -> usize {
+    let b = sf.src.as_bytes();
+    let mut i = pos;
+    while i > 0 {
+        i -= 1;
+        if sf.is_code(i) && matches!(b[i], b';' | b'{' | b'}') {
+            return i + 1;
+        }
+    }
+    0
+}
+
+/// End of the enclosing block: the first `}` that closes a brace opened
+/// *before* `pos` (relative depth goes negative).
+fn block_end(sf: &ScannedFile, pos: usize) -> usize {
+    let b = sf.src.as_bytes();
+    let mut depth = 0i32;
+    for i in pos..b.len() {
+        if !sf.is_code(i) {
+            continue;
+        }
+        match b[i] {
+            b'{' => depth += 1,
+            b'}' => {
+                depth -= 1;
+                if depth < 0 {
+                    return i;
+                }
+            }
+            _ => {}
+        }
+    }
+    b.len()
+}
+
+/// End of a temporary's life: the enclosing statement boundary (see the
+/// module docs for the exact semantics).
+fn temp_end(sf: &ScannedFile, pos: usize) -> usize {
+    let b = sf.src.as_bytes();
+    let mut depth = 0i32;
+    for i in pos..b.len() {
+        if !sf.is_code(i) {
+            continue;
+        }
+        match b[i] {
+            b'(' | b'[' => depth += 1,
+            b'{' => {
+                if depth == 0 {
+                    return i;
+                }
+                depth += 1;
+            }
+            b')' | b']' | b'}' => {
+                depth -= 1;
+                if depth < 0 {
+                    return i;
+                }
+            }
+            b';' => {
+                if depth == 0 {
+                    return i;
+                }
+            }
+            _ => {}
+        }
+    }
+    b.len()
+}
+
+/// True when the call chain from the acquisition's closing `)` to the
+/// statement's `;` passes only through [`GUARD_CHAIN`] adapters (plus
+/// `?`) — i.e. the `let` binding really holds the guard.
+fn chain_is_guard_only(sf: &ScannedFile, call_close: usize) -> bool {
+    let b = sf.src.as_bytes();
+    let mut i = call_close + 1;
+    loop {
+        while i < b.len() && (!sf.is_code(i) || b[i].is_ascii_whitespace()) {
+            i += 1;
+        }
+        if i >= b.len() {
+            return false;
+        }
+        match b[i] {
+            b';' => return true,
+            b'?' => i += 1,
+            b'.' => {
+                i += 1;
+                while i < b.len() && (!sf.is_code(i) || b[i].is_ascii_whitespace()) {
+                    i += 1;
+                }
+                let s = i;
+                while i < b.len() && sf.is_code(i) && is_ident_byte(b[i]) {
+                    i += 1;
+                }
+                if !GUARD_CHAIN.contains(&&sf.src[s..i]) {
+                    return false;
+                }
+                while i < b.len() && (!sf.is_code(i) || b[i].is_ascii_whitespace()) {
+                    i += 1;
+                }
+                if i >= b.len() || b[i] != b'(' {
+                    return false;
+                }
+                match match_paren(sf, i) {
+                    Some(c) => i = c + 1,
+                    None => return false,
+                }
+            }
+            _ => return false,
+        }
+    }
+}
+
+/// If the statement at `start` is `let [mut] NAME = …`, the binding
+/// name (only identifiers strictly before `acq_pos` are considered).
+fn binding_ident(sf: &ScannedFile, start: usize, acq_pos: usize) -> Option<String> {
+    let ids: Vec<&str> = sf
+        .idents()
+        .into_iter()
+        .filter(|&(p, _)| p >= start && p < acq_pos)
+        .map(|(_, s)| s)
+        .collect();
+    if ids.first() != Some(&"let") {
+        return None;
+    }
+    match ids.get(1) {
+        Some(&"mut") => ids.get(2).map(|s| (*s).to_string()),
+        Some(name) => Some((*name).to_string()),
+        None => None,
+    }
+}
+
+/// The `let` binding name of the statement containing `pos`, if it has
+/// the form `let [mut] NAME = …`. Unlike the guard classification in
+/// [`acquisitions`], the call chain after `pos` is not inspected — pool
+/// rents return the buffer itself, so the binding always holds it.
+pub fn let_binding(sf: &ScannedFile, pos: usize) -> Option<String> {
+    binding_ident(sf, stmt_start(sf, pos), pos)
+}
+
+/// Truncate a named guard's live range at the first `drop(NAME)` call
+/// inside it, if any.
+fn truncate_at_drop(sf: &ScannedFile, live: Range<usize>, binding: &str) -> Range<usize> {
+    for (p, name) in sf.idents() {
+        if name != "drop" || p <= live.start || p >= live.end {
+            continue;
+        }
+        let Some(open) = call_open(sf, p, name) else { continue };
+        // Argument must be exactly the binding identifier.
+        let b = sf.src.as_bytes();
+        let mut i = open + 1;
+        while i < b.len() && (!sf.is_code(i) || b[i].is_ascii_whitespace()) {
+            i += 1;
+        }
+        let s = i;
+        while i < b.len() && sf.is_code(i) && is_ident_byte(b[i]) {
+            i += 1;
+        }
+        if &sf.src[s..i] != binding {
+            continue;
+        }
+        while i < b.len() && (!sf.is_code(i) || b[i].is_ascii_whitespace()) {
+            i += 1;
+        }
+        if i < b.len() && b[i] == b')' {
+            return live.start..p;
+        }
+    }
+    live
+}
+
+/// All lock-acquisition sites in a file, with guard live ranges.
+pub fn acquisitions(sf: &ScannedFile) -> Vec<Acquisition> {
+    let bytes = sf.src.as_bytes();
+    let mut out = Vec::new();
+    for (pos, name) in sf.idents() {
+        let dotted = sf.prev_code_byte(pos).is_some_and(|p| bytes[p] == b'.');
+        // Locks and pool touches are method calls (`.lock(`, `.rent_f32(`);
+        // guard helpers may also be free functions (`lock_half(&self.writer)`),
+        // so for those only `fn` definitions are excluded.
+        let kind = if name == "lock" && dotted {
+            AcqKind::Lock
+        } else if GUARD_HELPERS.contains(&name) && prev_ident(sf, pos) != Some("fn") {
+            AcqKind::Helper
+        } else if MOMENTARY_PREFIXES.iter().any(|p| name.starts_with(p)) && dotted {
+            AcqKind::Momentary
+        } else {
+            continue;
+        };
+        let Some(open) = call_open(sf, pos, name) else { continue };
+        let line_start = sf.src[..pos].rfind('\n').map_or(0, |i| i + 1);
+        let site = sf.src[line_start..pos + name.len()].to_string();
+        let (live, binding) = if kind == AcqKind::Momentary {
+            (pos..pos, None)
+        } else {
+            let start = stmt_start(sf, pos);
+            let named = binding_ident(sf, start, pos).filter(|_| {
+                match_paren(sf, open).is_some_and(|close| chain_is_guard_only(sf, close))
+            });
+            match named {
+                Some(b) => (truncate_at_drop(sf, pos..block_end(sf, pos), &b), Some(b)),
+                None => (pos..temp_end(sf, pos), None),
+            }
+        };
+        out.push(Acquisition {
+            pos,
+            line: sf.line_of(pos),
+            token: name.to_string(),
+            site,
+            kind,
+            live,
+            binding,
+        });
+    }
+    out
+}
+
+/// All blocking-call sites (see [`BLOCKING`]); `fn name(` definitions
+/// are excluded.
+pub fn blocking_calls(sf: &ScannedFile) -> Vec<BlockingCall> {
+    let mut out = Vec::new();
+    for (pos, name) in sf.idents() {
+        if !BLOCKING.contains(&name) || call_open(sf, pos, name).is_none() {
+            continue;
+        }
+        if prev_ident(sf, pos) == Some("fn") {
+            continue;
+        }
+        out.push(BlockingCall { pos, line: sf.line_of(pos), token: name.to_string() });
+    }
+    out
+}
+
+/// Argument-list byte ranges of every job-spawning call (see
+/// [`JOB_SPAWNERS`]) — code inside one of these ranges runs on another
+/// thread. Definitions (`fn spawn(`) are excluded.
+pub fn job_spans(sf: &ScannedFile) -> Vec<Range<usize>> {
+    let mut out = Vec::new();
+    for (pos, name) in sf.idents() {
+        if !JOB_SPAWNERS.contains(&name) || prev_ident(sf, pos) == Some("fn") {
+            continue;
+        }
+        let Some(open) = call_open(sf, pos, name) else { continue };
+        if let Some(close) = match_paren(sf, open) {
+            out.push(open + 1..close);
+        }
+    }
+    out
+}
+
+/// The innermost (smallest) span in `spans` containing `pos`, if any.
+pub fn innermost_span(spans: &[Range<usize>], pos: usize) -> Option<usize> {
+    spans
+        .iter()
+        .enumerate()
+        .filter(|(_, s)| s.contains(&pos))
+        .min_by_key(|(_, s)| s.end - s.start)
+        .map(|(i, _)| i)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn acq(src: &str) -> Vec<Acquisition> {
+        acquisitions(&ScannedFile::new(src.to_string()))
+    }
+
+    #[test]
+    fn named_guard_lives_to_block_end() {
+        let src = "fn f(m: &std::sync::Mutex<u32>) {\n    let g = m.lock().unwrap();\n    use_it(&g);\n}\n";
+        let a = acq(src);
+        assert_eq!(a.len(), 1);
+        assert_eq!(a[0].binding.as_deref(), Some("g"));
+        // Live to the fn's closing brace — past the use_it call.
+        assert!(a[0].live.end > src.find("use_it").unwrap());
+    }
+
+    #[test]
+    fn drop_truncates_named_guard() {
+        let src = "fn f() {\n    let g = m.lock().unwrap();\n    drop(g);\n    after();\n}\n";
+        let a = acq(src);
+        assert!(a[0].live.end < src.find("after").unwrap());
+    }
+
+    #[test]
+    fn chain_past_guard_methods_is_temporary() {
+        // .pop() consumes the guard inside the statement: the binding
+        // holds an Option, not the guard.
+        let src = "fn f() {\n    let v = m.lock().unwrap().pop();\n    after();\n}\n";
+        let a = acq(src);
+        assert_eq!(a[0].binding, None);
+        assert!(a[0].live.end < src.find("after").unwrap());
+    }
+
+    #[test]
+    fn condition_temporary_ends_at_open_brace() {
+        let src = "fn f() {\n    if m.lock().unwrap().remove(&k) {\n        inside();\n    }\n}\n";
+        let a = acq(src);
+        assert!(a[0].live.end < src.find("inside").unwrap());
+    }
+
+    #[test]
+    fn tuple_temporaries_overlap() {
+        // Second acquisition happens while the first temporary is live.
+        let src = "fn f() -> (usize, usize) {\n    (self.bytes_guard().len(), self.f32s_guard().len())\n}\n";
+        let a = acq(src);
+        assert_eq!(a.len(), 2);
+        assert!(a[0].live.contains(&a[1].pos));
+    }
+
+    #[test]
+    fn blocking_and_spans_skip_definitions() {
+        let src = "fn recv(&self) {\n    self.pool.execute(move || job());\n    ch.recv().ok();\n}\n";
+        let sf = ScannedFile::new(src.to_string());
+        let b = blocking_calls(&sf);
+        assert_eq!(b.len(), 1, "fn recv( definition must not count");
+        let spans = job_spans(&sf);
+        assert_eq!(spans.len(), 1);
+        assert!(spans[0].contains(&src.find("job").unwrap()));
+    }
+}

@@ -30,23 +30,50 @@
 //! 4. **counter-registry** — every `ServerStats` / `WorkerCounters`
 //!    field must appear in its `Display` impl, so no counter can drift
 //!    off the shutdown surface again (the PR 4–5 bug class).
+//! 5. **lock-order** — nested lock acquisitions in `comm/`, `ps/`,
+//!    `worker/`, and `parallel/` must follow the global hierarchy
+//!    declared in the machine-readable DESIGN.md §Lock order table,
+//!    cross-validated both ways (undeclared nesting is a violation;
+//!    a declared edge nobody exercises is stale docs). See
+//!    [`concurrency`] and the flow model in [`flow`].
+//! 6. **hold-while-blocking** — a live `MutexGuard` in scope while a
+//!    blocking call (`recv`, `write_all`, `join`, Condvar `wait`, …)
+//!    executes stalls every peer of that lock; forbidden unless
+//!    annotated with a reason.
+//! 7. **pool-crossing** — the rule-2 rent/give balance extended across
+//!    `ThreadPool::execute`/`spawn` boundaries: a pooled buffer rented
+//!    inside (or captured by) a job closure must be given back inside
+//!    that closure, or carry a `transfers` annotation.
+//! 8. **cast-safety** — bare `as` integer casts in `comm/` must be
+//!    provably widening or rewritten as `try_from` with a counted
+//!    `CommError::Protocol` path; anything else is annotated with the
+//!    exact `src -> dst` pair, revalidated against a widening table.
 //!
 //! Annotation grammar (a comment whose text starts with `lint:`):
 //!
 //! - "`lint: allow(panic) — <reason>`" / "`lint: allow(index) — <reason>`"
-//!   cover sites on the same line or the line below.
-//! - "`lint: allow(panic, fn) — <reason>`" (likewise `index, fn`) is
-//!   placed immediately above a `fn` item and covers its whole body —
-//!   for kernels whose every `chunks_exact` cast would otherwise need
-//!   its own line.
+//!   / "`lint: allow(block) — <reason>`" cover sites on the same line or
+//!   the line below.
+//! - "`lint: allow(panic, fn) — <reason>`" (likewise `index, fn` /
+//!   `block, fn`) is placed immediately above a `fn` item and covers its
+//!   whole body — for kernels whose every `chunks_exact` cast would
+//!   otherwise need its own line.
 //! - "`lint: transfers(<to>)`" marks a rent whose buffer deliberately
 //!   leaves the renting function; `<to>` must match a row in the
 //!   DESIGN.md ownership table for the same function.
+//! - "`lint: lock-after(<lock>) — <reason>`" marks a nested acquisition
+//!   outside the declared hierarchy; `<lock>` names the outer lock held
+//!   at the site and must exist in the DESIGN.md §Lock order table.
+//! - "`lint: allow(cast: <src> -> <dst>[, trunc]) — <reason>`" marks an
+//!   `as` cast; `<dst>` must match the cast target, and without `trunc`
+//!   the pair must be widening.
 //!
 //! A missing reason, an unknown directive, or an annotation that covers
 //! nothing (stale after a refactor) is itself an error: annotations are
 //! part of the checked surface, not comments.
 
+mod concurrency;
+pub mod flow;
 pub mod scan;
 
 use scan::{FnSpan, ScannedFile};
@@ -74,6 +101,10 @@ const RULE_POOL: &str = "pool-ownership";
 const RULE_WIRE: &str = "wire-exhaustiveness";
 const RULE_COUNTER: &str = "counter-registry";
 const RULE_ANN: &str = "annotation";
+const RULE_LOCK: &str = "lock-order";
+const RULE_BLOCK: &str = "hold-while-blocking";
+const RULE_CROSS: &str = "pool-crossing";
+const RULE_CAST: &str = "cast-safety";
 
 /// Walk `rust/src/**` under `repo_root`, plus `DESIGN.md`, and run every
 /// rule. `Err` is reserved for I/O problems (missing tree); rule
@@ -129,6 +160,10 @@ pub fn run_on(sources: &[(String, ScannedFile)], design_md: &str) -> Vec<Violati
     check_pool_ownership(sources, &mut anns, design_md, &mut v);
     check_wire_exhaustiveness(sources, &mut v);
     check_counter_registry(sources, &mut v);
+    concurrency::check_lock_order(sources, &mut anns, design_md, &mut v);
+    concurrency::check_hold_blocking(sources, &mut anns, &mut v);
+    concurrency::check_pool_crossing(sources, &mut anns, &mut v);
+    concurrency::check_cast_safety(sources, &mut anns, &mut v);
     // a covering annotation that covers nothing is a refactoring leftover
     for (idx, file_anns) in &anns {
         for a in file_anns {
@@ -157,7 +192,10 @@ pub fn run_on(sources: &[(String, ScannedFile)], design_md: &str) -> Vec<Violati
 enum AnnKind {
     AllowPanic,
     AllowIndex,
+    AllowBlock,
+    AllowCast { src: String, dst: String, trunc: bool },
     Transfers(String),
+    LockAfter(String),
 }
 
 #[derive(Clone, Debug)]
@@ -176,7 +214,13 @@ impl Ann {
             AnnKind::AllowPanic => "allow(panic)".into(),
             AnnKind::AllowIndex if self.fn_level => "allow(index, fn)".into(),
             AnnKind::AllowIndex => "allow(index)".into(),
+            AnnKind::AllowBlock if self.fn_level => "allow(block, fn)".into(),
+            AnnKind::AllowBlock => "allow(block)".into(),
+            AnnKind::AllowCast { src, dst, trunc } => {
+                format!("allow(cast: {src} -> {dst}{})", if *trunc { ", trunc" } else { "" })
+            }
             AnnKind::Transfers(d) => format!("transfers({d})"),
+            AnnKind::LockAfter(n) => format!("lock-after({n})"),
         }
     }
 }
@@ -206,31 +250,75 @@ fn parse_annotations(file: &str, sf: &ScannedFile, v: &mut Vec<Violation>) -> Ve
             let mut parts = args[..close].split(',').map(str::trim);
             let what = parts.next().unwrap_or("");
             let scope = parts.next();
-            let kind = match what {
-                "panic" => AnnKind::AllowPanic,
-                "index" => AnnKind::AllowIndex,
-                other => {
+            let (kind, fn_level) = if let Some(spec) = what.strip_prefix("cast:") {
+                // `allow(cast: SRC -> DST[, trunc])` — the comma split
+                // above leaves the pair in `what` and `trunc` in `scope`.
+                let Some((src, dst)) = spec.split_once("->") else {
                     ann_err(
                         v,
                         file,
                         c.line,
-                        format!("unknown allow target `{other}` (want `panic` or `index`)"),
+                        "malformed cast annotation (want `allow(cast: SRC -> DST[, trunc])`)"
+                            .into(),
                     );
                     continue;
-                }
-            };
-            let fn_level = match scope {
-                None => false,
-                Some("fn") => true,
-                Some(other) => {
+                };
+                let (src, dst) = (src.trim(), dst.trim());
+                if src.is_empty() || dst.is_empty() {
                     ann_err(
                         v,
                         file,
                         c.line,
-                        format!("unknown allow scope `{other}` (only `fn` is valid)"),
+                        "cast annotation needs both a source and a destination type".into(),
                     );
                     continue;
                 }
+                let trunc = match scope {
+                    None => false,
+                    Some("trunc") => true,
+                    Some(other) => {
+                        ann_err(
+                            v,
+                            file,
+                            c.line,
+                            format!("unknown cast qualifier `{other}` (only `trunc` is valid)"),
+                        );
+                        continue;
+                    }
+                };
+                (AnnKind::AllowCast { src: src.into(), dst: dst.into(), trunc }, false)
+            } else {
+                let kind = match what {
+                    "panic" => AnnKind::AllowPanic,
+                    "index" => AnnKind::AllowIndex,
+                    "block" => AnnKind::AllowBlock,
+                    other => {
+                        ann_err(
+                            v,
+                            file,
+                            c.line,
+                            format!(
+                                "unknown allow target `{other}` (want `panic`, `index`, \
+                                 `block`, or `cast: SRC -> DST`)"
+                            ),
+                        );
+                        continue;
+                    }
+                };
+                let fn_level = match scope {
+                    None => false,
+                    Some("fn") => true,
+                    Some(other) => {
+                        ann_err(
+                            v,
+                            file,
+                            c.line,
+                            format!("unknown allow scope `{other}` (only `fn` is valid)"),
+                        );
+                        continue;
+                    }
+                };
+                (kind, fn_level)
             };
             if parts.next().is_some() {
                 ann_err(v, file, c.line, "too many arguments in `lint: allow(...)`".into());
@@ -267,12 +355,44 @@ fn parse_annotations(file: &str, sf: &ScannedFile, v: &mut Vec<Violation>) -> Ve
                 fn_level: false,
                 used: false,
             });
+        } else if let Some(args) = rest.strip_prefix("lock-after(") {
+            let Some(close) = args.find(')') else {
+                ann_err(v, file, c.line, "malformed `lint: lock-after(...)` — no `)`".into());
+                continue;
+            };
+            let name = args[..close].trim();
+            if name.is_empty() {
+                ann_err(v, file, c.line, "`lint: lock-after()` needs a lock name".into());
+                continue;
+            }
+            if !has_reason(&args[close + 1..]) {
+                ann_err(
+                    v,
+                    file,
+                    c.line,
+                    format!(
+                        "`lint: {rest}` is missing its `— <reason>` — an out-of-hierarchy \
+                         acquisition must say why it cannot deadlock"
+                    ),
+                );
+                continue;
+            }
+            anns.push(Ann {
+                line: c.line,
+                line_pos: c.line_pos,
+                kind: AnnKind::LockAfter(name.to_string()),
+                fn_level: false,
+                used: false,
+            });
         } else {
             ann_err(
                 v,
                 file,
                 c.line,
-                format!("unknown `lint:` directive `{rest}` (want allow(...) or transfers(...))"),
+                format!(
+                    "unknown `lint:` directive `{rest}` (want allow(...), transfers(...), or \
+                     lock-after(...))"
+                ),
             );
         }
     }
@@ -321,6 +441,11 @@ const WIRE_MODULES: &[&str] = &[
     "ps/stage.rs",
 ];
 
+/// Concurrency-bearing modules checked whole-file since PR 8: a panic
+/// here poisons a lock or kills a pool worker, turning one bad frame
+/// into a hung shard — the same blast radius as the wire modules.
+const CONCURRENCY_MODULES: &[&str] = &["worker/pipeline.rs", "parallel/mod.rs"];
+
 const SCHEME_DECODE_FNS: &[&str] = &["decompress", "add_decompressed"];
 
 enum PanicScope {
@@ -335,13 +460,14 @@ enum PanicScope {
 /// the frozen scalar oracle (test-facing only) and `compress/ef.rs` is
 /// encode-side, so both are excluded entirely.
 fn panic_scope(file: &str) -> PanicScope {
-    if WIRE_MODULES.contains(&file) {
+    if WIRE_MODULES.contains(&file) || CONCURRENCY_MODULES.contains(&file) {
         return PanicScope::WholeFile;
     }
     match file {
         "compress/mod.rs" => PanicScope::Fns(&[
             "validate_wire",
             "from_u8",
+            "wire_id",
             "get_f32",
             "get_u32",
             "get_u64",
@@ -921,7 +1047,7 @@ fn check_wire_exhaustiveness(sources: &[(String, ScannedFile)], v: &mut Vec<Viol
     if let Some(compress) = get_source(sources, "compress/mod.rs", v, RULE_WIRE) {
         match enum_variants(compress, "SchemeId") {
             Some(variants) if !variants.is_empty() => {
-                for fn_name in ["from_u8", "validate_wire"] {
+                for fn_name in ["from_u8", "validate_wire", "wire_id"] {
                     require_idents_in_fn(
                         sources,
                         "compress/mod.rs",
@@ -1097,6 +1223,12 @@ fn get_block(p: &Pool) -> Buf {
 fn handle_inner(m: Message) -> u32 {
     match m { Message::A => 1, Message::B => 2 }
 }
+fn ordered(m: &Locks) {
+    let g = m.outer.lock().unwrap_or_else(|p| p.into_inner());
+    let h = m.inner.lock().unwrap_or_else(|p| p.into_inner());
+    drop(h);
+    drop(g);
+}
 ";
 
     const STATS_OK: &str = r#"
@@ -1125,6 +1257,9 @@ fn from_u8(v: u8) -> Option<SchemeId> {
 fn validate_wire(s: SchemeId) -> bool {
     matches!(s, SchemeId::Alpha | SchemeId::Beta)
 }
+fn wire_id(s: SchemeId) -> u8 {
+    match s { SchemeId::Alpha => 1, SchemeId::Beta => 2 }
+}
 ";
 
     const DESIGN_OK: &str = r"
@@ -1133,6 +1268,13 @@ fn validate_wire(s: SchemeId) -> bool {
 | --- | --- | --- | --- |
 | `frame::get_block` | bytes | `decode` | the decode job |
 <!-- /lint:pool-ownership -->
+
+<!-- lint:lock-order -->
+| rank | lock | recognizer | may acquire while held |
+| --- | --- | --- | --- |
+| 1 | fix.outer | `outer.lock` | fix.inner |
+| 2 | fix.inner | `inner.lock` |  |
+<!-- /lint:lock-order -->
 ";
 
     fn sources(extra: &[(&str, &str)]) -> Vec<(String, ScannedFile)> {
@@ -1303,5 +1445,254 @@ fn validate_wire(s: SchemeId) -> bool {
         let stats = STATS_OK.replace("pub pulls: u64 }", "pub pulls: u64, pub ghost: u64 }");
         let v = rules(&[("ps/stats.rs", &stats)], DESIGN_OK);
         assert!(v.iter().any(|x| x.rule == RULE_COUNTER && x.msg.contains("ghost")), "{v:?}");
+    }
+
+    #[test]
+    fn undeclared_lock_nesting_fails_and_lock_after_clears_it() {
+        let inverted = "\nfn inverted(m: &Locks) {\n    \
+             let h = m.inner.lock().unwrap_or_else(|p| p.into_inner());\n    \
+             let g = m.outer.lock().unwrap_or_else(|p| p.into_inner());\n    \
+             drop(g);\n    drop(h);\n}\n";
+        let core = format!("{CORE_OK}{inverted}");
+        let v = rules(&[("ps/core.rs", &core)], DESIGN_OK);
+        assert!(
+            v.iter().any(|x| {
+                x.rule == RULE_LOCK && x.msg.contains("no `fix.inner` → `fix.outer` edge")
+            }),
+            "{v:?}"
+        );
+        let annotated = inverted.replace(
+            "    let g = m.outer",
+            "    // lint: lock-after(fix.inner) — fixture: disjoint key spaces, \
+             inversion cannot cycle\n    let g = m.outer",
+        );
+        let core = format!("{CORE_OK}{annotated}");
+        let v = rules(&[("ps/core.rs", &core)], DESIGN_OK);
+        assert!(v.iter().all(|x| x.rule != RULE_LOCK && x.rule != RULE_ANN), "{v:?}");
+    }
+
+    #[test]
+    fn lock_after_naming_unknown_lock_fails() {
+        let core = format!(
+            "{CORE_OK}\nfn inverted(m: &Locks) {{\n    \
+             let h = m.inner.lock().unwrap_or_else(|p| p.into_inner());\n    \
+             // lint: lock-after(fix.ghost) — fixture reason\n    \
+             let g = m.outer.lock().unwrap_or_else(|p| p.into_inner());\n    \
+             drop(g);\n    drop(h);\n}}\n"
+        );
+        let v = rules(&[("ps/core.rs", &core)], DESIGN_OK);
+        assert!(
+            v.iter().any(|x| x.rule == RULE_LOCK && x.msg.contains("fix.ghost")),
+            "{v:?}"
+        );
+    }
+
+    #[test]
+    fn same_lock_reacquisition_fails() {
+        let core = format!(
+            "{CORE_OK}\nfn twice(m: &Locks) {{\n    \
+             let g = m.outer.lock().unwrap_or_else(|p| p.into_inner());\n    \
+             let g2 = m.outer.lock().unwrap_or_else(|p| p.into_inner());\n    \
+             drop(g2);\n    drop(g);\n}}\n"
+        );
+        let v = rules(&[("ps/core.rs", &core)], DESIGN_OK);
+        assert!(v.iter().any(|x| x.rule == RULE_LOCK && x.msg.contains("re-acquired")), "{v:?}");
+    }
+
+    #[test]
+    fn unclassified_lock_acquisition_fails() {
+        let core = format!(
+            "{CORE_OK}\nfn mystery(m: &Locks) {{\n    \
+             let q = m.mystery.lock().unwrap_or_else(|p| p.into_inner());\n    drop(q);\n}}\n"
+        );
+        let v = rules(&[("ps/core.rs", &core)], DESIGN_OK);
+        assert!(
+            v.iter().any(|x| x.rule == RULE_LOCK && x.msg.contains("no recognizer")),
+            "{v:?}"
+        );
+    }
+
+    #[test]
+    fn stale_declared_edge_and_rank_inversion_are_errors() {
+        let design = DESIGN_OK.replace(
+            "| 2 | fix.inner | `inner.lock` |  |",
+            "| 2 | fix.inner | `inner.lock` | fix.third |\n| 3 | fix.third | `third.lock` |  |",
+        );
+        let v = rules(&[], &design);
+        assert!(
+            v.iter().any(|x| x.rule == RULE_LOCK && x.msg.contains("witnessed by no")),
+            "{v:?}"
+        );
+        let design = DESIGN_OK.replace(
+            "| 2 | fix.inner | `inner.lock` |  |",
+            "| 2 | fix.inner | `inner.lock` | fix.outer |",
+        );
+        let v = rules(&[], &design);
+        assert!(
+            v.iter().any(|x| x.rule == RULE_LOCK && x.msg.contains("rank monotonicity")),
+            "{v:?}"
+        );
+    }
+
+    #[test]
+    fn missing_lock_table_markers_is_an_error() {
+        let design = DESIGN_OK
+            .replace("<!-- lint:lock-order -->", "")
+            .replace("<!-- /lint:lock-order -->", "");
+        let v = rules(&[], &design);
+        assert!(
+            v.iter().any(|x| x.rule == RULE_LOCK && x.msg.contains("not found")),
+            "{v:?}"
+        );
+    }
+
+    #[test]
+    fn blocking_under_guard_fails_and_drop_or_annotation_clears_it() {
+        let core = format!(
+            "{CORE_OK}\nfn stall(m: &Locks, ch: &Chan) {{\n    \
+             let g = m.outer.lock().unwrap_or_else(|p| p.into_inner());\n    \
+             let x = ch.recv();\n    drop(g);\n    x\n}}\n"
+        );
+        let v = rules(&[("ps/core.rs", &core)], DESIGN_OK);
+        assert!(
+            v.iter().any(|x| x.rule == RULE_BLOCK && x.msg.contains("recv")),
+            "{v:?}"
+        );
+        // Narrowing the guard with an explicit drop is the preferred fix…
+        let core = format!(
+            "{CORE_OK}\nfn stall(m: &Locks, ch: &Chan) {{\n    \
+             let g = m.outer.lock().unwrap_or_else(|p| p.into_inner());\n    \
+             drop(g);\n    ch.recv()\n}}\n"
+        );
+        let v = rules(&[("ps/core.rs", &core)], DESIGN_OK);
+        assert!(v.iter().all(|x| x.rule != RULE_BLOCK), "{v:?}");
+        // …and a reasoned annotation is the fallback.
+        let core = format!(
+            "{CORE_OK}\nfn stall(m: &Locks, ch: &Chan) {{\n    \
+             let g = m.outer.lock().unwrap_or_else(|p| p.into_inner());\n    \
+             // lint: allow(block) — fixture: sender never blocks on this lock\n    \
+             let x = ch.recv();\n    drop(g);\n    x\n}}\n"
+        );
+        let v = rules(&[("ps/core.rs", &core)], DESIGN_OK);
+        assert!(v.iter().all(|x| x.rule != RULE_BLOCK && x.rule != RULE_ANN), "{v:?}");
+    }
+
+    #[test]
+    fn fn_level_allow_block_covers_whole_body() {
+        let core = format!(
+            "{CORE_OK}\n// lint: allow(block, fn) — fixture: the whole fn is a blocking drain\n\
+             fn drain(m: &Locks, ch: &Chan) {{\n    \
+             let g = m.outer.lock().unwrap_or_else(|p| p.into_inner());\n    \
+             ch.recv();\n    ch.recv_timeout(t);\n    drop(g);\n}}\n"
+        );
+        let v = rules(&[("ps/core.rs", &core)], DESIGN_OK);
+        assert!(v.iter().all(|x| x.rule != RULE_BLOCK && x.rule != RULE_ANN), "{v:?}");
+    }
+
+    #[test]
+    fn rent_inside_job_with_give_outside_fails() {
+        let worker = format!(
+            "{WORKER_OK}\nfn fanout(p: &Pool, tp: &TP) {{\n    \
+             tp.execute(move || {{ let b = p.rent_f32(4); stage(b); }});\n    \
+             let c = take();\n    p.give_f32(c);\n}}\n"
+        );
+        let v = rules(&[("worker/mod.rs", &worker)], DESIGN_OK);
+        assert!(
+            v.iter().any(|x| x.rule == RULE_CROSS && x.msg.contains("outside the job closure")),
+            "{v:?}"
+        );
+        let worker = format!(
+            "{WORKER_OK}\nfn fanout(p: &Pool, tp: &TP) {{\n    \
+             tp.execute(move || {{ let b = p.rent_f32(4); p.give_f32(b); }});\n}}\n"
+        );
+        let v = rules(&[("worker/mod.rs", &worker)], DESIGN_OK);
+        assert!(v.iter().all(|x| x.rule != RULE_CROSS && x.rule != RULE_POOL), "{v:?}");
+    }
+
+    #[test]
+    fn buffer_captured_by_job_must_be_given_inside_it() {
+        let worker = format!(
+            "{WORKER_OK}\nfn handoff(p: &Pool, tp: &TP) {{\n    \
+             let b = p.rent_f32(4);\n    \
+             tp.execute(move || stage(b));\n    p.give_f32(q);\n}}\n"
+        );
+        let v = rules(&[("worker/mod.rs", &worker)], DESIGN_OK);
+        assert!(
+            v.iter().any(|x| x.rule == RULE_CROSS && x.msg.contains("captured")),
+            "{v:?}"
+        );
+        let worker = format!(
+            "{WORKER_OK}\nfn handoff(p: &Pool, tp: &TP) {{\n    \
+             let b = p.rent_f32(4);\n    \
+             tp.execute(move || {{ stage(&b); p.give_f32(b); }});\n}}\n"
+        );
+        let v = rules(&[("worker/mod.rs", &worker)], DESIGN_OK);
+        assert!(v.iter().all(|x| x.rule != RULE_CROSS && x.rule != RULE_POOL), "{v:?}");
+    }
+
+    #[test]
+    fn bare_cast_fails_and_widening_annotation_clears_it() {
+        let comm = format!("{COMM_OK}\nfn widen(x: u32) -> u64 {{ x as u64 }}\n");
+        let v = rules(&[("comm/mod.rs", &comm)], DESIGN_OK);
+        assert!(v.iter().any(|x| x.rule == RULE_CAST && x.msg.contains("bare `as u64`")), "{v:?}");
+        let comm = format!(
+            "{COMM_OK}\nfn widen(x: u32) -> u64 {{\n    \
+             // lint: allow(cast: u32 -> u64) — fixture: widening\n    x as u64\n}}\n"
+        );
+        let v = rules(&[("comm/mod.rs", &comm)], DESIGN_OK);
+        assert!(v.iter().all(|x| x.rule != RULE_CAST && x.rule != RULE_ANN), "{v:?}");
+    }
+
+    #[test]
+    fn narrowing_cast_needs_trunc_and_matching_dst() {
+        let comm = format!(
+            "{COMM_OK}\nfn narrow(x: u64) -> u32 {{\n    \
+             // lint: allow(cast: u64 -> u32) — fixture\n    x as u32\n}}\n"
+        );
+        let v = rules(&[("comm/mod.rs", &comm)], DESIGN_OK);
+        assert!(
+            v.iter().any(|x| x.rule == RULE_CAST && x.msg.contains("not a widening")),
+            "{v:?}"
+        );
+        let comm = format!(
+            "{COMM_OK}\nfn narrow(x: u64) -> u32 {{\n    \
+             // lint: allow(cast: u64 -> u32, trunc) — fixture: masked to 24 bits upstream\n    \
+             x as u32\n}}\n"
+        );
+        let v = rules(&[("comm/mod.rs", &comm)], DESIGN_OK);
+        assert!(v.iter().all(|x| x.rule != RULE_CAST && x.rule != RULE_ANN), "{v:?}");
+        let comm = format!(
+            "{COMM_OK}\nfn drifted(x: u32) -> usize {{\n    \
+             // lint: allow(cast: u32 -> u64) — fixture\n    x as usize\n}}\n"
+        );
+        let v = rules(&[("comm/mod.rs", &comm)], DESIGN_OK);
+        assert!(v.iter().any(|x| x.rule == RULE_CAST && x.msg.contains("drifted")), "{v:?}");
+    }
+
+    #[test]
+    fn cast_annotation_grammar_edges_are_errors() {
+        let comm = format!(
+            "{COMM_OK}\nfn bad(x: u64) -> u32 {{\n    \
+             // lint: allow(cast: u64 ->) — fixture\n    x as u32\n}}\n"
+        );
+        let v = rules(&[("comm/mod.rs", &comm)], DESIGN_OK);
+        assert!(
+            v.iter().any(|x| x.rule == RULE_ANN && x.msg.contains("destination")),
+            "{v:?}"
+        );
+        let comm = format!(
+            "{COMM_OK}\nfn bad(x: u64) -> u32 {{\n    \
+             // lint: allow(cast: u64 -> u32, always) — fixture\n    x as u32\n}}\n"
+        );
+        let v = rules(&[("comm/mod.rs", &comm)], DESIGN_OK);
+        assert!(
+            v.iter().any(|x| x.rule == RULE_ANN && x.msg.contains("unknown cast qualifier")),
+            "{v:?}"
+        );
+        let core = format!(
+            "{CORE_OK}\n// lint: lock-after(fix.outer)\nfn f() {{}}\n"
+        );
+        let v = rules(&[("ps/core.rs", &core)], DESIGN_OK);
+        assert!(v.iter().any(|x| x.rule == RULE_ANN && x.msg.contains("reason")), "{v:?}");
     }
 }

@@ -225,12 +225,16 @@ impl ScannedFile {
                 .get(ln + 1)
                 .map(|&e| e - 1)
                 .unwrap_or(self.src.len());
-            let mut text = String::new();
+            let mut bytes = Vec::new();
             for i in start..end {
                 if self.class[i] == Class::Comment {
-                    text.push(b[i] as char);
+                    bytes.push(b[i]);
                 }
             }
+            // Decode as UTF-8, not per-byte: annotation reasons are
+            // marked with an em dash, which a byte-wise `as char`
+            // expansion would mangle into three Latin-1 chars.
+            let text = String::from_utf8_lossy(&bytes);
             let trimmed = text.trim_start_matches(['/', '!']).trim();
             if !trimmed.is_empty() {
                 out.push(LineComment {
@@ -553,5 +557,8 @@ mod tests {
         let cs = sf.line_comments();
         assert!(cs.iter().any(|c| c.line == 1 && c.text.starts_with("lint: allow(panic)")));
         assert!(cs.iter().any(|c| c.line == 2 && c.text.starts_with("doc about")));
+        // The em dash must survive as one char — the annotation grammar's
+        // reason marker depends on it.
+        assert!(cs.iter().any(|c| c.line == 1 && c.text.contains('—')), "{cs:?}");
     }
 }

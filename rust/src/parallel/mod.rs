@@ -59,7 +59,12 @@ impl ThreadPool {
                     .name(format!("bytepsc-pool-{i}"))
                     .spawn(move || loop {
                         let job = {
-                            let rx = rx.lock().unwrap();
+                            // Poison recovery (here and on the counters
+                            // below): a Receiver / plain usize holds no
+                            // half-updatable invariant, and one panicking
+                            // job must not wedge every pool worker.
+                            let rx = rx.lock().unwrap_or_else(|p| p.into_inner());
+                            // lint: allow(block) — the workers serialize on the shared job Receiver; holding the lock across recv IS the queue hand-off (exactly one worker parks on the channel)
                             rx.recv()
                         };
                         match job {
@@ -69,7 +74,7 @@ impl ThreadPool {
                                 if result.is_err() {
                                     pending.panicked.fetch_add(1, Ordering::SeqCst);
                                 }
-                                let mut c = pending.count.lock().unwrap();
+                                let mut c = pending.count.lock().unwrap_or_else(|p| p.into_inner());
                                 *c -= 1;
                                 if *c == 0 {
                                     pending.cv.notify_all();
@@ -78,6 +83,7 @@ impl ThreadPool {
                             Err(_) => break, // pool dropped
                         }
                     })
+                    // lint: allow(panic) — construction-time only: failing to spawn a pool worker is a startup configuration error, not a runtime input
                     .expect("spawn pool worker"),
             );
         }
@@ -97,21 +103,24 @@ impl ThreadPool {
     /// Submit an owned job (inter-task parallelism).
     pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
         {
-            let mut c = self.pending.count.lock().unwrap();
+            let mut c = self.pending.count.lock().unwrap_or_else(|p| p.into_inner());
             *c += 1;
         }
         self.tx
             .as_ref()
+            // lint: allow(panic) — `tx` is Some for the pool's whole life; it is only taken in Drop, after which no caller can hold &self
             .expect("pool alive")
             .send(Box::new(f))
+            // lint: allow(panic) — workers only exit when the sender disconnects (Drop); a send failure while the pool is alive is a pool bug, not load
             .expect("pool worker alive");
     }
 
     /// Block until every submitted job has completed.
     pub fn wait(&self) {
-        let mut c = self.pending.count.lock().unwrap();
+        let mut c = self.pending.count.lock().unwrap_or_else(|p| p.into_inner());
         while *c > 0 {
-            c = self.pending.cv.wait(c).unwrap();
+            // lint: allow(block) — Condvar::wait atomically releases the guard it consumes; the lock is not held while parked
+            c = self.pending.cv.wait(c).unwrap_or_else(|p| p.into_inner());
         }
     }
 
@@ -196,6 +205,7 @@ where
             rest = tail;
         }
         for h in handles {
+            // lint: allow(panic) — re-raising a chunk worker's panic on the caller thread is the scoped-thread contract; swallowing it would return corrupt data
             h.join().expect("parallel_for_chunks worker panicked");
         }
     });
@@ -219,12 +229,14 @@ where
         let mut off = 0;
         while off < n {
             let end = (off + chunk).min(n);
+            // lint: allow(index) — `end` is min-clamped to `n` and `off < n` by the loop guard
             let slice = &data[off..end];
             let fr = &f;
             let o = off;
             handles.push(s.spawn(move || fr(o, slice)));
             off = end;
         }
+        // lint: allow(panic) — same scoped-thread contract as parallel_for_chunks: a chunk panic must not yield a short result vector
         handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
     })
 }
@@ -254,16 +266,17 @@ impl Semaphore {
 
     /// Block until a permit is available, then take it.
     pub fn acquire(&self) {
-        let mut p = self.permits.lock().unwrap();
+        let mut p = self.permits.lock().unwrap_or_else(|p| p.into_inner());
         while *p == 0 {
-            p = self.cv.wait(p).unwrap();
+            // lint: allow(block) — Condvar::wait atomically releases the guard it consumes; the lock is not held while parked
+            p = self.cv.wait(p).unwrap_or_else(|p| p.into_inner());
         }
         *p -= 1;
     }
 
     /// Return a permit.
     pub fn release(&self) {
-        let mut p = self.permits.lock().unwrap();
+        let mut p = self.permits.lock().unwrap_or_else(|p| p.into_inner());
         *p += 1;
         self.cv.notify_one();
     }

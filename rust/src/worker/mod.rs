@@ -576,6 +576,7 @@ impl WorkerComm {
                                 pool.execute(move || {
                                     let t = std::time::Instant::now();
                                     let bp = crate::comm::BufPool::global();
+                                    // lint: transfers(pull-scatter)
                                     let mut buf = bp.rent_f32(data.n);
                                     comp.decompress(&data, &mut buf);
                                     dns.fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
