@@ -190,6 +190,7 @@ fn run_shard(
         iter_deadline: None,
         compress_threads,
         deadline_auto_margin: 0.0,
+        adaptive_bounds: None,
     };
     // Pre-compress every (worker, key, iter) block OUTSIDE the clock so
     // the wall time isolates the server shard, not worker-side CPU —

@@ -102,6 +102,32 @@ fn main() {
         markdown_table(&["compression", "1 node", "2 nodes", "4 nodes", "8 nodes"], &rows)
     );
 
+    // Adaptive-controller projection: a run whose per-key keep ratio ramps
+    // from `adaptive.k_min` toward `adaptive.k_max` (the controller's
+    // geometric step rule) spends its mean step time between the two
+    // static endpoints — the cost of starting conservative and ratcheting
+    // up only where the measured gain demands it.
+    println!("\n# Adaptive controller — projected top-k ramp k_min -> k_max (mean step time)\n");
+    let mut w_ad = Workload::vgg16();
+    w_ad.overlap = 0.0;
+    let c8 = {
+        let mut c = Cluster::default();
+        c.nodes = 8;
+        c
+    };
+    let mut rows = Vec::new();
+    for (label, lo, hi) in [
+        ("static k=0.001", 0.001, 0.001),
+        ("adaptive 0.001 -> 0.01", 0.001, 0.01),
+        ("adaptive 0.001 -> 0.05", 0.001, 0.05),
+        ("static k=0.05", 0.05, 0.05),
+    ] {
+        let traj = simnet::ratio_trajectory(lo, hi, 16);
+        let t = simnet::trajectory_mean_step_time(&w_ad, &c8, "topk", &traj);
+        rows.push(vec![label.to_string(), format!("{:.1} ms", t * 1e3)]);
+    }
+    println!("{}", markdown_table(&["trajectory", "mean step @8 nodes"], &rows));
+
     // Degraded-round sensitivity: scaling efficiency with occasional push
     // loss absorbed by the server's iteration deadline (strict BSP would
     // not scale at all — one lost push hangs the run).

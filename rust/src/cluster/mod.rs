@@ -10,18 +10,30 @@
 //!
 //! ```text
 //! worker                                server shard s
-//!   | -- Hello { worker: rank, n_keys } -->|   validate rank + key count
+//!   | -- Hello { worker: rank, n_keys,     |   validate rank + key count
+//!   |            config,                   |   + config fingerprint
+//!   |            k_min_ppm, k_max_ppm } -->|   + requested k bounds
 //!   | <-- Welcome { n_workers, shard: s,   |
-//!   |               seed, plan } ----------|   full (key -> shard) plan
+//!   |               seed,                  |
+//!   |               k_min_ppm, k_max_ppm,  |   granted k bounds (request
+//!   |               plan } ----------------|   clamped into the server's
+//!   |                                      |   envelope); full plan
 //! ```
 //!
-//! The worker *adopts* the run seed and the shard plan from the servers
-//! instead of assuming co-located construction, and cross-checks that all
-//! shards report the same `(n_workers, seed, plan)` and that shard `s`
-//! really was the `s`-th address in `--servers` (the plan's shard indices
-//! are meaningless if the address order disagrees). A malformed or silent
-//! connection is dropped by the server after a read timeout — it never
-//! blocks the accept loop forever, and never reaches the aggregator.
+//! The worker *adopts* the run seed, the shard plan, and the **granted
+//! adaptive bounds** from the servers instead of assuming co-located
+//! construction, and cross-checks that all shards report the same
+//! `(n_workers, seed, bounds, plan)` and that shard `s` really was the
+//! `s`-th address in `--servers` (the plan's shard indices are
+//! meaningless if the address order disagrees). The bounds negotiation:
+//! `Hello` carries the keep-ratio range the worker's adaptive controller
+//! *requests* (ppm; `(0, 0)` = static), each server clamps it into its
+//! own configured `adaptive.{k_min,k_max}` envelope, and the worker's
+//! controller honors the granted range — the server's ingress counts any
+//! per-block `k` outside its envelope as `bounds_rejected` and drops the
+//! push (see `crate::ps`). A malformed or silent connection is dropped by
+//! the server after a read timeout — it never blocks the accept loop
+//! forever, and never reaches the aggregator.
 //!
 //! ## Shutdown
 //!
@@ -58,9 +70,9 @@ use std::time::Duration;
 /// — it never blocks the accept loop or other registrations.
 pub const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(30);
 
-/// Frame cap for the `Hello` recv (the real frame is 25 bytes): the
-/// server must not allocate an attacker-chosen buffer before the peer has
-/// identified itself.
+/// Frame cap for the `Hello` recv (the real frame is 33 bytes: 4 length +
+/// 29 body incl. the adaptive-bounds pair): the server must not allocate
+/// an attacker-chosen buffer before the peer has identified itself.
 pub const HELLO_FRAME_CAP: usize = 64;
 
 /// How long a worker keeps retrying a server address at startup.
@@ -69,14 +81,16 @@ pub const CONNECT_TIMEOUT: Duration = Duration::from_secs(30);
 /// Fingerprint of everything both ends of the wire must agree on beyond
 /// the partition size: the frame wire-format version
 /// ([`crate::comm::frame::WIRE_VERSION`]), compressor scheme/param, sync
-/// mode, fusion, size threshold, and pipeline shape. Sent in `Hello` and
-/// checked at registration, so a mismatched launch (say, identity
-/// servers vs top-k workers — or a pre-`served_with` binary against a
-/// post-`served_with` fleet) is rejected loudly instead of training on
-/// silently wrong aggregates.
+/// mode, fusion, size threshold, pipeline shape, and whether the adaptive
+/// controller is on (its *bounds* ride in `Hello`/`Welcome` explicitly —
+/// only the on/off bit must match, so an adaptive worker never registers
+/// against a static fleet). Sent in `Hello` and checked at registration,
+/// so a mismatched launch (say, identity servers vs top-k workers — or a
+/// pre-`served_with` binary against a post-`served_with` fleet) is
+/// rejected loudly instead of training on silently wrong aggregates.
 pub fn config_fingerprint(cfg: &TrainConfig) -> u64 {
     let canon = format!(
-        "wire{}|{}|{}|{}|{}|{}|{}|{}|{}|{}",
+        "wire{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|adaptive{}",
         crate::comm::frame::WIRE_VERSION,
         cfg.compression.scheme,
         cfg.compression.param.to_bits(),
@@ -87,6 +101,7 @@ pub fn config_fingerprint(cfg: &TrainConfig) -> u64 {
         cfg.system.size_threshold_on,
         cfg.pipeline.enabled,
         cfg.pipeline.block_bytes,
+        cfg.adaptive.enabled,
     );
     // FNV-1a over the canonical string, finished through SplitMix64.
     let mut h: u64 = 0xcbf2_9ce4_8422_2325;
@@ -153,17 +168,21 @@ pub fn synthetic_grad(seed: u64, worker: u32, iter: u64, dim: usize) -> Vec<f32>
 }
 
 /// Accept-side handshake: expect a (size-capped) `Hello` within
-/// [`HANDSHAKE_TIMEOUT`] per read, validate it, *claim the rank* in
-/// `claimed`, then reply with the prebuilt `Welcome`. Claiming before
-/// replying means a duplicate rank is rejected at the protocol level —
-/// the loser's connection closes before it ever believes it registered.
-/// Any failure just drops this connection — registration keeps going.
+/// [`HANDSHAKE_TIMEOUT`] per read, validate it (rank, key count, config
+/// fingerprint, and the requested adaptive bounds), *claim the rank* in
+/// `claimed`, then reply with the prebuilt `Welcome` patched with this
+/// worker's **granted** bounds — the request clamped into `envelope`
+/// (`None` = static server, grants `(0, 0)`). Claiming before replying
+/// means a duplicate rank is rejected at the protocol level — the loser's
+/// connection closes before it ever believes it registered. Any failure
+/// just drops this connection — registration keeps going.
 fn handshake_accept(
     stream: TcpStream,
     n_workers: usize,
     n_keys: u64,
     config: u64,
-    welcome: Message,
+    envelope: Option<(u32, u32)>,
+    mut welcome: Message,
     claimed: &Mutex<Vec<bool>>,
 ) -> std::result::Result<(usize, TcpEndpoint), String> {
     // A listener in non-blocking mode may hand out non-blocking streams on
@@ -173,7 +192,9 @@ fn handshake_accept(
     ep.set_read_timeout(Some(HANDSHAKE_TIMEOUT)).map_err(|e| e.to_string())?;
     let hello = ep.recv_bounded(HELLO_FRAME_CAP).map_err(|e| format!("waiting for Hello: {e}"))?;
     ep.set_read_timeout(None).map_err(|e| e.to_string())?;
-    let Message::Hello { worker, n_keys: got_keys, config: got_config } = hello else {
+    let Message::Hello { worker, n_keys: got_keys, config: got_config, k_min_ppm, k_max_ppm } =
+        hello
+    else {
         return Err("first frame was not Hello".into());
     };
     if worker as usize >= n_workers {
@@ -189,8 +210,40 @@ fn handshake_accept(
         return Err(format!(
             "worker {worker}'s compression/pipeline config fingerprint {got_config:#x} \
              does not match this server's {config:#x} — launch flags disagree \
-             (scheme/param/sync/threshold/pipeline)"
+             (scheme/param/sync/threshold/pipeline/adaptive)"
         ));
+    }
+    // Bounds negotiation. The fingerprint already pinned `adaptive.enabled`
+    // (and scheme/sync), so a static request against an adaptive envelope —
+    // or the reverse — is a hostile or corrupted Hello, not a config skew.
+    let req = (k_min_ppm, k_max_ppm);
+    let granted = match envelope {
+        Some(env) => {
+            if req == (0, 0) {
+                return Err(format!(
+                    "worker {worker} requested static compression against an adaptive server"
+                ));
+            }
+            if k_min_ppm == 0 || k_min_ppm > k_max_ppm || k_max_ppm > 1_000_000 {
+                return Err(format!(
+                    "worker {worker}'s adaptive bounds request [{k_min_ppm}, {k_max_ppm}] ppm \
+                     is malformed (need 0 < min <= max <= 1000000)"
+                ));
+            }
+            crate::compress::controller::clamp_bounds(req, env)
+        }
+        None => {
+            if req != (0, 0) {
+                return Err(format!(
+                    "worker {worker} requested adaptive bounds [{k_min_ppm}, {k_max_ppm}] ppm \
+                     against a static server"
+                ));
+            }
+            (0, 0)
+        }
+    };
+    if let Message::Welcome { k_min_ppm: lo, k_max_ppm: hi, .. } = &mut welcome {
+        (*lo, *hi) = granted;
     }
     {
         let mut c = claimed.lock().unwrap();
@@ -235,10 +288,21 @@ pub fn serve(
     let n_workers = spec.n_workers;
     let n_keys = spec.partition.len() as u64;
     let config = config_fingerprint(cfg);
+    // This shard's adaptive envelope: its own configured request. Every
+    // shard derives it from the same config, so all shards grant the same
+    // clamped bounds to a given worker (the worker cross-checks).
+    let envelope = {
+        let env = crate::compress::controller::requested_bounds(cfg);
+        (env != (0, 0)).then_some(env)
+    };
+    // Template Welcome; handshake_accept patches in the per-worker granted
+    // bounds before sending.
     let welcome = Message::Welcome {
         n_workers: n_workers as u32,
         shard: shard as u32,
         seed: cfg.seed,
+        k_min_ppm: 0,
+        k_max_ppm: 0,
         plan: spec.plan.assignments(),
     };
 
@@ -267,7 +331,8 @@ pub fn serve(
                             // in a closed channel.
                             std::thread::spawn(move || {
                                 match handshake_accept(
-                                    stream, n_workers, n_keys, config, welcome, &claimed,
+                                    stream, n_workers, n_keys, config, envelope, welcome,
+                                    &claimed,
                                 ) {
                                     Ok(pair) => {
                                         let _ = tx.send(pair);
@@ -394,20 +459,27 @@ pub fn run_worker(
         anyhow::bail!("--rank {rank} out of range: the config derives {} workers", spec.n_workers);
     }
 
-    // Connect + register with every shard; adopt (seed, plan) from the
-    // servers and insist all shards agree.
+    // Connect + register with every shard; adopt (seed, bounds, plan) from
+    // the servers and insist all shards agree.
     let config = config_fingerprint(&cfg);
+    let requested = crate::compress::controller::requested_bounds(&cfg);
     // The Welcome's size is known up front (header + 12 bytes per plan
     // entry); cap the read so a mis-dialed port or hostile listener
     // cannot make this worker allocate an attacker-chosen buffer.
     let welcome_cap = 64 + 12 * spec.partition.len();
     let mut endpoints: Vec<Box<dyn Endpoint>> = Vec::with_capacity(servers.len());
-    let mut adopted: Option<(u32, u64, Vec<(Key, u32)>)> = None;
+    let mut adopted: Option<(u32, u64, (u32, u32), Vec<(Key, u32)>)> = None;
     for (s, addr) in servers.iter().enumerate() {
         let ep = connect_retry(addr, CONNECT_TIMEOUT)
             .with_context(|| format!("worker {rank}: server shard {s}"))?;
-        ep.send(Message::Hello { worker: rank, n_keys: spec.partition.len() as u64, config })
-            .map_err(|e| anyhow::anyhow!("worker {rank}: hello to {addr}: {e}"))?;
+        ep.send(Message::Hello {
+            worker: rank,
+            n_keys: spec.partition.len() as u64,
+            config,
+            k_min_ppm: requested.0,
+            k_max_ppm: requested.1,
+        })
+        .map_err(|e| anyhow::anyhow!("worker {rank}: hello to {addr}: {e}"))?;
         // Bounded wait: a server that accepted but never answers (or a
         // mis-dialed port speaking another protocol) should fail the
         // launch loudly, not hang it.
@@ -418,7 +490,8 @@ pub fn run_worker(
             .map_err(|e| anyhow::anyhow!("worker {rank}: no Welcome from {addr}: {e}"))?;
         ep.set_read_timeout(None)
             .map_err(|e| anyhow::anyhow!("worker {rank}: clear timeout: {e}"))?;
-        let Message::Welcome { n_workers, shard, seed, plan } = welcome else {
+        let Message::Welcome { n_workers, shard, seed, k_min_ppm, k_max_ppm, plan } = welcome
+        else {
             anyhow::bail!("worker {rank}: {addr} replied with something other than Welcome");
         };
         if shard as usize != s {
@@ -433,20 +506,33 @@ pub fn run_worker(
                 spec.n_workers
             );
         }
-        if let Some((_, seed0, plan0)) = &adopted {
+        let granted = (k_min_ppm, k_max_ppm);
+        if requested == (0, 0) && granted != (0, 0) {
+            anyhow::bail!(
+                "worker {rank}: {addr} granted adaptive bounds to a static request — \
+                 protocol violation"
+            );
+        }
+        if let Some((_, seed0, granted0, plan0)) = &adopted {
             if *seed0 != seed {
                 anyhow::bail!("worker {rank}: shards disagree on the run seed");
+            }
+            if *granted0 != granted {
+                anyhow::bail!(
+                    "worker {rank}: shards disagree on the granted adaptive bounds \
+                     ({granted0:?} vs {granted:?} ppm) — launch configs disagree"
+                );
             }
             if *plan0 != plan {
                 anyhow::bail!("worker {rank}: shards disagree on the shard plan");
             }
         } else {
-            adopted = Some((n_workers, seed, plan));
+            adopted = Some((n_workers, seed, granted, plan));
         }
         endpoints.push(Box::new(ep) as Box<dyn Endpoint>);
         eprintln!("worker {rank}: registered with shard {s} at {addr}");
     }
-    let (_, seed, plan_entries) = adopted.expect("at least one server");
+    let (_, seed, granted, plan_entries) = adopted.expect("at least one server");
     let plan = Arc::new(
         ShardPlan::from_assignments(&plan_entries, servers.len()).map_err(anyhow::Error::msg)?,
     );
@@ -460,7 +546,14 @@ pub fn run_worker(
         }
     }
 
-    let mut wc = spec.worker_comm(&cfg, rank, seed, endpoints, plan);
+    // The controller honors the *granted* bounds adopted from the servers
+    // (which may be narrower than this worker's config requested).
+    let adaptive = crate::compress::controller::from_negotiated(&cfg, granted);
+    if let Some(ctl) = &adaptive {
+        let (lo, hi) = ctl.bounds_ppm();
+        eprintln!("worker {rank}: adaptive compression on, granted k in [{lo}, {hi}] ppm");
+    }
+    let mut wc = spec.worker_comm(&cfg, rank, seed, endpoints, plan, adaptive);
     if let Some(d) = drop {
         if !spec.partition.subs().iter().any(|sb| sb.key == d.key) {
             anyhow::bail!(
@@ -633,6 +726,20 @@ mod tests {
         let mut c = base.clone();
         c.system.size_threshold_on = !c.system.size_threshold_on;
         assert_ne!(f, config_fingerprint(&c));
+        // Adaptive on/off must match fleet-wide (it changes what Hello
+        // requests and what the server's ingress enforces)…
+        let mut c = base.clone();
+        c.adaptive.enabled = true;
+        assert_ne!(f, config_fingerprint(&c));
+        // …but the *bounds* themselves are negotiated explicitly in the
+        // handshake, so they must NOT move the fingerprint (a worker with
+        // a narrower request still registers and gets it clamped).
+        let mut c = base.clone();
+        c.adaptive.k_min = 0.002;
+        c.adaptive.k_max = 0.9;
+        c.adaptive.ema = 0.9;
+        c.adaptive.target_gain = 0.5;
+        assert_eq!(f, config_fingerprint(&c));
         // …while per-process knobs (rank, threads, addresses, the
         // server's iteration deadline + auto-tuning + staged pipeline,
         // worker ack windowing) don't: the bytes on the wire mean the

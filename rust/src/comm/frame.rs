@@ -9,7 +9,9 @@
 //! PullResp  body := [key u64][iter u64][served u16][block]
 //! Ack       body := [key u64][iter u64]
 //! Hello     body := [worker u32][n_keys u64][config u64]
-//! Welcome   body := [n_workers u32][shard u32][seed u64][count u32]
+//!                   [k_min_ppm u32][k_max_ppm u32]
+//! Welcome   body := [n_workers u32][shard u32][seed u64]
+//!                   [k_min_ppm u32][k_max_ppm u32][count u32]
 //!                   ([key u64][server u32]) * count
 //! Shutdown  body := (empty)
 //! block := [scheme u8][n u64][payload_len u32][payload …]
@@ -19,10 +21,13 @@
 //! The `key` field carries the pipeline's block sub-key (§4.2.1): tensor id
 //! in the low 40 bits, block index in the high 24. A whole tensor is block
 //! 0, so pre-pipeline keys decode unchanged. `Hello`/`Welcome` are the
-//! cluster-mode registration handshake (see `crate::cluster`). The
-//! `served` count on `PullResp` is the number of worker contributions in
-//! the aggregate — smaller than the run's worker count when the server's
-//! iteration deadline completed the round degraded (see `crate::ps`).
+//! cluster-mode registration handshake (see `crate::cluster`); their
+//! `k_min_ppm`/`k_max_ppm` pair carries the adaptive-compression bounds
+//! negotiation — requested on `Hello`, granted (server-clamped) on
+//! `Welcome`, `(0, 0)` meaning a static run. The `served` count on
+//! `PullResp` is the number of worker contributions in the aggregate —
+//! smaller than the run's worker count when the server's iteration
+//! deadline completed the round degraded (see `crate::ps`).
 //!
 //! Decoding validates the block payload against its scheme
 //! ([`crate::compress::validate_wire`]): a corrupt or malicious frame —
@@ -48,11 +53,13 @@ use crate::compress::{Compressed, SchemeId};
 pub const MAX_FRAME_LEN: usize = 1 << 30;
 
 /// Wire-format version, bumped whenever a frame layout changes
-/// incompatibly (v2: `PullResp` gained the `served_with: u16` field).
-/// Folded into the cluster registration fingerprint
-/// (`cluster::config_fingerprint`) so mixed-version binaries fail loudly
-/// at the handshake instead of misparsing each other's frames mid-run.
-pub const WIRE_VERSION: u32 = 2;
+/// incompatibly (v2: `PullResp` gained the `served_with: u16` field;
+/// v3: `Hello`/`Welcome` gained the `k_min_ppm`/`k_max_ppm`
+/// adaptive-bounds negotiation fields). Folded into the cluster
+/// registration fingerprint (`cluster::config_fingerprint`) so
+/// mixed-version binaries fail loudly at the handshake instead of
+/// misparsing each other's frames mid-run.
+pub const WIRE_VERSION: u32 = 3;
 
 const TAG_PUSH: u8 = 1;
 const TAG_PULL: u8 = 2;
@@ -166,8 +173,8 @@ pub fn body_len(msg: &Message) -> usize {
         Message::Pull { .. } => 1 + 8 + 8 + 4,
         Message::PullResp { data, .. } => 1 + 8 + 8 + 2 + block_len(data),
         Message::Ack { .. } => 1 + 8 + 8,
-        Message::Hello { .. } => 1 + 4 + 8 + 8,
-        Message::Welcome { plan, .. } => 1 + 4 + 4 + 8 + 4 + 12 * plan.len(),
+        Message::Hello { .. } => 1 + 4 + 8 + 8 + 4 + 4,
+        Message::Welcome { plan, .. } => 1 + 4 + 4 + 8 + 4 + 4 + 4 + 12 * plan.len(),
         Message::Shutdown => 1,
     }
 }
@@ -221,17 +228,21 @@ fn encode_body_into(msg: &Message, b: &mut Vec<u8>) -> Result<(), CommError> {
             put_u64(b, *key);
             put_u64(b, *iter);
         }
-        Message::Hello { worker, n_keys, config } => {
+        Message::Hello { worker, n_keys, config, k_min_ppm, k_max_ppm } => {
             b.push(TAG_HELLO);
             put_u32(b, *worker);
             put_u64(b, *n_keys);
             put_u64(b, *config);
+            put_u32(b, *k_min_ppm);
+            put_u32(b, *k_max_ppm);
         }
-        Message::Welcome { n_workers, shard, seed, plan } => {
+        Message::Welcome { n_workers, shard, seed, k_min_ppm, k_max_ppm, plan } => {
             b.push(TAG_WELCOME);
             put_u32(b, *n_workers);
             put_u32(b, *shard);
             put_u64(b, *seed);
+            put_u32(b, *k_min_ppm);
+            put_u32(b, *k_max_ppm);
             let count = u32::try_from(plan.len()).map_err(|_| {
                 CommError::Protocol(format!("welcome plan {} entries exceeds u32", plan.len()))
             })?;
@@ -291,11 +302,19 @@ pub fn decode_body(buf: &[u8]) -> Result<Message, CommError> {
             data: get_block(&mut r)?,
         },
         TAG_ACK => Message::Ack { key: r.u64()?, iter: r.u64()? },
-        TAG_HELLO => Message::Hello { worker: r.u32()?, n_keys: r.u64()?, config: r.u64()? },
+        TAG_HELLO => Message::Hello {
+            worker: r.u32()?,
+            n_keys: r.u64()?,
+            config: r.u64()?,
+            k_min_ppm: r.u32()?,
+            k_max_ppm: r.u32()?,
+        },
         TAG_WELCOME => {
             let n_workers = r.u32()?;
             let shard = r.u32()?;
             let seed = r.u64()?;
+            let k_min_ppm = r.u32()?;
+            let k_max_ppm = r.u32()?;
             // lint: allow(cast: u32 -> usize) — widening on every supported (64-bit) target
             let count = r.u32()? as usize;
             // Untrusted input: bound the allocation by the bytes actually
@@ -309,7 +328,7 @@ pub fn decode_body(buf: &[u8]) -> Result<Message, CommError> {
             for _ in 0..count {
                 plan.push((r.u64()?, r.u32()?));
             }
-            Message::Welcome { n_workers, shard, seed, plan }
+            Message::Welcome { n_workers, shard, seed, k_min_ppm, k_max_ppm, plan }
         }
         TAG_SHUTDOWN => Message::Shutdown,
         t => return Err(CommError::Protocol(format!("unknown tag {t}"))),
@@ -406,6 +425,8 @@ mod tests {
                     worker: (g.u64() & 0xFFFF) as u32,
                     n_keys: g.u64(),
                     config: g.u64(),
+                    k_min_ppm: (g.u64() % 1_000_001) as u32,
+                    k_max_ppm: (g.u64() % 1_000_001) as u32,
                 },
                 5 => {
                     let n = g.usize_in(0, 12);
@@ -413,6 +434,8 @@ mod tests {
                         n_workers: (g.u64() & 0xFF) as u32,
                         shard: (g.u64() & 0xF) as u32,
                         seed: g.u64(),
+                        k_min_ppm: (g.u64() % 1_000_001) as u32,
+                        k_max_ppm: (g.u64() % 1_000_001) as u32,
                         plan: (0..n).map(|_| (g.u64(), (g.u64() & 0x7) as u32)).collect(),
                     }
                 }
@@ -492,11 +515,18 @@ mod tests {
     /// on the length check, not attempt the allocation.
     #[test]
     fn welcome_with_inflated_count_rejected() {
-        let msg =
-            Message::Welcome { n_workers: 2, shard: 0, seed: 1, plan: vec![(5, 1), (9, 0)] };
+        let msg = Message::Welcome {
+            n_workers: 2,
+            shard: 0,
+            seed: 1,
+            k_min_ppm: 500,
+            k_max_ppm: 50_000,
+            plan: vec![(5, 1), (9, 0)],
+        };
         let mut body = encode_body(&msg).unwrap();
-        // count field sits after tag(1) + n_workers(4) + shard(4) + seed(8).
-        let count_at = 1 + 4 + 4 + 8;
+        // count field sits after tag(1) + n_workers(4) + shard(4) + seed(8)
+        // + k_min_ppm(4) + k_max_ppm(4).
+        let count_at = 1 + 4 + 4 + 8 + 4 + 4;
         body[count_at..count_at + 4].copy_from_slice(&u32::MAX.to_le_bytes());
         let err = decode_body(&body).unwrap_err();
         assert!(matches!(err, CommError::Protocol(_)), "got {err:?}");
@@ -523,8 +553,15 @@ mod tests {
             Message::Pull { key: 11, iter: 7, worker: 2 },
             Message::PullResp { key: 11, iter: 7, served_with: 3, data: block },
             Message::Ack { key: 11, iter: 7 },
-            Message::Hello { worker: 2, n_keys: 9, config: 0xABCD },
-            Message::Welcome { n_workers: 3, shard: 1, seed: 42, plan: vec![(11, 0), (12, 1)] },
+            Message::Hello { worker: 2, n_keys: 9, config: 0xABCD, k_min_ppm: 500, k_max_ppm: 50_000 },
+            Message::Welcome {
+                n_workers: 3,
+                shard: 1,
+                seed: 42,
+                k_min_ppm: 1000,
+                k_max_ppm: 40_000,
+                plan: vec![(11, 0), (12, 1)],
+            },
             Message::Shutdown,
         ]
     }

@@ -87,16 +87,33 @@ pub enum Message {
     /// Worker → server: cluster-mode registration, the first frame on a
     /// fresh connection. `n_keys` is the worker's partition size and
     /// `config` a fingerprint of everything both sides must agree on
-    /// (scheme/param/sync/fusion/threshold/pipeline — see
+    /// (scheme/param/sync/fusion/threshold/pipeline/adaptive-enable — see
     /// `cluster::config_fingerprint`), so a mismatched launch config is
     /// rejected at registration instead of silently corrupting training.
-    Hello { worker: u32, n_keys: u64, config: u64 },
+    /// `k_min_ppm`/`k_max_ppm` are the keep-ratio bounds the worker's
+    /// adaptive controller *requests*, in parts-per-million of elements
+    /// kept; `(0, 0)` is the static sentinel (controller off). A request
+    /// with `k_min_ppm > k_max_ppm` or a lone zero is malformed and
+    /// rejected at registration.
+    Hello { worker: u32, n_keys: u64, config: u64, k_min_ppm: u32, k_max_ppm: u32 },
     /// Server → worker: handshake reply. The worker adopts `seed` and the
     /// shard `plan` (`(key, server index)` pairs) from the server instead
     /// of assuming co-located construction; `shard` is the responding
     /// server's own index so the worker can verify its `--servers`
-    /// ordering matches the plan.
-    Welcome { n_workers: u32, shard: u32, seed: u64, plan: Vec<(Key, u32)> },
+    /// ordering matches the plan. `k_min_ppm`/`k_max_ppm` are the
+    /// **granted** adaptive bounds: the worker's requested pair clamped
+    /// into the server's configured envelope (`(0, 0)` = static run). The
+    /// worker's controller must stay inside them — the server's ingress
+    /// counts any per-block `k` outside the granted envelope as
+    /// `bounds_rejected` and drops the push.
+    Welcome {
+        n_workers: u32,
+        shard: u32,
+        seed: u64,
+        k_min_ppm: u32,
+        k_max_ppm: u32,
+        plan: Vec<(Key, u32)>,
+    },
     /// Graceful shutdown.
     Shutdown,
 }

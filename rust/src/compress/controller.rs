@@ -1,0 +1,483 @@
+//! Online per-key compression controller (the paper's *adaptive* arm).
+//!
+//! Every static sparsifier ratio is wrong twice: too aggressive for the
+//! layers/steps where the gradient energy is spread out (information loss
+//! stalls convergence) and too timid where it is concentrated (wire bytes
+//! wasted). GraVAC and AdaComp close this loop online; this module is the
+//! reproduction's version of that controller, driven by a gain signal the
+//! error-feedback pipeline already holds.
+//!
+//! ## The gain metric
+//!
+//! For one block push, let `q = g + e_prev` be the EF-corrected gradient
+//! and `e` the residual left after compression. The **compression gain**
+//! is the fraction of the block's energy that made it onto the wire:
+//!
+//! ```text
+//! gain = ‖C(q)‖² / (‖C(q)‖² + ‖e‖²)  =  (‖q‖² − ‖e‖²) / ‖q‖²
+//! ```
+//!
+//! The second form holds exactly for the sparsifiers (top-k / random-k
+//! zero the selected coordinates in the residual, so `C(q) ⟂ e`) and costs
+//! two sum-of-squares passes over buffers the pipeline already owns — no
+//! decompression round trip. A gain of 1 means lossless; a gain of 0 means
+//! the whole update went into the residual.
+//!
+//! ## The control law (EMA + dead-band hysteresis)
+//!
+//! Per key, gains are smoothed with an EMA (`adaptive.ema`) and the keep
+//! ratio — tracked in **ppm** (parts-per-million, the wire/negotiation
+//! unit) — moves multiplicatively toward `adaptive.target_gain`:
+//!
+//! * `ema < target − DEAD_BAND` → too much energy lost: ppm ×= STEP (↑ k)
+//! * `ema > target + DEAD_BAND` → comfortably lossless: ppm /= STEP (↓ k)
+//! * otherwise → inside the dead band: hold (hysteresis — alternating
+//!   gradients average out in the EMA instead of thrashing `k`)
+//!
+//! every move clamped to the **negotiated** `[k_min, k_max]` ppm bounds
+//! (see `cluster`: `Hello` requests, `Welcome` grants, and the server's
+//! ingress rejects any per-block `k` outside the granted envelope).
+//! `k_for_ppm` is monotone in ppm and shared verbatim with the server's
+//! envelope check, so a worker whose ppm stays in bounds can never emit a
+//! block the server counts as `bounds_rejected`.
+
+use crate::comm::Key;
+use crate::compress::{randomk::RandomK, topk::TopK, Compressor};
+use crate::configx::TrainConfig;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// One million: the fixed-point scale of a keep ratio on the wire.
+pub const PPM_SCALE: f64 = 1_000_000.0;
+
+/// Hysteresis half-width around `target_gain` (absolute gain units): the
+/// EMA must leave `target ± DEAD_BAND` before the ratio moves.
+pub const DEAD_BAND: f64 = 0.05;
+
+/// Multiplicative ratio step per adjustment (both directions).
+pub const STEP: f64 = 1.25;
+
+/// Keep ratio → ppm fixed point, clamped to [1, 1_000_000]. Zero is never
+/// produced: `(0, 0)` is the wire sentinel for "static run, no bounds".
+pub fn ppm_of(ratio: f64) -> u32 {
+    let ppm = (ratio * PPM_SCALE).round();
+    if ppm < 1.0 {
+        1
+    } else if ppm >= PPM_SCALE {
+        1_000_000
+    } else {
+        ppm as u32
+    }
+}
+
+/// ppm fixed point → keep ratio in (0, 1].
+pub fn ratio_of(ppm: u32) -> f64 {
+    f64::from(ppm.clamp(1, 1_000_000)) / PPM_SCALE
+}
+
+/// The per-block element budget a ppm ratio grants an `n`-element block —
+/// the *same* `ceil(ratio·n).clamp(1, n)` the sparsifiers use, shared so
+/// the server's envelope check and the worker's compressor can never
+/// disagree. Monotone in `ppm`, so `ppm ∈ [lo, hi]` implies
+/// `k ∈ [k_for_ppm(lo, n), k_for_ppm(hi, n)]`.
+pub fn k_for_ppm(ppm: u32, n: usize) -> usize {
+    ((ratio_of(ppm) * n as f64).ceil() as usize).clamp(1, n.max(1))
+}
+
+/// Server side of the negotiation: clamp a worker's requested ppm bounds
+/// into this server's configured envelope. Order-preserving for ordered
+/// inputs, so the grant is always a well-formed sub-range of the envelope.
+pub fn clamp_bounds(req: (u32, u32), envelope: (u32, u32)) -> (u32, u32) {
+    let (lo, hi) = envelope;
+    (req.0.clamp(lo, hi), req.1.clamp(lo, hi))
+}
+
+/// Which sparsifier family the controller re-parameterizes per block.
+/// Dense/dither schemes have no keep ratio and never adapt.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AdaptiveKind {
+    TopK,
+    RandomK { rescale: bool },
+}
+
+impl AdaptiveKind {
+    pub fn from_scheme(scheme: &str) -> Option<AdaptiveKind> {
+        match scheme {
+            "topk" => Some(AdaptiveKind::TopK),
+            "randomk" => Some(AdaptiveKind::RandomK { rescale: false }),
+            "randomk_unbiased" => Some(AdaptiveKind::RandomK { rescale: true }),
+            _ => None,
+        }
+    }
+}
+
+/// Per-key controller state: current ratio plus the smoothed gain.
+struct KeyCtl {
+    ppm: u32,
+    ema: f64,
+    primed: bool,
+}
+
+/// The per-key online controller one worker owns for a run. Thread-safe:
+/// pipeline push jobs for different blocks observe concurrently.
+pub struct GainController {
+    kind: AdaptiveKind,
+    lo_ppm: u32,
+    hi_ppm: u32,
+    initial_ppm: u32,
+    ema_alpha: f64,
+    target_gain: f64,
+    keys: Mutex<HashMap<Key, KeyCtl>>,
+    adjustments: AtomicU64,
+}
+
+impl GainController {
+    /// Build a controller over the granted `[lo, hi]` ppm bounds. Inputs
+    /// are normalized (never panics on hostile/degenerate values): bounds
+    /// are forced into [1, 1e6] with `lo ≤ hi`, and the starting ratio is
+    /// clamped into them.
+    pub fn new(
+        kind: AdaptiveKind,
+        lo_ppm: u32,
+        hi_ppm: u32,
+        initial_ppm: u32,
+        ema_alpha: f64,
+        target_gain: f64,
+    ) -> GainController {
+        let lo = lo_ppm.clamp(1, 1_000_000);
+        let hi = hi_ppm.clamp(lo, 1_000_000);
+        GainController {
+            kind,
+            lo_ppm: lo,
+            hi_ppm: hi,
+            initial_ppm: initial_ppm.clamp(lo, hi),
+            ema_alpha: if ema_alpha.is_finite() { ema_alpha.clamp(1e-6, 1.0) } else { 1.0 },
+            target_gain: if target_gain.is_finite() { target_gain.clamp(0.0, 1.0) } else { 1.0 },
+            keys: Mutex::new(HashMap::new()),
+            adjustments: AtomicU64::new(0),
+        }
+    }
+
+    /// The granted `[lo, hi]` ppm bounds this controller honors.
+    pub fn bounds_ppm(&self) -> (u32, u32) {
+        (self.lo_ppm, self.hi_ppm)
+    }
+
+    /// Current keep ratio for `key` in ppm (keys start at the initial
+    /// ratio the first time they are asked for).
+    pub fn ppm_for(&self, key: Key) -> u32 {
+        // Poison recovery (here and below, mirroring BlockEf): controller
+        // state is advisory — a panicking observer must not cascade into
+        // every subsequent push job.
+        let mut keys = self.keys.lock().unwrap_or_else(|p| p.into_inner());
+        keys.entry(key)
+            .or_insert_with(|| KeyCtl { ppm: self.initial_ppm, ema: 0.0, primed: false })
+            .ppm
+    }
+
+    /// A compressor parameterized with `key`'s *current* ratio — built per
+    /// push job, so two in-flight blocks can run different `k`.
+    pub fn compressor_for(&self, key: Key) -> Arc<dyn Compressor> {
+        let ratio = ratio_of(self.ppm_for(key));
+        match self.kind {
+            AdaptiveKind::TopK => Arc::new(TopK::new(ratio)),
+            AdaptiveKind::RandomK { rescale } => Arc::new(RandomK::new(ratio, rescale)),
+        }
+    }
+
+    /// Feed one measured gain for `key` and apply the control law (EMA →
+    /// dead band → clamped multiplicative step). Non-finite gains are
+    /// dropped — a poisoned residual must not steer the ratio.
+    pub fn observe(&self, key: Key, gain: f64) {
+        if !gain.is_finite() {
+            return;
+        }
+        let gain = gain.clamp(0.0, 1.0);
+        let mut keys = self.keys.lock().unwrap_or_else(|p| p.into_inner());
+        let ctl = keys
+            .entry(key)
+            .or_insert_with(|| KeyCtl { ppm: self.initial_ppm, ema: 0.0, primed: false });
+        ctl.ema = if ctl.primed {
+            self.ema_alpha * gain + (1.0 - self.ema_alpha) * ctl.ema
+        } else {
+            gain
+        };
+        ctl.primed = true;
+        let old = ctl.ppm;
+        if ctl.ema < self.target_gain - DEAD_BAND {
+            // Too much energy left in the residual: keep more coordinates.
+            // The `+1` floor guarantees progress at tiny ppm where the
+            // multiplicative step rounds to a no-op.
+            ctl.ppm =
+                ((f64::from(ctl.ppm) * STEP).ceil() as u32).max(old.saturating_add(1)).min(self.hi_ppm);
+        } else if ctl.ema > self.target_gain + DEAD_BAND {
+            // Comfortably above target: spend fewer bytes.
+            ctl.ppm =
+                ((f64::from(ctl.ppm) / STEP).floor() as u32).min(old.saturating_sub(1)).max(self.lo_ppm);
+        }
+        if ctl.ppm != old {
+            self.adjustments.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Total ratio adjustments made across all keys (trajectory counter).
+    pub fn adjustments(&self) -> u64 {
+        self.adjustments.load(Ordering::Relaxed)
+    }
+
+    /// The current `[min, max]` per-key ppm across all keys — the
+    /// trajectory envelope the worker counters report. Before any key is
+    /// touched it degenerates to the initial ratio.
+    pub fn ppm_span(&self) -> (u32, u32) {
+        let keys = self.keys.lock().unwrap_or_else(|p| p.into_inner());
+        if keys.is_empty() {
+            return (self.initial_ppm, self.initial_ppm);
+        }
+        let (mut lo, mut hi) = (u32::MAX, 0u32);
+        for ctl in keys.values() {
+            lo = lo.min(ctl.ppm);
+            hi = hi.max(ctl.ppm);
+        }
+        (lo, hi)
+    }
+
+    /// Per-key `(key, ppm)` snapshot, sorted by key (tests/diagnostics).
+    pub fn snapshot(&self) -> Vec<(Key, u32)> {
+        let keys = self.keys.lock().unwrap_or_else(|p| p.into_inner());
+        let mut out: Vec<(Key, u32)> = keys.iter().map(|(k, c)| (*k, c.ppm)).collect();
+        out.sort_unstable();
+        out
+    }
+}
+
+/// Sum of squares in f64 (the gain metric's accumulator — f64 so blocks of
+/// millions of f32 elements don't lose the small-residual signal).
+pub fn sumsq(x: &[f32]) -> f64 {
+    x.iter().map(|&v| f64::from(v) * f64::from(v)).sum()
+}
+
+/// Gain from the pre-compression energy `t2 = ‖q‖²` and the post-
+/// compression residual energy `e2 = ‖e‖²`. An all-zero block is lossless
+/// by definition.
+pub fn gain_from(t2: f64, e2: f64) -> f64 {
+    if t2 <= 0.0 {
+        1.0
+    } else {
+        ((t2 - e2) / t2).clamp(0.0, 1.0)
+    }
+}
+
+/// The ppm bounds this run's config *requests* at registration: the
+/// `adaptive.{k_min,k_max}` pair when the controller applies (enabled, a
+/// sparsifier scheme, and error feedback — the gain signal lives in the EF
+/// residual), else the `(0, 0)` static sentinel.
+pub fn requested_bounds(cfg: &TrainConfig) -> (u32, u32) {
+    if cfg.adaptive.enabled
+        && cfg.compression.sync == crate::configx::SyncMode::CompressedEf
+        && AdaptiveKind::from_scheme(&cfg.compression.scheme).is_some()
+    {
+        (ppm_of(cfg.adaptive.k_min), ppm_of(cfg.adaptive.k_max))
+    } else {
+        (0, 0)
+    }
+}
+
+/// Build the worker's controller from the run config and the **granted**
+/// bounds echoed in `Welcome` (the inproc fabric grants the config's own
+/// request). `None` — run static — when adaptive mode is off, the scheme
+/// has no keep ratio, or the grant is the static sentinel.
+pub fn from_negotiated(cfg: &TrainConfig, granted_ppm: (u32, u32)) -> Option<Arc<GainController>> {
+    if requested_bounds(cfg) == (0, 0) || granted_ppm == (0, 0) {
+        return None;
+    }
+    let kind = AdaptiveKind::from_scheme(&cfg.compression.scheme)?;
+    let initial = ppm_of(cfg.compression.param).clamp(granted_ppm.0, granted_ppm.1);
+    Some(Arc::new(GainController::new(
+        kind,
+        granted_ppm.0,
+        granted_ppm.1,
+        initial,
+        cfg.adaptive.ema,
+        cfg.adaptive.target_gain,
+    )))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctl(lo: f64, hi: f64, init: f64, ema: f64, target: f64) -> GainController {
+        GainController::new(AdaptiveKind::TopK, ppm_of(lo), ppm_of(hi), ppm_of(init), ema, target)
+    }
+
+    #[test]
+    fn ppm_roundtrip_and_clamps() {
+        assert_eq!(ppm_of(0.001), 1000);
+        assert_eq!(ppm_of(1.0), 1_000_000);
+        assert_eq!(ppm_of(0.0), 1, "zero ratio must map to the 1-ppm floor");
+        assert_eq!(ppm_of(7.5), 1_000_000);
+        assert!((ratio_of(1000) - 0.001).abs() < 1e-12);
+        assert_eq!(ratio_of(0), ratio_of(1), "ppm 0 reads as the floor");
+    }
+
+    /// The shared budget function must agree with the sparsifiers' own
+    /// `k_for` and be monotone in ppm — the envelope-soundness argument.
+    #[test]
+    fn k_for_ppm_matches_topk_and_is_monotone() {
+        for &n in &[1usize, 7, 100, 1500, 1 << 20] {
+            for &ppm in &[1u32, 500, 1000, 50_000, 500_000, 1_000_000] {
+                let t = TopK::new(ratio_of(ppm));
+                assert_eq!(k_for_ppm(ppm, n), t.k_for(n), "n={n} ppm={ppm}");
+            }
+            let mut last = 0usize;
+            for ppm in (1..=1_000_000u32).step_by(9973) {
+                let k = k_for_ppm(ppm, n);
+                assert!(k >= last, "k_for_ppm not monotone at n={n} ppm={ppm}");
+                last = k;
+            }
+        }
+    }
+
+    #[test]
+    fn clamp_bounds_is_a_subrange_of_the_envelope() {
+        let env = (1000, 100_000);
+        assert_eq!(clamp_bounds((500, 200_000), env), env, "wider request clamps to envelope");
+        assert_eq!(clamp_bounds((2000, 50_000), env), (2000, 50_000), "inner request unchanged");
+        assert_eq!(clamp_bounds((1, 10), env), (1000, 1000), "request below collapses to lo");
+        let (lo, hi) = clamp_bounds((200_000, 900_000), env);
+        assert!(lo <= hi && lo >= env.0 && hi <= env.1);
+    }
+
+    /// ISSUE acceptance: gain persistently below target drives k up to the
+    /// k_max bound (and never beyond it).
+    #[test]
+    fn low_gain_converges_to_k_max() {
+        let c = ctl(0.001, 0.1, 0.005, 0.5, 0.8);
+        let key = 7u64;
+        let mut trail = vec![c.ppm_for(key)];
+        for _ in 0..64 {
+            c.observe(key, 0.2); // far below target - DEAD_BAND
+            trail.push(c.ppm_for(key));
+        }
+        assert_eq!(*trail.last().unwrap(), ppm_of(0.1), "must saturate at k_max");
+        assert!(trail.windows(2).all(|w| w[1] >= w[0]), "monotone rise: {trail:?}");
+        assert!(c.adjustments() > 0);
+    }
+
+    #[test]
+    fn high_gain_converges_to_k_min() {
+        let c = ctl(0.001, 0.1, 0.05, 0.5, 0.5);
+        let key = 3u64;
+        for _ in 0..96 {
+            c.observe(key, 0.99);
+        }
+        assert_eq!(c.ppm_for(key), ppm_of(0.001), "must saturate at k_min");
+    }
+
+    /// ISSUE acceptance: alternating gradients (gains straddling the
+    /// target) must not thrash k — the EMA settles inside the dead band
+    /// and hysteresis holds the ratio still.
+    #[test]
+    fn hysteresis_prevents_oscillation_on_alternating_gains() {
+        let c = ctl(0.001, 0.5, 0.02, 0.3, 0.6);
+        let key = 11u64;
+        // Warm-up: let the EMA settle around the mean of the two gains
+        // (0.6, exactly the target).
+        for i in 0..32 {
+            c.observe(key, if i % 2 == 0 { 0.55 } else { 0.65 });
+        }
+        let settled = c.ppm_for(key);
+        let before = c.adjustments();
+        for i in 0..64 {
+            c.observe(key, if i % 2 == 0 { 0.55 } else { 0.65 });
+            assert_eq!(c.ppm_for(key), settled, "ratio moved inside the dead band at step {i}");
+        }
+        assert_eq!(c.adjustments(), before, "no adjustments inside the dead band");
+    }
+
+    #[test]
+    fn keys_adapt_independently() {
+        let c = ctl(0.001, 0.2, 0.01, 1.0, 0.7);
+        for _ in 0..8 {
+            c.observe(1, 0.1); // starving: k rises
+            c.observe(2, 0.99); // lossless: k falls
+        }
+        assert!(c.ppm_for(1) > ppm_of(0.01));
+        assert!(c.ppm_for(2) < ppm_of(0.01));
+        let (lo, hi) = c.ppm_span();
+        assert_eq!((lo, hi), (c.ppm_for(2), c.ppm_for(1)));
+        let snap = c.snapshot();
+        assert_eq!(snap.len(), 2);
+        assert_eq!(snap[0].0, 1);
+    }
+
+    #[test]
+    fn tiny_ppm_still_makes_progress() {
+        // ppm=1: the multiplicative step rounds to 1.25 -> ceil 2; the +1
+        // floor would also guarantee motion.
+        let c = GainController::new(AdaptiveKind::TopK, 1, 100, 1, 1.0, 0.9);
+        c.observe(5, 0.0);
+        assert!(c.ppm_for(5) > 1);
+    }
+
+    #[test]
+    fn non_finite_gain_is_ignored() {
+        let c = ctl(0.001, 0.1, 0.01, 1.0, 0.9);
+        c.observe(9, f64::NAN);
+        c.observe(9, f64::INFINITY);
+        assert_eq!(c.ppm_for(9), ppm_of(0.01));
+        assert_eq!(c.adjustments(), 0);
+    }
+
+    #[test]
+    fn gain_from_is_exact_for_orthogonal_sparsifiers() {
+        use crate::compress::Ctx;
+        use crate::util::rng::Xoshiro256;
+        let t = TopK::new(0.25);
+        let q: Vec<f32> = (0..64).map(|i| ((i * 37) % 19) as f32 - 9.0).collect();
+        let t2 = sumsq(&q);
+        let mut res = q.clone();
+        let mut rng = Xoshiro256::seed_from_u64(0);
+        let c = t.compress_ef_fused(&mut res, &mut Ctx::new(&mut rng));
+        let e2 = sumsq(&res);
+        // Reference: decode the wire block and take ‖C(q)‖²/(‖C(q)‖²+‖e‖²).
+        let mut dec = vec![0.0f32; q.len()];
+        t.decompress(&c, &mut dec);
+        let c2 = sumsq(&dec);
+        let want = c2 / (c2 + e2);
+        assert!((gain_from(t2, e2) - want).abs() < 1e-12, "{} vs {want}", gain_from(t2, e2));
+        assert_eq!(gain_from(0.0, 0.0), 1.0, "empty block is lossless");
+    }
+
+    #[test]
+    fn requested_bounds_gate_on_scheme_sync_and_enable() {
+        let mut cfg = TrainConfig::default();
+        cfg.compression.scheme = "topk".into();
+        cfg.compression.sync = crate::configx::SyncMode::CompressedEf;
+        assert_eq!(requested_bounds(&cfg), (0, 0), "disabled by default");
+        cfg.adaptive.enabled = true;
+        let req = requested_bounds(&cfg);
+        assert_eq!(req, (ppm_of(cfg.adaptive.k_min), ppm_of(cfg.adaptive.k_max)));
+        assert!(from_negotiated(&cfg, req).is_some());
+        assert!(from_negotiated(&cfg, (0, 0)).is_none(), "static grant means static run");
+        cfg.compression.scheme = "fp16".into();
+        assert_eq!(requested_bounds(&cfg), (0, 0), "dense schemes never adapt");
+        cfg.compression.scheme = "topk".into();
+        cfg.compression.sync = crate::configx::SyncMode::Compressed;
+        assert_eq!(requested_bounds(&cfg), (0, 0), "no EF residual, no gain signal");
+    }
+
+    #[test]
+    fn negotiated_controller_clamps_initial_ratio_into_grant() {
+        let mut cfg = TrainConfig::default();
+        cfg.compression.scheme = "topk".into();
+        cfg.compression.sync = crate::configx::SyncMode::CompressedEf;
+        cfg.compression.param = 0.5; // outside [k_min, k_max]
+        cfg.adaptive.enabled = true;
+        let grant = (ppm_of(cfg.adaptive.k_min), ppm_of(cfg.adaptive.k_max));
+        let c = from_negotiated(&cfg, grant).unwrap();
+        assert_eq!(c.ppm_for(0), grant.1, "initial ratio clamps to the granted hi");
+        assert_eq!(c.bounds_ppm(), grant);
+    }
+}

@@ -19,7 +19,22 @@
 //! (Alg. 3). Property tests in each submodule verify the paper's
 //! Definition 1 (ω-compressor, unbiased) and Definition 2 (δ-approximate)
 //! contracts, which the convergence theory relies on.
+//!
+//! Module layout:
+//!
+//! * The per-scheme modules above hold the wire formats and `Compressor`
+//!   impls; their hot loops live in [`kernels`] (vectorization-friendly
+//!   flat passes shared across schemes), while [`reference`] keeps the
+//!   scalar textbook implementations the identity tests compare against —
+//!   when a kernel and its reference disagree, the kernel is wrong.
+//! * [`controller`] is the online per-key adaptive controller: it turns
+//!   the EF residual's energy into a compression-gain signal and steers
+//!   the sparsifier keep ratio inside bounds negotiated at registration
+//!   (see DESIGN.md §Adaptive controller).
+//! * [`ef`] holds the worker/server error-feedback state, [`threshold`]
+//!   the §4.2.3 size bypass.
 
+pub mod controller;
 pub mod dither;
 pub mod ef;
 pub mod fp16;

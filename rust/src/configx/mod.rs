@@ -4,6 +4,54 @@
 //! environment variables and launcher flags: cluster shape, compression
 //! scheme + parameters, optimizer hyper-parameters, model/artifact choice,
 //! and the system-optimization toggles ablated in Table 6.
+//!
+//! ## Knob inventory
+//!
+//! Every accepted knob, by section (the machine-checked copy of this table
+//! lives in DESIGN.md §Config knobs — the `docs-freshness` lint fails the
+//! build if that table and this module's structs drift apart):
+//!
+//! | knob | meaning |
+//! |---|---|
+//! | `model` | artifact name (see artifacts/manifest.json) |
+//! | `steps` | training steps |
+//! | `batch_per_worker` | per-worker batch size |
+//! | `seed` | run seed (job seeds derive from it) |
+//! | `log_every` | log cadence in steps |
+//! | `task_difficulty` | synthetic classification task difficulty |
+//! | `optimizer.name` | "lans" \| "clan" \| "nag" \| "adam" \| "sgd" |
+//! | `optimizer.lr` | learning rate |
+//! | `optimizer.beta1`, `optimizer.beta2`, `optimizer.eps` | moment hyper-params |
+//! | `optimizer.weight_decay` | weight decay λ |
+//! | `optimizer.momentum` | NAG/SGD momentum |
+//! | `optimizer.phi_lo`, `optimizer.phi_hi` | φ clamp bounds (Assumption 4) |
+//! | `optimizer.warmup_steps` | linear LR warmup steps |
+//! | `compression.scheme` | one of the seven paper compressors |
+//! | `compression.param` | keep ratio (sparsifiers) or bit width (dither) |
+//! | `compression.size_threshold` | bytes below which compression is bypassed (§4.2.3) |
+//! | `compression.fused_residual` | fused EF residual update (§4.2.2) |
+//! | `compression.sync` | "full" \| "compressed" \| "compressed_ef" |
+//! | `adaptive.enabled` | per-key online controller on/off (default off = static ratios) |
+//! | `adaptive.k_min`, `adaptive.k_max` | requested keep-ratio bounds, negotiated at `Hello`/`Welcome` |
+//! | `adaptive.ema` | gain-EMA smoothing factor in (0, 1] |
+//! | `adaptive.target_gain` | target compression gain in (0, 1) |
+//! | `cluster.nodes`, `cluster.gpus_per_node`, `cluster.servers` | topology |
+//! | `cluster.net_gbps`, `cluster.latency_us` | simulated wire |
+//! | `cluster.addresses` | TCP shard listen addresses (empty = inproc fabric) |
+//! | `system.compress_threads` | worker compression pool threads |
+//! | `system.intra_threads` | intra-task chunked parallelism |
+//! | `system.operator_fusion` | §4.2.2 toggle |
+//! | `system.size_threshold_on` | §4.2.3 toggle |
+//! | `system.workload_balance` | §4.2.4 toggle |
+//! | `system.more_servers` | §4.2.5 toggle |
+//! | `system.numa_tuning` | §4.2.6 toggle |
+//! | `pipeline.enabled` | block-partitioned push/pull pipeline (§4.2.1) |
+//! | `pipeline.block_bytes` | partition block size in bytes |
+//! | `pipeline.inflight` | max in-flight compress/push jobs |
+//! | `pipeline.ack_window` | sliding ack window vs phase barrier |
+//! | `server.iter_deadline_ms` | degraded-round deadline (0 = strict BSP) |
+//! | `server.compress_threads` | staged shard pool (0 = synchronous reference path) |
+//! | `server.iter_deadline_auto_margin` | p99-derived auto deadline (0 = off) |
 
 pub mod json;
 
@@ -68,6 +116,39 @@ impl Default for CompressionConfig {
             fused_residual: true,
             sync: SyncMode::CompressedEf,
         }
+    }
+}
+
+/// Per-key adaptive compression controller (`compress::controller`): the
+/// worker measures each block's compression gain from the EF residual and
+/// steers the sparsifier keep ratio toward `target_gain` inside
+/// `[k_min, k_max]`. The bounds here are what the worker *requests* at
+/// registration; the server clamps them into its own envelope and the
+/// `Welcome` reply carries the granted pair. Off by default — the static
+/// path is bit-identical to a build without the controller.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AdaptiveConfig {
+    /// Enable the controller. Requires a sparsifier scheme ("topk" /
+    /// "randomk" / "randomk_unbiased") and `sync = compressed_ef` (the
+    /// gain signal lives in the EF residual); other combinations simply
+    /// run static.
+    pub enabled: bool,
+    /// Lower keep-ratio bound the worker requests, in (0, 1].
+    pub k_min: f64,
+    /// Upper keep-ratio bound the worker requests, in (0, 1].
+    pub k_max: f64,
+    /// EMA smoothing factor for the per-key gain signal, in (0, 1]
+    /// (1 = no smoothing).
+    pub ema: f64,
+    /// Target compression gain in (0, 1): the controller raises k while
+    /// the smoothed gain sits below `target_gain - DEAD_BAND` and lowers
+    /// it above `target_gain + DEAD_BAND`.
+    pub target_gain: f64,
+}
+
+impl Default for AdaptiveConfig {
+    fn default() -> Self {
+        AdaptiveConfig { enabled: false, k_min: 0.0005, k_max: 0.05, ema: 0.3, target_gain: 0.7 }
     }
 }
 
@@ -258,6 +339,7 @@ pub struct TrainConfig {
     pub task_difficulty: f64,
     pub optimizer: OptimizerConfig,
     pub compression: CompressionConfig,
+    pub adaptive: AdaptiveConfig,
     pub cluster: ClusterConfig,
     pub system: SystemConfig,
     pub pipeline: PipelineConfig,
@@ -275,6 +357,7 @@ impl Default for TrainConfig {
             task_difficulty: 0.55,
             optimizer: OptimizerConfig::default(),
             compression: CompressionConfig::default(),
+            adaptive: AdaptiveConfig::default(),
             cluster: ClusterConfig::default(),
             system: SystemConfig::default(),
             pipeline: PipelineConfig::default(),
@@ -323,9 +406,10 @@ impl TrainConfig {
     pub fn from_json(v: &Json) -> Result<Self, ConfigError> {
         let d = TrainConfig::default();
         let obj = v.as_obj().ok_or_else(|| ConfigError("top level must be an object".into()))?;
-        const KNOWN: [&str; 13] = [
+        const KNOWN: [&str; 14] = [
             "model", "steps", "batch_per_worker", "seed", "log_every", "task_difficulty",
-            "optimizer", "compression", "cluster", "system", "pipeline", "server", "comment",
+            "optimizer", "compression", "adaptive", "cluster", "system", "pipeline", "server",
+            "comment",
         ];
         for k in obj.keys() {
             if !KNOWN.contains(&k.as_str()) {
@@ -354,6 +438,15 @@ impl TrainConfig {
             size_threshold: u(&c, "size_threshold", cd.size_threshold),
             fused_residual: b(&c, "fused_residual", cd.fused_residual),
             sync: SyncMode::parse(&s(&c, "sync", cd.sync.name()))?,
+        };
+        let ad = AdaptiveConfig::default();
+        let a = v.get("adaptive").cloned().unwrap_or(Json::Obj(Default::default()));
+        let adaptive = AdaptiveConfig {
+            enabled: b(&a, "enabled", ad.enabled),
+            k_min: f(&a, "k_min", ad.k_min),
+            k_max: f(&a, "k_max", ad.k_max),
+            ema: f(&a, "ema", ad.ema),
+            target_gain: f(&a, "target_gain", ad.target_gain),
         };
         let kd = ClusterConfig::default();
         let k = v.get("cluster").cloned().unwrap_or(Json::Obj(Default::default()));
@@ -417,6 +510,7 @@ impl TrainConfig {
             task_difficulty: f(v, "task_difficulty", d.task_difficulty),
             optimizer,
             compression,
+            adaptive,
             cluster,
             system,
             pipeline,
@@ -469,6 +563,24 @@ impl TrainConfig {
             }
             "identity" | "fp16" | "onebit" => {}
             other => return Err(ConfigError(format!("unknown compression scheme '{other}'"))),
+        }
+        // Adaptive-controller bounds must be a well-formed sub-range of
+        // (0, 1] even when the controller is off — they are what `Hello`
+        // would request, and a degenerate request must fail here, not at
+        // registration. (NaN fails every comparison and lands here too.)
+        if !(self.adaptive.k_min > 0.0
+            && self.adaptive.k_min <= self.adaptive.k_max
+            && self.adaptive.k_max <= 1.0)
+        {
+            return Err(ConfigError(
+                "adaptive.k_min/k_max must satisfy 0 < k_min <= k_max <= 1".into(),
+            ));
+        }
+        if !(self.adaptive.ema > 0.0 && self.adaptive.ema <= 1.0) {
+            return Err(ConfigError("adaptive.ema must be in (0, 1]".into()));
+        }
+        if !(self.adaptive.target_gain > 0.0 && self.adaptive.target_gain < 1.0) {
+            return Err(ConfigError("adaptive.target_gain must be in (0, 1)".into()));
         }
         if self.pipeline.block_bytes < 64 {
             return Err(ConfigError("pipeline.block_bytes must be >= 64".into()));
@@ -532,6 +644,16 @@ impl TrainConfig {
                     ("size_threshold", Json::num(self.compression.size_threshold as f64)),
                     ("fused_residual", Json::Bool(self.compression.fused_residual)),
                     ("sync", Json::str(self.compression.sync.name())),
+                ]),
+            ),
+            (
+                "adaptive",
+                Json::obj(vec![
+                    ("enabled", Json::Bool(self.adaptive.enabled)),
+                    ("k_min", Json::num(self.adaptive.k_min)),
+                    ("k_max", Json::num(self.adaptive.k_max)),
+                    ("ema", Json::num(self.adaptive.ema)),
+                    ("target_gain", Json::num(self.adaptive.target_gain)),
                 ]),
             ),
             (
@@ -732,6 +854,35 @@ mod tests {
         assert!(TrainConfig::from_str(r#"{"cluster": {"addresses": "nope"}}"#).is_err());
         assert!(TrainConfig::from_str(r#"{"cluster": {"addresses": [7]}}"#).is_err());
         assert!(TrainConfig::from_str(r#"{"cluster": {"addresses": [""]}}"#).is_err());
+    }
+
+    #[test]
+    fn adaptive_section_parses_validates_and_roundtrips() {
+        // Default: controller off, bounds well-formed.
+        let cfg = TrainConfig::from_str("{}").unwrap();
+        assert!(!cfg.adaptive.enabled);
+        assert!(cfg.adaptive.k_min > 0.0 && cfg.adaptive.k_min <= cfg.adaptive.k_max);
+        // Explicit section parses.
+        let cfg = TrainConfig::from_str(
+            r#"{"adaptive": {"enabled": true, "k_min": 0.001, "k_max": 0.2,
+                "ema": 0.5, "target_gain": 0.8}}"#,
+        )
+        .unwrap();
+        assert!(cfg.adaptive.enabled);
+        assert_eq!(cfg.adaptive.k_min, 0.001);
+        assert_eq!(cfg.adaptive.k_max, 0.2);
+        assert_eq!(cfg.adaptive.ema, 0.5);
+        assert_eq!(cfg.adaptive.target_gain, 0.8);
+        // Roundtrips through to_json.
+        let rt = TrainConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(rt, cfg);
+        // Degenerate knobs rejected even with the controller off.
+        assert!(TrainConfig::from_str(r#"{"adaptive": {"k_min": 0}}"#).is_err());
+        assert!(TrainConfig::from_str(r#"{"adaptive": {"k_min": 0.5, "k_max": 0.1}}"#).is_err());
+        assert!(TrainConfig::from_str(r#"{"adaptive": {"k_max": 1.5}}"#).is_err());
+        assert!(TrainConfig::from_str(r#"{"adaptive": {"ema": 0}}"#).is_err());
+        assert!(TrainConfig::from_str(r#"{"adaptive": {"ema": 1.5}}"#).is_err());
+        assert!(TrainConfig::from_str(r#"{"adaptive": {"target_gain": 1.0}}"#).is_err());
     }
 
     #[test]

@@ -126,13 +126,21 @@ impl FabricSpec {
             iter_deadline: cfg.server.iter_deadline(),
             compress_threads: cfg.server.compress_threads,
             deadline_auto_margin: cfg.server.iter_deadline_auto_margin,
+            // Single-process runs derive the envelope from the shared
+            // config (the grant the TCP handshake would negotiate against
+            // itself); cluster servers do the same in `cluster::serve`.
+            adaptive_bounds: {
+                let b = crate::compress::controller::requested_bounds(cfg);
+                (b != (0, 0)).then_some(b)
+            },
         }
     }
 
     /// Build one worker's comm client over an endpoint row (`endpoints[s]`
-    /// talks to server shard `s`). `run_seed` and `plan` are explicit
-    /// because cluster workers adopt both from the servers' `Welcome`
-    /// rather than their local config.
+    /// talks to server shard `s`). `run_seed`, `plan`, and the granted
+    /// `adaptive` controller are explicit because cluster workers adopt
+    /// all three from the servers' `Welcome` rather than their local
+    /// config (`None` = static compression).
     pub fn worker_comm(
         &self,
         cfg: &TrainConfig,
@@ -140,6 +148,7 @@ impl FabricSpec {
         run_seed: u64,
         endpoints: Vec<Box<dyn Endpoint>>,
         plan: Arc<ShardPlan>,
+        adaptive: Option<Arc<crate::compress::controller::GainController>>,
     ) -> WorkerComm {
         WorkerComm::new(
             rank,
@@ -154,6 +163,7 @@ impl FabricSpec {
             cfg.pipeline.inflight,
             cfg.pipeline.ack_window,
             self.n_workers,
+            adaptive,
         )
     }
 }
@@ -245,7 +255,14 @@ impl CommFabric {
             .into_iter()
             .enumerate()
             .map(|(w, eps)| {
-                spec.worker_comm(cfg, w as u32, cfg.seed, eps, Arc::clone(&spec.plan))
+                // In-process: the worker self-grants its own request (the
+                // exact pair the TCP handshake would echo back), so inproc
+                // and cluster adaptive runs see identical bounds.
+                let adaptive = crate::compress::controller::from_negotiated(
+                    cfg,
+                    crate::compress::controller::requested_bounds(cfg),
+                );
+                spec.worker_comm(cfg, w as u32, cfg.seed, eps, Arc::clone(&spec.plan), adaptive)
             })
             .collect();
 

@@ -48,6 +48,12 @@
 //!    provably widening or rewritten as `try_from` with a counted
 //!    `CommError::Protocol` path; anything else is annotated with the
 //!    exact `src -> dst` pair, revalidated against a widening table.
+//! 9. **docs-freshness** — the machine-readable knob table in DESIGN.md
+//!    §Config knobs must list every `TrainConfig` knob (section structs
+//!    expanded to `section.field`), and the README.md counters table
+//!    must list every `ServerStats` / `WorkerCounters` field — both
+//!    directions: a missing row is undocumented surface, an extra row
+//!    is stale docs.
 //!
 //! Annotation grammar (a comment whose text starts with `lint:`):
 //!
@@ -105,10 +111,11 @@ const RULE_LOCK: &str = "lock-order";
 const RULE_BLOCK: &str = "hold-while-blocking";
 const RULE_CROSS: &str = "pool-crossing";
 const RULE_CAST: &str = "cast-safety";
+const RULE_DOCS: &str = "docs-freshness";
 
-/// Walk `rust/src/**` under `repo_root`, plus `DESIGN.md`, and run every
-/// rule. `Err` is reserved for I/O problems (missing tree); rule
-/// failures come back as `Ok(violations)`.
+/// Walk `rust/src/**` under `repo_root`, plus `DESIGN.md` and
+/// `README.md`, and run every rule. `Err` is reserved for I/O problems
+/// (missing tree); rule failures come back as `Ok(violations)`.
 pub fn run_all(repo_root: &Path) -> Result<Vec<Violation>, String> {
     let src_root = repo_root.join("rust").join("src");
     let mut files = Vec::new();
@@ -128,7 +135,10 @@ pub fn run_all(repo_root: &Path) -> Result<Vec<Violation>, String> {
     let design_path = repo_root.join("DESIGN.md");
     let design = std::fs::read_to_string(&design_path)
         .map_err(|e| format!("read {}: {e}", design_path.display()))?;
-    Ok(run_on(&sources, &design))
+    // A missing README reads as empty: the docs-freshness rule then
+    // reports its absent counters table instead of an I/O error.
+    let readme = std::fs::read_to_string(repo_root.join("README.md")).unwrap_or_default();
+    Ok(run_on(&sources, &design, &readme))
 }
 
 fn collect_rs(dir: &Path, out: &mut Vec<std::path::PathBuf>) -> Result<(), String> {
@@ -147,9 +157,14 @@ fn collect_rs(dir: &Path, out: &mut Vec<std::path::PathBuf>) -> Result<(), Strin
 }
 
 /// Run every rule over an in-memory source set (`(relative path, scanned
-/// file)` pairs) and the DESIGN.md text. Split out from [`run_all`] so
-/// the lint's own fixture tests can exercise rules without touching disk.
-pub fn run_on(sources: &[(String, ScannedFile)], design_md: &str) -> Vec<Violation> {
+/// file)` pairs) and the DESIGN.md / README.md texts. Split out from
+/// [`run_all`] so the lint's own fixture tests can exercise rules
+/// without touching disk.
+pub fn run_on(
+    sources: &[(String, ScannedFile)],
+    design_md: &str,
+    readme_md: &str,
+) -> Vec<Violation> {
     let mut v = Vec::new();
     let mut anns: Vec<(usize, Vec<Ann>)> = sources
         .iter()
@@ -160,6 +175,7 @@ pub fn run_on(sources: &[(String, ScannedFile)], design_md: &str) -> Vec<Violati
     check_pool_ownership(sources, &mut anns, design_md, &mut v);
     check_wire_exhaustiveness(sources, &mut v);
     check_counter_registry(sources, &mut v);
+    check_docs_freshness(sources, design_md, readme_md, &mut v);
     concurrency::check_lock_order(sources, &mut anns, design_md, &mut v);
     concurrency::check_hold_blocking(sources, &mut anns, &mut v);
     concurrency::check_pool_crossing(sources, &mut anns, &mut v);
@@ -1190,6 +1206,219 @@ fn check_counter_registry(sources: &[(String, ScannedFile)], v: &mut Vec<Violati
     }
 }
 
+// ---------------------------------------------------------------------
+// Rule 9: docs-freshness — config knobs and counters vs their doc tables
+// ---------------------------------------------------------------------
+
+const KNOBS_BEGIN: &str = "<!-- lint:config-knobs -->";
+const KNOBS_END: &str = "<!-- /lint:config-knobs -->";
+const COUNTERS_BEGIN: &str = "<!-- lint:counters -->";
+const COUNTERS_END: &str = "<!-- /lint:counters -->";
+
+/// Rows of a machine-readable markdown table bounded by `begin`/`end`
+/// marker comments: `(line, cells)` with surrounding backticks stripped.
+/// Separator rows and the header row (recognized by `header_word` in the
+/// first cell) are skipped; a missing marker pair is reported once.
+fn md_table_rows(
+    md: &str,
+    doc: &str,
+    begin: &str,
+    end: &str,
+    header_word: &str,
+    v: &mut Vec<Violation>,
+) -> Vec<(usize, Vec<String>)> {
+    let mut rows = Vec::new();
+    let mut inside = false;
+    let mut seen = false;
+    for (i, raw) in md.lines().enumerate() {
+        let line = i + 1;
+        let t = raw.trim();
+        if t == begin {
+            inside = true;
+            seen = true;
+            continue;
+        }
+        if t == end {
+            inside = false;
+            continue;
+        }
+        if !inside || !t.starts_with('|') {
+            continue;
+        }
+        let cells: Vec<String> = t
+            .trim_matches('|')
+            .split('|')
+            .map(|c| c.trim().trim_matches('`').to_string())
+            .collect();
+        if cells.iter().all(|c| c.chars().all(|ch| "-: ".contains(ch))) {
+            continue; // separator row
+        }
+        if cells.first().is_some_and(|c| c.contains(header_word)) {
+            continue; // header row
+        }
+        rows.push((line, cells));
+    }
+    if !seen {
+        v.push(Violation {
+            file: doc.to_string(),
+            line: 1,
+            rule: RULE_DOCS,
+            msg: format!(
+                "machine-readable table not found (expected `{begin}` … `{end}` markers)"
+            ),
+        });
+    }
+    rows
+}
+
+/// The `{CamelCase}Config` struct name the configx convention pairs a
+/// snake_case `TrainConfig` field with (`pipeline` → `PipelineConfig`).
+fn section_struct_name(field: &str) -> String {
+    let mut out = String::new();
+    for part in field.split('_') {
+        let mut ch = part.chars();
+        if let Some(c) = ch.next() {
+            out.extend(c.to_uppercase());
+            out.push_str(ch.as_str());
+        }
+    }
+    out.push_str("Config");
+    out
+}
+
+fn check_docs_freshness(
+    sources: &[(String, ScannedFile)],
+    design_md: &str,
+    readme_md: &str,
+    v: &mut Vec<Violation>,
+) {
+    // 9a: every TrainConfig knob has a row in DESIGN.md §Config knobs and
+    // every row names a live knob. A field whose `{CamelCase}Config`
+    // struct lives in the same file is a section: it expands to one knob
+    // per sub-field (`pipeline` → `pipeline.enabled`, …); anything else
+    // is a bare knob.
+    if let Some(sf) = get_source(sources, "configx/mod.rs", v, RULE_DOCS) {
+        match struct_fields(sf, "TrainConfig") {
+            Some(fields) if !fields.is_empty() => {
+                let mut knobs: Vec<(usize, String)> = Vec::new();
+                for (line, field) in &fields {
+                    match struct_fields(sf, &section_struct_name(field)) {
+                        Some(sub) if !sub.is_empty() => {
+                            for (sub_line, sub_field) in sub {
+                                knobs.push((sub_line, format!("{field}.{sub_field}")));
+                            }
+                        }
+                        _ => knobs.push((*line, field.clone())),
+                    }
+                }
+                let rows =
+                    md_table_rows(design_md, "DESIGN.md", KNOBS_BEGIN, KNOBS_END, "knob", v);
+                for (line, knob) in &knobs {
+                    if !rows.iter().any(|(_, c)| c.first().is_some_and(|x| x == knob)) {
+                        v.push(Violation {
+                            file: "configx/mod.rs".into(),
+                            line: *line,
+                            rule: RULE_DOCS,
+                            msg: format!(
+                                "config knob `{knob}` is missing from the DESIGN.md \
+                                 §Config knobs table — a knob users cannot discover is a \
+                                 knob that silently rots"
+                            ),
+                        });
+                    }
+                }
+                for (line, cells) in &rows {
+                    let Some(name) = cells.first() else { continue };
+                    if !knobs.iter().any(|(_, k)| k == name) {
+                        v.push(Violation {
+                            file: "DESIGN.md".into(),
+                            line: *line,
+                            rule: RULE_DOCS,
+                            msg: format!(
+                                "knob table row `{name}` matches no TrainConfig field — \
+                                 stale docs or a silently renamed knob"
+                            ),
+                        });
+                    }
+                }
+            }
+            _ => v.push(Violation {
+                file: "configx/mod.rs".into(),
+                line: 1,
+                rule: RULE_DOCS,
+                msg: "struct `TrainConfig` not found — moved? update rust/src/lint".into(),
+            }),
+        }
+    }
+    // 9b: every ServerStats / WorkerCounters field has a (struct, field)
+    // row in the README.md counters table, and every row names a live
+    // field.
+    let mut counters: Vec<(&str, &str, usize, String)> = Vec::new();
+    for (file, struct_name) in [("ps/stats.rs", "ServerStats"), ("worker/mod.rs", "WorkerCounters")]
+    {
+        let Some(sf) = get_source(sources, file, v, RULE_DOCS) else { continue };
+        match struct_fields(sf, struct_name) {
+            Some(fields) if !fields.is_empty() => {
+                for (line, field) in fields {
+                    counters.push((file, struct_name, line, field));
+                }
+            }
+            _ => v.push(Violation {
+                file: file.to_string(),
+                line: 1,
+                rule: RULE_DOCS,
+                msg: format!("struct `{struct_name}` not found — moved? update rust/src/lint"),
+            }),
+        }
+    }
+    let rows =
+        md_table_rows(readme_md, "README.md", COUNTERS_BEGIN, COUNTERS_END, "struct", v);
+    for (line, cells) in &rows {
+        if cells.len() < 2 {
+            v.push(Violation {
+                file: "README.md".into(),
+                line: *line,
+                rule: RULE_DOCS,
+                msg: "counters table row needs ≥2 cells (struct, field)".into(),
+            });
+        }
+    }
+    for (file, struct_name, line, field) in &counters {
+        let documented = rows.iter().any(|(_, c)| {
+            c.first().is_some_and(|s| s == struct_name)
+                && c.get(1).is_some_and(|f| f == field)
+        });
+        if !documented {
+            v.push(Violation {
+                file: (*file).to_string(),
+                line: *line,
+                rule: RULE_DOCS,
+                msg: format!(
+                    "counter `{struct_name}.{field}` is missing from the README.md \
+                     counters table — the shutdown surface must stay explorable"
+                ),
+            });
+        }
+    }
+    for (line, cells) in &rows {
+        if cells.len() < 2 {
+            continue;
+        }
+        let (s, f) = (&cells[0], &cells[1]);
+        if !counters.iter().any(|(_, sn, _, fd)| s == sn && fd == f) {
+            v.push(Violation {
+                file: "README.md".into(),
+                line: *line,
+                rule: RULE_DOCS,
+                msg: format!(
+                    "counters table row `{s}.{f}` matches no struct field — stale docs \
+                     or a silently renamed counter"
+                ),
+            });
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1249,6 +1478,11 @@ impl std::fmt::Display for WorkerCounters {
 }
 "#;
 
+    const CONFIGX_OK: &str = r"
+pub struct PipelineConfig { pub enabled: bool, pub block_bytes: usize }
+pub struct TrainConfig { pub steps: usize, pub pipeline: PipelineConfig }
+";
+
     const COMPRESS_OK: &str = r"
 pub enum SchemeId { Alpha, Beta }
 fn from_u8(v: u8) -> Option<SchemeId> {
@@ -1275,6 +1509,24 @@ fn wire_id(s: SchemeId) -> u8 {
 | 1 | fix.outer | `outer.lock` | fix.inner |
 | 2 | fix.inner | `inner.lock` |  |
 <!-- /lint:lock-order -->
+
+<!-- lint:config-knobs -->
+| knob | meaning |
+| --- | --- |
+| `steps` | training steps |
+| `pipeline.enabled` | pipeline toggle |
+| `pipeline.block_bytes` | block size |
+<!-- /lint:config-knobs -->
+";
+
+    const README_OK: &str = r"
+<!-- lint:counters -->
+| struct | field | meaning |
+| --- | --- | --- |
+| `ServerStats` | `pushes` | pushes handled |
+| `ServerStats` | `pulls` | pulls handled |
+| `WorkerCounters` | `stalls` | window stalls |
+<!-- /lint:counters -->
 ";
 
     fn sources(extra: &[(&str, &str)]) -> Vec<(String, ScannedFile)> {
@@ -1285,6 +1537,7 @@ fn wire_id(s: SchemeId) -> u8 {
             ("ps/stats.rs", STATS_OK),
             ("worker/mod.rs", WORKER_OK),
             ("compress/mod.rs", COMPRESS_OK),
+            ("configx/mod.rs", CONFIGX_OK),
         ];
         for e in extra {
             if let Some(slot) = base.iter_mut().find(|(p, _)| *p == e.0) {
@@ -1299,7 +1552,11 @@ fn wire_id(s: SchemeId) -> u8 {
     }
 
     fn rules(extra: &[(&str, &str)], design: &str) -> Vec<Violation> {
-        run_on(&sources(extra), design)
+        run_on(&sources(extra), design, README_OK)
+    }
+
+    fn rules_readme(extra: &[(&str, &str)], readme: &str) -> Vec<Violation> {
+        run_on(&sources(extra), DESIGN_OK, readme)
     }
 
     #[test]
@@ -1694,5 +1951,94 @@ fn wire_id(s: SchemeId) -> u8 {
         );
         let v = rules(&[("ps/core.rs", &core)], DESIGN_OK);
         assert!(v.iter().any(|x| x.rule == RULE_ANN && x.msg.contains("reason")), "{v:?}");
+    }
+
+    #[test]
+    fn undocumented_config_knob_fails_docs_freshness() {
+        // A new bare knob without a DESIGN.md row…
+        let configx = CONFIGX_OK
+            .replace("pub steps: usize,", "pub steps: usize, pub seed: u64,");
+        let v = rules(&[("configx/mod.rs", &configx)], DESIGN_OK);
+        assert!(
+            v.iter().any(|x| x.rule == RULE_DOCS && x.msg.contains("`seed`")),
+            "{v:?}"
+        );
+        // …and a new field inside a section struct (expands to
+        // `pipeline.inflight`) without a row.
+        let configx = CONFIGX_OK
+            .replace("pub block_bytes: usize }", "pub block_bytes: usize, pub inflight: usize }");
+        let v = rules(&[("configx/mod.rs", &configx)], DESIGN_OK);
+        assert!(
+            v.iter().any(|x| x.rule == RULE_DOCS && x.msg.contains("`pipeline.inflight`")),
+            "{v:?}"
+        );
+    }
+
+    #[test]
+    fn stale_knob_row_fails_docs_freshness() {
+        let design = DESIGN_OK.replace(
+            "<!-- /lint:config-knobs -->",
+            "| `pipeline.ghost` | gone since the refactor |\n<!-- /lint:config-knobs -->",
+        );
+        let v = rules(&[], &design);
+        assert!(
+            v.iter().any(|x| {
+                x.rule == RULE_DOCS && x.file == "DESIGN.md" && x.msg.contains("pipeline.ghost")
+            }),
+            "{v:?}"
+        );
+    }
+
+    #[test]
+    fn undocumented_counter_fails_docs_freshness() {
+        let stats = STATS_OK.replace("pub pulls: u64 }", "pub pulls: u64, pub ghost: u64 }");
+        let v = rules(&[("ps/stats.rs", &stats)], DESIGN_OK);
+        assert!(
+            v.iter().any(|x| {
+                x.rule == RULE_DOCS && x.msg.contains("ServerStats.ghost")
+            }),
+            "{v:?}"
+        );
+        // The counter-registry rule fires too (ghost is not in Display) —
+        // the two rules guard different surfaces.
+        assert!(v.iter().any(|x| x.rule == RULE_COUNTER), "{v:?}");
+    }
+
+    #[test]
+    fn stale_counter_row_fails_docs_freshness() {
+        let readme = README_OK.replace(
+            "<!-- /lint:counters -->",
+            "| `WorkerCounters` | `ghost` | long gone |\n<!-- /lint:counters -->",
+        );
+        let v = rules_readme(&[], &readme);
+        assert!(
+            v.iter().any(|x| {
+                x.rule == RULE_DOCS && x.file == "README.md" && x.msg.contains("ghost")
+            }),
+            "{v:?}"
+        );
+    }
+
+    #[test]
+    fn missing_docs_tables_are_errors() {
+        // DESIGN.md without the knobs markers.
+        let design = DESIGN_OK
+            .replace("<!-- lint:config-knobs -->", "")
+            .replace("<!-- /lint:config-knobs -->", "");
+        let v = rules(&[], &design);
+        assert!(
+            v.iter().any(|x| {
+                x.rule == RULE_DOCS && x.file == "DESIGN.md" && x.msg.contains("not found")
+            }),
+            "{v:?}"
+        );
+        // README.md (e.g. deleted) without the counters markers.
+        let v = rules_readme(&[], "");
+        assert!(
+            v.iter().any(|x| {
+                x.rule == RULE_DOCS && x.file == "README.md" && x.msg.contains("not found")
+            }),
+            "{v:?}"
+        );
     }
 }

@@ -37,6 +37,11 @@ fn opts() -> Vec<Opt> {
         Opt { name: "inflight", takes_value: true, help: "max in-flight (unacked) push jobs per worker" },
         Opt { name: "ack-window", takes_value: true, help: "drain acks during the push phase: on|off (default on)" },
         Opt { name: "iter-deadline-ms", takes_value: true, help: "server iteration deadline for degraded rounds (0 = strict BSP)" },
+        Opt { name: "adaptive", takes_value: true, help: "per-key adaptive compression controller: on|off (default off; topk/randomk + compressed_ef only)" },
+        Opt { name: "adaptive-k-min", takes_value: true, help: "adaptive controller: lower keep-ratio bound (fraction of elements)" },
+        Opt { name: "adaptive-k-max", takes_value: true, help: "adaptive controller: upper keep-ratio bound" },
+        Opt { name: "adaptive-ema", takes_value: true, help: "adaptive controller: gain EMA smoothing factor in (0, 1]" },
+        Opt { name: "adaptive-target-gain", takes_value: true, help: "adaptive controller: target compression gain in (0, 1)" },
     ]
 }
 
@@ -113,6 +118,17 @@ fn apply_overrides(cfg: &mut TrainConfig, a: &Args, servers_is_count: bool) -> R
     }
     cfg.server.iter_deadline_ms =
         a.u64_or("iter-deadline-ms", cfg.server.iter_deadline_ms)?;
+    if let Some(v) = a.get("adaptive") {
+        cfg.adaptive.enabled = match v {
+            "on" | "true" | "1" => true,
+            "off" | "false" | "0" => false,
+            other => return Err(format!("--adaptive: expected on|off, got '{other}'")),
+        };
+    }
+    cfg.adaptive.k_min = a.f64_or("adaptive-k-min", cfg.adaptive.k_min)?;
+    cfg.adaptive.k_max = a.f64_or("adaptive-k-max", cfg.adaptive.k_max)?;
+    cfg.adaptive.ema = a.f64_or("adaptive-ema", cfg.adaptive.ema)?;
+    cfg.adaptive.target_gain = a.f64_or("adaptive-target-gain", cfg.adaptive.target_gain)?;
     cfg.validate().map_err(|e| e.to_string())?;
     Ok(())
 }

@@ -85,6 +85,14 @@ pub struct ServerOptions {
     /// [`AUTO_DEADLINE_FLOOR`]), re-evaluated at every sealed full round
     /// once [`AUTO_DEADLINE_MIN_ROUNDS`] rounds are on record. `0` = off.
     pub deadline_auto_margin: f64,
+    /// Granted adaptive keep-ratio envelope `(k_min_ppm, k_max_ppm)`, the
+    /// same pair every `Welcome` on this shard carries (`adaptive.*`
+    /// knobs; see [`crate::compress::controller`]). `Some` makes ingress
+    /// enforce it: a structurally valid TopK/RandomK push whose element
+    /// budget `k` falls outside `[k_for_ppm(lo, n), k_for_ppm(hi, n)]` is
+    /// dropped and counted as `bounds_rejected`, never merged and never a
+    /// panic. `None` = static run — zero behavioral change.
+    pub adaptive_bounds: Option<(u32, u32)>,
 }
 
 /// A sealed round whose bytes are not ready yet: its seal was decided (by
@@ -415,6 +423,36 @@ impl ServerCore {
                     eprintln!("server: rejecting corrupt push for key {key} from worker {worker}: {e}");
                     self.stats.rejected += 1;
                     return vec![];
+                }
+                // Adaptive envelope (negotiated at registration): a
+                // structurally valid sparse block may still claim a keep
+                // ratio the handshake never granted — an honest controller
+                // stays inside the granted bounds (it clamps in ppm space
+                // and shares `k_for_ppm` with this check), so anything
+                // outside is a hostile or misconfigured client. Dropped
+                // and counted, never merged. Empty blocks (`n == 0`) are
+                // exempt: the sparsifiers emit `k == 0` for them while the
+                // envelope floor is 1 element.
+                if let Some((lo, hi)) = self.opts.adaptive_bounds {
+                    use crate::compress::controller::k_for_ppm;
+                    use crate::compress::SchemeId;
+                    if matches!(data.scheme, SchemeId::TopK | SchemeId::RandomK) && data.n > 0 {
+                        // validate_wire proved payload >= 4 bytes; the
+                        // leading u32 is the block's element budget `k`
+                        // for both sparse layouts.
+                        let k = crate::compress::get_u32(&data.payload, 0) as usize;
+                        let (k_lo, k_hi) = (k_for_ppm(lo, data.n), k_for_ppm(hi, data.n));
+                        if k < k_lo || k > k_hi {
+                            eprintln!(
+                                "server: rejecting out-of-bounds push for key {key} from \
+                                 worker {worker}: k={k} outside granted [{k_lo}, {k_hi}] \
+                                 (n={}, envelope [{lo}, {hi}] ppm)",
+                                data.n
+                            );
+                            self.stats.bounds_rejected += 1;
+                            return vec![];
+                        }
+                    }
                 }
                 // Every push targets (or establishes) an established key;
                 // placeholders don't consume this budget until a push
@@ -1076,6 +1114,7 @@ mod tests {
             iter_deadline: None,
             compress_threads: 0,
             deadline_auto_margin: 0.0,
+            adaptive_bounds: None,
         }
     }
 
@@ -1836,5 +1875,46 @@ mod tests {
         assert_eq!(core.stats.encode_depth_peak, 1);
         assert!(core.stats.ingress_s >= 0.0);
         assert_eq!(core.jobs_in_flight(), 0);
+    }
+
+    /// With a granted adaptive envelope, a structurally valid sparse push
+    /// whose `k` lies outside it is dropped and counted as
+    /// `bounds_rejected` (disjoint from `rejected`), and an in-bounds push
+    /// for the same key is still served normally afterwards.
+    #[test]
+    fn adaptive_envelope_rejects_out_of_bounds_k() {
+        use crate::compress::controller::{k_for_ppm, ppm_of};
+        // Envelope [1%, 10%] over n=100 elements → k ∈ [1, 10].
+        let (lo, hi) = (ppm_of(0.01), ppm_of(0.10));
+        let mut o = opts("topk", SyncMode::CompressedEf, 1);
+        o.adaptive_bounds = Some((lo, hi));
+        let n = 100usize;
+        assert_eq!((k_for_ppm(lo, n), k_for_ppm(hi, n)), (1, 10));
+        let mut core = ServerCore::new(o);
+        let g: Vec<f32> = (0..n).map(|i| i as f32).collect();
+        // A TopK(0.5) block claims k=50 — outside the granted [1, 10].
+        let hostile = crate::compress::topk::TopK::new(0.5);
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let data = hostile.compress(&g, &mut Ctx::new(&mut rng));
+        let r = core.handle(0, Message::Push { key: 0, iter: 0, worker: 0, data });
+        assert!(r.is_empty(), "out-of-bounds push must get no ack");
+        assert_eq!(core.stats.bounds_rejected, 1);
+        assert_eq!(core.stats.rejected, 0, "bounds rejections are counted separately");
+        assert_eq!(core.stats.pushes, 0);
+        // An in-bounds push (k = 10) completes the round and serves pulls.
+        let honest = crate::compress::topk::TopK::new(0.10);
+        let data = honest.compress(&g, &mut Ctx::new(&mut rng));
+        let r = core.handle(0, Message::Push { key: 0, iter: 0, worker: 0, data });
+        assert!(!r.is_empty(), "in-bounds push must be acked");
+        assert_eq!(core.stats.bounds_rejected, 1);
+        assert_eq!(core.stats.pushes, 1);
+        let r = core.handle(0, Message::Pull { key: 0, iter: 0, worker: 0 });
+        assert!(matches!(r[0].1, Message::PullResp { .. }));
+        // A static server (bounds None) accepts the same hostile block.
+        let mut core = ServerCore::new(opts("topk", SyncMode::CompressedEf, 1));
+        let data = hostile.compress(&g, &mut Ctx::new(&mut rng));
+        let r = core.handle(0, Message::Push { key: 0, iter: 0, worker: 0, data });
+        assert!(!r.is_empty());
+        assert_eq!(core.stats.bounds_rejected, 0);
     }
 }

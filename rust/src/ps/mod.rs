@@ -276,6 +276,7 @@ mod tests {
             iter_deadline: None,
             compress_threads: 0,
             deadline_auto_margin: 0.0,
+            adaptive_bounds: None,
         }
     }
 

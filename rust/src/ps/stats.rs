@@ -84,6 +84,13 @@ pub struct ServerStats {
     /// The shard recovers by discarding the partial round instead
     /// of asserting; each occurrence is counted here.
     pub short_iters: u64,
+    /// Structurally valid pushes whose sparsifier `k` fell outside the
+    /// adaptive envelope this server granted at registration
+    /// (`ServerOptions::adaptive_bounds`) — dropped and counted, never a
+    /// panic. Disjoint from `rejected` (wire-validation failures): a
+    /// bounds-rejected block parsed fine, it just claimed a keep ratio the
+    /// negotiation never granted. Always 0 on static runs.
+    pub bounds_rejected: u64,
     /// Pulls dropped because their iteration was already retired past the
     /// one-slot history (can only happen after a short iteration or a
     /// hostile client; honest BSP workers never lag two iterations).
@@ -150,12 +157,13 @@ impl std::fmt::Display for ServerStats {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "{} pushes | {} pulls | {} rejected | {} short iterations | \
-             {} degraded iterations | {} late pushes | {} stale pulls | \
-             {} early pulls | {} unexpected | {} internal errors",
+            "{} pushes | {} pulls | {} rejected | {} bounds rejected | \
+             {} short iterations | {} degraded iterations | {} late pushes | \
+             {} stale pulls | {} early pulls | {} unexpected | {} internal errors",
             self.pushes,
             self.pulls,
             self.rejected,
+            self.bounds_rejected,
             self.short_iters,
             self.degraded_iters,
             self.late_pushes,

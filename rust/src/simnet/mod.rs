@@ -372,6 +372,48 @@ pub fn scaling_efficiency(w: &Workload, c: &Cluster, p: &CompressorProfile) -> f
     t1 / tn
 }
 
+/// Geometric keep-ratio ramp from `lo` to `hi` over `steps` points — the
+/// trajectory the adaptive per-key controller traces when measured gain sits
+/// below `adaptive.target_gain` (its step rule is multiplicative, so the
+/// ramp is geometric, not linear). `steps == 1` yields just `lo`; the last
+/// point is always exactly `hi` otherwise. Endpoints outside `(0, 1]` are
+/// the caller's bug and are clamped defensively.
+pub fn ratio_trajectory(lo: f64, hi: f64, steps: usize) -> Vec<f64> {
+    let lo = lo.clamp(1e-9, 1.0);
+    let hi = hi.clamp(lo, 1.0);
+    let steps = steps.max(1);
+    if steps == 1 {
+        return vec![lo];
+    }
+    let log_lo = lo.ln();
+    let log_hi = hi.ln();
+    (0..steps)
+        .map(|i| {
+            let t = i as f64 / (steps - 1) as f64;
+            (log_lo + t * (log_hi - log_lo)).exp()
+        })
+        .collect()
+}
+
+/// Mean simulated step time over a keep-ratio trajectory: each point is a
+/// static [`default_profile`] for `scheme` at that ratio, weighted equally.
+/// This is the simnet projection of an *adaptive* run — the controller
+/// spends early iterations at small `k` and ratchets toward the bound, so
+/// its wall-clock sits between the static endpoints rather than at either.
+pub fn trajectory_mean_step_time(
+    w: &Workload,
+    c: &Cluster,
+    scheme: &str,
+    trajectory: &[f64],
+) -> f64 {
+    assert!(!trajectory.is_empty(), "trajectory must have at least one ratio");
+    let sum: f64 = trajectory
+        .iter()
+        .map(|&r| step_time(w, c, &default_profile(scheme, r)))
+        .sum();
+    sum / trajectory.len() as f64
+}
+
 /// Built-in (unmeasured) profiles with representative per-element costs —
 /// used in unit tests and as a fallback when benches run without
 /// calibration. Real benches overwrite these with `measure`d numbers.
@@ -607,6 +649,43 @@ mod tests {
         let dt = step_time(&wo, &lossy_o, &p) - step_time(&wo, &clean, &p);
         let want = degraded_wait_s(&wo, &lossy_o) * wo.sync_rounds;
         assert!((dt - want).abs() < 1e-9, "overlap hid the deadline stall: {dt} vs {want}");
+    }
+
+    /// Adaptive-trajectory projection: a geometric ramp's mean step time is
+    /// bracketed by the static endpoints (step time is monotone in the
+    /// keep ratio — more kept elements, more wire bytes), and degenerate
+    /// ramps collapse to the static model exactly.
+    #[test]
+    fn adaptive_trajectory_time_sits_between_static_endpoints() {
+        let traj = ratio_trajectory(0.001, 0.05, 8);
+        assert_eq!(traj.len(), 8);
+        assert!((traj[0] - 0.001).abs() < 1e-12);
+        assert!((traj[7] - 0.05).abs() < 1e-12);
+        // geometric => strictly increasing
+        for i in 1..traj.len() {
+            assert!(traj[i] > traj[i - 1], "traj={traj:?}");
+        }
+
+        let mut w = Workload::vgg16();
+        w.overlap = 0.0; // comm fully visible, so ratio changes show in time
+        let c = Cluster::default();
+        let t_lo = step_time(&w, &c, &default_profile("topk", 0.001));
+        let t_hi = step_time(&w, &c, &default_profile("topk", 0.05));
+        assert!(t_lo < t_hi, "test setup: step time must grow with ratio");
+        let t_adaptive = trajectory_mean_step_time(&w, &c, "topk", &traj);
+        assert!(
+            t_adaptive > t_lo && t_adaptive < t_hi,
+            "adaptive {t_adaptive} outside static bracket [{t_lo}, {t_hi}]"
+        );
+
+        // A flat trajectory IS the static model.
+        let flat = ratio_trajectory(0.01, 0.01, 4);
+        let t_flat = trajectory_mean_step_time(&w, &c, "topk", &flat);
+        let t_static = step_time(&w, &c, &default_profile("topk", 0.01));
+        assert!((t_flat - t_static).abs() < 1e-12);
+
+        // Single-point trajectory is just the lower endpoint.
+        assert_eq!(ratio_trajectory(0.02, 0.3, 1), vec![0.02]);
     }
 
     #[test]

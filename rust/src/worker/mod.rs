@@ -7,6 +7,7 @@
 pub mod pipeline;
 
 use crate::comm::{Endpoint, Key, Message};
+use crate::compress::controller::GainController;
 use crate::compress::ef::EfState;
 use crate::compress::{Compressor, Ctx};
 use crate::configx::SyncMode;
@@ -117,6 +118,13 @@ pub struct WorkerComm {
     /// Fault-injection hook: `(key, iter)` pushes to drop before the wire
     /// (each fires once). Tests use it to simulate a lost push.
     drop_pushes: Arc<Mutex<HashSet<(Key, u64)>>>,
+    /// Per-key adaptive compression controller
+    /// ([`crate::compress::controller`]), built from the bounds the
+    /// handshake granted. `None` = static run: the pipelined push path is
+    /// bit-identical to the pre-controller code. Only the *pipelined*
+    /// CompressedEf push path consults it — the serial reference path
+    /// ([`push`](WorkerComm::push)) stays static by design.
+    adaptive: Option<Arc<GainController>>,
 }
 
 /// Worker-side liveness counters (see [`WorkerComm::counters`]).
@@ -131,6 +139,16 @@ pub struct WorkerCounters {
     /// (acks stopped draining; the phase finished unwindowed). At most
     /// one per push phase.
     pub window_stalls: u64,
+    /// Keep-ratio adjustments the adaptive controller made across all
+    /// keys (0 on static runs, or when every key's gain sat inside the
+    /// dead band the whole run).
+    pub k_adjustments: u64,
+    /// Smallest per-key keep ratio (parts-per-million) the controller
+    /// currently holds — with `k_ppm_hi`, the observed trajectory span.
+    /// On static runs both are 0.
+    pub k_ppm_lo: u64,
+    /// Largest per-key keep ratio (ppm) the controller currently holds.
+    pub k_ppm_hi: u64,
 }
 
 /// The one canonical rendering of the worker counter set (mirrors
@@ -141,8 +159,14 @@ impl std::fmt::Display for WorkerCounters {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "{} degraded pulls | {} dropped pushes | {} window stalls",
-            self.degraded_responses, self.dropped_pushes, self.window_stalls
+            "{} degraded pulls | {} dropped pushes | {} window stalls | \
+             {} k adjustments | k ppm span [{}, {}]",
+            self.degraded_responses,
+            self.dropped_pushes,
+            self.window_stalls,
+            self.k_adjustments,
+            self.k_ppm_lo,
+            self.k_ppm_hi
         )
     }
 }
@@ -191,6 +215,7 @@ impl WorkerComm {
         inflight: usize,
         ack_window: bool,
         n_workers: usize,
+        adaptive: Option<Arc<GainController>>,
     ) -> Self {
         WorkerComm {
             worker_id,
@@ -213,6 +238,7 @@ impl WorkerComm {
             dropped_pushes: Arc::new(AtomicU64::new(0)),
             window_stalls: AtomicU64::new(0),
             drop_pushes: Arc::new(Mutex::new(HashSet::new())),
+            adaptive,
         }
     }
 
@@ -226,10 +252,20 @@ impl WorkerComm {
     /// Worker-side liveness counters: degraded rounds seen, pushes
     /// dropped by fault injection, windowed-push stalls.
     pub fn counters(&self) -> WorkerCounters {
+        let (k_adjustments, (k_ppm_lo, k_ppm_hi)) = match &self.adaptive {
+            Some(ctl) => {
+                let (lo, hi) = ctl.ppm_span();
+                (ctl.adjustments(), (u64::from(lo), u64::from(hi)))
+            }
+            None => (0, (0, 0)),
+        };
         WorkerCounters {
             degraded_responses: self.degraded_responses.load(Ordering::Relaxed),
             dropped_pushes: self.dropped_pushes.load(Ordering::Relaxed),
             window_stalls: self.window_stalls.load(Ordering::Relaxed),
+            k_adjustments,
+            k_ppm_lo,
+            k_ppm_hi,
         }
     }
 
@@ -354,6 +390,7 @@ impl WorkerComm {
         let dropped = Arc::clone(&self.dropped_pushes);
         let (sync, fused, intra, worker) =
             (self.sync, self.fused, self.intra_threads, self.worker_id);
+        let adaptive = self.adaptive.clone();
         let seed = pipeline::job_seed(self.seed, worker, key, iter);
         let cns = Arc::clone(compress_ns);
         self.pool.execute(move || {
@@ -363,9 +400,23 @@ impl WorkerComm {
             let data = match sync {
                 // EF keeps `g` as the block's new residual (recycling the
                 // displaced one); otherwise the staging copy dies here.
-                SyncMode::CompressedEf => {
-                    block_ef.compress(key, g, comp.as_ref(), fused, &mut ctx)
-                }
+                //
+                // With a controller, this block compresses at the key's
+                // *current* keep ratio, the achieved gain feeds back, and
+                // the next iteration of this key sees the adjusted ratio.
+                // The controller clamps into the granted bounds, so an
+                // honest worker can never trip the server's
+                // `bounds_rejected` ingress check.
+                SyncMode::CompressedEf => match &adaptive {
+                    Some(ctl) => {
+                        let comp = ctl.compressor_for(key);
+                        let (c, gain) =
+                            block_ef.compress_gain(key, g, comp.as_ref(), fused, &mut ctx);
+                        ctl.observe(key, gain);
+                        c
+                    }
+                    None => block_ef.compress(key, g, comp.as_ref(), fused, &mut ctx),
+                },
                 _ => {
                     let c = comp.compress(&g, &mut ctx);
                     crate::comm::BufPool::global().give_f32(g);

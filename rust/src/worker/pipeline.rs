@@ -134,16 +134,50 @@ impl BlockEf {
     pub fn compress(
         &self,
         key: Key,
-        mut g: Vec<f32>,
+        g: Vec<f32>,
         comp: &dyn Compressor,
         fused: bool,
         ctx: &mut Ctx,
     ) -> Compressed {
+        self.compress_inner(key, g, comp, fused, ctx, false).0
+    }
+
+    /// [`compress`](BlockEf::compress) plus the block's *compression gain*
+    /// for the adaptive controller: with `q = g + e` the corrected input
+    /// and `e'` the residual left behind, the gain is
+    /// `1 − ‖e'‖² / ‖q‖²` — for the zero-filling sparsifiers
+    /// (TopK/RandomK) the kept and dropped coordinates are disjoint, so
+    /// this equals `‖compressed‖² / ‖q‖²` exactly, with no decode needed
+    /// (see [`crate::compress::controller`]). `‖q‖² = 0` reports gain 1.
+    pub fn compress_gain(
+        &self,
+        key: Key,
+        g: Vec<f32>,
+        comp: &dyn Compressor,
+        fused: bool,
+        ctx: &mut Ctx,
+    ) -> (Compressed, f64) {
+        self.compress_inner(key, g, comp, fused, ctx, true)
+    }
+
+    /// Shared EF cycle. `measure = false` skips both norm passes so the
+    /// static path stays cost- and bit-identical to the pre-controller
+    /// code (the reported gain is then a constant 1.0, unused).
+    fn compress_inner(
+        &self,
+        key: Key,
+        mut g: Vec<f32>,
+        comp: &dyn Compressor,
+        fused: bool,
+        ctx: &mut Ctx,
+        measure: bool,
+    ) -> (Compressed, f64) {
         let slot = self.slot(key, g.len());
         let mut e = slot.lock().unwrap_or_else(|p| p.into_inner());
         // lint: allow(panic) — caller contract: a block's length is fixed by the partition; a size change is a harness bug, not a wire input
         assert_eq!(e.len(), g.len(), "block {key} changed size");
         crate::compress::kernels::add_assign(&mut g, &e);
+        let t2 = if measure { crate::compress::controller::sumsq(&g) } else { 0.0 };
         let pool = crate::comm::BufPool::global();
         let c = if fused {
             comp.compress_ef_fused(&mut g, ctx)
@@ -155,10 +189,16 @@ impl BlockEf {
             pool.give_f32(dec);
             c
         };
+        // After either branch `g` holds the new residual e'.
+        let gain = if measure {
+            crate::compress::controller::gain_from(t2, crate::compress::controller::sumsq(&g))
+        } else {
+            1.0
+        };
         // `g` becomes the new residual; the displaced one is recycled (the
         // staging copy rented in push_all thus round-trips via the pool).
         pool.give_f32(std::mem::replace(&mut *e, g));
-        c
+        (c, gain)
     }
 
     /// Total f32 elements held as residual state (memory accounting).
@@ -324,6 +364,27 @@ mod tests {
             let cb = ef.compress(5, &g, comp.as_ref(), &mut Ctx::new(&mut r2));
             assert_eq!(ca, cb, "wire mismatch at iter {iter}");
             assert_eq!(bef.residual(5).unwrap(), ef.residual(5).unwrap().to_vec());
+        }
+    }
+
+    /// The measuring variant is wire- and residual-identical to the plain
+    /// one (the norm passes are read-only) and reports a gain in (0, 1].
+    #[test]
+    fn block_ef_compress_gain_matches_compress() {
+        let comp = by_name("topk", 0.25).unwrap();
+        let a = BlockEf::new();
+        let b = BlockEf::new();
+        let mut data_rng = Xoshiro256::seed_from_u64(9);
+        for iter in 0..4u64 {
+            let mut g = vec![0.0f32; 64];
+            data_rng.fill_normal(&mut g, 1.0);
+            let mut r1 = Xoshiro256::seed_from_u64(iter);
+            let mut r2 = Xoshiro256::seed_from_u64(iter);
+            let ca = a.compress(7, g.clone(), comp.as_ref(), true, &mut Ctx::new(&mut r1));
+            let (cb, gain) = b.compress_gain(7, g, comp.as_ref(), true, &mut Ctx::new(&mut r2));
+            assert_eq!(ca, cb, "measuring must not change the wire at iter {iter}");
+            assert!(gain > 0.0 && gain <= 1.0, "gain {gain} out of range");
+            assert_eq!(a.residual(7).unwrap(), b.residual(7).unwrap());
         }
     }
 

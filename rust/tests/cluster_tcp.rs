@@ -8,8 +8,10 @@
 use byteps_compress::cluster;
 use byteps_compress::comm::tcp::TcpEndpoint;
 use byteps_compress::comm::{BlockKey, Endpoint, Message};
-use byteps_compress::compress::{by_name, Compressed, SchemeId};
+use byteps_compress::compress::controller::ppm_of;
+use byteps_compress::compress::{by_name, Compressed, Ctx, SchemeId};
 use byteps_compress::configx::{SyncMode, TrainConfig};
+use byteps_compress::util::rng::Xoshiro256;
 use byteps_compress::engine::CommFabric;
 use byteps_compress::ps::{Server, ServerOptions};
 use byteps_compress::testutil::assert_allclose;
@@ -340,6 +342,105 @@ fn degraded_deadline_idle_is_bit_identical() {
     }
 }
 
+/// Tentpole acceptance (adaptive controller): a 2-worker TCP cluster with
+/// the per-key controller enabled negotiates its bounds at registration,
+/// adapts `k` within them (adjustment counters move, the per-key ppm span
+/// stays inside the grant, and a below-target gain pushes `k` upward from
+/// the static starting ratio), never trips the servers' envelope check,
+/// and produces the same aggregates as the adaptive inproc fabric — the
+/// controller is deterministic per (worker, key), so transport must not
+/// change the trajectory.
+#[test]
+fn adaptive_cluster_matches_inproc_and_stays_in_bounds() {
+    let (dim, tensors, iters, nodes, servers) = (1536, 2, 4, 2, 2);
+    let mut cfg = cluster_cfg("topk", 0.05, SyncMode::CompressedEf, nodes);
+    cfg.adaptive.enabled = true;
+    cfg.adaptive.k_min = 0.01;
+    cfg.adaptive.k_max = 0.5;
+    cfg.adaptive.ema = 0.5;
+    // Integer-valued synthetic grads spread energy nearly uniformly, so
+    // top-5% gain sits far below this target: every key must ratchet
+    // toward k_max.
+    cfg.adaptive.target_gain = 0.95;
+    let mut ref_cfg = cfg.clone();
+    ref_cfg.cluster.addresses = (0..servers).map(|s| format!("ref:{s}")).collect();
+    let want = inproc_reference(&ref_cfg, dim, tensors, iters);
+
+    let (reports, stats) = run_thread_cluster_with(cfg, servers, dim, tensors, iters, None);
+    let (lo, hi) = (u64::from(ppm_of(0.01)), u64::from(ppm_of(0.5)));
+    for (rank, rep) in reports.iter().enumerate() {
+        assert_eq!(rep.aggregates.len(), iters);
+        for (it, (got, expect)) in rep.aggregates.iter().zip(&want).enumerate() {
+            assert_allclose(
+                got,
+                expect,
+                1e-6,
+                1e-5,
+                &format!("adaptive worker {rank} iter {it}: TCP diverged from inproc"),
+            );
+        }
+        let c = &rep.counters;
+        assert!(c.k_adjustments > 0, "worker {rank}: controller never adjusted");
+        assert!(
+            c.k_ppm_lo >= lo && c.k_ppm_hi <= hi && c.k_ppm_lo <= c.k_ppm_hi,
+            "worker {rank}: ppm span [{}, {}] outside granted [{lo}, {hi}]",
+            c.k_ppm_lo,
+            c.k_ppm_hi
+        );
+        assert!(
+            c.k_ppm_hi > u64::from(ppm_of(0.05)),
+            "worker {rank}: below-target gain must push k above the static ratio"
+        );
+    }
+    for s in &stats {
+        assert_eq!(s.bounds_rejected, 0, "honest adaptive workers must stay in the envelope");
+        assert_eq!(s.rejected, 0);
+        assert_eq!(s.short_iters, 0);
+    }
+}
+
+/// Hostile adaptive client over real sockets: a structurally valid TopK
+/// push whose `k` lies outside the granted envelope is dropped unacked and
+/// counted as `bounds_rejected` (never `rejected` — the block parsed
+/// fine), and the shard keeps serving in-bounds traffic for the same key.
+#[test]
+fn tcp_adaptive_out_of_bounds_push_rejected_and_counted() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let accept = std::thread::spawn(move || {
+        let (s, _) = listener.accept().unwrap();
+        let mut o = opts_identity(1);
+        o.comp = by_name("topk", 0.10).unwrap();
+        o.sync = SyncMode::CompressedEf;
+        // Envelope [1%, 10%] over n = 100 elements → k ∈ [1, 10].
+        o.adaptive_bounds = Some((ppm_of(0.01), ppm_of(0.10)));
+        Server::spawn(o, vec![TcpEndpoint::from_stream(s).unwrap()])
+    });
+    let ep = TcpEndpoint::connect(addr).unwrap();
+    let server = accept.join().unwrap();
+
+    let g: Vec<f32> = (0..100).map(|i| (i as f32) - 50.0).collect();
+    let mut rng = Xoshiro256::seed_from_u64(3);
+    // k = 50 of n = 100: wire-valid, but far outside the granted [1, 10].
+    let hostile = by_name("topk", 0.5).unwrap().compress(&g, &mut Ctx::new(&mut rng));
+    ep.send(Message::Push { key: 0, iter: 0, worker: 0, data: hostile }).unwrap();
+    // k = 10: exactly the envelope's upper edge — accepted and acked.
+    let honest = by_name("topk", 0.10).unwrap().compress(&g, &mut Ctx::new(&mut rng));
+    ep.send(Message::Push { key: 0, iter: 0, worker: 0, data: honest }).unwrap();
+    // The first (and only) ack belongs to the in-bounds push: the hostile
+    // one was dropped before it could touch the round.
+    assert_eq!(ep.recv().unwrap(), Message::Ack { key: 0, iter: 0 });
+    ep.send(Message::Pull { key: 0, iter: 0, worker: 0 }).unwrap();
+    let Message::PullResp { served_with, data, .. } = recv_resp(&ep) else { panic!("no resp") };
+    assert_eq!(served_with, 1);
+    assert_eq!(data.n, 100);
+    ep.send(Message::Shutdown).unwrap();
+    let stats = server.join();
+    assert_eq!(stats.bounds_rejected, 1);
+    assert_eq!(stats.rejected, 0, "an envelope violation is not a corruption rejection");
+    assert_eq!(stats.pushes, 1);
+}
+
 fn identity_block(vals: &[f32]) -> Compressed {
     let mut payload = Vec::with_capacity(4 * vals.len());
     for v in vals {
@@ -360,6 +461,7 @@ fn opts_identity(workers: usize) -> ServerOptions {
         iter_deadline: None,
         compress_threads: 0,
         deadline_auto_margin: 0.0,
+        adaptive_bounds: None,
     }
 }
 

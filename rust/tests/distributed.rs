@@ -280,6 +280,7 @@ fn tcp_fabric_matches_reference() {
                 iter_deadline: None,
                 compress_threads: 0,
                 deadline_auto_margin: 0.0,
+                adaptive_bounds: None,
             },
             eps,
         );

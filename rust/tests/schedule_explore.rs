@@ -52,6 +52,7 @@ fn opts(comp: Arc<dyn Compressor>, compress_threads: usize) -> ServerOptions {
         iter_deadline: None,
         compress_threads,
         deadline_auto_margin: 0.0,
+        adaptive_bounds: None,
     }
 }
 
