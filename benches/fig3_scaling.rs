@@ -148,5 +148,43 @@ fn main() {
         "{}",
         markdown_table(&["push loss", "1 node", "2 nodes", "4 nodes", "8 nodes"], &rows)
     );
+
+    // Hierarchical two-level aggregation: projected per-round server
+    // bottleneck (fixed aggregator pool, whole-gradient units) flat vs the
+    // best group split, plus the projected crossover worker count per
+    // compressor — wire-heavy methods cross over at a handful of workers,
+    // CPU-heavy sparsifiers (re-encode paid twice) only on big fleets.
+    println!("\n# Hierarchical aggregation — flat vs two-level round time (VGG16 gradient)\n");
+    let d = Workload::vgg16().d_elems;
+    let c = Cluster::default();
+    let mut rows = Vec::new();
+    for (label, scheme, param) in METHODS {
+        let comp = compress::by_name(scheme, param).unwrap();
+        let prof = CompressorProfile::measure(label, comp.as_ref(), 1 << 21, param);
+        let mut cells = vec![label.to_string()];
+        for nodes in [16usize, 64, 256] {
+            let flat = simnet::fan_in_round_s(d, nodes, &c, &prof);
+            match simnet::best_group_size(d, nodes, &c, &prof) {
+                Some((m, hier)) => cells.push(format!(
+                    "{:.0} / {:.0} ms (m={m})",
+                    flat * 1e3,
+                    hier * 1e3
+                )),
+                None => cells.push(format!("{:.0} / - ms", flat * 1e3)),
+            }
+        }
+        cells.push(match simnet::hier_crossover_nodes(d, &c, &prof, 1 << 14) {
+            Some(x) => format!("{x} workers"),
+            None => "> 16384".to_string(),
+        });
+        rows.push(cells);
+    }
+    println!(
+        "{}",
+        markdown_table(
+            &["method", "flat/2-level @16", "@64", "@256", "crossover"],
+            &rows
+        )
+    );
     println!("paper shape check: all compressed methods ≥ NAG; VGG16 NAG ≈ ideal 40%.");
 }

@@ -81,7 +81,9 @@ pub const CONNECT_TIMEOUT: Duration = Duration::from_secs(30);
 /// Fingerprint of everything both ends of the wire must agree on beyond
 /// the partition size: the frame wire-format version
 /// ([`crate::comm::frame::WIRE_VERSION`]), compressor scheme/param, sync
-/// mode, fusion, size threshold, pipeline shape, and whether the adaptive
+/// mode, fusion, size threshold, pipeline shape, the hierarchical group
+/// count (`cluster.groups` — a flat peer must never register against a
+/// two-level fleet), and whether the adaptive
 /// controller is on (its *bounds* ride in `Hello`/`Welcome` explicitly —
 /// only the on/off bit must match, so an adaptive worker never registers
 /// against a static fleet). Sent in `Hello` and checked at registration,
@@ -90,7 +92,7 @@ pub const CONNECT_TIMEOUT: Duration = Duration::from_secs(30);
 /// rejected loudly instead of training on silently wrong aggregates.
 pub fn config_fingerprint(cfg: &TrainConfig) -> u64 {
     let canon = format!(
-        "wire{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|adaptive{}",
+        "wire{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|adaptive{}|groups{}",
         crate::comm::frame::WIRE_VERSION,
         cfg.compression.scheme,
         cfg.compression.param.to_bits(),
@@ -102,6 +104,10 @@ pub fn config_fingerprint(cfg: &TrainConfig) -> u64 {
         cfg.pipeline.enabled,
         cfg.pipeline.block_bytes,
         cfg.adaptive.enabled,
+        // Topology tier count: a flat worker dialing a hierarchical shard
+        // (or vice versa) would register fine and then aggregate with the
+        // wrong weights — reject it at Hello instead.
+        cfg.cluster.groups,
     );
     // FNV-1a over the canonical string, finished through SplitMix64.
     let mut h: u64 = 0xcbf2_9ce4_8422_2325;
@@ -281,11 +287,17 @@ pub fn serve(
         anyhow::bail!("--shard {shard} out of range: the config derives {} shards", spec.n_servers);
     }
     let addr = listener.local_addr().context("listener address")?;
+    // Hierarchical mode: the shard's peers are the G group leaders, not
+    // the W workers — the whole point of the two-level topology. Ranks in
+    // `Hello` are group indices then; `ServerOptions::n_workers` still
+    // carries W so weighted group pushes average exactly like flat ones.
+    let registrants = spec.registrants();
     eprintln!(
-        "server shard {shard}/{}: listening on {addr}, waiting for {} worker(s)",
-        spec.n_servers, spec.n_workers
+        "server shard {shard}/{}: listening on {addr}, waiting for {} {}",
+        spec.n_servers,
+        registrants,
+        if spec.groups > 0 { "group leader(s)" } else { "worker(s)" }
     );
-    let n_workers = spec.n_workers;
     let n_keys = spec.partition.len() as u64;
     let config = config_fingerprint(cfg);
     // This shard's adaptive envelope: its own configured request. Every
@@ -298,7 +310,7 @@ pub fn serve(
     // Template Welcome; handshake_accept patches in the per-worker granted
     // bounds before sending.
     let welcome = Message::Welcome {
-        n_workers: n_workers as u32,
+        n_workers: spec.n_workers as u32,
         shard: shard as u32,
         seed: cfg.seed,
         k_min_ppm: 0,
@@ -306,12 +318,12 @@ pub fn serve(
         plan: spec.plan.assignments(),
     };
 
-    let mut slots: Vec<Option<TcpEndpoint>> = (0..n_workers).map(|_| None).collect();
+    let mut slots: Vec<Option<TcpEndpoint>> = (0..registrants).map(|_| None).collect();
     let mut registered = 0usize;
     {
         let (tx, rx) = std::sync::mpsc::channel::<(usize, TcpEndpoint)>();
         let stop = Arc::new(AtomicBool::new(false));
-        let claimed = Arc::new(Mutex::new(vec![false; n_workers]));
+        let claimed = Arc::new(Mutex::new(vec![false; registrants]));
         listener.set_nonblocking(true).context("listener nonblocking")?;
         let acceptor = {
             let stop = Arc::clone(&stop);
@@ -331,7 +343,7 @@ pub fn serve(
                             // in a closed channel.
                             std::thread::spawn(move || {
                                 match handshake_accept(
-                                    stream, n_workers, n_keys, config, envelope, welcome,
+                                    stream, registrants, n_keys, config, envelope, welcome,
                                     &claimed,
                                 ) {
                                     Ok(pair) => {
@@ -355,7 +367,7 @@ pub fn serve(
                 }
             })
         };
-        while registered < n_workers {
+        while registered < registrants {
             match rx.recv_timeout(Duration::from_millis(200)) {
                 Ok((rank, ep)) => {
                     if slots[rank].is_some() {
@@ -392,8 +404,8 @@ pub fn serve(
                 }
                 Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
                     anyhow::bail!(
-                        "server shard {shard}: accept loop died with {registered}/{n_workers} \
-                         workers registered"
+                        "server shard {shard}: accept loop died with {registered}/{registrants} \
+                         peers registered"
                     );
                 }
             }
@@ -436,33 +448,19 @@ pub struct WorkerRunReport {
     pub counters: crate::worker::WorkerCounters,
 }
 
-/// `bytepsc worker`: connect to every server shard, register, run `iters`
-/// synchronous push/pull iterations of the synthetic driver, shut down.
-/// `drop` is the optional fault-injection order (`--drop-push`).
-pub fn run_worker(
+/// Dial every listed shard, register as `ident` (the worker rank when
+/// flat or a group member; the group index when a leader), and adopt the
+/// fleet's `(seed, granted bounds, plan)` — insisting every shard agrees.
+/// `who` labels log/error lines ("worker 3", "leader 1").
+fn register_with_shards(
     cfg: &TrainConfig,
-    rank: u32,
+    spec: &FabricSpec,
+    ident: u32,
+    who: &str,
     servers: &[String],
-    dim: usize,
-    tensors: usize,
-    iters: usize,
-    dump: Option<&Path>,
-    drop: Option<PushDrop>,
-) -> Result<WorkerRunReport> {
-    // The address list *is* the shard count; pin the local derivation to
-    // it so `FabricSpec` cannot disagree with the fleet being dialed.
-    let mut cfg = cfg.clone();
-    cfg.cluster.addresses = servers.to_vec();
-    let blocks = synthetic_blocks(dim, tensors);
-    let spec = FabricSpec::from_config(&cfg, &blocks)?;
-    if rank as usize >= spec.n_workers {
-        anyhow::bail!("--rank {rank} out of range: the config derives {} workers", spec.n_workers);
-    }
-
-    // Connect + register with every shard; adopt (seed, bounds, plan) from
-    // the servers and insist all shards agree.
-    let config = config_fingerprint(&cfg);
-    let requested = crate::compress::controller::requested_bounds(&cfg);
+) -> Result<(Vec<Box<dyn Endpoint>>, u64, (u32, u32), Vec<(Key, u32)>)> {
+    let config = config_fingerprint(cfg);
+    let requested = crate::compress::controller::requested_bounds(cfg);
     // The Welcome's size is known up front (header + 12 bytes per plan
     // entry); cap the read so a mis-dialed port or hostile listener
     // cannot make this worker allocate an attacker-chosen buffer.
@@ -471,89 +469,96 @@ pub fn run_worker(
     let mut adopted: Option<(u32, u64, (u32, u32), Vec<(Key, u32)>)> = None;
     for (s, addr) in servers.iter().enumerate() {
         let ep = connect_retry(addr, CONNECT_TIMEOUT)
-            .with_context(|| format!("worker {rank}: server shard {s}"))?;
+            .with_context(|| format!("{who}: server shard {s}"))?;
         ep.send(Message::Hello {
-            worker: rank,
+            worker: ident,
             n_keys: spec.partition.len() as u64,
             config,
             k_min_ppm: requested.0,
             k_max_ppm: requested.1,
         })
-        .map_err(|e| anyhow::anyhow!("worker {rank}: hello to {addr}: {e}"))?;
+        .map_err(|e| anyhow::anyhow!("{who}: hello to {addr}: {e}"))?;
         // Bounded wait: a server that accepted but never answers (or a
         // mis-dialed port speaking another protocol) should fail the
         // launch loudly, not hang it.
         ep.set_read_timeout(Some(HANDSHAKE_TIMEOUT))
-            .map_err(|e| anyhow::anyhow!("worker {rank}: set timeout: {e}"))?;
+            .map_err(|e| anyhow::anyhow!("{who}: set timeout: {e}"))?;
         let welcome = ep
             .recv_bounded(welcome_cap)
-            .map_err(|e| anyhow::anyhow!("worker {rank}: no Welcome from {addr}: {e}"))?;
+            .map_err(|e| anyhow::anyhow!("{who}: no Welcome from {addr}: {e}"))?;
         ep.set_read_timeout(None)
-            .map_err(|e| anyhow::anyhow!("worker {rank}: clear timeout: {e}"))?;
+            .map_err(|e| anyhow::anyhow!("{who}: clear timeout: {e}"))?;
         let Message::Welcome { n_workers, shard, seed, k_min_ppm, k_max_ppm, plan } = welcome
         else {
-            anyhow::bail!("worker {rank}: {addr} replied with something other than Welcome");
+            anyhow::bail!("{who}: {addr} replied with something other than Welcome");
         };
         if shard as usize != s {
             anyhow::bail!(
-                "worker {rank}: {addr} is shard {shard} but was listed at position {s}: \
+                "{who}: {addr} is shard {shard} but was listed at position {s}: \
                  --servers order must match the shard indices"
             );
         }
         if n_workers as usize != spec.n_workers {
             anyhow::bail!(
-                "worker {rank}: {addr} expects {n_workers} workers, local config says {}",
+                "{who}: {addr} expects {n_workers} workers, local config says {}",
                 spec.n_workers
             );
         }
         let granted = (k_min_ppm, k_max_ppm);
         if requested == (0, 0) && granted != (0, 0) {
             anyhow::bail!(
-                "worker {rank}: {addr} granted adaptive bounds to a static request — \
+                "{who}: {addr} granted adaptive bounds to a static request — \
                  protocol violation"
             );
         }
         if let Some((_, seed0, granted0, plan0)) = &adopted {
             if *seed0 != seed {
-                anyhow::bail!("worker {rank}: shards disagree on the run seed");
+                anyhow::bail!("{who}: shards disagree on the run seed");
             }
             if *granted0 != granted {
                 anyhow::bail!(
-                    "worker {rank}: shards disagree on the granted adaptive bounds \
+                    "{who}: shards disagree on the granted adaptive bounds \
                      ({granted0:?} vs {granted:?} ppm) — launch configs disagree"
                 );
             }
             if *plan0 != plan {
-                anyhow::bail!("worker {rank}: shards disagree on the shard plan");
+                anyhow::bail!("{who}: shards disagree on the shard plan");
             }
         } else {
             adopted = Some((n_workers, seed, granted, plan));
         }
         endpoints.push(Box::new(ep) as Box<dyn Endpoint>);
-        eprintln!("worker {rank}: registered with shard {s} at {addr}");
+        eprintln!("{who}: registered with shard {s} at {addr}");
     }
     let (_, seed, granted, plan_entries) = adopted.expect("at least one server");
-    let plan = Arc::new(
-        ShardPlan::from_assignments(&plan_entries, servers.len()).map_err(anyhow::Error::msg)?,
-    );
-    for sb in spec.partition.subs() {
-        if !plan.contains(sb.key) {
-            anyhow::bail!(
-                "worker {rank}: the servers' plan is missing block key {} — \
-                 launch configs disagree",
-                sb.key
-            );
-        }
-    }
+    Ok((endpoints, seed, granted, plan_entries))
+}
 
+/// The synthetic training loop shared by `bytepsc worker` and the group
+/// leader's co-located member: deterministic gradients, BSP push/pull
+/// over `endpoints` routed by `plan`, SGD on a local parameter replica.
+#[allow(clippy::too_many_arguments)]
+fn drive_worker(
+    cfg: &TrainConfig,
+    spec: &FabricSpec,
+    rank: u32,
+    seed: u64,
+    granted: (u32, u32),
+    endpoints: Vec<Box<dyn Endpoint>>,
+    plan: Arc<ShardPlan>,
+    dim: usize,
+    iters: usize,
+    dump: Option<&Path>,
+    drop: Option<PushDrop>,
+) -> Result<WorkerRunReport> {
     // The controller honors the *granted* bounds adopted from the servers
     // (which may be narrower than this worker's config requested).
-    let adaptive = crate::compress::controller::from_negotiated(&cfg, granted);
+    let adaptive = crate::compress::controller::from_negotiated(cfg, granted);
     if let Some(ctl) = &adaptive {
         let (lo, hi) = ctl.bounds_ppm();
         eprintln!("worker {rank}: adaptive compression on, granted k in [{lo}, {hi}] ppm");
     }
-    let mut wc = spec.worker_comm(&cfg, rank, seed, endpoints, plan, adaptive);
+    let mut wc = spec.worker_comm(cfg, rank, seed, endpoints, plan, adaptive);
     if let Some(d) = drop {
         if !spec.partition.subs().iter().any(|sb| sb.key == d.key) {
             anyhow::bail!(
@@ -630,6 +635,197 @@ pub fn run_worker(
             .with_context(|| format!("dump {}", path.display()))?;
     }
     Ok(WorkerRunReport { aggregates, final_loss, wire_bytes, counters })
+}
+
+/// `bytepsc worker`: connect to every server shard, register, run `iters`
+/// synchronous push/pull iterations of the synthetic driver, shut down.
+/// `drop` is the optional fault-injection order (`--drop-push`).
+///
+/// In hierarchical runs (`cluster.groups > 0`) the non-leader members of
+/// a group call this too — their `--servers` list is just their leader's
+/// address (the leader re-welcomes them with the fleet's `n_workers`,
+/// seed, and an all-keys→shard-0 plan, so every check below still holds).
+pub fn run_worker(
+    cfg: &TrainConfig,
+    rank: u32,
+    servers: &[String],
+    dim: usize,
+    tensors: usize,
+    iters: usize,
+    dump: Option<&Path>,
+    drop: Option<PushDrop>,
+) -> Result<WorkerRunReport> {
+    // The address list *is* the shard count; pin the local derivation to
+    // it so `FabricSpec` cannot disagree with the fleet being dialed.
+    let mut cfg = cfg.clone();
+    cfg.cluster.addresses = servers.to_vec();
+    let blocks = synthetic_blocks(dim, tensors);
+    let spec = FabricSpec::from_config(&cfg, &blocks)?;
+    if rank as usize >= spec.n_workers {
+        anyhow::bail!("--rank {rank} out of range: the config derives {} workers", spec.n_workers);
+    }
+    let who = format!("worker {rank}");
+    let (endpoints, seed, granted, plan_entries) =
+        register_with_shards(&cfg, &spec, rank, &who, servers)?;
+    let plan = Arc::new(
+        ShardPlan::from_assignments(&plan_entries, servers.len()).map_err(anyhow::Error::msg)?,
+    );
+    for sb in spec.partition.subs() {
+        if !plan.contains(sb.key) {
+            anyhow::bail!(
+                "{who}: the servers' plan is missing block key {} — launch configs disagree",
+                sb.key
+            );
+        }
+    }
+    drive_worker(&cfg, &spec, rank, seed, granted, endpoints, plan, dim, iters, dump, drop)
+}
+
+/// `bytepsc leader`: the group-leader process for hierarchical two-level
+/// aggregation (`cluster.groups > 0`). One per group. It
+///
+/// 1. binds `listen` for its group's TCP *members* (global ranks
+///    `base+1 .. base+m`, where `base = group * m` — they run plain
+///    `bytepsc worker --servers LEADER_ADDR --rank R`),
+/// 2. registers upstream with every server shard as the *group*
+///    (`Hello { worker: group }` — the shards see G registrants, which is
+///    the whole point of the topology), adopting `(seed, bounds, plan)`,
+/// 3. welcomes each member with the fleet's `(n_workers, seed)` and the
+///    all-keys→shard-0 member plan (the member's one endpoint *is* this
+///    leader),
+/// 4. spawns the [`crate::worker::group::GroupRelay`] over
+///    `[inproc member 0, tcp members…]` × the upstream shard endpoints,
+/// 5. co-locates the group's rank-`base` worker and drives it itself over
+///    an inproc pair — so an `m = 1` group needs no TCP members at all.
+///
+/// Member handshakes reuse [`handshake_accept`] with every out-of-group
+/// rank pre-claimed, so a stray or duplicate rank is rejected at the
+/// protocol level before it believes it registered. The accept loop is
+/// deliberately synchronous (unlike [`serve`]'s thread-per-handshake):
+/// group membership is a closed set of `m - 1` rack-local peers, and each
+/// handshake read is still bounded by [`HANDSHAKE_TIMEOUT`] and
+/// [`HELLO_FRAME_CAP`], so a stalled peer delays registration by a
+/// bounded time instead of wedging it.
+#[allow(clippy::too_many_arguments)]
+pub fn run_leader(
+    cfg: &TrainConfig,
+    group: u32,
+    listen: &str,
+    servers: &[String],
+    dim: usize,
+    tensors: usize,
+    iters: usize,
+    dump: Option<&Path>,
+    drop: Option<PushDrop>,
+) -> Result<WorkerRunReport> {
+    let mut cfg = cfg.clone();
+    cfg.cluster.addresses = servers.to_vec();
+    let blocks = synthetic_blocks(dim, tensors);
+    let spec = FabricSpec::from_config(&cfg, &blocks)?;
+    if spec.groups == 0 {
+        anyhow::bail!("`bytepsc leader` needs cluster.groups > 0 in the config");
+    }
+    if group as usize >= spec.groups {
+        anyhow::bail!("--group {group} out of range: the config derives {} groups", spec.groups);
+    }
+    let m = spec.group_size();
+    let base = group as usize * m;
+    let who = format!("leader {group}");
+
+    // Bind before dialing upstream, so members retrying their connect
+    // (CONNECT_TIMEOUT) are never racing this leader's own (up to
+    // CONNECT_TIMEOUT) server registration on top of their budget.
+    let listener = TcpListener::bind(listen).with_context(|| format!("{who}: bind {listen}"))?;
+
+    let (upstream, seed, granted, plan_entries) =
+        register_with_shards(&cfg, &spec, group, &who, servers)?;
+    let plan = Arc::new(
+        ShardPlan::from_assignments(&plan_entries, servers.len()).map_err(anyhow::Error::msg)?,
+    );
+    for sb in spec.partition.subs() {
+        if !plan.contains(sb.key) {
+            anyhow::bail!(
+                "{who}: the servers' plan is missing block key {} — launch configs disagree",
+                sb.key
+            );
+        }
+    }
+
+    // Accept the group's m-1 TCP members. The claimed vec spans all W
+    // global ranks with everything *outside* `base+1..base+m` pre-claimed
+    // (including rank `base` — that member is co-located), so an
+    // out-of-group rank is rejected exactly like a duplicate.
+    let member_welcome = Message::Welcome {
+        n_workers: spec.n_workers as u32,
+        shard: 0,
+        seed,
+        k_min_ppm: 0,
+        k_max_ppm: 0,
+        plan: spec.member_plan().assignments(),
+    };
+    let n_keys = spec.partition.len() as u64;
+    let config = config_fingerprint(&cfg);
+    let claimed = Mutex::new({
+        let mut c = vec![true; spec.n_workers];
+        for r in c.iter_mut().take(base + m).skip(base + 1) {
+            *r = false;
+        }
+        c
+    });
+    let mut slots: Vec<Option<TcpEndpoint>> = (0..m).map(|_| None).collect();
+    let mut registered = 1usize; // member 0 is the co-located worker below
+    while registered < m {
+        let (stream, peer) = listener.accept().with_context(|| format!("{who}: accept"))?;
+        // Hierarchical × adaptive is rejected at config validation, so the
+        // member envelope is always static (`None` ⇒ grant `(0, 0)`).
+        match handshake_accept(stream, spec.n_workers, n_keys, config, None, member_welcome.clone(), &claimed)
+        {
+            Ok((rank, ep)) => {
+                slots[rank - base] = Some(ep);
+                registered += 1;
+                eprintln!("{who}: member rank {rank} registered ({registered}/{m} in group)");
+            }
+            Err(e) => eprintln!("{who}: rejecting connection from {peer}: {e}"),
+        }
+    }
+
+    // Member endpoint row in rank order: slot 0 is the co-located worker's
+    // inproc pair, slots 1.. are the TCP members (slot index = rank-base,
+    // claimed by the handshake, so each is filled exactly once).
+    let (wep, rep) = crate::comm::inproc::pair();
+    let mut members: Vec<Box<dyn Endpoint>> = Vec::with_capacity(m);
+    members.push(Box::new(rep));
+    for slot in slots.into_iter().skip(1) {
+        members.push(Box::new(slot.expect("claimed rank registered")));
+    }
+    let mut ropts = spec.relay_options(group, seed);
+    // Route by the plan the servers actually granted. It is identical to
+    // the local derivation by construction (same config both sides), but
+    // the adopted plan wins on principle — same rule as run_worker.
+    ropts.plan = Arc::clone(&plan);
+    let relay = crate::worker::group::spawn_relay(ropts, members, upstream);
+
+    // Drive the group's first member (global rank `base`) in this process.
+    // If it fails early, dropping its endpoint reads as a member death at
+    // the relay (inproc try_recv → Closed), so the relay still drains the
+    // TCP members' shutdowns and exits instead of wedging the join below.
+    let report = drive_worker(
+        &cfg,
+        &spec,
+        base as u32,
+        seed,
+        granted,
+        vec![Box::new(wep) as Box<dyn Endpoint>],
+        spec.member_plan(),
+        dim,
+        iters,
+        dump,
+        drop,
+    );
+
+    let stats = relay.join();
+    eprintln!("{who}: relay done — {stats}");
+    report
 }
 
 /// Binary aggregate dump: `[dim u64le][iters u64le]` then `iters * dim`
@@ -731,6 +927,18 @@ mod tests {
         let mut c = base.clone();
         c.adaptive.enabled = true;
         assert_ne!(f, config_fingerprint(&c));
+        // Hierarchical grouping changes what the server expects on the
+        // wire (G registrants sending GroupPush vs W flat pushes), so a
+        // flat worker must not register with a hierarchical shard…
+        let mut c = base.clone();
+        c.cluster.groups = 2;
+        assert_ne!(f, config_fingerprint(&c));
+        // …but the leader listen addresses are per-process wiring, like
+        // `cluster.addresses` below, and must NOT move it (a member dials
+        // only its leader and still fingerprint-matches the fleet).
+        let mut c = base.clone();
+        c.cluster.group_addresses = vec!["x:2".into()];
+        assert_eq!(f, config_fingerprint(&c));
         // …but the *bounds* themselves are negotiated explicitly in the
         // handshake, so they must NOT move the fingerprint (a worker with
         // a narrower request still registers and gets it clamped).

@@ -5,6 +5,7 @@
 //! ```text
 //! frame := [len: u32le] [tag: u8] body
 //! Push      body := [key u64][iter u64][worker u32][block]
+//! GroupPush body := [key u64][iter u64][worker u32][members u16][block]
 //! Pull      body := [key u64][iter u64][worker u32]
 //! PullResp  body := [key u64][iter u64][served u16][block]
 //! Ack       body := [key u64][iter u64]
@@ -55,11 +56,13 @@ pub const MAX_FRAME_LEN: usize = 1 << 30;
 /// Wire-format version, bumped whenever a frame layout changes
 /// incompatibly (v2: `PullResp` gained the `served_with: u16` field;
 /// v3: `Hello`/`Welcome` gained the `k_min_ppm`/`k_max_ppm`
-/// adaptive-bounds negotiation fields). Folded into the cluster
-/// registration fingerprint (`cluster::config_fingerprint`) so
-/// mixed-version binaries fail loudly at the handshake instead of
-/// misparsing each other's frames mid-run.
-pub const WIRE_VERSION: u32 = 3;
+/// adaptive-bounds negotiation fields; v4: `GroupPush` — a group
+/// leader's weighted combined push for hierarchical two-level
+/// aggregation). Folded into the cluster registration fingerprint
+/// (`cluster::config_fingerprint`) so mixed-version binaries fail
+/// loudly at the handshake instead of misparsing each other's frames
+/// mid-run.
+pub const WIRE_VERSION: u32 = 4;
 
 const TAG_PUSH: u8 = 1;
 const TAG_PULL: u8 = 2;
@@ -68,6 +71,7 @@ const TAG_ACK: u8 = 4;
 const TAG_SHUTDOWN: u8 = 5;
 const TAG_HELLO: u8 = 6;
 const TAG_WELCOME: u8 = 7;
+const TAG_GROUP_PUSH: u8 = 8;
 
 fn put_u16(b: &mut Vec<u8>, v: u16) {
     b.extend_from_slice(&v.to_le_bytes());
@@ -131,7 +135,11 @@ impl<'a> Reader<'a> {
     }
 }
 
-fn put_block(b: &mut Vec<u8>, c: &Compressed) -> Result<(), CommError> {
+/// Serialize a block's header (scheme, element count, payload length)
+/// without the payload bytes themselves — the payload is always the
+/// trailing chunk of the frame, which lets the TCP transport send it as
+/// a second `IoSlice` straight from the message ([`encode_split_into`]).
+fn put_block_header(b: &mut Vec<u8>, c: &Compressed) -> Result<(), CommError> {
     b.push(c.scheme.wire_id());
     // lint: allow(cast: usize -> u64) — widening on every supported (64-bit) target
     put_u64(b, c.n as u64);
@@ -139,6 +147,11 @@ fn put_block(b: &mut Vec<u8>, c: &Compressed) -> Result<(), CommError> {
         CommError::Protocol(format!("block payload {} bytes exceeds u32", c.payload.len()))
     })?;
     put_u32(b, plen);
+    Ok(())
+}
+
+fn put_block(b: &mut Vec<u8>, c: &Compressed) -> Result<(), CommError> {
+    put_block_header(b, c)?;
     b.extend_from_slice(&c.payload);
     Ok(())
 }
@@ -170,6 +183,7 @@ pub fn body_len(msg: &Message) -> usize {
     let block_len = |c: &Compressed| 1 + 8 + 4 + c.payload.len();
     match msg {
         Message::Push { data, .. } => 1 + 8 + 8 + 4 + block_len(data),
+        Message::GroupPush { data, .. } => 1 + 8 + 8 + 4 + 2 + block_len(data),
         Message::Pull { .. } => 1 + 8 + 8 + 4,
         Message::PullResp { data, .. } => 1 + 8 + 8 + 2 + block_len(data),
         Message::Ack { .. } => 1 + 8 + 8,
@@ -208,6 +222,14 @@ fn encode_body_into(msg: &Message, b: &mut Vec<u8>) -> Result<(), CommError> {
             put_u64(b, *key);
             put_u64(b, *iter);
             put_u32(b, *worker);
+            put_block(b, data)?;
+        }
+        Message::GroupPush { key, iter, worker, members, data } => {
+            b.push(TAG_GROUP_PUSH);
+            put_u64(b, *key);
+            put_u64(b, *iter);
+            put_u32(b, *worker);
+            put_u16(b, *members);
             put_block(b, data)?;
         }
         Message::Pull { key, iter, worker } => {
@@ -283,6 +305,59 @@ pub fn encode_into(msg: &Message, out: &mut Vec<u8>) -> Result<(), CommError> {
     Ok(())
 }
 
+/// Like [`encode_into`], but for block-carrying messages (`Push`,
+/// `GroupPush`, `PullResp`) the trailing block payload is *not* copied
+/// into `out` — the length prefix still covers the full body, and the
+/// caller sends the payload as a second slice straight from the message
+/// (the TCP transport's vectored send). Returns `true` when the payload
+/// was split off, `false` when `out` holds the complete frame.
+pub fn encode_split_into(msg: &Message, out: &mut Vec<u8>) -> Result<bool, CommError> {
+    let len = check_len(msg)?;
+    let len32 = u32::try_from(len)
+        .map_err(|_| CommError::Protocol(format!("frame too large to send: {len} bytes")))?;
+    out.clear();
+    let split = match msg {
+        Message::Push { key, iter, worker, data } => {
+            out.reserve(4 + len - data.payload.len());
+            put_u32(out, len32);
+            out.push(TAG_PUSH);
+            put_u64(out, *key);
+            put_u64(out, *iter);
+            put_u32(out, *worker);
+            put_block_header(out, data)?;
+            true
+        }
+        Message::GroupPush { key, iter, worker, members, data } => {
+            out.reserve(4 + len - data.payload.len());
+            put_u32(out, len32);
+            out.push(TAG_GROUP_PUSH);
+            put_u64(out, *key);
+            put_u64(out, *iter);
+            put_u32(out, *worker);
+            put_u16(out, *members);
+            put_block_header(out, data)?;
+            true
+        }
+        Message::PullResp { key, iter, served_with, data } => {
+            out.reserve(4 + len - data.payload.len());
+            put_u32(out, len32);
+            out.push(TAG_PULL_RESP);
+            put_u64(out, *key);
+            put_u64(out, *iter);
+            put_u16(out, *served_with);
+            put_block_header(out, data)?;
+            true
+        }
+        _ => {
+            out.reserve(4 + len);
+            put_u32(out, len32);
+            encode_body_into(msg, out)?;
+            false
+        }
+    };
+    Ok(split)
+}
+
 /// Decode a message body (frame already stripped of its length prefix).
 pub fn decode_body(buf: &[u8]) -> Result<Message, CommError> {
     let mut r = Reader { buf, pos: 0 };
@@ -292,6 +367,13 @@ pub fn decode_body(buf: &[u8]) -> Result<Message, CommError> {
             key: r.u64()?,
             iter: r.u64()?,
             worker: r.u32()?,
+            data: get_block(&mut r)?,
+        },
+        TAG_GROUP_PUSH => Message::GroupPush {
+            key: r.u64()?,
+            iter: r.u64()?,
+            worker: r.u32()?,
+            members: r.u16()?,
             data: get_block(&mut r)?,
         },
         TAG_PULL => Message::Pull { key: r.u64()?, iter: r.u64()?, worker: r.u32()? },
@@ -406,11 +488,18 @@ mod tests {
     #[test]
     fn roundtrip_all_message_kinds() {
         forall(200, 0xf4a3e, |g| {
-            let msg = match g.usize_in(0, 6) {
+            let msg = match g.usize_in(0, 7) {
                 0 => Message::Push {
                     key: g.u64(),
                     iter: g.u64(),
                     worker: (g.u64() & 0xFFFF) as u32,
+                    data: sample_block(g),
+                },
+                7 => Message::GroupPush {
+                    key: g.u64(),
+                    iter: g.u64(),
+                    worker: (g.u64() & 0xFFFF) as u32,
+                    members: (g.u64() & 0xFFFF) as u16,
                     data: sample_block(g),
                 },
                 1 => Message::Pull { key: g.u64(), iter: g.u64(), worker: 3 },
@@ -550,6 +639,13 @@ mod tests {
         };
         vec![
             Message::Push { key: 0x0000_0A00_0000_0003, iter: 7, worker: 2, data: block.clone() },
+            Message::GroupPush {
+                key: 0x0000_0A00_0000_0003,
+                iter: 7,
+                worker: 1,
+                members: 2,
+                data: block.clone(),
+            },
             Message::Pull { key: 11, iter: 7, worker: 2 },
             Message::PullResp { key: 11, iter: 7, served_with: 3, data: block },
             Message::Ack { key: 11, iter: 7 },
@@ -618,6 +714,68 @@ mod tests {
         // Declared payload length larger than the remaining bytes.
         let mut bad = body;
         let plen_at = 1 + 8 + 8 + 4 + 1 + 8;
+        bad[plen_at] = 0xFF;
+        assert!(decode_body(&bad).is_err());
+    }
+
+    /// The split (vectored-send) encoding must be byte-identical to the
+    /// plain encoding once the payload is appended, for every tag — and
+    /// report the split flag exactly for the block-carrying messages.
+    #[test]
+    fn split_encoding_matches_full_encoding() {
+        for msg in one_of_each_tag() {
+            let full = encode(&msg).unwrap();
+            let mut head = Vec::new();
+            let split = encode_split_into(&msg, &mut head).unwrap();
+            let payload: &[u8] = match &msg {
+                Message::Push { data, .. }
+                | Message::GroupPush { data, .. }
+                | Message::PullResp { data, .. } => {
+                    assert!(split, "{msg:?} should split");
+                    &data.payload
+                }
+                _ => {
+                    assert!(!split, "{msg:?} should not split");
+                    &[]
+                }
+            };
+            let mut rejoined = head;
+            rejoined.extend_from_slice(payload);
+            assert_eq!(rejoined, full, "{msg:?}");
+        }
+    }
+
+    /// Corrupt group-push frames: per-field byte corruption of the block
+    /// header and payload must surface as protocol errors, never a panic
+    /// (same sweep the flat Push gets above, shifted by the `members`
+    /// field).
+    #[test]
+    fn corrupt_group_push_rejected_at_decode() {
+        let msgs = one_of_each_tag();
+        // msgs[1] is the GroupPush with a 2-entry top-k block on n = 8.
+        let Message::GroupPush { .. } = &msgs[1] else { panic!("tag order changed") };
+        let body = encode_body(&msgs[1]).unwrap();
+        assert!(decode_body(&body).is_ok());
+        // Body layout: tag(1) key(8) iter(8) worker(4) members(2)
+        //              scheme(1) n(8) plen(4) payload.
+        let payload_at = 1 + 8 + 8 + 4 + 2 + 1 + 8 + 4;
+        // First top-k index -> out of range.
+        let mut bad = body.clone();
+        for b in &mut bad[payload_at + 4..payload_at + 8] {
+            *b = 0xFF;
+        }
+        assert!(matches!(decode_body(&bad).unwrap_err(), CommError::Protocol(_)));
+        // k header inflated beyond n.
+        let mut bad = body.clone();
+        bad[payload_at] = 200;
+        assert!(decode_body(&bad).is_err());
+        // Bad scheme id.
+        let mut bad = body.clone();
+        bad[1 + 8 + 8 + 4 + 2] = 0xEE;
+        assert!(decode_body(&bad).is_err());
+        // Declared payload length larger than the remaining bytes.
+        let mut bad = body;
+        let plen_at = 1 + 8 + 8 + 4 + 2 + 1 + 8;
         bad[plen_at] = 0xFF;
         assert!(decode_body(&bad).is_err());
     }

@@ -70,6 +70,17 @@ impl BlockKey {
 pub enum Message {
     /// Worker → server: compressed gradient for `key` at step `iter`.
     Push { key: Key, iter: u64, worker: u32, data: Compressed },
+    /// Group leader → server: a *combined* compressed push carrying the
+    /// locally-reduced gradient **sum** (not average) of `members` workers
+    /// (the leader itself included) in the hierarchical two-level
+    /// topology. The server weighs this contribution `members`-fold when
+    /// deciding round completion and the averaging divisor, so a round of
+    /// G group pushes averages exactly like W flat pushes. `worker` is
+    /// the *group* index (the leader's registered rank in the server's
+    /// G-wide fan-in). A hostile `members` claim is clamped to the
+    /// round's remaining capacity at ingress and counted
+    /// (`ServerStats.members_clamped`), never trusted.
+    GroupPush { key: Key, iter: u64, worker: u32, members: u16, data: Compressed },
     /// Worker → server: request the aggregated gradient once ready.
     Pull { key: Key, iter: u64, worker: u32 },
     /// Server → worker: aggregated (re-compressed) gradient. `served_with`
@@ -123,7 +134,9 @@ impl Message {
     /// accounted by the frame encoder).
     pub fn payload_bytes(&self) -> usize {
         match self {
-            Message::Push { data, .. } | Message::PullResp { data, .. } => data.nbytes(),
+            Message::Push { data, .. }
+            | Message::GroupPush { data, .. }
+            | Message::PullResp { data, .. } => data.nbytes(),
             _ => 0,
         }
     }

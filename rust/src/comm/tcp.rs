@@ -15,7 +15,7 @@
 #![deny(clippy::unwrap_used, clippy::expect_used)]
 
 use super::{frame, CommError, Endpoint, Message};
-use std::io::{Read, Write};
+use std::io::{IoSlice, Read, Write};
 use std::net::{TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -153,6 +153,33 @@ fn read_exact(stream: &mut TcpStream, buf: &mut [u8]) -> Result<(), CommError> {
     })
 }
 
+/// Write a frame whose trailing block payload was split out of the send
+/// scratch ([`frame::encode_split_into`]): header and payload go out in
+/// one `write_vectored` call, so large Push/GroupPush/PullResp payloads
+/// are never memcpy'd into scratch first. Partial writes resume by
+/// re-slicing both buffers (`IoSlice::advance_slices` is unstable on the
+/// MSRV; the manual loop is panic-free by construction — every slice
+/// bound is `get`-checked).
+fn write_split(stream: &mut TcpStream, head: &[u8], payload: &[u8]) -> Result<(), CommError> {
+    let total = head.len() + payload.len();
+    let mut off = 0usize;
+    while off < total {
+        let wrote = if off < head.len() {
+            let bufs =
+                [IoSlice::new(head.get(off..).unwrap_or(&[])), IoSlice::new(payload)];
+            stream.write_vectored(&bufs)
+        } else {
+            stream.write(payload.get(off - head.len()..).unwrap_or(&[]))
+        }
+        .map_err(|e| CommError::Io(e.to_string()))?;
+        if wrote == 0 {
+            return Err(CommError::Io("socket accepted zero bytes mid-frame".into()));
+        }
+        off += wrote;
+    }
+    Ok(())
+}
+
 impl Endpoint for TcpEndpoint {
     fn send(&self, msg: Message) -> Result<(), CommError> {
         let mut guard = lock_half(&self.writer);
@@ -161,15 +188,32 @@ impl Endpoint for TcpEndpoint {
         // cap — never serialized, never on the wire. Serialization reuses
         // the connection's send scratch, so a steady stream of frames
         // costs no allocation once the buffer has grown to the largest.
-        frame::encode_into(&msg, scratch)?;
-        // lint: allow(cast: usize -> u64) — widening on every supported (64-bit) target
-        self.sent.fetch_add(scratch.len() as u64, Ordering::Relaxed);
-        // lint: allow(block) — the writer mutex exists to serialize whole frames onto the socket; writing outside it would interleave frames
-        let res = stream.write_all(scratch).map_err(|e| CommError::Io(e.to_string()));
+        // Block-carrying messages keep their payload out of scratch and
+        // send it as a second vectored slice straight from the message.
+        let split = frame::encode_split_into(&msg, scratch)?;
+        let res = if split {
+            let payload: &[u8] = match &msg {
+                Message::Push { data, .. }
+                | Message::GroupPush { data, .. }
+                | Message::PullResp { data, .. } => &data.payload,
+                _ => &[],
+            };
+            // lint: allow(cast: usize -> u64) — widening on every supported (64-bit) target
+            self.sent.fetch_add((scratch.len() + payload.len()) as u64, Ordering::Relaxed);
+            write_split(stream, scratch, payload)
+        } else {
+            // lint: allow(cast: usize -> u64) — widening on every supported (64-bit) target
+            self.sent.fetch_add(scratch.len() as u64, Ordering::Relaxed);
+            // lint: allow(block) — the writer mutex exists to serialize whole frames onto the socket; writing outside it would interleave frames
+            stream.write_all(scratch).map_err(|e| CommError::Io(e.to_string()))
+        };
         // The frame is on the wire (or the connection is dead); either way
         // the message's block payload dies here — recycle it. The in-proc
         // transport must NOT do this: it hands the message itself over.
-        if let Message::Push { data, .. } | Message::PullResp { data, .. } = msg {
+        if let Message::Push { data, .. }
+        | Message::GroupPush { data, .. }
+        | Message::PullResp { data, .. } = msg
+        {
             super::BufPool::global().give_bytes(data.payload);
         }
         res

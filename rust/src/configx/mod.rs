@@ -38,6 +38,8 @@
 //! | `cluster.nodes`, `cluster.gpus_per_node`, `cluster.servers` | topology |
 //! | `cluster.net_gbps`, `cluster.latency_us` | simulated wire |
 //! | `cluster.addresses` | TCP shard listen addresses (empty = inproc fabric) |
+//! | `cluster.groups` | hierarchical two-level aggregation: worker groups (0 = flat) |
+//! | `cluster.group_addresses` | cluster-mode group-leader listen addresses, one per group |
 //! | `system.compress_threads` | worker compression pool threads |
 //! | `system.intra_threads` | intra-task chunked parallelism |
 //! | `system.operator_fusion` | §4.2.2 toggle |
@@ -208,6 +210,22 @@ pub struct ClusterConfig {
     /// overriding `servers`/`more_servers`. Empty (the default) keeps the
     /// single-process in-proc fabric.
     pub addresses: Vec<String>,
+    /// Hierarchical two-level aggregation: number of worker groups. `0`
+    /// (the default) keeps the flat topology — every worker pushes to
+    /// every shard directly and every existing run is bit-identical.
+    /// `> 0` partitions the `nodes` workers into `groups` equal groups;
+    /// each group's leader locally combines its members' compressed
+    /// pushes and forwards one weighted `GroupPush` per key, cutting
+    /// server fan-in from O(nodes) to O(groups). Requires
+    /// `nodes % groups == 0` and is mutually exclusive with
+    /// `adaptive.enabled` (per-key ratio drift would break the leader's
+    /// exact-sparse recombination).
+    pub groups: usize,
+    /// Cluster-mode group-leader listen addresses, indexed by group
+    /// (`bytepsc leader --group I` binds `group_addresses[I]`; the
+    /// group's members dial it instead of the server shards). Must be
+    /// empty (single-process fabric) or have exactly `groups` entries.
+    pub group_addresses: Vec<String>,
 }
 
 impl Default for ClusterConfig {
@@ -219,6 +237,8 @@ impl Default for ClusterConfig {
             net_gbps: 25.0,
             latency_us: 25.0,
             addresses: Vec::new(),
+            groups: 0,
+            group_addresses: Vec::new(),
         }
     }
 }
@@ -463,6 +483,19 @@ impl TrainConfig {
                 })
                 .collect::<Result<Vec<String>, ConfigError>>()?,
         };
+        let group_addresses = match k.get("group_addresses") {
+            None => kd.group_addresses.clone(),
+            Some(a) => a
+                .as_arr()
+                .ok_or_else(|| ConfigError("cluster.group_addresses must be an array".into()))?
+                .iter()
+                .map(|e| {
+                    e.as_str().map(str::to_string).ok_or_else(|| {
+                        ConfigError("cluster.group_addresses entries must be strings".into())
+                    })
+                })
+                .collect::<Result<Vec<String>, ConfigError>>()?,
+        };
         let cluster = ClusterConfig {
             nodes: u(&k, "nodes", kd.nodes),
             gpus_per_node: u(&k, "gpus_per_node", kd.gpus_per_node),
@@ -470,6 +503,8 @@ impl TrainConfig {
             net_gbps: f(&k, "net_gbps", kd.net_gbps),
             latency_us: f(&k, "latency_us", kd.latency_us),
             addresses,
+            groups: u(&k, "groups", kd.groups),
+            group_addresses,
         };
         let sd = SystemConfig::default();
         let y = v.get("system").cloned().unwrap_or(Json::Obj(Default::default()));
@@ -541,6 +576,45 @@ impl TrainConfig {
         }
         if self.cluster.addresses.iter().any(|a| a.is_empty()) {
             return Err(ConfigError("cluster.addresses entries must be non-empty".into()));
+        }
+        if self.cluster.groups > 0 {
+            if self.cluster.nodes % self.cluster.groups != 0 {
+                return Err(ConfigError(format!(
+                    "cluster.groups ({}) must evenly divide cluster.nodes ({})",
+                    self.cluster.groups, self.cluster.nodes
+                )));
+            }
+            // The server weighs each group push by a u16 member count; a
+            // group larger than that cannot be represented on the wire.
+            if self.cluster.nodes / self.cluster.groups > usize::from(u16::MAX) {
+                return Err(ConfigError("group size exceeds the u16 members weight".into()));
+            }
+            if self.adaptive.enabled {
+                return Err(ConfigError(
+                    "cluster.groups > 0 is incompatible with adaptive.enabled — per-key \
+                     keep-ratio drift would break the leader's exact recombination"
+                        .into(),
+                ));
+            }
+        }
+        if !self.cluster.group_addresses.is_empty() {
+            if self.cluster.groups == 0 {
+                return Err(ConfigError(
+                    "cluster.group_addresses requires cluster.groups > 0".into(),
+                ));
+            }
+            if self.cluster.group_addresses.len() != self.cluster.groups {
+                return Err(ConfigError(format!(
+                    "cluster.group_addresses has {} entries but cluster.groups is {}",
+                    self.cluster.group_addresses.len(),
+                    self.cluster.groups
+                )));
+            }
+            if self.cluster.group_addresses.iter().any(|a| a.is_empty()) {
+                return Err(ConfigError(
+                    "cluster.group_addresses entries must be non-empty".into(),
+                ));
+            }
         }
         if self.optimizer.lr <= 0.0 {
             return Err(ConfigError("optimizer.lr must be > 0".into()));
@@ -669,6 +743,17 @@ impl TrainConfig {
                         Json::Arr(
                             self.cluster
                                 .addresses
+                                .iter()
+                                .map(|a| Json::str(a.clone()))
+                                .collect(),
+                        ),
+                    ),
+                    ("groups", Json::num(self.cluster.groups as f64)),
+                    (
+                        "group_addresses",
+                        Json::Arr(
+                            self.cluster
+                                .group_addresses
                                 .iter()
                                 .map(|a| Json::str(a.clone()))
                                 .collect(),
@@ -883,6 +968,43 @@ mod tests {
         assert!(TrainConfig::from_str(r#"{"adaptive": {"ema": 0}}"#).is_err());
         assert!(TrainConfig::from_str(r#"{"adaptive": {"ema": 1.5}}"#).is_err());
         assert!(TrainConfig::from_str(r#"{"adaptive": {"target_gain": 1.0}}"#).is_err());
+    }
+
+    #[test]
+    fn hierarchical_groups_parse_validate_and_roundtrip() {
+        // Default: flat topology.
+        let cfg = TrainConfig::from_str("{}").unwrap();
+        assert_eq!(cfg.cluster.groups, 0);
+        assert!(cfg.cluster.group_addresses.is_empty());
+        // 4 nodes in 2 groups parses and roundtrips.
+        let cfg = TrainConfig::from_str(r#"{"cluster": {"nodes": 4, "groups": 2}}"#).unwrap();
+        assert_eq!(cfg.cluster.groups, 2);
+        let rt = TrainConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(rt, cfg);
+        // Leader addresses must match the group count, one per group.
+        let cfg = TrainConfig::from_str(
+            r#"{"cluster": {"nodes": 4, "groups": 2,
+                "group_addresses": ["127.0.0.1:5000", "127.0.0.1:5001"]}}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.cluster.group_addresses.len(), 2);
+        assert_eq!(TrainConfig::from_json(&cfg.to_json()).unwrap(), cfg);
+        // Uneven partition rejected.
+        assert!(TrainConfig::from_str(r#"{"cluster": {"nodes": 5, "groups": 2}}"#).is_err());
+        // Leader addresses without groups, or with the wrong count, rejected.
+        assert!(TrainConfig::from_str(
+            r#"{"cluster": {"group_addresses": ["127.0.0.1:5000"]}}"#
+        )
+        .is_err());
+        assert!(TrainConfig::from_str(
+            r#"{"cluster": {"nodes": 4, "groups": 2, "group_addresses": ["127.0.0.1:5000"]}}"#
+        )
+        .is_err());
+        // Hierarchical × adaptive is a config error, not a silent fallback.
+        assert!(TrainConfig::from_str(
+            r#"{"cluster": {"nodes": 4, "groups": 2}, "adaptive": {"enabled": true}}"#
+        )
+        .is_err());
     }
 
     #[test]

@@ -43,6 +43,12 @@ pub struct FabricSpec {
     pub fused: bool,
     pub n_workers: usize,
     pub n_servers: usize,
+    /// Hierarchical two-level aggregation (`cluster.groups`): number of
+    /// worker groups, `0` = flat. With groups, each server shard talks to
+    /// `groups` leader relays instead of `n_workers` workers — fan-in
+    /// drops from O(W) to O(G) — while `n_workers` keeps its flat meaning
+    /// (the averaging divisor and the `served_with` unit).
+    pub groups: usize,
     /// Block partition (§4.2.1/§4.2.3): the pipeline's wire unit.
     pub partition: Arc<Partition>,
     /// Key → server-shard assignment (§4.2.4).
@@ -101,7 +107,60 @@ impl FabricSpec {
             )
         });
 
-        Ok(FabricSpec { comp, sync, fused, n_workers, n_servers, partition, plan })
+        let groups = cfg.cluster.groups;
+        if groups > 0 && n_workers % groups != 0 {
+            // validate() catches this for loaded configs; guard the
+            // programmatic path too so a bad spec fails here, not as a
+            // wedged relay.
+            anyhow::bail!("cluster.groups ({groups}) must evenly divide nodes ({n_workers})");
+        }
+
+        Ok(FabricSpec { comp, sync, fused, n_workers, n_servers, groups, partition, plan })
+    }
+
+    /// How many peers each server shard registers and reads from: the
+    /// group leaders in hierarchical mode, every worker when flat.
+    pub fn registrants(&self) -> usize {
+        if self.groups > 0 {
+            self.groups
+        } else {
+            self.n_workers
+        }
+    }
+
+    /// Workers per group (hierarchical mode only; panics on `groups = 0`
+    /// via division semantics — callers check `groups > 0` first).
+    pub fn group_size(&self) -> usize {
+        self.n_workers / self.groups.max(1)
+    }
+
+    /// The shard plan a group *member* routes by: its single endpoint is
+    /// the leader, so every key maps to endpoint 0. The leader routes by
+    /// the real [`plan`](FabricSpec::plan).
+    pub fn member_plan(&self) -> Arc<ShardPlan> {
+        let keys: Vec<crate::comm::Key> =
+            self.partition.subs().iter().map(|sb| sb.key).collect();
+        Arc::new(ShardPlan::round_robin_keyed(&keys, 1))
+    }
+
+    /// Relay options for group `group_idx` (shared by the inproc fabric
+    /// and the cluster `leader` subcommand — one derivation, no drift).
+    pub fn relay_options(
+        &self,
+        group_idx: u32,
+        run_seed: u64,
+    ) -> crate::worker::group::RelayOptions {
+        let m = self.group_size();
+        let base = group_idx as usize * m;
+        crate::worker::group::RelayOptions {
+            group_idx,
+            member_ranks: (base..base + m).map(|r| r as u32).collect(),
+            comp: Arc::clone(&self.comp),
+            sync: self.sync,
+            fused: self.fused,
+            seed: run_seed,
+            plan: Arc::clone(&self.plan),
+        }
     }
 
     /// Per-shard server RNG seed. One derivation shared by the inproc
@@ -197,9 +256,59 @@ impl EndpointMesh {
     }
 }
 
+/// The hierarchical (two-level) endpoint mesh: workers talk only to their
+/// group's relay, relays talk to every server shard. `worker_rows[w]` is
+/// one endpoint (worker `w` → its leader); `member_rows[g]` the relay
+/// side of group `g`'s member links in global-rank order;
+/// `upstream_rows[g][s]` relay `g`'s endpoint to shard `s`;
+/// `server_rows[s][g]` the matching shard side (index == group index, so
+/// the server's connection-ordered reduce is group-ordered).
+pub struct HierMesh {
+    pub worker_rows: Vec<Vec<Box<dyn Endpoint>>>,
+    pub member_rows: Vec<Vec<Box<dyn Endpoint>>>,
+    pub upstream_rows: Vec<Vec<Box<dyn Endpoint>>>,
+    pub server_rows: Vec<Vec<Box<dyn Endpoint>>>,
+}
+
+impl HierMesh {
+    /// In-process two-level mesh for `n_workers` workers in `groups`
+    /// equal groups over `n_servers` shards.
+    pub fn inproc(n_workers: usize, groups: usize, n_servers: usize) -> HierMesh {
+        assert!(groups > 0 && n_workers % groups == 0);
+        let m = n_workers / groups;
+        let mut worker_rows: Vec<Vec<Box<dyn Endpoint>>> = Vec::with_capacity(n_workers);
+        let mut member_rows: Vec<Vec<Box<dyn Endpoint>>> = Vec::with_capacity(groups);
+        for _g in 0..groups {
+            let mut members: Vec<Box<dyn Endpoint>> = Vec::with_capacity(m);
+            for _ in 0..m {
+                let (wep, rep) = crate::comm::inproc::pair();
+                worker_rows.push(vec![Box::new(wep) as Box<dyn Endpoint>]);
+                members.push(Box::new(rep) as Box<dyn Endpoint>);
+            }
+            member_rows.push(members);
+        }
+        let mut upstream_rows: Vec<Vec<Box<dyn Endpoint>>> =
+            (0..groups).map(|_| Vec::with_capacity(n_servers)).collect();
+        let mut server_rows: Vec<Vec<Box<dyn Endpoint>>> = Vec::with_capacity(n_servers);
+        for _s in 0..n_servers {
+            let mut server_side: Vec<Box<dyn Endpoint>> = Vec::with_capacity(groups);
+            for row in upstream_rows.iter_mut() {
+                let (uep, sep) = crate::comm::inproc::pair();
+                row.push(Box::new(uep) as Box<dyn Endpoint>);
+                server_side.push(Box::new(sep) as Box<dyn Endpoint>);
+            }
+            server_rows.push(server_side);
+        }
+        HierMesh { worker_rows, member_rows, upstream_rows, server_rows }
+    }
+}
+
 /// Workers + servers wired over an endpoint mesh (in-process by default).
+/// With `cluster.groups > 0` a tier of group-leader relays
+/// ([`crate::worker::group`]) sits between them.
 pub struct CommFabric {
     workers: Vec<WorkerComm>,
+    relays: Vec<crate::worker::group::RelayHandle>,
     servers: Vec<Server>,
     blocks: Vec<Block>,
     partition: Arc<Partition>,
@@ -210,11 +319,91 @@ pub struct CommFabric {
 
 impl CommFabric {
     /// Build a fabric for `blocks` over a flat `dim`-vector, as configured,
-    /// over in-process channels.
+    /// over in-process channels. `cluster.groups > 0` builds the two-level
+    /// topology (workers → group relays → shards) instead of the flat mesh.
     pub fn new(cfg: &TrainConfig, blocks: Vec<Block>, dim: usize) -> Result<CommFabric> {
         let spec = FabricSpec::from_config(cfg, &blocks)?;
+        if spec.groups > 0 {
+            let mesh = HierMesh::inproc(spec.n_workers, spec.groups, spec.n_servers);
+            return Self::with_hier_mesh(cfg, spec, blocks, dim, mesh);
+        }
         let mesh = EndpointMesh::inproc(spec.n_workers, spec.n_servers);
         Self::with_mesh(cfg, spec, blocks, dim, mesh)
+    }
+
+    /// Build the two-level fabric over an explicit hierarchical mesh:
+    /// each server shard reads `groups` connections (one per relay), each
+    /// relay locally combines its `n_workers / groups` members' pushes.
+    pub fn with_hier_mesh(
+        cfg: &TrainConfig,
+        spec: FabricSpec,
+        blocks: Vec<Block>,
+        dim: usize,
+        mesh: HierMesh,
+    ) -> Result<CommFabric> {
+        if mesh.worker_rows.len() != spec.n_workers
+            || mesh.member_rows.len() != spec.groups
+            || mesh.upstream_rows.len() != spec.groups
+            || mesh.server_rows.len() != spec.n_servers
+        {
+            anyhow::bail!(
+                "hierarchical mesh shape mismatch: {} workers / {} member rows / \
+                 {} upstream rows / {} server rows vs spec {}w x {}g x {}s",
+                mesh.worker_rows.len(),
+                mesh.member_rows.len(),
+                mesh.upstream_rows.len(),
+                mesh.server_rows.len(),
+                spec.n_workers,
+                spec.groups,
+                spec.n_servers
+            );
+        }
+        let shared_pool: Option<Arc<ThreadPool>> = (cfg.server.compress_threads > 0)
+            .then(|| Arc::new(ThreadPool::new(cfg.server.compress_threads)));
+        let mut servers = Vec::with_capacity(spec.n_servers);
+        for (s, server_side) in mesh.server_rows.into_iter().enumerate() {
+            // n_workers stays W in the options: G weighted group pushes
+            // must average exactly like W flat ones.
+            servers.push(Server::spawn_with_pool(
+                spec.server_options(cfg, s, cfg.seed),
+                server_side,
+                shared_pool.clone(),
+            ));
+        }
+        let relays: Vec<crate::worker::group::RelayHandle> = mesh
+            .member_rows
+            .into_iter()
+            .zip(mesh.upstream_rows)
+            .enumerate()
+            .map(|(g, (members, upstream))| {
+                crate::worker::group::spawn_relay(
+                    spec.relay_options(g as u32, cfg.seed),
+                    members,
+                    upstream,
+                )
+            })
+            .collect();
+        // Every worker routes all keys to its single leader endpoint; its
+        // rank, seeds, and EF state keep their flat-W meaning.
+        let member_plan = spec.member_plan();
+        let workers = mesh
+            .worker_rows
+            .into_iter()
+            .enumerate()
+            .map(|(w, eps)| {
+                spec.worker_comm(cfg, w as u32, cfg.seed, eps, Arc::clone(&member_plan), None)
+            })
+            .collect();
+        Ok(CommFabric {
+            workers,
+            relays,
+            servers,
+            blocks,
+            partition: Arc::clone(&spec.partition),
+            pipelined: cfg.pipeline.enabled,
+            dim,
+            iter: 0,
+        })
     }
 
     /// Build a fabric over an explicit endpoint mesh. The mesh shape must
@@ -268,6 +457,7 @@ impl CommFabric {
 
         Ok(CommFabric {
             workers,
+            relays: Vec::new(),
             servers,
             blocks,
             partition: Arc::clone(&spec.partition),
@@ -350,12 +540,21 @@ impl CommFabric {
         (results.into_iter().next().unwrap().0, total)
     }
 
-    /// Shut everything down; returns per-server stats.
+    /// Shut everything down; returns per-server stats. In the two-level
+    /// topology the member shutdowns drain the relays first (each relay
+    /// forwards one `Shutdown` per shard once all its members are done),
+    /// then the shards exit.
     pub fn shutdown(self) -> Vec<ServerStats> {
         for w in &self.workers {
             w.shutdown();
         }
         drop(self.workers);
+        for r in self.relays {
+            let stats = r.join();
+            if stats.rejected + stats.unexpected > 0 {
+                eprintln!("relay: {stats}");
+            }
+        }
         self.servers.into_iter().map(|s| s.join()).collect()
     }
 }
@@ -699,6 +898,84 @@ mod tests {
             out
         };
         assert_eq!(run(0), run(4), "staged shards diverged from the synchronous reference");
+    }
+
+    /// Tentpole acceptance at the fabric level: the two-level topology
+    /// (`cluster.groups = 2`, 4 workers) must produce bit-identical
+    /// aggregates to the flat 4-worker fabric on the integer-valued
+    /// synthetic workload — for identity (lossless pass-through at the
+    /// leader) AND top-k + EF (exact-sparse union re-encode) — while each
+    /// server shard ingests G pushes per key per round instead of W.
+    #[test]
+    fn hierarchical_fabric_is_bit_identical_to_flat_and_cuts_fan_in() {
+        let dim = 600;
+        let nodes = 4;
+        let groups = 2;
+        let iters = 4usize;
+        let blocks =
+            crate::optim::blocks::from_shapes(&[("a".into(), 400), ("b".into(), 200)]);
+        for (scheme, param, sync) in
+            [("identity", 0.0, SyncMode::Full), ("topk", 0.1, SyncMode::CompressedEf)]
+        {
+            let run = |groups: usize| -> (Vec<Vec<f32>>, u64, usize) {
+                let mut cfg = cfg_with(scheme, param, sync, nodes);
+                cfg.cluster.groups = groups;
+                cfg.pipeline.block_bytes = 256 * 4; // real block partitioning
+                let mut fabric = CommFabric::new(&cfg, blocks.clone(), dim).unwrap();
+                let n_keys = fabric.partition().subs().len();
+                let mut out = Vec::new();
+                for it in 0..iters as u64 {
+                    // Integer-valued gradients: every partial sum is exact
+                    // in f32, so group-order association cannot move bits.
+                    let grads: Vec<Vec<f32>> = (0..nodes as u32)
+                        .map(|w| crate::cluster::synthetic_grad(7, w, it, dim))
+                        .collect();
+                    let (agg, _) = fabric.exchange(&grads);
+                    out.push(agg);
+                }
+                let stats = fabric.shutdown();
+                (out, stats.iter().map(|s| s.pushes).sum::<u64>(), n_keys)
+            };
+            let (flat, flat_pushes, n_keys) = run(0);
+            let (hier, hier_pushes, _) = run(groups);
+            assert_eq!(flat, hier, "{scheme}: hierarchical aggregates diverged from flat");
+            // Fan-in scaling: per round each shard tier decodes G combined
+            // pushes instead of W member pushes.
+            assert_eq!(flat_pushes, (nodes * n_keys * iters) as u64);
+            assert_eq!(
+                hier_pushes,
+                (groups * n_keys * iters) as u64,
+                "{scheme}: server fan-in must scale with groups, not workers"
+            );
+        }
+    }
+
+    /// Staged server shards under the two-level topology: the shard-side
+    /// decode/encode pool must not change the bytes when its peers are
+    /// relays either.
+    #[test]
+    fn hierarchical_fabric_with_staged_servers_matches_sync() {
+        let dim = 500;
+        let nodes = 4;
+        let blocks = crate::optim::blocks::single(dim);
+        let run = |threads: usize| -> Vec<Vec<f32>> {
+            let mut cfg = cfg_with("topk", 0.1, SyncMode::CompressedEf, nodes);
+            cfg.cluster.groups = 2;
+            cfg.pipeline.block_bytes = 128 * 4;
+            cfg.server.compress_threads = threads;
+            let mut fabric = CommFabric::new(&cfg, blocks.clone(), dim).unwrap();
+            let mut out = Vec::new();
+            for it in 0..3u64 {
+                let grads: Vec<Vec<f32>> = (0..nodes as u32)
+                    .map(|w| crate::cluster::synthetic_grad(11, w, it, dim))
+                    .collect();
+                let (agg, _) = fabric.exchange(&grads);
+                out.push(agg);
+            }
+            fabric.shutdown();
+            out
+        };
+        assert_eq!(run(0), run(4), "staged hierarchical shards diverged from synchronous");
     }
 
     #[test]

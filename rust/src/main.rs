@@ -4,6 +4,7 @@
 //!   train     run a training job (config file + flag overrides)
 //!   server    run one parameter-server shard over TCP (cluster mode)
 //!   worker    run one worker over TCP (cluster mode)
+//!   leader    run one group-leader relay (hierarchical cluster mode)
 //!   inspect   print artifact manifest / model info
 //!   calibrate measure compressor speeds on this host (feeds simnet)
 
@@ -24,6 +25,7 @@ fn opts() -> Vec<Opt> {
         Opt { name: "model", takes_value: true, help: "model name from the manifest" },
         Opt { name: "steps", takes_value: true, help: "training steps" },
         Opt { name: "nodes", takes_value: true, help: "worker nodes" },
+        Opt { name: "groups", takes_value: true, help: "hierarchical two-level aggregation: worker groups (0 = flat; must divide nodes)" },
         Opt { name: "servers", takes_value: true, help: "parameter servers" },
         Opt { name: "scheme", takes_value: true, help: "compressor: identity|fp16|onebit|topk|randomk|linear_dither|natural_dither" },
         Opt { name: "param", takes_value: true, help: "compressor parameter (ratio or bits)" },
@@ -78,12 +80,25 @@ fn worker_opts() -> Vec<Opt> {
     o
 }
 
+fn leader_opts() -> Vec<Opt> {
+    let mut o: Vec<Opt> = worker_opts()
+        .into_iter()
+        // The leader's rank is derived: it co-locates its group's first
+        // member (global rank = group * group_size).
+        .filter(|opt| opt.name != "rank")
+        .collect();
+    o.push(Opt { name: "group", takes_value: true, help: "this leader's group index in [0, groups)" });
+    o.push(Opt { name: "listen", takes_value: true, help: "member listen address (default: cluster.group_addresses[group])" });
+    o
+}
+
 fn apply_overrides(cfg: &mut TrainConfig, a: &Args, servers_is_count: bool) -> Result<(), String> {
     if let Some(m) = a.get("model") {
         cfg.model = m.into();
     }
     cfg.steps = a.usize_or("steps", cfg.steps)?;
     cfg.cluster.nodes = a.usize_or("nodes", cfg.cluster.nodes)?;
+    cfg.cluster.groups = a.usize_or("groups", cfg.cluster.groups)?;
     if servers_is_count {
         cfg.cluster.servers = a.usize_or("servers", cfg.cluster.servers)?;
     }
@@ -253,6 +268,44 @@ fn cmd_worker(a: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+fn cmd_leader(a: &Args) -> anyhow::Result<()> {
+    let cfg = load_config(a, false)?;
+    let servers: Vec<String> = match a.get("servers") {
+        Some(list) => list.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect(),
+        None => cfg.cluster.addresses.clone(),
+    };
+    if servers.is_empty() {
+        anyhow::bail!("no server addresses: pass --servers A,B,... or set cluster.addresses");
+    }
+    let group = a.usize_or("group", 0).map_err(anyhow::Error::msg)? as u32;
+    let listen = match a.get("listen") {
+        Some(l) => l.to_string(),
+        None => cfg.cluster.group_addresses.get(group as usize).cloned().ok_or_else(|| {
+            anyhow::anyhow!("no --listen and no cluster.group_addresses[{group}] in the config")
+        })?,
+    };
+    let dim = a.usize_or("dim", 1 << 16).map_err(anyhow::Error::msg)?;
+    let tensors = a.usize_or("tensors", 8).map_err(anyhow::Error::msg)?;
+    let iters = a.usize_or("iters", 10).map_err(anyhow::Error::msg)?;
+    let dump = a.get("dump").map(PathBuf::from);
+    let drop = a.get("drop-push").map(cluster::PushDrop::parse).transpose().map_err(anyhow::Error::msg)?;
+    let report = cluster::run_leader(
+        &cfg, group, &listen, &servers, dim, tensors, iters, dump.as_deref(), drop,
+    )?;
+    // Same tail as `worker` — the leader's co-located member reports like
+    // any other worker; the relay's own stats went to stderr at shutdown.
+    println!(
+        "leader {group}: {} iterations done | final loss {:.9e} | wire {} | {}",
+        iters,
+        report.final_loss,
+        byteps_compress::util::human_bytes(report.wire_bytes as usize),
+        report.counters
+    );
+    use std::io::Write;
+    std::io::stdout().flush().ok();
+    Ok(())
+}
+
 fn cmd_inspect(a: &Args) -> anyhow::Result<()> {
     let art = PathBuf::from(a.get_or("artifacts", "artifacts"));
     let man = Manifest::load(&art)?;
@@ -305,6 +358,7 @@ fn main() {
         ("train", "run a training job"),
         ("server", "run one parameter-server shard over TCP (cluster mode)"),
         ("worker", "run one cluster worker over TCP (cluster mode)"),
+        ("leader", "run one group-leader relay (hierarchical cluster mode)"),
         ("inspect", "print artifact manifest info"),
         ("calibrate", "measure compressor speeds on this host"),
     ];
@@ -314,6 +368,7 @@ fn main() {
     let opt_list = match sub.as_deref() {
         Some("server") => server_opts(),
         Some("worker") => worker_opts(),
+        Some("leader") => leader_opts(),
         _ => opts(),
     };
     let args = match Args::parse(rest, false, &opt_list) {
@@ -328,6 +383,7 @@ fn main() {
         Some("train") => cmd_train(&args),
         Some("server") => cmd_server(&args),
         Some("worker") => cmd_worker(&args),
+        Some("leader") => cmd_leader(&args),
         Some("inspect") => cmd_inspect(&args),
         Some("calibrate") => cmd_calibrate(&args),
         _ => {

@@ -132,13 +132,17 @@ struct KeyState {
     /// disagrees are rejected at ingress — a self-consistent corrupt frame
     /// must not resize (or panic on) the reducer.
     dim: Option<usize>,
-    /// Connection indices that contributed to the current round, in
-    /// arrival order. The *connection* is the trusted identity (the wire
-    /// `worker` field is not), and deduplicating on it keeps a
+    /// `(connection index, contribution weight)` pairs for the current
+    /// round, in arrival order. The *connection* is the trusted identity
+    /// (the wire `worker` field is not), and deduplicating on it keeps a
     /// retransmitting or hostile client from completing a round early
     /// with one worker double-counted — which would also make the
     /// `served_with` tag lie about how many workers the aggregate holds.
-    contributors: Vec<u32>,
+    /// A flat push weighs 1; a hierarchical group push weighs its clamped
+    /// `members` claim — the round completes when the weights sum to
+    /// `n_workers`, so a server fronted by G group leaders still averages
+    /// exactly like one fronted by W flat workers.
+    contributors: Vec<(u32, u16)>,
     /// Decode results for the current (open) round, in arrival order.
     /// The float sum is deferred to seal time so it can run in
     /// connection-index order — the price is holding up to `n_workers`
@@ -415,210 +419,16 @@ impl ServerCore {
             // steer replies to another worker or index the endpoint table
             // out of bounds; the field is kept for diagnostics only.
             Message::Push { key, iter, worker, data } => {
-                // Untrusted wire data: reject corrupt blocks instead of
-                // letting a bad index/length panic the decoder. (The
-                // TCP transport already rejects these at frame decode;
-                // this also covers the in-process transport.)
-                if let Err(e) = crate::compress::validate_wire(&data) {
-                    eprintln!("server: rejecting corrupt push for key {key} from worker {worker}: {e}");
-                    self.stats.rejected += 1;
-                    return vec![];
-                }
-                // Adaptive envelope (negotiated at registration): a
-                // structurally valid sparse block may still claim a keep
-                // ratio the handshake never granted — an honest controller
-                // stays inside the granted bounds (it clamps in ppm space
-                // and shares `k_for_ppm` with this check), so anything
-                // outside is a hostile or misconfigured client. Dropped
-                // and counted, never merged. Empty blocks (`n == 0`) are
-                // exempt: the sparsifiers emit `k == 0` for them while the
-                // envelope floor is 1 element.
-                if let Some((lo, hi)) = self.opts.adaptive_bounds {
-                    use crate::compress::controller::k_for_ppm;
-                    use crate::compress::SchemeId;
-                    if matches!(data.scheme, SchemeId::TopK | SchemeId::RandomK) && data.n > 0 {
-                        // validate_wire proved payload >= 4 bytes; the
-                        // leading u32 is the block's element budget `k`
-                        // for both sparse layouts.
-                        let k = crate::compress::get_u32(&data.payload, 0) as usize;
-                        let (k_lo, k_hi) = (k_for_ppm(lo, data.n), k_for_ppm(hi, data.n));
-                        if k < k_lo || k > k_hi {
-                            eprintln!(
-                                "server: rejecting out-of-bounds push for key {key} from \
-                                 worker {worker}: k={k} outside granted [{k_lo}, {k_hi}] \
-                                 (n={}, envelope [{lo}, {hi}] ppm)",
-                                data.n
-                            );
-                            self.stats.bounds_rejected += 1;
-                            return vec![];
-                        }
-                    }
-                }
-                // Every push targets (or establishes) an established key;
-                // placeholders don't consume this budget until a push
-                // gives them a dimension. Checked before touching the map
-                // so a rejected junk push cannot leave a placeholder
-                // behind either. (Hoisted: `st` below holds a &mut borrow
-                // of the key map.)
-                let at_established_cap = self.at_established_capacity();
-                if at_established_cap && !self.keys.contains_key(&key) {
-                    eprintln!(
-                        "server: rejecting push for unknown key {key} from worker {worker}: \
-                         shard is at its {}-key capacity",
-                        self.opts.max_keys
-                    );
-                    self.stats.rejected += 1;
-                    return vec![];
-                }
-                let n_workers = self.opts.n_workers;
-                let max_keys = self.opts.max_keys;
-                let st = self.keys.entry(key).or_insert_with(|| KeyState::fresh(iter));
-                match st.dim {
-                    // A self-consistent corrupt frame can still carry the
-                    // wrong element count for this key; reject it rather
-                    // than resize (or panic on) the reducer.
-                    Some(d) if data.n != d => {
-                        eprintln!(
-                            "server: rejecting push for key {key} from worker {worker}: \
-                             n={} but the key has {d} elements",
-                            data.n
-                        );
-                        self.stats.rejected += 1;
-                        return vec![];
-                    }
-                    // First push fixes the key's element count. The state
-                    // may be a placeholder from an earlier queued pull, so
-                    // adopt the pusher's iteration clock too — and charge
-                    // the establishment budget now.
-                    None => {
-                        if at_established_cap {
-                            eprintln!(
-                                "server: rejecting push establishing key {key} from worker \
-                                 {worker}: shard is at its {max_keys}-key capacity"
-                            );
-                            self.stats.rejected += 1;
-                            return vec![];
-                        }
-                        st.dim = Some(data.n);
-                        st.iter = iter;
-                        self.established_keys += 1;
-                    }
-                    _ => {}
-                }
-                if iter < st.iter {
-                    // A push for an iteration this key already retired.
-                    // If it targets the just-retired (one-slot history)
-                    // round — whose bytes may still be encoding under the
-                    // staged executor — it is the honest straggler the
-                    // degraded-round protocol tolerates, and belongs in
-                    // the `late_pushes` telemetry, not the corruption
-                    // counter. Anything older is a hostile client or a
-                    // straggler beyond BSP's lag bound. Unusable either
-                    // way; drop.
-                    let retired_match = st.prev.as_ref().is_some_and(|(p, _, _)| *p == iter)
-                        || st.encoding.as_ref().is_some_and(|s| s.iter == iter)
-                        || st.seals.iter().any(|s| s.iter == iter);
-                    if retired_match {
-                        eprintln!(
-                            "server: dropping late push for key {key} iteration {iter} \
-                             from worker {worker}: the round was sealed and retired"
-                        );
-                        self.stats.late_pushes += 1;
-                        let spread = Self::late_round_spread(st, iter);
-                        self.note_late_spread(spread);
-                    } else {
-                        eprintln!(
-                            "server: rejecting stale push for key {key} iteration {iter} \
-                             from worker {worker} (key is at {})",
-                            st.iter
-                        );
-                        self.stats.rejected += 1;
-                    }
-                    return vec![];
-                }
-                if st.iter != iter {
-                    // New iteration for this key: retire the sealed
-                    // aggregate (slow workers may still pull it) and reset
-                    // the round. A short round — a rejected corrupt push
-                    // left the round below n_workers and no deadline
-                    // sealed it — is recovered by discarding the partial
-                    // contributions, never by asserting the shard down on
-                    // untrusted input. A sealed round (bytes ready, or
-                    // still in the seal pipeline) was already counted
-                    // where it sealed; it must not be double-counted as
-                    // short here.
-                    let sealed = Self::round_sealed(st);
-                    if !st.contributors.is_empty()
-                        && st.contributors.len() != n_workers
-                        && !sealed
-                    {
-                        eprintln!(
-                            "server: key {key} iteration {} was short ({}/{} pushes); \
-                             discarding the partial round",
-                            st.iter,
-                            st.contributors.len(),
-                            n_workers
-                        );
-                        self.stats.short_iters += 1;
-                    }
-                    if let Some((served, p)) = st.ready.take() {
-                        st.prev = Some((st.iter, served, p));
-                    }
-                    // A seal still in the pipeline routes its bytes into
-                    // `prev` at encode completion (`on_event`); discarded
-                    // partial decodes are dropped here, and any of their
-                    // jobs still in flight become stale events.
-                    st.iter = iter;
-                    st.contributors.clear();
-                    st.decoded.clear();
-                    st.inflight_decodes = 0;
-                    st.round_started = None;
-                } else if Self::round_sealed(st) {
-                    // The round for `iter` is already sealed — by a full
-                    // BSP completion (this is a duplicate push) or by the
-                    // iteration deadline (this is the late straggler the
-                    // degraded-round protocol tolerates). Either way the
-                    // aggregate may already be in other workers' hands:
-                    // merging retroactively would hand different workers
-                    // different bytes for the same iteration. Drop it,
-                    // counted — a rejected or late push is never
-                    // resurrected.
-                    eprintln!(
-                        "server: dropping late push for key {key} iteration {iter} from \
-                         worker {worker}: the round is already sealed"
-                    );
-                    self.stats.late_pushes += 1;
-                    let spread = Self::late_round_spread(st, iter);
-                    self.note_late_spread(spread);
-                    return vec![];
-                }
-                if st.contributors.contains(&from) {
-                    // A second push from the same connection for an open
-                    // round — a retransmitting or hostile client. Counting
-                    // it would complete the round early with one worker
-                    // double-counted (and `served_with` lying about it);
-                    // the connection index is the trusted identity, never
-                    // the wire `worker` field.
-                    eprintln!(
-                        "server: rejecting duplicate push for key {key} iteration {iter} \
-                         from connection {from} (claims worker {worker})"
-                    );
-                    self.stats.rejected += 1;
-                    return vec![];
-                }
-                if st.contributors.is_empty() {
-                    // First push of the round starts the deadline clock.
-                    st.round_started = Some(Instant::now());
-                }
-                st.contributors.push(from);
-                let complete = st.contributors.len() == n_workers;
-                self.stats.pushes += 1;
-                let mut replies = vec![(from, Message::Ack { key, iter })];
-                self.dispatch_decode(key, iter, from, data, &mut replies);
-                if complete {
-                    self.decide_seal(key, &mut replies);
-                }
-                replies
+                self.ingest_push(from, key, iter, worker, 1, data)
+            }
+            // A group leader's combined push (hierarchical two-level
+            // topology): the ingress decisions are identical to a flat
+            // push, but it weighs `members` contributions — clamped to
+            // the round's remaining capacity inside `ingest_push` —
+            // toward round completion, the averaging divisor, and the
+            // `served_with` tag.
+            Message::GroupPush { key, iter, worker, members, data } => {
+                self.ingest_push(from, key, iter, worker, members, data)
             }
             Message::Pull { key, iter, worker } => {
                 self.stats.pulls += 1;
@@ -756,6 +566,240 @@ impl ServerCore {
         }
     }
 
+    /// Shared ingress for flat pushes (`claimed` = 1) and hierarchical
+    /// group pushes (`claimed` = the leader's `members` field): one code
+    /// path, so the two kinds are validated, deduplicated, and
+    /// late/stale-classified identically. The claim is *clamped* to the
+    /// round's remaining contributor capacity before it counts — a
+    /// hostile leader overstating its group cannot inflate the averaging
+    /// divisor or `served_with` past the workers that exist, it can only
+    /// complete the round (counted in `members_clamped`).
+    fn ingest_push(
+        &mut self,
+        from: u32,
+        key: Key,
+        iter: u64,
+        worker: u32,
+        claimed: u16,
+        data: Compressed,
+    ) -> Vec<(u32, Message)> {
+        // Untrusted wire data: reject corrupt blocks instead of
+        // letting a bad index/length panic the decoder. (The
+        // TCP transport already rejects these at frame decode;
+        // this also covers the in-process transport.)
+        if let Err(e) = crate::compress::validate_wire(&data) {
+            eprintln!("server: rejecting corrupt push for key {key} from worker {worker}: {e}");
+            self.stats.rejected += 1;
+            return vec![];
+        }
+        // Adaptive envelope (negotiated at registration): a
+        // structurally valid sparse block may still claim a keep
+        // ratio the handshake never granted — an honest controller
+        // stays inside the granted bounds (it clamps in ppm space
+        // and shares `k_for_ppm` with this check), so anything
+        // outside is a hostile or misconfigured client. Dropped
+        // and counted, never merged. Empty blocks (`n == 0`) are
+        // exempt: the sparsifiers emit `k == 0` for them while the
+        // envelope floor is 1 element.
+        if let Some((lo, hi)) = self.opts.adaptive_bounds {
+            use crate::compress::controller::k_for_ppm;
+            use crate::compress::SchemeId;
+            if matches!(data.scheme, SchemeId::TopK | SchemeId::RandomK) && data.n > 0 {
+                // validate_wire proved payload >= 4 bytes; the
+                // leading u32 is the block's element budget `k`
+                // for both sparse layouts.
+                let k = crate::compress::get_u32(&data.payload, 0) as usize;
+                let (k_lo, k_hi) = (k_for_ppm(lo, data.n), k_for_ppm(hi, data.n));
+                if k < k_lo || k > k_hi {
+                    eprintln!(
+                        "server: rejecting out-of-bounds push for key {key} from \
+                         worker {worker}: k={k} outside granted [{k_lo}, {k_hi}] \
+                         (n={}, envelope [{lo}, {hi}] ppm)",
+                        data.n
+                    );
+                    self.stats.bounds_rejected += 1;
+                    return vec![];
+                }
+            }
+        }
+        // Every push targets (or establishes) an established key;
+        // placeholders don't consume this budget until a push
+        // gives them a dimension. Checked before touching the map
+        // so a rejected junk push cannot leave a placeholder
+        // behind either. (Hoisted: `st` below holds a &mut borrow
+        // of the key map.)
+        let at_established_cap = self.at_established_capacity();
+        if at_established_cap && !self.keys.contains_key(&key) {
+            eprintln!(
+                "server: rejecting push for unknown key {key} from worker {worker}: \
+                 shard is at its {}-key capacity",
+                self.opts.max_keys
+            );
+            self.stats.rejected += 1;
+            return vec![];
+        }
+        let n_workers = self.opts.n_workers;
+        let max_keys = self.opts.max_keys;
+        let st = self.keys.entry(key).or_insert_with(|| KeyState::fresh(iter));
+        match st.dim {
+            // A self-consistent corrupt frame can still carry the
+            // wrong element count for this key; reject it rather
+            // than resize (or panic on) the reducer.
+            Some(d) if data.n != d => {
+                eprintln!(
+                    "server: rejecting push for key {key} from worker {worker}: \
+                     n={} but the key has {d} elements",
+                    data.n
+                );
+                self.stats.rejected += 1;
+                return vec![];
+            }
+            // First push fixes the key's element count. The state
+            // may be a placeholder from an earlier queued pull, so
+            // adopt the pusher's iteration clock too — and charge
+            // the establishment budget now.
+            None => {
+                if at_established_cap {
+                    eprintln!(
+                        "server: rejecting push establishing key {key} from worker \
+                         {worker}: shard is at its {max_keys}-key capacity"
+                    );
+                    self.stats.rejected += 1;
+                    return vec![];
+                }
+                st.dim = Some(data.n);
+                st.iter = iter;
+                self.established_keys += 1;
+            }
+            _ => {}
+        }
+        if iter < st.iter {
+            // A push for an iteration this key already retired.
+            // If it targets the just-retired (one-slot history)
+            // round — whose bytes may still be encoding under the
+            // staged executor — it is the honest straggler the
+            // degraded-round protocol tolerates, and belongs in
+            // the `late_pushes` telemetry, not the corruption
+            // counter. Anything older is a hostile client or a
+            // straggler beyond BSP's lag bound. Unusable either
+            // way; drop.
+            let retired_match = st.prev.as_ref().is_some_and(|(p, _, _)| *p == iter)
+                || st.encoding.as_ref().is_some_and(|s| s.iter == iter)
+                || st.seals.iter().any(|s| s.iter == iter);
+            if retired_match {
+                eprintln!(
+                    "server: dropping late push for key {key} iteration {iter} \
+                     from worker {worker}: the round was sealed and retired"
+                );
+                self.stats.late_pushes += 1;
+                let spread = Self::late_round_spread(st, iter);
+                self.note_late_spread(spread);
+            } else {
+                eprintln!(
+                    "server: rejecting stale push for key {key} iteration {iter} \
+                     from worker {worker} (key is at {})",
+                    st.iter
+                );
+                self.stats.rejected += 1;
+            }
+            return vec![];
+        }
+        if st.iter != iter {
+            // New iteration for this key: retire the sealed
+            // aggregate (slow workers may still pull it) and reset
+            // the round. A short round — a rejected corrupt push
+            // left the round below n_workers and no deadline
+            // sealed it — is recovered by discarding the partial
+            // contributions, never by asserting the shard down on
+            // untrusted input. A sealed round (bytes ready, or
+            // still in the seal pipeline) was already counted
+            // where it sealed; it must not be double-counted as
+            // short here.
+            let sealed = Self::round_sealed(st);
+            let present: usize = st.contributors.iter().map(|&(_, w)| usize::from(w)).sum();
+            if present > 0 && present != n_workers && !sealed {
+                eprintln!(
+                    "server: key {key} iteration {} was short ({present}/{n_workers} \
+                     contribution weight); discarding the partial round",
+                    st.iter
+                );
+                self.stats.short_iters += 1;
+            }
+            if let Some((served, p)) = st.ready.take() {
+                st.prev = Some((st.iter, served, p));
+            }
+            // A seal still in the pipeline routes its bytes into
+            // `prev` at encode completion (`on_event`); discarded
+            // partial decodes are dropped here, and any of their
+            // jobs still in flight become stale events.
+            st.iter = iter;
+            st.contributors.clear();
+            st.decoded.clear();
+            st.inflight_decodes = 0;
+            st.round_started = None;
+        } else if Self::round_sealed(st) {
+            // The round for `iter` is already sealed — by a full
+            // BSP completion (this is a duplicate push) or by the
+            // iteration deadline (this is the late straggler the
+            // degraded-round protocol tolerates). Either way the
+            // aggregate may already be in other workers' hands:
+            // merging retroactively would hand different workers
+            // different bytes for the same iteration. Drop it,
+            // counted — a rejected or late push is never
+            // resurrected.
+            eprintln!(
+                "server: dropping late push for key {key} iteration {iter} from \
+                 worker {worker}: the round is already sealed"
+            );
+            self.stats.late_pushes += 1;
+            let spread = Self::late_round_spread(st, iter);
+            self.note_late_spread(spread);
+            return vec![];
+        }
+        if st.contributors.iter().any(|&(c, _)| c == from) {
+            // A second push from the same connection for an open
+            // round — a retransmitting or hostile client. Counting
+            // it would complete the round early with one worker
+            // double-counted (and `served_with` lying about it);
+            // the connection index is the trusted identity, never
+            // the wire `worker` field.
+            eprintln!(
+                "server: rejecting duplicate push for key {key} iteration {iter} \
+                 from connection {from} (claims worker {worker})"
+            );
+            self.stats.rejected += 1;
+            return vec![];
+        }
+        if st.contributors.is_empty() {
+            // First push of the round starts the deadline clock.
+            st.round_started = Some(Instant::now());
+        }
+        // Weighted contribution. An open round always has weight capacity
+        // left (it seals the instant the weights reach `n_workers`), so
+        // the clamped weight is at least 1 — a group push is never
+        // silently zero-weighted. A claim of 0 (nonsensical: a leader
+        // always carries at least itself) is treated as 1.
+        let present: usize = st.contributors.iter().map(|&(_, w)| usize::from(w)).sum();
+        let capacity = n_workers.saturating_sub(present).max(1);
+        let weight = usize::from(claimed.max(1)).min(capacity);
+        if usize::from(claimed) > weight {
+            eprintln!(
+                "server: clamping group push for key {key} iteration {iter} from \
+                 worker {worker}: claimed {claimed} members, round capacity {capacity}"
+            );
+            self.stats.members_clamped += 1;
+        }
+        st.contributors.push((from, weight.min(usize::from(u16::MAX)) as u16));
+        let complete = present + weight >= n_workers;
+        self.stats.pushes += 1;
+        let mut replies = vec![(from, Message::Ack { key, iter })];
+        self.dispatch_decode(key, iter, from, data, &mut replies);
+        if complete {
+            self.decide_seal(key, &mut replies);
+        }
+        replies
+    }
+
     /// Apply one stage-job completion. On the synchronous path this is
     /// called recursively from `handle`/`poll_deadlines`; the staged I/O
     /// loop calls it with events drained from its channel.
@@ -778,7 +822,7 @@ impl ServerCore {
                         pump = seal.awaiting == 0;
                     } else if st.iter == iter && st.inflight_decodes > 0 {
                         debug_assert!(
-                            st.contributors.contains(&from),
+                            st.contributors.iter().any(|&(c, _)| c == from),
                             "decode for a non-contributor"
                         );
                         st.decoded.push((from, buf));
@@ -856,7 +900,10 @@ impl ServerCore {
         };
         debug_assert!(!Self::round_sealed(st), "sealing an already-sealed round");
         debug_assert!(!st.contributors.is_empty(), "sealing an empty round");
-        let count = st.contributors.len();
+        // Weighted: a group push counts its (clamped) member weight toward
+        // both the averaging divisor and the `served_with` tag, so G
+        // leaders fronting W workers average exactly like W flat pushes.
+        let count: usize = st.contributors.iter().map(|&(_, w)| usize::from(w)).sum();
         let served = count.min(u16::MAX as usize) as u16;
         let iter = st.iter;
         let mut full_latency = None;
@@ -1365,7 +1412,10 @@ mod tests {
     #[test]
     fn unexpected_messages_are_counted_not_fatal() {
         let mut core = ServerCore::new(opts("identity", SyncMode::Full, 1));
-        let r = core.handle(0, Message::Hello { worker: 0, n_keys: 3, config: 0 });
+        let r = core.handle(
+            0,
+            Message::Hello { worker: 0, n_keys: 3, config: 0, k_min_ppm: 0, k_max_ppm: 0 },
+        );
         assert!(r.is_empty());
         let r = core.handle(0, Message::Ack { key: 0, iter: 0 });
         assert!(r.is_empty());
@@ -1916,5 +1966,104 @@ mod tests {
         let r = core.handle(0, Message::Push { key: 0, iter: 0, worker: 0, data });
         assert!(!r.is_empty());
         assert_eq!(core.stats.bounds_rejected, 0);
+    }
+
+    fn gpush(
+        core: &mut ServerCore,
+        key: Key,
+        iter: u64,
+        worker: u32,
+        members: u16,
+        g: &[f32],
+    ) -> Vec<(u32, Message)> {
+        let mut rng = Xoshiro256::seed_from_u64(worker as u64 + 100);
+        let data = core.opts.comp.compress(g, &mut Ctx::new(&mut rng));
+        core.handle(worker, Message::GroupPush { key, iter, worker, members, data })
+    }
+
+    /// A round of G group pushes (each carrying its group's gradient SUM
+    /// and member weight) averages exactly like W flat pushes: the server
+    /// divides by the summed weights, not the number of connections.
+    #[test]
+    fn group_pushes_average_by_member_weight() {
+        let mut core = ServerCore::new(opts("identity", SyncMode::Full, 4));
+        // Group 0 = {[1,1], [1,3]} → sum [2,4]; group 1 = {[3,3], [3,5]} → [6,8].
+        let r = gpush(&mut core, 0, 0, 0, 2, &[2.0, 4.0]);
+        assert_eq!(r.len(), 1, "first group push just acks: {r:?}");
+        let r = gpush(&mut core, 0, 0, 1, 2, &[6.0, 8.0]);
+        assert!(!r.is_empty(), "weights 2+2 must complete the 4-worker round");
+        let r = core.handle(0, Message::Pull { key: 0, iter: 0, worker: 0 });
+        let Message::PullResp { served_with, data, .. } = &r[0].1 else { panic!("{r:?}") };
+        assert_eq!(*served_with, 4, "served_with reports workers, not connections");
+        let mut out = vec![0.0f32; 2];
+        core.opts.comp.decompress(data, &mut out);
+        assert_eq!(out, vec![2.0, 3.0], "mean over 4 workers, not 2 pushes");
+        assert_eq!(core.stats.members_clamped, 0);
+    }
+
+    /// Flat pushes and group pushes mix: weights 1 and 3 complete a
+    /// 4-worker round together and the divisor is the weight sum.
+    #[test]
+    fn flat_and_group_pushes_mix() {
+        let mut core = ServerCore::new(opts("identity", SyncMode::Full, 4));
+        push(&mut core, 0, 0, 0, &[1.0, 2.0]);
+        let r = gpush(&mut core, 0, 0, 1, 3, &[3.0, 6.0]);
+        assert!(!r.is_empty());
+        let r = core.handle(0, Message::Pull { key: 0, iter: 0, worker: 0 });
+        let Message::PullResp { served_with, data, .. } = &r[0].1 else { panic!("{r:?}") };
+        assert_eq!(*served_with, 4);
+        let mut out = vec![0.0f32; 2];
+        core.opts.comp.decompress(data, &mut out);
+        assert_eq!(out, vec![1.0, 2.0]);
+    }
+
+    /// A hostile leader overstating `members` is clamped to the round's
+    /// remaining capacity — counted, never a panic, and the averaging
+    /// divisor / `served_with` never exceed the workers that exist. A
+    /// nonsensical claim of 0 weighs 1 and also never panics.
+    #[test]
+    fn hostile_members_claim_is_clamped_and_counted() {
+        let mut core = ServerCore::new(opts("identity", SyncMode::Full, 4));
+        gpush(&mut core, 0, 0, 0, 2, &[4.0]);
+        // Claims 60000 members into a round with capacity 2.
+        let r = gpush(&mut core, 0, 0, 1, 60_000, &[8.0]);
+        assert!(!r.is_empty(), "clamped push still completes the round");
+        assert_eq!(core.stats.members_clamped, 1);
+        let r = core.handle(0, Message::Pull { key: 0, iter: 0, worker: 0 });
+        let Message::PullResp { served_with, data, .. } = &r[0].1 else { panic!("{r:?}") };
+        assert_eq!(*served_with, 4, "clamped weight caps served_with at n_workers");
+        let mut out = vec![0.0f32; 1];
+        core.opts.comp.decompress(data, &mut out);
+        assert_eq!(out, vec![3.0], "divisor is the clamped weight sum (4), not the claim");
+        // members == 0 (a leader always carries at least itself): weighs 1.
+        let mut core = ServerCore::new(opts("identity", SyncMode::Full, 2));
+        gpush(&mut core, 0, 0, 0, 0, &[2.0]);
+        let r = gpush(&mut core, 0, 0, 1, 1, &[4.0]);
+        assert!(!r.is_empty(), "0+1 claims weigh 1+1 and complete the 2-worker round");
+        assert_eq!(core.stats.members_clamped, 0, "understating is not a clamp event");
+        let r = core.handle(0, Message::Pull { key: 0, iter: 0, worker: 0 });
+        let Message::PullResp { data, .. } = &r[0].1 else { panic!("{r:?}") };
+        let mut out = vec![0.0f32; 1];
+        core.opts.comp.decompress(data, &mut out);
+        assert_eq!(out, vec![3.0]);
+    }
+
+    /// Degraded-group semantics: when a whole group misses the deadline,
+    /// the round seals with the present groups' weight — `served_with`
+    /// reports the member weight (not the connection count) and the
+    /// average divides by it.
+    #[test]
+    fn deadline_seals_missing_group_with_weighted_served() {
+        let mut core = ServerCore::new(opts_deadline("identity", SyncMode::Full, 4));
+        gpush(&mut core, 0, 0, 0, 2, &[4.0, 8.0]); // group 0's sum of 2 members
+        // Group 1 never arrives; the deadline seals the round degraded.
+        core.poll_deadlines(after_deadline());
+        assert_eq!(core.stats.degraded_iters, 1);
+        let r = core.handle(0, Message::Pull { key: 0, iter: 0, worker: 0 });
+        let Message::PullResp { served_with, data, .. } = &r[0].1 else { panic!("{r:?}") };
+        assert_eq!(*served_with, 2, "served_with is the present member weight");
+        let mut out = vec![0.0f32; 2];
+        core.opts.comp.decompress(data, &mut out);
+        assert_eq!(out, vec![2.0, 4.0], "average over the 2 members present");
     }
 }

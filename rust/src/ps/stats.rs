@@ -112,6 +112,13 @@ pub struct ServerStats {
     /// or by the deadline) — dropped and counted, never merged
     /// retroactively into an aggregate other workers may have pulled.
     pub late_pushes: u64,
+    /// Hierarchical-mode group pushes whose claimed `members` weight
+    /// exceeded the round's remaining contributor capacity — a hostile or
+    /// buggy leader overstating its group. The weight is clamped down to
+    /// what the round can still absorb (the push itself is kept) and each
+    /// occurrence is counted here, never a panic. Always 0 in flat runs
+    /// and in honest hierarchical runs.
+    pub members_clamped: u64,
     /// Shard-internal bookkeeping drift the server recovered from instead
     /// of panicking (a seal decision for an unknown key, a seal pipeline
     /// that lost its front seal or dimension). Always 0 in a healthy run;
@@ -159,7 +166,8 @@ impl std::fmt::Display for ServerStats {
             f,
             "{} pushes | {} pulls | {} rejected | {} bounds rejected | \
              {} short iterations | {} degraded iterations | {} late pushes | \
-             {} stale pulls | {} early pulls | {} unexpected | {} internal errors",
+             {} stale pulls | {} early pulls | {} unexpected | \
+             {} members clamped | {} internal errors",
             self.pushes,
             self.pulls,
             self.rejected,
@@ -170,6 +178,7 @@ impl std::fmt::Display for ServerStats {
             self.stale_pulls,
             self.early_pulls,
             self.unexpected,
+            self.members_clamped,
             self.internal_errors
         )?;
         write!(

@@ -372,6 +372,87 @@ pub fn scaling_efficiency(w: &Workload, c: &Cluster, p: &CompressorProfile) -> f
     t1 / tn
 }
 
+/// One aggregation tier's projected round time at fan-in `fan_in`, in
+/// whole-gradient units over a **fixed pool** of aggregator CPU/NIC: the
+/// tier serves `fan_in` peers, each delivering one compressed gradient,
+/// so its round cost is the serialized ingress wire time (`fan_in`
+/// compressed gradients through one NIC, one connection's latency — the
+/// O(fan-in) term the hierarchical topology exists to cut) plus its CPU
+/// share (decode × `fan_in` + one re-encode, projected by `cpu_scale`).
+/// Both the flat PS tier (`fan_in = W`) and each level of the two-level
+/// topology (`fan_in = m` at the leader, `G` at the shard) have this
+/// shape — the asymmetry between the wire slope and the re-encode
+/// constant is what creates the crossover (see
+/// [`hier_crossover_nodes`]).
+pub fn fan_in_round_s(d_elems: usize, fan_in: usize, c: &Cluster, p: &CompressorProfile) -> f64 {
+    let wire_one = p.wire_bytes(d_elems) as f64 * 8.0 / (c.net_gbps * 1e9);
+    let ingest_s = fan_in as f64 * wire_one + c.latency_s;
+    let cpu_s = (p.decompress_ns_per_elem * fan_in as f64 + p.compress_ns_per_elem)
+        * d_elems as f64
+        / (1e9 * c.cpu_scale);
+    ingest_s + cpu_s
+}
+
+/// Two-level round time for `nodes` workers in groups of `group_size`
+/// (which must divide `nodes`): the leader tier aggregates `group_size`
+/// member pushes, then the server tier aggregates `nodes / group_size`
+/// group pushes. The levels are serialized — under BSP a leader forwards
+/// its combined push only after its *last* member arrives — so the
+/// two-level fleet pays the re-encode constant twice in exchange for
+/// replacing the O(W) fan-in slope with O(m) + O(G).
+pub fn hier_round_s(
+    d_elems: usize,
+    nodes: usize,
+    group_size: usize,
+    c: &Cluster,
+    p: &CompressorProfile,
+) -> f64 {
+    let groups = nodes / group_size.max(1);
+    fan_in_round_s(d_elems, group_size, c, p) + fan_in_round_s(d_elems, groups, c, p)
+}
+
+/// The best two-level split of `nodes` workers: the group size `m` (a
+/// proper divisor with `2 <= m <= nodes/2`, so both levels aggregate at
+/// least 2 peers) minimizing [`hier_round_s`]. `None` when `nodes < 4`
+/// or prime — two-level needs at least 2 groups of at least 2.
+pub fn best_group_size(
+    d_elems: usize,
+    nodes: usize,
+    c: &Cluster,
+    p: &CompressorProfile,
+) -> Option<(usize, f64)> {
+    let mut best: Option<(usize, f64)> = None;
+    for m in 2..=nodes / 2 {
+        if nodes % m != 0 {
+            continue;
+        }
+        let t = hier_round_s(d_elems, nodes, m, c, p);
+        if best.map_or(true, |(_, bt)| t < bt) {
+            best = Some((m, t));
+        }
+    }
+    best
+}
+
+/// Projected crossover: the smallest worker count (up to `max_nodes`)
+/// where the best two-level split beats the flat topology's
+/// [`fan_in_round_s`]. Wire-heavy profiles (identity) cross over at a
+/// handful of workers — the serialized ingress dominates — while
+/// CPU-heavy sparsifiers (top-k, whose re-encode constant the two-level
+/// fleet pays twice) cross over only at large fleets. `None` if the flat
+/// topology wins everywhere in range.
+pub fn hier_crossover_nodes(
+    d_elems: usize,
+    c: &Cluster,
+    p: &CompressorProfile,
+    max_nodes: usize,
+) -> Option<usize> {
+    (4..=max_nodes).find(|&n| {
+        best_group_size(d_elems, n, c, p)
+            .is_some_and(|(_, t)| t < fan_in_round_s(d_elems, n, c, p))
+    })
+}
+
 /// Geometric keep-ratio ramp from `lo` to `hi` over `steps` points — the
 /// trajectory the adaptive per-key controller traces when measured gain sits
 /// below `adaptive.target_gain` (its step rule is multiplicative, so the
@@ -686,6 +767,41 @@ mod tests {
 
         // Single-point trajectory is just the lower endpoint.
         assert_eq!(ratio_trajectory(0.02, 0.3, 1), vec![0.02]);
+    }
+
+    /// Hierarchical fan-in model: the two-level topology trades the O(W)
+    /// serialized server ingress for O(m) + O(G) plus a second re-encode
+    /// — so flat must win on tiny fleets, two-level on big ones, with a
+    /// profile-dependent crossover in between.
+    #[test]
+    fn hierarchical_fan_in_crossover() {
+        let c = Cluster::default();
+        let d = Workload::vgg16().d_elems;
+        let ident = default_profile("identity", 0.0);
+        let topk = default_profile("topk", 0.001);
+
+        // Tiny fleet: the extra tier costs more than the fan-in saves.
+        for p in [&ident, &topk] {
+            assert!(hier_round_s(d, 4, 2, &c, p) > fan_in_round_s(d, 4, &c, p));
+        }
+        // No valid split below 2 groups x 2 members, or for primes.
+        assert!(best_group_size(d, 3, &c, &ident).is_none());
+        assert!(best_group_size(d, 7, &c, &ident).is_none());
+
+        // Wire-heavy identity crosses over almost immediately (serialized
+        // ingress dominates); the CPU-heavy sparsifier — whose re-encode
+        // constant the two-level fleet pays twice — needs a big fleet.
+        let x_ident = hier_crossover_nodes(d, &c, &ident, 1 << 12).unwrap();
+        let x_topk = hier_crossover_nodes(d, &c, &topk, 1 << 12).unwrap();
+        assert!(x_ident <= 8, "identity crossover at {x_ident} workers");
+        assert!((32..512).contains(&x_topk), "topk crossover at {x_topk} workers");
+        assert!(x_ident < x_topk);
+
+        // Past the crossover the two-level fleet keeps winning, and the
+        // best split sits at sqrt(W) (m + W/m is minimized there).
+        let (m, t) = best_group_size(d, 256, &c, &topk).unwrap();
+        assert!(t < fan_in_round_s(d, 256, &c, &topk));
+        assert_eq!(m, 16, "best split of 256 workers should be sqrt: got {m}");
     }
 
     #[test]

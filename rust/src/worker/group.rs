@@ -1,0 +1,1006 @@
+//! Hierarchical two-level aggregation: the group-leader relay.
+//!
+//! Flat cluster mode gives every server shard O(W) fan-in — W workers
+//! each push every block every iteration, and the shard decodes W
+//! compressed blocks per key per round. The two-level topology partitions
+//! the W workers into G groups; each group elects a *leader* whose relay
+//! (this module):
+//!
+//! 1. collects its members' compressed pushes (one per member per key),
+//! 2. decodes and locally reduces them into the group's gradient **sum**
+//!    in *global-rank order* (deterministic regardless of arrival order —
+//!    the same discipline as the server's connection-index-ordered
+//!    reduce),
+//! 3. re-compresses the partial aggregate **once**, and
+//! 4. forwards a single [`Message::GroupPush`] per key to the owning
+//!    server shard, tagged with the number of members it folds in.
+//!
+//! The server weighs a group push `members`-fold (see
+//! `ps::core::ServerCore`), so G group pushes average exactly like W flat
+//! pushes — server fan-in, per-round decode count, and handshake load all
+//! drop from O(W) to O(G). Pulls fan back leader → members: the relay
+//! pulls each key once per iteration and forwards the `PullResp` clone to
+//! every member, preserving the `served_with` weight tag so member-side
+//! degraded-round accounting (EF folds) keeps its flat-W semantics.
+//!
+//! ## Re-compression and exactness
+//!
+//! The leader re-encodes the group sum by the scheme its members used:
+//!
+//! * **identity** blocks → an identity block of the sum — lossless.
+//! * **top-k** blocks → an *exact-sparse* top-k block whose `k` is the
+//!   sum's nonzero count (the union of member supports). The top-k wire
+//!   format is self-describing (`[k][indices][values]`) and the server
+//!   validates only `k ≤ n`, so the exact union encoding is legal on the
+//!   wire — lossless, at the cost of a k that grows with the union.
+//! * anything else (fp16, onebit, dither, randomk — formats that cannot
+//!   express an exact sparse sum) → re-compress with the configured
+//!   compressor, with a *leader-level* error-feedback residual absorbing
+//!   the re-compression error across rounds (Alg. 4 applied at the middle
+//!   tier). This arm is lossy per round and is counted
+//!   ([`RelayStats::lossy_reencodes`]); no flat-equivalence guarantee.
+//!
+//! With identity or top-k members and the synthetic integer-valued
+//! cluster workload, every partial sum is exact in f32, so the two-level
+//! aggregate is bit-identical to the flat run (asserted by the engine and
+//! cluster tests).
+//!
+//! ## Liveness
+//!
+//! A member that loses a push (fault injection, a dropped frame) still
+//! *pulls* that key — per-connection FIFO means the relay seeing a pull
+//! before the member's push proves the push is not coming. The relay then
+//! seals the group round without that member (`members` shrinks; the
+//! server's weighted round accounting and, if every group shrinks, its
+//! iteration deadline handle the rest). A member whose connection dies is
+//! marked permanently absent so one crash cannot wedge its group.
+//!
+//! The relay is single-threaded and lock-free: one poll loop multiplexes
+//! member and upstream endpoints with `try_recv` + exponential backoff
+//! (the same 50 µs → 1 ms ladder as the worker's ack drainers).
+
+use crate::comm::{CommError, Endpoint, Key, Message};
+use crate::compress::{validate_wire, Compressed, Compressor, Ctx, SchemeId};
+use crate::configx::SyncMode;
+use crate::ps::ShardPlan;
+use crate::util::rng::Xoshiro256;
+use crate::worker::pipeline::{job_seed, BlockEf};
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Seed salt separating the leader's re-compression RNG stream from every
+/// worker's per-block stream (`pipeline::job_seed` keyed by worker rank
+/// could collide with a group index otherwise).
+const GROUP_SEED_SALT: u64 = 0x6A09_E667_F3BC_C908;
+
+/// Everything the relay must agree on with its members and its servers.
+pub struct RelayOptions {
+    /// This group's index — the rank the leader registered with upstream
+    /// (servers see G registrants 0..G-1 in hierarchical mode).
+    pub group_idx: u32,
+    /// Global worker ranks, parallel to the member endpoint list. The
+    /// leader's own co-located worker is just another member (connected
+    /// over an in-process pair), so the relay itself holds no gradient
+    /// state.
+    pub member_ranks: Vec<u32>,
+    /// The run's compressor (both ways of the two-way compression).
+    pub comp: Arc<dyn Compressor>,
+    pub sync: SyncMode,
+    pub fused: bool,
+    /// Run seed — the lossy re-encode stream derives from it.
+    pub seed: u64,
+    /// Key → upstream server shard.
+    pub plan: Arc<ShardPlan>,
+}
+
+/// Relay liveness/volume counters, reported on shutdown next to the
+/// worker counters (leader processes print both).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RelayStats {
+    /// Combined `GroupPush` messages sent upstream (keys × iterations).
+    pub group_pushes: u64,
+    /// Member pushes received (and acked).
+    pub member_pushes: u64,
+    /// Member pulls received.
+    pub member_pulls: u64,
+    /// Member blocks dropped at the relay (wire-validation failure, block
+    /// size mismatch) — the round seals without them, never a panic.
+    pub rejected: u64,
+    /// Member-round absences: a member's pull (or death) proved its push
+    /// for a key was not coming and the group round sealed short.
+    pub absent_members: u64,
+    /// Group rounds re-encoded through the lossy path (leader-level EF)
+    /// because the member scheme cannot express an exact sparse sum.
+    pub lossy_reencodes: u64,
+    /// Messages the relay should never receive (duplicate pushes, stale
+    /// pulls, upstream junk) — dropped and counted, never a panic.
+    pub unexpected: u64,
+}
+
+impl std::fmt::Display for RelayStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} group pushes | {} member pushes | {} member pulls | {} rejected | \
+             {} absent members | {} lossy reencodes | {} unexpected",
+            self.group_pushes,
+            self.member_pushes,
+            self.member_pulls,
+            self.rejected,
+            self.absent_members,
+            self.lossy_reencodes,
+            self.unexpected
+        )
+    }
+}
+
+/// Where a relay-emitted message goes.
+#[derive(Debug, PartialEq, Eq)]
+pub enum Dest {
+    /// Index into the member endpoint list.
+    Member(usize),
+    /// Index into the upstream (server shard) endpoint list.
+    Upstream(usize),
+}
+
+/// One group round of one key.
+struct Round {
+    iter: u64,
+    /// Decoded member contributions, indexed like `member_ranks`.
+    got: Vec<Option<(SchemeId, Vec<f32>)>>,
+    n_got: usize,
+    /// Members proven absent this round (early pull, dead connection).
+    absent: Vec<bool>,
+    n_absent: usize,
+    /// Members waiting on this round's `PullResp`.
+    waiters: Vec<usize>,
+    /// The combined push went upstream (or was skipped for an all-absent
+    /// round) and the upstream pull is outstanding.
+    sealed: bool,
+    /// Upstream response, cached for members that pull after it arrived.
+    resp: Option<(u16, Compressed)>,
+}
+
+impl Round {
+    fn new(iter: u64, n_members: usize, dead: &[bool]) -> Round {
+        let mut r = Round {
+            iter,
+            got: (0..n_members).map(|_| None).collect(),
+            n_got: 0,
+            absent: vec![false; n_members],
+            n_absent: 0,
+            waiters: Vec::new(),
+            sealed: false,
+            resp: None,
+        };
+        // A dead member's pushes are never coming: pre-mark it so the
+        // round can seal on the live members alone.
+        for (m, &d) in dead.iter().enumerate() {
+            if d {
+                r.absent[m] = true;
+                r.n_absent += 1;
+            }
+        }
+        r
+    }
+}
+
+struct KeyState {
+    round: Round,
+    /// Element count, pinned by the first accepted contribution.
+    dim: Option<usize>,
+    /// One-slot history: the previous round's `(iter, served_with, data)`
+    /// for members that pull after the key rolled over.
+    prev: Option<(u64, u16, Compressed)>,
+}
+
+/// The relay state machine. Transport-agnostic: `on_member` /
+/// `on_upstream` consume one message and return the messages to send,
+/// exactly like `ServerCore::handle` — the poll loop in [`run_relay`]
+/// does the I/O.
+pub struct GroupRelay {
+    opts: RelayOptions,
+    /// Member indices in ascending global-rank order (the reduce order).
+    rank_order: Vec<usize>,
+    keys: HashMap<Key, KeyState>,
+    /// Leader-level EF residuals for the lossy re-encode arm.
+    group_ef: BlockEf,
+    /// Members whose connection died (permanently absent).
+    dead: Vec<bool>,
+    pub stats: RelayStats,
+}
+
+impl GroupRelay {
+    pub fn new(opts: RelayOptions) -> GroupRelay {
+        let mut rank_order: Vec<usize> = (0..opts.member_ranks.len()).collect();
+        rank_order.sort_by_key(|&m| opts.member_ranks[m]);
+        let n = opts.member_ranks.len();
+        GroupRelay {
+            opts,
+            rank_order,
+            keys: HashMap::new(),
+            group_ef: BlockEf::new(),
+            dead: vec![false; n],
+            stats: RelayStats::default(),
+        }
+    }
+
+    fn n_members(&self) -> usize {
+        self.opts.member_ranks.len()
+    }
+
+    /// Handle one message from member `m`; returns the messages to send.
+    pub fn on_member(&mut self, m: usize, msg: Message) -> Vec<(Dest, Message)> {
+        let mut out = Vec::new();
+        match msg {
+            Message::Push { key, iter, worker: _, data } => {
+                self.stats.member_pushes += 1;
+                // Ack immediately: the member's push window frees a slot
+                // per ack, and the relay never rejects an honest push.
+                out.push((Dest::Member(m), Message::Ack { key, iter }));
+                self.member_push(m, key, iter, data, &mut out);
+            }
+            Message::Pull { key, iter, worker: _ } => {
+                self.stats.member_pulls += 1;
+                self.member_pull(m, key, iter, &mut out);
+            }
+            _ => {
+                self.stats.unexpected += 1;
+                eprintln!("relay {}: unexpected member message {msg:?}", self.opts.group_idx);
+            }
+        }
+        out
+    }
+
+    /// Handle one message from upstream shard `s`.
+    pub fn on_upstream(&mut self, s: usize, msg: Message) -> Vec<(Dest, Message)> {
+        let mut out = Vec::new();
+        match msg {
+            Message::PullResp { key, iter, served_with, data } => {
+                let Some(st) = self.keys.get_mut(&key) else {
+                    self.stats.unexpected += 1;
+                    return out;
+                };
+                if st.round.iter == iter && st.round.sealed && st.round.resp.is_none() {
+                    for w in std::mem::take(&mut st.round.waiters) {
+                        out.push((
+                            Dest::Member(w),
+                            Message::PullResp { key, iter, served_with, data: data.clone() },
+                        ));
+                    }
+                    st.round.resp = Some((served_with, data));
+                } else {
+                    // A duplicate, or a response for a round this relay
+                    // never opened — shard-side drift; count it.
+                    self.stats.unexpected += 1;
+                    eprintln!(
+                        "relay {}: stray upstream response for key {key} iteration {iter} \
+                         from shard {s}",
+                        self.opts.group_idx
+                    );
+                }
+            }
+            Message::Ack { .. } => {} // our own GroupPush acked
+            _ => {
+                self.stats.unexpected += 1;
+                eprintln!("relay {}: unexpected upstream message {msg:?}", self.opts.group_idx);
+            }
+        }
+        out
+    }
+
+    /// Member `m`'s connection died: everything it has not pushed is
+    /// never coming. Mark it permanently absent and seal any round its
+    /// silence was holding open.
+    pub fn on_member_dead(&mut self, m: usize, out: &mut Vec<(Dest, Message)>) {
+        if self.dead.get(m).copied().unwrap_or(true) {
+            return;
+        }
+        self.dead[m] = true;
+        let keys: Vec<Key> = self.keys.keys().copied().collect();
+        for key in keys {
+            let Some(st) = self.keys.get_mut(&key) else { continue };
+            let r = &mut st.round;
+            if !r.sealed && r.got[m].is_none() && !r.absent[m] {
+                r.absent[m] = true;
+                r.n_absent += 1;
+                self.stats.absent_members += 1;
+                self.try_seal(key, out);
+            }
+        }
+    }
+
+    fn member_push(
+        &mut self,
+        m: usize,
+        key: Key,
+        iter: u64,
+        data: Compressed,
+        out: &mut Vec<(Dest, Message)>,
+    ) {
+        let n_members = self.n_members();
+        if m >= n_members {
+            self.stats.unexpected += 1;
+            return;
+        }
+        let st = self
+            .keys
+            .entry(key)
+            .or_insert_with(|| KeyState {
+                round: Round::new(iter, n_members, &self.dead),
+                dim: None,
+                prev: None,
+            });
+        // Rollover: a member can only push iteration t+1 after pulling
+        // every key of t, so a next-iter push proves round t of this key
+        // is fully answered upstream — retire it into the one-slot
+        // history for the group's slower members.
+        if iter == st.round.iter + 1 && st.round.sealed {
+            if let Some((served, resp)) = st.round.resp.take() {
+                st.prev = Some((st.round.iter, served, resp));
+                st.round = Round::new(iter, n_members, &self.dead);
+            }
+        }
+        let r = &mut st.round;
+        if iter != r.iter || r.sealed || r.got[m].is_some() || r.absent[m] {
+            self.stats.unexpected += 1;
+            eprintln!(
+                "relay {}: dropping out-of-round push for key {key} iteration {iter} \
+                 from member {m} (round is at {})",
+                self.opts.group_idx, r.iter
+            );
+            return;
+        }
+        // Same ingress discipline as the server: member payloads are wire
+        // data; validate before decoding, reject (and seal around) corrupt
+        // blocks instead of panicking.
+        let dim_ok = st.dim.is_none_or(|d| d == data.n);
+        if !dim_ok || validate_wire(&data).is_err() {
+            self.stats.rejected += 1;
+            r.absent[m] = true;
+            r.n_absent += 1;
+            eprintln!(
+                "relay {}: rejecting invalid block for key {key} iteration {iter} \
+                 from member {m}",
+                self.opts.group_idx
+            );
+            self.try_seal(key, out);
+            return;
+        }
+        st.dim = Some(data.n);
+        let mut buf = vec![0.0f32; data.n];
+        self.opts.comp.decompress(&data, &mut buf);
+        // The member payload dies with the decode; recycle it for the
+        // transport's future frames.
+        crate::comm::BufPool::global().give_bytes(data.payload);
+        let r = &mut st.round;
+        r.got[m] = Some((data.scheme, buf));
+        r.n_got += 1;
+        self.try_seal(key, out);
+    }
+
+    fn member_pull(&mut self, m: usize, key: Key, iter: u64, out: &mut Vec<(Dest, Message)>) {
+        let n_members = self.n_members();
+        let st = self
+            .keys
+            .entry(key)
+            .or_insert_with(|| KeyState {
+                round: Round::new(iter, n_members, &self.dead),
+                dim: None,
+                prev: None,
+            });
+        // Late pull for a retired round: serve the cached bytes.
+        if let Some((piter, served, resp)) = &st.prev {
+            if *piter == iter {
+                out.push((
+                    Dest::Member(m),
+                    Message::PullResp { key, iter, served_with: *served, data: resp.clone() },
+                ));
+                return;
+            }
+        }
+        if iter != st.round.iter {
+            // Neither current nor the retired slot — an honest BSP member
+            // can never get here; answer with the retired marker so the
+            // member fails loudly instead of hanging.
+            self.stats.unexpected += 1;
+            out.push((
+                Dest::Member(m),
+                Message::PullResp {
+                    key,
+                    iter,
+                    served_with: 0,
+                    data: Compressed { scheme: SchemeId::Identity, n: 0, payload: Vec::new() },
+                },
+            ));
+            return;
+        }
+        // Per-connection FIFO: this member's pushes for iteration `iter`
+        // all precede this pull, so a missing push is a *lost* push (the
+        // fault the degraded-round protocol is specified against) — stop
+        // waiting for it.
+        let r = &mut st.round;
+        if !r.sealed && m < n_members && r.got[m].is_none() && !r.absent[m] {
+            r.absent[m] = true;
+            r.n_absent += 1;
+            self.stats.absent_members += 1;
+        }
+        match &st.round.resp {
+            Some((served, resp)) => out.push((
+                Dest::Member(m),
+                Message::PullResp { key, iter, served_with: *served, data: resp.clone() },
+            )),
+            None => st.round.waiters.push(m),
+        }
+        self.try_seal(key, out);
+    }
+
+    /// Seal the group round for `key` if every member has either pushed
+    /// or been proven absent: reduce in global-rank order, re-encode
+    /// once, forward the combined push (then the group's single pull)
+    /// upstream.
+    fn try_seal(&mut self, key: Key, out: &mut Vec<(Dest, Message)>) {
+        let Some(st) = self.keys.get_mut(&key) else { return };
+        let r = &mut st.round;
+        if r.sealed || r.n_got + r.n_absent < self.opts.member_ranks.len() {
+            return;
+        }
+        r.sealed = true;
+        let iter = r.iter;
+        let shard = self.opts.plan.server_of(key);
+        if r.n_got == 0 {
+            // Every member absent: nothing to push. Still pull — the
+            // other groups' pushes complete the round (possibly via the
+            // server's deadline) and the waiters must be answered.
+            out.push((
+                Dest::Upstream(shard),
+                Message::Pull { key, iter, worker: self.opts.group_idx },
+            ));
+            return;
+        }
+        let dim = st.dim.unwrap_or(0);
+        // Reduce in global-rank order: arrival order never changes the
+        // f32 bits (mirrors the server's connection-index-ordered sum).
+        let mut acc = vec![0.0f32; dim];
+        let mut schemes: Option<SchemeId> = None;
+        let mut mixed = false;
+        for &m in &self.rank_order {
+            if let Some((scheme, buf)) = r.got[m].take() {
+                crate::compress::kernels::add_assign(&mut acc, &buf);
+                mixed |= schemes.is_some_and(|s| s != scheme);
+                schemes = Some(scheme);
+            }
+        }
+        // Group size is bounded by the worker count, validated small at
+        // config load — the u16 weight cannot truncate.
+        let members = r.n_got as u16;
+        let data = self.reencode(key, iter, acc, if mixed { None } else { schemes });
+        self.stats.group_pushes += 1;
+        out.push((
+            Dest::Upstream(shard),
+            Message::GroupPush { key, iter, worker: self.opts.group_idx, members, data },
+        ));
+        // The group's one pull per key per iteration, strictly after the
+        // combined push on the same FIFO connection — the shard sees the
+        // key at `iter` before the pull can queue against it.
+        out.push((
+            Dest::Upstream(shard),
+            Message::Pull { key, iter, worker: self.opts.group_idx },
+        ));
+    }
+
+    /// Re-encode the group sum once (the tentpole's single middle-tier
+    /// compression): exact for identity and top-k member blocks, EF-lossy
+    /// otherwise.
+    fn reencode(
+        &mut self,
+        key: Key,
+        iter: u64,
+        acc: Vec<f32>,
+        scheme: Option<SchemeId>,
+    ) -> Compressed {
+        match scheme {
+            Some(SchemeId::Identity) => {
+                let mut payload = Vec::with_capacity(4 * acc.len());
+                for &v in &acc {
+                    crate::compress::put_f32(&mut payload, v);
+                }
+                Compressed { scheme: SchemeId::Identity, n: acc.len(), payload }
+            }
+            Some(SchemeId::TopK) => {
+                // Exact-sparse union encoding: k = nonzero count of the
+                // sum. Legal on the wire (top-k blocks are validated by
+                // their own header, not the configured ratio) and decoded
+                // by the server's ordinary sparse accumulate.
+                let nz: Vec<(usize, f32)> = acc
+                    .iter()
+                    .enumerate()
+                    .filter(|&(_, &v)| v != 0.0)
+                    .map(|(i, &v)| (i, v))
+                    .collect();
+                // nnz and every index are bounded by the block element
+                // count (MiB-scale blocks, far below 2^32).
+                let mut payload = Vec::with_capacity(4 + 8 * nz.len());
+                crate::compress::put_u32(&mut payload, nz.len() as u32);
+                for &(i, _) in &nz {
+                    crate::compress::put_u32(&mut payload, i as u32);
+                }
+                for &(_, v) in &nz {
+                    crate::compress::put_f32(&mut payload, v);
+                }
+                Compressed { scheme: SchemeId::TopK, n: acc.len(), payload }
+            }
+            _ => {
+                // Lossy arm: re-compress with the configured scheme. The
+                // leader-level EF residual carries the re-compression
+                // error forward (Alg. 4 at the middle tier); the RNG
+                // stream is pinned per (group, key, iter) so scheduling
+                // can never change the bytes.
+                self.stats.lossy_reencodes += 1;
+                let seed =
+                    job_seed(self.opts.seed ^ GROUP_SEED_SALT, self.opts.group_idx, key, iter);
+                let mut rng = Xoshiro256::seed_from_u64(seed);
+                let mut ctx = Ctx::new(&mut rng);
+                if self.opts.sync == SyncMode::CompressedEf {
+                    self.group_ef.compress(
+                        key,
+                        acc,
+                        self.opts.comp.as_ref(),
+                        self.opts.fused,
+                        &mut ctx,
+                    )
+                } else {
+                    self.opts.comp.compress(&acc, &mut ctx)
+                }
+            }
+        }
+    }
+}
+
+/// A running relay thread (the leader's middle tier).
+pub struct RelayHandle {
+    handle: Option<JoinHandle<RelayStats>>,
+}
+
+impl RelayHandle {
+    /// Wait for the relay to drain (members must send Shutdown first).
+    pub fn join(mut self) -> RelayStats {
+        match self.handle.take().map(|h| h.join()) {
+            Some(Ok(stats)) => stats,
+            _ => {
+                eprintln!("relay: thread lost or panicked; reporting empty stats");
+                RelayStats::default()
+            }
+        }
+    }
+}
+
+/// Spawn [`run_relay`] on its own thread.
+pub fn spawn_relay(
+    opts: RelayOptions,
+    members: Vec<Box<dyn Endpoint>>,
+    upstream: Vec<Box<dyn Endpoint>>,
+) -> RelayHandle {
+    let handle = std::thread::Builder::new()
+        .name("bytepsc-relay".into())
+        .spawn(move || run_relay(GroupRelay::new(opts), &members, &upstream))
+        .ok();
+    if handle.is_none() {
+        eprintln!("relay: failed to spawn thread");
+    }
+    RelayHandle { handle }
+}
+
+/// Drive a relay over its endpoints until every member shuts down, then
+/// propagate the shutdown upstream and return the stats.
+///
+/// Single-threaded poll loop: `try_recv` across every endpoint with
+/// exponential backoff (50 µs idle floor, 1 ms ceiling) — no locks, no
+/// per-connection threads, and the relay stays deterministic because the
+/// state machine orders reductions by rank, not by arrival.
+pub fn run_relay(
+    mut relay: GroupRelay,
+    members: &[Box<dyn Endpoint>],
+    upstream: &[Box<dyn Endpoint>],
+) -> RelayStats {
+    let send = |dest: Dest, msg: Message| {
+        let ep: Option<&Box<dyn Endpoint>> = match dest {
+            Dest::Member(m) => members.get(m),
+            Dest::Upstream(s) => upstream.get(s),
+        };
+        if let Some(ep) = ep {
+            // A peer that died mid-send surfaces as a recv error on the
+            // next poll pass; nothing useful to do with the error here.
+            let _ = ep.send(msg);
+        }
+    };
+    let mut live: Vec<bool> = members.iter().map(|_| true).collect();
+    let mut n_live = members.len();
+    let min_idle = Duration::from_micros(50);
+    let max_idle = Duration::from_millis(1);
+    let mut idle = min_idle;
+    while n_live > 0 {
+        let mut progressed = false;
+        for m in 0..members.len() {
+            if !live[m] {
+                continue;
+            }
+            loop {
+                match members[m].try_recv() {
+                    Ok(Some(Message::Shutdown)) => {
+                        live[m] = false;
+                        n_live -= 1;
+                        progressed = true;
+                        break;
+                    }
+                    Ok(Some(msg)) => {
+                        progressed = true;
+                        for (dest, reply) in relay.on_member(m, msg) {
+                            send(dest, reply);
+                        }
+                    }
+                    Ok(None) => break,
+                    Err(CommError::Protocol(e)) => {
+                        // Frame-aligned corruption (the transport consumed
+                        // the frame): drop it, keep the member.
+                        progressed = true;
+                        relay.stats.rejected += 1;
+                        eprintln!("relay: dropping corrupt frame from member {m}: {e}");
+                    }
+                    Err(_) => {
+                        live[m] = false;
+                        n_live -= 1;
+                        progressed = true;
+                        let mut out = Vec::new();
+                        relay.on_member_dead(m, &mut out);
+                        for (dest, reply) in out {
+                            send(dest, reply);
+                        }
+                        break;
+                    }
+                }
+            }
+        }
+        for (s, ep) in upstream.iter().enumerate() {
+            loop {
+                match ep.try_recv() {
+                    Ok(Some(msg)) => {
+                        progressed = true;
+                        for (dest, reply) in relay.on_upstream(s, msg) {
+                            send(dest, reply);
+                        }
+                    }
+                    Ok(None) | Err(_) => break,
+                }
+            }
+        }
+        if progressed {
+            idle = min_idle;
+        } else {
+            std::thread::sleep(idle);
+            idle = (idle * 2).min(max_idle);
+        }
+    }
+    for ep in upstream {
+        let _ = ep.send(Message::Shutdown);
+    }
+    relay.stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::by_name;
+
+    fn opts(scheme: &str, param: f64, ranks: &[u32], n_keys: usize) -> RelayOptions {
+        let keys: Vec<Key> = (0..n_keys as u64).collect();
+        RelayOptions {
+            group_idx: 0,
+            member_ranks: ranks.to_vec(),
+            comp: by_name(scheme, param).unwrap(),
+            sync: if scheme == "identity" { SyncMode::Full } else { SyncMode::CompressedEf },
+            fused: true,
+            seed: 7,
+            plan: Arc::new(ShardPlan::round_robin_keyed(&keys, 1)),
+        }
+    }
+
+    fn push(data: &[f32], comp: &Arc<dyn Compressor>, seed: u64) -> Compressed {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        comp.compress(data, &mut Ctx::new(&mut rng))
+    }
+
+    fn group_push_of(out: &[(Dest, Message)]) -> Option<(u16, Compressed)> {
+        out.iter().find_map(|(d, m)| match (d, m) {
+            (Dest::Upstream(_), Message::GroupPush { members, data, .. }) => {
+                Some((*members, data.clone()))
+            }
+            _ => None,
+        })
+    }
+
+    #[test]
+    fn combines_identity_pushes_into_exact_sum() {
+        let o = opts("identity", 0.0, &[0, 1], 1);
+        let comp = Arc::clone(&o.comp);
+        let mut relay = GroupRelay::new(o);
+        let out = relay.on_member(
+            0,
+            Message::Push { key: 0, iter: 0, worker: 0, data: push(&[1.0, 2.0], &comp, 1) },
+        );
+        // Ack only — the round is still open.
+        assert_eq!(out.len(), 1);
+        assert!(matches!(out[0], (Dest::Member(0), Message::Ack { .. })));
+        assert!(group_push_of(&out).is_none());
+        let out = relay.on_member(
+            1,
+            Message::Push { key: 0, iter: 0, worker: 1, data: push(&[3.0, 6.0], &comp, 2) },
+        );
+        let (members, data) = group_push_of(&out).expect("round must seal");
+        assert_eq!(members, 2);
+        assert_eq!(data.scheme, SchemeId::Identity);
+        let mut sum = vec![0.0f32; 2];
+        comp.decompress(&data, &mut sum);
+        assert_eq!(sum, vec![4.0, 8.0], "group push must carry the SUM, not the average");
+        // The group's upstream pull follows the push on the same shard.
+        let pull_pos = out
+            .iter()
+            .position(|(d, m)| matches!((d, m), (Dest::Upstream(0), Message::Pull { .. })));
+        let push_pos = out
+            .iter()
+            .position(|(d, m)| matches!((d, m), (Dest::Upstream(0), Message::GroupPush { .. })));
+        assert!(push_pos < pull_pos, "upstream pull must follow the group push (FIFO)");
+        assert_eq!(relay.stats.group_pushes, 1);
+        assert_eq!(relay.stats.member_pushes, 2);
+    }
+
+    #[test]
+    fn reduce_order_is_rank_order_not_arrival_order() {
+        // Ranks deliberately not aligned with member indices.
+        let o = opts("identity", 0.0, &[5, 2], 1);
+        let comp = Arc::clone(&o.comp);
+        let run = |first: usize| -> Vec<f32> {
+            let o = opts("identity", 0.0, &[5, 2], 1);
+            let mut relay = GroupRelay::new(o);
+            let grads = [vec![1.0e-8f32, 1.0], vec![1.0f32, -1.0]];
+            let second = 1 - first;
+            let _ = relay.on_member(
+                first,
+                Message::Push {
+                    key: 0,
+                    iter: 0,
+                    worker: 0,
+                    data: push(&grads[first], &comp, 1),
+                },
+            );
+            let out = relay.on_member(
+                second,
+                Message::Push {
+                    key: 0,
+                    iter: 0,
+                    worker: 1,
+                    data: push(&grads[second], &comp, 2),
+                },
+            );
+            let (_, data) = group_push_of(&out).unwrap();
+            let mut sum = vec![0.0f32; 2];
+            comp.decompress(&data, &mut sum);
+            sum
+        };
+        assert_eq!(run(0), run(1), "arrival order must never change the reduced bits");
+    }
+
+    #[test]
+    fn topk_reencode_is_exact_sparse_union() {
+        let o = opts("topk", 0.25, &[0, 1], 1);
+        let comp = Arc::clone(&o.comp);
+        let mut relay = GroupRelay::new(o);
+        // dim 4, ratio 0.25 → each member keeps exactly 1 coordinate.
+        let a = push(&[9.0, 0.0, 0.0, 0.0], &comp, 1);
+        let b = push(&[0.0, 0.0, 7.0, 0.0], &comp, 2);
+        let _ = relay.on_member(0, Message::Push { key: 0, iter: 0, worker: 0, data: a });
+        let out = relay.on_member(1, Message::Push { key: 0, iter: 0, worker: 1, data: b });
+        let (members, data) = group_push_of(&out).unwrap();
+        assert_eq!(members, 2);
+        assert_eq!(data.scheme, SchemeId::TopK);
+        validate_wire(&data).expect("exact-sparse union must be a valid top-k block");
+        // k = union size 2, even though the configured ratio keeps 1.
+        assert_eq!(u32::from_le_bytes(data.payload[0..4].try_into().unwrap()), 2);
+        let mut sum = vec![0.0f32; 4];
+        comp.decompress(&data, &mut sum);
+        assert_eq!(sum, vec![9.0, 0.0, 7.0, 0.0]);
+        assert_eq!(relay.stats.lossy_reencodes, 0, "top-k path must be exact");
+    }
+
+    #[test]
+    fn early_pull_marks_member_absent_and_seals_short() {
+        let o = opts("identity", 0.0, &[0, 1], 1);
+        let comp = Arc::clone(&o.comp);
+        let mut relay = GroupRelay::new(o);
+        let _ = relay.on_member(
+            0,
+            Message::Push { key: 0, iter: 0, worker: 0, data: push(&[5.0], &comp, 1) },
+        );
+        // Member 1's pull without a push proves the push was lost.
+        let out = relay.on_member(1, Message::Pull { key: 0, iter: 0, worker: 1 });
+        let (members, data) = group_push_of(&out).expect("round must seal short");
+        assert_eq!(members, 1, "absent member must not be claimed upstream");
+        let mut sum = vec![0.0f32; 1];
+        comp.decompress(&data, &mut sum);
+        assert_eq!(sum, vec![5.0]);
+        assert_eq!(relay.stats.absent_members, 1);
+    }
+
+    #[test]
+    fn corrupt_member_block_is_rejected_never_panics() {
+        let o = opts("identity", 0.0, &[0, 1], 1);
+        let comp = Arc::clone(&o.comp);
+        let mut relay = GroupRelay::new(o);
+        let bad = Compressed { scheme: SchemeId::Identity, n: 8, payload: vec![0u8; 3] };
+        let _ = relay.on_member(0, Message::Push { key: 0, iter: 0, worker: 0, data: bad });
+        assert_eq!(relay.stats.rejected, 1);
+        let out = relay.on_member(
+            1,
+            Message::Push { key: 0, iter: 0, worker: 1, data: push(&[2.0], &comp, 1) },
+        );
+        let (members, _) = group_push_of(&out).expect("round seals around the corrupt block");
+        assert_eq!(members, 1);
+    }
+
+    #[test]
+    fn pull_resp_fans_back_to_waiters_and_late_pullers() {
+        let o = opts("identity", 0.0, &[0, 1], 1);
+        let comp = Arc::clone(&o.comp);
+        let mut relay = GroupRelay::new(o);
+        for m in 0..2u32 {
+            let _ = relay.on_member(
+                m as usize,
+                Message::Push { key: 0, iter: 0, worker: m, data: push(&[1.0], &comp, m as u64) },
+            );
+        }
+        // Member 0 pulls before the upstream response: it waits.
+        let out = relay.on_member(0, Message::Pull { key: 0, iter: 0, worker: 0 });
+        assert!(out.iter().all(|(_, m)| !matches!(m, Message::PullResp { .. })));
+        // Upstream answers: the waiter is served.
+        let resp = push(&[1.0], &comp, 9);
+        let out = relay.on_upstream(
+            0,
+            Message::PullResp { key: 0, iter: 0, served_with: 4, data: resp },
+        );
+        assert_eq!(out.len(), 1);
+        let (Dest::Member(0), Message::PullResp { served_with, .. }) = &out[0] else {
+            panic!("waiter must be served: {out:?}");
+        };
+        assert_eq!(*served_with, 4, "served_with weight must pass through unchanged");
+        // Member 1 pulls after: served from the cached response.
+        let out = relay.on_member(1, Message::Pull { key: 0, iter: 0, worker: 1 });
+        assert!(
+            matches!(&out[0], (Dest::Member(1), Message::PullResp { served_with: 4, .. })),
+            "{out:?}"
+        );
+    }
+
+    #[test]
+    fn rollover_serves_slow_member_from_prev_slot() {
+        let o = opts("identity", 0.0, &[0, 1], 1);
+        let comp = Arc::clone(&o.comp);
+        let mut relay = GroupRelay::new(o);
+        for m in 0..2u32 {
+            let _ = relay.on_member(
+                m as usize,
+                Message::Push { key: 0, iter: 0, worker: m, data: push(&[1.0], &comp, 1) },
+            );
+        }
+        let _ = relay.on_upstream(
+            0,
+            Message::PullResp { key: 0, iter: 0, served_with: 4, data: push(&[3.0], &comp, 2) },
+        );
+        // Fast member 0 pulls iter 0 and pushes iter 1, rolling the key.
+        let _ = relay.on_member(0, Message::Pull { key: 0, iter: 0, worker: 0 });
+        let _ = relay.on_member(
+            0,
+            Message::Push { key: 0, iter: 1, worker: 0, data: push(&[2.0], &comp, 3) },
+        );
+        // Slow member 1 still pulls iter 0 — served from the prev slot.
+        let out = relay.on_member(1, Message::Pull { key: 0, iter: 0, worker: 1 });
+        let (Dest::Member(1), Message::PullResp { iter, data, .. }) = &out[0] else {
+            panic!("slow member must be served: {out:?}");
+        };
+        assert_eq!(*iter, 0);
+        let mut v = vec![0.0f32; 1];
+        comp.decompress(data, &mut v);
+        assert_eq!(v, vec![3.0]);
+    }
+
+    #[test]
+    fn dead_member_cannot_wedge_the_group() {
+        let o = opts("identity", 0.0, &[0, 1], 1);
+        let comp = Arc::clone(&o.comp);
+        let mut relay = GroupRelay::new(o);
+        let _ = relay.on_member(
+            0,
+            Message::Push { key: 0, iter: 0, worker: 0, data: push(&[4.0], &comp, 1) },
+        );
+        let mut out = Vec::new();
+        relay.on_member_dead(1, &mut out);
+        let (members, _) = group_push_of(&out).expect("death must seal the round");
+        assert_eq!(members, 1);
+        // Future rounds pre-mark the dead member.
+        let _ = relay.on_member(0, Message::Pull { key: 0, iter: 0, worker: 0 });
+        let _ = relay.on_upstream(
+            0,
+            Message::PullResp { key: 0, iter: 0, served_with: 1, data: push(&[4.0], &comp, 2) },
+        );
+        let out = relay.on_member(
+            0,
+            Message::Push { key: 0, iter: 1, worker: 0, data: push(&[6.0], &comp, 3) },
+        );
+        let (members, _) = group_push_of(&out).expect("iter 1 must seal with the live member");
+        assert_eq!(members, 1);
+    }
+
+    /// End-to-end over real endpoints and the poll loop: two members, one
+    /// fake upstream shard, one full push/pull round, clean shutdown.
+    #[test]
+    fn run_relay_roundtrip_over_inproc() {
+        let o = opts("identity", 0.0, &[0, 1], 1);
+        let comp = Arc::clone(&o.comp);
+        let (m0, r0) = crate::comm::inproc::pair();
+        let (m1, r1) = crate::comm::inproc::pair();
+        let (relay_up, shard) = crate::comm::inproc::pair();
+        let handle = spawn_relay(
+            o,
+            vec![Box::new(r0), Box::new(r1)],
+            vec![Box::new(relay_up)],
+        );
+        // Fake shard: expect one GroupPush then one Pull; answer the pull.
+        let comp2 = Arc::clone(&comp);
+        let shard_thread = std::thread::spawn(move || {
+            let Message::GroupPush { key, iter, members, data, .. } = shard.recv().unwrap()
+            else {
+                panic!("expected GroupPush first")
+            };
+            assert_eq!(members, 2);
+            let mut sum = vec![0.0f32; data.n];
+            comp2.decompress(&data, &mut sum);
+            assert_eq!(sum, vec![30.0]);
+            shard.send(Message::Ack { key, iter }).unwrap();
+            assert!(matches!(shard.recv().unwrap(), Message::Pull { .. }));
+            let avg = push(&[7.5], &comp2, 5);
+            shard
+                .send(Message::PullResp { key, iter, served_with: 2, data: avg })
+                .unwrap();
+            assert!(matches!(shard.recv().unwrap(), Message::Shutdown));
+        });
+        for (m, ep, v) in [(0u32, &m0, 10.0f32), (1, &m1, 20.0)] {
+            ep.send(Message::Push { key: 0, iter: 0, worker: m, data: push(&[v], &comp, 1) })
+                .unwrap();
+        }
+        for ep in [&m0, &m1] {
+            ep.send(Message::Pull { key: 0, iter: 0, worker: 0 }).unwrap();
+            let mut got = None;
+            while got.is_none() {
+                match ep.recv().unwrap() {
+                    Message::Ack { .. } => {}
+                    Message::PullResp { served_with, data, .. } => {
+                        assert_eq!(served_with, 2);
+                        got = Some(data);
+                    }
+                    m => panic!("unexpected {m:?}"),
+                }
+            }
+            let mut v = vec![0.0f32; 1];
+            comp.decompress(&got.unwrap(), &mut v);
+            assert_eq!(v, vec![7.5]);
+            ep.send(Message::Shutdown).unwrap();
+        }
+        let stats = handle.join();
+        shard_thread.join().unwrap();
+        assert_eq!(stats.group_pushes, 1);
+        assert_eq!(stats.member_pushes, 2);
+        assert_eq!(stats.member_pulls, 2);
+        assert_eq!(stats.unexpected, 0);
+    }
+}

@@ -4,6 +4,7 @@
 //! ([`WorkerComm::push`]/[`pull`](WorkerComm::pull)) or block-pipelined
 //! ([`WorkerComm::push_all`]/[`pull_all`](WorkerComm::pull_all), §4.2.1).
 
+pub mod group;
 pub mod pipeline;
 
 use crate::comm::{Endpoint, Key, Message};
@@ -115,9 +116,18 @@ pub struct WorkerComm {
     /// Push phases whose window stalled past [`ACK_STALL_TIMEOUT`] and
     /// finished unwindowed (at most one count per phase).
     window_stalls: AtomicU64,
+    /// Degraded pulls whose aggregate was folded into the block's EF
+    /// residual (see [`WorkerComm::fold_factor`]).
+    ef_folds: AtomicU64,
     /// Fault-injection hook: `(key, iter)` pushes to drop before the wire
     /// (each fires once). Tests use it to simulate a lost push.
     drop_pushes: Arc<Mutex<HashSet<(Key, u64)>>>,
+    /// `(key, iter)` pushes the fault hook actually dropped — consulted
+    /// (and consumed) by the degraded-pull fold: a worker whose *own* push
+    /// never reached the server was not part of the served aggregate, so
+    /// the overshoot the fold corrects never included it and folding would
+    /// double-correct.
+    dropped_log: Arc<Mutex<HashSet<(Key, u64)>>>,
     /// Per-key adaptive compression controller
     /// ([`crate::compress::controller`]), built from the bounds the
     /// handshake granted. `None` = static run: the pipelined push path is
@@ -139,6 +149,11 @@ pub struct WorkerCounters {
     /// (acks stopped draining; the phase finished unwindowed). At most
     /// one per push phase.
     pub window_stalls: u64,
+    /// Degraded pull responses whose aggregate this worker folded into
+    /// the block's EF residual (`−(n − m)/m ×` the served aggregate) so
+    /// cumulative updates track the Alg. 4 reference — CompressedEf runs
+    /// only, and only when the worker's own push was in the aggregate.
+    pub ef_folds: u64,
     /// Keep-ratio adjustments the adaptive controller made across all
     /// keys (0 on static runs, or when every key's gain sat inside the
     /// dead band the whole run).
@@ -160,10 +175,11 @@ impl std::fmt::Display for WorkerCounters {
         write!(
             f,
             "{} degraded pulls | {} dropped pushes | {} window stalls | \
-             {} k adjustments | k ppm span [{}, {}]",
+             {} ef folds | {} k adjustments | k ppm span [{}, {}]",
             self.degraded_responses,
             self.dropped_pushes,
             self.window_stalls,
+            self.ef_folds,
             self.k_adjustments,
             self.k_ppm_lo,
             self.k_ppm_hi
@@ -178,12 +194,16 @@ impl std::fmt::Display for WorkerCounters {
 fn push_drop_faulted(
     worker_id: u32,
     drop_pushes: &Mutex<HashSet<(Key, u64)>>,
+    dropped_log: &Mutex<HashSet<(Key, u64)>>,
     dropped: &AtomicU64,
     key: Key,
     iter: u64,
 ) -> bool {
     if drop_pushes.lock().unwrap().remove(&(key, iter)) {
         dropped.fetch_add(1, Ordering::Relaxed);
+        // Remember the drop: the degraded-pull fold must not fire for a
+        // round this worker knows it was absent from.
+        dropped_log.lock().unwrap_or_else(|p| p.into_inner()).insert((key, iter));
         eprintln!("worker {worker_id}: fault injection dropped push key {key} iter {iter}");
         true
     } else {
@@ -237,7 +257,9 @@ impl WorkerComm {
             degraded_responses: AtomicU64::new(0),
             dropped_pushes: Arc::new(AtomicU64::new(0)),
             window_stalls: AtomicU64::new(0),
+            ef_folds: AtomicU64::new(0),
             drop_pushes: Arc::new(Mutex::new(HashSet::new())),
+            dropped_log: Arc::new(Mutex::new(HashSet::new())),
             adaptive,
         }
     }
@@ -263,10 +285,39 @@ impl WorkerComm {
             degraded_responses: self.degraded_responses.load(Ordering::Relaxed),
             dropped_pushes: self.dropped_pushes.load(Ordering::Relaxed),
             window_stalls: self.window_stalls.load(Ordering::Relaxed),
+            ef_folds: self.ef_folds.load(Ordering::Relaxed),
             k_adjustments,
             k_ppm_lo,
             k_ppm_hi,
         }
+    }
+
+    /// Degraded-pull EF fold factor (Alg. 4 catch-up; the ROADMAP
+    /// "worker-side re-push" item). When this worker's own *delivered*
+    /// push comes back in an aggregate averaged over `m = served_with <
+    /// n_workers` contributions, the served value overshoots the
+    /// reference mean (lost push = zero contribution, divisor
+    /// `n_workers`) by `aggregate × (n − m)/n`; each of the `m` surviving
+    /// workers folding `−(n − m)/m ×` the aggregate into its EF residual
+    /// makes the next round's average cancel exactly that overshoot
+    /// (`BlockEf::fold_scaled` has the algebra and the reference test).
+    /// `None` when no fold applies: full round, retired marker, a non-EF
+    /// sync mode (no residual to fold into), or a round this worker knows
+    /// its own push never reached (fault-dropped) — it was not in the
+    /// aggregate, so the overshoot never included it.
+    fn fold_factor(&self, key: Key, iter: u64, served_with: u16) -> Option<f32> {
+        if self.sync != SyncMode::CompressedEf {
+            return None;
+        }
+        let m = usize::from(served_with);
+        if m == 0 || m >= self.n_workers {
+            return None;
+        }
+        if self.dropped_log.lock().unwrap_or_else(|p| p.into_inner()).remove(&(key, iter)) {
+            return None;
+        }
+        self.ef_folds.fetch_add(1, Ordering::Relaxed);
+        Some(-((self.n_workers - m) as f32) / m as f32)
     }
 
     /// Note a pull response's `served_with` tag (degraded-round metric).
@@ -294,7 +345,14 @@ impl WorkerComm {
         // Fault injection checks *after* compression: a lost push is lost
         // on the wire, not before the EF residual update — exactly the
         // failure the degraded-round protocol is specified against.
-        if push_drop_faulted(self.worker_id, &self.drop_pushes, &self.dropped_pushes, key, iter) {
+        if push_drop_faulted(
+            self.worker_id,
+            &self.drop_pushes,
+            &self.dropped_log,
+            &self.dropped_pushes,
+            key,
+            iter,
+        ) {
             return (0, dt);
         }
         let nbytes = data.nbytes();
@@ -387,6 +445,7 @@ impl WorkerComm {
         let block_ef = Arc::clone(&self.block_ef);
         let comp = Arc::clone(&self.comp);
         let drop_pushes = Arc::clone(&self.drop_pushes);
+        let dropped_log = Arc::clone(&self.dropped_log);
         let dropped = Arc::clone(&self.dropped_pushes);
         let (sync, fused, intra, worker) =
             (self.sync, self.fused, self.intra_threads, self.worker_id);
@@ -426,7 +485,7 @@ impl WorkerComm {
             cns.fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
             // Fault injection after compression: the push is lost on the
             // wire, not before the EF residual update.
-            if push_drop_faulted(worker, &drop_pushes, &dropped, key, iter) {
+            if push_drop_faulted(worker, &drop_pushes, &dropped_log, &dropped, key, iter) {
                 on_drop();
                 return;
             }
@@ -615,6 +674,7 @@ impl WorkerComm {
                                      consistently"
                                 );
                                 this.note_served_with(served_with);
+                                let fold = this.fold_factor(key, iter, served_with);
                                 let range = ranges
                                     .get(&key)
                                     .expect("pull response for unknown block key")
@@ -624,12 +684,19 @@ impl WorkerComm {
                                 let tx = tx.clone();
                                 let comp = Arc::clone(comp);
                                 let dns = Arc::clone(dns);
+                                let bef = Arc::clone(&this.block_ef);
                                 pool.execute(move || {
                                     let t = std::time::Instant::now();
                                     let bp = crate::comm::BufPool::global();
                                     // lint: transfers(pull-scatter)
                                     let mut buf = bp.rent_f32(data.n);
                                     comp.decompress(&data, &mut buf);
+                                    // Degraded round: fold the average
+                                    // shift into this block's EF residual
+                                    // before the aggregate is applied.
+                                    if let Some(factor) = fold {
+                                        bef.fold_scaled(key, &buf, factor);
+                                    }
                                     dns.fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
                                     // The response payload dies with the
                                     // decode; recycle it.

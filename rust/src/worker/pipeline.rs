@@ -201,6 +201,30 @@ impl BlockEf {
         (c, gain)
     }
 
+    /// Fold a scaled copy of `agg` into block `key`'s residual:
+    /// `e += factor × agg`, creating a zero residual first if the block
+    /// has none yet (a non-fused or first-iteration block).
+    ///
+    /// This is the *degraded-pull fold* (ROADMAP's worker-side re-push
+    /// item): when this worker's own delivered push comes back in an
+    /// aggregate averaged over `m < n` workers, the served value
+    /// overshoots the Alg. 4 reference mean (lost push = zero
+    /// contribution, divisor `n`) by `agg × (n − m)/n`. Each of the `m`
+    /// surviving workers folds `factor = −(n − m)/m` of the aggregate
+    /// here, so the next round's average carries `m × factor / n = −(n −
+    /// m)/n` of it — cancelling the overshoot exactly and making the
+    /// *cumulative* applied updates match the reference (see the
+    /// `degraded_fold_matches_alg4_reference` test).
+    pub fn fold_scaled(&self, key: Key, agg: &[f32], factor: f32) {
+        let slot = self.slot(key, agg.len());
+        let mut e = slot.lock().unwrap_or_else(|p| p.into_inner());
+        // lint: allow(panic) — caller contract: a block's length is fixed by the partition; a size change is a harness bug, not a wire input
+        assert_eq!(e.len(), agg.len(), "block {key} changed size");
+        for (ei, &ai) in e.iter_mut().zip(agg) {
+            *ei += factor * ai;
+        }
+    }
+
     /// Total f32 elements held as residual state (memory accounting).
     pub fn state_elems(&self) -> usize {
         let map = self.residuals.lock().unwrap_or_else(|p| p.into_inner());
@@ -406,6 +430,81 @@ mod tests {
             }
         });
         assert_eq!(bef.state_elems(), 8 * 32);
+    }
+
+    /// The degraded-pull fold reproduces the Alg. 4 reference exactly:
+    /// with a lost push modeled as a zero contribution over divisor `n`,
+    /// the surviving workers' folds make the *cumulative* applied updates
+    /// match the reference once the next full round lands. Identity
+    /// compression and integer-valued gradients keep every sum exact, so
+    /// the match is bitwise.
+    #[test]
+    fn degraded_fold_matches_alg4_reference() {
+        let comp = by_name("identity", 1.0).unwrap();
+        let key = 3u64;
+        let dim = 4usize;
+        let n = 2usize;
+        // Integer-valued per-(worker, iter) gradients → exact f32 halves.
+        let g = |w: usize, it: usize| vec![(2 + 4 * w + 8 * it) as f32; 4];
+        // Worker-side EF state for the folding run (worker 1's iter-1 push
+        // is lost on the wire *after* its residual update, exactly like
+        // the fault hook).
+        let efs: Vec<BlockEf> = (0..n).map(|_| BlockEf::new()).collect();
+        let mut rng = Xoshiro256::seed_from_u64(0);
+        let mut applied = vec![0.0f32; dim]; // folding run's cumulative update
+        let mut reference = vec![0.0f32; dim]; // Alg. 4: lost = zero, divisor n
+        for iter in 0..3usize {
+            let mut sum = vec![0.0f32; dim];
+            let mut refsum = vec![0.0f32; dim];
+            let mut delivered = 0usize;
+            for (w, ef) in efs.iter().enumerate() {
+                let c = ef.compress(key, g(w, iter), comp.as_ref(), true, &mut Ctx::new(&mut rng));
+                let mut wire = vec![0.0f32; dim];
+                comp.decompress(&c, &mut wire);
+                let lost = iter == 1 && w == 1;
+                if !lost {
+                    for (s, v) in sum.iter_mut().zip(&wire) {
+                        *s += v;
+                    }
+                    delivered += 1;
+                }
+                // The reference sees the same wire stream minus the fold
+                // (identity EF leaves zero residuals, so its wire is just
+                // g(w, iter)); a lost push contributes zero.
+                if !lost {
+                    for (s, v) in refsum.iter_mut().zip(&g(w, iter)) {
+                        *s += v;
+                    }
+                }
+            }
+            // Server: average over the pushes actually received.
+            let agg: Vec<f32> = sum.iter().map(|s| s / delivered as f32).collect();
+            for (a, v) in applied.iter_mut().zip(&agg) {
+                *a += v;
+            }
+            // Reference: average over n, lost contribution = zero — but
+            // the reference stream must not include the fold, so strip it:
+            // the folding run's iter-2 wire is g + fold; the reference's
+            // is g. Rebuild refsum from raw gradients above.
+            for (r, v) in reference.iter_mut().zip(&refsum) {
+                *r += v / n as f32;
+            }
+            // Degraded round: every *surviving* worker folds.
+            if delivered < n {
+                let m = delivered;
+                let factor = -((n - m) as f32) / m as f32;
+                for (w, ef) in efs.iter().enumerate() {
+                    let lost = iter == 1 && w == 1;
+                    if !lost {
+                        ef.fold_scaled(key, &agg, factor);
+                    }
+                }
+            }
+        }
+        assert_eq!(
+            applied, reference,
+            "cumulative folded updates must match the Alg. 4 reference"
+        );
     }
 
     #[test]

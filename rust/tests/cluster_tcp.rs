@@ -110,6 +110,74 @@ fn run_thread_cluster(
     reports
 }
 
+/// Run a hierarchical thread cluster (`cluster.groups = groups`): real TCP
+/// shards via [`cluster::serve`], one [`cluster::run_leader`] relay per
+/// group (each co-locating its group's first member), and the remaining
+/// members as plain [`cluster::run_worker`]s that only ever dial their
+/// leader. Reports come back in global rank order.
+fn run_hier_thread_cluster(
+    mut cfg: TrainConfig,
+    n_servers: usize,
+    groups: usize,
+    dim: usize,
+    tensors: usize,
+    iters: usize,
+) -> (Vec<cluster::WorkerRunReport>, Vec<byteps_compress::ps::ServerStats>) {
+    let nodes = cfg.cluster.nodes;
+    let m = nodes / groups;
+    let listeners: Vec<TcpListener> =
+        (0..n_servers).map(|_| TcpListener::bind("127.0.0.1:0").unwrap()).collect();
+    let addrs: Vec<String> =
+        listeners.iter().map(|l| l.local_addr().unwrap().to_string()).collect();
+    cfg.cluster.addresses = addrs.clone();
+    cfg.cluster.groups = groups;
+    let leader_addrs: Vec<String> =
+        (0..groups).map(|_| format!("127.0.0.1:{}", free_port())).collect();
+    cfg.cluster.group_addresses = leader_addrs.clone();
+
+    let mut server_handles = Vec::new();
+    for (shard, listener) in listeners.into_iter().enumerate() {
+        let cfg = cfg.clone();
+        server_handles.push(std::thread::spawn(move || {
+            cluster::serve(&cfg, listener, shard, dim, tensors).unwrap()
+        }));
+    }
+    // One thread per process of the real deployment: G leaders plus the
+    // out-of-group members, reports keyed by global rank.
+    let mut handles: Vec<(usize, std::thread::JoinHandle<cluster::WorkerRunReport>)> = Vec::new();
+    for g in 0..groups {
+        let cfg = cfg.clone();
+        let listen = leader_addrs[g].clone();
+        let servers = addrs.clone();
+        handles.push((
+            g * m,
+            std::thread::spawn(move || {
+                cluster::run_leader(
+                    &cfg, g as u32, &listen, &servers, dim, tensors, iters, None, None,
+                )
+                .unwrap()
+            }),
+        ));
+        for r in g * m + 1..(g + 1) * m {
+            let cfg = cfg.clone();
+            let leader = vec![leader_addrs[g].clone()];
+            handles.push((
+                r,
+                std::thread::spawn(move || {
+                    cluster::run_worker(&cfg, r as u32, &leader, dim, tensors, iters, None, None)
+                        .unwrap()
+                }),
+            ));
+        }
+    }
+    let mut reports: Vec<Option<cluster::WorkerRunReport>> = (0..nodes).map(|_| None).collect();
+    for (rank, h) in handles {
+        reports[rank] = Some(h.join().unwrap());
+    }
+    let stats: Vec<_> = server_handles.into_iter().map(|h| h.join().unwrap()).collect();
+    (reports.into_iter().map(|r| r.unwrap()).collect(), stats)
+}
+
 /// Tentpole acceptance (identity): a real TCP cluster completes a training
 /// run whose per-iteration aggregates are bit-identical to the
 /// single-process inproc fabric.
@@ -197,6 +265,99 @@ fn staged_server_thread_cluster_bit_identical_to_sync() {
                  synchronous inproc shard"
             );
         }
+    }
+}
+
+/// Tentpole acceptance (hierarchical, identity): a 2-group × 2-worker
+/// two-level TCP cluster — each leader locally aggregating its members'
+/// pushes and forwarding one `GroupPush` per (key, iteration) — produces
+/// aggregates bit-identical to the FLAT 4-worker inproc reference, while
+/// each server shard ingests G pushes per key instead of W.
+#[test]
+fn hierarchical_thread_cluster_identity_bit_identical_to_flat() {
+    let (dim, tensors, iters, nodes, groups, servers) = (2048, 3, 4, 4, 2, 2);
+    let cfg = cluster_cfg("identity", 0.0, SyncMode::Full, nodes);
+    let mut ref_cfg = cfg.clone();
+    ref_cfg.cluster.addresses = (0..servers).map(|s| format!("ref:{s}")).collect();
+    // The reference is the FLAT topology: same fleet, no groups.
+    ref_cfg.cluster.groups = 0;
+    let want = inproc_reference(&ref_cfg, dim, tensors, iters);
+
+    let (reports, stats) =
+        run_hier_thread_cluster(cfg.clone(), servers, groups, dim, tensors, iters);
+    for (rank, rep) in reports.iter().enumerate() {
+        assert_eq!(rep.aggregates.len(), iters, "rank {rank} did not finish");
+        for (it, (got, expect)) in rep.aggregates.iter().zip(&want).enumerate() {
+            assert_eq!(
+                got, expect,
+                "rank {rank} iteration {it}: hierarchical aggregate differs from flat"
+            );
+        }
+        assert!(rep.wire_bytes > 0);
+    }
+    // The fan-in cut itself: G group-pushes per (key, iteration) across
+    // the shard pool — not W worker pushes.
+    let blocks = cluster::synthetic_blocks(dim, tensors);
+    let n_keys = byteps_compress::worker::pipeline::Partition::new(
+        &blocks,
+        cfg.pipeline.block_bytes,
+        cfg.pipeline.enabled,
+    )
+    .len();
+    assert_eq!(
+        stats.iter().map(|s| s.pushes).sum::<u64>() as usize,
+        groups * iters * n_keys,
+        "server fan-in must scale with G, not W"
+    );
+    for s in &stats {
+        assert_eq!(s.rejected, 0);
+        assert_eq!(s.short_iters, 0);
+        assert_eq!(s.members_clamped, 0);
+    }
+}
+
+/// Tentpole acceptance (hierarchical, top-k + EF): the leader re-encodes
+/// each group's partial aggregate as the exact sparse union of its
+/// members' top-k blocks, so even the compressed two-way path stays
+/// bit-identical to the flat 4-worker reference on the integer-valued
+/// synthetic workload — and the training loss matches exactly.
+#[test]
+fn hierarchical_thread_cluster_topk_ef_bit_identical_to_flat() {
+    let (dim, tensors, iters, nodes, groups, servers) = (1536, 2, 4, 4, 2, 2);
+    let cfg = cluster_cfg("topk", 0.1, SyncMode::CompressedEf, nodes);
+    let mut ref_cfg = cfg.clone();
+    ref_cfg.cluster.addresses = (0..servers).map(|s| format!("ref:{s}")).collect();
+    ref_cfg.cluster.groups = 0;
+    let want = inproc_reference(&ref_cfg, dim, tensors, iters);
+
+    let (reports, stats) =
+        run_hier_thread_cluster(cfg.clone(), servers, groups, dim, tensors, iters);
+    let lr = cfg.optimizer.lr as f32;
+    let mut params = vec![0.0f32; dim];
+    for agg in &want {
+        for (p, a) in params.iter_mut().zip(agg) {
+            *p -= lr * a;
+        }
+    }
+    let want_loss = params.iter().map(|&p| p as f64 * p as f64).sum::<f64>() / dim as f64;
+    for (rank, rep) in reports.iter().enumerate() {
+        for (it, (got, expect)) in rep.aggregates.iter().zip(&want).enumerate() {
+            assert_eq!(
+                got, expect,
+                "rank {rank} iteration {it}: hierarchical top-k aggregate differs from flat"
+            );
+        }
+        assert!(
+            (rep.final_loss - want_loss).abs() <= 1e-12 * want_loss.abs().max(1.0),
+            "rank {rank} loss {} vs flat {}",
+            rep.final_loss,
+            want_loss
+        );
+    }
+    for s in &stats {
+        assert_eq!(s.rejected, 0);
+        assert_eq!(s.short_iters, 0);
+        assert_eq!(s.members_clamped, 0);
     }
 }
 
@@ -762,6 +923,117 @@ fn degraded_round_process_cluster_completes() {
                     "worker {rank} iteration {it} element {i}: degraded process run diverged"
                 );
             }
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The hierarchical topology over real OS processes: 2 *staged* server
+/// shards (`--compress-threads 4`), 2 `bytepsc leader` relays, and 2
+/// member `bytepsc worker`s that only ever dial their leader. All four
+/// ranks dump their aggregates, which must be bit-identical to the FLAT
+/// 4-worker inproc reference — the full deployment shape of the two-level
+/// fan-in cut, exercised end to end over sockets, processes, and the
+/// staged shard pipeline at once.
+#[test]
+fn hierarchical_process_cluster_bit_identical_to_flat() {
+    let bin = env!("CARGO_BIN_EXE_bytepsc");
+    let (dim, tensors, iters) = (3000usize, 3usize, 4usize);
+    let (nodes, groups, servers) = (4usize, 2usize, 2usize);
+    let m = nodes / groups;
+    let seed = 42u64;
+    let addrs: Vec<String> =
+        (0..servers).map(|_| format!("127.0.0.1:{}", free_port())).collect();
+    let leader_addrs: Vec<String> =
+        (0..groups).map(|_| format!("127.0.0.1:{}", free_port())).collect();
+    let dir = std::env::temp_dir().join(format!("bytepsc-hier-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let s = |v: &str| v.to_string();
+    let mut children = Vec::new();
+    for (shard, addr) in addrs.iter().enumerate() {
+        let args: Vec<String> = vec![
+            s("server"),
+            s("--listen"), addr.clone(),
+            s("--shard"), shard.to_string(),
+            s("--shards"), servers.to_string(),
+            s("--nodes"), nodes.to_string(),
+            s("--groups"), groups.to_string(),
+            s("--scheme"), s("identity"),
+            s("--dim"), dim.to_string(),
+            s("--tensors"), tensors.to_string(),
+            s("--seed"), seed.to_string(),
+            s("--compress-threads"), s("4"),
+        ];
+        let child =
+            std::process::Command::new(bin).args(&args).spawn().expect("spawn server");
+        children.push((child, format!("server {shard}")));
+    }
+    let server_list = addrs.join(",");
+    let mut dumps = Vec::new();
+    for g in 0..groups {
+        // The leader co-locates its group's first member (rank g*m).
+        let dump = dir.join(format!("rank{}.aggs", g * m));
+        let args: Vec<String> = vec![
+            s("leader"),
+            s("--group"), g.to_string(),
+            s("--listen"), leader_addrs[g].clone(),
+            s("--servers"), server_list.clone(),
+            s("--nodes"), nodes.to_string(),
+            s("--groups"), groups.to_string(),
+            s("--scheme"), s("identity"),
+            s("--dim"), dim.to_string(),
+            s("--tensors"), tensors.to_string(),
+            s("--iters"), iters.to_string(),
+            s("--seed"), seed.to_string(),
+            s("--dump"), dump.to_str().unwrap().to_string(),
+        ];
+        let child =
+            std::process::Command::new(bin).args(&args).spawn().expect("spawn leader");
+        children.push((child, format!("leader {g}")));
+        dumps.push((g * m, dump));
+        for rank in g * m + 1..(g + 1) * m {
+            let dump = dir.join(format!("rank{rank}.aggs"));
+            let args: Vec<String> = vec![
+                s("worker"),
+                s("--servers"), leader_addrs[g].clone(),
+                s("--rank"), rank.to_string(),
+                s("--nodes"), nodes.to_string(),
+                s("--groups"), groups.to_string(),
+                s("--scheme"), s("identity"),
+                s("--dim"), dim.to_string(),
+                s("--tensors"), tensors.to_string(),
+                s("--iters"), iters.to_string(),
+                s("--seed"), seed.to_string(),
+                s("--dump"), dump.to_str().unwrap().to_string(),
+            ];
+            let child =
+                std::process::Command::new(bin).args(&args).spawn().expect("spawn member");
+            children.push((child, format!("member {rank}")));
+            dumps.push((rank, dump));
+        }
+    }
+    for (child, name) in children {
+        wait_ok(child, &name);
+    }
+
+    // Reference: the FLAT 4-worker fleet through the inproc fabric (same
+    // CLI defaults, groups left at 0).
+    let mut cfg = TrainConfig::default();
+    cfg.cluster.nodes = nodes;
+    cfg.cluster.addresses = addrs;
+    cfg.compression.scheme = "identity".into();
+    cfg.seed = seed;
+    let want = inproc_reference(&cfg, dim, tensors, iters);
+
+    for (rank, dump) in &dumps {
+        let got = cluster::read_aggregates(dump).unwrap();
+        assert_eq!(got.len(), iters, "rank {rank} dumped {} iterations", got.len());
+        for (it, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(
+                g, w,
+                "rank {rank} iteration {it}: hierarchical process aggregate != flat inproc"
+            );
         }
     }
     let _ = std::fs::remove_dir_all(&dir);
